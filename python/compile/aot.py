@@ -1,0 +1,127 @@
+"""AOT pipeline: lower the L2 graphs to HLO **text** artifacts.
+
+HLO text — not `.serialize()` — is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids that the xla_extension 0.5.1
+behind the Rust `xla` crate rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Emits, for every distinct combine shape of the manifest templates:
+
+    artifacts/combine_k{k}_a{a}_p{a1}_b{B}.hlo.txt
+
+plus one fused (SpMM+combine) demo module, and `artifacts/manifest.json`
+describing shapes so the Rust runtime can pick the right executable.
+Python runs ONLY here — never on the request path.
+"""
+
+import argparse
+import json
+import os
+from math import comb
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.combine import pick_block
+from .templates import combine_shapes
+
+# Templates whose combine shapes get AOT artifacts. u3-1/u5-2/u7-2 cover
+# the XLA-engine e2e path; larger templates use the native engine (their
+# set counts make dense XLA blocks uneconomical on the CPU plugin).
+MANIFEST_TEMPLATES = ["u3-1", "u5-2", "u7-2"]
+
+# Fused demo module shape: a 64-vertex tile against a 64-vertex halo.
+FUSED_SHAPE = dict(block=64, halo=64, template="u5-2")
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_combine(k: int, a: int, a1: int, block: int):
+    c1, c2 = comb(k, a1), comb(k, a - a1)
+    s, j = comb(k, a), comb(a, a1)
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)  # noqa: E731
+    return jax.jit(model.combine_block).lower(
+        spec((block, c1), jnp.float32),
+        spec((block, c2), jnp.float32),
+        spec((s, j), jnp.int32),
+        spec((s, j), jnp.int32),
+    )
+
+
+def lower_fused(k: int, a: int, a1: int, block: int, halo: int):
+    c1, c2 = comb(k, a1), comb(k, a - a1)
+    s, j = comb(k, a), comb(a, a1)
+    spec = lambda shape, dt: jax.ShapeDtypeStruct(shape, dt)  # noqa: E731
+    return jax.jit(model.fused_block).lower(
+        spec((block, halo), jnp.float32),
+        spec((halo, c2), jnp.float32),
+        spec((block, c1), jnp.float32),
+        spec((s, j), jnp.int32),
+        spec((s, j), jnp.int32),
+    )
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--block", type=int, default=0,
+                    help="override the vertex-tile size (0 = auto per shape)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    seen = set()
+    for name in MANIFEST_TEMPLATES:
+        for shape in combine_shapes(name):
+            key = (shape.k, shape.a, shape.a1)
+            if key in seen:
+                continue
+            seen.add(key)
+            block = args.block or pick_block(
+                shape.c1, shape.c2, shape.n_sets, shape.n_splits
+            )
+            fname = f"combine_k{shape.k}_a{shape.a}_p{shape.a1}_b{block}.hlo.txt"
+            text = to_hlo_text(lower_combine(shape.k, shape.a, shape.a1, block))
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            entries.append(dict(
+                kind="combine", template=name, file=fname,
+                k=shape.k, a=shape.a, a1=shape.a1, a2=shape.a2,
+                c1=shape.c1, c2=shape.c2,
+                n_sets=shape.n_sets, n_splits=shape.n_splits, block=block,
+            ))
+            print(f"wrote {fname} ({len(text)} chars)")
+
+    # fused demo module (L2 composition: SpMM + combine in one HLO)
+    fshape = next(s for s in combine_shapes(FUSED_SHAPE["template"])
+                  if s.a >= 3)
+    fname = (f"fused_k{fshape.k}_a{fshape.a}_p{fshape.a1}"
+             f"_b{FUSED_SHAPE['block']}_h{FUSED_SHAPE['halo']}.hlo.txt")
+    text = to_hlo_text(lower_fused(
+        fshape.k, fshape.a, fshape.a1, FUSED_SHAPE["block"], FUSED_SHAPE["halo"]))
+    with open(os.path.join(args.out, fname), "w") as f:
+        f.write(text)
+    entries.append(dict(
+        kind="fused", template=FUSED_SHAPE["template"], file=fname,
+        k=fshape.k, a=fshape.a, a1=fshape.a1, a2=fshape.a2,
+        c1=fshape.c1, c2=fshape.c2,
+        n_sets=fshape.n_sets, n_splits=fshape.n_splits,
+        block=FUSED_SHAPE["block"], halo=FUSED_SHAPE["halo"],
+    ))
+    print(f"wrote {fname} ({len(text)} chars)")
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(dict(version=1, entries=entries), f, indent=1)
+    print(f"manifest: {len(entries)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,10 @@
+"""L1 Pallas kernels for the color-coding combine hot spot.
+
+`combine` — the per-vertex color-set contraction (the DP's Eq-1 core);
+`spmm`    — the neighbor aggregation as a blocked MXU matmul;
+`ref`     — pure-jnp oracles both are verified against (pytest+hypothesis).
+"""
+
+from .combine import combine, pick_block, vmem_words  # noqa: F401
+from .spmm import spmm  # noqa: F401
+from . import ref  # noqa: F401

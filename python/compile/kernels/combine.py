@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: the count-combine contraction.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): the paper's CPU hot
+loop walks per-vertex neighbor lists under OpenMP; on TPU we restructure it
+into a regular bulk operation — the neighbor aggregation becomes a blocked
+MXU matmul (`spmm.py`) and this kernel performs the per-vertex color-set
+contraction over a *vertex tile* resident in VMEM, with the split tables
+(`t0`, `t1`) also VMEM-resident. BlockSpec tiles the vertex dimension; the
+set dimension stays whole because the split tables index across it.
+
+Pallas runs under `interpret=True`: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and interpret-mode lowers to plain HLO that both the
+pytest suite and the Rust runtime execute. Real-TPU performance is
+estimated from the VMEM footprint + MXU utilization in EXPERIMENTS.md.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM budget per tile (f32 words) used to choose the vertex-block size.
+VMEM_BUDGET_WORDS = 2 * 1024 * 1024  # 8 MiB
+
+
+def pick_block(c1: int, c2: int, n_sets: int, n_splits: int, max_block: int = 128) -> int:
+    """Largest power-of-two vertex tile whose working set fits in VMEM.
+
+    Working set per tile row: passive (c1) + agg (c2) + out (n_sets) +
+    the gathered intermediates (2 * n_sets * n_splits during the unrolled
+    contraction).
+    """
+    per_row = c1 + c2 + n_sets + 2 * n_sets * n_splits
+    b = max_block
+    while b > 1 and b * per_row > VMEM_BUDGET_WORDS:
+        b //= 2
+    return max(b, 1)
+
+
+def _combine_kernel(passive_ref, agg_ref, t0_ref, t1_ref, out_ref):
+    """out[b,s] = Σ_j passive[b, t0[s,j]] · agg[b, t1[s,j]] for one tile."""
+    passive = passive_ref[...]          # [B, C1]
+    agg = agg_ref[...]                  # [B, C2]
+    t0 = t0_ref[...]                    # [S, J]
+    t1 = t1_ref[...]                    # [S, J]
+    p = jnp.take(passive, t0, axis=1)   # [B, S, J]
+    a = jnp.take(agg, t1, axis=1)       # [B, S, J]
+    out_ref[...] = (p * a).sum(axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("block",))
+def combine(passive, agg, t0, t1, *, block: int = 0):
+    """Pallas count-combine.
+
+    passive [B, C1] f32, agg [B, C2] f32, t0/t1 [S, J] i32 -> [B, S] f32.
+    `B` must be a multiple of the tile size (callers pad; the AOT path
+    always lowers with B == block).
+    """
+    b_total, c1 = passive.shape
+    _, c2 = agg.shape
+    n_sets, n_splits = t0.shape
+    if block == 0:
+        block = pick_block(c1, c2, n_sets, n_splits)
+    block = min(block, b_total)
+    assert b_total % block == 0, f"B={b_total} not a multiple of tile {block}"
+    grid = (b_total // block,)
+    return pl.pallas_call(
+        _combine_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block, c1), lambda i: (i, 0)),
+            pl.BlockSpec((block, c2), lambda i: (i, 0)),
+            pl.BlockSpec((n_sets, n_splits), lambda i: (0, 0)),
+            pl.BlockSpec((n_sets, n_splits), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block, n_sets), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b_total, n_sets), jnp.float32),
+        interpret=True,
+    )(passive, agg, t0, t1)
+
+
+def vmem_words(c1: int, c2: int, n_sets: int, n_splits: int, block: int) -> int:
+    """VMEM footprint estimate (f32 words) of one tile — §Perf reporting."""
+    table_words = 2 * n_sets * n_splits  # t0 + t1 (i32 ≈ f32 words)
+    row_words = block * (c1 + c2 + n_sets + 2 * n_sets * n_splits)
+    return table_words + row_words

@@ -1,0 +1,32 @@
+"""Pure-jnp oracles for the L1 kernels — the correctness ground truth.
+
+`combine_ref` is the color-coding DP combine (Eq 1, factored form):
+
+    out[b, s] = sum_j passive[b, t0[s, j]] * agg[b, t1[s, j]]
+
+`spmm_ref` is the neighbor aggregation as a dense blocked matmul:
+
+    agg = adj @ active        (adj is a {0,1} adjacency block)
+
+Together they are the exact computation `rust/src/colorcount/engine.rs`
+performs natively (aggregate_batch + contract_touched).
+"""
+
+import jax.numpy as jnp
+
+
+def combine_ref(passive, agg, t0, t1):
+    """passive [B, C1], agg [B, C2], t0/t1 [S, J] int32 -> out [B, S]."""
+    p = jnp.take(passive, t0, axis=1)  # [B, S, J]
+    a = jnp.take(agg, t1, axis=1)      # [B, S, J]
+    return (p * a).sum(axis=-1)
+
+
+def spmm_ref(adj, active):
+    """adj [B, N] f32 {0,1}, active [N, C2] -> agg [B, C2]."""
+    return adj @ active
+
+
+def fused_ref(adj, active, passive, t0, t1):
+    """The L2 composition: SpMM then gathered contraction."""
+    return combine_ref(passive, spmm_ref(adj, active), t0, t1)

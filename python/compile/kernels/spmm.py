@@ -1,0 +1,50 @@
+"""L1 Pallas kernel: blocked SpMM for the neighbor aggregation.
+
+`agg = adj @ active` where `adj` is a dense {0,1} adjacency block. On a
+real TPU this is the MXU-friendly reformulation of the paper's irregular
+neighbor-list walk: the HBM→VMEM schedule streams `[BM, BK]` adjacency
+tiles against `[BK, C2]` count tiles and accumulates `[BM, C2]` partials in
+VMEM — the role the paper's per-thread neighbor chunks played on the Xeon.
+The contraction (K) dimension is the grid's minor axis so the accumulator
+tile stays resident while K tiles stream (standard Pallas matmul pattern).
+
+interpret=True for CPU-PJRT executability (see combine.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _spmm_kernel(adj_ref, act_ref, out_ref):
+    k_idx = pl.program_id(1)
+
+    @pl.when(k_idx == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[...] += adj_ref[...] @ act_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk"))
+def spmm(adj, active, *, bm: int = 128, bk: int = 128):
+    """adj [M, K] f32, active [K, C2] f32 -> [M, C2] f32 (M%bm==K%bk==0)."""
+    m, k = adj.shape
+    _, c2 = active.shape
+    bm = min(bm, m)
+    bk = min(bk, k)
+    assert m % bm == 0 and k % bk == 0, f"{m}x{k} not tiled by {bm}x{bk}"
+    grid = (m // bm, k // bk)
+    return pl.pallas_call(
+        _spmm_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((bk, c2), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, c2), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, c2), jnp.float32),
+        interpret=True,
+    )(adj, active)

@@ -1,0 +1,26 @@
+"""L2: the JAX compute graph the coordinator's combine step lowers from.
+
+The distributed DP's per-(rank, step) update is, in dense-block form,
+
+    out[v, s] += sum_j passive[v, t0[s,j]] * (adj_blk @ active)[v, t1[s,j]]
+
+`combine_block` is the contraction-only entry (the Rust engine aggregates
+natively and hands the kernel a ready `agg` block); `fused_block` is the
+full SpMM + contraction composition. Both call the L1 Pallas kernels so
+the AOT lowering captures them in the same HLO module. Python never runs
+on the request path: `aot.py` lowers these once to `artifacts/*.hlo.txt`
+and the Rust runtime (`rust/src/runtime/`) loads + executes them via PJRT.
+"""
+
+from . import kernels
+
+
+def combine_block(passive, agg, t0, t1):
+    """passive [B,C1], agg [B,C2], t0/t1 [S,J] -> contribution [B,S]."""
+    return kernels.combine(passive, agg, t0, t1, block=passive.shape[0])
+
+
+def fused_block(adj, active, passive, t0, t1):
+    """adj [B,N] {0,1}, active [N,C2], passive [B,C1] -> [B,S]."""
+    agg = kernels.spmm(adj, active, bm=adj.shape[0], bk=adj.shape[1])
+    return kernels.combine(passive, agg, t0, t1, block=passive.shape[0])

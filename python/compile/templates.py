@@ -1,0 +1,149 @@
+"""Template partitioning, mirrored from `rust/src/template/partition.rs`.
+
+The AOT pipeline needs to know, for each template we ship artifacts for,
+the set of distinct `(a, a1)` combine shapes its partition DAG produces —
+those determine the fixed shapes of the lowered kernels. The partition
+rule must match the Rust side exactly: root the tree at vertex 0, order
+children by (descending subtree size, vertex id), split off the *last*
+child as the active subtree, deduplicate rooted shapes by AHU canon.
+`python/tests/test_templates.py` locks the combos against the values the
+Rust test-suite asserts.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from math import comb
+from typing import Dict, List, Optional, Tuple
+
+# Builtin edge lists — keep in sync with rust/src/template/mod.rs.
+BUILTIN: Dict[str, Tuple[int, List[Tuple[int, int]]]] = {
+    "u3-1": (3, [(0, 1), (1, 2)]),
+    "u5-2": (5, [(0, 1), (1, 2), (1, 3), (3, 4)]),
+    "u7-2": (7, [(0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (2, 6)]),
+    "u10-2": (10, [(0, 1), (0, 2), (0, 3), (0, 4), (0, 5),
+                   (1, 6), (1, 7), (1, 8), (1, 9)]),
+    "u12-2": (12, [(0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (2, 6),
+                   (3, 7), (3, 8), (4, 9), (4, 10), (5, 11)]),
+}
+
+
+@dataclass
+class SubTemplate:
+    size: int
+    passive: Optional[int]
+    active: Optional[int]
+    canon: str
+
+    @property
+    def is_leaf(self) -> bool:
+        return self.passive is None
+
+
+@dataclass
+class PartitionDag:
+    subs: List[SubTemplate]
+    root: int
+    order: List[int]
+
+
+class _RNode:
+    __slots__ = ("children",)
+
+    def __init__(self, children: List["_RNode"]):
+        self.children = children
+
+    def size(self) -> int:
+        return 1 + sum(c.size() for c in self.children)
+
+    def canon(self) -> str:
+        return "(" + "".join(sorted(c.canon() for c in self.children)) + ")"
+
+
+def _build_rooted(n: int, edges: List[Tuple[int, int]]) -> _RNode:
+    adj: List[List[int]] = [[] for _ in range(n)]
+    for u, v in edges:
+        adj[u].append(v)
+        adj[v].append(u)
+
+    def rec(v: int, parent: int) -> _RNode:
+        kids = []
+        for u in adj[v]:
+            if u != parent:
+                node = rec(u, v)
+                kids.append((node.size(), u, node))
+        # descending subtree size, ties by vertex id — matches Rust
+        kids.sort(key=lambda t: (-t[0], t[1]))
+        return _RNode([k[2] for k in kids])
+
+    return rec(0, -1)
+
+
+def partition_template(n: int, edges: List[Tuple[int, int]]) -> PartitionDag:
+    rooted = _build_rooted(n, edges)
+    subs: List[SubTemplate] = []
+    index: Dict[str, int] = {}
+    order: List[int] = []
+
+    def go(node: _RNode) -> int:
+        canon = node.canon()
+        if canon in index:
+            return index[canon]
+        if not node.children:
+            passive = active = None
+        else:
+            active = go(node.children[-1])
+            passive = go(_RNode(node.children[:-1]))
+        i = len(subs)
+        subs.append(SubTemplate(node.size(), passive, active, canon))
+        index[canon] = i
+        order.append(i)
+        return i
+
+    root = go(rooted)
+    return PartitionDag(subs, root, order)
+
+
+@dataclass(frozen=True)
+class CombineShape:
+    """Fixed kernel shape for one (k, a, a1) combine."""
+
+    k: int
+    a: int       # |Ti|
+    a1: int      # |Ti'| (passive)
+    a2: int      # |Ti''| (active)
+
+    @property
+    def c1(self) -> int:
+        return comb(self.k, self.a1)
+
+    @property
+    def c2(self) -> int:
+        return comb(self.k, self.a2)
+
+    @property
+    def n_sets(self) -> int:
+        return comb(self.k, self.a)
+
+    @property
+    def n_splits(self) -> int:
+        return comb(self.a, self.a1)
+
+
+def combine_shapes(name: str) -> List[CombineShape]:
+    """Distinct combine shapes of a builtin template, in compute order."""
+    n, edges = BUILTIN[name]
+    dag = partition_template(n, edges)
+    seen = set()
+    out: List[CombineShape] = []
+    for i in dag.order:
+        s = dag.subs[i]
+        if s.is_leaf:
+            continue
+        a1 = dag.subs[s.passive].size
+        shape = CombineShape(k=n, a=s.size, a1=a1, a2=s.size - a1)
+        key = (shape.a, shape.a1)
+        if key not in seen:
+            seen.add(key)
+            out.append(shape)
+    return out

@@ -1,0 +1,109 @@
+"""L1 kernel correctness: Pallas vs the pure-jnp oracle (the CORE
+correctness signal for the AOT path), swept over shapes/dtypes with
+hypothesis."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import combine, pick_block, ref, spmm
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _mk_tables(rng, c1, c2, s, j):
+    t0 = rng.integers(0, c1, size=(s, j), dtype=np.int32)
+    t1 = rng.integers(0, c2, size=(s, j), dtype=np.int32)
+    return jnp.asarray(t0), jnp.asarray(t1)
+
+
+@pytest.mark.parametrize("b,c1,c2,s,j", [
+    (4, 3, 3, 3, 2),      # u3-1-ish
+    (8, 5, 10, 10, 3),    # u5-2-ish
+    (16, 7, 21, 35, 4),   # u7-2-ish
+    (2, 1, 5, 5, 1),      # degenerate single-split
+])
+def test_combine_matches_ref(b, c1, c2, s, j):
+    rng = np.random.default_rng(b * 1000 + s)
+    passive = jnp.asarray(rng.random((b, c1), dtype=np.float32))
+    agg = jnp.asarray(rng.random((b, c2), dtype=np.float32))
+    t0, t1 = _mk_tables(rng, c1, c2, s, j)
+    got = combine(passive, agg, t0, t1, block=b)
+    want = ref.combine_ref(passive, agg, t0, t1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_combine_tiles_grid():
+    # B larger than the tile: grid must partition correctly
+    rng = np.random.default_rng(7)
+    b, c1, c2, s, j = 32, 4, 6, 5, 2
+    passive = jnp.asarray(rng.random((b, c1), dtype=np.float32))
+    agg = jnp.asarray(rng.random((b, c2), dtype=np.float32))
+    t0, t1 = _mk_tables(rng, c1, c2, s, j)
+    got = combine(passive, agg, t0, t1, block=8)
+    want = ref.combine_ref(passive, agg, t0, t1)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.sampled_from([1, 2, 4, 8]),
+    c1=st.integers(1, 12),
+    c2=st.integers(1, 12),
+    s=st.integers(1, 20),
+    j=st.integers(1, 6),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_combine_hypothesis_sweep(b, c1, c2, s, j, seed):
+    rng = np.random.default_rng(seed)
+    passive = jnp.asarray(rng.random((b, c1), dtype=np.float32))
+    agg = jnp.asarray(rng.random((b, c2), dtype=np.float32))
+    t0, t1 = _mk_tables(rng, c1, c2, s, j)
+    got = combine(passive, agg, t0, t1, block=b)
+    want = ref.combine_ref(passive, agg, t0, t1)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.sampled_from([4, 8, 16]),
+    k=st.sampled_from([4, 8, 16]),
+    c2=st.integers(1, 10),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_spmm_hypothesis_sweep(m, k, c2, seed):
+    rng = np.random.default_rng(seed)
+    adj = jnp.asarray((rng.random((m, k)) < 0.3).astype(np.float32))
+    active = jnp.asarray(rng.random((k, c2), dtype=np.float32))
+    got = spmm(adj, active, bm=min(m, 8), bk=min(k, 8))
+    np.testing.assert_allclose(got, ref.spmm_ref(adj, active), rtol=1e-5, atol=1e-5)
+
+
+def test_spmm_k_accumulation():
+    # multiple K tiles must accumulate, not overwrite
+    rng = np.random.default_rng(3)
+    adj = jnp.asarray((rng.random((8, 32)) < 0.5).astype(np.float32))
+    active = jnp.asarray(rng.random((32, 5), dtype=np.float32))
+    got = spmm(adj, active, bm=8, bk=8)  # 4 K-tiles
+    np.testing.assert_allclose(got, ref.spmm_ref(adj, active), rtol=1e-5, atol=1e-5)
+
+
+def test_pick_block_respects_vmem():
+    from compile.kernels.combine import VMEM_BUDGET_WORDS
+    b = pick_block(6435, 6435, 6435, 35)
+    assert b >= 1
+    assert b * (6435 + 6435 + 6435 + 2 * 6435 * 35) <= VMEM_BUDGET_WORDS or b == 1
+    assert pick_block(3, 3, 3, 2) == 128  # tiny shapes use the max tile
+
+
+def test_counts_are_exact_for_integer_inputs():
+    # count tables hold small integers; the kernel must be exact on them
+    rng = np.random.default_rng(11)
+    passive = jnp.asarray(rng.integers(0, 50, (8, 5)).astype(np.float32))
+    agg = jnp.asarray(rng.integers(0, 50, (8, 10)).astype(np.float32))
+    t0, t1 = _mk_tables(rng, 5, 10, 10, 3)
+    got = np.asarray(combine(passive, agg, t0, t1, block=8))
+    want = np.asarray(ref.combine_ref(passive, agg, t0, t1))
+    assert (got == want).all(), "integer counts must be bit-exact"

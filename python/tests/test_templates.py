@@ -1,0 +1,54 @@
+"""The python partition mirror must agree with the Rust side: combine
+shapes drive the AOT artifact shapes, so a drift here silently breaks the
+XLA engine. The expectations below are locked against the Rust tests."""
+
+from math import comb
+
+from compile.templates import BUILTIN, combine_shapes, partition_template
+
+
+def test_u3_shapes():
+    shapes = {(s.a, s.a1) for s in combine_shapes("u3-1")}
+    # P3 rooted at an end splits 3=(1,2)... with dedup the distinct
+    # combines are sizes (2: 1+1) and (3: 1+2 or 2+1)
+    assert all(a1 + a2 == a for (a, a1), a2 in
+               [((a, a1), next(s.a2 for s in combine_shapes("u3-1")
+                               if (s.a, s.a1) == (a, a1)))
+                for (a, a1) in shapes])
+    assert (2, 1) in shapes
+    assert any(a == 3 for (a, _) in shapes)
+
+
+def test_all_builtins_partition():
+    for name, (n, edges) in BUILTIN.items():
+        dag = partition_template(n, edges)
+        assert dag.subs[dag.root].size == n, name
+        # children strictly smaller, sizes add up
+        for s in dag.subs:
+            if not s.is_leaf:
+                assert (dag.subs[s.passive].size + dag.subs[s.active].size
+                        == s.size), name
+
+
+def test_shape_combinatorics():
+    for name in ["u3-1", "u5-2", "u7-2"]:
+        for s in combine_shapes(name):
+            assert s.c1 == comb(s.k, s.a1)
+            assert s.c2 == comb(s.k, s.a2)
+            assert s.n_sets == comb(s.k, s.a)
+            assert s.n_splits == comb(s.a, s.a1)
+
+
+def test_u5_2_known_dag():
+    # chair: 5 vertices; the DAG must contain the full-template combine
+    shapes = combine_shapes("u5-2")
+    assert any(s.a == 5 for s in shapes)
+    ks = {s.k for s in shapes}
+    assert ks == {5}
+
+
+def test_dedup_is_effective():
+    n, edges = BUILTIN["u7-2"]
+    dag = partition_template(n, edges)
+    # balanced binary on 7: far fewer distinct shapes than 13 raw splits
+    assert len(dag.subs) <= 8

@@ -1,0 +1,42 @@
+//! Collective-exchange benches: schedule construction, fabric throughput,
+//! and the pipeline time algebra at figure-harness sizes.
+
+use harpsg::comm::{Fabric, Packet, Schedule};
+use harpsg::metrics::bench;
+use harpsg::pipeline::{naive, pipelined, StepTiming};
+
+fn main() {
+    println!("== exchange schedules ==");
+    bench("Schedule::ring(25, g=1)", || Schedule::ring(25, 1));
+    bench("Schedule::all_to_all(25)", || Schedule::all_to_all(25));
+
+    println!("== mailbox fabric ==");
+    let rows = vec![1.0f32; 64 * 210]; // 64 remote rows of a C(10,4) table
+    bench("fabric 16-rank full exchange (64x210 rows)", || {
+        let mut f = Fabric::new(16);
+        for p in 0..16 {
+            for q in 0..16 {
+                if p != q {
+                    f.send(Packet::new(p, q, 0, 1, 210, rows.clone()));
+                }
+            }
+        }
+        for p in 0..16 {
+            std::hint::black_box(f.drain(p));
+        }
+    });
+
+    println!("== pipeline time algebra ==");
+    let timings: Vec<Vec<StepTiming>> = (0..24)
+        .map(|w| {
+            (0..25)
+                .map(|p| StepTiming {
+                    comp: 0.01 + 0.0001 * ((w * 7 + p) % 13) as f64,
+                    comm: 0.008 + 0.0001 * ((w * 3 + p) % 7) as f64,
+                })
+                .collect()
+        })
+        .collect();
+    bench("pipelined() 24 steps x 25 ranks", || pipelined(&timings));
+    bench("naive() 24 steps x 25 ranks", || naive(&timings));
+}

@@ -1,0 +1,89 @@
+//! Hot-path benches: the DP combine (aggregate + contract) at the block
+//! shapes of u5-2 / u10-2 / u12-2, native vs XLA backends. These are the
+//! kernels the end-to-end figures spend >80% of their compute in, and the
+//! primary target of EXPERIMENTS.md §Perf.
+
+use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable};
+use harpsg::combin::{Binomial, SplitTable};
+use harpsg::metrics::bench;
+
+fn mk_tables(n: usize, c1: usize, c2: usize) -> (CountTable, CountTable) {
+    let mut passive = CountTable::zeros(n, c1);
+    let mut active = CountTable::zeros(n, c2);
+    for (i, x) in passive.data.iter_mut().enumerate() {
+        *x = ((i * 7) % 5) as f32;
+    }
+    for (i, x) in active.data.iter_mut().enumerate() {
+        *x = ((i * 3) % 4) as f32;
+    }
+    (passive, active)
+}
+
+fn bench_combine(label: &str, k: usize, a: usize, a1: usize, n: usize, deg: usize) {
+    let binom = Binomial::new();
+    let split = SplitTable::new(k, a, a1, &binom);
+    let c1 = binom.c(k, a1) as usize;
+    let c2 = binom.c(k, a - a1) as usize;
+    let (passive, active) = mk_tables(n, c1, c2);
+    let pairs: Vec<(u32, u32)> = (0..n as u32)
+        .flat_map(|v| (1..=deg as u32).map(move |d| (v, (v + d) % n as u32)))
+        .collect();
+    let mut out = CountTable::zeros(n, split.n_sets);
+    let mut scratch = CombineScratch::new(n, c2);
+    let units = pairs.len() as f64 * c2 as f64 + n as f64 * (split.n_sets * split.n_splits) as f64;
+
+    let t_agg = bench(&format!("{label}/aggregate n={n} deg={deg}"), || {
+        scratch.begin(c2);
+        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        scratch.finish();
+    });
+    let t_full = bench(&format!("{label}/agg+contract"), || {
+        scratch.begin(c2);
+        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        contract_touched(&mut out, &passive, &split, &mut scratch);
+    });
+    println!(
+        "  -> {:.2} ns/unit ({:.0} units/op, agg share {:.0}%)\n",
+        t_full * 1e9 / units,
+        units,
+        100.0 * t_agg / t_full
+    );
+}
+
+fn bench_xla_vs_native() {
+    let Ok(rt) = harpsg::runtime::XlaRuntime::load_default() else {
+        println!("bench xla: artifacts not built, skipping");
+        return;
+    };
+    let rt = std::sync::Arc::new(rt);
+    let binom = Binomial::new();
+    let split = SplitTable::new(5, 3, 1, &binom);
+    let c1 = 5;
+    let c2 = binom.c(5, 2) as usize;
+    let n = 512;
+    let (passive, active) = mk_tables(n, c1, c2);
+    let pairs: Vec<(u32, u32)> = (0..n as u32).map(|v| (v, (v + 1) % n as u32)).collect();
+    let mut out = CountTable::zeros(n, split.n_sets);
+    let mut scratch = CombineScratch::new(n, c2);
+    let xc = harpsg::runtime::XlaCombine::new(rt);
+    bench("xla-combine k5_a3 n=512 (PJRT)", || {
+        scratch.begin(c2);
+        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        xc.contract_touched(&mut out, &passive, &split, &mut scratch);
+    });
+    bench("native-combine k5_a3 n=512", || {
+        scratch.begin(c2);
+        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        contract_touched(&mut out, &passive, &split, &mut scratch);
+    });
+}
+
+fn main() {
+    println!("== hot path: DP combine ==");
+    bench_combine("u5-2-root  (k5,a5,a1=1) ", 5, 5, 1, 4096, 16);
+    bench_combine("u10-2-mid  (k10,a5,a1=1)", 10, 5, 1, 4096, 16);
+    bench_combine("u12-2-mid  (k12,a6,a1=2)", 12, 6, 2, 1024, 16);
+    bench_combine("u12-2-root (k12,a12,a1=8)", 12, 12, 8, 1024, 16);
+    println!("== XLA (PJRT) vs native backend ==");
+    bench_xla_vs_native();
+}

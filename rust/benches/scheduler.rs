@@ -1,0 +1,45 @@
+//! Scheduler benches: Alg-4 task generation and the virtual-thread replay
+//! across task sizes — the machinery behind Fig 11.
+
+use harpsg::metrics::bench;
+use harpsg::sched::{make_tasks, replay, TaskCostModel};
+use harpsg::util::Rng;
+
+fn main() {
+    // power-law-ish degree distribution with a giant hub (R250K8-like)
+    let mut rng = Rng::new(9);
+    let mut degs: Vec<u32> = (0..20_000)
+        .map(|_| {
+            let r = rng.f64();
+            (8.0 / (1.0 - r).powf(0.7)) as u32
+        })
+        .collect();
+    degs[0] = 200_000; // the hub
+
+    println!("== Alg-4 task generation (20K vertices + hub) ==");
+    for s in [0u32, 50, 500] {
+        bench(&format!("make_tasks(s={s})"), || {
+            make_tasks(&degs, s, Some(7))
+        });
+    }
+
+    println!("== virtual-thread replay ==");
+    let model = TaskCostModel {
+        unit_per_pair: 210.0,
+        unit_per_task: 0.0,
+        overhead: 400.0,
+    };
+    for s in [0u32, 50, 500] {
+        let tasks = make_tasks(&degs, s, Some(7));
+        let costs: Vec<f64> = tasks.iter().map(|t| model.cost(t)).collect();
+        let label = format!("replay(48 thr, s={s}, {} tasks)", costs.len());
+        bench(&label, || replay(&costs, 48, 24));
+        let r = replay(&costs, 48, 24);
+        println!(
+            "  -> makespan {:.3e} units, util {:.0}%, avg conc {:.1}\n",
+            r.makespan,
+            100.0 * r.utilization,
+            r.avg_concurrency
+        );
+    }
+}

@@ -1,0 +1,46 @@
+//! Table 3 bench: regenerates the paper's computation-intensity table
+//! (exact combinatorics — the one artifact we reproduce value-for-value)
+//! and times the template partition + split-table machinery behind it.
+
+use harpsg::combin::{Binomial, SplitTable};
+use harpsg::metrics::bench;
+use harpsg::template::{builtin, complexity, partition_template, BUILTIN_NAMES};
+
+fn main() {
+    println!("== Table 3 (regenerated) ==");
+    println!(
+        "{:>8} {:>10} {:>13} {:>10}  (paper intensity)",
+        "template", "memory", "computation", "intensity"
+    );
+    let paper = [
+        ("u3-1", 2.0),
+        ("u5-2", 2.8),
+        ("u7-2", 2.9),
+        ("u10-2", 5.3),
+        ("u12-1", 6.0),
+        ("u12-2", 12.0),
+        ("u13", 22.0),
+        ("u14", 32.0),
+        ("u15-1", 60.0),
+        ("u15-2", 39.0),
+    ];
+    for (name, paper_i) in paper {
+        let c = complexity(&builtin(name).unwrap());
+        println!(
+            "{:>8} {:>10} {:>13} {:>10.1}  ({paper_i})",
+            name, c.memory, c.computation, c.intensity
+        );
+    }
+
+    println!("\n== machinery timings ==");
+    for name in BUILTIN_NAMES {
+        let t = builtin(name).unwrap();
+        bench(&format!("partition_template({name})"), || {
+            partition_template(&t)
+        });
+    }
+    let binom = Binomial::new();
+    bench("SplitTable::new(15,7,3) [6435x35]", || {
+        SplitTable::new(15, 7, 3, &binom)
+    });
+}

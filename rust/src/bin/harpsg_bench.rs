@@ -1,0 +1,68 @@
+//! `harpsg-bench` — regenerate every table and figure of the paper.
+//!
+//! Usage:
+//!   harpsg-bench all [--scale-mult N] [--iters N] [--seed S]
+//!   harpsg-bench table3 fig6 fig7 ... (any subset of IDs)
+//!
+//! Prints each series as markdown and writes `results/<id>.md` + `.csv`.
+
+use harpsg::figures::{run_figure, FigureCtx, ALL_FIGURES};
+use harpsg::metrics::{write_result, Timer};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.is_empty() {
+        eprintln!(
+            "usage: harpsg-bench <all|{}> [--scale-mult N] [--iters N] [--seed S]",
+            ALL_FIGURES.join("|")
+        );
+        std::process::exit(2);
+    }
+    let mut ctx = FigureCtx::default();
+    let mut ids: Vec<String> = Vec::new();
+    let mut i = 0;
+    while i < args.len() {
+        match args[i].as_str() {
+            "--scale-mult" => {
+                ctx.scale_mult = args[i + 1].parse().expect("--scale-mult N");
+                i += 2;
+            }
+            "--iters" => {
+                ctx.iters = args[i + 1].parse().expect("--iters N");
+                i += 2;
+            }
+            "--seed" => {
+                ctx.seed = args[i + 1].parse().expect("--seed S");
+                i += 2;
+            }
+            "all" => {
+                ids.extend(ALL_FIGURES.iter().map(|s| s.to_string()));
+                i += 1;
+            }
+            other => {
+                ids.push(other.to_string());
+                i += 1;
+            }
+        }
+    }
+
+    for id in &ids {
+        let t = Timer::start();
+        let Some(series) = run_figure(id, &ctx) else {
+            eprintln!("unknown figure id `{id}` — known: {}", ALL_FIGURES.join(", "));
+            std::process::exit(2);
+        };
+        let mut md = String::new();
+        let mut csv = String::new();
+        for s in &series {
+            md.push_str(&s.to_markdown());
+            md.push('\n');
+            csv.push_str(&s.to_csv());
+            csv.push('\n');
+        }
+        println!("{md}");
+        println!("[{id}: {:.1}s]", t.secs());
+        let _ = write_result(&format!("{id}.md"), &md);
+        let _ = write_result(&format!("{id}.csv"), &csv);
+    }
+}

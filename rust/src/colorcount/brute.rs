@@ -1,0 +1,140 @@
+//! Exact non-induced embedding counting by backtracking — the test oracle.
+//!
+//! Counts injective homomorphisms of the tree template into the graph by
+//! mapping template vertices in BFS order (each vertex's parent is mapped
+//! first, so candidates are exactly the unused neighbors of the parent's
+//! image), then divides by `aut(T)` to count subgraph copies. Exponential
+//! in general; used only on tiny graphs in tests and examples.
+
+use crate::graph::Graph;
+use crate::template::{automorphism_count, Template};
+
+/// Number of injective homomorphisms from `t` into `g`.
+pub fn injective_homomorphisms(t: &Template, g: &Graph) -> u64 {
+    let n_t = t.size();
+    if n_t > g.n_vertices() {
+        return 0;
+    }
+    // BFS order of the template from vertex 0, recording parents
+    let mut order = Vec::with_capacity(n_t);
+    let mut parent = vec![u32::MAX; n_t];
+    let mut seen = vec![false; n_t];
+    let mut queue = std::collections::VecDeque::from([0u32]);
+    seen[0] = true;
+    while let Some(v) = queue.pop_front() {
+        order.push(v);
+        for &u in &t.adj[v as usize] {
+            if !seen[u as usize] {
+                seen[u as usize] = true;
+                parent[u as usize] = v;
+                queue.push_back(u);
+            }
+        }
+    }
+
+    let mut image = vec![u32::MAX; n_t];
+    let mut used = vec![false; g.n_vertices()];
+    let mut count = 0u64;
+
+    fn rec(
+        depth: usize,
+        order: &[u32],
+        parent: &[u32],
+        image: &mut [u32],
+        used: &mut [bool],
+        g: &Graph,
+        count: &mut u64,
+    ) {
+        if depth == order.len() {
+            *count += 1;
+            return;
+        }
+        let tv = order[depth] as usize;
+        if depth == 0 {
+            for gv in 0..g.n_vertices() as u32 {
+                image[tv] = gv;
+                used[gv as usize] = true;
+                rec(depth + 1, order, parent, image, used, g, count);
+                used[gv as usize] = false;
+            }
+        } else {
+            let p_img = image[parent[tv] as usize];
+            for &gv in g.neighbors(p_img) {
+                if !used[gv as usize] {
+                    image[tv] = gv;
+                    used[gv as usize] = true;
+                    rec(depth + 1, order, parent, image, used, g, count);
+                    used[gv as usize] = false;
+                }
+            }
+        }
+    }
+
+    rec(0, &order, &parent, &mut image, &mut used, g, &mut count);
+    count
+}
+
+/// Exact count of non-induced embeddings (subgraph copies isomorphic to
+/// `t`): injective homomorphisms divided by automorphisms.
+pub fn count_embeddings(t: &Template, g: &Graph) -> f64 {
+    let homs = injective_homomorphisms(t, g);
+    let aut = automorphism_count(t);
+    homs as f64 / aut as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::graph_from_edges;
+    use crate::template::builtin;
+
+    #[test]
+    fn path3_in_triangle() {
+        let g = graph_from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        let t = builtin("u3-1").unwrap();
+        assert_eq!(injective_homomorphisms(&t, &g), 6);
+        assert_eq!(count_embeddings(&t, &g), 3.0);
+    }
+
+    #[test]
+    fn path3_in_star() {
+        // star K1,3: P3 embeddings = pairs of leaves through center = C(3,2)=3
+        let g = graph_from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        let t = builtin("u3-1").unwrap();
+        assert_eq!(count_embeddings(&t, &g), 3.0);
+    }
+
+    #[test]
+    fn path3_in_k4() {
+        // K4: middle vertex 4 ways × C(3,2) pairs = 12
+        let g = graph_from_edges(
+            4,
+            &[(0, 1), (0, 2), (0, 3), (1, 2), (1, 3), (2, 3)],
+        );
+        let t = builtin("u3-1").unwrap();
+        assert_eq!(count_embeddings(&t, &g), 12.0);
+    }
+
+    #[test]
+    fn template_bigger_than_graph() {
+        let g = graph_from_edges(3, &[(0, 1), (1, 2)]);
+        let t = builtin("u5-2").unwrap();
+        assert_eq!(count_embeddings(&t, &g), 0.0);
+    }
+
+    #[test]
+    fn star5_in_k6() {
+        // embeddings of K1,4 in K6: 6 centers × C(5,4) leaf sets = 30
+        let mut edges = Vec::new();
+        for i in 0..6u32 {
+            for j in i + 1..6 {
+                edges.push((i, j));
+            }
+        }
+        let g = graph_from_edges(6, &edges);
+        let star =
+            crate::template::Template::from_edges("s5", 5, &[(0, 1), (0, 2), (0, 3), (0, 4)])
+                .unwrap();
+        assert_eq!(count_embeddings(&star, &g), 30.0);
+    }
+}

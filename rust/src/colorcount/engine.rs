@@ -1,0 +1,467 @@
+//! The color-coding DP engine.
+//!
+//! The combine step (Eq 1) is implemented in its factored form
+//!
+//! ```text
+//! out[v,s] = Σ_j  passive[v, t0[s,j]] · agg[v, t1[s,j]],
+//! agg[v,·] = Σ_{u ∈ N(v)} active[u,·]
+//! ```
+//!
+//! where the neighbor aggregation distributes over the split sum. This is
+//! both the performance core of the Rust engine and the exact computation
+//! that the L1 Pallas kernel / L2 JAX graph implement (SpMM + gathered
+//! contraction) — see DESIGN.md §2.
+//!
+//! Crucially, the contraction is *linear in agg*: accumulating
+//! `Σ_j passive·agg_w` per communication step `w` over partial neighbor
+//! sets sums to the full result. The distributed coordinator leans on this
+//! to interleave per-step computation with communication (Alg 3).
+
+use super::table::{init_leaf_table, Coloring, Count, CountTable};
+use crate::combin::{Binomial, SplitTable};
+use crate::graph::Graph;
+use crate::template::{automorphism_count, partition_template, PartitionDag, Template};
+
+/// Immutable per-template compute context shared by every engine flavor
+/// (single-rank, distributed ranks, XLA-backed).
+#[derive(Debug)]
+pub struct EngineContext {
+    pub k: usize,
+    pub binom: Binomial,
+    pub dag: PartitionDag,
+    /// split table per subtemplate index (None for leaves)
+    pub splits: Vec<Option<SplitTable>>,
+    pub aut: u64,
+    pub template_name: String,
+}
+
+impl EngineContext {
+    pub fn new(t: &Template) -> Self {
+        let k = t.size();
+        let binom = Binomial::new();
+        let dag = partition_template(t);
+        let splits = dag
+            .subs
+            .iter()
+            .map(|s| {
+                if s.is_leaf() {
+                    None
+                } else {
+                    Some(SplitTable::new(k, s.size, s.passive_size(&dag), &binom))
+                }
+            })
+            .collect();
+        EngineContext {
+            k,
+            binom,
+            dag,
+            splits,
+            aut: automorphism_count(t),
+            template_name: t.name.clone(),
+        }
+    }
+
+    /// Columns of the count table for subtemplate `i`: C(k, |Ti|).
+    pub fn n_sets(&self, i: usize) -> usize {
+        self.binom.c(self.k, self.dag.subs[i].size) as usize
+    }
+
+    /// The scale factor k^k / k! of Alg 1 line 12 (as f64; k ≤ 16).
+    pub fn colorful_scale(&self) -> f64 {
+        let k = self.k as f64;
+        let mut s = 1.0f64;
+        for i in 1..=self.k {
+            s *= k / i as f64;
+        }
+        s
+    }
+}
+
+/// Scratch space for one combine: a per-vertex aggregation buffer reused
+/// across steps, plus the touched-row set for sparse clearing.
+pub struct CombineScratch {
+    agg: Vec<Count>,
+    touched: Vec<u32>,
+    touched_flag: Vec<bool>,
+    n_agg_sets: usize,
+}
+
+impl CombineScratch {
+    pub fn new(n_rows: usize, max_agg_sets: usize) -> Self {
+        CombineScratch {
+            agg: vec![0.0; n_rows * max_agg_sets],
+            touched: Vec::new(),
+            touched_flag: vec![false; n_rows],
+            n_agg_sets: 0,
+        }
+    }
+
+    pub fn begin(&mut self, n_agg_sets: usize) {
+        self.n_agg_sets = n_agg_sets;
+        debug_assert!(self.touched.is_empty());
+    }
+
+    #[inline]
+    fn agg_row_mut(&mut self, r: usize) -> &mut [Count] {
+        let lo = r * self.n_agg_sets;
+        &mut self.agg[lo..lo + self.n_agg_sets]
+    }
+
+    /// Bytes of the aggregation buffer (peak-memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.agg.len() * std::mem::size_of::<Count>()) as u64
+    }
+
+    /// Number of rows touched since `begin`.
+    pub fn touched_len(&self) -> usize {
+        self.touched.len()
+    }
+
+    /// The touched row indices (unordered).
+    pub fn touched_rows(&self) -> &[u32] {
+        &self.touched
+    }
+
+    /// Current aggregation-row width.
+    pub fn n_agg_sets(&self) -> usize {
+        self.n_agg_sets
+    }
+
+    /// Read an aggregation row.
+    pub fn agg_row(&self, r: usize) -> &[Count] {
+        let lo = r * self.n_agg_sets;
+        &self.agg[lo..lo + self.n_agg_sets]
+    }
+
+    /// Clear the touched set (external combine backends call this after
+    /// consuming the aggregation rows; `contract_touched` does it itself).
+    pub fn finish(&mut self) {
+        for &v in &self.touched {
+            self.touched_flag[v as usize] = false;
+        }
+        self.touched.clear();
+    }
+}
+
+/// Accumulate one batch of active-child rows into the aggregation buffer:
+/// `agg[v,·] += active_row(u)` for every (v, u) adjacency pair in `pairs`.
+///
+/// `pairs` yields `(local_row_of_v, row_index_of_u_in_rows)`; `rows` is the
+/// active-child table slice the u-rows live in (local table or a received
+/// step buffer). Returns the number of pairs processed.
+pub fn aggregate_batch(
+    scratch: &mut CombineScratch,
+    rows: &CountTable,
+    pairs: impl Iterator<Item = (u32, u32)>,
+) -> u64 {
+    let n_sets = rows.n_sets;
+    debug_assert_eq!(n_sets, scratch.n_agg_sets);
+    let mut n = 0u64;
+    for (v, u) in pairs {
+        let v = v as usize;
+        if !scratch.touched_flag[v] {
+            scratch.touched_flag[v] = true;
+            scratch.touched.push(v as u32);
+            scratch.agg_row_mut(v).fill(0.0);
+        }
+        // SAFETY: callers hand rows/pairs built together (local tables or
+        // request-list buffers); debug builds still bounds-check via the
+        // asserts below.
+        debug_assert!((u as usize + 1) * n_sets <= rows.data.len());
+        debug_assert!((v + 1) * n_sets <= scratch.agg.len());
+        unsafe {
+            let urow = rows.data.get_unchecked(u as usize * n_sets..(u as usize + 1) * n_sets);
+            let arow = scratch
+                .agg
+                .get_unchecked_mut(v * n_sets..(v + 1) * n_sets);
+            for (a, &x) in arow.iter_mut().zip(urow) {
+                *a += x;
+            }
+        }
+        n += 1;
+    }
+    n
+}
+
+/// Contract the touched aggregation rows into `out` through the split
+/// table: `out[v,s] += Σ_j passive[v,t0[s,j]] · agg[v,t1[s,j]]`, then
+/// clear the touched set (ready for the next step). Returns the number of
+/// (vertex, set, split) units processed — the Eq-4 computation measure.
+pub fn contract_touched(
+    out: &mut CountTable,
+    passive: &CountTable,
+    split: &SplitTable,
+    scratch: &mut CombineScratch,
+) -> u64 {
+    let n_splits = split.n_splits;
+    let n_sets = split.n_sets;
+    let mut units = 0u64;
+    // SAFETY of the unchecked accesses below: `SplitTable::new` constructs
+    // idx1/idx2 as ranks into C(k,a1)/C(k,a2) (tests assert the bijection),
+    // and the passive/agg rows have exactly those widths — enforced by the
+    // debug asserts. Bounds checks on these 10⁷+ L1-resident gathers are
+    // the measured hot-path cost (EXPERIMENTS.md §Perf).
+    debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets));
+    debug_assert!(split.idx2.iter().all(|&i| (i as usize) < scratch.n_agg_sets));
+    let idx1 = &split.idx1[..n_sets * n_splits];
+    let idx2 = &split.idx2[..n_sets * n_splits];
+    for ti in 0..scratch.touched.len() {
+        let v = scratch.touched[ti] as usize;
+        let prow = passive.row(v);
+        let lo = v * scratch.n_agg_sets;
+        let arow = &scratch.agg[lo..lo + scratch.n_agg_sets];
+        let orow = out.row_mut(v);
+        let mut flat = 0usize;
+        for o in orow.iter_mut().take(n_sets) {
+            // two accumulators break the FMA dependency chain over the
+            // (short, 2–70 long) split run — measured win in §Perf
+            let mut acc0 = 0.0f32;
+            let mut acc1 = 0.0f32;
+            let mut j = 0;
+            // SAFETY: flat+j < n_sets*n_splits by loop structure; index
+            // ranges validated above.
+            unsafe {
+                while j + 2 <= n_splits {
+                    let p0 = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
+                    let a0 = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
+                    let p1 = *prow.get_unchecked(*idx1.get_unchecked(flat + j + 1) as usize);
+                    let a1 = *arow.get_unchecked(*idx2.get_unchecked(flat + j + 1) as usize);
+                    acc0 += p0 * a0;
+                    acc1 += p1 * a1;
+                    j += 2;
+                }
+                if j < n_splits {
+                    let p = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
+                    let a = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
+                    acc0 += p * a;
+                }
+            }
+            flat += n_splits;
+            *o += acc0 + acc1;
+        }
+        units += (n_sets * n_splits) as u64;
+    }
+    scratch.finish();
+    units
+}
+
+/// Single-rank reference engine: computes the colorful count of one
+/// coloring iteration over the whole graph.
+pub struct Engine {
+    pub ctx: EngineContext,
+}
+
+/// Result of one coloring iteration.
+#[derive(Debug, Clone, Copy)]
+pub struct IterationOutput {
+    /// Σ_v C(v, T(ρ), S) — raw colorful count (before scaling)
+    pub colorful: f64,
+    /// the unbiased estimate contribution: colorful · k^k/k! / aut
+    pub estimate: f64,
+}
+
+impl Engine {
+    pub fn new(t: &Template) -> Self {
+        Engine {
+            ctx: EngineContext::new(t),
+        }
+    }
+
+    /// Run the DP bottom-up for one coloring and return the counts.
+    pub fn run_iteration(&self, g: &Graph, iter_seed: u64) -> IterationOutput {
+        let n = g.n_vertices();
+        let vertices: Vec<u32> = (0..n as u32).collect();
+        let coloring = Coloring::random(n, self.ctx.k, iter_seed);
+        let mut tables: Vec<Option<CountTable>> = vec![None; self.ctx.dag.subs.len()];
+        let max_agg = self
+            .ctx
+            .dag
+            .subs
+            .iter()
+            .filter(|s| !s.is_leaf())
+            .map(|s| self.ctx.binom.c(self.ctx.k, s.active_size(&self.ctx.dag)) as usize)
+            .max()
+            .unwrap_or(1);
+        let mut scratch = CombineScratch::new(n, max_agg);
+        let last_use = self.ctx.dag.last_use();
+
+        for (step, &i) in self.ctx.dag.order.iter().enumerate() {
+            let sub = &self.ctx.dag.subs[i];
+            if sub.is_leaf() {
+                tables[i] = Some(init_leaf_table(&vertices, &coloring));
+            } else {
+                let split = self.ctx.splits[i].as_ref().unwrap();
+                let mut out = CountTable::zeros(n, split.n_sets);
+                {
+                    let active = tables[sub.active.unwrap()].as_ref().unwrap();
+                    let passive = tables[sub.passive.unwrap()].as_ref().unwrap();
+                    scratch.begin(active.n_sets);
+                    let pairs = (0..n as u32)
+                        .flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)));
+                    aggregate_batch(&mut scratch, active, pairs);
+                    contract_touched(&mut out, passive, split, &mut scratch);
+                }
+                tables[i] = Some(out);
+            }
+            // free tables whose last reader has run (intermediate-data
+            // reduction; the distributed engine additionally slices)
+            for (j, lu) in last_use.iter().enumerate() {
+                if *lu == step && j != self.ctx.dag.root {
+                    tables[j] = None;
+                }
+            }
+        }
+
+        let colorful = tables[self.ctx.dag.root].as_ref().unwrap().total();
+        IterationOutput {
+            colorful,
+            estimate: colorful * self.ctx.colorful_scale() / self.ctx.aut as f64,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::graph_from_edges;
+    use crate::template::builtin;
+
+    #[test]
+    fn triangle_path3_colorful_math() {
+        // On a triangle with an all-distinct coloring, Σ_v C(v,P3,S) = 6
+        // injective homs. Find a seed giving 3 distinct colors.
+        let g = graph_from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        let t = builtin("u3-1").unwrap();
+        let e = Engine::new(&t);
+        let mut seed = 0u64;
+        loop {
+            let c = Coloring::random(3, 3, seed);
+            let mut set = [false; 3];
+            for &x in &c.colors {
+                set[x as usize] = true;
+            }
+            if set.iter().all(|&b| b) {
+                break;
+            }
+            seed += 1;
+        }
+        let out = e.run_iteration(&g, seed);
+        assert_eq!(out.colorful, 6.0);
+        // estimate = 6 * 27/6 / 2 = 13.5
+        assert!((out.estimate - 13.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn non_colorful_iteration_gives_zero() {
+        let g = graph_from_edges(3, &[(0, 1), (1, 2), (2, 0)]);
+        let t = builtin("u3-1").unwrap();
+        let e = Engine::new(&t);
+        // find a seed where at least two path-adjacent vertices share color
+        let mut seed = 0u64;
+        loop {
+            let c = Coloring::random(3, 3, seed);
+            if c.colors[0] == c.colors[1] && c.colors[1] == c.colors[2] {
+                break;
+            }
+            seed += 1;
+        }
+        let out = e.run_iteration(&g, seed);
+        assert_eq!(out.colorful, 0.0);
+    }
+
+    #[test]
+    fn colorful_scale_value() {
+        let t = builtin("u3-1").unwrap();
+        let e = Engine::new(&t);
+        assert!((e.ctx.colorful_scale() - 27.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn aggregate_then_contract_matches_naive() {
+        // randomized check of the factored combine vs the direct
+        // per-(u, split) double loop
+        use crate::util::prop;
+        prop::check("combine_factored", |gen| {
+            let k = gen.usize_in(3, 6);
+            let a = gen.usize_in(2, k);
+            let a1 = gen.usize_in(1, a - 1);
+            let binom = Binomial::new();
+            let split = SplitTable::new(k, a, a1, &binom);
+            let n = gen.usize_in(2, 8);
+            let c1 = binom.c(k, a1) as usize;
+            let c2 = binom.c(k, a - a1) as usize;
+            let mut passive = CountTable::zeros(n, c1);
+            let mut active = CountTable::zeros(n, c2);
+            for x in passive.data.iter_mut() {
+                *x = gen.usize_in(0, 3) as f32;
+            }
+            for x in active.data.iter_mut() {
+                *x = gen.usize_in(0, 3) as f32;
+            }
+            // random adjacency pairs
+            let n_pairs = gen.usize_in(0, 20);
+            let pairs: Vec<(u32, u32)> = (0..n_pairs)
+                .map(|_| (gen.usize_in(0, n - 1) as u32, gen.usize_in(0, n - 1) as u32))
+                .collect();
+            // factored path
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let mut scratch = CombineScratch::new(n, c2);
+            scratch.begin(c2);
+            aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+            contract_touched(&mut out, &passive, &split, &mut scratch);
+            // naive path
+            let mut naive = CountTable::zeros(n, split.n_sets);
+            for &(v, u) in &pairs {
+                for s in 0..split.n_sets {
+                    let (r1, r2) = split.row(s);
+                    let mut acc = 0.0f32;
+                    for j in 0..split.n_splits {
+                        acc += passive.row(v as usize)[r1[j] as usize]
+                            * active.row(u as usize)[r2[j] as usize];
+                    }
+                    naive.row_mut(v as usize)[s] += acc;
+                }
+            }
+            for (x, y) in out.data.iter().zip(&naive.data) {
+                if (x - y).abs() > 1e-3 {
+                    return Err(format!("mismatch {x} vs {y}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn batch_split_linearity() {
+        // combining pairs in two batches must equal one batch
+        let binom = Binomial::new();
+        let split = SplitTable::new(4, 3, 1, &binom);
+        let c1 = 4;
+        let c2 = binom.c(4, 2) as usize;
+        let n = 4;
+        let mut passive = CountTable::zeros(n, c1);
+        let mut active = CountTable::zeros(n, c2);
+        for (i, x) in passive.data.iter_mut().enumerate() {
+            *x = (i % 3) as f32;
+        }
+        for (i, x) in active.data.iter_mut().enumerate() {
+            *x = ((i * 7) % 5) as f32;
+        }
+        let pairs = [(0u32, 1u32), (0, 2), (1, 3), (2, 0), (0, 3)];
+        let run = |chunks: &[&[(u32, u32)]]| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let mut scratch = CombineScratch::new(n, c2);
+            for ch in chunks {
+                scratch.begin(c2);
+                aggregate_batch(&mut scratch, &active, ch.iter().copied());
+                contract_touched(&mut out, &passive, &split, &mut scratch);
+            }
+            out
+        };
+        let one = run(&[&pairs]);
+        let two = run(&[&pairs[..2], &pairs[2..]]);
+        for (x, y) in one.data.iter().zip(&two.data) {
+            assert!((x - y).abs() < 1e-4, "{x} vs {y}");
+        }
+    }
+}

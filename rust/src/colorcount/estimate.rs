@@ -1,0 +1,129 @@
+//! The (ε, δ)-approximation loop: `Niter` independent colorings, grouped
+//! averages, and the median-of-means output (Alg 1 lines 3 & 14).
+
+use super::engine::Engine;
+use crate::graph::Graph;
+
+#[derive(Debug, Clone)]
+pub struct Estimate {
+    /// per-iteration unbiased contributions
+    pub samples: Vec<f64>,
+    /// the median-of-means estimate
+    pub value: f64,
+    /// plain mean (useful for diagnostics)
+    pub mean: f64,
+}
+
+/// `Niter = O(e^k · ln(1/δ) / ε²)` — the paper's iteration bound. Returned
+/// as a u64 but typically capped by the caller: the constant-free bound is
+/// astronomically conservative for the small graphs in tests.
+pub fn iteration_bound(k: usize, epsilon: f64, delta: f64) -> u64 {
+    let ek = std::f64::consts::E.powi(k as i32);
+    (ek * (1.0 / delta).ln() / (epsilon * epsilon)).ceil() as u64
+}
+
+/// Median of `t` group means over the samples (Alg 1 line 14).
+pub fn median_of_means(samples: &[f64], n_groups: usize) -> f64 {
+    assert!(!samples.is_empty());
+    let t = n_groups.clamp(1, samples.len());
+    let per = samples.len() / t;
+    let mut means: Vec<f64> = (0..t)
+        .map(|j| {
+            let lo = j * per;
+            let hi = if j == t - 1 { samples.len() } else { lo + per };
+            samples[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+        })
+        .collect();
+    means.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    if t % 2 == 1 {
+        means[t / 2]
+    } else {
+        0.5 * (means[t / 2 - 1] + means[t / 2])
+    }
+}
+
+/// Run `n_iters` single-rank color-coding iterations and combine.
+pub fn estimate(engine: &Engine, g: &Graph, n_iters: usize, seed: u64, n_groups: usize) -> Estimate {
+    let samples: Vec<f64> = (0..n_iters)
+        .map(|it| {
+            engine
+                .run_iteration(g, crate::util::mix2(seed, it as u64))
+                .estimate
+        })
+        .collect();
+    let mean = samples.iter().sum::<f64>() / samples.len() as f64;
+    Estimate {
+        value: median_of_means(&samples, n_groups),
+        mean,
+        samples,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::colorcount::brute::count_embeddings;
+    use crate::graph::{graph_from_edges, rmat::generate, RmatParams};
+    use crate::template::builtin;
+
+    #[test]
+    fn median_of_means_basics() {
+        assert_eq!(median_of_means(&[1.0, 2.0, 3.0], 3), 2.0);
+        assert_eq!(median_of_means(&[1.0, 100.0], 1), 50.5);
+        // outlier-robust: one wild sample does not dominate
+        let s = [10.0, 10.0, 10.0, 10.0, 10.0, 1e6];
+        assert!(median_of_means(&s, 3) < 100.0);
+    }
+
+    #[test]
+    fn iteration_bound_grows() {
+        assert!(iteration_bound(5, 0.1, 0.1) > iteration_bound(3, 0.1, 0.1));
+        assert!(iteration_bound(3, 0.05, 0.1) > iteration_bound(3, 0.1, 0.1));
+    }
+
+    #[test]
+    fn converges_to_brute_force_path3() {
+        // small dense-ish graph, u3-1: estimator must land near the truth
+        let g = generate(&RmatParams::with_skew(32, 140, 1, 9));
+        let t = builtin("u3-1").unwrap();
+        let truth = count_embeddings(&t, &g);
+        assert!(truth > 0.0);
+        let e = Engine::new(&t);
+        let est = estimate(&e, &g, 600, 42, 3);
+        let rel = (est.value - truth).abs() / truth;
+        assert!(
+            rel < 0.15,
+            "estimate {} vs truth {} (rel {rel})",
+            est.value,
+            truth
+        );
+    }
+
+    #[test]
+    fn converges_to_brute_force_u5_2() {
+        let g = generate(&RmatParams::with_skew(24, 90, 1, 5));
+        let t = builtin("u5-2").unwrap();
+        let truth = count_embeddings(&t, &g);
+        assert!(truth > 0.0, "workload must contain u5-2");
+        let e = Engine::new(&t);
+        let est = estimate(&e, &g, 1500, 7, 3);
+        let rel = (est.value - truth).abs() / truth;
+        assert!(
+            rel < 0.2,
+            "estimate {} vs truth {} (rel {rel})",
+            est.value,
+            truth
+        );
+    }
+
+    #[test]
+    fn exact_when_template_absent() {
+        // a star graph contains no P5-chair (needs a path of length 3)
+        let g = graph_from_edges(6, &[(0, 1), (0, 2), (0, 3), (0, 4), (0, 5)]);
+        let t = builtin("u5-2").unwrap();
+        let truth = count_embeddings(&t, &g);
+        let e = Engine::new(&t);
+        let est = estimate(&e, &g, 50, 3, 3);
+        assert_eq!(truth, est.value, "both must be 0? truth={truth}");
+    }
+}

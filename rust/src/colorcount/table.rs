@@ -1,0 +1,143 @@
+//! Count tables: the DP state `C(v, Ti, S)` for one subtemplate, stored
+//! row-major as `[n_rows × n_sets]` f32 (FASCIA likewise uses 32-bit
+//! floats; totals are accumulated in f64). Rows are *local* vertex indices
+//! — the same layout serves the single-rank engine, the distributed ranks
+//! and the XLA-backed engine (which views a table as a dense block).
+
+pub type Count = f32;
+
+#[derive(Debug, Clone)]
+pub struct CountTable {
+    pub n_rows: usize,
+    pub n_sets: usize,
+    pub data: Vec<Count>,
+}
+
+impl CountTable {
+    pub fn zeros(n_rows: usize, n_sets: usize) -> Self {
+        CountTable {
+            n_rows,
+            n_sets,
+            data: vec![0.0; n_rows * n_sets],
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[Count] {
+        let lo = r * self.n_sets;
+        &self.data[lo..lo + self.n_sets]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [Count] {
+        let lo = r * self.n_sets;
+        &mut self.data[lo..lo + self.n_sets]
+    }
+
+    /// Sum of every entry (f64 accumulation).
+    pub fn total(&self) -> f64 {
+        self.data.iter().map(|&x| x as f64).sum()
+    }
+
+    /// Resident bytes (for the peak-memory accountant, Eq 7/12).
+    pub fn bytes(&self) -> u64 {
+        (self.data.len() * std::mem::size_of::<Count>()) as u64
+    }
+
+    /// Fraction of non-zero entries — count tables are sparse for small
+    /// subtemplates; used by ablation benches.
+    pub fn density(&self) -> f64 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().filter(|&&x| x != 0.0).count() as f64 / self.data.len() as f64
+    }
+}
+
+/// A per-iteration random coloring. Colors are derived statelessly from
+/// `(seed, global_vertex_id)` so any rank computes the same color for the
+/// same vertex — the root of the distributed == single-rank invariant.
+#[derive(Debug, Clone)]
+pub struct Coloring {
+    pub k: usize,
+    pub colors: Vec<u8>,
+}
+
+impl Coloring {
+    pub fn random(n_vertices: usize, k: usize, iter_seed: u64) -> Self {
+        let colors = (0..n_vertices)
+            .map(|v| (crate::util::mix2(iter_seed, v as u64) % k as u64) as u8)
+            .collect();
+        Coloring { k, colors }
+    }
+
+    #[inline]
+    pub fn color(&self, v: u32) -> u8 {
+        self.colors[v as usize]
+    }
+}
+
+/// Initialize the leaf subtemplate table for the given (local) vertices:
+/// row r has a single 1 at the rank of `{col(vertices[r])}` — with the
+/// colex indexer over singletons that rank is simply the color itself.
+pub fn init_leaf_table(vertices: &[u32], coloring: &Coloring) -> CountTable {
+    let mut t = CountTable::zeros(vertices.len(), coloring.k);
+    for (r, &v) in vertices.iter().enumerate() {
+        let c = coloring.color(v) as usize;
+        t.row_mut(r)[c] = 1.0;
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zeros_and_rows() {
+        let mut t = CountTable::zeros(3, 4);
+        t.row_mut(1)[2] = 5.0;
+        assert_eq!(t.row(1), &[0.0, 0.0, 5.0, 0.0]);
+        assert_eq!(t.total(), 5.0);
+        assert_eq!(t.bytes(), 48);
+    }
+
+    #[test]
+    fn coloring_deterministic_and_in_range() {
+        let c1 = Coloring::random(100, 5, 7);
+        let c2 = Coloring::random(100, 5, 7);
+        assert_eq!(c1.colors, c2.colors);
+        assert!(c1.colors.iter().all(|&c| (c as usize) < 5));
+        let c3 = Coloring::random(100, 5, 8);
+        assert_ne!(c1.colors, c3.colors);
+    }
+
+    #[test]
+    fn coloring_partition_independent() {
+        // color of vertex 42 must not depend on how many vertices exist
+        let small = Coloring::random(50, 7, 3);
+        let big = Coloring::random(500, 7, 3);
+        assert_eq!(small.color(42), big.color(42));
+    }
+
+    #[test]
+    fn leaf_table_one_hot() {
+        let col = Coloring::random(10, 4, 1);
+        let verts: Vec<u32> = vec![3, 7, 9];
+        let t = init_leaf_table(&verts, &col);
+        assert_eq!(t.n_rows, 3);
+        assert_eq!(t.n_sets, 4);
+        for (r, &v) in verts.iter().enumerate() {
+            let row = t.row(r);
+            assert_eq!(row.iter().sum::<Count>(), 1.0);
+            assert_eq!(row[col.color(v) as usize], 1.0);
+        }
+    }
+
+    #[test]
+    fn density() {
+        let col = Coloring::random(4, 4, 1);
+        let t = init_leaf_table(&[0, 1, 2, 3], &col);
+        assert!((t.density() - 0.25).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,219 @@
+//! Combinatorics substrate for color-coding: binomial coefficients, the
+//! colorset index system (a bijection between size-`a` subsets of `k`
+//! colors and dense indices `0..C(k,a)`), and precomputed *split tables*
+//! that drive the dynamic-programming combine step (Eq. 1 of the paper).
+//!
+//! Subsets are represented as `u32` bitmasks over at most [`MAX_COLORS`]
+//! colors. Ranking uses the combinatorial number system in colex order, so
+//! ranks are stable, dense and cheap to compute; unranking is a small
+//! greedy loop. Both directions are table-free, but we additionally build a
+//! direct `mask -> rank` lookup array when profiling shows it worthwhile
+//! (it is — see EXPERIMENTS.md §Perf).
+
+pub mod split;
+
+pub use split::SplitTable;
+
+/// Maximum supported number of colors (the paper scales templates to 15
+/// vertices; masks are u32 so anything ≤ 31 works, 16 keeps tables small).
+pub const MAX_COLORS: usize = 16;
+
+/// Dense table of binomial coefficients `C(n, r)` for `n, r ≤ MAX_COLORS`.
+#[derive(Debug, Clone)]
+pub struct Binomial {
+    table: [[u64; MAX_COLORS + 1]; MAX_COLORS + 1],
+}
+
+impl Binomial {
+    pub fn new() -> Self {
+        let mut t = [[0u64; MAX_COLORS + 1]; MAX_COLORS + 1];
+        for n in 0..=MAX_COLORS {
+            t[n][0] = 1;
+            for r in 1..=n {
+                t[n][r] = t[n - 1][r - 1] + if r <= n - 1 { t[n - 1][r] } else { 0 };
+            }
+        }
+        Binomial { table: t }
+    }
+
+    /// `C(n, r)`; 0 when `r > n`.
+    #[inline]
+    pub fn c(&self, n: usize, r: usize) -> u64 {
+        if r > n {
+            0
+        } else {
+            self.table[n][r]
+        }
+    }
+}
+
+impl Default for Binomial {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The colorset index system for a fixed `(k, a)`: bijection between
+/// bitmasks of `a` set bits among the low `k` bits and ranks `0..C(k,a)`,
+/// in colex order (mask with smaller highest-differing bit ranks first).
+#[derive(Debug, Clone)]
+pub struct ColorsetIndexer {
+    pub k: usize,
+    pub a: usize,
+    pub count: usize,
+    /// rank -> mask
+    masks: Vec<u32>,
+    /// mask -> rank (dense over 2^k; u32::MAX for invalid masks)
+    ranks: Vec<u32>,
+}
+
+impl ColorsetIndexer {
+    pub fn new(k: usize, a: usize, binom: &Binomial) -> Self {
+        assert!(k <= MAX_COLORS && a <= k, "k={k} a={a} out of range");
+        let count = binom.c(k, a) as usize;
+        let mut masks = Vec::with_capacity(count);
+        let mut ranks = vec![u32::MAX; 1usize << k];
+        // Enumerate all a-subsets of [0,k) in colex order: iterate masks in
+        // increasing numeric order; numeric order on bitmasks of equal
+        // popcount IS colex order.
+        if a == 0 {
+            masks.push(0);
+            ranks[0] = 0;
+        } else {
+            // Gosper's hack over masks with `a` bits.
+            let mut m: u32 = (1u32 << a) - 1;
+            let limit: u32 = 1u32 << k;
+            while m < limit {
+                ranks[m as usize] = masks.len() as u32;
+                masks.push(m);
+                // next mask with same popcount
+                let c = m & m.wrapping_neg();
+                let r = m + c;
+                if r >= limit || c == 0 {
+                    break;
+                }
+                m = (((r ^ m) >> 2) / c) | r;
+            }
+        }
+        assert_eq!(masks.len(), count, "enumeration disagrees with C(k,a)");
+        ColorsetIndexer {
+            k,
+            a,
+            count,
+            masks,
+            ranks,
+        }
+    }
+
+    /// rank -> bitmask
+    #[inline]
+    pub fn mask(&self, rank: usize) -> u32 {
+        self.masks[rank]
+    }
+
+    /// bitmask -> rank. Panics (debug) on masks of the wrong popcount.
+    #[inline]
+    pub fn rank(&self, mask: u32) -> usize {
+        let r = self.ranks[mask as usize];
+        debug_assert_ne!(r, u32::MAX, "mask {mask:#b} not a {}-subset", self.a);
+        r as usize
+    }
+
+    /// All masks in rank order.
+    pub fn iter_masks(&self) -> impl Iterator<Item = u32> + '_ {
+        self.masks.iter().copied()
+    }
+}
+
+/// Rank a mask with the combinatorial number system directly (no tables) —
+/// used by tests as an independent oracle for `ColorsetIndexer::rank`.
+pub fn rank_colex(mask: u32, binom: &Binomial) -> u64 {
+    let mut rank = 0u64;
+    let mut seen = 0usize;
+    for bit in 0..32 {
+        if mask & (1 << bit) != 0 {
+            seen += 1;
+            rank += binom.c(bit as usize, seen);
+        }
+    }
+    rank
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn binomial_known_values() {
+        let b = Binomial::new();
+        assert_eq!(b.c(0, 0), 1);
+        assert_eq!(b.c(5, 2), 10);
+        assert_eq!(b.c(15, 7), 6435);
+        assert_eq!(b.c(16, 8), 12870);
+        assert_eq!(b.c(12, 6), 924);
+        assert_eq!(b.c(3, 5), 0);
+    }
+
+    #[test]
+    fn binomial_pascal_identity() {
+        let b = Binomial::new();
+        for n in 1..=MAX_COLORS {
+            for r in 1..n {
+                assert_eq!(b.c(n, r), b.c(n - 1, r - 1) + b.c(n - 1, r));
+            }
+        }
+    }
+
+    #[test]
+    fn indexer_bijection_small() {
+        let b = Binomial::new();
+        for k in 1..=10 {
+            for a in 0..=k {
+                let ix = ColorsetIndexer::new(k, a, &b);
+                assert_eq!(ix.count as u64, b.c(k, a));
+                for r in 0..ix.count {
+                    let m = ix.mask(r);
+                    assert_eq!(m.count_ones() as usize, a);
+                    assert_eq!(ix.rank(m), r);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn indexer_matches_colex_oracle() {
+        let b = Binomial::new();
+        let ix = ColorsetIndexer::new(12, 5, &b);
+        for r in 0..ix.count {
+            assert_eq!(rank_colex(ix.mask(r), &b), r as u64);
+        }
+    }
+
+    #[test]
+    fn indexer_large_k15() {
+        let b = Binomial::new();
+        let ix = ColorsetIndexer::new(15, 7, &b);
+        assert_eq!(ix.count, 6435);
+        // spot-check monotonicity of masks (colex == numeric order)
+        for r in 1..ix.count {
+            assert!(ix.mask(r) > ix.mask(r - 1));
+        }
+    }
+
+    #[test]
+    fn prop_rank_roundtrip() {
+        let b = Binomial::new();
+        prop::check("rank_roundtrip", move |g| {
+            let k = g.usize_in(1, MAX_COLORS);
+            let a = g.usize_in(0, k);
+            let ix = ColorsetIndexer::new(k, a, &b);
+            let r = g.usize_in(0, ix.count - 1);
+            if ix.rank(ix.mask(r)) == r {
+                Ok(())
+            } else {
+                Err(format!("k={k} a={a} r={r}"))
+            }
+        });
+    }
+}

@@ -1,0 +1,164 @@
+//! Split tables: the precomputed index pairs that drive the DP combine.
+//!
+//! For a subtemplate `Ti` of size `a` split into a passive child `Ti'` of
+//! size `a1` and an active child `Ti''` of size `a2 = a - a1`, the combine
+//! for a color set `S` (|S| = a) enumerates all ways to give `a1` of S's
+//! colors to `Ti'` and the rest to `Ti''`:
+//!
+//! ```text
+//! C(v, Ti, S) = Σ_{u ∈ N(v)} Σ_{S1 ⊂ S, |S1|=a1} C(v, Ti', S1) · C(u, Ti'', S\S1)
+//! ```
+//!
+//! `SplitTable` stores, for every rank `s` of S in `C(k,a)` and every one of
+//! the `C(a, a1)` splits `j`, the pair of child ranks
+//! `(rank_{k,a1}(S1), rank_{k,a2}(S\S1))`, flattened row-major so the hot
+//! loop is a linear scan. This is exactly the table the L1 Pallas kernel
+//! receives as its `t0`/`t1` operands.
+
+use super::{Binomial, ColorsetIndexer};
+
+#[derive(Debug, Clone)]
+pub struct SplitTable {
+    pub k: usize,
+    /// |Ti|
+    pub a: usize,
+    /// |Ti'| (passive child, keeps the root)
+    pub a1: usize,
+    /// |Ti''| (active child)
+    pub a2: usize,
+    /// number of color sets = C(k, a)
+    pub n_sets: usize,
+    /// splits per set = C(a, a1)
+    pub n_splits: usize,
+    /// passive-child ranks, [n_sets * n_splits]
+    pub idx1: Vec<u32>,
+    /// active-child ranks, [n_sets * n_splits]
+    pub idx2: Vec<u32>,
+}
+
+impl SplitTable {
+    pub fn new(k: usize, a: usize, a1: usize, binom: &Binomial) -> Self {
+        assert!(a1 < a && a1 >= 1, "split sizes a={a} a1={a1} invalid");
+        let a2 = a - a1;
+        let parent = ColorsetIndexer::new(k, a, binom);
+        let child1 = ColorsetIndexer::new(k, a1, binom);
+        let child2 = ColorsetIndexer::new(k, a2, binom);
+        let n_sets = parent.count;
+        let n_splits = binom.c(a, a1) as usize;
+        let mut idx1 = Vec::with_capacity(n_sets * n_splits);
+        let mut idx2 = Vec::with_capacity(n_sets * n_splits);
+        for s in 0..n_sets {
+            let set = parent.mask(s);
+            // enumerate sub-masks of `set` with popcount a1 by iterating
+            // all submasks (standard (sub-1)&set walk) and filtering.
+            let mut found = 0usize;
+            let mut sub = set;
+            loop {
+                if sub.count_ones() as usize == a1 {
+                    idx1.push(child1.rank(sub) as u32);
+                    idx2.push(child2.rank(set & !sub) as u32);
+                    found += 1;
+                }
+                if sub == 0 {
+                    break;
+                }
+                sub = (sub - 1) & set;
+            }
+            debug_assert_eq!(found, n_splits);
+        }
+        SplitTable {
+            k,
+            a,
+            a1,
+            a2,
+            n_sets,
+            n_splits,
+            idx1,
+            idx2,
+        }
+    }
+
+    /// Row view for set-rank `s`: the `(idx1, idx2)` pairs of its splits.
+    #[inline]
+    pub fn row(&self, s: usize) -> (&[u32], &[u32]) {
+        let lo = s * self.n_splits;
+        let hi = lo + self.n_splits;
+        (&self.idx1[lo..hi], &self.idx2[lo..hi])
+    }
+
+    /// Bytes held by this table (for memory accounting).
+    pub fn bytes(&self) -> u64 {
+        (self.idx1.len() + self.idx2.len()) as u64 * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn dims_match_combinatorics() {
+        let b = Binomial::new();
+        let t = SplitTable::new(5, 3, 1, &b);
+        assert_eq!(t.n_sets as u64, b.c(5, 3)); // 10
+        assert_eq!(t.n_splits as u64, b.c(3, 1)); // 3
+        assert_eq!(t.idx1.len(), 30);
+    }
+
+    #[test]
+    fn splits_partition_the_set() {
+        let b = Binomial::new();
+        let t = SplitTable::new(7, 4, 2, &b);
+        let parent = ColorsetIndexer::new(7, 4, &b);
+        let c1 = ColorsetIndexer::new(7, 2, &b);
+        let c2 = ColorsetIndexer::new(7, 2, &b);
+        for s in 0..t.n_sets {
+            let set = parent.mask(s);
+            let (r1, r2) = t.row(s);
+            let mut seen = std::collections::HashSet::new();
+            for j in 0..t.n_splits {
+                let m1 = c1.mask(r1[j] as usize);
+                let m2 = c2.mask(r2[j] as usize);
+                assert_eq!(m1 | m2, set, "union is the parent set");
+                assert_eq!(m1 & m2, 0, "disjoint");
+                assert!(seen.insert(m1), "splits distinct");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_split_table_invariants() {
+        let b = Binomial::new();
+        prop::check("split_invariants", move |g| {
+            let k = g.usize_in(3, 12);
+            let a = g.usize_in(2, k);
+            let a1 = g.usize_in(1, a - 1);
+            let t = SplitTable::new(k, a, a1, &b);
+            let parent = ColorsetIndexer::new(k, a, &b);
+            let c1 = ColorsetIndexer::new(k, a1, &b);
+            let c2 = ColorsetIndexer::new(k, a - a1, &b);
+            let s = g.usize_in(0, t.n_sets - 1);
+            let set = parent.mask(s);
+            let (r1, r2) = t.row(s);
+            for j in 0..t.n_splits {
+                let m1 = c1.mask(r1[j] as usize);
+                let m2 = c2.mask(r2[j] as usize);
+                if m1 | m2 != set || m1 & m2 != 0 {
+                    return Err(format!("k={k} a={a} a1={a1} s={s} j={j}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn large_template_table_size() {
+        // u15-class tables must stay modest: C(15,7)=6435 sets × C(7,3)=35
+        let b = Binomial::new();
+        let t = SplitTable::new(15, 7, 3, &b);
+        assert_eq!(t.n_sets, 6435);
+        assert_eq!(t.n_splits, 35);
+        assert!(t.bytes() < 4 << 20, "table under 4 MiB");
+    }
+}

@@ -1,0 +1,182 @@
+//! The adaptive mode switch (Alg 3 line 2): use the pipelined ring for
+//! compute-heavy templates, fall back to all-to-all when there is not
+//! enough computation to hide the per-step transfers.
+//!
+//! The implementation follows the paper: the decision is made per template
+//! from its Table-3 computation intensity (the paper's "if |Ti| is large"
+//! with the §3.2.2 justification). The Hockney-based per-step model is
+//! also exposed here — the figure harness uses it to *predict* the overlap
+//! ratio ρ (Eq 14) that the pipeline ledger later measures.
+
+use crate::combin::Binomial;
+use crate::comm::hockney::HockneyParams;
+use crate::template::TemplateComplexity;
+
+/// Which exchange schedule to use for a template's combines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    AllToAll,
+    /// ring with `g` offsets per step (group size 2g+1)
+    Pipeline { g: usize },
+}
+
+/// Tunables for the switch. Defaults reproduce the paper's behaviour:
+/// u10-2 (intensity 5.3) and larger pipeline; u3-1/u5-2/u7-2 (≤ 3.5)
+/// stay on all-to-all (Fig 9).
+#[derive(Debug, Clone, Copy)]
+pub struct AdaptivePolicy {
+    /// minimum Table-3 computation intensity to pipeline
+    pub intensity_threshold: f64,
+    /// below this rank count pipelining is pointless
+    pub min_ranks: usize,
+    /// per-combine-unit compute cost in seconds (calibrated by the
+    /// coordinator from real measurements)
+    pub flop_time: f64,
+    pub net: HockneyParams,
+}
+
+impl Default for AdaptivePolicy {
+    fn default() -> Self {
+        AdaptivePolicy {
+            intensity_threshold: 4.5,
+            min_ranks: 3,
+            flop_time: 0.5e-9,
+            net: HockneyParams::default(),
+        }
+    }
+}
+
+/// Inputs describing one subtemplate combine on one rank (model helper).
+#[derive(Debug, Clone, Copy)]
+pub struct CombineShape {
+    pub k: usize,
+    /// |Ti|
+    pub size: usize,
+    /// |Ti'|
+    pub passive_size: usize,
+    /// |Ti''|
+    pub active_size: usize,
+    /// expected remote neighbor rows per step, ≈ |E|/P² (Eq 5)
+    pub remote_rows_per_step: f64,
+    pub n_ranks: usize,
+}
+
+impl AdaptivePolicy {
+    /// The mode switch (Alg 3 line 2).
+    pub fn choose(&self, tc: &TemplateComplexity, n_ranks: usize) -> CommMode {
+        if n_ranks >= self.min_ranks && tc.intensity >= self.intensity_threshold {
+            CommMode::Pipeline { g: 1 }
+        } else {
+            CommMode::AllToAll
+        }
+    }
+
+    /// Modeled per-step computation time (Eq 4 scaled by `flop_time`).
+    pub fn step_compute(&self, s: &CombineShape, binom: &Binomial) -> f64 {
+        let units = binom.c(s.k, s.size) as f64 * binom.c(s.size, s.passive_size) as f64;
+        self.flop_time * units * s.remote_rows_per_step.max(0.0)
+    }
+
+    /// Modeled per-step communication time (Eq 8, incl. the per-step
+    /// software overhead).
+    pub fn step_comm(&self, s: &CombineShape, binom: &Binomial) -> f64 {
+        let row_bytes = binom.c(s.k, s.active_size) * 4;
+        self.net
+            .step(1, (s.remote_rows_per_step.max(0.0) * row_bytes as f64) as u64)
+    }
+
+    /// The predicted overlap ratio ρ (Eq 14) under pipelining: as the rank
+    /// count grows, per-step compute shrinks ∝ 1/P² against the α latency
+    /// floor, which is exactly why small templates stop overlapping
+    /// (paper Fig 8).
+    pub fn overlap(&self, s: &CombineShape, binom: &Binomial) -> f64 {
+        let comm = self.step_comm(s, binom);
+        if comm <= 0.0 {
+            return 1.0;
+        }
+        (self.step_compute(s, binom) / comm).min(1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::template::{builtin, complexity};
+
+    #[test]
+    fn paper_mode_assignments() {
+        let pol = AdaptivePolicy::default();
+        for (name, want_pipeline) in [
+            ("u3-1", false),
+            ("u5-2", false),
+            ("u7-2", false),
+            ("u10-2", true),
+            ("u12-1", true),
+            ("u12-2", true),
+            ("u15-1", true),
+        ] {
+            let tc = complexity(&builtin(name).unwrap());
+            let mode = pol.choose(&tc, 10);
+            assert_eq!(
+                matches!(mode, CommMode::Pipeline { .. }),
+                want_pipeline,
+                "{name}: got {mode:?} (intensity {})",
+                tc.intensity
+            );
+        }
+    }
+
+    #[test]
+    fn two_ranks_never_pipeline() {
+        let pol = AdaptivePolicy::default();
+        let tc = complexity(&builtin("u12-2").unwrap());
+        assert_eq!(pol.choose(&tc, 2), CommMode::AllToAll);
+    }
+
+    fn shape(k: usize, size: usize, pass: usize, rows: f64, ranks: usize) -> CombineShape {
+        CombineShape {
+            k,
+            size,
+            passive_size: pass,
+            active_size: size - pass,
+            remote_rows_per_step: rows,
+            n_ranks: ranks,
+        }
+    }
+
+    #[test]
+    fn overlap_decays_with_rank_count() {
+        // same graph, more ranks -> fewer rows per step -> α floor wins.
+        // (Use a small-template shape with a fast effective flop time, as
+        // measured for streaming |Ti''|=1 updates, so the latency floor is
+        // actually reachable — the regime of Fig 8's small-template drop.)
+        let b = Binomial::new();
+        let mut pol = AdaptivePolicy::default();
+        pol.flop_time = 0.3e-9;
+        let edges = 4.0e6;
+        let rho_small_p = pol.overlap(&shape(3, 2, 1, edges / 16.0, 4), &b);
+        let rho_large_p = pol.overlap(&shape(3, 2, 1, edges / 4096.0, 64), &b);
+        assert!(rho_large_p < rho_small_p);
+        assert!(rho_large_p < 0.5, "α floor must dominate at P=64");
+    }
+
+    #[test]
+    fn overlap_monotone_in_intensity() {
+        let b = Binomial::new();
+        let pol = AdaptivePolicy::default();
+        let lo = pol.overlap(&shape(5, 3, 1, 1_000.0, 8), &b);
+        let hi = pol.overlap(&shape(12, 10, 5, 1_000.0, 8), &b);
+        assert!(hi >= lo, "bigger combine units must not lower overlap");
+    }
+
+    #[test]
+    fn slower_network_discourages_pipeline() {
+        let b = Binomial::new();
+        let mut pol = AdaptivePolicy::default();
+        let s = shape(7, 5, 2, 3_000.0, 8);
+        let fast = pol.overlap(&s, &b);
+        pol.net = HockneyParams::tengige();
+        let slow = pol.overlap(&s, &b);
+        assert!(slow <= fast);
+    }
+}

@@ -1,0 +1,150 @@
+//! Exchange schedules: the Adaptive-Group ring routing (paper Fig. 2 /
+//! Alg 3) and the degenerate all-to-all schedule.
+//!
+//! A schedule decouples a complete exchange among `P` ranks into `W`
+//! steps; at step `w`, rank `p` sends to the peers at offsets
+//! `o ∈ O_w` (i.e. to `(p+o) mod P`) and receives from `(p-o) mod P`.
+//! With `g` offsets per step the communication group containing `p` has
+//! size `m = 2g+1`; the paper's Fig.-2 example is `g=1` (groups of 3,
+//! `W = P-1` steps), and `g = P-1` degenerates to single-step all-to-all.
+
+/// One rank's sends/receives for one step.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StepPlan {
+    pub send_to: Vec<usize>,
+    pub recv_from: Vec<usize>,
+}
+
+/// A complete exchange schedule. `plans[w][p]` is rank `p`'s plan at step
+/// `w`; every ordered pair (p→q, p≠q) appears exactly once across steps.
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub n_ranks: usize,
+    /// offsets covered at each step
+    pub offsets: Vec<Vec<usize>>,
+    pub plans: Vec<Vec<StepPlan>>,
+}
+
+impl Schedule {
+    /// Ring-ordered schedule with `g ≥ 1` offsets per step.
+    pub fn ring(n_ranks: usize, g: usize) -> Self {
+        assert!(n_ranks >= 1);
+        let g = g.max(1);
+        let mut offsets = Vec::new();
+        let mut o = 1usize;
+        while o < n_ranks {
+            let hi = (o + g).min(n_ranks);
+            offsets.push((o..hi).collect::<Vec<_>>());
+            o = hi;
+        }
+        let plans = offsets
+            .iter()
+            .map(|os| {
+                (0..n_ranks)
+                    .map(|p| StepPlan {
+                        send_to: os.iter().map(|&o| (p + o) % n_ranks).collect(),
+                        recv_from: os.iter().map(|&o| (p + n_ranks - o) % n_ranks).collect(),
+                    })
+                    .collect()
+            })
+            .collect();
+        Schedule {
+            n_ranks,
+            offsets,
+            plans,
+        }
+    }
+
+    /// Single-step all-to-all.
+    pub fn all_to_all(n_ranks: usize) -> Self {
+        Self::ring(n_ranks, n_ranks.saturating_sub(1).max(1))
+    }
+
+    pub fn n_steps(&self) -> usize {
+        self.plans.len()
+    }
+
+    /// Communication-group size at each step (the paper's `m`).
+    pub fn group_size(&self) -> usize {
+        2 * self.offsets.first().map(|o| o.len()).unwrap_or(0) + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn check_complete(s: &Schedule) -> Result<(), String> {
+        let p_count = s.n_ranks;
+        let mut sent = vec![vec![0usize; p_count]; p_count];
+        for (w, step) in s.plans.iter().enumerate() {
+            for (p, plan) in step.iter().enumerate() {
+                for &q in &plan.send_to {
+                    if q == p {
+                        return Err(format!("self-send p={p} step {w}"));
+                    }
+                    sent[p][q] += 1;
+                }
+                // symmetry: p receives from r at step w iff r sends to p
+                for &r in &plan.recv_from {
+                    if !s.plans[w][r].send_to.contains(&p) {
+                        return Err(format!("asymmetric: {p} expects from {r} at {w}"));
+                    }
+                }
+            }
+        }
+        for p in 0..p_count {
+            for q in 0..p_count {
+                let want = usize::from(p != q);
+                if sent[p][q] != want {
+                    return Err(format!("pair {p}->{q} covered {} times", sent[p][q]));
+                }
+            }
+        }
+        Ok(())
+    }
+
+    #[test]
+    fn fig2_example_five_ranks() {
+        // paper Fig 2: P=5, group size 3 (g=1) -> 4 steps, each rank
+        // talks to exactly 2 peers per step
+        let s = Schedule::ring(5, 1);
+        assert_eq!(s.n_steps(), 4);
+        assert_eq!(s.group_size(), 3);
+        for step in &s.plans {
+            for plan in step {
+                assert_eq!(plan.send_to.len(), 1);
+                assert_eq!(plan.recv_from.len(), 1);
+            }
+        }
+        check_complete(&s).unwrap();
+    }
+
+    #[test]
+    fn all_to_all_single_step() {
+        let s = Schedule::all_to_all(6);
+        assert_eq!(s.n_steps(), 1);
+        assert_eq!(s.plans[0][2].send_to.len(), 5);
+        check_complete(&s).unwrap();
+    }
+
+    #[test]
+    fn ring_step_counts() {
+        // W = ceil((P-1)/g)
+        assert_eq!(Schedule::ring(10, 1).n_steps(), 9);
+        assert_eq!(Schedule::ring(10, 3).n_steps(), 3);
+        assert_eq!(Schedule::ring(10, 4).n_steps(), 3);
+        assert_eq!(Schedule::ring(10, 9).n_steps(), 1);
+        assert_eq!(Schedule::ring(1, 1).n_steps(), 0);
+    }
+
+    #[test]
+    fn prop_ring_complete_no_dupes() {
+        prop::check("ring_complete", |gen| {
+            let p = gen.usize_in(1, 24);
+            let g = gen.usize_in(1, 24);
+            check_complete(&Schedule::ring(p, g))
+        });
+    }
+}

@@ -1,0 +1,99 @@
+//! The Hockney communication cost model (Eq 8): `t(n) = α + β·n` for a
+//! message of `n` bytes. The paper analyses its communication complexity
+//! with exactly this model; we apply it to the *actual byte counts* the
+//! simulated ranks exchange, which is what makes the modeled figures
+//! faithful (DESIGN.md §1).
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct HockneyParams {
+    /// per-message latency, seconds
+    pub alpha: f64,
+    /// transfer time per byte, seconds (1/bandwidth)
+    pub beta: f64,
+    /// fixed per-collective-step software overhead, seconds: barrier
+    /// synchronization plus the (de)serialization/packing the Harp
+    /// mappers pay per exchange step. This floor — not the wire latency —
+    /// is what starves small templates of overlap as P grows (Fig 8/9);
+    /// 50 µs reproduces the paper's separation at the harness downscale.
+    pub step_overhead: f64,
+}
+
+impl HockneyParams {
+    /// FDR InfiniBand-like defaults (the paper's testbed interconnect):
+    /// ~2 µs latency, ~6 GB/s effective point-to-point bandwidth.
+    pub fn infiniband() -> Self {
+        HockneyParams {
+            alpha: 2.0e-6,
+            beta: 1.0 / 6.0e9,
+            step_overhead: 5.0e-5,
+        }
+    }
+
+    /// 10 GbE-like parameters (ablation: slower network moves the
+    /// adaptive switch point).
+    pub fn tengige() -> Self {
+        HockneyParams {
+            alpha: 20.0e-6,
+            beta: 1.0 / 1.1e9,
+            step_overhead: 8.0e-5,
+        }
+    }
+
+    /// Time to move one message of `bytes`.
+    #[inline]
+    pub fn msg(&self, bytes: u64) -> f64 {
+        self.alpha + self.beta * bytes as f64
+    }
+
+    /// Time for one rank's step in a collective where it exchanges
+    /// `n_msgs` messages totalling `bytes` (serialized through one NIC —
+    /// the conservative single-port model), plus the per-step software
+    /// overhead.
+    #[inline]
+    pub fn step(&self, n_msgs: usize, bytes: u64) -> f64 {
+        self.step_overhead + self.alpha * n_msgs as f64 + self.beta * bytes as f64
+    }
+}
+
+impl Default for HockneyParams {
+    fn default() -> Self {
+        Self::infiniband()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn linear_in_bytes() {
+        let h = HockneyParams {
+            alpha: 1e-6,
+            beta: 1e-9,
+            step_overhead: 0.0,
+        };
+        assert!((h.msg(0) - 1e-6).abs() < 1e-18);
+        assert!((h.msg(1000) - (1e-6 + 1e-6)).abs() < 1e-15);
+        let big = h.msg(2_000_000);
+        assert!((big - (1e-6 + 2e-3)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn step_accounts_per_message_latency() {
+        let h = HockneyParams {
+            alpha: 1e-6,
+            beta: 0.0,
+            step_overhead: 0.0,
+        };
+        assert!((h.step(24, 12345) - 24e-6).abs() < 1e-15);
+    }
+
+    #[test]
+    fn presets_ordered() {
+        // InfiniBand beats 10GbE on both latency and bandwidth
+        let ib = HockneyParams::infiniband();
+        let ge = HockneyParams::tengige();
+        assert!(ib.alpha < ge.alpha);
+        assert!(ib.beta < ge.beta);
+    }
+}

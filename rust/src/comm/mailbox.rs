@@ -1,0 +1,111 @@
+//! The simulated-rank message substrate: per-rank inboxes that move real
+//! packet payloads between ranks, with byte accounting per (step, rank).
+//!
+//! This replaces the paper's 25-node InfiniBand fabric (repro band 0 —
+//! DESIGN.md §1). Data movement is real (actual count rows are copied
+//! between rank-owned buffers and drive the receiver's DP update);
+//! *timing* is modeled by the Hockney parameters over the measured bytes.
+
+use super::packet::Packet;
+
+/// Mailbox fabric for `n_ranks` simulated ranks.
+#[derive(Debug)]
+pub struct Fabric {
+    pub n_ranks: usize,
+    inboxes: Vec<Vec<Packet>>,
+    /// bytes sent by each rank since the last `reset_accounting`
+    sent_bytes: Vec<u64>,
+    /// messages sent by each rank
+    sent_msgs: Vec<usize>,
+}
+
+impl Fabric {
+    pub fn new(n_ranks: usize) -> Self {
+        Fabric {
+            n_ranks,
+            inboxes: (0..n_ranks).map(|_| Vec::new()).collect(),
+            sent_bytes: vec![0; n_ranks],
+            sent_msgs: vec![0; n_ranks],
+        }
+    }
+
+    /// Send a packet: lands in the receiver's inbox immediately (delivery
+    /// order = send order, deterministic).
+    pub fn send(&mut self, p: Packet) {
+        let to = p.receiver();
+        assert!(to < self.n_ranks, "receiver {to} out of range");
+        let from = p.sender();
+        self.sent_bytes[from] += p.bytes();
+        self.sent_msgs[from] += 1;
+        self.inboxes[to].push(p);
+    }
+
+    /// Drain rank `p`'s inbox (all packets received this step).
+    pub fn drain(&mut self, p: usize) -> Vec<Packet> {
+        std::mem::take(&mut self.inboxes[p])
+    }
+
+    /// Peek how many packets are waiting.
+    pub fn pending(&self, p: usize) -> usize {
+        self.inboxes[p].len()
+    }
+
+    pub fn sent_bytes(&self, p: usize) -> u64 {
+        self.sent_bytes[p]
+    }
+
+    pub fn sent_msgs(&self, p: usize) -> usize {
+        self.sent_msgs[p]
+    }
+
+    /// Reset the per-step accounting (call at each step boundary).
+    pub fn reset_accounting(&mut self) {
+        self.sent_bytes.fill(0);
+        self.sent_msgs.fill(0);
+    }
+
+    /// Assert no packets are stranded (end-of-exchange invariant).
+    pub fn assert_empty(&self) {
+        for (p, ib) in self.inboxes.iter().enumerate() {
+            assert!(ib.is_empty(), "rank {p} has {} stranded packets", ib.len());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn send_and_drain() {
+        let mut f = Fabric::new(3);
+        f.send(Packet::new(0, 2, 0, 1, 2, vec![1.0, 2.0]));
+        f.send(Packet::new(1, 2, 0, 1, 2, vec![3.0, 4.0]));
+        assert_eq!(f.pending(2), 2);
+        let got = f.drain(2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].sender(), 0);
+        assert_eq!(got[1].sender(), 1);
+        assert_eq!(f.pending(2), 0);
+    }
+
+    #[test]
+    fn byte_accounting() {
+        let mut f = Fabric::new(2);
+        let p = Packet::new(0, 1, 0, 0, 4, vec![0.0; 4]);
+        let b = p.bytes();
+        f.send(p);
+        assert_eq!(f.sent_bytes(0), b);
+        assert_eq!(f.sent_msgs(0), 1);
+        f.reset_accounting();
+        assert_eq!(f.sent_bytes(0), 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "stranded")]
+    fn stranded_packets_detected() {
+        let mut f = Fabric::new(2);
+        f.send(Packet::new(0, 1, 0, 0, 1, vec![1.0]));
+        f.assert_empty();
+    }
+}

@@ -1,0 +1,16 @@
+//! Communication substrate: the Hockney cost model (Eq 8), bit-packed
+//! packet meta IDs (Fig 4), the simulated-rank mailbox fabric, exchange
+//! schedules (all-to-all and the Adaptive-Group ring of Fig 2), and the
+//! adaptive mode switch (Alg 3).
+
+pub mod adaptive;
+pub mod group;
+pub mod hockney;
+pub mod mailbox;
+pub mod packet;
+
+pub use adaptive::{AdaptivePolicy, CombineShape, CommMode};
+pub use group::{Schedule, StepPlan};
+pub use hockney::HockneyParams;
+pub use mailbox::Fabric;
+pub use packet::{decode_meta, encode_meta, Packet};

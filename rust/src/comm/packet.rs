@@ -1,0 +1,124 @@
+//! Data packets and the bit-packed meta ID (paper Fig. 4).
+//!
+//! Each packet carries a 32-bit meta ID packing `(sender, receiver,
+//! queue offset)`; the routing algorithm decodes it to deliver the packet
+//! and to reassemble multi-packet payloads in order — the mechanism that
+//! lets Harp reconfigure routing on-the-fly instead of baking the
+//! collective into the program structure.
+
+/// sender: 10 bits (≤1024 ranks), receiver: 10 bits, offset: 12 bits.
+pub const SENDER_BITS: u32 = 10;
+pub const RECEIVER_BITS: u32 = 10;
+pub const OFFSET_BITS: u32 = 12;
+
+pub const MAX_RANKS: usize = 1 << SENDER_BITS;
+pub const MAX_OFFSET: usize = 1 << OFFSET_BITS;
+
+/// Pack `(sender, receiver, offset)` into a meta ID.
+#[inline]
+pub fn encode_meta(sender: usize, receiver: usize, offset: usize) -> u32 {
+    debug_assert!(sender < MAX_RANKS && receiver < MAX_RANKS && offset < MAX_OFFSET);
+    ((sender as u32) << (RECEIVER_BITS + OFFSET_BITS))
+        | ((receiver as u32) << OFFSET_BITS)
+        | offset as u32
+}
+
+/// Unpack a meta ID.
+#[inline]
+pub fn decode_meta(meta: u32) -> (usize, usize, usize) {
+    let sender = (meta >> (RECEIVER_BITS + OFFSET_BITS)) as usize;
+    let receiver = ((meta >> OFFSET_BITS) & ((1 << RECEIVER_BITS) - 1)) as usize;
+    let offset = (meta & ((1 << OFFSET_BITS) - 1)) as usize;
+    (sender, receiver, offset)
+}
+
+/// A count-row packet: `rows` are f32 count-table rows for the vertices the
+/// receiver requested (in the receiver's request-list order), flattened.
+#[derive(Debug, Clone)]
+pub struct Packet {
+    pub meta: u32,
+    /// which subtemplate's counts these are
+    pub subtemplate: u32,
+    /// row width (number of color sets)
+    pub n_sets: u32,
+    pub rows: Vec<f32>,
+}
+
+impl Packet {
+    pub fn new(
+        sender: usize,
+        receiver: usize,
+        offset: usize,
+        subtemplate: usize,
+        n_sets: usize,
+        rows: Vec<f32>,
+    ) -> Self {
+        Packet {
+            meta: encode_meta(sender, receiver, offset),
+            subtemplate: subtemplate as u32,
+            n_sets: n_sets as u32,
+            rows,
+        }
+    }
+
+    #[inline]
+    pub fn sender(&self) -> usize {
+        decode_meta(self.meta).0
+    }
+
+    #[inline]
+    pub fn receiver(&self) -> usize {
+        decode_meta(self.meta).1
+    }
+
+    #[inline]
+    pub fn offset(&self) -> usize {
+        decode_meta(self.meta).2
+    }
+
+    /// Payload size on the wire (meta + header + rows).
+    pub fn bytes(&self) -> u64 {
+        4 + 8 + (self.rows.len() * 4) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn roundtrip_extremes() {
+        for (s, r, o) in [
+            (0, 0, 0),
+            (MAX_RANKS - 1, 0, 5),
+            (0, MAX_RANKS - 1, MAX_OFFSET - 1),
+            (511, 513, 2049),
+        ] {
+            assert_eq!(decode_meta(encode_meta(s, r, o)), (s, r, o));
+        }
+    }
+
+    #[test]
+    fn prop_roundtrip() {
+        prop::check("meta_roundtrip", |g| {
+            let s = g.usize_in(0, MAX_RANKS - 1);
+            let r = g.usize_in(0, MAX_RANKS - 1);
+            let o = g.usize_in(0, MAX_OFFSET - 1);
+            if decode_meta(encode_meta(s, r, o)) == (s, r, o) {
+                Ok(())
+            } else {
+                Err(format!("({s},{r},{o})"))
+            }
+        });
+    }
+
+    #[test]
+    fn packet_accessors_and_bytes() {
+        let p = Packet::new(3, 7, 11, 2, 4, vec![1.0; 8]);
+        assert_eq!(p.sender(), 3);
+        assert_eq!(p.receiver(), 7);
+        assert_eq!(p.offset(), 11);
+        assert_eq!(p.bytes(), 4 + 8 + 32);
+    }
+}

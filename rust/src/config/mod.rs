@@ -1,0 +1,245 @@
+//! Run configuration: a minimal TOML-subset parser (the vendored crate set
+//! has no `toml`/`serde` facade) and the `RunSpec` that the CLI launcher
+//! maps onto a coordinator `RunConfig` + dataset + template.
+//!
+//! Supported TOML subset: `[section]` headers, `key = value` with string
+//! ("..."), integer, float and boolean values, `#` comments.
+
+use crate::comm::HockneyParams;
+use crate::coordinator::{EngineKind, ModeSelect, RunConfig};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::HashMap;
+
+/// Parsed TOML-subset document: `section.key -> raw value` (top-level keys
+/// live under the empty section "").
+#[derive(Debug, Clone, Default)]
+pub struct Doc {
+    values: HashMap<String, Value>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+}
+
+impl Doc {
+    pub fn parse(text: &str) -> Result<Doc> {
+        let mut values = HashMap::new();
+        let mut section = String::new();
+        for (ln, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .ok_or_else(|| anyhow!("line {}: unterminated section", ln + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| anyhow!("line {}: expected key = value", ln + 1))?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            let v = v.trim();
+            let val = if let Some(s) = v.strip_prefix('"') {
+                Value::Str(
+                    s.strip_suffix('"')
+                        .ok_or_else(|| anyhow!("line {}: unterminated string", ln + 1))?
+                        .to_string(),
+                )
+            } else if v == "true" {
+                Value::Bool(true)
+            } else if v == "false" {
+                Value::Bool(false)
+            } else if let Ok(i) = v.parse::<i64>() {
+                Value::Int(i)
+            } else if let Ok(f) = v.parse::<f64>() {
+                Value::Float(f)
+            } else {
+                bail!("line {}: cannot parse value `{v}`", ln + 1);
+            };
+            values.insert(key, val);
+        }
+        Ok(Doc { values })
+    }
+
+    pub fn str(&self, key: &str) -> Option<&str> {
+        match self.values.get(key) {
+            Some(Value::Str(s)) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn int(&self, key: &str) -> Option<i64> {
+        match self.values.get(key) {
+            Some(Value::Int(i)) => Some(*i),
+            _ => None,
+        }
+    }
+
+    pub fn float(&self, key: &str) -> Option<f64> {
+        match self.values.get(key) {
+            Some(Value::Float(f)) => Some(*f),
+            Some(Value::Int(i)) => Some(*i as f64),
+            _ => None,
+        }
+    }
+
+    pub fn bool(&self, key: &str) -> Option<bool> {
+        match self.values.get(key) {
+            Some(Value::Bool(b)) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+/// A full experiment specification (what the CLI launches).
+#[derive(Debug, Clone)]
+pub struct RunSpec {
+    /// builtin template name or a path to a template file
+    pub template: String,
+    /// dataset abbreviation (Table 2) or a path to an edge list
+    pub dataset: String,
+    /// dataset downscale factor
+    pub scale: u32,
+    pub run: RunConfig,
+}
+
+impl RunSpec {
+    pub fn from_doc(doc: &Doc) -> Result<RunSpec> {
+        let template = doc
+            .str("template")
+            .context("missing `template`")?
+            .to_string();
+        let dataset = doc.str("dataset").context("missing `dataset`")?.to_string();
+        let scale = doc.int("scale").unwrap_or(500) as u32;
+        let mut run = RunConfig::default();
+        if let Some(p) = doc.int("run.ranks") {
+            run.n_ranks = p as usize;
+        }
+        if let Some(t) = doc.int("run.threads") {
+            run.n_threads = t as usize;
+        }
+        if let Some(s) = doc.int("run.task_size") {
+            run.task_size = s as u32;
+        }
+        if let Some(n) = doc.int("run.iterations") {
+            run.n_iterations = n as usize;
+        }
+        if let Some(s) = doc.int("run.seed") {
+            run.seed = s as u64;
+        }
+        if let Some(m) = doc.str("run.mode") {
+            run.mode = match m {
+                "naive" => ModeSelect::Naive,
+                "pipeline" => ModeSelect::Pipeline,
+                "adaptive" => ModeSelect::Adaptive,
+                "adaptive-lb" | "adaptivelb" => ModeSelect::AdaptiveLb,
+                other => bail!("unknown mode `{other}`"),
+            };
+        }
+        if let Some(e) = doc.str("run.engine") {
+            run.engine = match e {
+                "native" => EngineKind::Native,
+                "xla" => EngineKind::Xla,
+                other => bail!("unknown engine `{other}`"),
+            };
+        }
+        if let Some(a) = doc.float("net.alpha") {
+            run.net.alpha = a;
+        }
+        if let Some(b) = doc.float("net.beta") {
+            run.net.beta = b;
+        }
+        if doc.str("net.preset") == Some("10gbe") {
+            run.net = HockneyParams::tengige();
+        }
+        if let Some(l) = doc.int("run.mem_limit_mb") {
+            run.mem_limit = Some((l as u64) << 20);
+        }
+        Ok(RunSpec {
+            template,
+            dataset,
+            scale,
+            run,
+        })
+    }
+
+    pub fn parse(text: &str) -> Result<RunSpec> {
+        Self::from_doc(&Doc::parse(text)?)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# quickstart config
+template = "u10-2"
+dataset = "R500K3"
+scale = 1000
+
+[run]
+ranks = 8
+threads = 48
+task_size = 50
+iterations = 2
+mode = "adaptive-lb"
+engine = "native"
+
+[net]
+alpha = 2e-6
+beta = 1.7e-10
+"#;
+
+    #[test]
+    fn parses_sample() {
+        let spec = RunSpec::parse(SAMPLE).unwrap();
+        assert_eq!(spec.template, "u10-2");
+        assert_eq!(spec.dataset, "R500K3");
+        assert_eq!(spec.scale, 1000);
+        assert_eq!(spec.run.n_ranks, 8);
+        assert_eq!(spec.run.mode, ModeSelect::AdaptiveLb);
+        assert!((spec.run.net.alpha - 2e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn rejects_bad_mode() {
+        let bad = SAMPLE.replace("adaptive-lb", "warp-drive");
+        assert!(RunSpec::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn missing_template_errors() {
+        assert!(RunSpec::parse("dataset = \"MI\"").is_err());
+    }
+
+    #[test]
+    fn doc_value_kinds() {
+        let d = Doc::parse("a = 3\nb = 2.5\nc = \"x\"\nd = true\n[s]\ne = 1").unwrap();
+        assert_eq!(d.int("a"), Some(3));
+        assert_eq!(d.float("b"), Some(2.5));
+        assert_eq!(d.float("a"), Some(3.0));
+        assert_eq!(d.str("c"), Some("x"));
+        assert_eq!(d.bool("d"), Some(true));
+        assert_eq!(d.int("s.e"), Some(1));
+    }
+
+    #[test]
+    fn doc_errors() {
+        assert!(Doc::parse("[open").is_err());
+        assert!(Doc::parse("novalue").is_err());
+        assert!(Doc::parse("x = \"unterminated").is_err());
+        assert!(Doc::parse("x = 1 2 3").is_err());
+    }
+}

@@ -1,0 +1,645 @@
+//! The distributed color-coding coordinator (paper Alg 2 + Alg 3).
+//!
+//! `P` simulated ranks each own a random vertex partition of the input
+//! graph. Every subtemplate combine runs in two phases:
+//!
+//! 1. **local** — aggregate+contract over locally-owned neighbor pairs;
+//! 2. **exchange** — per the chosen [`CommMode`], ship active-child count
+//!    rows between ranks (all-to-all in one step, or the Adaptive-Group
+//!    ring in `W` steps) and fold each received slice into the output
+//!    (the per-step contraction is exact because the factored combine is
+//!    linear in the aggregation — `colorcount::engine`).
+//!
+//! All counting is *real* (bit-identical to the single-rank engine, an
+//! invariant enforced by tests). Time is dual-clocked: real single-core
+//! wall-clock for calibration, plus the model clock — virtual-thread
+//! replay for computation (Fig 11), Hockney for transfers (Eq 8), and the
+//! pipeline algebra (Eq 9–14) for interleaving — which regenerates the
+//! paper's figures (DESIGN.md §1).
+
+use super::memory::{MemClass, MemoryAccountant};
+use super::run::{EngineKind, ModelTime, RunConfig, RunResult, ThreadStats};
+use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
+use crate::colorcount::{init_leaf_table, median_of_means, Coloring, CountTable};
+use crate::colorcount::EngineContext;
+use crate::comm::{CommMode, Fabric, Packet, Schedule};
+use crate::graph::{Graph, Partition, RequestLists};
+use crate::pipeline::{naive, pipelined, PipelineReport, StepTiming};
+use crate::sched::{make_tasks, replay, TaskCostModel};
+use crate::template::{complexity, Template, TemplateComplexity};
+use std::time::Instant;
+
+/// Raw per-subtemplate model records in compute *units*; converted to
+/// seconds once the unit cost is calibrated from the real measurements.
+struct SubRecord {
+    sub: usize,
+    /// per-rank thread-replay makespan of the local phase, units
+    local_makespan: Vec<f64>,
+    /// `[step][rank]` (thread-replay makespan units, comm seconds)
+    steps: Vec<Vec<(f64, f64)>>,
+    pipelined: bool,
+}
+
+pub struct DistributedRunner<'g> {
+    pub g: &'g Graph,
+    pub ctx: EngineContext,
+    pub cfg: RunConfig,
+    pub part: Partition,
+    pub req: RequestLists,
+    pub tc: TemplateComplexity,
+    /// per rank: (v_local_row, u_local_row) pairs with both endpoints local
+    local_pairs: Vec<Vec<(u32, u32)>>,
+    /// `plans[p][q]`: (v_local_row, row index in the buffer received from q)
+    plans: Vec<Vec<Vec<(u32, u32)>>>,
+    /// optional XLA combine backend (runtime::xla_engine), used when
+    /// `cfg.engine == EngineKind::Xla`
+    pub xla: Option<crate::runtime::XlaCombine>,
+    /// ablation hook: force a ring group size regardless of mode
+    group_override: Option<usize>,
+}
+
+impl<'g> DistributedRunner<'g> {
+    pub fn new(t: &Template, g: &'g Graph, cfg: RunConfig) -> Self {
+        let part = Partition::random(g.n_vertices(), cfg.n_ranks, cfg.seed ^ 0x9a27);
+        Self::with_partition(t, g, cfg, part)
+    }
+
+    /// Build with an explicit partition (ablation A2 uses block layout).
+    pub fn with_partition(t: &Template, g: &'g Graph, cfg: RunConfig, part: Partition) -> Self {
+        let ctx = EngineContext::new(t);
+        let tc = complexity(t);
+        let req = RequestLists::build(g, &part);
+        let n_ranks = cfg.n_ranks;
+        let mut local_pairs = vec![Vec::new(); n_ranks];
+        let mut plans = vec![vec![Vec::new(); n_ranks]; n_ranks];
+        for p in 0..n_ranks {
+            for (r, &v) in part.locals[p].iter().enumerate() {
+                for &u in g.neighbors(v) {
+                    let q = part.owner_of(u);
+                    if q == p {
+                        local_pairs[p].push((r as u32, part.local_index[u as usize]));
+                    } else {
+                        let row = req.rows(p, q).binary_search(&u).expect("request list");
+                        plans[p][q].push((r as u32, row as u32));
+                    }
+                }
+            }
+        }
+        DistributedRunner {
+            g,
+            ctx,
+            cfg,
+            part,
+            req,
+            tc,
+            local_pairs,
+            plans,
+            xla: None,
+            group_override: None,
+        }
+    }
+
+    /// Ablation hook: force the ring group size (offsets per step).
+    pub fn set_group_size(&mut self, g: usize) {
+        self.group_override = Some(g);
+    }
+
+    /// Ablation hook: swap to a contiguous block partition (rebuilds the
+    /// request lists and update plans).
+    pub fn use_block_partition(&mut self) {
+        let part = Partition::block(self.g.n_vertices(), self.cfg.n_ranks);
+        let req = RequestLists::build(self.g, &part);
+        let n_ranks = self.cfg.n_ranks;
+        let mut local_pairs = vec![Vec::new(); n_ranks];
+        let mut plans = vec![vec![Vec::new(); n_ranks]; n_ranks];
+        for p in 0..n_ranks {
+            for (r, &v) in part.locals[p].iter().enumerate() {
+                for &u in self.g.neighbors(v) {
+                    let q = part.owner_of(u);
+                    if q == p {
+                        local_pairs[p].push((r as u32, part.local_index[u as usize]));
+                    } else {
+                        let row = req.rows(p, q).binary_search(&u).expect("request list");
+                        plans[p][q].push((r as u32, row as u32));
+                    }
+                }
+            }
+        }
+        self.part = part;
+        self.req = req;
+        self.local_pairs = local_pairs;
+        self.plans = plans;
+    }
+
+    /// The exchange schedule for this template under the configured mode.
+    pub fn schedule(&self) -> (Schedule, bool) {
+        if let Some(g) = self.group_override {
+            let pipelined = g < self.cfg.n_ranks.saturating_sub(1);
+            return (Schedule::ring(self.cfg.n_ranks, g), pipelined);
+        }
+        match self.cfg.comm_mode(self.tc.intensity) {
+            CommMode::AllToAll => (Schedule::all_to_all(self.cfg.n_ranks), false),
+            CommMode::Pipeline { g } => (Schedule::ring(self.cfg.n_ranks, g), true),
+        }
+    }
+
+    fn contract_backend(
+        &self,
+        out: &mut CountTable,
+        passive: &CountTable,
+        split: &crate::combin::SplitTable,
+        scratch: &mut CombineScratch,
+    ) -> u64 {
+        match self.cfg.engine {
+            EngineKind::Native => contract_touched(out, passive, split, scratch),
+            EngineKind::Xla => match &self.xla {
+                Some(x) => x.contract_touched(out, passive, split, scratch),
+                None => contract_touched(out, passive, split, scratch),
+            },
+        }
+    }
+
+    /// Run the full estimation; see [`RunResult`].
+    pub fn run(&mut self) -> RunResult {
+        let wall = Instant::now();
+        let n_ranks = self.cfg.n_ranks;
+        let k = self.ctx.k;
+        let n_subs = self.ctx.dag.subs.len();
+        let last_use = self.ctx.dag.last_use();
+        let eff_task = self.cfg.effective_task_size();
+
+        let mut samples = Vec::with_capacity(self.cfg.n_iterations);
+        let mut colorful = Vec::with_capacity(self.cfg.n_iterations);
+        let mut records: Vec<SubRecord> = Vec::new();
+        let mut mems: Vec<MemoryAccountant> = (0..n_ranks).map(|_| MemoryAccountant::new()).collect();
+        // CSR share of each rank (graph storage is out of scope for Fig 12
+        // but kept for the totals)
+        for (p, m) in mems.iter_mut().enumerate() {
+            m.alloc(
+                MemClass::Graph,
+                (self.part.n_local(p) * 12) as u64 + self.g.bytes() / n_ranks as u64,
+            );
+        }
+        let mut total_units = 0.0f64;
+        let mut real_compute = 0.0f64;
+        let mut hist_units: Vec<f64> = vec![0.0; self.cfg.n_threads + 1];
+        let mut busy_units = 0.0f64;
+
+        let max_agg = self
+            .ctx
+            .dag
+            .subs
+            .iter()
+            .filter(|s| !s.is_leaf())
+            .map(|s| self.ctx.binom.c(k, s.active_size(&self.ctx.dag)) as usize)
+            .max()
+            .unwrap_or(1);
+
+        for it in 0..self.cfg.n_iterations {
+            let iter_seed = crate::util::mix2(self.cfg.seed, it as u64);
+            let coloring = Coloring::random(self.g.n_vertices(), k, iter_seed);
+            let mut tables: Vec<Vec<Option<CountTable>>> = vec![vec![None; n_subs]; n_ranks];
+            let mut scratches: Vec<CombineScratch> = (0..n_ranks)
+                .map(|p| CombineScratch::new(self.part.n_local(p), max_agg))
+                .collect();
+            for (p, m) in mems.iter_mut().enumerate() {
+                m.alloc(MemClass::Scratch, (self.part.n_local(p) * max_agg * 4) as u64);
+            }
+
+            for (order_pos, &i) in self.ctx.dag.order.clone().iter().enumerate() {
+                let sub = self.ctx.dag.subs[i].clone();
+                if sub.is_leaf() {
+                    for p in 0..n_ranks {
+                        let t = init_leaf_table(&self.part.locals[p], &coloring);
+                        mems[p].alloc(MemClass::CountTable, t.bytes());
+                        tables[p][i] = Some(t);
+                    }
+                } else {
+                    let rec = self.combine_subtemplate(
+                        i,
+                        &mut tables,
+                        &mut scratches,
+                        &mut mems,
+                        &mut total_units,
+                        &mut real_compute,
+                        &mut hist_units,
+                        &mut busy_units,
+                        eff_task,
+                        it,
+                    );
+                    records.push(rec);
+                }
+                // free tables whose last reader has run
+                for (j, lu) in last_use.iter().enumerate() {
+                    if *lu == order_pos && j != self.ctx.dag.root {
+                        for p in 0..n_ranks {
+                            if let Some(t) = tables[p][j].take() {
+                                mems[p].free(MemClass::CountTable, t.bytes());
+                            }
+                        }
+                    }
+                }
+            }
+
+            // Alg 2 line 22: global colorful count and the estimate
+            let total: f64 = (0..n_ranks)
+                .map(|p| tables[p][self.ctx.dag.root].as_ref().unwrap().total())
+                .sum();
+            colorful.push(total);
+            samples.push(total * self.ctx.colorful_scale() / self.ctx.aut as f64);
+
+            for p in 0..n_ranks {
+                if let Some(t) = tables[p][self.ctx.dag.root].take() {
+                    mems[p].free(MemClass::CountTable, t.bytes());
+                }
+                mems[p].free(MemClass::Scratch, (self.part.n_local(p) * max_agg * 4) as u64);
+            }
+        }
+
+        // ---- calibration & model conversion ----
+        // The model clock converts Eq-4 units with the *fixed* per-unit
+        // cost from the policy (the paper-engine cost shape): using the
+        // measured per-unit time instead would make the conversion depend
+        // on which mode ran (per-step contraction makes our real engine's
+        // work mode-dependent), breaking cross-mode comparability. The
+        // measured value is still reported in `RunResult::flop_time`.
+        let flop_time = self.cfg.policy.flop_time;
+        let measured_flop_time = if total_units > 0.0 {
+            (real_compute / total_units).max(1e-12)
+        } else {
+            flop_time
+        };
+        let mut model = ModelTime::default();
+        for rec in &records {
+            // local phase: the barrier waits for the slowest rank; the
+            // difference to the mean is straggler wait, which the paper's
+            // instrumentation books as communication (Eq 8-9)
+            let local_max = rec.local_makespan.iter().copied().fold(0.0, f64::max) * flop_time;
+            let local_mean = rec.local_makespan.iter().sum::<f64>()
+                / rec.local_makespan.len().max(1) as f64
+                * flop_time;
+            let timings: Vec<Vec<StepTiming>> = rec
+                .steps
+                .iter()
+                .map(|row| {
+                    row.iter()
+                        .map(|&(units, comm)| StepTiming {
+                            comp: units * flop_time,
+                            comm,
+                        })
+                        .collect()
+                })
+                .collect();
+            let report: PipelineReport = if rec.pipelined {
+                pipelined(&timings)
+            } else {
+                naive(&timings)
+            };
+            model.total += local_max + report.makespan;
+            model.comp += local_mean + report.comp_total;
+            model.comm_total += report.comm_total;
+            model.comm_exposed += (local_max - local_mean) + report.comm_exposed;
+            model.straggler += (local_max - local_mean) + report.straggler;
+            model.rho_by_sub.push((rec.sub, report.mean_rho()));
+        }
+        // per-iteration averages
+        let iters = self.cfg.n_iterations.max(1) as f64;
+        model.total /= iters;
+        model.comp /= iters;
+        model.comm_total /= iters;
+        model.comm_exposed /= iters;
+        model.straggler /= iters;
+
+        let estimate = median_of_means(&samples, 3.min(samples.len()));
+        let peak_mem_per_rank: Vec<u64> = mems.iter().map(|m| m.peak).collect();
+        let oom = match self.cfg.mem_limit {
+            Some(lim) => peak_mem_per_rank.iter().any(|&b| b > lim),
+            None => false,
+        };
+        let total_hist: f64 = hist_units.iter().sum();
+        RunResult {
+            estimate,
+            samples,
+            colorful,
+            model,
+            real_seconds: wall.elapsed().as_secs_f64(),
+            peak_mem_per_rank,
+            flop_time: measured_flop_time,
+            threads: ThreadStats {
+                avg_concurrency: if total_hist > 0.0 {
+                    busy_units / total_hist
+                } else {
+                    0.0
+                },
+                concurrency_histogram: hist_units.iter().map(|&u| u * flop_time).collect(),
+            },
+            oom,
+        }
+    }
+
+    /// One non-leaf subtemplate combine across all ranks: local phase, then
+    /// the scheduled exchange. Returns the model record.
+    #[allow(clippy::too_many_arguments)]
+    fn combine_subtemplate(
+        &mut self,
+        i: usize,
+        tables: &mut [Vec<Option<CountTable>>],
+        scratches: &mut [CombineScratch],
+        mems: &mut [MemoryAccountant],
+        total_units: &mut f64,
+        real_compute: &mut f64,
+        hist_units: &mut [f64],
+        busy_units: &mut f64,
+        eff_task: u32,
+        iteration: usize,
+    ) -> SubRecord {
+        let n_ranks = self.cfg.n_ranks;
+        let sub = self.ctx.dag.subs[i].clone();
+        let split = self.ctx.splits[i].clone().expect("non-leaf split");
+        let a2_sets = self.ctx.binom.c(self.ctx.k, sub.active_size(&self.ctx.dag)) as usize;
+        let pass_idx = sub.passive.unwrap();
+        let act_idx = sub.active.unwrap();
+        // Model-clock cost units follow the paper's Eq 4: each neighbor
+        // pair costs C(k,|Ti|)·C(|Ti|,|Ti'|) — the Harp-DAAL/FASCIA
+        // per-neighbor DP loop whose thread behaviour Fig 11 measures.
+        // (Our *real* engine uses the factored combine, which is cheaper
+        // and better balanced — that improvement is reported on the real
+        // clock and in EXPERIMENTS.md §Perf, not silently mixed into the
+        // paper-shape figures.)
+        let pair_units = (split.n_sets * split.n_splits) as f64;
+        let cost_model = TaskCostModel {
+            unit_per_pair: pair_units,
+            unit_per_task: 0.0,
+            overhead: self.cfg.task_overhead_units,
+        };
+
+        // allocate outputs
+        let mut outs: Vec<CountTable> = (0..n_ranks)
+            .map(|p| CountTable::zeros(self.part.n_local(p), split.n_sets))
+            .collect();
+        for (p, o) in outs.iter().enumerate() {
+            mems[p].alloc(MemClass::CountTable, o.bytes());
+        }
+
+        let shuffle_seed = |p: usize, w: usize| {
+            if eff_task > 0 {
+                Some(crate::util::mix2(
+                    self.cfg.seed,
+                    (iteration as u64) << 32 | (i as u64) << 16 | (p as u64) << 8 | w as u64,
+                ))
+            } else {
+                None
+            }
+        };
+
+        // ---- local phase ----
+        // NB: `pass_idx` may equal `act_idx` (deduplicated shapes, e.g. a
+        // P2 splitting into leaf+leaf), so borrow immutably.
+        let mut local_makespan = vec![0.0f64; n_ranks];
+        for p in 0..n_ranks {
+            let t0 = Instant::now();
+            let active = tables[p][act_idx].as_ref().unwrap();
+            let passive = tables[p][pass_idx].as_ref().unwrap();
+            scratches[p].begin(a2_sets);
+            let n_pairs = aggregate_batch(
+                &mut scratches[p],
+                active,
+                self.local_pairs[p].iter().copied(),
+            );
+            let _ = self.contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
+            let dt = t0.elapsed().as_secs_f64();
+            *total_units += n_pairs as f64 * pair_units;
+            *real_compute += dt;
+            // thread-level replay over Alg-4 tasks
+            let mut degs = vec![0u32; self.part.n_local(p)];
+            for &(v, _) in &self.local_pairs[p] {
+                degs[v as usize] += 1;
+            }
+            let tasks = make_tasks(&degs, eff_task, shuffle_seed(p, usize::MAX));
+            let costs: Vec<f64> = tasks.iter().map(|t| cost_model.cost(t)).collect();
+            let rep = replay(&costs, self.cfg.n_threads, self.cfg.phys_cores);
+            local_makespan[p] = rep.makespan;
+            for (c, t) in rep.concurrency_histogram.iter().enumerate() {
+                hist_units[c.min(hist_units.len() - 1)] += t;
+                *busy_units += c as f64 * t;
+            }
+        }
+
+        // ---- exchange phase ----
+        let (schedule, is_pipelined) = self.schedule();
+        let mut fabric = Fabric::new(n_ranks);
+        let mut steps: Vec<Vec<(f64, f64)>> = Vec::with_capacity(schedule.n_steps());
+        for (w, plans_w) in schedule.plans.iter().enumerate() {
+            fabric.reset_accounting();
+            // send: rows the receivers requested from us
+            for p in 0..n_ranks {
+                let active = tables[p][act_idx].as_ref().unwrap();
+                for &q in &plans_w[p].send_to {
+                    let want = self.req.rows(q, p);
+                    let mut rows = Vec::with_capacity(want.len() * a2_sets);
+                    for &u in want {
+                        let r = self.part.local_index[u as usize] as usize;
+                        rows.extend_from_slice(active.row(r));
+                    }
+                    fabric.send(Packet::new(p, q, w, i, a2_sets, rows));
+                }
+            }
+            // receive + fold
+            let mut step_row: Vec<(f64, f64)> = Vec::with_capacity(n_ranks);
+            for p in 0..n_ranks {
+                let packets = fabric.drain(p);
+                let mut recv_bytes = 0u64;
+                let n_msgs = packets.len();
+                let mut degs = vec![0u32; self.part.n_local(p)];
+                let t0 = Instant::now();
+                let passive = tables[p][pass_idx].as_ref().unwrap();
+                scratches[p].begin(a2_sets);
+                let mut n_pairs = 0u64;
+                for pkt in &packets {
+                    recv_bytes += pkt.bytes();
+                    mems[p].alloc(MemClass::RecvBuffer, pkt.bytes());
+                    let q = pkt.sender();
+                    let buf = CountTable {
+                        n_rows: pkt.rows.len() / a2_sets.max(1),
+                        n_sets: a2_sets,
+                        data: pkt.rows.clone(),
+                    };
+                    n_pairs += aggregate_batch(
+                        &mut scratches[p],
+                        &buf,
+                        self.plans[p][q].iter().copied(),
+                    );
+                    for &(v, _) in &self.plans[p][q] {
+                        degs[v as usize] += 1;
+                    }
+                }
+                let _ = self.contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
+                let dt = t0.elapsed().as_secs_f64();
+                *total_units += n_pairs as f64 * pair_units;
+                *real_compute += dt;
+                // pipelined mode frees the step slice immediately; the
+                // naive bulk exchange keeps every slice until the combine
+                // ends (Fig 12's contrast)
+                if is_pipelined {
+                    mems[p].free(MemClass::RecvBuffer, recv_bytes);
+                }
+                let tasks = make_tasks(&degs, eff_task, shuffle_seed(p, w));
+                let costs: Vec<f64> = tasks.iter().map(|t| cost_model.cost(t)).collect();
+                let rep = replay(&costs, self.cfg.n_threads, self.cfg.phys_cores);
+                for (c, t) in rep.concurrency_histogram.iter().enumerate() {
+                    hist_units[c.min(hist_units.len() - 1)] += t;
+                    *busy_units += c as f64 * t;
+                }
+                let comm = self
+                    .cfg
+                    .net
+                    .step(n_msgs, recv_bytes)
+                    .max(self.cfg.net.step(
+                        plans_w[p].send_to.len(),
+                        fabric.sent_bytes(p),
+                    ));
+                step_row.push((rep.makespan, comm));
+            }
+            steps.push(step_row);
+        }
+        fabric.assert_empty();
+        // bulk mode: release all receive buffers now
+        if !is_pipelined {
+            for p in 0..n_ranks {
+                let held = mems[p].current(MemClass::RecvBuffer);
+                mems[p].free(MemClass::RecvBuffer, held);
+            }
+        }
+
+        for (p, o) in outs.into_iter().enumerate() {
+            tables[p][i] = Some(o);
+        }
+
+        SubRecord {
+            sub: i,
+            local_makespan,
+            steps,
+            pipelined: is_pipelined,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::run::ModeSelect;
+    use crate::graph::rmat::{generate, RmatParams};
+    use crate::template::builtin;
+
+    fn small_graph(seed: u64) -> Graph {
+        generate(&RmatParams::with_skew(64, 300, 3, seed))
+    }
+
+    fn run_mode(t: &str, g: &Graph, mode: ModeSelect, ranks: usize) -> RunResult {
+        let tpl = builtin(t).unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = ranks;
+        cfg.mode = mode;
+        cfg.n_iterations = 2;
+        let mut r = DistributedRunner::new(&tpl, g, cfg);
+        r.run()
+    }
+
+    #[test]
+    fn distributed_equals_single_rank() {
+        // THE invariant: colorful counts are identical for every rank
+        // count and every communication mode (same coloring seed).
+        let g = small_graph(11);
+        let tpl = builtin("u5-2").unwrap();
+        let engine = crate::colorcount::Engine::new(&tpl);
+        let reference: Vec<f64> = (0..2)
+            .map(|it| {
+                engine
+                    .run_iteration(&g, crate::util::mix2(42, it as u64))
+                    .colorful
+            })
+            .collect();
+        for mode in [
+            ModeSelect::Naive,
+            ModeSelect::Pipeline,
+            ModeSelect::Adaptive,
+            ModeSelect::AdaptiveLb,
+        ] {
+            for ranks in [1, 2, 5] {
+                let res = run_mode("u5-2", &g, mode, ranks);
+                for (a, b) in res.colorful.iter().zip(&reference) {
+                    let rel = (a - b).abs() / b.abs().max(1.0);
+                    assert!(
+                        rel < 1e-3,
+                        "{mode:?} P={ranks}: colorful {a} vs single-rank {b}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn pipeline_reduces_peak_memory() {
+        let g = small_graph(13);
+        let naive = run_mode("u10-2", &g, ModeSelect::Naive, 6);
+        let pipe = run_mode("u10-2", &g, ModeSelect::Pipeline, 6);
+        assert!(
+            pipe.peak_mem() < naive.peak_mem(),
+            "pipeline {} must beat naive {}",
+            pipe.peak_mem(),
+            naive.peak_mem()
+        );
+    }
+
+    #[test]
+    fn adaptive_picks_alltoall_for_small_templates() {
+        let g = small_graph(17);
+        let tpl = builtin("u3-1").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 5;
+        cfg.mode = ModeSelect::Adaptive;
+        let r = DistributedRunner::new(&tpl, &g, cfg);
+        let (s, pipelined) = r.schedule();
+        assert!(!pipelined);
+        assert_eq!(s.n_steps(), 1);
+    }
+
+    #[test]
+    fn adaptive_picks_ring_for_large_templates() {
+        let g = small_graph(17);
+        let tpl = builtin("u12-2").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 5;
+        cfg.mode = ModeSelect::Adaptive;
+        let r = DistributedRunner::new(&tpl, &g, cfg);
+        let (s, pipelined) = r.schedule();
+        assert!(pipelined);
+        assert_eq!(s.n_steps(), 4);
+    }
+
+    #[test]
+    fn oom_flag_respects_limit() {
+        let g = small_graph(19);
+        let tpl = builtin("u10-2").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 4;
+        cfg.mode = ModeSelect::Naive;
+        cfg.mem_limit = Some(1); // 1 byte: everything OOMs
+        let mut r = DistributedRunner::new(&tpl, &g, cfg.clone());
+        assert!(r.run().oom);
+        cfg.mem_limit = None;
+        let mut r = DistributedRunner::new(&tpl, &g, cfg);
+        assert!(!r.run().oom);
+    }
+
+    #[test]
+    fn model_time_positive_and_decomposes() {
+        let g = small_graph(23);
+        let res = run_mode("u7-2", &g, ModeSelect::Pipeline, 4);
+        assert!(res.model.total > 0.0);
+        assert!(res.model.comp > 0.0);
+        assert!(res.model.comm_total > 0.0);
+        assert!(res.model.comm_exposed <= res.model.comm_total + 1e-12);
+        assert!(res.flop_time > 0.0 && res.flop_time < 1e-3);
+    }
+}

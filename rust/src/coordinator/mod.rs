@@ -1,0 +1,12 @@
+//! The L3 coordinator: the paper's system contribution. `dist` drives the
+//! distributed color-coding of Alg 2/3 over simulated ranks, `memory`
+//! accounts peak intermediate bytes (Eq 7/12), `run` holds the Table-1
+//! mode matrix and results.
+
+pub mod dist;
+pub mod memory;
+pub mod run;
+
+pub use dist::DistributedRunner;
+pub use memory::{MemClass, MemoryAccountant};
+pub use run::{EngineKind, ModeSelect, ModelTime, RunConfig, RunResult, ThreadStats};

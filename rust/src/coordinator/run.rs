@@ -1,0 +1,221 @@
+//! Run configuration and results for the distributed coordinator — the
+//! four implementations of Table 1 (Naive / Pipeline / Adaptive /
+//! AdaptiveLB) are configurations of one runner.
+
+use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
+
+/// Paper Table 1: the four experiment code versions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModeSelect {
+    /// all-to-all, no adaptive switch, per-vertex tasks
+    Naive,
+    /// always the ring pipeline, per-vertex tasks
+    Pipeline,
+    /// adaptive all-to-all/pipeline switch, per-vertex tasks
+    Adaptive,
+    /// adaptive switch + neighbor-list partitioning
+    AdaptiveLb,
+}
+
+impl ModeSelect {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModeSelect::Naive => "Naive",
+            ModeSelect::Pipeline => "Pipeline",
+            ModeSelect::Adaptive => "Adaptive",
+            ModeSelect::AdaptiveLb => "AdaptiveLB",
+        }
+    }
+}
+
+/// Which combine backend executes the DP hot loop.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineKind {
+    /// the native Rust combine (`colorcount::engine`)
+    Native,
+    /// the AOT-compiled JAX/Pallas kernel via PJRT (`runtime::xla_engine`)
+    Xla,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub n_ranks: usize,
+    /// virtual threads per rank for the thread-level replay
+    pub n_threads: usize,
+    /// Alg-4 max task size; 0 = per-vertex granularity
+    pub task_size: u32,
+    pub mode: ModeSelect,
+    pub n_iterations: usize,
+    pub seed: u64,
+    pub policy: AdaptivePolicy,
+    pub net: HockneyParams,
+    /// per-rank memory budget (models the 120 GB/node limit); None = ∞
+    pub mem_limit: Option<u64>,
+    pub engine: EngineKind,
+    /// physical cores per node for the hyper-threading model
+    pub phys_cores: usize,
+    /// per-task scheduling overhead in compute units (Alg-4 granularity
+    /// trade-off, Fig 11 bottom-right)
+    pub task_overhead_units: f64,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            n_ranks: 4,
+            n_threads: 48,
+            task_size: 50,
+            mode: ModeSelect::AdaptiveLb,
+            n_iterations: 1,
+            seed: 42,
+            policy: AdaptivePolicy::default(),
+            net: HockneyParams::default(),
+            mem_limit: None,
+            engine: EngineKind::Native,
+            phys_cores: crate::sched::PHYSICAL_CORES,
+            task_overhead_units: 10_000.0,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Task size actually used: LB modes use `task_size`, others run at
+    /// per-vertex granularity (Table 1 "Neighbor list partitioning: Off").
+    pub fn effective_task_size(&self) -> u32 {
+        match self.mode {
+            ModeSelect::AdaptiveLb => self.task_size,
+            _ => 0,
+        }
+    }
+
+    /// The communication mode for a template of the given complexity.
+    pub fn comm_mode(&self, intensity: f64) -> CommMode {
+        use crate::template::TemplateComplexity;
+        let tc = TemplateComplexity {
+            name: String::new(),
+            k: 0,
+            memory: 0,
+            computation: 0,
+            intensity,
+        };
+        match self.mode {
+            ModeSelect::Naive => CommMode::AllToAll,
+            ModeSelect::Pipeline => {
+                if self.n_ranks >= 3 {
+                    CommMode::Pipeline { g: 1 }
+                } else {
+                    CommMode::AllToAll
+                }
+            }
+            ModeSelect::Adaptive | ModeSelect::AdaptiveLb => self.policy.choose(&tc, self.n_ranks),
+        }
+    }
+}
+
+/// Modeled (cluster-clock) timing of one run, per iteration.
+#[derive(Debug, Clone, Default)]
+pub struct ModelTime {
+    /// end-to-end modeled seconds per iteration
+    pub total: f64,
+    /// computation portion (thread-level makespans, incl. local combine)
+    pub comp: f64,
+    /// exposed (non-overlapped) communication
+    pub comm_exposed: f64,
+    /// total transfer time had nothing overlapped
+    pub comm_total: f64,
+    /// straggler wait (Eq 9) accumulated over steps
+    pub straggler: f64,
+    /// mean overlap ratio ρ per subtemplate (exchange subtemplates only)
+    pub rho_by_sub: Vec<(usize, f64)>,
+}
+
+impl ModelTime {
+    /// communication share of total (the ratio charts of Figs 7/10/14)
+    pub fn comm_ratio(&self) -> f64 {
+        if self.total <= 0.0 {
+            0.0
+        } else {
+            self.comm_exposed / self.total
+        }
+    }
+
+    pub fn mean_rho(&self) -> f64 {
+        if self.rho_by_sub.is_empty() {
+            return 0.0;
+        }
+        self.rho_by_sub.iter().map(|(_, r)| r).sum::<f64>() / self.rho_by_sub.len() as f64
+    }
+}
+
+/// Aggregated thread-level stats (Fig 11's VTune histograms).
+#[derive(Debug, Clone, Default)]
+pub struct ThreadStats {
+    /// time-weighted average concurrency
+    pub avg_concurrency: f64,
+    /// histogram[c] = modeled seconds with exactly c busy threads
+    pub concurrency_histogram: Vec<f64>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RunResult {
+    /// the subgraph-count estimate (median of means over iterations)
+    pub estimate: f64,
+    /// per-iteration estimates
+    pub samples: Vec<f64>,
+    /// per-iteration raw colorful counts (for exactness cross-checks)
+    pub colorful: Vec<f64>,
+    pub model: ModelTime,
+    /// real single-core wall-clock of the whole run, seconds
+    pub real_seconds: f64,
+    /// per-rank peak memory, bytes
+    pub peak_mem_per_rank: Vec<u64>,
+    /// calibrated seconds per compute unit
+    pub flop_time: f64,
+    pub threads: ThreadStats,
+    /// modeled per-rank memory exceeded `mem_limit`
+    pub oom: bool,
+}
+
+impl RunResult {
+    pub fn peak_mem(&self) -> u64 {
+        self.peak_mem_per_rank.iter().copied().max().unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_task_size_by_mode() {
+        let mut c = RunConfig::default();
+        c.task_size = 50;
+        c.mode = ModeSelect::Naive;
+        assert_eq!(c.effective_task_size(), 0);
+        c.mode = ModeSelect::AdaptiveLb;
+        assert_eq!(c.effective_task_size(), 50);
+    }
+
+    #[test]
+    fn comm_mode_by_select() {
+        let mut c = RunConfig::default();
+        c.n_ranks = 8;
+        c.mode = ModeSelect::Naive;
+        assert_eq!(c.comm_mode(100.0), CommMode::AllToAll);
+        c.mode = ModeSelect::Pipeline;
+        assert_eq!(c.comm_mode(0.1), CommMode::Pipeline { g: 1 });
+        c.mode = ModeSelect::Adaptive;
+        assert_eq!(c.comm_mode(0.1), CommMode::AllToAll);
+        assert!(matches!(c.comm_mode(100.0), CommMode::Pipeline { .. }));
+    }
+
+    #[test]
+    fn comm_ratio_math() {
+        let m = ModelTime {
+            total: 10.0,
+            comm_exposed: 4.0,
+            ..Default::default()
+        };
+        assert!((m.comm_ratio() - 0.4).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,684 @@
+//! The figure/table harness: one function per table and figure of the
+//! paper's evaluation (§4), each printing the same rows/series the paper
+//! reports (DESIGN.md §4 maps IDs → modules → expectations).
+//!
+//! All experiments run on scaled-down dataset analogs (DESIGN.md §1); the
+//! reported times are model-clock (calibrated compute replay + Hockney
+//! transfers). Shapes — who wins, by what factor, where crossovers fall —
+//! are the reproduction target, not absolute seconds.
+
+use crate::baseline;
+use crate::coordinator::{DistributedRunner, ModeSelect, RunConfig, RunResult};
+use crate::graph::{loader, Dataset, Graph};
+use crate::metrics::Series;
+use crate::template::{builtin, complexity, BUILTIN_NAMES};
+
+/// Harness context: dataset downscale factor and iteration count.
+#[derive(Debug, Clone, Copy)]
+pub struct FigureCtx {
+    /// extra downscale multiplier on top of each figure's baseline scale
+    pub scale_mult: u32,
+    pub iters: usize,
+    pub seed: u64,
+}
+
+impl Default for FigureCtx {
+    fn default() -> Self {
+        FigureCtx {
+            scale_mult: 1,
+            iters: 1,
+            seed: 42,
+        }
+    }
+}
+
+impl FigureCtx {
+    /// Load (or generate + cache) a dataset analog.
+    pub fn graph(&self, ds: Dataset, base_scale: u32) -> Graph {
+        let scale = base_scale * self.scale_mult;
+        let cache = std::path::Path::new("results/cache")
+            .join(format!("{}_s{}.bin", ds.abbrev(), scale));
+        loader::load_or_generate(&cache, || ds.generate(scale)).expect("dataset cache")
+    }
+
+    pub fn run(&self, template: &str, g: &Graph, mode: ModeSelect, ranks: usize) -> RunResult {
+        self.run_cfg(template, g, mode, ranks, |_| {})
+    }
+
+    pub fn run_cfg(
+        &self,
+        template: &str,
+        g: &Graph,
+        mode: ModeSelect,
+        ranks: usize,
+        tweak: impl FnOnce(&mut RunConfig),
+    ) -> RunResult {
+        let t = builtin(template).expect("builtin template");
+        let mut cfg = RunConfig {
+            n_ranks: ranks,
+            mode,
+            n_iterations: self.iters,
+            seed: self.seed,
+            ..RunConfig::default()
+        };
+        tweak(&mut cfg);
+        DistributedRunner::new(&t, g, cfg).run()
+    }
+}
+
+/// Table 3: computation intensity of the template family — a pure
+/// combinatorial reproduction (exact, no simulation involved).
+pub fn table3() -> Vec<Series> {
+    let mut s = Series::new(
+        "Table 3 — computation intensity of templates (paper: u3-1→2, u5-2→2.8, u7-2→2.9, u10-2→5.3, u12-1→6.0, u12-2→12, u13→22, u14→32, u15-1→60, u15-2→39)",
+        &["memory", "computation", "intensity"],
+    );
+    s.precision = 1;
+    for name in BUILTIN_NAMES {
+        let c = complexity(&builtin(name).unwrap());
+        s.push_row(name, vec![c.memory as f64, c.computation as f64, c.intensity]);
+    }
+    vec![s]
+}
+
+/// Fig 6: Naive implementation, scaling template size on R500K3, 4 → 8
+/// ranks: computation vs communication time.
+pub fn fig6(ctx: &FigureCtx) -> Vec<Series> {
+    let g = ctx.graph(Dataset::R500K3, 2000);
+    let mut comp = Series::new(
+        "Fig 6 — Naive: compute time (model s) on R500K3 (expectation: halves 4→8 ranks for small T)",
+        &["4 ranks", "8 ranks"],
+    );
+    let mut comm = Series::new(
+        "Fig 6 — Naive: communication time (model s) (expectation: grows sharply with ranks for u12-2)",
+        &["4 ranks", "8 ranks"],
+    );
+    comp.precision = 4;
+    comm.precision = 4;
+    for tpl in ["u5-2", "u10-2", "u12-2"] {
+        let mut comp_row = Vec::new();
+        let mut comm_row = Vec::new();
+        for ranks in [4, 8] {
+            let r = ctx.run(tpl, &g, ModeSelect::Naive, ranks);
+            comp_row.push(r.model.comp);
+            comm_row.push(r.model.comm_exposed);
+        }
+        comp.push_row(tpl, comp_row);
+        comm.push_row(tpl, comm_row);
+    }
+    vec![comp, comm]
+}
+
+/// Fig 7: strong scaling Naive vs Pipeline on R500K3 (u10-2, u12-1,
+/// u12-2), 4–10 ranks: speedup, total time, compute ratio.
+pub fn fig7(ctx: &FigureCtx) -> Vec<Series> {
+    let g = ctx.graph(Dataset::R500K3, 2000);
+    let ranks = [4, 6, 8, 10];
+    let cols = ["4 ranks", "6 ranks", "8 ranks", "10 ranks"];
+    let mut out = Vec::new();
+    for tpl in ["u10-2", "u12-1", "u12-2"] {
+        let mut time = Series::new(
+            &format!("Fig 7 — {tpl}: total time (model s), Naive vs Pipeline on R500K3"),
+            &cols,
+        );
+        let mut speedup = Series::new(&format!("Fig 7 — {tpl}: speedup vs 4-rank Naive"), &cols);
+        let mut ratio = Series::new(
+            &format!("Fig 7 — {tpl}: compute fraction of total time"),
+            &cols,
+        );
+        time.precision = 4;
+        speedup.precision = 2;
+        ratio.precision = 2;
+        let mut base = 0.0;
+        for (mi, mode) in [ModeSelect::Naive, ModeSelect::Pipeline].iter().enumerate() {
+            let mut trow = Vec::new();
+            let mut srow = Vec::new();
+            let mut rrow = Vec::new();
+            for &p in &ranks {
+                let r = ctx.run(tpl, &g, *mode, p);
+                if mi == 0 && p == ranks[0] {
+                    base = r.model.total;
+                }
+                trow.push(r.model.total);
+                srow.push(base / r.model.total);
+                rrow.push(1.0 - r.model.comm_ratio());
+            }
+            time.push_row(mode.name(), trow);
+            speedup.push_row(mode.name(), srow);
+            ratio.push_row(mode.name(), rrow);
+        }
+        out.push(speedup);
+        out.push(time);
+        out.push(ratio);
+    }
+    out
+}
+
+/// Fig 8: overlap ratio ρ of the pipeline — large templates on R500K3,
+/// small templates on the big-graph analogs.
+pub fn fig8(ctx: &FigureCtx) -> Vec<Series> {
+    let ranks_large = [4, 6, 8, 10];
+    let g_r500 = ctx.graph(Dataset::R500K3, 2000);
+    let mut large = Series::new(
+        "Fig 8 — mean overlap ratio ρ, Pipeline on R500K3 (expectation: u12-2 ≈ 0.3, u12-1 < 0.1 at scale)",
+        &["4 ranks", "6 ranks", "8 ranks", "10 ranks"],
+    );
+    large.precision = 3;
+    for tpl in ["u10-2", "u12-1", "u12-2"] {
+        let row = ranks_large
+            .iter()
+            .map(|&p| ctx.run(tpl, &g_r500, ModeSelect::Pipeline, p).model.mean_rho())
+            .collect();
+        large.push_row(tpl, row);
+    }
+    let ranks_small = [10, 15, 20, 25];
+    let mut small = Series::new(
+        "Fig 8 — mean overlap ratio ρ, Pipeline, small templates on TW/SK/FR analogs (expectation: ρ → 0 beyond ~15 ranks)",
+        &["10 ranks", "15 ranks", "20 ranks", "25 ranks"],
+    );
+    small.precision = 3;
+    for (ds, base) in [
+        (Dataset::TwitterS, 4000),
+        (Dataset::SkS, 8000),
+        (Dataset::FriendsterS, 8000),
+    ] {
+        let g = ctx.graph(ds, base);
+        for tpl in ["u3-1", "u5-2"] {
+            let row = ranks_small
+                .iter()
+                .map(|&p| ctx.run(tpl, &g, ModeSelect::Pipeline, p).model.mean_rho())
+                .collect();
+            small.push_row(&format!("{} {}", ds.abbrev(), tpl), row);
+        }
+    }
+    vec![large, small]
+}
+
+/// Fig 9: strong scaling of small templates on the large-graph analogs —
+/// Adaptive (switches to all-to-all) vs Pipeline.
+pub fn fig9(ctx: &FigureCtx) -> Vec<Series> {
+    let ranks = [10, 15, 20, 25];
+    let cols = ["10 ranks", "15 ranks", "20 ranks", "25 ranks"];
+    let mut out = Vec::new();
+    for (ds, base) in [
+        (Dataset::TwitterS, 4000),
+        (Dataset::SkS, 8000),
+        (Dataset::FriendsterS, 8000),
+    ] {
+        let g = ctx.graph(ds, base);
+        for tpl in ["u3-1", "u5-2"] {
+            let mut s = Series::new(
+                &format!(
+                    "Fig 9 — {} {tpl}: speedup vs 10-rank Pipeline (expectation: Adaptive ≥ Pipeline)",
+                    ds.abbrev()
+                ),
+                &cols,
+            );
+            s.precision = 2;
+            let mut base_t = 0.0;
+            for mode in [ModeSelect::Pipeline, ModeSelect::Adaptive] {
+                let mut row = Vec::new();
+                for &p in &ranks {
+                    let r = ctx.run(tpl, &g, mode, p);
+                    if mode == ModeSelect::Pipeline && p == ranks[0] {
+                        base_t = r.model.total;
+                    }
+                    row.push(base_t / r.model.total);
+                }
+                s.push_row(mode.name(), row);
+            }
+            out.push(s);
+        }
+    }
+    out
+}
+
+/// Fig 10: weak scaling (u12-2, RMAT skew 3): workload grows with ranks.
+pub fn fig10(ctx: &FigureCtx) -> Vec<Series> {
+    let ranks = [4, 6, 8];
+    let cols = ["4 ranks", "6 ranks", "8 ranks"];
+    let mut time = Series::new(
+        "Fig 10 — weak scaling u12-2, RMAT skew 3 (expectation: Pipeline grows ~20% 4→8 ranks; Naive comm ratio passes 50%)",
+        &cols,
+    );
+    let mut ratio = Series::new("Fig 10 — communication fraction of total", &cols);
+    time.precision = 4;
+    ratio.precision = 2;
+    for mode in [ModeSelect::Naive, ModeSelect::Pipeline] {
+        let mut trow = Vec::new();
+        let mut rrow = Vec::new();
+        for &p in &ranks {
+            // per-rank-proportional workload: 5 M vertices / 250 M edges
+            // per 4 ranks in the paper, downscaled
+            let scale = 2000 * ctx.scale_mult;
+            let ds = Dataset::WeakRmat {
+                n_vertices: (5_000_000 / scale as usize) * p / 4,
+                n_edges: (250_000_000 / scale as u64) * p as u64 / 4,
+            };
+            let g = ctx.graph(ds, 1);
+            let r = ctx.run("u12-2", &g, mode, p);
+            trow.push(r.model.total);
+            rrow.push(r.model.comm_ratio());
+        }
+        time.push_row(mode.name(), trow);
+        ratio.push_row(mode.name(), rrow);
+    }
+    vec![time, ratio]
+}
+
+/// Fig 11: thread-level load balance — skew sweep, thread sweep,
+/// concurrency, and the task-size granularity sweep.
+pub fn fig11(ctx: &FigureCtx) -> Vec<Series> {
+    let mut out = Vec::new();
+    // (a) dataset skew sweep: Adaptive vs AdaptiveLB execution time
+    let data: Vec<(Dataset, u32)> = vec![
+        (Dataset::R250K1, 2000),
+        (Dataset::MiamiS, 500),
+        (Dataset::OrkutS, 2000),
+        (Dataset::R250K3, 2000),
+        (Dataset::R250K8, 2000),
+    ];
+    let mut skew = Series::new(
+        "Fig 11a — u12-2 model time (s) by dataset skew (expectation: LB gain ~1x at low skew, up to ~9x at R250K8)",
+        &["Adaptive", "AdaptiveLB", "gain"],
+    );
+    skew.precision = 4;
+    for (ds, base) in &data {
+        let g = ctx.graph(*ds, *base);
+        let a = ctx.run("u12-2", &g, ModeSelect::Adaptive, 4);
+        let b = ctx.run("u12-2", &g, ModeSelect::AdaptiveLb, 4);
+        skew.push_row(
+            &ds.abbrev(),
+            vec![a.model.total, b.model.total, a.model.total / b.model.total],
+        );
+    }
+    out.push(skew);
+
+    // (b) thread sweep on MI (low skew) and R250K8 (high skew)
+    let threads = [6, 12, 24, 48];
+    let cols = ["6 thr", "12 thr", "24 thr", "48 thr"];
+    for (ds, base) in [(Dataset::MiamiS, 500), (Dataset::R250K8, 2000)] {
+        let g = ctx.graph(ds, base);
+        let mut s = Series::new(
+            &format!(
+                "Fig 11b — {} u12-2 model time (s) vs thread count (expectation: Naive degrades past 24 threads on skewed data; AdaptiveLB flat)",
+                ds.abbrev()
+            ),
+            &cols,
+        );
+        s.precision = 4;
+        for mode in [ModeSelect::Naive, ModeSelect::AdaptiveLb] {
+            let row = threads
+                .iter()
+                .map(|&t| {
+                    ctx.run_cfg("u12-2", &g, mode, 4, |c| c.n_threads = t)
+                        .model
+                        .total
+                })
+                .collect();
+            s.push_row(mode.name(), row);
+        }
+        out.push(s);
+    }
+
+    // (c) average thread concurrency (the VTune histograms)
+    let mut conc = Series::new(
+        "Fig 11c — average concurrent threads of 48 (expectation: ~equal on MI; ~2x gap on R250K8)",
+        &["Naive", "AdaptiveLB"],
+    );
+    conc.precision = 1;
+    for (ds, base) in [(Dataset::MiamiS, 500), (Dataset::R250K8, 2000)] {
+        let g = ctx.graph(ds, base);
+        let a = ctx.run("u12-2", &g, ModeSelect::Naive, 4);
+        let b = ctx.run("u12-2", &g, ModeSelect::AdaptiveLb, 4);
+        conc.push_row(
+            &ds.abbrev(),
+            vec![a.threads.avg_concurrency, b.threads.avg_concurrency],
+        );
+    }
+    out.push(conc);
+
+    // (d) task-size granularity sweep (expectation: optimum ~40–60)
+    let sizes = [5u32, 20, 40, 50, 60, 100, 200, 1000];
+    let size_cols: Vec<String> = sizes.iter().map(|s| s.to_string()).collect();
+    let size_cols: Vec<&str> = size_cols.iter().map(|s| s.as_str()).collect();
+    let mut gran = Series::new(
+        "Fig 11d — u12-2 model time (s) vs Alg-4 task size (expectation: best between 40 and 60)",
+        &size_cols,
+    );
+    gran.precision = 4;
+    for (ds, base) in [(Dataset::R250K3, 2000), (Dataset::R250K8, 2000)] {
+        let g = ctx.graph(ds, base);
+        let row = sizes
+            .iter()
+            .map(|&s| {
+                ctx.run_cfg("u12-2", &g, ModeSelect::AdaptiveLb, 4, |c| c.task_size = s)
+                    .model
+                    .total
+            })
+            .collect();
+        gran.push_row(&ds.abbrev(), row);
+    }
+    out.push(gran);
+    out
+}
+
+/// Fig 12: peak memory per rank, Naive vs Pipeline, u10-2/u12-1/u12-2.
+pub fn fig12(ctx: &FigureCtx) -> Vec<Series> {
+    let g = ctx.graph(Dataset::R500K3, 2000);
+    let ranks = [4, 6, 8, 10];
+    let cols = ["4 ranks", "6 ranks", "8 ranks", "10 ranks"];
+    let mut out = Vec::new();
+    for tpl in ["u10-2", "u12-1", "u12-2"] {
+        let mut s = Series::new(
+            &format!(
+                "Fig 12 — {tpl}: peak memory per rank (MiB), Naive vs Pipeline (expectation: 2–5x reduction)"
+            ),
+            &cols,
+        );
+        s.precision = 2;
+        for mode in [ModeSelect::Naive, ModeSelect::Pipeline] {
+            let row = ranks
+                .iter()
+                .map(|&p| ctx.run(tpl, &g, mode, p).peak_mem() as f64 / (1 << 20) as f64)
+                .collect();
+            s.push_row(mode.name(), row);
+        }
+        out.push(s);
+    }
+    out
+}
+
+/// Fig 13: overall AdaptiveLB vs MPI-Fascia on the Twitter analog,
+/// templates u3-1 → u15-2 (Fascia OOMs beyond u12-2).
+pub fn fig13(ctx: &FigureCtx) -> Vec<Series> {
+    let base_scale = 8000;
+    let g = ctx.graph(Dataset::TwitterS, base_scale);
+    let mut s = Series::new(
+        "Fig 13 — TW analog: total time (model s), AdaptiveLB vs MPI-Fascia (expectation: parity ≤u7-2, ≥2x at u10-2, ~5x at u12-2, Fascia OOM >u12-2)",
+        &["AdaptiveLB", "MPI-Fascia", "speedup"],
+    );
+    s.precision = 4;
+    let scale = base_scale * ctx.scale_mult;
+    for tpl in BUILTIN_NAMES {
+        let ours = ctx.run(tpl, &g, ModeSelect::AdaptiveLb, 16);
+        let t = builtin(tpl).unwrap();
+        let fas = baseline::run_fascia(&t, &g, 16, scale, ctx.seed);
+        let (ft, sp) = if fas.oom {
+            (f64::NAN, f64::NAN) // OOM: Fascia cannot run this template
+        } else {
+            (fas.model.total, fas.model.total / ours.model.total)
+        };
+        s.push_row(tpl, vec![ours.model.total, ft, sp]);
+    }
+    vec![s]
+}
+
+/// Fig 14: compute/communication ratio, AdaptiveLB vs Fascia on TW analog.
+pub fn fig14(ctx: &FigureCtx) -> Vec<Series> {
+    let base_scale = 8000;
+    let g = ctx.graph(Dataset::TwitterS, base_scale);
+    let scale = base_scale * ctx.scale_mult;
+    let mut s = Series::new(
+        "Fig 14 — TW analog: communication fraction (expectation: Fascia → ~80% at u10-2; AdaptiveLB stays ≈40–50%)",
+        &["AdaptiveLB", "MPI-Fascia"],
+    );
+    s.precision = 2;
+    for tpl in ["u3-1", "u5-2", "u10-2", "u12-2"] {
+        let ours = ctx.run(tpl, &g, ModeSelect::AdaptiveLb, 16);
+        let t = builtin(tpl).unwrap();
+        let fas = baseline::run_fascia(&t, &g, 16, scale, ctx.seed);
+        let fr = if fas.oom {
+            f64::NAN
+        } else {
+            fas.model.comm_ratio()
+        };
+        s.push_row(tpl, vec![ours.model.comm_ratio(), fr]);
+    }
+    vec![s]
+}
+
+/// Fig 15: strong scaling AdaptiveLB vs Fascia on the TW analog, 8→16
+/// ranks (Fascia cannot run on 8 ranks for large templates: OOM).
+pub fn fig15(ctx: &FigureCtx) -> Vec<Series> {
+    let base_scale = 8000;
+    let g = ctx.graph(Dataset::TwitterS, base_scale);
+    let scale = base_scale * ctx.scale_mult;
+    let ranks = [8, 12, 16];
+    let cols = ["8 ranks", "12 ranks", "16 ranks"];
+    let mut out = Vec::new();
+    for tpl in ["u5-2", "u10-2", "u12-2"] {
+        let mut s = Series::new(
+            &format!("Fig 15 — {tpl} TW analog: total time (model s); NaN = OOM"),
+            &cols,
+        );
+        s.precision = 4;
+        let row_ours = ranks
+            .iter()
+            .map(|&p| ctx.run(tpl, &g, ModeSelect::AdaptiveLb, p).model.total)
+            .collect();
+        s.push_row("AdaptiveLB", row_ours);
+        let t = builtin(tpl).unwrap();
+        let row_fas = ranks
+            .iter()
+            .map(|&p| {
+                let r = baseline::run_fascia(&t, &g, p, scale, ctx.seed);
+                if r.oom {
+                    f64::NAN
+                } else {
+                    r.model.total
+                }
+            })
+            .collect();
+        s.push_row("MPI-Fascia", row_fas);
+        out.push(s);
+    }
+    out
+}
+
+/// Ablation A1 — Adaptive-Group group size: the ring's offsets-per-step
+/// parameter g trades steps (W = ceil((P-1)/g)) against per-step volume.
+/// The paper fixes g = 1 (Fig 2); this sweep justifies that default for
+/// high-intensity templates and shows the all-to-all limit g = P-1.
+pub fn abl_group_size(ctx: &FigureCtx) -> Vec<Series> {
+    let g = ctx.graph(Dataset::R500K3, 2000);
+    let gs = [1usize, 2, 4, 8, 15];
+    let cols: Vec<String> = gs.iter().map(|x| format!("g={x}")).collect();
+    let cols: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut s = Series::new(
+        "Ablation A1 — u12-2, 16 ranks: total model time (s) vs ring group size g",
+        &cols,
+    );
+    s.precision = 4;
+    let t = builtin("u12-2").unwrap();
+    let row = gs
+        .iter()
+        .map(|&gsz| {
+            let mut cfg = RunConfig {
+                n_ranks: 16,
+                mode: ModeSelect::Pipeline,
+                n_iterations: ctx.iters,
+                seed: ctx.seed,
+                ..RunConfig::default()
+            };
+            cfg.policy.intensity_threshold = 0.0;
+            let mut r = DistributedRunner::new(&t, &g, cfg);
+            // force the ring width by rewriting the schedule choice:
+            // Pipeline mode uses g=1; emulate other widths via policy
+            let _ = &mut r;
+            run_with_group(&t, &g, 16, gsz, ctx)
+        })
+        .collect();
+    s.push_row("Pipeline", row);
+    vec![s]
+}
+
+fn run_with_group(
+    t: &crate::template::Template,
+    g: &Graph,
+    ranks: usize,
+    group: usize,
+    ctx: &FigureCtx,
+) -> f64 {
+    // group size is plumbed through CommMode::Pipeline { g }
+    let mut cfg = RunConfig {
+        n_ranks: ranks,
+        mode: if group >= ranks - 1 {
+            ModeSelect::Naive
+        } else {
+            ModeSelect::Pipeline
+        },
+        n_iterations: ctx.iters,
+        seed: ctx.seed,
+        ..RunConfig::default()
+    };
+    cfg.policy.intensity_threshold = 0.0;
+    let mut runner = DistributedRunner::new(t, g, cfg);
+    runner.set_group_size(group);
+    runner.run().model.total
+}
+
+/// Ablation A2 — vertex partitioning: the Eq-5 analysis assumes random
+/// partitioning; contiguous blocks concentrate R-MAT hubs and skew both
+/// the exchange volume and the per-rank compute.
+pub fn abl_partition(ctx: &FigureCtx) -> Vec<Series> {
+    let g = ctx.graph(Dataset::R250K8, 2000);
+    let mut s = Series::new(
+        "Ablation A2 — u12-2, 8 ranks, R250K8: random vs block partition",
+        &["model time (s)", "peak MiB/rank", "straggler (s)"],
+    );
+    s.precision = 4;
+    let t = builtin("u12-2").unwrap();
+    for block in [false, true] {
+        let cfg = RunConfig {
+            n_ranks: 8,
+            n_iterations: ctx.iters,
+            seed: ctx.seed,
+            ..RunConfig::default()
+        };
+        let mut r = DistributedRunner::new(&t, &g, cfg);
+        if block {
+            r.use_block_partition();
+        }
+        let res = r.run();
+        s.push_row(
+            if block { "block" } else { "random" },
+            vec![
+                res.model.total,
+                res.peak_mem() as f64 / (1 << 20) as f64,
+                res.model.straggler,
+            ],
+        );
+    }
+    vec![s]
+}
+
+/// Ablation A3 — interconnect: on a slower network (10 GbE) the adaptive
+/// switch point moves (pipelining pays off earlier in template size).
+pub fn abl_network(ctx: &FigureCtx) -> Vec<Series> {
+    let g = ctx.graph(Dataset::R500K3, 2000);
+    let mut s = Series::new(
+        "Ablation A3 — u10-2 & u12-2, 8 ranks: Naive vs Pipeline on InfiniBand vs 10GbE (model s)",
+        &["IB Naive", "IB Pipeline", "10GbE Naive", "10GbE Pipeline"],
+    );
+    s.precision = 4;
+    for tpl in ["u10-2", "u12-2"] {
+        let t = builtin(tpl).unwrap();
+        let mut row = Vec::new();
+        for net in [
+            crate::comm::HockneyParams::infiniband(),
+            crate::comm::HockneyParams::tengige(),
+        ] {
+            for mode in [ModeSelect::Naive, ModeSelect::Pipeline] {
+                let cfg = RunConfig {
+                    n_ranks: 8,
+                    mode,
+                    net,
+                    n_iterations: ctx.iters,
+                    seed: ctx.seed,
+                    ..RunConfig::default()
+                };
+                row.push(DistributedRunner::new(&t, &g, cfg).run().model.total);
+            }
+        }
+        s.push_row(tpl, row);
+    }
+    vec![s]
+}
+
+/// All figure IDs the harness knows.
+pub const ALL_FIGURES: [&str; 14] = [
+    "table3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
+    "fig15", "abl-group-size", "abl-partition", "abl-network",
+];
+
+/// Dispatch by ID.
+pub fn run_figure(id: &str, ctx: &FigureCtx) -> Option<Vec<Series>> {
+    Some(match id {
+        "table3" => table3(),
+        "fig6" => fig6(ctx),
+        "fig7" => fig7(ctx),
+        "fig8" => fig8(ctx),
+        "fig9" => fig9(ctx),
+        "fig10" => fig10(ctx),
+        "fig11" => fig11(ctx),
+        "fig12" => fig12(ctx),
+        "fig13" => fig13(ctx),
+        "fig14" => fig14(ctx),
+        "fig15" => fig15(ctx),
+        "abl-group-size" => abl_group_size(ctx),
+        "abl-partition" => abl_partition(ctx),
+        "abl-network" => abl_network(ctx),
+        _ => return None,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_reproduces_orderings() {
+        let s = &table3()[0];
+        let intensity: std::collections::HashMap<&str, f64> = s
+            .row_names
+            .iter()
+            .map(|n| n.as_str())
+            .zip(s.cells.iter().map(|c| c[2]))
+            .collect();
+        assert!(intensity["u12-2"] > 1.6 * intensity["u12-1"]);
+        assert!(intensity["u15-1"] > intensity["u15-2"]);
+        assert!(intensity["u3-1"] < 3.0);
+    }
+
+    #[test]
+    fn quick_fig6_shape() {
+        // heavily downscaled smoke: naive comm does not shrink with ranks
+        // for the big template
+        let ctx = FigureCtx {
+            scale_mult: 16,
+            iters: 1,
+            seed: 7,
+        };
+        let series = fig6(&ctx);
+        assert_eq!(series.len(), 2);
+        let comm = &series[1];
+        let u12 = comm.row_names.iter().position(|n| n == "u12-2").unwrap();
+        assert!(
+            comm.cells[u12][1] > comm.cells[u12][0] * 0.5,
+            "u12-2 naive comm should not shrink much with more ranks: {:?}",
+            comm.cells[u12]
+        );
+    }
+
+    #[test]
+    fn dispatch_knows_all_ids() {
+        let ctx = FigureCtx {
+            scale_mult: 64,
+            iters: 1,
+            seed: 3,
+        };
+        assert!(run_figure("table3", &ctx).is_some());
+        assert!(run_figure("nope", &ctx).is_none());
+    }
+}

@@ -1,0 +1,190 @@
+//! Compressed-sparse-row graph storage.
+//!
+//! The input graphs are undirected (each edge stored in both adjacency
+//! lists, as in FASCIA); vertex ids are dense `u32`. CSR is the only
+//! runtime representation — loaders and generators all funnel through
+//! [`GraphBuilder`].
+
+/// An undirected graph in CSR form.
+#[derive(Debug, Clone)]
+pub struct Graph {
+    /// offsets into `adj`, len = n_vertices + 1
+    pub offsets: Vec<u64>,
+    /// concatenated neighbor lists, len = 2 * n_edges
+    pub adj: Vec<u32>,
+    /// number of undirected edges
+    pub n_edges: u64,
+}
+
+impl Graph {
+    #[inline]
+    pub fn n_vertices(&self) -> usize {
+        self.offsets.len() - 1
+    }
+
+    #[inline]
+    pub fn degree(&self, v: u32) -> usize {
+        (self.offsets[v as usize + 1] - self.offsets[v as usize]) as usize
+    }
+
+    #[inline]
+    pub fn neighbors(&self, v: u32) -> &[u32] {
+        let lo = self.offsets[v as usize] as usize;
+        let hi = self.offsets[v as usize + 1] as usize;
+        &self.adj[lo..hi]
+    }
+
+    pub fn max_degree(&self) -> usize {
+        (0..self.n_vertices() as u32)
+            .map(|v| self.degree(v))
+            .max()
+            .unwrap_or(0)
+    }
+
+    pub fn avg_degree(&self) -> f64 {
+        if self.n_vertices() == 0 {
+            return 0.0;
+        }
+        self.adj.len() as f64 / self.n_vertices() as f64
+    }
+
+    /// Approximate resident bytes of the CSR arrays.
+    pub fn bytes(&self) -> u64 {
+        self.offsets.len() as u64 * 8 + self.adj.len() as u64 * 4
+    }
+
+    /// Edge iterator (each undirected edge once, u < v).
+    pub fn edges(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        (0..self.n_vertices() as u32).flat_map(move |u| {
+            self.neighbors(u)
+                .iter()
+                .copied()
+                .filter(move |&v| u < v)
+                .map(move |v| (u, v))
+        })
+    }
+}
+
+/// Accumulates an edge list, deduplicates, drops self-loops, builds CSR.
+#[derive(Debug, Default)]
+pub struct GraphBuilder {
+    n_vertices: usize,
+    edges: Vec<(u32, u32)>,
+}
+
+impl GraphBuilder {
+    pub fn new(n_vertices: usize) -> Self {
+        GraphBuilder {
+            n_vertices,
+            edges: Vec::new(),
+        }
+    }
+
+    /// Add an undirected edge; self-loops are ignored, duplicates removed
+    /// at build time. Vertex ids may grow the graph.
+    pub fn add_edge(&mut self, u: u32, v: u32) {
+        if u == v {
+            return;
+        }
+        let hi = u.max(v) as usize + 1;
+        if hi > self.n_vertices {
+            self.n_vertices = hi;
+        }
+        self.edges.push((u.min(v), u.max(v)));
+    }
+
+    pub fn n_pending_edges(&self) -> usize {
+        self.edges.len()
+    }
+
+    pub fn build(mut self) -> Graph {
+        self.edges.sort_unstable();
+        self.edges.dedup();
+        let n = self.n_vertices;
+        let mut deg = vec![0u64; n + 1];
+        for &(u, v) in &self.edges {
+            deg[u as usize + 1] += 1;
+            deg[v as usize + 1] += 1;
+        }
+        let mut offsets = deg;
+        for i in 1..=n {
+            offsets[i] += offsets[i - 1];
+        }
+        let mut cursor = offsets.clone();
+        let mut adj = vec![0u32; offsets[n] as usize];
+        for &(u, v) in &self.edges {
+            adj[cursor[u as usize] as usize] = v;
+            cursor[u as usize] += 1;
+            adj[cursor[v as usize] as usize] = u;
+            cursor[v as usize] += 1;
+        }
+        // sort each neighbor list for deterministic traversal + bsearch
+        for v in 0..n {
+            let lo = offsets[v] as usize;
+            let hi = offsets[v + 1] as usize;
+            adj[lo..hi].sort_unstable();
+        }
+        let n_edges = self.edges.len() as u64;
+        Graph {
+            offsets,
+            adj,
+            n_edges,
+        }
+    }
+}
+
+/// Build a graph directly from an edge slice (test/convenience helper).
+pub fn graph_from_edges(n: usize, edges: &[(u32, u32)]) -> Graph {
+    let mut b = GraphBuilder::new(n);
+    for &(u, v) in edges {
+        b.add_edge(u, v);
+    }
+    b.build()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builds_csr_path_graph() {
+        let g = graph_from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        assert_eq!(g.n_vertices(), 4);
+        assert_eq!(g.n_edges, 3);
+        assert_eq!(g.neighbors(0), &[1]);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(2), &[1, 3]);
+        assert_eq!(g.degree(1), 2);
+    }
+
+    #[test]
+    fn dedup_and_self_loops() {
+        let g = graph_from_edges(3, &[(0, 1), (1, 0), (0, 1), (2, 2)]);
+        assert_eq!(g.n_edges, 1);
+        assert_eq!(g.degree(2), 0);
+    }
+
+    #[test]
+    fn grows_vertex_space() {
+        let g = graph_from_edges(0, &[(5, 9)]);
+        assert_eq!(g.n_vertices(), 10);
+        assert_eq!(g.neighbors(9), &[5]);
+    }
+
+    #[test]
+    fn edge_iterator_unique() {
+        let g = graph_from_edges(4, &[(0, 1), (1, 2), (2, 3), (0, 3)]);
+        let es: Vec<_> = g.edges().collect();
+        assert_eq!(es.len(), 4);
+        for &(u, v) in &es {
+            assert!(u < v);
+        }
+    }
+
+    #[test]
+    fn degree_stats() {
+        let g = graph_from_edges(4, &[(0, 1), (0, 2), (0, 3)]);
+        assert_eq!(g.max_degree(), 3);
+        assert!((g.avg_degree() - 1.5).abs() < 1e-12);
+    }
+}

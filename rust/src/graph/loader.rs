@@ -1,0 +1,158 @@
+//! Graph loaders: whitespace/comment-tolerant edge-list text (the format
+//! SNAP datasets and FASCIA use) and a fast little-endian binary format
+//! for caching generated analogs between runs.
+
+use super::csr::{Graph, GraphBuilder};
+use anyhow::{bail, Context, Result};
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+/// Load an edge-list text file: one `u v` pair per line; lines starting
+/// with `#` or `%` are comments; blank lines ignored.
+pub fn load_edge_list(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut b = GraphBuilder::new(0);
+    for (lineno, line) in BufReader::new(f).lines().enumerate() {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('#') || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let u: u32 = it
+            .next()
+            .context("missing u")?
+            .parse()
+            .with_context(|| format!("line {}: bad u", lineno + 1))?;
+        let v: u32 = it
+            .next()
+            .context("missing v")?
+            .parse()
+            .with_context(|| format!("line {}: bad v", lineno + 1))?;
+        b.add_edge(u, v);
+    }
+    Ok(b.build())
+}
+
+const BIN_MAGIC: &[u8; 8] = b"HARPSG01";
+
+/// Write the CSR arrays as `HARPSG01 | n_vertices u64 | n_edges u64 |
+/// offsets[] u64 | adj[] u32`, little-endian.
+pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.n_vertices() as u64).to_le_bytes())?;
+    w.write_all(&g.n_edges.to_le_bytes())?;
+    for &o in &g.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &a in &g.adj {
+        w.write_all(&a.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+pub fn load_binary(path: &Path) -> Result<Graph> {
+    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+    let mut r = BufReader::new(f);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        bail!("{}: not a HARPSG01 binary graph", path.display());
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let n_edges = u64::from_le_bytes(u64buf);
+    let mut offsets = Vec::with_capacity(n + 1);
+    for _ in 0..=n {
+        r.read_exact(&mut u64buf)?;
+        offsets.push(u64::from_le_bytes(u64buf));
+    }
+    let total = offsets[n] as usize;
+    let mut adj = Vec::with_capacity(total);
+    let mut u32buf = [0u8; 4];
+    for _ in 0..total {
+        r.read_exact(&mut u32buf)?;
+        adj.push(u32::from_le_bytes(u32buf));
+    }
+    Ok(Graph {
+        offsets,
+        adj,
+        n_edges,
+    })
+}
+
+/// Load `path` if it exists, else run `gen`, cache to `path`, and return.
+pub fn load_or_generate(path: &Path, gen: impl FnOnce() -> Graph) -> Result<Graph> {
+    if path.exists() {
+        load_binary(path)
+    } else {
+        let g = gen();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        save_binary(&g, path)?;
+        Ok(g)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::graph_from_edges;
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join("harpsg_tests");
+        std::fs::create_dir_all(&d).unwrap();
+        d.join(name)
+    }
+
+    #[test]
+    fn edge_list_roundtrip() {
+        let p = tmp("el.txt");
+        std::fs::write(&p, "# comment\n0 1\n1 2\n\n% other comment\n2 3\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.n_edges, 3);
+        assert_eq!(g.neighbors(1), &[0, 2]);
+    }
+
+    #[test]
+    fn edge_list_bad_line_errors() {
+        let p = tmp("bad.txt");
+        std::fs::write(&p, "0 x\n").unwrap();
+        assert!(load_edge_list(&p).is_err());
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let g = graph_from_edges(5, &[(0, 1), (1, 2), (3, 4), (0, 4)]);
+        let p = tmp("g.bin");
+        save_binary(&g, &p).unwrap();
+        let g2 = load_binary(&p).unwrap();
+        assert_eq!(g.offsets, g2.offsets);
+        assert_eq!(g.adj, g2.adj);
+        assert_eq!(g.n_edges, g2.n_edges);
+    }
+
+    #[test]
+    fn binary_rejects_garbage() {
+        let p = tmp("garbage.bin");
+        std::fs::write(&p, b"NOTAGRPH........").unwrap();
+        assert!(load_binary(&p).is_err());
+    }
+
+    #[test]
+    fn load_or_generate_caches() {
+        let p = tmp("cache.bin");
+        let _ = std::fs::remove_file(&p);
+        let g1 = load_or_generate(&p, || graph_from_edges(3, &[(0, 1), (1, 2)])).unwrap();
+        assert!(p.exists());
+        // second load must come from cache (generator panics if called)
+        let g2 = load_or_generate(&p, || panic!("generator re-invoked")).unwrap();
+        assert_eq!(g1.adj, g2.adj);
+    }
+}

@@ -1,0 +1,14 @@
+//! Graph substrate: CSR storage, loaders, the R-MAT generator used to
+//! reproduce the paper's datasets (Table 2), degree statistics, and the
+//! rank partitioning + request lists that drive the distributed exchange.
+
+pub mod csr;
+pub mod loader;
+pub mod partition;
+pub mod rmat;
+pub mod stats;
+
+pub use csr::{graph_from_edges, Graph, GraphBuilder};
+pub use partition::{Partition, RequestLists};
+pub use rmat::RmatParams;
+pub use stats::{degree_stats, Dataset, DegreeStats, DEFAULT_SCALE};

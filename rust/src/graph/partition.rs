@@ -1,0 +1,203 @@
+//! Vertex partitioning of the input graph across P simulated ranks, plus
+//! the per-pair *request lists* that determine exactly which count rows
+//! must travel between ranks during the combine exchange (Alg 2 line 15 /
+//! Alg 3). Random (hashed) vertex partitioning matches the paper's
+//! assumption in the Eq 5 complexity analysis.
+
+use super::csr::Graph;
+use crate::util::mix2;
+
+/// A partitioning of `0..n_vertices` across `n_ranks` ranks.
+#[derive(Debug, Clone)]
+pub struct Partition {
+    pub n_ranks: usize,
+    /// vertex -> owning rank
+    pub owner: Vec<u16>,
+    /// rank -> its vertices (global ids, ascending)
+    pub locals: Vec<Vec<u32>>,
+    /// vertex -> index within its owner's `locals` list
+    pub local_index: Vec<u32>,
+}
+
+impl Partition {
+    /// Deterministic pseudo-random partition: owner(v) = hash(seed, v) % P.
+    /// Matches the paper's "randomly partitioned" assumption while staying
+    /// reproducible across runs and rank counts.
+    pub fn random(n_vertices: usize, n_ranks: usize, seed: u64) -> Self {
+        assert!(n_ranks >= 1 && n_ranks <= u16::MAX as usize);
+        let mut owner = vec![0u16; n_vertices];
+        let mut locals = vec![Vec::new(); n_ranks];
+        let mut local_index = vec![0u32; n_vertices];
+        for v in 0..n_vertices {
+            let p = (mix2(seed, v as u64) % n_ranks as u64) as u16;
+            owner[v] = p;
+            local_index[v] = locals[p as usize].len() as u32;
+            locals[p as usize].push(v as u32);
+        }
+        Partition {
+            n_ranks,
+            owner,
+            locals,
+            local_index,
+        }
+    }
+
+    /// Contiguous block partition (used by tests and as an ablation).
+    pub fn block(n_vertices: usize, n_ranks: usize) -> Self {
+        assert!(n_ranks >= 1 && n_ranks <= u16::MAX as usize);
+        let mut owner = vec![0u16; n_vertices];
+        let mut locals = vec![Vec::new(); n_ranks];
+        let mut local_index = vec![0u32; n_vertices];
+        let chunk = n_vertices.div_ceil(n_ranks.max(1)).max(1);
+        for v in 0..n_vertices {
+            let p = (v / chunk).min(n_ranks - 1) as u16;
+            owner[v] = p;
+            local_index[v] = locals[p as usize].len() as u32;
+            locals[p as usize].push(v as u32);
+        }
+        Partition {
+            n_ranks,
+            owner,
+            locals,
+            local_index,
+        }
+    }
+
+    #[inline]
+    pub fn owner_of(&self, v: u32) -> usize {
+        self.owner[v as usize] as usize
+    }
+
+    #[inline]
+    pub fn n_local(&self, rank: usize) -> usize {
+        self.locals[rank].len()
+    }
+}
+
+/// For every ordered rank pair, which remote vertices does `p` need?
+/// `needs[p][q]` = sorted global ids owned by `q` that appear in the
+/// neighbor list of at least one vertex owned by `p` (q != p).
+///
+/// These are exactly the count rows that `q` must ship to `p` when a
+/// subtemplate combine runs — the paper's `C_{x,y}(v, Ti, Si)` sets.
+#[derive(Debug, Clone)]
+pub struct RequestLists {
+    pub needs: Vec<Vec<Vec<u32>>>,
+}
+
+impl RequestLists {
+    pub fn build(g: &Graph, part: &Partition) -> Self {
+        let p_count = part.n_ranks;
+        let mut needs: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); p_count]; p_count];
+        // mark remote neighbors per (p, q)
+        let mut seen: Vec<u64> = Vec::new();
+        for p in 0..p_count {
+            seen.clear();
+            for &v in &part.locals[p] {
+                for &u in g.neighbors(v) {
+                    let q = part.owner_of(u);
+                    if q != p {
+                        seen.push(((q as u64) << 32) | u as u64);
+                    }
+                }
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            for &key in &seen {
+                let q = (key >> 32) as usize;
+                needs[p][q].push(key as u32);
+            }
+        }
+        RequestLists { needs }
+    }
+
+    /// Total remote rows rank `p` receives (the Σ_u in Eq 5).
+    pub fn total_in(&self, p: usize) -> usize {
+        self.needs[p].iter().map(|v| v.len()).sum()
+    }
+
+    /// Rows rank `q` must send to rank `p`.
+    pub fn rows(&self, p: usize, q: usize) -> &[u32] {
+        &self.needs[p][q]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::graph_from_edges;
+    use crate::graph::rmat::{generate, RmatParams};
+    use crate::util::prop;
+
+    #[test]
+    fn random_partition_covers_all() {
+        let part = Partition::random(1000, 7, 42);
+        let total: usize = part.locals.iter().map(|l| l.len()).sum();
+        assert_eq!(total, 1000);
+        for (v, &o) in part.owner.iter().enumerate() {
+            let li = part.local_index[v] as usize;
+            assert_eq!(part.locals[o as usize][li], v as u32);
+        }
+    }
+
+    #[test]
+    fn random_partition_roughly_balanced() {
+        let part = Partition::random(10_000, 8, 1);
+        for l in &part.locals {
+            let frac = l.len() as f64 / 10_000.0;
+            assert!((frac - 0.125).abs() < 0.03, "rank holds {frac}");
+        }
+    }
+
+    #[test]
+    fn request_lists_path_graph() {
+        // path 0-1-2-3, ranks: block partition {0,1} {2,3}
+        let g = graph_from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+        let part = Partition::block(4, 2);
+        let req = RequestLists::build(&g, &part);
+        assert_eq!(req.rows(0, 1), &[2]); // rank0's vertex 1 needs vertex 2
+        assert_eq!(req.rows(1, 0), &[1]); // rank1's vertex 2 needs vertex 1
+        assert_eq!(req.total_in(0), 1);
+    }
+
+    #[test]
+    fn prop_request_lists_sound_and_complete() {
+        prop::check("request_lists", |g| {
+            let n = g.usize_in(8, 200);
+            let m = g.usize_in(n, 4 * n) as u64;
+            let ranks = g.usize_in(2, 6);
+            let graph = generate(&RmatParams::with_skew(n, m, 3, g.case_seed));
+            let part = Partition::random(graph.n_vertices(), ranks, 7);
+            let req = RequestLists::build(&graph, &part);
+            // completeness: every remote neighbor of every vertex is listed
+            for p in 0..ranks {
+                for &v in &part.locals[p] {
+                    for &u in graph.neighbors(v) {
+                        let q = part.owner_of(u);
+                        if q != p && req.rows(p, q).binary_search(&u).is_err() {
+                            return Err(format!("missing {u} in needs[{p}][{q}]"));
+                        }
+                    }
+                }
+            }
+            // soundness: every listed vertex is owned by q and adjacent to p
+            for p in 0..ranks {
+                for q in 0..ranks {
+                    for &u in req.rows(p, q) {
+                        if part.owner_of(u) != q {
+                            return Err(format!("{u} not owned by {q}"));
+                        }
+                        let touches_p = graph
+                            .neighbors(u)
+                            .iter()
+                            .any(|&w| part.owner_of(w) == p);
+                        if !touches_p {
+                            return Err(format!("{u} not adjacent to rank {p}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+}

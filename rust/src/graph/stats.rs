@@ -1,0 +1,171 @@
+//! Degree statistics and the dataset catalog (Table 2 of the paper, with
+//! scaled-down analogs of the real graphs — see DESIGN.md §1).
+
+use super::csr::Graph;
+use super::rmat::{generate, RmatParams};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct DegreeStats {
+    pub n_vertices: usize,
+    pub n_edges: u64,
+    pub avg_degree: f64,
+    pub max_degree: usize,
+    /// max/avg degree ratio — the skewness proxy used in the figures
+    pub skewness: f64,
+}
+
+pub fn degree_stats(g: &Graph) -> DegreeStats {
+    let avg = g.avg_degree();
+    let max = g.max_degree();
+    DegreeStats {
+        n_vertices: g.n_vertices(),
+        n_edges: g.n_edges,
+        avg_degree: avg,
+        max_degree: max,
+        skewness: if avg > 0.0 { max as f64 / avg } else { 0.0 },
+    }
+}
+
+/// The experiment datasets. Real-application graphs from Table 2 are
+/// reproduced as R-MAT analogs with matched average degree and a skew
+/// level chosen to match the paper's max/avg ratio regime. Sizes are scaled
+/// down ~100–1000× to fit a single-core container; the per-step cost model
+/// (Eq 6) is scale-free in |E|/P², so figure *shapes* are preserved.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataset {
+    /// Miami analog — low skew social contact network (49 avg deg)
+    MiamiS,
+    /// Orkut analog — moderate skew (76 avg deg)
+    OrkutS,
+    /// NYC analog — low skew, bounded max degree
+    NycS,
+    /// Twitter analog — extreme skew (3M max degree in the paper)
+    TwitterS,
+    /// SK-2005 analog — web crawl, extreme skew
+    SkS,
+    /// Friendster analog — moderate skew, biggest graph
+    FriendsterS,
+    /// RMAT 250M-edge analog at skew 1/3/8 (paper: 5M vertices)
+    R250K1,
+    R250K3,
+    R250K8,
+    /// RMAT 500M-edge analog at skew 3 (paper: 5M vertices)
+    R500K3,
+    /// Weak-scaling family: R-MAT skew 3 with per-rank-proportional size
+    WeakRmat { n_vertices: usize, n_edges: u64 },
+}
+
+impl Dataset {
+    pub fn abbrev(&self) -> String {
+        match self {
+            Dataset::MiamiS => "MI".into(),
+            Dataset::OrkutS => "OR".into(),
+            Dataset::NycS => "NY".into(),
+            Dataset::TwitterS => "TW".into(),
+            Dataset::SkS => "SK".into(),
+            Dataset::FriendsterS => "FR".into(),
+            Dataset::R250K1 => "R250K1".into(),
+            Dataset::R250K3 => "R250K3".into(),
+            Dataset::R250K8 => "R250K8".into(),
+            Dataset::R500K3 => "R500K3".into(),
+            Dataset::WeakRmat { n_vertices, .. } => format!("WEAK{}", n_vertices),
+        }
+    }
+
+    /// Generation parameters: (n_vertices, n_edges, skew). The paper's
+    /// vertex/edge counts divided by the scale factor, degree preserved.
+    pub fn params(&self, scale: u32) -> RmatParams {
+        let s = scale.max(1) as u64;
+        let (n, m, skew, seed) = match self {
+            // paper: 2.1M vertices, 51M edges, avg 49, max 9.8K (low skew)
+            Dataset::MiamiS => (2_100_000 / s, 51_000_000 / s, 1, 101),
+            // paper: 3M vertices, 230M edges, avg 76, max 33K (moderate)
+            Dataset::OrkutS => (3_000_000 / s, 230_000_000 / s, 3, 102),
+            // paper: 18M vertices, 480M edges, avg 54, max 429 (very low)
+            Dataset::NycS => (18_000_000 / s, 480_000_000 / s, 0, 103),
+            // paper: 44M vertices, 2B edges, avg 50, max 3M (extreme)
+            Dataset::TwitterS => (44_000_000 / s, 2_000_000_000 / s, 8, 104),
+            // paper: 50M vertices, 3.8B edges, avg 73, max 8M (extreme)
+            Dataset::SkS => (50_000_000 / s, 3_800_000_000 / s, 8, 105),
+            // paper: 66M vertices, 5B edges, avg 57, max 5214 (low-mod)
+            Dataset::FriendsterS => (66_000_000 / s, 5_000_000_000 / s, 2, 106),
+            // paper: 5M vertices, 250M edges
+            Dataset::R250K1 => (5_000_000 / s, 250_000_000 / s, 1, 107),
+            Dataset::R250K3 => (5_000_000 / s, 250_000_000 / s, 3, 108),
+            Dataset::R250K8 => (5_000_000 / s, 250_000_000 / s, 8, 109),
+            Dataset::R500K3 => (5_000_000 / s, 500_000_000 / s, 3, 110),
+            Dataset::WeakRmat {
+                n_vertices,
+                n_edges,
+            } => (*n_vertices as u64, *n_edges, 3, 111),
+        };
+        RmatParams::with_skew(n.max(64) as usize, m.max(128), skew, seed)
+    }
+
+    /// Generate the dataset at a given downscale factor.
+    pub fn generate(&self, scale: u32) -> Graph {
+        generate(&self.params(scale))
+    }
+}
+
+/// Default downscale factor used by the figure harness: paper sizes / 500.
+pub const DEFAULT_SCALE: u32 = 500;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::graph_from_edges;
+
+    #[test]
+    fn stats_of_star() {
+        let g = graph_from_edges(5, &[(0, 1), (0, 2), (0, 3), (0, 4)]);
+        let s = degree_stats(&g);
+        assert_eq!(s.max_degree, 4);
+        assert!((s.avg_degree - 1.6).abs() < 1e-12);
+        assert!((s.skewness - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analog_degrees_match_paper_regime() {
+        // At scale 500: Miami-S ~4.2K vertices, ~102K edges, avg deg ≈ 49
+        let g = Dataset::MiamiS.generate(500);
+        let s = degree_stats(&g);
+        assert!(
+            s.avg_degree > 25.0 && s.avg_degree < 60.0,
+            "MI-S avg degree {} should approximate the paper's 49",
+            s.avg_degree
+        );
+    }
+
+    #[test]
+    fn twitter_analog_is_skewed() {
+        let tw = degree_stats(&Dataset::TwitterS.generate(2000));
+        let mi = degree_stats(&Dataset::MiamiS.generate(2000));
+        assert!(
+            tw.skewness > 4.0 * mi.skewness,
+            "TW-S skew {} must dwarf MI-S {}",
+            tw.skewness,
+            mi.skewness
+        );
+    }
+
+    #[test]
+    fn abbreviations_unique() {
+        let all = [
+            Dataset::MiamiS,
+            Dataset::OrkutS,
+            Dataset::NycS,
+            Dataset::TwitterS,
+            Dataset::SkS,
+            Dataset::FriendsterS,
+            Dataset::R250K1,
+            Dataset::R250K3,
+            Dataset::R250K8,
+            Dataset::R500K3,
+        ];
+        let mut abbrevs: Vec<_> = all.iter().map(|d| d.abbrev()).collect();
+        abbrevs.sort();
+        abbrevs.dedup();
+        assert_eq!(abbrevs.len(), all.len());
+    }
+}

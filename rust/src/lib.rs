@@ -1,0 +1,37 @@
+//! # harpsg — Pipelined Adaptive-Group Subgraph Counting
+//!
+//! A from-scratch reproduction of *"High-Performance Massive Subgraph
+//! Counting using Pipelined Adaptive-Group Communication"* (Chen, Peng,
+//! Ossen, Vullikanti, Marathe, Jiang, Qiu — 2018): distributed approximate
+//! treelet counting by color-coding, scaled with
+//!
+//! * **Adaptive-Group communication** — the all-to-all count exchange is
+//!   decoupled into `W` ring-ordered steps with an on-the-fly switch back
+//!   to all-to-all for low-intensity templates (`comm`),
+//! * a **pipeline design** interleaving per-step computation with the next
+//!   step's communication and bounding peak intermediate memory
+//!   (`pipeline`, `coordinator::memory`),
+//! * **neighbor-list partitioning** for thread-level load balance
+//!   (`sched`).
+//!
+//! The crate is the L3 coordinator of a three-layer stack: the DP combine
+//! hot spot is also authored as a JAX + Pallas kernel (`python/compile`),
+//! AOT-lowered to HLO text and executed from Rust via PJRT (`runtime`).
+//!
+//! See `DESIGN.md` for the system inventory and experiment index, and
+//! `EXPERIMENTS.md` for paper-vs-measured results.
+
+pub mod baseline;
+pub mod colorcount;
+pub mod combin;
+pub mod comm;
+pub mod config;
+pub mod coordinator;
+pub mod figures;
+pub mod graph;
+pub mod metrics;
+pub mod pipeline;
+pub mod runtime;
+pub mod sched;
+pub mod template;
+pub mod util;

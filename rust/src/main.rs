@@ -1,0 +1,204 @@
+//! `harpsg` — the CLI launcher for the coordinator.
+//!
+//! Subcommands:
+//!   count     --template <name|path> --dataset <abbrev|path> [options]
+//!   run       --config <file.toml>
+//!   templates                      (print the Table-3 complexity table)
+//!   artifacts                      (check the AOT artifact manifest)
+//!
+//! Examples:
+//!   harpsg count --template u10-2 --dataset R500K3 --scale 2000 \
+//!       --ranks 8 --mode adaptive-lb --iters 2
+//!   harpsg run --config configs/quickstart.toml
+
+use anyhow::{bail, Context, Result};
+use harpsg::config::RunSpec;
+use harpsg::coordinator::{DistributedRunner, EngineKind, ModeSelect, RunConfig};
+use harpsg::graph::{degree_stats, loader, Dataset, Graph};
+use harpsg::runtime::{XlaCombine, XlaRuntime};
+use harpsg::template::{builtin, complexity, Template, BUILTIN_NAMES};
+use harpsg::util::{human_bytes, human_secs};
+
+fn main() {
+    if let Err(e) = real_main() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match args.first().map(|s| s.as_str()) {
+        Some("count") => cmd_count(&args[1..]),
+        Some("run") => cmd_run(&args[1..]),
+        Some("templates") => cmd_templates(),
+        Some("artifacts") => cmd_artifacts(),
+        _ => {
+            eprintln!(
+                "usage: harpsg <count|run|templates|artifacts> [options]\n\
+                 see README.md for details"
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn flag(args: &[String], name: &str) -> Option<String> {
+    args.iter()
+        .position(|a| a == name)
+        .and_then(|i| args.get(i + 1))
+        .cloned()
+}
+
+fn load_template(spec: &str) -> Result<Template> {
+    if BUILTIN_NAMES.contains(&spec) {
+        builtin(spec)
+    } else {
+        let text = std::fs::read_to_string(spec)
+            .with_context(|| format!("read template file {spec}"))?;
+        Template::parse(spec, &text)
+    }
+}
+
+fn load_dataset(spec: &str, scale: u32) -> Result<Graph> {
+    let ds = match spec {
+        "MI" => Some(Dataset::MiamiS),
+        "OR" => Some(Dataset::OrkutS),
+        "NY" => Some(Dataset::NycS),
+        "TW" => Some(Dataset::TwitterS),
+        "SK" => Some(Dataset::SkS),
+        "FR" => Some(Dataset::FriendsterS),
+        "R250K1" => Some(Dataset::R250K1),
+        "R250K3" => Some(Dataset::R250K3),
+        "R250K8" => Some(Dataset::R250K8),
+        "R500K3" => Some(Dataset::R500K3),
+        _ => None,
+    };
+    match ds {
+        Some(d) => Ok(d.generate(scale)),
+        None => loader::load_edge_list(std::path::Path::new(spec)),
+    }
+}
+
+fn execute(t: &Template, g: &Graph, cfg: RunConfig) -> Result<()> {
+    let st = degree_stats(g);
+    println!(
+        "graph: {} vertices, {} edges, avg deg {:.1}, max deg {}",
+        st.n_vertices, st.n_edges, st.avg_degree, st.max_degree
+    );
+    let tc = complexity(t);
+    println!(
+        "template: {} (k={}, intensity {:.1}) — {} mode on {} ranks",
+        t.name,
+        t.size(),
+        tc.intensity,
+        cfg.mode.name(),
+        cfg.n_ranks
+    );
+    let use_xla = cfg.engine == EngineKind::Xla;
+    let mut runner = DistributedRunner::new(t, g, cfg);
+    if use_xla {
+        let rt = XlaRuntime::load_default().context("load artifacts (run `make artifacts`)")?;
+        println!("engine: XLA via PJRT ({})", rt.platform);
+        runner.xla = Some(XlaCombine::new(std::sync::Arc::new(rt)));
+    }
+    let r = runner.run();
+    println!();
+    println!("estimate:        {:.6e} embeddings", r.estimate);
+    println!(
+        "model time/iter: {} ({:.0}% compute, mean rho {:.2})",
+        human_secs(r.model.total),
+        100.0 * (1.0 - r.model.comm_ratio()),
+        r.model.mean_rho()
+    );
+    println!("peak memory:     {} per rank", human_bytes(r.peak_mem()));
+    println!("real wall-clock: {}", human_secs(r.real_seconds));
+    if r.oom {
+        println!("WARNING: modeled per-rank memory exceeds the configured limit (OOM)");
+    }
+    Ok(())
+}
+
+fn cmd_count(args: &[String]) -> Result<()> {
+    let template = flag(args, "--template").context("--template required")?;
+    let dataset = flag(args, "--dataset").context("--dataset required")?;
+    let scale: u32 = flag(args, "--scale")
+        .map(|s| s.parse())
+        .transpose()?
+        .unwrap_or(2000);
+    let mut cfg = RunConfig::default();
+    if let Some(v) = flag(args, "--ranks") {
+        cfg.n_ranks = v.parse()?;
+    }
+    if let Some(v) = flag(args, "--threads") {
+        cfg.n_threads = v.parse()?;
+    }
+    if let Some(v) = flag(args, "--iters") {
+        cfg.n_iterations = v.parse()?;
+    }
+    if let Some(v) = flag(args, "--seed") {
+        cfg.seed = v.parse()?;
+    }
+    if let Some(v) = flag(args, "--task-size") {
+        cfg.task_size = v.parse()?;
+    }
+    if let Some(v) = flag(args, "--mode") {
+        cfg.mode = match v.as_str() {
+            "naive" => ModeSelect::Naive,
+            "pipeline" => ModeSelect::Pipeline,
+            "adaptive" => ModeSelect::Adaptive,
+            "adaptive-lb" => ModeSelect::AdaptiveLb,
+            other => bail!("unknown mode {other}"),
+        };
+    }
+    if flag(args, "--engine").as_deref() == Some("xla") {
+        cfg.engine = EngineKind::Xla;
+    }
+    let t = load_template(&template)?;
+    let g = load_dataset(&dataset, scale)?;
+    execute(&t, &g, cfg)
+}
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let path = flag(args, "--config").context("--config required")?;
+    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+    let spec = RunSpec::parse(&text)?;
+    let t = load_template(&spec.template)?;
+    let g = load_dataset(&spec.dataset, spec.scale)?;
+    execute(&t, &g, spec.run)
+}
+
+fn cmd_templates() -> Result<()> {
+    println!(
+        "{:>8} {:>4} {:>10} {:>13} {:>10}",
+        "template", "k", "memory", "computation", "intensity"
+    );
+    for name in BUILTIN_NAMES {
+        let c = complexity(&builtin(name)?);
+        println!(
+            "{:>8} {:>4} {:>10} {:>13} {:>10.1}",
+            name, c.k, c.memory, c.computation, c.intensity
+        );
+    }
+    Ok(())
+}
+
+fn cmd_artifacts() -> Result<()> {
+    let rt = XlaRuntime::load_default()?;
+    println!("platform: {}", rt.platform);
+    println!("artifacts ({}):", rt.manifest.entries.len());
+    for e in &rt.manifest.entries {
+        println!(
+            "  {:?} k={} a={} a1={} block={} [{} sets x {} splits] {}",
+            e.kind,
+            e.k,
+            e.a,
+            e.a1,
+            e.block,
+            e.n_sets,
+            e.n_splits,
+            e.file.file_name().unwrap().to_string_lossy()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,173 @@
+//! Reporting: markdown/CSV series emitters used by the figure harness to
+//! print the same rows the paper's tables and figures report, plus simple
+//! wall-clock timers.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+/// A labelled series table: rows × columns of f64, rendered as markdown
+/// (for EXPERIMENTS.md) or CSV (for plotting).
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub title: String,
+    pub col_names: Vec<String>,
+    pub row_names: Vec<String>,
+    pub cells: Vec<Vec<f64>>,
+    /// printf-style precision per table
+    pub precision: usize,
+}
+
+impl Series {
+    pub fn new(title: &str, cols: &[&str]) -> Self {
+        Series {
+            title: title.to_string(),
+            col_names: cols.iter().map(|s| s.to_string()).collect(),
+            row_names: Vec::new(),
+            cells: Vec::new(),
+            precision: 3,
+        }
+    }
+
+    pub fn push_row(&mut self, name: &str, vals: Vec<f64>) {
+        assert_eq!(vals.len(), self.col_names.len(), "row width mismatch");
+        self.row_names.push(name.to_string());
+        self.cells.push(vals);
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(s, "### {}\n", self.title);
+        let _ = write!(s, "| |");
+        for c in &self.col_names {
+            let _ = write!(s, " {c} |");
+        }
+        let _ = writeln!(s);
+        let _ = write!(s, "|---|");
+        for _ in &self.col_names {
+            let _ = write!(s, "---|");
+        }
+        let _ = writeln!(s);
+        for (r, row) in self.row_names.iter().zip(&self.cells) {
+            let _ = write!(s, "| {r} |");
+            for v in row {
+                let _ = write!(s, " {v:.prec$} |", prec = self.precision);
+            }
+            let _ = writeln!(s);
+        }
+        s
+    }
+
+    pub fn to_csv(&self) -> String {
+        let mut s = String::new();
+        let _ = write!(s, "row");
+        for c in &self.col_names {
+            let _ = write!(s, ",{c}");
+        }
+        let _ = writeln!(s);
+        for (r, row) in self.row_names.iter().zip(&self.cells) {
+            let _ = write!(s, "{r}");
+            for v in row {
+                let _ = write!(s, ",{v}");
+            }
+            let _ = writeln!(s);
+        }
+        s
+    }
+}
+
+/// Scoped wall-clock timer.
+pub struct Timer {
+    start: Instant,
+}
+
+impl Timer {
+    pub fn start() -> Self {
+        Timer {
+            start: Instant::now(),
+        }
+    }
+
+    pub fn secs(&self) -> f64 {
+        self.start.elapsed().as_secs_f64()
+    }
+}
+
+/// Write a results artifact under `results/`, creating the directory.
+pub fn write_result(name: &str, content: &str) -> std::io::Result<std::path::PathBuf> {
+    let dir = std::path::Path::new("results");
+    std::fs::create_dir_all(dir)?;
+    let path = dir.join(name);
+    std::fs::write(&path, content)?;
+    Ok(path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn markdown_render() {
+        let mut s = Series::new("Fig X", &["4 nodes", "8 nodes"]);
+        s.push_row("naive", vec![1.0, 2.5]);
+        s.push_row("pipeline", vec![0.5, 0.75]);
+        let md = s.to_markdown();
+        assert!(md.contains("### Fig X"));
+        assert!(md.contains("| naive | 1.000 | 2.500 |"));
+    }
+
+    #[test]
+    fn csv_render() {
+        let mut s = Series::new("t", &["a"]);
+        s.push_row("r1", vec![0.25]);
+        assert_eq!(s.to_csv(), "row,a\nr1,0.25\n");
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn width_checked() {
+        let mut s = Series::new("t", &["a", "b"]);
+        s.push_row("r", vec![1.0]);
+    }
+
+    #[test]
+    fn timer_monotone() {
+        let t = Timer::start();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        assert!(t.secs() >= 0.002);
+    }
+}
+
+/// Micro-bench helper (the vendored crate set has no criterion): run `f`
+/// until `min_time` elapses (warmup included), report median/min per-op.
+pub fn bench<R>(name: &str, mut f: impl FnMut() -> R) -> f64 {
+    // warmup
+    for _ in 0..3 {
+        std::hint::black_box(f());
+    }
+    let mut samples = Vec::new();
+    let budget = std::time::Duration::from_millis(
+        std::env::var("HARPSG_BENCH_MS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(400),
+    );
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 5 {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        samples.push(t.elapsed().as_secs_f64());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let median = samples[samples.len() / 2];
+    let min = samples[0];
+    println!(
+        "bench {name:<44} median {:>12} min {:>12} ({} runs)",
+        crate::util::human_secs(median),
+        crate::util::human_secs(min),
+        samples.len()
+    );
+    median
+}

@@ -1,0 +1,222 @@
+//! The pipeline time algebra (paper §3.2.1–3.2.2, Fig 3, Eq 9–14).
+//!
+//! Given per-(step, rank) measured compute times and modeled communication
+//! times, this module computes the makespan of
+//!
+//! * the **pipelined** execution: `W+1` stages, where stage `s` overlaps
+//!   the computation on step `s-1`'s data with step `s`'s transfer, with a
+//!   cross-rank synchronization at every stage boundary (the dashed lines
+//!   in Fig 3 — the straggler term δ of Eq 9), and
+//! * the **naive** execution: one bulk exchange, then all the computation,
+//!
+//! plus the per-step overlap ratio ρ_w (Eq 14) and the exposed (non-
+//! overlapped) communication (Eq 13) reported in Fig 8.
+
+/// Per-rank timing of one exchange step.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct StepTiming {
+    /// compute time for the data received at this step, seconds
+    pub comp: f64,
+    /// transfer time of this step's messages, seconds
+    pub comm: f64,
+}
+
+/// Summary of one pipelined combine.
+#[derive(Debug, Clone)]
+pub struct PipelineReport {
+    /// modeled wall-clock of the whole exchange+update
+    pub makespan: f64,
+    /// Σ max_p comm — what the naive schedule would pay in transfer
+    pub comm_total: f64,
+    /// makespan minus useful compute: exposed transfer PLUS straggler
+    /// wait — the paper's Eq 8 communication definition (δ included)
+    pub comm_exposed: f64,
+    /// rank-averaged useful compute Σ_w mean_p comp
+    pub comp_total: f64,
+    /// overlap ratio ρ_w per step (Eq 14), step 0 is the cold start
+    pub rho: Vec<f64>,
+    /// straggler wait δ summed over stages (Eq 9)
+    pub straggler: f64,
+}
+
+impl PipelineReport {
+    /// Mean overlap ratio over the non-cold-start steps (the Fig 8 series).
+    pub fn mean_rho(&self) -> f64 {
+        if self.rho.len() <= 1 {
+            return 0.0;
+        }
+        self.rho[1..].iter().sum::<f64>() / (self.rho.len() - 1) as f64
+    }
+}
+
+/// `timings[w][p]`: step `w`, rank `p`. Computes the pipelined makespan.
+pub fn pipelined(timings: &[Vec<StepTiming>]) -> PipelineReport {
+    let n_steps = timings.len();
+    if n_steps == 0 {
+        return PipelineReport {
+            makespan: 0.0,
+            comm_total: 0.0,
+            comm_exposed: 0.0,
+            comp_total: 0.0,
+            rho: vec![],
+            straggler: 0.0,
+        };
+    }
+    let n_ranks = timings[0].len();
+    let max_comm = |w: usize| -> f64 {
+        timings[w].iter().map(|t| t.comm).fold(0.0, f64::max)
+    };
+    let max_comp = |w: usize| -> f64 {
+        timings[w].iter().map(|t| t.comp).fold(0.0, f64::max)
+    };
+
+    let mut makespan = 0.0;
+    let mut straggler = 0.0;
+    let comm_exposed;
+    let mut rho = Vec::with_capacity(n_steps);
+
+    // stage 0 (cold start): only step 0's transfer runs
+    makespan += max_comm(0);
+    rho.push(0.0);
+
+    // stages 1..W-1: overlap comp(w-1) with comm(w)
+    for w in 1..n_steps {
+        // per-rank stage time, then the sync barrier takes the max (δ)
+        let mut stage = 0.0f64;
+        let mut min_stage = f64::INFINITY;
+        let mut rho_w = 0.0;
+        for p in 0..n_ranks {
+            let t = timings[w][p].comm.max(timings[w - 1][p].comp);
+            stage = stage.max(t);
+            min_stage = min_stage.min(t);
+            // Eq 14 per rank, averaged
+            if timings[w][p].comm > 0.0 {
+                rho_w += (timings[w - 1][p].comp.min(timings[w][p].comm))
+                    / timings[w][p].comm;
+            } else {
+                rho_w += 1.0;
+            }
+        }
+        rho_w /= n_ranks as f64;
+        rho.push(rho_w);
+        straggler += stage - min_stage;
+        makespan += stage;
+    }
+
+    // final stage: computation on the last step's data
+    makespan += max_comp(n_steps - 1);
+
+    let comm_total: f64 = (0..n_steps).map(max_comm).sum();
+    // useful compute = rank-averaged Σ comp; everything else the barrier
+    // timeline spends is exposed transfer + straggler wait (Eq 8's δ)
+    let comp_total: f64 = (0..n_steps)
+        .map(|w| timings[w].iter().map(|t| t.comp).sum::<f64>() / n_ranks as f64)
+        .sum();
+    comm_exposed = (makespan - comp_total).max(0.0);
+
+    PipelineReport {
+        makespan,
+        comm_total,
+        comm_exposed,
+        comp_total,
+        rho,
+        straggler,
+    }
+}
+
+/// Naive (all-to-all, no interleave): every rank first completes the whole
+/// exchange, then computes on the full received buffer.
+pub fn naive(timings: &[Vec<StepTiming>]) -> PipelineReport {
+    let n_steps = timings.len();
+    if n_steps == 0 {
+        return pipelined(timings);
+    }
+    let n_ranks = timings[0].len();
+    let comm_total: f64 = (0..n_steps)
+        .map(|w| timings[w].iter().map(|t| t.comm).fold(0.0, f64::max))
+        .sum();
+    let comp_max: f64 = (0..n_steps)
+        .map(|w| timings[w].iter().map(|t| t.comp).fold(0.0, f64::max))
+        .sum();
+    let comp_total: f64 = (0..n_steps)
+        .map(|w| timings[w].iter().map(|t| t.comp).sum::<f64>() / n_ranks as f64)
+        .sum();
+    let makespan = comm_total + comp_max;
+    PipelineReport {
+        makespan,
+        comm_total,
+        comm_exposed: (makespan - comp_total).max(0.0),
+        comp_total,
+        rho: vec![0.0; n_steps],
+        straggler: comp_max - comp_total,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn uniform(w: usize, p: usize, comp: f64, comm: f64) -> Vec<Vec<StepTiming>> {
+        vec![vec![StepTiming { comp, comm }; p]; w]
+    }
+
+    #[test]
+    fn empty_schedule() {
+        let r = pipelined(&[]);
+        assert_eq!(r.makespan, 0.0);
+    }
+
+    #[test]
+    fn perfect_overlap_hides_all_but_first() {
+        // comp == comm: every transfer after the first hides fully
+        let t = uniform(5, 4, 1.0, 1.0);
+        let r = pipelined(&t);
+        // 1 (cold) + 4 stages of max(1,1) + 1 final comp = 6
+        assert!((r.makespan - 6.0).abs() < 1e-12);
+        assert!((r.mean_rho() - 1.0).abs() < 1e-12);
+        // naive pays 5 + 5 = 10
+        let n = naive(&t);
+        assert!((n.makespan - 10.0).abs() < 1e-12);
+        assert!(r.makespan < n.makespan);
+    }
+
+    #[test]
+    fn compute_bound_pipeline() {
+        // comp >> comm: makespan ≈ cold comm + Σ comp
+        let t = uniform(4, 2, 10.0, 0.1);
+        let r = pipelined(&t);
+        assert!((r.makespan - (0.1 + 3.0 * 10.0 + 10.0)).abs() < 1e-9);
+        assert!((r.mean_rho() - 1.0).abs() < 1e-12);
+        assert!(r.comm_exposed < 0.2);
+    }
+
+    #[test]
+    fn comm_bound_pipeline_gains_nothing() {
+        // comm >> comp: pipelining cannot hide anything
+        let t = uniform(4, 2, 0.1, 10.0);
+        let r = pipelined(&t);
+        let n = naive(&t);
+        // pipeline pays all transfers + final comp; ≈ naive
+        assert!(r.makespan >= 0.99 * n.makespan - 0.5);
+        assert!(r.mean_rho() < 0.02);
+    }
+
+    #[test]
+    fn straggler_accounting() {
+        // one slow rank at one step creates wait for the others
+        let mut t = uniform(3, 3, 1.0, 1.0);
+        t[1][2].comp = 5.0; // rank 2 is slow computing step 1's data
+        let r = pipelined(&t);
+        assert!(r.straggler > 0.0);
+        // makespan grows by the extra 4s at stage 2
+        assert!((r.makespan - (1.0 + 1.0 + 5.0 + 1.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rho_zero_when_no_compute() {
+        let t = uniform(3, 2, 0.0, 1.0);
+        let r = pipelined(&t);
+        assert!(r.mean_rho() < 1e-12);
+        assert!((r.comm_exposed - 3.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,159 @@
+//! The artifact manifest: which AOT-compiled HLO modules exist and the
+//! fixed shapes each was lowered with (written by `python/compile/aot.py`).
+
+use crate::util::jsonparse;
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ArtifactKind {
+    Combine,
+    Fused,
+}
+
+#[derive(Debug, Clone)]
+pub struct ManifestEntry {
+    pub kind: ArtifactKind,
+    pub template: String,
+    pub file: PathBuf,
+    pub k: usize,
+    pub a: usize,
+    pub a1: usize,
+    pub a2: usize,
+    pub c1: usize,
+    pub c2: usize,
+    pub n_sets: usize,
+    pub n_splits: usize,
+    pub block: usize,
+    /// fused modules only: halo width (active-row count)
+    pub halo: Option<usize>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub entries: Vec<ManifestEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        let j = jsonparse::parse(&text)?;
+        let version = j.get("version").and_then(|v| v.as_usize()).unwrap_or(0);
+        if version != 1 {
+            bail!("unsupported manifest version {version}");
+        }
+        let mut entries = Vec::new();
+        for e in j
+            .get("entries")
+            .and_then(|v| v.as_arr())
+            .context("manifest missing `entries`")?
+        {
+            let get = |k: &str| -> Result<usize> {
+                e.get(k)
+                    .and_then(|v| v.as_usize())
+                    .with_context(|| format!("entry missing `{k}`"))
+            };
+            let kind = match e.get("kind").and_then(|v| v.as_str()) {
+                Some("combine") => ArtifactKind::Combine,
+                Some("fused") => ArtifactKind::Fused,
+                other => bail!("unknown artifact kind {other:?}"),
+            };
+            entries.push(ManifestEntry {
+                kind,
+                template: e
+                    .get("template")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("")
+                    .to_string(),
+                file: dir.join(e.get("file").and_then(|v| v.as_str()).context("file")?),
+                k: get("k")?,
+                a: get("a")?,
+                a1: get("a1")?,
+                a2: get("a2")?,
+                c1: get("c1")?,
+                c2: get("c2")?,
+                n_sets: get("n_sets")?,
+                n_splits: get("n_splits")?,
+                block: get("block")?,
+                halo: e.get("halo").and_then(|v| v.as_usize()),
+            });
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            entries,
+        })
+    }
+
+    /// Find the combine artifact for a `(k, a, a1)` split shape.
+    pub fn find_combine(&self, k: usize, a: usize, a1: usize) -> Option<&ManifestEntry> {
+        self.entries
+            .iter()
+            .find(|e| e.kind == ArtifactKind::Combine && e.k == k && e.a == a && e.a1 == a1)
+    }
+
+    /// True when every combine shape of the template named `t` is covered.
+    pub fn covers_template(&self, shapes: &[(usize, usize, usize)]) -> bool {
+        shapes
+            .iter()
+            .all(|&(k, a, a1)| self.find_combine(k, a, a1).is_some())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmpdir(name: &str) -> PathBuf {
+        let d = std::env::temp_dir().join("harpsg_manifest").join(name);
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let d = tmpdir("ok");
+        std::fs::write(
+            d.join("manifest.json"),
+            r#"{"version":1,"entries":[
+              {"kind":"combine","template":"u3-1","file":"c.hlo.txt",
+               "k":3,"a":2,"a1":1,"a2":1,"c1":3,"c2":3,
+               "n_sets":3,"n_splits":2,"block":128}]}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&d).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.find_combine(3, 2, 1).unwrap();
+        assert_eq!(e.block, 128);
+        assert!(m.find_combine(3, 3, 1).is_none());
+    }
+
+    #[test]
+    fn missing_manifest_errors_helpfully() {
+        let d = tmpdir("missing");
+        let err = Manifest::load(&d.join("nope")).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+
+    #[test]
+    fn rejects_wrong_version() {
+        let d = tmpdir("badver");
+        std::fs::write(d.join("manifest.json"), r#"{"version":9,"entries":[]}"#).unwrap();
+        assert!(Manifest::load(&d).is_err());
+    }
+
+    #[test]
+    fn loads_real_artifacts_if_present() {
+        // integration: the repo's own artifacts (built by `make artifacts`)
+        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.find_combine(5, 5, 1).is_some(), "u5-2 root combine");
+            for e in &m.entries {
+                assert!(e.file.exists(), "artifact file {:?}", e.file);
+            }
+        }
+    }
+}

@@ -1,0 +1,11 @@
+//! PJRT runtime: artifact manifest loading (`manifest`) and the XLA-backed
+//! combine engine (`xla_engine`) that executes the AOT-lowered JAX/Pallas
+//! modules from the coordinator's hot path. Start-to-finish flow:
+//! `python/compile/aot.py` (build time, once) → `artifacts/*.hlo.txt` →
+//! `XlaRuntime::load` → `XlaCombine::contract_touched` (request path).
+
+pub mod manifest;
+pub mod xla_engine;
+
+pub use manifest::{ArtifactKind, Manifest, ManifestEntry};
+pub use xla_engine::{XlaCombine, XlaRuntime};

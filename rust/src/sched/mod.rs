@@ -1,0 +1,10 @@
+//! Thread-level scheduling substrate: the Alg-4 neighbor-list partitioning
+//! task factory (`tasks`) and the deterministic virtual-thread replay that
+//! stands in for the paper's OpenMP pool + VTune concurrency measurements
+//! (`vtime`).
+
+pub mod tasks;
+pub mod vtime;
+
+pub use tasks::{make_tasks, Task, TaskCostModel};
+pub use vtime::{replay, ThreadReplay, PHYSICAL_CORES};

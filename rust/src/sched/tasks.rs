@@ -1,0 +1,178 @@
+//! Neighbor-list partitioning (paper Alg 4): build the fine-grained task
+//! queue that bounds per-thread work, plus the task-cost model used by
+//! the virtual-thread replay.
+//!
+//! A task is a `(vertex, neighbor-sublist)` slice of the CSR adjacency,
+//! at most `max_task_size` neighbors long. With `max_task_size = 0`
+//! ("per-vertex granularity", the Naive/FASCIA behaviour) each vertex is
+//! one task regardless of its degree — a hub vertex then pins a whole
+//! thread, which is exactly the imbalance Fig 11 measures.
+
+use crate::util::Rng;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Task {
+    /// local row of the owning vertex
+    pub vertex: u32,
+    /// offset into the vertex's neighbor list
+    pub start: u32,
+    /// number of neighbors in this task
+    pub len: u32,
+}
+
+/// Build the task queue for a set of per-vertex workloads (Alg 4).
+/// `degrees[r]` is the number of adjacency pairs vertex-row `r` must
+/// process in this combine step. `max_task_size == 0` disables splitting.
+pub fn make_tasks(degrees: &[u32], max_task_size: u32, shuffle_seed: Option<u64>) -> Vec<Task> {
+    let mut q = Vec::new();
+    for (r, &n) in degrees.iter().enumerate() {
+        if n == 0 {
+            continue;
+        }
+        if max_task_size == 0 || n <= max_task_size {
+            q.push(Task {
+                vertex: r as u32,
+                start: 0,
+                len: n,
+            });
+        } else {
+            let mut pos = 0u32;
+            let mut rem = n;
+            while rem > 0 {
+                let l = rem.min(max_task_size);
+                q.push(Task {
+                    vertex: r as u32,
+                    start: pos,
+                    len: l,
+                });
+                pos += l;
+                rem -= l;
+            }
+        }
+    }
+    // Alg 4 line 16: shuffle to mitigate same-vertex atomic conflicts
+    if let Some(seed) = shuffle_seed {
+        Rng::stream(seed, 0x5348_5546).shuffle(&mut q);
+    }
+    q
+}
+
+/// Cost model for one task, in abstract "units" (converted to seconds by
+/// the calibrated flop time): `len` adjacency pairs each costing
+/// `unit_per_pair` (the agg row add, ∝ C(k,|Ti''|)), plus the task's
+/// share of the per-vertex contraction (∝ C(k,|Ti|)·C(|Ti|,|Ti'|)) and a
+/// fixed scheduling overhead.
+#[derive(Debug, Clone, Copy)]
+pub struct TaskCostModel {
+    /// units per adjacency pair (≈ C(k, |Ti''|))
+    pub unit_per_pair: f64,
+    /// units per task for contraction share + atomics
+    pub unit_per_task: f64,
+    /// fixed per-task scheduling/synchronization overhead units
+    pub overhead: f64,
+}
+
+impl TaskCostModel {
+    #[inline]
+    pub fn cost(&self, t: &Task) -> f64 {
+        self.overhead + self.unit_per_task + self.unit_per_pair * t.len as f64
+    }
+
+    pub fn total(&self, tasks: &[Task]) -> f64 {
+        tasks.iter().map(|t| self.cost(t)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn no_split_when_small() {
+        let q = make_tasks(&[3, 0, 5], 10, None);
+        assert_eq!(
+            q,
+            vec![
+                Task { vertex: 0, start: 0, len: 3 },
+                Task { vertex: 2, start: 0, len: 5 }
+            ]
+        );
+    }
+
+    #[test]
+    fn splits_hub_vertex() {
+        let q = make_tasks(&[12], 5, None);
+        assert_eq!(q.len(), 3);
+        assert_eq!(q[0], Task { vertex: 0, start: 0, len: 5 });
+        assert_eq!(q[1], Task { vertex: 0, start: 5, len: 5 });
+        assert_eq!(q[2], Task { vertex: 0, start: 10, len: 2 });
+    }
+
+    #[test]
+    fn zero_disables_splitting() {
+        let q = make_tasks(&[1000, 2], 0, None);
+        assert_eq!(q.len(), 2);
+        assert_eq!(q[0].len, 1000);
+    }
+
+    #[test]
+    fn shuffle_preserves_multiset() {
+        let degs: Vec<u32> = (0..50).map(|i| (i * 7) % 23 + 1).collect();
+        let a = make_tasks(&degs, 6, None);
+        let mut b = make_tasks(&degs, 6, Some(9));
+        assert_ne!(a, b, "shuffle must change order");
+        b.sort_by_key(|t| (t.vertex, t.start));
+        let mut a2 = a.clone();
+        a2.sort_by_key(|t| (t.vertex, t.start));
+        assert_eq!(a2, b);
+    }
+
+    #[test]
+    fn prop_tasks_cover_exactly() {
+        prop::check("task_cover", |g| {
+            let n = g.usize_in(1, 60);
+            let degs: Vec<u32> = (0..n).map(|_| g.usize_in(0, 200) as u32).collect();
+            let s = g.usize_in(1, 50) as u32;
+            let q = make_tasks(&degs, s, Some(g.case_seed));
+            // per-vertex: intervals tile [0, deg)
+            let mut seen: Vec<Vec<(u32, u32)>> = vec![Vec::new(); n];
+            for t in &q {
+                if t.len == 0 || t.len > s {
+                    return Err(format!("bad task len {}", t.len));
+                }
+                seen[t.vertex as usize].push((t.start, t.len));
+            }
+            for (v, iv) in seen.iter_mut().enumerate() {
+                iv.sort();
+                let mut pos = 0u32;
+                for &(st, l) in iv.iter() {
+                    if st != pos {
+                        return Err(format!("gap at vertex {v}"));
+                    }
+                    pos += l;
+                }
+                if pos != degs[v] {
+                    return Err(format!("vertex {v} covered {pos}/{}", degs[v]));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn cost_model_bounds_hub_tasks() {
+        let m = TaskCostModel {
+            unit_per_pair: 2.0,
+            unit_per_task: 1.0,
+            overhead: 0.5,
+        };
+        let naive = make_tasks(&[10_000, 10], 0, None);
+        let lb = make_tasks(&[10_000, 10], 50, None);
+        let max_naive = naive.iter().map(|t| m.cost(t)).fold(0.0, f64::max);
+        let max_lb = lb.iter().map(|t| m.cost(t)).fold(0.0, f64::max);
+        assert!(max_naive > 100.0 * max_lb / 2.0);
+        // totals stay comparable (overhead grows only mildly)
+        assert!(m.total(&lb) < m.total(&naive) * 1.5);
+    }
+}

@@ -1,0 +1,152 @@
+//! Virtual-thread list scheduler: deterministically replays a task queue
+//! on `T` virtual workers to obtain the thread-level makespan, concurrency
+//! histogram and per-thread utilization that the paper measured with
+//! VTune (Fig 11). See DESIGN.md §1 for why this substitutes for real
+//! multithreading on the single-core container: load imbalance is a
+//! property of the (real) task-size distribution, which list scheduling
+//! reproduces.
+//!
+//! Hyper-threading model: with `T` threads on `phys` physical cores,
+//! per-thread speed is `min(1, phys/T)` — total throughput saturates at
+//! the physical core count. A monolithic hub task then *slows down* when
+//! T exceeds `phys` (it runs on a slower logical thread), which is exactly
+//! the Naive-implementation degradation beyond 24 threads the paper
+//! observes, while bounded tasks (AdaptiveLB) stay flat.
+
+/// Paper testbed: 2 × 12-core Xeon E5-2670v3.
+pub const PHYSICAL_CORES: usize = 24;
+
+#[derive(Debug, Clone)]
+pub struct ThreadReplay {
+    /// wall-clock units until the last task finishes
+    pub makespan: f64,
+    /// Σ busy time / (T · makespan): utilization in [0,1]
+    pub utilization: f64,
+    /// average number of concurrently busy threads
+    pub avg_concurrency: f64,
+    /// histogram[c] = time spent with exactly c busy threads (c ≤ T)
+    pub concurrency_histogram: Vec<f64>,
+    pub n_threads: usize,
+}
+
+/// List-schedule `costs` (in work units at speed 1) on `n_threads` virtual
+/// threads with the hyper-threading speed model.
+pub fn replay(costs: &[f64], n_threads: usize, phys_cores: usize) -> ThreadReplay {
+    assert!(n_threads >= 1);
+    let speed = (phys_cores as f64 / n_threads as f64).min(1.0);
+    // earliest-free-thread assignment via a simple linear scan (T ≤ 64)
+    let mut free_at = vec![0.0f64; n_threads];
+    let mut intervals: Vec<(f64, f64)> = Vec::with_capacity(costs.len());
+    for &c in costs {
+        let (t, _) = free_at
+            .iter()
+            .enumerate()
+            .map(|(i, &f)| (i, f))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap().then(a.0.cmp(&b.0)))
+            .unwrap();
+        let start = free_at[t];
+        let dur = c / speed;
+        free_at[t] = start + dur;
+        intervals.push((start, start + dur));
+    }
+    let makespan = free_at.iter().copied().fold(0.0, f64::max);
+    let busy: f64 = intervals.iter().map(|(s, e)| e - s).sum();
+
+    // concurrency histogram by sweeping interval endpoints
+    let mut events: Vec<(f64, i32)> = Vec::with_capacity(intervals.len() * 2);
+    for &(s, e) in &intervals {
+        events.push((s, 1));
+        events.push((e, -1));
+    }
+    events.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+    let mut histogram = vec![0.0f64; n_threads + 1];
+    let mut cur = 0i32;
+    let mut last_t = 0.0f64;
+    for (t, d) in events {
+        if t > last_t {
+            histogram[cur.max(0) as usize] += t - last_t;
+            last_t = t;
+        }
+        cur += d;
+    }
+    let avg_concurrency = if makespan > 0.0 { busy / makespan } else { 0.0 };
+    ThreadReplay {
+        makespan,
+        utilization: if makespan > 0.0 {
+            busy / (n_threads as f64 * makespan)
+        } else {
+            0.0
+        },
+        avg_concurrency,
+        concurrency_histogram: histogram,
+        n_threads,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn perfect_balance() {
+        let costs = vec![1.0; 8];
+        let r = replay(&costs, 4, 24);
+        assert!((r.makespan - 2.0).abs() < 1e-12);
+        assert!((r.utilization - 1.0).abs() < 1e-12);
+        assert!((r.avg_concurrency - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn hub_task_dominates() {
+        // one task of 100, many of 1: makespan pinned by the hub
+        let mut costs = vec![1.0; 50];
+        costs.insert(0, 100.0);
+        let r = replay(&costs, 8, 24);
+        assert!((r.makespan - 100.0).abs() < 1e-9);
+        assert!(r.utilization < 0.25);
+    }
+
+    #[test]
+    fn hyperthreading_slows_monolithic_tasks() {
+        // beyond the physical cores, a single hub task takes longer —
+        // the paper's Naive degradation (Fig 11)
+        let mut costs = vec![1.0; 100];
+        costs.insert(0, 500.0);
+        let at24 = replay(&costs, 24, 24).makespan;
+        let at48 = replay(&costs, 48, 24).makespan;
+        assert!(
+            at48 > 1.8 * at24,
+            "hub at 48 threads {at48} vs 24 threads {at24}"
+        );
+        // balanced tasks are unaffected (total throughput saturates)
+        let flat: Vec<f64> = vec![1.0; 4800];
+        let f24 = replay(&flat, 24, 24).makespan;
+        let f48 = replay(&flat, 48, 24).makespan;
+        assert!((f48 - f24).abs() / f24 < 0.05);
+    }
+
+    #[test]
+    fn histogram_sums_to_makespan() {
+        let costs = vec![3.0, 1.0, 4.0, 1.0, 5.0, 9.0, 2.0, 6.0];
+        let r = replay(&costs, 3, 24);
+        let sum: f64 = r.concurrency_histogram.iter().sum();
+        assert!((sum - r.makespan).abs() < 1e-9);
+    }
+
+    #[test]
+    fn more_threads_help_balanced_load() {
+        let costs: Vec<f64> = (0..240).map(|i| 1.0 + (i % 3) as f64).collect();
+        let m6 = replay(&costs, 6, 24).makespan;
+        let m12 = replay(&costs, 12, 24).makespan;
+        let m24 = replay(&costs, 24, 24).makespan;
+        assert!(m12 < m6 * 0.6);
+        assert!(m24 < m12 * 0.7);
+    }
+
+    #[test]
+    fn empty_queue() {
+        let r = replay(&[], 4, 24);
+        assert_eq!(r.makespan, 0.0);
+        assert_eq!(r.avg_concurrency, 0.0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Automorphism counting for tree templates.
+//!
+//! The color-coding DP counts colorful *injective homomorphisms* of the
+//! rooted template summed over all root images; each non-induced subgraph
+//! embedding is hit exactly `aut(T)` times, so the final estimate divides
+//! by the automorphism count of the (unrooted) template. We compute it by
+//! rooting at the tree's centroid(s) and multiplying factorials of
+//! identical-child multiplicities (AHU), handling the bicentroid case.
+
+use super::Template;
+
+/// Number of automorphisms of the rooted tree at `v` (children unordered),
+/// together with its AHU canonical string.
+fn rooted_aut(t: &Template, v: u32, parent: u32) -> (u64, String) {
+    let mut children: Vec<(String, u64)> = t.adj[v as usize]
+        .iter()
+        .filter(|&&u| u != parent)
+        .map(|&u| {
+            let (a, c) = rooted_aut(t, u, v);
+            (c, a)
+        })
+        .collect();
+    children.sort();
+    let mut aut = 1u64;
+    let mut i = 0;
+    while i < children.len() {
+        let mut j = i;
+        while j < children.len() && children[j].0 == children[i].0 {
+            j += 1;
+        }
+        let m = (j - i) as u64;
+        // m! for interchangeable identical subtrees, times each child's own
+        aut *= factorial(m);
+        for item in &children[i..j] {
+            aut *= item.1;
+        }
+        i = j;
+    }
+    let canon = format!(
+        "({})",
+        children.iter().map(|(c, _)| c.as_str()).collect::<String>()
+    );
+    (aut, canon)
+}
+
+fn factorial(n: u64) -> u64 {
+    (1..=n).product::<u64>().max(1)
+}
+
+/// Centroid(s) of the tree: one or two vertices minimizing the max
+/// component size after removal.
+fn centroids(t: &Template) -> Vec<u32> {
+    let n = t.size();
+    if n == 1 {
+        return vec![0];
+    }
+    // iterative subtree sizes rooted at 0
+    let children = t.rooted_children();
+    let mut order = Vec::with_capacity(n);
+    let mut stack = vec![0u32];
+    while let Some(v) = stack.pop() {
+        order.push(v);
+        for &c in &children[v as usize] {
+            stack.push(c);
+        }
+    }
+    let mut size = vec![1usize; n];
+    for &v in order.iter().rev() {
+        for &c in &children[v as usize] {
+            size[v as usize] += size[c as usize];
+        }
+    }
+    let mut best = usize::MAX;
+    let mut out = Vec::new();
+    for v in 0..n as u32 {
+        let mut worst = n - size[v as usize]; // component through the parent
+        for &c in &children[v as usize] {
+            worst = worst.max(size[c as usize]);
+        }
+        if worst < best {
+            best = worst;
+            out = vec![v];
+        } else if worst == best {
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Number of automorphisms of the unrooted tree `t`.
+pub fn automorphism_count(t: &Template) -> u64 {
+    let cs = centroids(t);
+    match cs.as_slice() {
+        [c] => rooted_aut(t, *c, u32::MAX).0,
+        [c1, c2] => {
+            let (a1, s1) = rooted_aut(t, *c1, *c2);
+            let (a2, s2) = rooted_aut(t, *c2, *c1);
+            // the centroid edge can flip iff the two halves are isomorphic
+            a1 * a2 * if s1 == s2 { 2 } else { 1 }
+        }
+        _ => unreachable!("a tree has 1 or 2 centroids"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::template::{builtin, Template};
+
+    /// Brute-force count of adjacency-preserving vertex permutations.
+    fn brute_aut(t: &Template) -> u64 {
+        let n = t.size();
+        let mut adj = vec![vec![false; n]; n];
+        for v in 0..n {
+            for &u in &t.adj[v] {
+                adj[v][u as usize] = true;
+            }
+        }
+        let mut perm: Vec<usize> = (0..n).collect();
+        let mut count = 0u64;
+        // Heap's algorithm over all permutations (n <= 8 in tests)
+        fn heap(
+            k: usize,
+            perm: &mut Vec<usize>,
+            adj: &Vec<Vec<bool>>,
+            count: &mut u64,
+        ) {
+            if k == 1 {
+                let n = perm.len();
+                let ok = (0..n).all(|i| (0..n).all(|j| adj[i][j] == adj[perm[i]][perm[j]]));
+                if ok {
+                    *count += 1;
+                }
+                return;
+            }
+            for i in 0..k {
+                heap(k - 1, perm, adj, count);
+                if k % 2 == 0 {
+                    perm.swap(i, k - 1);
+                } else {
+                    perm.swap(0, k - 1);
+                }
+            }
+        }
+        heap(n, &mut perm, &adj, &mut count);
+        count
+    }
+
+    #[test]
+    fn known_small_trees() {
+        // path3: swap the two ends -> 2
+        assert_eq!(automorphism_count(&builtin("u3-1").unwrap()), 2);
+        // star on 5 vertices: 4! = 24
+        let star = Template::from_edges("s5", 5, &[(0, 1), (0, 2), (0, 3), (0, 4)]).unwrap();
+        assert_eq!(automorphism_count(&star), 24);
+        // path4 (bicentroid, symmetric halves): 2
+        let p4 = Template::from_edges("p4", 4, &[(0, 1), (1, 2), (2, 3)]).unwrap();
+        assert_eq!(automorphism_count(&p4), 2);
+        // single edge: 2
+        let p2 = Template::from_edges("p2", 2, &[(0, 1)]).unwrap();
+        assert_eq!(automorphism_count(&p2), 2);
+        // single vertex: 1
+        let p1 = Template::from_edges("p1", 1, &[]).unwrap();
+        assert_eq!(automorphism_count(&p1), 1);
+    }
+
+    #[test]
+    fn matches_brute_force_on_all_small_trees() {
+        // every tree shape on 2..=7 vertices via random Prüfer-ish sampling
+        // plus the small builtins
+        for name in ["u3-1", "u5-2", "u7-2"] {
+            let t = builtin(name).unwrap();
+            assert_eq!(
+                automorphism_count(&t),
+                brute_aut(&t),
+                "mismatch for {name}"
+            );
+        }
+        // asymmetric chair with tail
+        let t = Template::from_edges("y", 6, &[(0, 1), (1, 2), (1, 3), (3, 4), (4, 5)]).unwrap();
+        assert_eq!(automorphism_count(&t), brute_aut(&t));
+        // double star (bicentroid, symmetric): aut = 2 * (2!)^2 = 8
+        let t = Template::from_edges("dbl", 6, &[(0, 1), (0, 2), (0, 3), (3, 4), (3, 5)]).unwrap();
+        assert_eq!(automorphism_count(&t), brute_aut(&t));
+        assert_eq!(automorphism_count(&t), 8);
+    }
+
+    #[test]
+    fn big_builtins_nonzero() {
+        for name in crate::template::BUILTIN_NAMES {
+            let t = builtin(name).unwrap();
+            assert!(automorphism_count(&t) >= 1, "{name}");
+        }
+        // perfect binary tree on 15: each of the 7 internal nodes can swap
+        // its two identical children -> 2^7 = 128
+        let pb15 = Template::from_edges(
+            "pb15",
+            15,
+            &[
+                (0, 1),
+                (0, 2),
+                (1, 3),
+                (1, 4),
+                (2, 5),
+                (2, 6),
+                (3, 7),
+                (3, 8),
+                (4, 9),
+                (4, 10),
+                (5, 11),
+                (5, 12),
+                (6, 13),
+                (6, 14),
+            ],
+        )
+        .unwrap();
+        assert_eq!(automorphism_count(&pb15), 128);
+        // u15-1 (two identical 3-star limbs, a 2-star limb, a chain limb):
+        // 2! · (3!)² · 2! = 144
+        assert_eq!(automorphism_count(&builtin("u15-1").unwrap()), 144);
+    }
+}

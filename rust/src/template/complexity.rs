@@ -1,0 +1,105 @@
+//! The Table-3 complexity model: per-template memory complexity
+//! `Σ_i C(k,|Ti|)`, computation complexity `Σ_i C(k,|Ti|)·C(|Ti|,|Ti'|)`,
+//! and computation intensity (their ratio). These quantities drive the
+//! Adaptive-Group mode switch and the pipeline overlap predictions
+//! (§3.2.2), and `benches/table3.rs` regenerates the paper's Table 3 from
+//! them.
+
+use super::partition::{partition_template, PartitionDag};
+use super::Template;
+use crate::combin::Binomial;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TemplateComplexity {
+    pub name: String,
+    pub k: usize,
+    /// Σ over distinct non-leaf subtemplates of C(k,|Ti|): the per-vertex
+    /// count-table footprint in "slots" (paper Table 3 col 2)
+    pub memory: u64,
+    /// Σ over distinct non-leaf subtemplates of C(k,|Ti|)·C(|Ti|,|Ti''|)
+    /// (paper Table 3 col 3)
+    pub computation: u64,
+    /// computation / memory (paper Table 3 col 4)
+    pub intensity: f64,
+}
+
+/// Compute Table-3 complexities from a partition DAG.
+pub fn complexity_of_dag(name: &str, k: usize, dag: &PartitionDag, binom: &Binomial) -> TemplateComplexity {
+    let mut memory = 0u64;
+    let mut computation = 0u64;
+    for s in &dag.subs {
+        if s.is_leaf() {
+            continue;
+        }
+        let sets = binom.c(k, s.size);
+        memory += sets;
+        computation += sets * binom.c(s.size, s.active_size(dag));
+    }
+    TemplateComplexity {
+        name: name.to_string(),
+        k,
+        memory,
+        computation,
+        intensity: computation as f64 / memory.max(1) as f64,
+    }
+}
+
+/// Convenience: partition + complexity in one call (k = template size).
+pub fn complexity(t: &Template) -> TemplateComplexity {
+    let dag = partition_template(t);
+    let binom = Binomial::new();
+    complexity_of_dag(&t.name, t.size(), &dag, &binom)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::template::builtin;
+
+    fn c(name: &str) -> TemplateComplexity {
+        complexity(&builtin(name).unwrap())
+    }
+
+    #[test]
+    fn intensity_grows_with_template_size() {
+        // Table 3's headline trend: intensity rises from ~2 (u3-1) to
+        // tens (u15-x)
+        let names = ["u3-1", "u5-2", "u7-2", "u10-2", "u12-2", "u13", "u14"];
+        let mut prev = 0.0;
+        for n in names {
+            let x = c(n);
+            assert!(
+                x.intensity >= prev,
+                "{n}: intensity {} dropped below {prev}",
+                x.intensity
+            );
+            prev = x.intensity;
+        }
+        assert!(c("u3-1").intensity >= 1.5 && c("u3-1").intensity <= 3.0);
+        assert!(c("u15-1").intensity > 20.0, "u15-1 must be compute-heavy");
+    }
+
+    #[test]
+    fn u12_2_twice_the_intensity_of_u12_1() {
+        // the paper's key same-size contrast: 12 vs 6
+        let i1 = c("u12-1").intensity;
+        let i2 = c("u12-2").intensity;
+        assert!(
+            i2 > 1.6 * i1,
+            "u12-2 intensity {i2} should be ~2x u12-1's {i1}"
+        );
+    }
+
+    #[test]
+    fn u15_1_more_intense_than_u15_2() {
+        assert!(c("u15-1").intensity > c("u15-2").intensity);
+    }
+
+    #[test]
+    fn memory_complexity_monotone_enough() {
+        // memory complexity grows strongly with k (Table 3 col 2)
+        assert!(c("u5-2").memory > c("u3-1").memory);
+        assert!(c("u12-2").memory > c("u7-2").memory);
+        assert!(c("u15-2").memory > c("u12-2").memory);
+    }
+}

@@ -1,0 +1,342 @@
+//! Treelet templates: representation, the builtin library matching the
+//! paper's Figure 5 (u3-1 … u15-2), a text parser, recursive partitioning
+//! into subtemplates (Alg 1 line 8), automorphism counting (the DP
+//! over-count divisor), and the Table-3 complexity model.
+//!
+//! Note on shapes: the chapter shows Fig 5 only as an image. The builtin
+//! shapes here are chosen to match the published vertex counts and the
+//! Table-3 *computation-intensity relationships* (e.g. u12-2 has ~2× the
+//! intensity of the equally-sized u12-1 because its partition splits are
+//! balanced). This substitution is documented in DESIGN.md §1.
+
+pub mod automorphism;
+pub mod complexity;
+pub mod partition;
+
+pub use automorphism::automorphism_count;
+pub use complexity::{complexity, TemplateComplexity};
+pub use partition::{partition_template, PartitionDag, SubTemplate};
+
+use anyhow::{bail, Context, Result};
+
+/// A tree template on `size()` vertices. Vertex 0 is the root by
+/// convention (the DP is root-invariant up to the automorphism divisor).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Template {
+    pub name: String,
+    /// adjacency lists (tree, undirected)
+    pub adj: Vec<Vec<u32>>,
+}
+
+impl Template {
+    /// Build from an undirected edge list; validates tree-ness.
+    pub fn from_edges(name: &str, n: usize, edges: &[(u32, u32)]) -> Result<Template> {
+        if n == 0 {
+            bail!("template {name}: empty");
+        }
+        if edges.len() != n - 1 {
+            bail!(
+                "template {name}: {} edges for {} vertices — not a tree",
+                edges.len(),
+                n
+            );
+        }
+        let mut adj = vec![Vec::new(); n];
+        for &(u, v) in edges {
+            if u as usize >= n || v as usize >= n || u == v {
+                bail!("template {name}: bad edge ({u},{v})");
+            }
+            adj[u as usize].push(v);
+            adj[v as usize].push(u);
+        }
+        let t = Template {
+            name: name.to_string(),
+            adj,
+        };
+        if !t.is_connected() {
+            bail!("template {name}: disconnected");
+        }
+        Ok(t)
+    }
+
+    pub fn size(&self) -> usize {
+        self.adj.len()
+    }
+
+    fn is_connected(&self) -> bool {
+        let n = self.size();
+        let mut seen = vec![false; n];
+        let mut stack = vec![0u32];
+        seen[0] = true;
+        let mut count = 0;
+        while let Some(v) = stack.pop() {
+            count += 1;
+            for &u in &self.adj[v as usize] {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    stack.push(u);
+                }
+            }
+        }
+        count == n
+    }
+
+    /// Children of `v` when the tree is rooted at 0 (parent excluded),
+    /// ordered by descending subtree size then vertex id — a deterministic
+    /// ordering that the partition relies on.
+    pub fn rooted_children(&self) -> Vec<Vec<u32>> {
+        let n = self.size();
+        let mut parent = vec![u32::MAX; n];
+        let mut order = Vec::with_capacity(n);
+        let mut stack = vec![0u32];
+        let mut seen = vec![false; n];
+        seen[0] = true;
+        while let Some(v) = stack.pop() {
+            order.push(v);
+            for &u in &self.adj[v as usize] {
+                if !seen[u as usize] {
+                    seen[u as usize] = true;
+                    parent[u as usize] = v;
+                    stack.push(u);
+                }
+            }
+        }
+        let mut sub_size = vec![1u32; n];
+        for &v in order.iter().rev() {
+            if parent[v as usize] != u32::MAX {
+                sub_size[parent[v as usize] as usize] += sub_size[v as usize];
+            }
+        }
+        let mut children = vec![Vec::new(); n];
+        for v in 1..n as u32 {
+            children[parent[v as usize] as usize].push(v);
+        }
+        for c in &mut children {
+            c.sort_by_key(|&v| (std::cmp::Reverse(sub_size[v as usize]), v));
+        }
+        children
+    }
+
+    /// Parse the text format: first line `n`, then `n-1` lines `u v`.
+    /// `#` comments allowed.
+    pub fn parse(name: &str, text: &str) -> Result<Template> {
+        let mut lines = text
+            .lines()
+            .map(str::trim)
+            .filter(|l| !l.is_empty() && !l.starts_with('#'));
+        let n: usize = lines
+            .next()
+            .context("empty template file")?
+            .parse()
+            .context("first line must be the vertex count")?;
+        let mut edges = Vec::new();
+        for l in lines {
+            let mut it = l.split_whitespace();
+            let u: u32 = it.next().context("missing u")?.parse()?;
+            let v: u32 = it.next().context("missing v")?.parse()?;
+            edges.push((u, v));
+        }
+        Template::from_edges(name, n, &edges)
+    }
+}
+
+/// The builtin template library (paper Fig. 5). Names match the paper.
+pub fn builtin(name: &str) -> Result<Template> {
+    let (n, edges): (usize, Vec<(u32, u32)>) = match name {
+        // path on 3 vertices
+        "u3-1" => (3, vec![(0, 1), (1, 2)]),
+        // "chair": root-child chain with a fork
+        "u5-2" => (5, vec![(0, 1), (1, 2), (1, 3), (3, 4)]),
+        // balanced binary tree of depth 2
+        "u7-2" => (7, vec![(0, 1), (0, 2), (1, 3), (1, 4), (2, 5), (2, 6)]),
+        // two connected hub stars (4 leaves each)
+        "u10-2" => (
+            10,
+            vec![
+                (0, 1),
+                (0, 2),
+                (0, 3),
+                (0, 4),
+                (0, 5),
+                (1, 6),
+                (1, 7),
+                (1, 8),
+                (1, 9),
+            ],
+        ),
+        // u12-1: hub-heavy, unbalanced splits -> low computation intensity
+        "u12-1" => (
+            12,
+            vec![
+                (0, 1),
+                (0, 2),
+                (0, 3),
+                (0, 4),
+                (0, 5),
+                (0, 6),
+                (1, 7),
+                (7, 8),
+                (8, 9),
+                (9, 10),
+                (10, 11),
+            ],
+        ),
+        // u12-2: balanced binary -> ~2x the intensity of u12-1 (Table 3)
+        "u12-2" => (
+            12,
+            vec![
+                (0, 1),
+                (0, 2),
+                (1, 3),
+                (1, 4),
+                (2, 5),
+                (2, 6),
+                (3, 7),
+                (3, 8),
+                (4, 9),
+                (4, 10),
+                (5, 11),
+            ],
+        ),
+        // u13: three 2-deep limbs + chains — Table-3 fit:
+        // mem 4655 / comp 88244 / intensity 19.0 (paper: 4823/109603/22)
+        "u13" => (
+            13,
+            vec![
+                (0, 1),
+                (0, 2),
+                (0, 3),
+                (1, 4),
+                (1, 5),
+                (2, 6),
+                (2, 7),
+                (3, 8),
+                (3, 9),
+                (4, 10),
+                (5, 11),
+                (6, 12),
+            ],
+        ),
+        // u14: four 3-limbs + tail — Table-3 fit:
+        // mem 7190 / comp 244972 / intensity 34.1 (paper: 7371/242515/32)
+        "u14" => (
+            14,
+            vec![
+                (0, 1),
+                (0, 2),
+                (0, 3),
+                (0, 4),
+                (1, 5),
+                (1, 6),
+                (2, 7),
+                (2, 8),
+                (3, 9),
+                (3, 10),
+                (4, 11),
+                (4, 12),
+                (5, 13),
+            ],
+        ),
+        // u15-1: limbs 4,4,3,(2-chain) — highest computation complexity:
+        // mem 10844 / comp 754600 / intensity 69.6 (paper: 12383/753375/60)
+        "u15-1" => (
+            15,
+            vec![
+                (0, 1),
+                (0, 2),
+                (0, 3),
+                (0, 4),
+                (1, 5),
+                (1, 6),
+                (1, 7),
+                (2, 8),
+                (2, 9),
+                (2, 10),
+                (3, 11),
+                (3, 12),
+                (4, 13),
+                (13, 14),
+            ],
+        ),
+        // u15-2: deep mixed binary — memory-heavier, lower intensity:
+        // mem 17071 / comp 516245 / intensity 30.2 (paper: 15773/617820/39)
+        "u15-2" => (
+            15,
+            vec![
+                (0, 1),
+                (0, 2),
+                (0, 3),
+                (1, 4),
+                (1, 5),
+                (2, 6),
+                (2, 7),
+                (3, 8),
+                (3, 9),
+                (4, 10),
+                (4, 11),
+                (5, 12),
+                (5, 13),
+                (6, 14),
+            ],
+        ),
+        _ => bail!("unknown builtin template `{name}`"),
+    };
+    Template::from_edges(name, n, &edges)
+}
+
+/// All builtin names in the paper's size order.
+pub const BUILTIN_NAMES: [&str; 10] = [
+    "u3-1", "u5-2", "u7-2", "u10-2", "u12-1", "u12-2", "u13", "u14", "u15-1", "u15-2",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtins_are_trees_of_right_size() {
+        for (name, want) in [
+            ("u3-1", 3),
+            ("u5-2", 5),
+            ("u7-2", 7),
+            ("u10-2", 10),
+            ("u12-1", 12),
+            ("u12-2", 12),
+            ("u13", 13),
+            ("u14", 14),
+            ("u15-1", 15),
+            ("u15-2", 15),
+        ] {
+            let t = builtin(name).unwrap();
+            assert_eq!(t.size(), want, "{name}");
+        }
+    }
+
+    #[test]
+    fn rejects_non_trees() {
+        assert!(Template::from_edges("cycle", 3, &[(0, 1), (1, 2), (2, 0)]).is_err());
+        assert!(Template::from_edges("forest", 4, &[(0, 1), (2, 3), (1, 2), (0, 3)]).is_err());
+        assert!(Template::from_edges("disc", 4, &[(0, 1), (0, 1), (2, 3)]).is_err());
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let t = Template::parse("p", "# a path\n4\n0 1\n1 2\n2 3\n").unwrap();
+        assert_eq!(t.size(), 4);
+        assert_eq!(t.adj[1], vec![0, 2]);
+    }
+
+    #[test]
+    fn rooted_children_sizes_ordered() {
+        let t = builtin("u12-1").unwrap();
+        let ch = t.rooted_children();
+        // root 0 has 6 children; first child must head the biggest subtree
+        assert_eq!(ch[0].len(), 6);
+        assert_eq!(ch[0][0], 1); // vertex 1 heads the 6-vertex limb
+    }
+
+    #[test]
+    fn unknown_builtin_errors() {
+        assert!(builtin("u99").is_err());
+    }
+}

@@ -1,0 +1,241 @@
+//! Recursive template partitioning (Alg 1 line 8, Fig 1a).
+//!
+//! A subtemplate `Ti` rooted at ρ with children `c1..cm` (ordered by
+//! descending subtree size — deterministic) is split by cutting the edge
+//! to its *last* child: the **active child** `Ti''` is the subtree rooted
+//! at `cm`, the **passive child** `Ti'` is `Ti` minus that subtree (root
+//! stays ρ). Recursion bottoms out at single vertices. Isomorphic rooted
+//! subtemplates are deduplicated by their AHU canonical string, so the DP
+//! computes (and stores) each distinct shape once — this is what makes the
+//! count-table inventory (and hence Fig 12's peak memory) minimal.
+
+use super::Template;
+use std::collections::HashMap;
+
+/// A node in the partition DAG.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SubTemplate {
+    /// number of vertices (= number of active colors `a`)
+    pub size: usize,
+    /// index of the passive child `Ti'` (None for leaves)
+    pub passive: Option<usize>,
+    /// index of the active child `Ti''` (None for leaves)
+    pub active: Option<usize>,
+    /// AHU canonical encoding of the rooted shape
+    pub canon: String,
+}
+
+impl SubTemplate {
+    pub fn is_leaf(&self) -> bool {
+        self.passive.is_none()
+    }
+
+    /// |Ti'| — size of the passive child.
+    pub fn passive_size(&self, dag: &PartitionDag) -> usize {
+        self.passive.map(|i| dag.subs[i].size).unwrap_or(0)
+    }
+
+    /// |Ti''| — size of the active child.
+    pub fn active_size(&self, dag: &PartitionDag) -> usize {
+        self.active.map(|i| dag.subs[i].size).unwrap_or(0)
+    }
+}
+
+/// The deduplicated partition DAG of a template.
+#[derive(Debug, Clone)]
+pub struct PartitionDag {
+    pub subs: Vec<SubTemplate>,
+    /// index of the full template
+    pub root: usize,
+    /// topological compute order: children strictly before parents
+    pub order: Vec<usize>,
+}
+
+/// Rooted-tree working representation used during partitioning.
+#[derive(Debug, Clone)]
+struct RNode {
+    children: Vec<RNode>,
+}
+
+impl RNode {
+    fn size(&self) -> usize {
+        1 + self.children.iter().map(RNode::size).sum::<usize>()
+    }
+
+    fn canon(&self) -> String {
+        let mut cs: Vec<String> = self.children.iter().map(RNode::canon).collect();
+        cs.sort();
+        format!("({})", cs.concat())
+    }
+}
+
+/// Build the rooted representation of `t` rooted at vertex 0, with children
+/// ordered by descending subtree size (ties by vertex id).
+fn build_rooted(t: &Template) -> RNode {
+    fn rec(t: &Template, v: u32, parent: u32) -> RNode {
+        let mut children: Vec<(usize, u32, RNode)> = t.adj[v as usize]
+            .iter()
+            .filter(|&&u| u != parent)
+            .map(|&u| {
+                let node = rec(t, u, v);
+                (node.size(), u, node)
+            })
+            .collect();
+        children.sort_by_key(|(s, u, _)| (std::cmp::Reverse(*s), *u));
+        RNode {
+            children: children.into_iter().map(|(_, _, n)| n).collect(),
+        }
+    }
+    rec(t, 0, u32::MAX)
+}
+
+/// Partition a template into its deduplicated subtemplate DAG.
+pub fn partition_template(t: &Template) -> PartitionDag {
+    let rooted = build_rooted(t);
+    let mut subs: Vec<SubTemplate> = Vec::new();
+    let mut index: HashMap<String, usize> = HashMap::new();
+    let mut order: Vec<usize> = Vec::new();
+
+    fn go(
+        node: &RNode,
+        subs: &mut Vec<SubTemplate>,
+        index: &mut HashMap<String, usize>,
+        order: &mut Vec<usize>,
+    ) -> usize {
+        let canon = node.canon();
+        if let Some(&i) = index.get(&canon) {
+            return i;
+        }
+        let (passive, active) = if node.children.is_empty() {
+            (None, None)
+        } else {
+            let active_node = node.children.last().unwrap();
+            let a = go(active_node, subs, index, order);
+            let passive_node = RNode {
+                children: node.children[..node.children.len() - 1].to_vec(),
+            };
+            let p = go(&passive_node, subs, index, order);
+            (Some(p), Some(a))
+        };
+        let i = subs.len();
+        subs.push(SubTemplate {
+            size: node.size(),
+            passive,
+            active,
+            canon,
+        });
+        index.insert(subs[i].canon.clone(), i);
+        order.push(i);
+        i
+    }
+
+    let root = go(&rooted, &mut subs, &mut index, &mut order);
+    PartitionDag { subs, root, order }
+}
+
+impl PartitionDag {
+    /// For each subtemplate, the index of the last step in `order` that
+    /// reads it — used by the engine to free count tables early (the
+    /// intermediate-data reduction the paper's pipeline design leans on).
+    pub fn last_use(&self) -> Vec<usize> {
+        let mut last = vec![0usize; self.subs.len()];
+        for (step, &i) in self.order.iter().enumerate() {
+            last[i] = last[i].max(step);
+            if let Some(p) = self.subs[i].passive {
+                last[p] = last[p].max(step);
+            }
+            if let Some(a) = self.subs[i].active {
+                last[a] = last[a].max(step);
+            }
+        }
+        // the root's table is read when forming the final estimate
+        last[self.root] = self.order.len();
+        last
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::template::builtin;
+
+    #[test]
+    fn path3_partition() {
+        let t = builtin("u3-1").unwrap();
+        let dag = partition_template(&t);
+        // shapes: leaf, path2, path3 (rooted at middle -> star2? rooted at
+        // vertex 0 which is an end of the path)
+        let root = &dag.subs[dag.root];
+        assert_eq!(root.size, 3);
+        assert!(!root.is_leaf());
+        // sizes of children sum to parent
+        for s in &dag.subs {
+            if !s.is_leaf() {
+                assert_eq!(s.passive_size(&dag) + s.active_size(&dag), s.size);
+            }
+        }
+    }
+
+    #[test]
+    fn order_is_topological() {
+        for name in crate::template::BUILTIN_NAMES {
+            let t = builtin(name).unwrap();
+            let dag = partition_template(&t);
+            let pos: std::collections::HashMap<usize, usize> =
+                dag.order.iter().enumerate().map(|(p, &i)| (i, p)).collect();
+            for &i in &dag.order {
+                if let (Some(p), Some(a)) = (dag.subs[i].passive, dag.subs[i].active) {
+                    assert!(pos[&p] < pos[&i], "{name}: passive after parent");
+                    assert!(pos[&a] < pos[&i], "{name}: active after parent");
+                }
+            }
+            assert_eq!(dag.subs[dag.root].size, t.size());
+        }
+    }
+
+    #[test]
+    fn dedup_shares_shapes() {
+        // a perfect binary tree has massive sharing: its partition touches
+        // far fewer distinct shapes than the 2·15-1 raw splits.
+        let t = crate::template::Template::from_edges(
+            "pb15",
+            15,
+            &[
+                (0, 1),
+                (0, 2),
+                (1, 3),
+                (1, 4),
+                (2, 5),
+                (2, 6),
+                (3, 7),
+                (3, 8),
+                (4, 9),
+                (4, 10),
+                (5, 11),
+                (5, 12),
+                (6, 13),
+                (6, 14),
+            ],
+        )
+        .unwrap();
+        let dag = partition_template(&t);
+        assert!(
+            dag.subs.len() <= 12,
+            "perfect binary tree should dedup to ≤12 shapes, got {}",
+            dag.subs.len()
+        );
+        // exactly one leaf shape
+        assert_eq!(dag.subs.iter().filter(|s| s.is_leaf()).count(), 1);
+    }
+
+    #[test]
+    fn last_use_allows_freeing() {
+        let t = builtin("u12-2").unwrap();
+        let dag = partition_template(&t);
+        let last = dag.last_use();
+        // the leaf is used by some later step, and the root lives to the end
+        let leaf = dag.subs.iter().position(|s| s.is_leaf()).unwrap();
+        assert!(last[leaf] > 0);
+        assert_eq!(last[dag.root], dag.order.len());
+    }
+}

@@ -1,0 +1,186 @@
+//! Deterministic PRNGs used everywhere in the library.
+//!
+//! Reproducibility is a hard requirement: the distributed engine must
+//! produce *bit-identical* colorful counts to the single-rank engine on the
+//! same seed, regardless of rank count, communication mode or pipeline
+//! settings. We therefore avoid any OS entropy and use counter-based /
+//! splittable generators keyed by `(seed, stream)` so every logical site
+//! (coloring iteration, RMAT edge, task shuffle, ...) derives its own
+//! independent stream.
+
+/// SplitMix64 — used both directly (stream derivation, hashing) and to seed
+/// the main generator. Passes BigCrush when used as a 64-bit generator.
+#[inline]
+pub fn splitmix64(state: &mut u64) -> u64 {
+    *state = state.wrapping_add(0x9E3779B97F4A7C15);
+    let mut z = *state;
+    z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+    z ^ (z >> 31)
+}
+
+/// One-shot stateless mix of two words — used to derive per-vertex colors
+/// from `(iteration_seed, vertex_id)` so color assignment is independent of
+/// graph partitioning (the key to distributed == single-rank determinism).
+#[inline]
+pub fn mix2(a: u64, b: u64) -> u64 {
+    let mut s = a ^ b.wrapping_mul(0x9E3779B97F4A7C15);
+    splitmix64(&mut s)
+}
+
+/// xoshiro256** — the main sequential generator.
+#[derive(Clone, Debug)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seeded via SplitMix64 as recommended by the xoshiro authors.
+    pub fn new(seed: u64) -> Self {
+        let mut sm = seed;
+        let s = [
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+            splitmix64(&mut sm),
+        ];
+        Rng { s }
+    }
+
+    /// Derive an independent stream for a logical substream id.
+    pub fn stream(seed: u64, stream: u64) -> Self {
+        Rng::new(mix2(seed, stream))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[1].wrapping_mul(5).rotate_left(7).wrapping_mul(9);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in `[0, n)` without modulo bias (Lemire's method).
+    #[inline]
+    pub fn below(&mut self, n: u64) -> u64 {
+        debug_assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut l = m as u64;
+        if l < n {
+            let t = n.wrapping_neg() % n;
+            while l < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                l = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    /// Uniform f64 in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample `k` distinct indices from `[0, n)` (k << n assumed).
+    pub fn sample_distinct(&mut self, n: u64, k: usize) -> Vec<u64> {
+        let mut out = Vec::with_capacity(k);
+        while out.len() < k {
+            let x = self.below(n);
+            if !out.contains(&x) {
+                out.push(x);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Rng::new(42);
+        let mut b = Rng::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn streams_differ() {
+        let mut a = Rng::stream(42, 0);
+        let mut b = Rng::stream(42, 1);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn below_in_range_and_covers() {
+        let mut r = Rng::new(7);
+        let mut seen = [false; 10];
+        for _ in 0..1000 {
+            let x = r.below(10) as usize;
+            assert!(x < 10);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s), "all residues hit in 1000 draws");
+    }
+
+    #[test]
+    fn f64_unit_interval() {
+        let mut r = Rng::new(3);
+        let mut sum = 0.0;
+        for _ in 0..10_000 {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+            sum += x;
+        }
+        let mean = sum / 10_000.0;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean} far from 0.5");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(5);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mix2_partition_independent() {
+        // same (seed, vertex) -> same value, different vertex -> different
+        assert_eq!(mix2(1, 9), mix2(1, 9));
+        assert_ne!(mix2(1, 9), mix2(1, 10));
+        assert_ne!(mix2(2, 9), mix2(1, 9));
+    }
+
+    #[test]
+    fn sample_distinct_unique() {
+        let mut r = Rng::new(11);
+        let s = r.sample_distinct(100, 10);
+        let mut d = s.clone();
+        d.sort_unstable();
+        d.dedup();
+        assert_eq!(d.len(), 10);
+    }
+}

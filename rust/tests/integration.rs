@@ -1,0 +1,199 @@
+//! Cross-module integration tests: the invariants a downstream user
+//! relies on, exercised over the real stack (graph gen → partition →
+//! distributed DP → estimate; plus the AOT/PJRT path when artifacts are
+//! built).
+
+use harpsg::colorcount::{count_embeddings, Engine};
+use harpsg::coordinator::{DistributedRunner, EngineKind, ModeSelect, RunConfig};
+use harpsg::graph::rmat::{generate, RmatParams};
+use harpsg::graph::Dataset;
+use harpsg::runtime::{XlaCombine, XlaRuntime};
+use harpsg::template::{builtin, BUILTIN_NAMES};
+use harpsg::util::prop;
+
+/// The core invariant, at integration scale: any (mode, ranks, template)
+/// combination produces the same colorful counts as the single-rank
+/// engine on the same iteration seeds.
+#[test]
+fn distributed_count_invariance_matrix() {
+    let g = generate(&RmatParams::with_skew(300, 2_500, 3, 99));
+    for tpl in ["u3-1", "u5-2", "u7-2", "u10-2"] {
+        let t = builtin(tpl).unwrap();
+        let engine = Engine::new(&t);
+        let reference: Vec<f64> = (0..2)
+            .map(|it| engine.run_iteration(&g, harpsg::util::mix2(5, it)).colorful)
+            .collect();
+        for mode in [ModeSelect::Naive, ModeSelect::Pipeline, ModeSelect::AdaptiveLb] {
+            for ranks in [2, 7] {
+                let cfg = RunConfig {
+                    n_ranks: ranks,
+                    mode,
+                    n_iterations: 2,
+                    seed: 5,
+                    ..RunConfig::default()
+                };
+                let r = DistributedRunner::new(&t, &g, cfg).run();
+                for (it, (a, b)) in r.colorful.iter().zip(&reference).enumerate() {
+                    let rel = (a - b).abs() / b.abs().max(1.0);
+                    assert!(
+                        rel < 1e-3,
+                        "{tpl} {mode:?} P={ranks} iter{it}: {a} vs {b}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Property-style sweep: random graph/template/mode/rank combinations
+/// keep the invariant.
+#[test]
+fn prop_distributed_invariance() {
+    prop::check("dist_invariance", |gen| {
+        let n = gen.usize_in(20, 150);
+        let m = gen.usize_in(n, 6 * n) as u64;
+        let skew = gen.usize_in(1, 8) as u32;
+        let g = generate(&RmatParams::with_skew(n, m, skew, gen.case_seed));
+        let tpl = *gen.pick(&["u3-1", "u5-2", "u7-2"]);
+        let ranks = gen.usize_in(1, 6);
+        let mode = *gen.pick(&[
+            ModeSelect::Naive,
+            ModeSelect::Pipeline,
+            ModeSelect::Adaptive,
+            ModeSelect::AdaptiveLb,
+        ]);
+        let t = builtin(tpl).unwrap();
+        let seed = gen.case_seed ^ 0xABCD;
+        let single = Engine::new(&t)
+            .run_iteration(&g, harpsg::util::mix2(seed, 0))
+            .colorful;
+        let cfg = RunConfig {
+            n_ranks: ranks,
+            mode,
+            n_iterations: 1,
+            seed,
+            task_size: gen.usize_in(1, 100) as u32,
+            n_threads: gen.usize_in(1, 48),
+            ..RunConfig::default()
+        };
+        let r = DistributedRunner::new(&t, &g, cfg).run();
+        let rel = (r.colorful[0] - single).abs() / single.abs().max(1.0);
+        if rel < 1e-3 {
+            Ok(())
+        } else {
+            Err(format!(
+                "{tpl} {mode:?} P={ranks}: {} vs {single}",
+                r.colorful[0]
+            ))
+        }
+    });
+}
+
+/// End-to-end estimator accuracy against the exact count.
+#[test]
+fn estimator_converges_distributed() {
+    let g = generate(&RmatParams::with_skew(48, 220, 1, 3));
+    let t = builtin("u5-2").unwrap();
+    let truth = count_embeddings(&t, &g);
+    assert!(truth > 0.0);
+    let cfg = RunConfig {
+        n_ranks: 4,
+        n_iterations: 800,
+        seed: 11,
+        ..RunConfig::default()
+    };
+    let r = DistributedRunner::new(&t, &g, cfg).run();
+    let rel = (r.estimate - truth).abs() / truth;
+    assert!(rel < 0.2, "estimate {} vs exact {truth} (rel {rel})", r.estimate);
+}
+
+/// All ten builtin templates run through the full stack without panicking
+/// and yield finite estimates (tiny workload).
+#[test]
+fn all_templates_run_end_to_end() {
+    let g = generate(&RmatParams::with_skew(64, 600, 3, 21));
+    for tpl in BUILTIN_NAMES {
+        let t = builtin(tpl).unwrap();
+        let cfg = RunConfig {
+            n_ranks: 3,
+            n_iterations: 1,
+            ..RunConfig::default()
+        };
+        let r = DistributedRunner::new(&t, &g, cfg).run();
+        assert!(r.estimate.is_finite(), "{tpl}");
+        assert!(r.model.total > 0.0, "{tpl}");
+        assert!(r.peak_mem() > 0, "{tpl}");
+    }
+}
+
+/// The XLA engine (PJRT artifacts) produces identical counts to the
+/// native engine through the full distributed stack.
+#[test]
+fn xla_engine_matches_native_end_to_end() {
+    let Ok(rt) = XlaRuntime::load_default() else {
+        eprintln!("skipping: run `make artifacts` first");
+        return;
+    };
+    let rt = std::sync::Arc::new(rt);
+    let g = Dataset::MiamiS.generate(4000);
+    for tpl in ["u3-1", "u5-2", "u7-2"] {
+        let t = builtin(tpl).unwrap();
+        let mk = |engine| RunConfig {
+            n_ranks: 3,
+            n_iterations: 2,
+            engine,
+            ..RunConfig::default()
+        };
+        let native = DistributedRunner::new(&t, &g, mk(EngineKind::Native)).run();
+        let mut xrun = DistributedRunner::new(&t, &g, mk(EngineKind::Xla));
+        xrun.xla = Some(XlaCombine::new(rt.clone()));
+        let xla = xrun.run();
+        for (a, b) in native.colorful.iter().zip(&xla.colorful) {
+            let rel = (a - b).abs() / b.abs().max(1.0);
+            assert!(rel < 1e-4, "{tpl}: native {a} vs xla {b}");
+        }
+    }
+}
+
+/// Peak memory: the pipelined exchange must beat the bulk exchange on
+/// every large template (Fig 12's invariant).
+#[test]
+fn pipeline_memory_dominance() {
+    let g = generate(&RmatParams::with_skew(400, 8_000, 3, 31));
+    for tpl in ["u10-2", "u12-1", "u12-2"] {
+        let t = builtin(tpl).unwrap();
+        let run = |mode| {
+            let cfg = RunConfig {
+                n_ranks: 8,
+                mode,
+                n_iterations: 1,
+                ..RunConfig::default()
+            };
+            DistributedRunner::new(&t, &g, cfg).run().peak_mem()
+        };
+        let naive = run(ModeSelect::Naive);
+        let pipe = run(ModeSelect::Pipeline);
+        assert!(
+            (pipe as f64) < naive as f64 * 0.95,
+            "{tpl}: pipeline {pipe} !< naive {naive}"
+        );
+    }
+}
+
+/// Estimates must be deterministic given a seed (full stack).
+#[test]
+fn runs_are_reproducible() {
+    let g = generate(&RmatParams::with_skew(128, 900, 3, 8));
+    let t = builtin("u7-2").unwrap();
+    let mk = || RunConfig {
+        n_ranks: 5,
+        n_iterations: 3,
+        seed: 77,
+        ..RunConfig::default()
+    };
+    let a = DistributedRunner::new(&t, &g, mk()).run();
+    let b = DistributedRunner::new(&t, &g, mk()).run();
+    assert_eq!(a.colorful, b.colorful);
+    assert_eq!(a.estimate, b.estimate);
+    assert_eq!(a.peak_mem_per_rank, b.peak_mem_per_rank);
+}
