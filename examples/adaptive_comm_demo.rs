@@ -1,11 +1,14 @@
 //! Adaptive-Group communication demo: shows the mode switch, the ring
 //! schedule, and the measured overlap ratio ρ for small vs large
-//! templates — the mechanism behind Figs 8/9.
+//! templates — the mechanism behind Figs 8/9. The measured section runs
+//! through one `api::Session`, so all four templates share one partition
+//! and request-list build.
 //!
 //!     cargo run --release --example adaptive_comm_demo
 
+use harpsg::api::{CountJob, Session};
 use harpsg::comm::{CommMode, Schedule};
-use harpsg::coordinator::{DistributedRunner, ModeSelect, RunConfig};
+use harpsg::coordinator::ModeSelect;
 use harpsg::graph::Dataset;
 use harpsg::template::{builtin, complexity};
 
@@ -38,20 +41,21 @@ fn main() {
     }
 
     println!("\n== measured overlap ratio ρ (pipeline forced) ==");
-    let g = Dataset::R500K3.generate(8000);
+    let session = Session::new(Dataset::R500K3.generate(8000));
     for (name, ranks) in [("u5-2", 8), ("u10-2", 8), ("u12-2", 8), ("u12-1", 8)] {
-        let t = builtin(name).unwrap();
-        let cfg = RunConfig {
-            n_ranks: ranks,
-            mode: ModeSelect::Pipeline,
-            ..RunConfig::default()
-        };
-        let r = DistributedRunner::new(&t, &g, cfg).run();
+        let job = CountJob::of_builtin(name)
+            .expect("builtin")
+            .ranks(ranks)
+            .mode(ModeSelect::Pipeline)
+            .build()
+            .expect("valid job");
+        let r = session.count(&job).expect("count");
         println!(
-            "  {:7} P={ranks}: mean ρ = {:.3}  (comm exposed {:.0}% of total)",
+            "  {:7} P={ranks}: mean ρ = {:.3}  (comm exposed {:.0}% of total, setup {})",
             name,
             r.model.mean_rho(),
-            100.0 * r.model.comm_ratio()
+            100.0 * r.model.comm_ratio(),
+            if r.setup_reused { "reused" } else { "built" }
         );
     }
     println!("\nhigh-intensity templates hide their transfers; small ones can't —");

@@ -2,9 +2,10 @@
 //! a real small workload, proving all layers compose.
 //!
 //! 1. generates the Twitter analog (Table 2 scaled — DESIGN.md §1);
-//! 2. counts u10-2 with the full coordinator stack (Adaptive-Group
-//!    pipeline + neighbor-list partitioning) vs the MPI-Fascia baseline —
-//!    the paper's headline: ≥2x at u10-2, ~5x at u12-2;
+//! 2. counts u10-2 with the full coordinator stack via `api::Session`
+//!    (Adaptive-Group pipeline + neighbor-list partitioning) vs the
+//!    MPI-Fascia baseline — the paper's headline: ≥2x at u10-2, ~5x at
+//!    u12-2;
 //! 3. re-runs a small template through the **XLA engine**: the combine hot
 //!    spot executes in the AOT-compiled JAX/Pallas artifact via PJRT, and
 //!    must agree with the native engine bit-for-bit on the colorful counts;
@@ -12,12 +13,11 @@
 //!
 //!     make artifacts && cargo run --release --example e2e_twitter_analog
 
+use harpsg::api::{CountJob, PartitionKind, Session, SessionOptions};
 use harpsg::baseline::run_fascia;
-use harpsg::coordinator::{DistributedRunner, EngineKind, ModeSelect, RunConfig};
+use harpsg::coordinator::{EngineKind, ModeSelect};
 use harpsg::graph::{degree_stats, Dataset};
-use harpsg::runtime::{XlaCombine, XlaRuntime};
 use harpsg::template::builtin;
-use std::sync::Arc;
 
 fn main() {
     let scale = 20_000; // Twitter/20000 ≈ 2.2K vertices, 100K edges
@@ -29,16 +29,18 @@ fn main() {
         st.n_vertices, st.n_edges, st.avg_degree, st.max_degree, st.skewness
     );
 
-    // ---- headline: AdaptiveLB vs MPI-Fascia on u10-2 ----
+    let session = Session::new(g.clone());
+
+    // ---- headline: AdaptiveLB vs MPI-Fascia on u10-2 / u12-2 ----
     for tpl_name in ["u10-2", "u12-2"] {
         let t = builtin(tpl_name).unwrap();
-        let cfg = RunConfig {
-            n_ranks: 16,
-            n_iterations: 1,
-            mode: ModeSelect::AdaptiveLb,
-            ..RunConfig::default()
-        };
-        let ours = DistributedRunner::new(&t, &g, cfg).run();
+        let job = CountJob::builder(t.clone())
+            .ranks(16)
+            .iterations(1)
+            .mode(ModeSelect::AdaptiveLb)
+            .build()
+            .expect("valid job");
+        let ours = session.count(&job).expect("count");
         let fascia = run_fascia(&t, &g, 16, scale, 42);
         println!("\n== {tpl_name} on 16 ranks ==");
         println!(
@@ -70,21 +72,27 @@ fn main() {
 
     // ---- the three-layer path: XLA engine via PJRT artifacts ----
     println!("\n== XLA engine (AOT JAX/Pallas combine via PJRT) ==");
-    match XlaRuntime::load_default() {
-        Ok(rt) => {
-            let rt = Arc::new(rt);
-            println!("   platform: {}, artifacts: {}", rt.platform, rt.manifest.entries.len());
+    let xla_session = Session::with_options(
+        g,
+        SessionOptions {
+            seed: 42,
+            partition: PartitionKind::Random,
+            load_xla: true,
+        },
+    );
+    match xla_session {
+        Ok(xs) => {
             let t = builtin("u5-2").unwrap();
-            let mk = |engine| RunConfig {
-                n_ranks: 4,
-                n_iterations: 2,
-                engine,
-                ..RunConfig::default()
+            let mk = |engine| {
+                CountJob::builder(t.clone())
+                    .ranks(4)
+                    .iterations(2)
+                    .engine(engine)
+                    .build()
+                    .expect("valid job")
             };
-            let native = DistributedRunner::new(&t, &g, mk(EngineKind::Native)).run();
-            let mut xruner = DistributedRunner::new(&t, &g, mk(EngineKind::Xla));
-            xruner.xla = Some(XlaCombine::new(rt));
-            let xla = xruner.run();
+            let native = xs.count(&mk(EngineKind::Native)).expect("native run");
+            let xla = xs.count(&mk(EngineKind::Xla)).expect("xla run");
             for (i, (n, x)) in native.colorful.iter().zip(&xla.colorful).enumerate() {
                 println!("   iter {i}: native colorful {n}, xla colorful {x}");
                 assert!(

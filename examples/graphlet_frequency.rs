@@ -3,11 +3,16 @@
 //! Bressan et al. (WSDM'17) use exactly this treelet kernel to push GFD to
 //! larger graphs/templates.
 //!
+//! This is the facade's batch showcase: `Session::count_batch` runs the
+//! whole family against one shared partition/request-list build, and the
+//! per-report setup accounting shows the amortization win over fresh
+//! per-template setup.
+//!
 //!     cargo run --release --example graphlet_frequency -- [dataset] [scale]
 
-use harpsg::coordinator::{DistributedRunner, ModeSelect, RunConfig};
+use harpsg::api::{CountJob, JobReport, Session};
+use harpsg::coordinator::ModeSelect;
 use harpsg::graph::{degree_stats, Dataset};
-use harpsg::template::{builtin, complexity};
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -32,28 +37,47 @@ fn main() {
     );
 
     let family = ["u3-1", "u5-2", "u7-2", "u10-2"];
-    let mut rows = Vec::new();
-    for name in family {
-        let t = builtin(name).unwrap();
-        let cfg = RunConfig {
-            n_ranks: 8,
-            n_iterations: 8,
-            mode: ModeSelect::AdaptiveLb,
-            ..RunConfig::default()
-        };
-        let r = DistributedRunner::new(&t, &g, cfg).run();
-        rows.push((name, r.estimate, r.model.total));
-    }
-    let total: f64 = rows.iter().map(|(_, e, _)| e).sum();
-    println!("\n{:>8} {:>16} {:>10} {:>12} {:>10}", "template", "estimate", "share", "model s/it", "intensity");
-    for (name, est, time) in rows {
+    let session = Session::new(g);
+    let jobs: Vec<_> = family
+        .iter()
+        .map(|name| {
+            CountJob::of_builtin(name)
+                .expect("builtin template")
+                .ranks(8)
+                .iterations(8)
+                .mode(ModeSelect::AdaptiveLb)
+                .build()
+                .expect("valid job")
+        })
+        .collect();
+    let reports = session.count_batch(&jobs).expect("batch");
+
+    let total: f64 = reports.iter().map(|r| r.estimate).sum();
+    println!(
+        "\n{:>8} {:>16} {:>10} {:>12} {:>10} {:>10}",
+        "template", "estimate", "share", "model s/it", "intensity", "setup"
+    );
+    for r in &reports {
         println!(
-            "{:>8} {:>16.3e} {:>9.2}% {:>12.4} {:>10.1}",
-            name,
-            est,
-            100.0 * est / total,
-            time,
-            complexity(&builtin(name).unwrap()).intensity
+            "{:>8} {:>16.3e} {:>9.2}% {:>12.4} {:>10.1} {:>10}",
+            r.template,
+            r.estimate,
+            100.0 * r.estimate / total,
+            r.model.total,
+            r.complexity.intensity,
+            if r.setup_reused { "reused" } else { "built" }
         );
     }
+    let built: f64 = reports
+        .iter()
+        .filter(|r| !r.setup_reused)
+        .map(|r| r.setup_seconds)
+        .sum();
+    println!(
+        "\nsession amortization: 1 partition/request-list build ({:.1} ms) served {} templates",
+        built * 1e3,
+        reports.len()
+    );
+    println!("\nCSV (JobReport::series_of):");
+    print!("{}", JobReport::series_of(&reports).to_csv());
 }

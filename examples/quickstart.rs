@@ -1,10 +1,12 @@
 //! Quickstart: estimate treelet counts on a small R-MAT graph and compare
-//! against the exact brute-force count.
+//! against the exact brute-force count — first single-rank, then through
+//! the `harpsg::api` facade (a `Session` running a validated `CountJob`).
 //!
 //!     cargo run --release --example quickstart
 
+use harpsg::api::{CountJob, Session, SessionOptions};
 use harpsg::colorcount::{count_embeddings, estimate, Engine};
-use harpsg::coordinator::{DistributedRunner, ModeSelect, RunConfig};
+use harpsg::coordinator::ModeSelect;
 use harpsg::graph::{degree_stats, rmat::generate, RmatParams};
 use harpsg::template::builtin;
 
@@ -33,16 +35,18 @@ fn main() {
         100.0 * (est.value - truth) / truth
     );
 
-    // the same estimate through the distributed coordinator (8 simulated
-    // ranks, pipelined Adaptive-Group exchange, neighbor-list partitioned
-    // tasks) — identical counting semantics, plus the model clock
-    let cfg = RunConfig {
-        n_ranks: 8,
-        n_iterations: 50,
-        mode: ModeSelect::AdaptiveLb,
-        ..RunConfig::default()
-    };
-    let res = DistributedRunner::new(&t, &g, cfg).run();
+    // the same estimate through the facade (8 simulated ranks, pipelined
+    // Adaptive-Group exchange, neighbor-list partitioned tasks) —
+    // identical counting semantics, plus the model clock and a
+    // serializable report
+    let session = Session::with_options(g, SessionOptions::default()).expect("session");
+    let job = CountJob::builder(t)
+        .ranks(8)
+        .iterations(50)
+        .mode(ModeSelect::AdaptiveLb)
+        .build()
+        .expect("valid job");
+    let res = session.count(&job).expect("count");
     println!(
         "distributed estimate (8 ranks, 50 iters): {:.0} (error {:+.1}%)",
         res.estimate,
@@ -54,4 +58,6 @@ fn main() {
         100.0 * (1.0 - res.model.comm_ratio()),
         res.peak_mem() as f64 / 1024.0
     );
+    println!("\nmachine-readable report (harpsg count --json prints the same):");
+    println!("{}", res.to_json_string());
 }

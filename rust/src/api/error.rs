@@ -1,0 +1,78 @@
+//! The typed error surface of the facade. Library paths that used to
+//! return stringly `anyhow` errors now classify failures so callers (the
+//! CLI, future services) can branch on them; `HarpsgError` still converts
+//! into `anyhow::Error` at the binary boundary because it implements
+//! `std::error::Error`.
+
+use std::fmt;
+
+/// Every way the `harpsg::api` surface can fail.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum HarpsgError {
+    /// a `CountJob` builder field failed validation
+    InvalidJob(String),
+    /// a config file or CLI value could not be parsed
+    Parse(String),
+    /// an unknown communication mode name
+    UnknownMode(String),
+    /// an unknown combine engine name
+    UnknownEngine(String),
+    /// an unknown config key or CLI flag
+    UnknownFlag(String),
+    /// the same CLI flag was passed twice
+    DuplicateFlag(String),
+    /// a flag without its value, or a required flag/key absent
+    MissingValue(String),
+    /// template name not in the builtin library and not a readable file
+    Template(String),
+    /// the requested engine cannot run (e.g. XLA without artifacts)
+    EngineUnavailable(String),
+    /// an I/O failure, annotated with the path involved
+    Io(String),
+}
+
+impl fmt::Display for HarpsgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HarpsgError::InvalidJob(m) => write!(f, "invalid job: {m}"),
+            HarpsgError::Parse(m) => write!(f, "parse error: {m}"),
+            HarpsgError::UnknownMode(m) => {
+                write!(f, "unknown mode `{m}` (naive|pipeline|adaptive|adaptive-lb)")
+            }
+            HarpsgError::UnknownEngine(m) => write!(f, "unknown engine `{m}` (native|xla)"),
+            HarpsgError::UnknownFlag(m) => write!(f, "unknown flag or key `{m}`"),
+            HarpsgError::DuplicateFlag(m) => write!(f, "flag `{m}` given more than once"),
+            HarpsgError::MissingValue(m) => write!(f, "missing value: {m}"),
+            HarpsgError::Template(m) => write!(f, "template error: {m}"),
+            HarpsgError::EngineUnavailable(m) => write!(f, "engine unavailable: {m}"),
+            HarpsgError::Io(m) => write!(f, "io error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for HarpsgError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn displays_are_actionable() {
+        let e = HarpsgError::UnknownMode("warp".into());
+        assert!(e.to_string().contains("warp"));
+        assert!(e.to_string().contains("adaptive-lb"));
+        let e = HarpsgError::DuplicateFlag("--ranks".into());
+        assert!(e.to_string().contains("--ranks"));
+    }
+
+    #[test]
+    fn converts_into_anyhow() {
+        fn through_anyhow() -> anyhow::Result<u32> {
+            let v: Result<u32, HarpsgError> = Err(HarpsgError::InvalidJob("ranks".into()));
+            let v = v?;
+            Ok(v + 1)
+        }
+        let e = through_anyhow().unwrap_err();
+        assert!(format!("{e:#}").contains("invalid job: ranks"));
+    }
+}

@@ -1,0 +1,277 @@
+//! Typed, validated counting jobs. `CountJob` is the only way work enters
+//! a [`super::Session`]: the builder checks every cross-field consistency
+//! rule up front so the coordinator never has to panic on a bad config.
+
+use super::error::HarpsgError;
+use crate::comm::{AdaptivePolicy, HockneyParams};
+use crate::coordinator::{EngineKind, ModeSelect, RunConfig};
+use crate::template::{builtin, Template};
+
+/// A validated request to count one template. Construct with
+/// [`CountJob::builder`]; run with [`super::Session::count`].
+///
+/// ```no_run
+/// use harpsg::api::{CountJob, Session};
+/// use harpsg::graph::Dataset;
+/// use harpsg::template::builtin;
+///
+/// let session = Session::new(Dataset::R500K3.generate(2000));
+/// let job = CountJob::builder(builtin("u5-2").unwrap())
+///     .ranks(8)
+///     .iterations(4)
+///     .build()
+///     .unwrap();
+/// let report = session.count(&job).unwrap();
+/// println!("{}", report.to_json_string());
+/// ```
+#[derive(Debug, Clone)]
+pub struct CountJob {
+    pub template: Template,
+    pub(crate) cfg: RunConfig,
+    pub(crate) group_size: Option<usize>,
+}
+
+impl CountJob {
+    /// Start a builder for `template` with the crate defaults
+    /// (`RunConfig::default()`).
+    pub fn builder(template: Template) -> CountJobBuilder {
+        CountJobBuilder {
+            template,
+            cfg: RunConfig::default(),
+            group_size: None,
+            task_size_set: false,
+        }
+    }
+
+    /// Convenience: builder for a builtin template by its paper name.
+    pub fn of_builtin(name: &str) -> Result<CountJobBuilder, HarpsgError> {
+        let t = builtin(name).map_err(|e| HarpsgError::Template(format!("{e:#}")))?;
+        Ok(Self::builder(t))
+    }
+
+    /// The validated run configuration.
+    pub fn config(&self) -> &RunConfig {
+        &self.cfg
+    }
+}
+
+/// Builder for [`CountJob`]; every setter is chainable and `build()`
+/// performs the validation.
+#[derive(Debug, Clone)]
+pub struct CountJobBuilder {
+    template: Template,
+    cfg: RunConfig,
+    group_size: Option<usize>,
+    task_size_set: bool,
+}
+
+impl CountJobBuilder {
+    /// Number of simulated ranks (≥ 1).
+    pub fn ranks(mut self, n: usize) -> Self {
+        self.cfg.n_ranks = n;
+        self
+    }
+
+    /// Virtual threads per rank for the replay model (≥ 1).
+    pub fn threads(mut self, n: usize) -> Self {
+        self.cfg.n_threads = n;
+        self
+    }
+
+    /// Color-coding iterations (≥ 1).
+    pub fn iterations(mut self, n: usize) -> Self {
+        self.cfg.n_iterations = n;
+        self
+    }
+
+    /// Coloring seed (the partition seed belongs to the session).
+    pub fn seed(mut self, s: u64) -> Self {
+        self.cfg.seed = s;
+        self
+    }
+
+    /// Table-1 mode (Naive / Pipeline / Adaptive / AdaptiveLB).
+    pub fn mode(mut self, m: ModeSelect) -> Self {
+        self.cfg.mode = m;
+        self
+    }
+
+    /// Combine backend; `EngineKind::Xla` additionally requires the
+    /// session to have been opened with `load_xla`.
+    pub fn engine(mut self, e: EngineKind) -> Self {
+        self.cfg.engine = e;
+        self
+    }
+
+    /// Alg-4 neighbor-list task size — only meaningful for
+    /// `ModeSelect::AdaptiveLb` (validated in `build`).
+    pub fn task_size(mut self, s: u32) -> Self {
+        self.cfg.task_size = s;
+        self.task_size_set = true;
+        self
+    }
+
+    /// Per-rank modeled memory budget in bytes.
+    pub fn mem_limit(mut self, bytes: u64) -> Self {
+        self.cfg.mem_limit = Some(bytes);
+        self
+    }
+
+    /// Hockney network parameters for the model clock.
+    pub fn net(mut self, net: HockneyParams) -> Self {
+        self.cfg.net = net;
+        self
+    }
+
+    /// Adaptive-switch tunables (intensity threshold, flop time).
+    pub fn policy(mut self, policy: AdaptivePolicy) -> Self {
+        self.cfg.policy = policy;
+        self
+    }
+
+    /// Ablation hook: force the ring group size (1 ≤ g ≤ ranks-1).
+    pub fn group_size(mut self, g: usize) -> Self {
+        self.group_size = Some(g);
+        self
+    }
+
+    /// Replace the whole `RunConfig` wholesale — the escape hatch for the
+    /// CLI's `run --config` path, which already parsed a full config.
+    /// Field-level setters applied *after* this still work; validation in
+    /// `build()` applies either way.
+    pub fn config(mut self, cfg: RunConfig) -> Self {
+        self.cfg = cfg;
+        self.task_size_set = false;
+        self
+    }
+
+    /// Validate and seal the job.
+    pub fn build(self) -> Result<CountJob, HarpsgError> {
+        let cfg = &self.cfg;
+        if cfg.n_ranks == 0 {
+            return Err(HarpsgError::InvalidJob("n_ranks must be ≥ 1".into()));
+        }
+        if cfg.n_ranks > u16::MAX as usize {
+            return Err(HarpsgError::InvalidJob(format!(
+                "n_ranks {} exceeds the partition limit of {}",
+                cfg.n_ranks,
+                u16::MAX
+            )));
+        }
+        if cfg.n_threads == 0 {
+            return Err(HarpsgError::InvalidJob("n_threads must be ≥ 1".into()));
+        }
+        if cfg.n_iterations == 0 {
+            return Err(HarpsgError::InvalidJob("n_iterations must be ≥ 1".into()));
+        }
+        if cfg.phys_cores == 0 {
+            return Err(HarpsgError::InvalidJob("phys_cores must be ≥ 1".into()));
+        }
+        if cfg.mode == ModeSelect::AdaptiveLb && cfg.task_size == 0 {
+            return Err(HarpsgError::InvalidJob(
+                "adaptive-lb needs task_size ≥ 1 (neighbor-list partitioning granularity)".into(),
+            ));
+        }
+        if self.task_size_set && cfg.mode != ModeSelect::AdaptiveLb {
+            return Err(HarpsgError::InvalidJob(format!(
+                "task_size only applies to adaptive-lb; mode is {}",
+                cfg.mode.flag()
+            )));
+        }
+        if let Some(g) = self.group_size {
+            if g == 0 {
+                return Err(HarpsgError::InvalidJob("group_size must be ≥ 1".into()));
+            }
+            if cfg.n_ranks < 2 || g > cfg.n_ranks - 1 {
+                return Err(HarpsgError::InvalidJob(format!(
+                    "group_size {g} out of range for {} ranks (1..={})",
+                    cfg.n_ranks,
+                    cfg.n_ranks.saturating_sub(1)
+                )));
+            }
+        }
+        Ok(CountJob {
+            template: self.template,
+            cfg: self.cfg,
+            group_size: self.group_size,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn base() -> CountJobBuilder {
+        CountJob::of_builtin("u5-2").unwrap()
+    }
+
+    #[test]
+    fn defaults_build() {
+        let job = base().build().unwrap();
+        assert_eq!(job.config().n_ranks, RunConfig::default().n_ranks);
+        assert_eq!(job.template.name, "u5-2");
+    }
+
+    #[test]
+    fn rejects_zero_ranks_threads_iterations() {
+        assert!(matches!(
+            base().ranks(0).build(),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        assert!(matches!(
+            base().threads(0).build(),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        assert!(matches!(
+            base().iterations(0).build(),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_oversized_rank_count() {
+        let err = base().ranks(70_000).build().unwrap_err();
+        assert!(matches!(err, HarpsgError::InvalidJob(_)));
+        assert!(err.to_string().contains("partition limit"));
+    }
+
+    #[test]
+    fn task_size_mode_consistency() {
+        // adaptive-lb without granularity is inconsistent
+        assert!(base().mode(ModeSelect::AdaptiveLb).task_size(0).build().is_err());
+        // explicitly setting task size for a per-vertex mode is inconsistent
+        assert!(base().mode(ModeSelect::Naive).task_size(50).build().is_err());
+        // the valid combination passes
+        assert!(base()
+            .mode(ModeSelect::AdaptiveLb)
+            .task_size(40)
+            .build()
+            .is_ok());
+        // untouched defaults pass regardless of mode
+        assert!(base().mode(ModeSelect::Naive).build().is_ok());
+    }
+
+    #[test]
+    fn group_size_bounds() {
+        assert!(base().ranks(8).group_size(7).build().is_ok());
+        assert!(base().ranks(8).group_size(8).build().is_err());
+        assert!(base().ranks(8).group_size(0).build().is_err());
+        assert!(base().ranks(1).group_size(1).build().is_err());
+    }
+
+    #[test]
+    fn unknown_builtin_is_typed() {
+        assert!(matches!(
+            CountJob::of_builtin("u99-9"),
+            Err(HarpsgError::Template(_))
+        ));
+    }
+
+    #[test]
+    fn config_override_still_validated() {
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 0;
+        assert!(base().config(cfg).build().is_err());
+    }
+}

@@ -1,0 +1,57 @@
+//! # `harpsg::api` — the public facade
+//!
+//! The one entry point downstream users should need. Everything the crate
+//! can do — load a graph, validate a counting job, run it distributed,
+//! observe progress, serialize the result — is reachable from four types:
+//!
+//! * [`Session`] — owns a loaded [`crate::graph::Graph`] plus its
+//!   amortized per-rank-count exchange setup (partition, request lists,
+//!   neighbor-pair plans) and, optionally, the XLA runtime. Build once,
+//!   run many jobs: the multi-template sweeps of the figure harness and
+//!   the GFD example all reuse one plan per rank count.
+//! * [`CountJob`] — a validated, typed job built with
+//!   [`CountJob::builder`]; inconsistent configs (zero ranks, task sizes
+//!   on per-vertex modes, out-of-range ring group sizes, …) are rejected
+//!   at `build()` with a [`HarpsgError`], never at run time.
+//! * [`JobReport`] — the serializable result: estimate, model clock,
+//!   per-subtemplate comm decisions, thread stats, memory peaks; emits
+//!   JSON ([`JobReport::to_json_string`], what `harpsg count --json`
+//!   prints) and CSV ([`JobReport::series_of`]).
+//! * [`Progress`] — observer callbacks (per iteration, per subtemplate,
+//!   per exchange step) for CLIs and services that stream status.
+//!
+//! ```no_run
+//! use harpsg::api::{CountJob, Session};
+//! use harpsg::coordinator::ModeSelect;
+//! use harpsg::graph::Dataset;
+//!
+//! let session = Session::new(Dataset::TwitterS.generate(20_000));
+//! let jobs: Vec<_> = ["u3-1", "u5-2", "u7-2", "u10-2"]
+//!     .iter()
+//!     .map(|name| {
+//!         CountJob::of_builtin(name)
+//!             .unwrap()
+//!             .ranks(8)
+//!             .mode(ModeSelect::AdaptiveLb)
+//!             .iterations(8)
+//!             .build()
+//!             .unwrap()
+//!     })
+//!     .collect();
+//! // one partition + request-list build serves all four templates
+//! for report in session.count_batch(&jobs).unwrap() {
+//!     println!("{:8} {:.3e}", report.template, report.estimate);
+//! }
+//! ```
+
+pub mod error;
+pub mod job;
+pub mod progress;
+pub mod report;
+pub mod session;
+
+pub use error::HarpsgError;
+pub use job::{CountJob, CountJobBuilder};
+pub use progress::{Progress, StderrProgress};
+pub use report::JobReport;
+pub use session::{PartitionKind, Session, SessionOptions};

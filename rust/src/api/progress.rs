@@ -1,0 +1,49 @@
+//! Progress observation for long-running counting jobs. The coordinator
+//! invokes these callbacks synchronously from its run loop, so CLIs can
+//! stream status lines and services can push job state without polling.
+//! All methods have empty defaults — implement only what you need.
+
+/// Observer of a counting run. Implementations must be `Send + Sync`
+/// because a session may be driven from a worker thread; callbacks take
+/// `&self`, so use interior mutability (atomics, mutexes) for state.
+pub trait Progress: Send + Sync {
+    /// Called once before the first iteration. `n_subtemplates` is the
+    /// size of the partition DAG (leaves included).
+    fn on_run_start(&self, _n_iterations: usize, _n_subtemplates: usize) {}
+
+    /// Called at the start of every color-coding iteration.
+    fn on_iteration(&self, _iteration: usize, _n_iterations: usize) {}
+
+    /// Called before a non-leaf subtemplate combine. `n_steps` is the
+    /// exchange step count `W` (1 for all-to-all); `pipelined` says
+    /// whether the Adaptive-Group ring was chosen.
+    fn on_subtemplate_start(&self, _sub: usize, _n_steps: usize, _pipelined: bool) {}
+
+    /// Called after each exchange step of subtemplate `sub` completes on
+    /// every rank.
+    fn on_exchange_step(&self, _sub: usize, _step: usize, _n_steps: usize) {}
+
+    /// Called once a subtemplate's combine (local + exchange) is done.
+    fn on_subtemplate_done(&self, _sub: usize) {}
+
+    /// Called once after the last iteration.
+    fn on_run_end(&self) {}
+}
+
+/// A ready-made observer that prints one status line per subtemplate to
+/// stderr — what `harpsg count` attaches under `--progress`.
+#[derive(Debug, Default)]
+pub struct StderrProgress;
+
+impl Progress for StderrProgress {
+    fn on_iteration(&self, iteration: usize, n_iterations: usize) {
+        eprintln!("[harpsg] iteration {}/{n_iterations}", iteration + 1);
+    }
+
+    fn on_subtemplate_start(&self, sub: usize, n_steps: usize, pipelined: bool) {
+        eprintln!(
+            "[harpsg]   subtemplate {sub}: {} exchange, {n_steps} step(s)",
+            if pipelined { "ring" } else { "all-to-all" }
+        );
+    }
+}

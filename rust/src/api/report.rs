@@ -1,0 +1,274 @@
+//! Machine-readable run reports. `JobReport` is a strict superset of the
+//! coordinator's `RunResult`: it adds the template complexity, the
+//! per-subtemplate comm-mode decisions, the graph shape and the session
+//! setup accounting, and it serializes to JSON (via the in-repo
+//! `util::Json` writer) and CSV (via `metrics::Series`).
+
+use crate::coordinator::{CommDecision, ModelTime, RunResult, ThreadStats};
+use crate::graph::Graph;
+use crate::metrics::Series;
+use crate::template::{complexity, TemplateComplexity};
+use crate::util::Json;
+
+use super::job::CountJob;
+
+/// Everything a run produced, in one serializable value.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    /// template name (builtin id or file path)
+    pub template: String,
+    /// template vertex count k
+    pub k: usize,
+    /// Table-3 complexity (memory, computation, intensity)
+    pub complexity: TemplateComplexity,
+    pub graph_vertices: usize,
+    pub graph_edges: u64,
+    /// Table-1 mode name (e.g. "AdaptiveLB")
+    pub mode: String,
+    /// combine backend name ("native" | "xla")
+    pub engine: String,
+    pub n_ranks: usize,
+    pub n_threads: usize,
+    pub n_iterations: usize,
+    pub seed: u64,
+    pub task_size: u32,
+    /// the subgraph-count estimate (median of means over iterations)
+    pub estimate: f64,
+    /// per-iteration estimates
+    pub samples: Vec<f64>,
+    /// per-iteration raw colorful counts (exactness cross-checks)
+    pub colorful: Vec<f64>,
+    pub model: ModelTime,
+    /// exchange schedule chosen per non-leaf subtemplate
+    pub comm_decisions: Vec<CommDecision>,
+    pub threads: ThreadStats,
+    pub peak_mem_per_rank: Vec<u64>,
+    /// measured seconds per compute unit
+    pub flop_time: f64,
+    /// real single-core wall-clock of the run, seconds
+    pub real_seconds: f64,
+    pub oom: bool,
+    /// true when the session served the partition/request lists from its
+    /// cache instead of rebuilding them
+    pub setup_reused: bool,
+    /// seconds spent building or fetching the exchange plan
+    pub setup_seconds: f64,
+}
+
+impl JobReport {
+    pub(crate) fn from_run(
+        job: &CountJob,
+        g: &Graph,
+        r: RunResult,
+        setup_reused: bool,
+        setup_seconds: f64,
+    ) -> JobReport {
+        JobReport {
+            template: job.template.name.clone(),
+            k: job.template.size(),
+            complexity: complexity(&job.template),
+            graph_vertices: g.n_vertices(),
+            graph_edges: g.n_edges,
+            mode: job.cfg.mode.name().to_string(),
+            engine: job.cfg.engine.name().to_string(),
+            n_ranks: job.cfg.n_ranks,
+            n_threads: job.cfg.n_threads,
+            n_iterations: job.cfg.n_iterations,
+            seed: job.cfg.seed,
+            task_size: job.cfg.effective_task_size(),
+            estimate: r.estimate,
+            samples: r.samples,
+            colorful: r.colorful,
+            model: r.model,
+            comm_decisions: r.comm_decisions,
+            threads: r.threads,
+            peak_mem_per_rank: r.peak_mem_per_rank,
+            flop_time: r.flop_time,
+            real_seconds: r.real_seconds,
+            oom: r.oom,
+            setup_reused,
+            setup_seconds,
+        }
+    }
+
+    /// Largest per-rank peak, bytes (the Fig-12 quantity).
+    pub fn peak_mem(&self) -> u64 {
+        self.peak_mem_per_rank.iter().copied().max().unwrap_or(0)
+    }
+
+    /// The full report as a JSON value.
+    pub fn to_json(&self) -> Json {
+        let num_arr = |xs: &[f64]| Json::Arr(xs.iter().map(|&v| Json::Num(v)).collect());
+        Json::Obj(vec![
+            (
+                "template".into(),
+                Json::Obj(vec![
+                    ("name".into(), Json::Str(self.template.clone())),
+                    ("k".into(), Json::Num(self.k as f64)),
+                    ("memory".into(), Json::Num(self.complexity.memory as f64)),
+                    (
+                        "computation".into(),
+                        Json::Num(self.complexity.computation as f64),
+                    ),
+                    ("intensity".into(), Json::Num(self.complexity.intensity)),
+                ]),
+            ),
+            (
+                "graph".into(),
+                Json::Obj(vec![
+                    ("n_vertices".into(), Json::Num(self.graph_vertices as f64)),
+                    ("n_edges".into(), Json::Num(self.graph_edges as f64)),
+                ]),
+            ),
+            (
+                "config".into(),
+                Json::Obj(vec![
+                    ("mode".into(), Json::Str(self.mode.clone())),
+                    ("engine".into(), Json::Str(self.engine.clone())),
+                    ("ranks".into(), Json::Num(self.n_ranks as f64)),
+                    ("threads".into(), Json::Num(self.n_threads as f64)),
+                    ("iterations".into(), Json::Num(self.n_iterations as f64)),
+                    // string, not number: u64 seeds above 2^53 would lose
+                    // precision through a JSON double
+                    ("seed".into(), Json::Str(self.seed.to_string())),
+                    ("task_size".into(), Json::Num(self.task_size as f64)),
+                ]),
+            ),
+            ("estimate".into(), Json::Num(self.estimate)),
+            ("samples".into(), num_arr(&self.samples)),
+            ("colorful".into(), num_arr(&self.colorful)),
+            (
+                "model".into(),
+                Json::Obj(vec![
+                    ("total_s".into(), Json::Num(self.model.total)),
+                    ("comp_s".into(), Json::Num(self.model.comp)),
+                    ("comm_total_s".into(), Json::Num(self.model.comm_total)),
+                    ("comm_exposed_s".into(), Json::Num(self.model.comm_exposed)),
+                    ("straggler_s".into(), Json::Num(self.model.straggler)),
+                    ("comm_ratio".into(), Json::Num(self.model.comm_ratio())),
+                    ("mean_rho".into(), Json::Num(self.model.mean_rho())),
+                    (
+                        "rho_by_sub".into(),
+                        Json::Arr(
+                            self.model
+                                .rho_by_sub
+                                .iter()
+                                .map(|&(sub, rho)| {
+                                    Json::Obj(vec![
+                                        ("sub".into(), Json::Num(sub as f64)),
+                                        ("rho".into(), Json::Num(rho)),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ),
+                ]),
+            ),
+            (
+                "comm".into(),
+                Json::Arr(
+                    self.comm_decisions
+                        .iter()
+                        .map(|d| {
+                            Json::Obj(vec![
+                                ("sub".into(), Json::Num(d.sub as f64)),
+                                ("mode".into(), Json::Str(d.mode_name().to_string())),
+                                ("n_steps".into(), Json::Num(d.n_steps as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                "threads".into(),
+                Json::Obj(vec![
+                    (
+                        "avg_concurrency".into(),
+                        Json::Num(self.threads.avg_concurrency),
+                    ),
+                    (
+                        "concurrency_histogram".into(),
+                        num_arr(&self.threads.concurrency_histogram),
+                    ),
+                ]),
+            ),
+            (
+                "memory".into(),
+                Json::Obj(vec![
+                    (
+                        "peak_per_rank".into(),
+                        Json::Arr(
+                            self.peak_mem_per_rank
+                                .iter()
+                                .map(|&b| Json::Num(b as f64))
+                                .collect(),
+                        ),
+                    ),
+                    ("peak".into(), Json::Num(self.peak_mem() as f64)),
+                    ("oom".into(), Json::Bool(self.oom)),
+                ]),
+            ),
+            (
+                "time".into(),
+                Json::Obj(vec![
+                    ("real_seconds".into(), Json::Num(self.real_seconds)),
+                    ("flop_time".into(), Json::Num(self.flop_time)),
+                    ("setup_seconds".into(), Json::Num(self.setup_seconds)),
+                    ("setup_reused".into(), Json::Bool(self.setup_reused)),
+                ]),
+            ),
+        ])
+    }
+
+    /// The JSON report rendered to a string (what `harpsg count --json`
+    /// prints).
+    pub fn to_json_string(&self) -> String {
+        self.to_json().render()
+    }
+
+    /// Key metrics as a one-row `metrics::Series` (render with
+    /// `to_csv()`/`to_markdown()`); batch callers can merge rows from
+    /// several reports with [`JobReport::series_of`].
+    pub fn to_series(&self) -> Series {
+        Self::series_of(std::slice::from_ref(self))
+    }
+
+    /// One row per report, aligned columns — the CSV emitter for batch
+    /// sweeps.
+    pub fn series_of(reports: &[JobReport]) -> Series {
+        let mut s = Series::new(
+            "job reports",
+            &[
+                "k",
+                "intensity",
+                "estimate",
+                "model_total_s",
+                "comp_s",
+                "comm_exposed_s",
+                "mean_rho",
+                "peak_mem_mib",
+                "real_s",
+                "setup_s",
+            ],
+        );
+        s.precision = 6;
+        for r in reports {
+            s.push_row(
+                &r.template,
+                vec![
+                    r.k as f64,
+                    r.complexity.intensity,
+                    r.estimate,
+                    r.model.total,
+                    r.model.comp,
+                    r.model.comm_exposed,
+                    r.model.mean_rho(),
+                    r.peak_mem() as f64 / (1u64 << 20) as f64,
+                    r.real_seconds,
+                    r.setup_seconds,
+                ],
+            );
+        }
+        s
+    }
+}

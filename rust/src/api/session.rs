@@ -1,0 +1,272 @@
+//! The session: one loaded graph plus its amortized per-rank-count
+//! exchange plans (partition, request lists, neighbor-pair plans) and an
+//! optionally loaded XLA runtime, reused across every job it runs. This
+//! is the unit a long-lived counting service holds per graph.
+
+use super::error::HarpsgError;
+use super::job::CountJob;
+use super::progress::Progress;
+use super::report::JobReport;
+use crate::coordinator::{DistributedRunner, EngineKind, ExchangePlan};
+use crate::graph::Graph;
+use crate::runtime::{XlaCombine, XlaRuntime};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// How the session partitions vertices across ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PartitionKind {
+    /// hashed random partition (the paper's Eq-5 assumption; default)
+    Random,
+    /// contiguous blocks (ablation A2)
+    Block,
+}
+
+/// Session-level knobs. Jobs carry everything per-run (mode, iterations,
+/// coloring seed, …); the session owns what is shared across jobs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionOptions {
+    /// seed for the random partition (mixed exactly like the historical
+    /// per-runner path, so facade runs reproduce direct-runner runs)
+    pub seed: u64,
+    pub partition: PartitionKind,
+    /// load the AOT XLA artifacts at session creation; required before
+    /// any job may select `EngineKind::Xla`
+    pub load_xla: bool,
+}
+
+impl Default for SessionOptions {
+    fn default() -> Self {
+        SessionOptions {
+            seed: 42,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        }
+    }
+}
+
+/// A loaded graph plus its reusable distributed-run setup.
+///
+/// Building the exchange plan (partition + request lists + per-rank
+/// neighbor-pair plans) walks every edge of the graph and dominates the
+/// fixed cost of a run; the session builds it once per rank count and
+/// shares it across templates, which is what makes multi-template sweeps
+/// (GFD batches, the figure harness) cheap.
+pub struct Session {
+    graph: Graph,
+    opts: SessionOptions,
+    plans: Mutex<HashMap<usize, Arc<ExchangePlan>>>,
+    xla: Option<Arc<XlaRuntime>>,
+}
+
+impl Session {
+    /// Open a session with default options (random partition, seed 42,
+    /// no XLA). Never fails.
+    pub fn new(graph: Graph) -> Session {
+        Self::with_options(graph, SessionOptions::default())
+            .expect("default session options cannot fail")
+    }
+
+    /// Open a session with explicit options. Fails only when `load_xla`
+    /// is set and the PJRT artifacts cannot be loaded.
+    pub fn with_options(graph: Graph, opts: SessionOptions) -> Result<Session, HarpsgError> {
+        let xla = if opts.load_xla {
+            let rt = XlaRuntime::load_default()
+                .map_err(|e| HarpsgError::EngineUnavailable(format!("{e:#}")))?;
+            Some(Arc::new(rt))
+        } else {
+            None
+        };
+        Ok(Session {
+            graph,
+            opts,
+            plans: Mutex::new(HashMap::new()),
+            xla,
+        })
+    }
+
+    pub fn graph(&self) -> &Graph {
+        &self.graph
+    }
+
+    pub fn options(&self) -> &SessionOptions {
+        &self.opts
+    }
+
+    /// Whether the XLA runtime is attached (jobs may select
+    /// `EngineKind::Xla`).
+    pub fn xla_loaded(&self) -> bool {
+        self.xla.is_some()
+    }
+
+    /// The exchange plan for `n_ranks`, built on first use and cached.
+    /// Exposed so tests and tools can observe the reuse (`Arc::ptr_eq`).
+    pub fn plan(&self, n_ranks: usize) -> Arc<ExchangePlan> {
+        self.plan_with_reuse(n_ranks).0
+    }
+
+    /// Fetch-or-build under one lock acquisition so concurrent counts
+    /// agree on who built the plan (the bool is `true` when it came from
+    /// the cache).
+    fn plan_with_reuse(&self, n_ranks: usize) -> (Arc<ExchangePlan>, bool) {
+        let mut cache = self.plans.lock().unwrap();
+        match cache.get(&n_ranks) {
+            Some(plan) => (plan.clone(), true),
+            None => {
+                let plan = Arc::new(match self.opts.partition {
+                    PartitionKind::Random => {
+                        ExchangePlan::random(&self.graph, n_ranks, self.opts.seed)
+                    }
+                    PartitionKind::Block => ExchangePlan::block(&self.graph, n_ranks),
+                });
+                cache.insert(n_ranks, plan.clone());
+                (plan, false)
+            }
+        }
+    }
+
+    /// How many rank counts have a cached plan.
+    pub fn cached_plans(&self) -> usize {
+        self.plans.lock().unwrap().len()
+    }
+
+    /// Run one job to completion and return its report.
+    pub fn count(&self, job: &CountJob) -> Result<JobReport, HarpsgError> {
+        self.count_observed(job, None)
+    }
+
+    /// Run one job with a progress observer attached; the observer's
+    /// callbacks fire synchronously from the run loop.
+    pub fn count_with_progress(
+        &self,
+        job: &CountJob,
+        progress: Arc<dyn Progress>,
+    ) -> Result<JobReport, HarpsgError> {
+        self.count_observed(job, Some(progress))
+    }
+
+    /// Run several jobs against the shared setup. Reports come back in
+    /// input order; all jobs after the first on a given rank count show
+    /// `setup_reused = true`.
+    pub fn count_batch(&self, jobs: &[CountJob]) -> Result<Vec<JobReport>, HarpsgError> {
+        jobs.iter().map(|j| self.count(j)).collect()
+    }
+
+    fn count_observed(
+        &self,
+        job: &CountJob,
+        progress: Option<Arc<dyn Progress>>,
+    ) -> Result<JobReport, HarpsgError> {
+        if job.cfg.engine == EngineKind::Xla && self.xla.is_none() {
+            return Err(HarpsgError::EngineUnavailable(
+                "job selects the XLA engine but the session was opened without `load_xla`".into(),
+            ));
+        }
+        let t0 = Instant::now();
+        let (plan, reused) = self.plan_with_reuse(job.cfg.n_ranks);
+        let setup_seconds = t0.elapsed().as_secs_f64();
+
+        let mut runner = DistributedRunner::with_plan(
+            &job.template,
+            &self.graph,
+            job.cfg.clone(),
+            plan,
+        );
+        if let Some(g) = job.group_size {
+            runner.set_group_size(g);
+        }
+        if job.cfg.engine == EngineKind::Xla {
+            if let Some(rt) = &self.xla {
+                runner.xla = Some(XlaCombine::new(rt.clone()));
+            }
+        }
+        if let Some(p) = progress {
+            runner.set_progress(p);
+        }
+        let result = runner.run();
+        Ok(JobReport::from_run(
+            job,
+            &self.graph,
+            result,
+            reused,
+            setup_seconds,
+        ))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::CountJob;
+    use crate::graph::rmat::{generate, RmatParams};
+
+    fn graph() -> Graph {
+        generate(&RmatParams::with_skew(96, 500, 3, 5))
+    }
+
+    #[test]
+    fn plans_are_cached_per_rank_count() {
+        let s = Session::new(graph());
+        let a = s.plan(4);
+        let b = s.plan(4);
+        assert!(Arc::ptr_eq(&a, &b));
+        let c = s.plan(6);
+        assert!(!Arc::ptr_eq(&a, &c));
+        assert_eq!(s.cached_plans(), 2);
+    }
+
+    #[test]
+    fn xla_job_without_runtime_is_rejected() {
+        let s = Session::new(graph());
+        let job = CountJob::of_builtin("u3-1")
+            .unwrap()
+            .ranks(3)
+            .engine(EngineKind::Xla)
+            .build()
+            .unwrap();
+        assert!(matches!(
+            s.count(&job),
+            Err(HarpsgError::EngineUnavailable(_))
+        ));
+    }
+
+    #[test]
+    fn setup_reuse_is_reported() {
+        let s = Session::new(graph());
+        let job = CountJob::of_builtin("u3-1").unwrap().ranks(4).build().unwrap();
+        let first = s.count(&job).unwrap();
+        let second = s.count(&job).unwrap();
+        assert!(!first.setup_reused);
+        assert!(second.setup_reused);
+        assert_eq!(first.colorful, second.colorful);
+    }
+
+    #[test]
+    fn block_partition_sessions_differ_from_random() {
+        let g = graph();
+        let s_rand = Session::new(g.clone());
+        let s_block = Session::with_options(
+            g,
+            SessionOptions {
+                partition: PartitionKind::Block,
+                ..SessionOptions::default()
+            },
+        )
+        .unwrap();
+        // counting semantics are partition-invariant (up to float
+        // summation order)…
+        let job = CountJob::of_builtin("u5-2").unwrap().ranks(4).build().unwrap();
+        let a = s_rand.count(&job).unwrap();
+        let b = s_block.count(&job).unwrap();
+        for (x, y) in a.colorful.iter().zip(&b.colorful) {
+            let rel = (x - y).abs() / y.abs().max(1.0);
+            assert!(rel < 1e-3, "colorful {x} vs {y}");
+        }
+        // …but the layouts genuinely differ
+        assert_ne!(
+            s_rand.plan(4).part.locals[0],
+            s_block.plan(4).part.locals[0]
+        );
+    }
+}

@@ -5,9 +5,10 @@
 //! Supported TOML subset: `[section]` headers, `key = value` with string
 //! ("..."), integer, float and boolean values, `#` comments.
 
+use crate::api::HarpsgError;
 use crate::comm::HockneyParams;
 use crate::coordinator::{EngineKind, ModeSelect, RunConfig};
-use anyhow::{anyhow, bail, Context, Result};
+use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
 /// Parsed TOML-subset document: `section.key -> raw value` (top-level keys
@@ -100,6 +101,17 @@ impl Doc {
             _ => None,
         }
     }
+
+    /// Raw value access (lets callers distinguish "missing" from "wrong
+    /// type", which the permissive typed getters above cannot).
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    /// All keys present in the document (section-qualified).
+    pub fn keys(&self) -> impl Iterator<Item = &str> {
+        self.values.keys().map(|k| k.as_str())
+    }
 }
 
 /// A full experiment specification (what the CLI launches).
@@ -114,57 +126,133 @@ pub struct RunSpec {
     pub run: RunConfig,
 }
 
+/// The keys `RunSpec::from_doc` understands; anything else is a typo and
+/// is rejected with `HarpsgError::UnknownFlag` instead of being silently
+/// ignored.
+const KNOWN_KEYS: [&str; 14] = [
+    "template",
+    "dataset",
+    "scale",
+    "run.ranks",
+    "run.threads",
+    "run.task_size",
+    "run.iterations",
+    "run.seed",
+    "run.mode",
+    "run.engine",
+    "run.mem_limit_mb",
+    "net.alpha",
+    "net.beta",
+    "net.preset",
+];
+
+fn want_int(doc: &Doc, key: &str) -> Result<Option<i64>, HarpsgError> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(Value::Int(i)) => Ok(Some(*i)),
+        Some(other) => Err(HarpsgError::Parse(format!(
+            "`{key}`: expected an integer, got {other:?}"
+        ))),
+    }
+}
+
+fn want_str<'d>(doc: &'d Doc, key: &str) -> Result<Option<&'d str>, HarpsgError> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(Value::Str(s)) => Ok(Some(s)),
+        Some(other) => Err(HarpsgError::Parse(format!(
+            "`{key}`: expected a string, got {other:?}"
+        ))),
+    }
+}
+
+fn want_float(doc: &Doc, key: &str) -> Result<Option<f64>, HarpsgError> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(Value::Float(f)) => Ok(Some(*f)),
+        Some(Value::Int(i)) => Ok(Some(*i as f64)),
+        Some(other) => Err(HarpsgError::Parse(format!(
+            "`{key}`: expected a number, got {other:?}"
+        ))),
+    }
+}
+
+fn want_nonneg(doc: &Doc, key: &str) -> Result<Option<i64>, HarpsgError> {
+    match want_int(doc, key)? {
+        Some(v) if v < 0 => Err(HarpsgError::Parse(format!(
+            "`{key}`: must be non-negative, got {v}"
+        ))),
+        other => Ok(other),
+    }
+}
+
 impl RunSpec {
-    pub fn from_doc(doc: &Doc) -> Result<RunSpec> {
-        let template = doc
-            .str("template")
-            .context("missing `template`")?
+    pub fn from_doc(doc: &Doc) -> Result<RunSpec, HarpsgError> {
+        for key in doc.keys() {
+            if !KNOWN_KEYS.contains(&key) {
+                return Err(HarpsgError::UnknownFlag(key.to_string()));
+            }
+        }
+        let template = want_str(doc, "template")?
+            .ok_or_else(|| HarpsgError::MissingValue("config key `template`".into()))?
             .to_string();
-        let dataset = doc.str("dataset").context("missing `dataset`")?.to_string();
-        let scale = doc.int("scale").unwrap_or(500) as u32;
+        let dataset = want_str(doc, "dataset")?
+            .ok_or_else(|| HarpsgError::MissingValue("config key `dataset`".into()))?
+            .to_string();
+        let scale = want_nonneg(doc, "scale")?.unwrap_or(500) as u32;
         let mut run = RunConfig::default();
-        if let Some(p) = doc.int("run.ranks") {
+        if let Some(p) = want_nonneg(doc, "run.ranks")? {
             run.n_ranks = p as usize;
         }
-        if let Some(t) = doc.int("run.threads") {
+        if let Some(t) = want_nonneg(doc, "run.threads")? {
             run.n_threads = t as usize;
         }
-        if let Some(s) = doc.int("run.task_size") {
+        let task_size_set = want_nonneg(doc, "run.task_size")?;
+        if let Some(s) = task_size_set {
             run.task_size = s as u32;
         }
-        if let Some(n) = doc.int("run.iterations") {
+        if let Some(n) = want_nonneg(doc, "run.iterations")? {
             run.n_iterations = n as usize;
         }
-        if let Some(s) = doc.int("run.seed") {
+        if let Some(s) = want_nonneg(doc, "run.seed")? {
             run.seed = s as u64;
         }
-        if let Some(m) = doc.str("run.mode") {
-            run.mode = match m {
-                "naive" => ModeSelect::Naive,
-                "pipeline" => ModeSelect::Pipeline,
-                "adaptive" => ModeSelect::Adaptive,
-                "adaptive-lb" | "adaptivelb" => ModeSelect::AdaptiveLb,
-                other => bail!("unknown mode `{other}`"),
-            };
+        if let Some(m) = want_str(doc, "run.mode")? {
+            run.mode =
+                ModeSelect::parse(m).ok_or_else(|| HarpsgError::UnknownMode(m.to_string()))?;
         }
-        if let Some(e) = doc.str("run.engine") {
-            run.engine = match e {
-                "native" => EngineKind::Native,
-                "xla" => EngineKind::Xla,
-                other => bail!("unknown engine `{other}`"),
-            };
+        if let Some(e) = want_str(doc, "run.engine")? {
+            run.engine =
+                EngineKind::parse(e).ok_or_else(|| HarpsgError::UnknownEngine(e.to_string()))?;
         }
-        if let Some(a) = doc.float("net.alpha") {
+        if let Some(a) = want_float(doc, "net.alpha")? {
             run.net.alpha = a;
         }
-        if let Some(b) = doc.float("net.beta") {
+        if let Some(b) = want_float(doc, "net.beta")? {
             run.net.beta = b;
         }
-        if doc.str("net.preset") == Some("10gbe") {
-            run.net = HockneyParams::tengige();
+        if let Some(preset) = want_str(doc, "net.preset")? {
+            run.net = match preset {
+                "10gbe" => HockneyParams::tengige(),
+                "infiniband" => HockneyParams::infiniband(),
+                other => {
+                    return Err(HarpsgError::Parse(format!(
+                        "`net.preset`: unknown preset `{other}` (10gbe|infiniband)"
+                    )))
+                }
+            };
         }
-        if let Some(l) = doc.int("run.mem_limit_mb") {
+        if let Some(l) = want_nonneg(doc, "run.mem_limit_mb")? {
             run.mem_limit = Some((l as u64) << 20);
+        }
+        // the same mode/task-size consistency the CountJob builder
+        // enforces: an explicitly configured task size is meaningless
+        // outside adaptive-lb and should fail loudly, not be ignored
+        if task_size_set.is_some() && run.mode != ModeSelect::AdaptiveLb {
+            return Err(HarpsgError::InvalidJob(format!(
+                "`run.task_size` only applies to adaptive-lb; mode is {}",
+                run.mode.flag()
+            )));
         }
         Ok(RunSpec {
             template,
@@ -174,8 +262,9 @@ impl RunSpec {
         })
     }
 
-    pub fn parse(text: &str) -> Result<RunSpec> {
-        Self::from_doc(&Doc::parse(text)?)
+    pub fn parse(text: &str) -> Result<RunSpec, HarpsgError> {
+        let doc = Doc::parse(text).map_err(|e| HarpsgError::Parse(format!("{e:#}")))?;
+        Self::from_doc(&doc)
     }
 }
 
@@ -216,12 +305,81 @@ beta = 1.7e-10
     #[test]
     fn rejects_bad_mode() {
         let bad = SAMPLE.replace("adaptive-lb", "warp-drive");
-        assert!(RunSpec::parse(&bad).is_err());
+        assert!(matches!(
+            RunSpec::parse(&bad),
+            Err(HarpsgError::UnknownMode(m)) if m == "warp-drive"
+        ));
+    }
+
+    #[test]
+    fn rejects_bad_engine() {
+        let bad = SAMPLE.replace("\"native\"", "\"tpu\"");
+        assert!(matches!(
+            RunSpec::parse(&bad),
+            Err(HarpsgError::UnknownEngine(e)) if e == "tpu"
+        ));
     }
 
     #[test]
     fn missing_template_errors() {
-        assert!(RunSpec::parse("dataset = \"MI\"").is_err());
+        assert!(matches!(
+            RunSpec::parse("dataset = \"MI\""),
+            Err(HarpsgError::MissingValue(_))
+        ));
+    }
+
+    #[test]
+    fn rejects_unknown_keys() {
+        let bad = format!("{SAMPLE}\n[run]\nrnaks = 8\n");
+        assert!(matches!(
+            RunSpec::parse(&bad),
+            Err(HarpsgError::UnknownFlag(k)) if k == "run.rnaks"
+        ));
+    }
+
+    #[test]
+    fn rejects_wrong_value_types() {
+        // ranks as a string
+        let bad = SAMPLE.replace("ranks = 8", "ranks = \"eight\"");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        // template as an integer
+        let bad = SAMPLE.replace("template = \"u10-2\"", "template = 3");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        // negative iterations
+        let bad = SAMPLE.replace("iterations = 2", "iterations = -2");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        // alpha as a bool
+        let bad = SAMPLE.replace("alpha = 2e-6", "alpha = true");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn rejects_task_size_outside_adaptive_lb() {
+        let bad = SAMPLE.replace("mode = \"adaptive-lb\"", "mode = \"naive\"");
+        assert!(matches!(
+            RunSpec::parse(&bad),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        // dropping the explicit task_size makes the same mode valid
+        let ok = bad.replace("task_size = 50\n", "");
+        assert_eq!(RunSpec::parse(&ok).unwrap().run.mode, ModeSelect::Naive);
+    }
+
+    #[test]
+    fn rejects_unknown_net_preset() {
+        let spec = format!("{SAMPLE}\n[net]\npreset = \"carrier-pigeon\"\n");
+        assert!(matches!(RunSpec::parse(&spec), Err(HarpsgError::Parse(_))));
+        let ok = format!("{SAMPLE}\n[net]\npreset = \"10gbe\"\n");
+        let parsed = RunSpec::parse(&ok).unwrap();
+        assert_eq!(parsed.run.net, HockneyParams::tengige());
+    }
+
+    #[test]
+    fn doc_syntax_errors_are_typed() {
+        assert!(matches!(
+            RunSpec::parse("template = "),
+            Err(HarpsgError::Parse(_))
+        ));
     }
 
     #[test]

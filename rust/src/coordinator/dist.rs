@@ -16,17 +16,26 @@
 //! replay for computation (Fig 11), Hockney for transfers (Eq 8), and the
 //! pipeline algebra (Eq 9–14) for interleaving — which regenerates the
 //! paper's figures (DESIGN.md §1).
+//!
+//! The partition-derived exchange structures (request lists and the
+//! local/remote neighbor-pair plans) depend only on the graph and the
+//! partition — **not** on the template — so they are factored into
+//! [`ExchangePlan`]. `api::Session` builds one plan per rank count and
+//! shares it (via `Arc`) across every template counted on that graph,
+//! amortizing the dominant setup cost of multi-template sweeps.
 
 use super::memory::{MemClass, MemoryAccountant};
-use super::run::{EngineKind, ModelTime, RunConfig, RunResult, ThreadStats};
+use super::run::{CommDecision, EngineKind, ModelTime, RunConfig, RunResult, ThreadStats};
+use crate::api::Progress;
 use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
-use crate::colorcount::{init_leaf_table, median_of_means, Coloring, CountTable};
 use crate::colorcount::EngineContext;
+use crate::colorcount::{init_leaf_table, median_of_means, Coloring, CountTable};
 use crate::comm::{CommMode, Fabric, Packet, Schedule};
 use crate::graph::{Graph, Partition, RequestLists};
 use crate::pipeline::{naive, pipelined, PipelineReport, StepTiming};
 use crate::sched::{make_tasks, replay, TaskCostModel};
 use crate::template::{complexity, Template, TemplateComplexity};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Raw per-subtemplate model records in compute *units*; converted to
@@ -40,36 +49,25 @@ struct SubRecord {
     pipelined: bool,
 }
 
-pub struct DistributedRunner<'g> {
-    pub g: &'g Graph,
-    pub ctx: EngineContext,
-    pub cfg: RunConfig,
+/// Template-independent exchange setup for one (graph, partition) pair:
+/// the request lists plus, per rank, the precomputed local neighbor-pair
+/// list and the per-sender fold plans. Building this walks every edge of
+/// the graph once — the dominant fixed cost of a distributed run — so it
+/// is shared across templates via `Arc` (see `api::Session`).
+pub struct ExchangePlan {
     pub part: Partition,
     pub req: RequestLists,
-    pub tc: TemplateComplexity,
     /// per rank: (v_local_row, u_local_row) pairs with both endpoints local
-    local_pairs: Vec<Vec<(u32, u32)>>,
+    pub(crate) local_pairs: Vec<Vec<(u32, u32)>>,
     /// `plans[p][q]`: (v_local_row, row index in the buffer received from q)
-    plans: Vec<Vec<Vec<(u32, u32)>>>,
-    /// optional XLA combine backend (runtime::xla_engine), used when
-    /// `cfg.engine == EngineKind::Xla`
-    pub xla: Option<crate::runtime::XlaCombine>,
-    /// ablation hook: force a ring group size regardless of mode
-    group_override: Option<usize>,
+    pub(crate) plans: Vec<Vec<Vec<(u32, u32)>>>,
 }
 
-impl<'g> DistributedRunner<'g> {
-    pub fn new(t: &Template, g: &'g Graph, cfg: RunConfig) -> Self {
-        let part = Partition::random(g.n_vertices(), cfg.n_ranks, cfg.seed ^ 0x9a27);
-        Self::with_partition(t, g, cfg, part)
-    }
-
-    /// Build with an explicit partition (ablation A2 uses block layout).
-    pub fn with_partition(t: &Template, g: &'g Graph, cfg: RunConfig, part: Partition) -> Self {
-        let ctx = EngineContext::new(t);
-        let tc = complexity(t);
+impl ExchangePlan {
+    /// Build the exchange structures for an explicit partition.
+    pub fn build(g: &Graph, part: Partition) -> ExchangePlan {
         let req = RequestLists::build(g, &part);
-        let n_ranks = cfg.n_ranks;
+        let n_ranks = part.n_ranks;
         let mut local_pairs = vec![Vec::new(); n_ranks];
         let mut plans = vec![vec![Vec::new(); n_ranks]; n_ranks];
         for p in 0..n_ranks {
@@ -85,17 +83,78 @@ impl<'g> DistributedRunner<'g> {
                 }
             }
         }
+        ExchangePlan {
+            part,
+            req,
+            local_pairs,
+            plans,
+        }
+    }
+
+    /// The paper's default: a hashed random partition (seed-mixed exactly
+    /// like the historical `DistributedRunner::new` path).
+    pub fn random(g: &Graph, n_ranks: usize, seed: u64) -> ExchangePlan {
+        Self::build(g, Partition::random(g.n_vertices(), n_ranks, seed ^ 0x9a27))
+    }
+
+    /// Contiguous block partition (ablation A2).
+    pub fn block(g: &Graph, n_ranks: usize) -> ExchangePlan {
+        Self::build(g, Partition::block(g.n_vertices(), n_ranks))
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.part.n_ranks
+    }
+}
+
+pub struct DistributedRunner<'g> {
+    pub g: &'g Graph,
+    pub ctx: EngineContext,
+    pub cfg: RunConfig,
+    /// shared partition + request lists + neighbor-pair plans
+    pub plan: Arc<ExchangePlan>,
+    pub tc: TemplateComplexity,
+    /// optional XLA combine backend (runtime::xla_engine), used when
+    /// `cfg.engine == EngineKind::Xla`
+    pub xla: Option<crate::runtime::XlaCombine>,
+    /// ablation hook: force a ring group size regardless of mode
+    group_override: Option<usize>,
+    /// optional observer receiving per-iteration / per-subtemplate /
+    /// per-exchange-step callbacks (`api::Progress`)
+    progress: Option<Arc<dyn Progress>>,
+}
+
+impl<'g> DistributedRunner<'g> {
+    pub fn new(t: &Template, g: &'g Graph, cfg: RunConfig) -> Self {
+        let plan = Arc::new(ExchangePlan::random(g, cfg.n_ranks, cfg.seed));
+        Self::with_plan(t, g, cfg, plan)
+    }
+
+    /// Build with an explicit partition (ablation A2 uses block layout).
+    pub fn with_partition(t: &Template, g: &'g Graph, cfg: RunConfig, part: Partition) -> Self {
+        let plan = Arc::new(ExchangePlan::build(g, part));
+        Self::with_plan(t, g, cfg, plan)
+    }
+
+    /// Build on a prebuilt (usually session-cached) exchange plan. This is
+    /// the facade's amortized path: the plan is reused across templates.
+    pub fn with_plan(t: &Template, g: &'g Graph, cfg: RunConfig, plan: Arc<ExchangePlan>) -> Self {
+        assert_eq!(
+            plan.n_ranks(),
+            cfg.n_ranks,
+            "exchange plan was built for a different rank count"
+        );
+        let ctx = EngineContext::new(t);
+        let tc = complexity(t);
         DistributedRunner {
             g,
             ctx,
             cfg,
-            part,
-            req,
+            plan,
             tc,
-            local_pairs,
-            plans,
             xla: None,
             group_override: None,
+            progress: None,
         }
     }
 
@@ -104,31 +163,15 @@ impl<'g> DistributedRunner<'g> {
         self.group_override = Some(g);
     }
 
+    /// Attach a progress observer (see `api::Progress`).
+    pub fn set_progress(&mut self, progress: Arc<dyn Progress>) {
+        self.progress = Some(progress);
+    }
+
     /// Ablation hook: swap to a contiguous block partition (rebuilds the
     /// request lists and update plans).
     pub fn use_block_partition(&mut self) {
-        let part = Partition::block(self.g.n_vertices(), self.cfg.n_ranks);
-        let req = RequestLists::build(self.g, &part);
-        let n_ranks = self.cfg.n_ranks;
-        let mut local_pairs = vec![Vec::new(); n_ranks];
-        let mut plans = vec![vec![Vec::new(); n_ranks]; n_ranks];
-        for p in 0..n_ranks {
-            for (r, &v) in part.locals[p].iter().enumerate() {
-                for &u in self.g.neighbors(v) {
-                    let q = part.owner_of(u);
-                    if q == p {
-                        local_pairs[p].push((r as u32, part.local_index[u as usize]));
-                    } else {
-                        let row = req.rows(p, q).binary_search(&u).expect("request list");
-                        plans[p][q].push((r as u32, row as u32));
-                    }
-                }
-            }
-        }
-        self.part = part;
-        self.req = req;
-        self.local_pairs = local_pairs;
-        self.plans = plans;
+        self.plan = Arc::new(ExchangePlan::block(self.g, self.cfg.n_ranks));
     }
 
     /// The exchange schedule for this template under the configured mode.
@@ -168,16 +211,38 @@ impl<'g> DistributedRunner<'g> {
         let last_use = self.ctx.dag.last_use();
         let eff_task = self.cfg.effective_task_size();
 
+        // the comm decision is per template (Alg 3 line 2) and therefore
+        // identical for every non-leaf subtemplate; record it per sub so
+        // reports can show the exchange shape next to each combine
+        let (sched, sched_pipelined) = self.schedule();
+        let comm_decisions: Vec<CommDecision> = self
+            .ctx
+            .dag
+            .order
+            .iter()
+            .copied()
+            .filter(|&i| !self.ctx.dag.subs[i].is_leaf())
+            .map(|i| CommDecision {
+                sub: i,
+                pipelined: sched_pipelined,
+                n_steps: sched.n_steps(),
+            })
+            .collect();
+        if let Some(pr) = &self.progress {
+            pr.on_run_start(self.cfg.n_iterations, n_subs);
+        }
+
         let mut samples = Vec::with_capacity(self.cfg.n_iterations);
         let mut colorful = Vec::with_capacity(self.cfg.n_iterations);
         let mut records: Vec<SubRecord> = Vec::new();
-        let mut mems: Vec<MemoryAccountant> = (0..n_ranks).map(|_| MemoryAccountant::new()).collect();
+        let mut mems: Vec<MemoryAccountant> =
+            (0..n_ranks).map(|_| MemoryAccountant::new()).collect();
         // CSR share of each rank (graph storage is out of scope for Fig 12
         // but kept for the totals)
         for (p, m) in mems.iter_mut().enumerate() {
             m.alloc(
                 MemClass::Graph,
-                (self.part.n_local(p) * 12) as u64 + self.g.bytes() / n_ranks as u64,
+                (self.plan.part.n_local(p) * 12) as u64 + self.g.bytes() / n_ranks as u64,
             );
         }
         let mut total_units = 0.0f64;
@@ -196,21 +261,27 @@ impl<'g> DistributedRunner<'g> {
             .unwrap_or(1);
 
         for it in 0..self.cfg.n_iterations {
+            if let Some(pr) = &self.progress {
+                pr.on_iteration(it, self.cfg.n_iterations);
+            }
             let iter_seed = crate::util::mix2(self.cfg.seed, it as u64);
             let coloring = Coloring::random(self.g.n_vertices(), k, iter_seed);
             let mut tables: Vec<Vec<Option<CountTable>>> = vec![vec![None; n_subs]; n_ranks];
             let mut scratches: Vec<CombineScratch> = (0..n_ranks)
-                .map(|p| CombineScratch::new(self.part.n_local(p), max_agg))
+                .map(|p| CombineScratch::new(self.plan.part.n_local(p), max_agg))
                 .collect();
             for (p, m) in mems.iter_mut().enumerate() {
-                m.alloc(MemClass::Scratch, (self.part.n_local(p) * max_agg * 4) as u64);
+                m.alloc(
+                    MemClass::Scratch,
+                    (self.plan.part.n_local(p) * max_agg * 4) as u64,
+                );
             }
 
             for (order_pos, &i) in self.ctx.dag.order.clone().iter().enumerate() {
                 let sub = self.ctx.dag.subs[i].clone();
                 if sub.is_leaf() {
                     for p in 0..n_ranks {
-                        let t = init_leaf_table(&self.part.locals[p], &coloring);
+                        let t = init_leaf_table(&self.plan.part.locals[p], &coloring);
                         mems[p].alloc(MemClass::CountTable, t.bytes());
                         tables[p][i] = Some(t);
                     }
@@ -252,7 +323,10 @@ impl<'g> DistributedRunner<'g> {
                 if let Some(t) = tables[p][self.ctx.dag.root].take() {
                     mems[p].free(MemClass::CountTable, t.bytes());
                 }
-                mems[p].free(MemClass::Scratch, (self.part.n_local(p) * max_agg * 4) as u64);
+                mems[p].free(
+                    MemClass::Scratch,
+                    (self.plan.part.n_local(p) * max_agg * 4) as u64,
+                );
             }
         }
 
@@ -317,6 +391,9 @@ impl<'g> DistributedRunner<'g> {
             None => false,
         };
         let total_hist: f64 = hist_units.iter().sum();
+        if let Some(pr) = &self.progress {
+            pr.on_run_end();
+        }
         RunResult {
             estimate,
             samples,
@@ -333,6 +410,7 @@ impl<'g> DistributedRunner<'g> {
                 },
                 concurrency_histogram: hist_units.iter().map(|&u| u * flop_time).collect(),
             },
+            comm_decisions,
             oom,
         }
     }
@@ -359,6 +437,10 @@ impl<'g> DistributedRunner<'g> {
         let a2_sets = self.ctx.binom.c(self.ctx.k, sub.active_size(&self.ctx.dag)) as usize;
         let pass_idx = sub.passive.unwrap();
         let act_idx = sub.active.unwrap();
+        let (schedule, is_pipelined) = self.schedule();
+        if let Some(pr) = &self.progress {
+            pr.on_subtemplate_start(i, schedule.n_steps(), is_pipelined);
+        }
         // Model-clock cost units follow the paper's Eq 4: each neighbor
         // pair costs C(k,|Ti|)·C(|Ti|,|Ti'|) — the Harp-DAAL/FASCIA
         // per-neighbor DP loop whose thread behaviour Fig 11 measures.
@@ -375,7 +457,7 @@ impl<'g> DistributedRunner<'g> {
 
         // allocate outputs
         let mut outs: Vec<CountTable> = (0..n_ranks)
-            .map(|p| CountTable::zeros(self.part.n_local(p), split.n_sets))
+            .map(|p| CountTable::zeros(self.plan.part.n_local(p), split.n_sets))
             .collect();
         for (p, o) in outs.iter().enumerate() {
             mems[p].alloc(MemClass::CountTable, o.bytes());
@@ -404,15 +486,15 @@ impl<'g> DistributedRunner<'g> {
             let n_pairs = aggregate_batch(
                 &mut scratches[p],
                 active,
-                self.local_pairs[p].iter().copied(),
+                self.plan.local_pairs[p].iter().copied(),
             );
             let _ = self.contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
             let dt = t0.elapsed().as_secs_f64();
             *total_units += n_pairs as f64 * pair_units;
             *real_compute += dt;
             // thread-level replay over Alg-4 tasks
-            let mut degs = vec![0u32; self.part.n_local(p)];
-            for &(v, _) in &self.local_pairs[p] {
+            let mut degs = vec![0u32; self.plan.part.n_local(p)];
+            for &(v, _) in &self.plan.local_pairs[p] {
                 degs[v as usize] += 1;
             }
             let tasks = make_tasks(&degs, eff_task, shuffle_seed(p, usize::MAX));
@@ -426,7 +508,6 @@ impl<'g> DistributedRunner<'g> {
         }
 
         // ---- exchange phase ----
-        let (schedule, is_pipelined) = self.schedule();
         let mut fabric = Fabric::new(n_ranks);
         let mut steps: Vec<Vec<(f64, f64)>> = Vec::with_capacity(schedule.n_steps());
         for (w, plans_w) in schedule.plans.iter().enumerate() {
@@ -435,10 +516,10 @@ impl<'g> DistributedRunner<'g> {
             for p in 0..n_ranks {
                 let active = tables[p][act_idx].as_ref().unwrap();
                 for &q in &plans_w[p].send_to {
-                    let want = self.req.rows(q, p);
+                    let want = self.plan.req.rows(q, p);
                     let mut rows = Vec::with_capacity(want.len() * a2_sets);
                     for &u in want {
-                        let r = self.part.local_index[u as usize] as usize;
+                        let r = self.plan.part.local_index[u as usize] as usize;
                         rows.extend_from_slice(active.row(r));
                     }
                     fabric.send(Packet::new(p, q, w, i, a2_sets, rows));
@@ -450,7 +531,7 @@ impl<'g> DistributedRunner<'g> {
                 let packets = fabric.drain(p);
                 let mut recv_bytes = 0u64;
                 let n_msgs = packets.len();
-                let mut degs = vec![0u32; self.part.n_local(p)];
+                let mut degs = vec![0u32; self.plan.part.n_local(p)];
                 let t0 = Instant::now();
                 let passive = tables[p][pass_idx].as_ref().unwrap();
                 scratches[p].begin(a2_sets);
@@ -467,9 +548,9 @@ impl<'g> DistributedRunner<'g> {
                     n_pairs += aggregate_batch(
                         &mut scratches[p],
                         &buf,
-                        self.plans[p][q].iter().copied(),
+                        self.plan.plans[p][q].iter().copied(),
                     );
-                    for &(v, _) in &self.plans[p][q] {
+                    for &(v, _) in &self.plan.plans[p][q] {
                         degs[v as usize] += 1;
                     }
                 }
@@ -494,13 +575,16 @@ impl<'g> DistributedRunner<'g> {
                     .cfg
                     .net
                     .step(n_msgs, recv_bytes)
-                    .max(self.cfg.net.step(
-                        plans_w[p].send_to.len(),
-                        fabric.sent_bytes(p),
-                    ));
+                    .max(self
+                        .cfg
+                        .net
+                        .step(plans_w[p].send_to.len(), fabric.sent_bytes(p)));
                 step_row.push((rep.makespan, comm));
             }
             steps.push(step_row);
+            if let Some(pr) = &self.progress {
+                pr.on_exchange_step(i, w, schedule.n_steps());
+            }
         }
         fabric.assert_empty();
         // bulk mode: release all receive buffers now
@@ -513,6 +597,9 @@ impl<'g> DistributedRunner<'g> {
 
         for (p, o) in outs.into_iter().enumerate() {
             tables[p][i] = Some(o);
+        }
+        if let Some(pr) = &self.progress {
+            pr.on_subtemplate_done(i);
         }
 
         SubRecord {
@@ -579,6 +666,42 @@ mod tests {
     }
 
     #[test]
+    fn plan_is_shared_not_rebuilt() {
+        // the facade contract: one ExchangePlan can serve many templates
+        let g = small_graph(29);
+        let plan = Arc::new(ExchangePlan::random(&g, 4, 42));
+        for tpl in ["u3-1", "u5-2", "u7-2"] {
+            let t = builtin(tpl).unwrap();
+            let cfg = RunConfig {
+                n_ranks: 4,
+                n_iterations: 1,
+                ..RunConfig::default()
+            };
+            let mut shared = DistributedRunner::with_plan(&t, &g, cfg.clone(), plan.clone());
+            let mut fresh = DistributedRunner::new(&t, &g, cfg);
+            // the runner must hold the caller's allocation, not a copy
+            assert!(Arc::ptr_eq(&plan, &shared.plan), "{tpl}");
+            let a = shared.run();
+            let b = fresh.run();
+            assert_eq!(a.colorful, b.colorful, "{tpl}");
+            assert_eq!(a.estimate, b.estimate, "{tpl}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "different rank count")]
+    fn plan_rank_mismatch_panics() {
+        let g = small_graph(31);
+        let plan = Arc::new(ExchangePlan::random(&g, 4, 42));
+        let t = builtin("u3-1").unwrap();
+        let cfg = RunConfig {
+            n_ranks: 5,
+            ..RunConfig::default()
+        };
+        let _ = DistributedRunner::with_plan(&t, &g, cfg, plan);
+    }
+
+    #[test]
     fn pipeline_reduces_peak_memory() {
         let g = small_graph(13);
         let naive = run_mode("u10-2", &g, ModeSelect::Naive, 6);
@@ -615,6 +738,22 @@ mod tests {
         let (s, pipelined) = r.schedule();
         assert!(pipelined);
         assert_eq!(s.n_steps(), 4);
+    }
+
+    #[test]
+    fn comm_decisions_match_schedule() {
+        let g = small_graph(37);
+        let res = run_mode("u10-2", &g, ModeSelect::Pipeline, 6);
+        assert!(!res.comm_decisions.is_empty());
+        for d in &res.comm_decisions {
+            assert!(d.pipelined);
+            assert_eq!(d.n_steps, 5); // ring of 6 ranks, g = 1
+        }
+        let res = run_mode("u10-2", &g, ModeSelect::Naive, 6);
+        for d in &res.comm_decisions {
+            assert!(!d.pipelined);
+            assert_eq!(d.n_steps, 1);
+        }
     }
 
     #[test]

@@ -7,6 +7,6 @@ pub mod dist;
 pub mod memory;
 pub mod run;
 
-pub use dist::DistributedRunner;
+pub use dist::{DistributedRunner, ExchangePlan};
 pub use memory::{MemClass, MemoryAccountant};
-pub use run::{EngineKind, ModeSelect, ModelTime, RunConfig, RunResult, ThreadStats};
+pub use run::{CommDecision, EngineKind, ModeSelect, ModelTime, RunConfig, RunResult, ThreadStats};

@@ -26,6 +26,28 @@ impl ModeSelect {
             ModeSelect::AdaptiveLb => "AdaptiveLB",
         }
     }
+
+    /// The CLI/config spelling of this mode.
+    pub fn flag(&self) -> &'static str {
+        match self {
+            ModeSelect::Naive => "naive",
+            ModeSelect::Pipeline => "pipeline",
+            ModeSelect::Adaptive => "adaptive",
+            ModeSelect::AdaptiveLb => "adaptive-lb",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names (callers
+    /// map this to `api::HarpsgError::UnknownMode`).
+    pub fn parse(name: &str) -> Option<ModeSelect> {
+        match name {
+            "naive" => Some(ModeSelect::Naive),
+            "pipeline" => Some(ModeSelect::Pipeline),
+            "adaptive" => Some(ModeSelect::Adaptive),
+            "adaptive-lb" | "adaptivelb" => Some(ModeSelect::AdaptiveLb),
+            _ => None,
+        }
+    }
 }
 
 /// Which combine backend executes the DP hot loop.
@@ -35,6 +57,24 @@ pub enum EngineKind {
     Native,
     /// the AOT-compiled JAX/Pallas kernel via PJRT (`runtime::xla_engine`)
     Xla,
+}
+
+impl EngineKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EngineKind::Native => "native",
+            EngineKind::Xla => "xla",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<EngineKind> {
+        match name {
+            "native" => Some(EngineKind::Native),
+            "xla" => Some(EngineKind::Xla),
+            _ => None,
+        }
+    }
 }
 
 #[derive(Debug, Clone)]
@@ -156,6 +196,30 @@ pub struct ThreadStats {
     pub concurrency_histogram: Vec<f64>,
 }
 
+/// The exchange shape chosen for one subtemplate combine: Alg 3 decides
+/// per template, so every non-leaf subtemplate of a run shares the same
+/// decision — recorded per sub so `api::JobReport` can show the schedule
+/// next to each combine.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CommDecision {
+    /// index of the subtemplate in the partition DAG
+    pub sub: usize,
+    /// true = Adaptive-Group ring, false = bulk all-to-all
+    pub pipelined: bool,
+    /// exchange steps `W` (1 for all-to-all)
+    pub n_steps: usize,
+}
+
+impl CommDecision {
+    pub fn mode_name(&self) -> &'static str {
+        if self.pipelined {
+            "ring"
+        } else {
+            "all-to-all"
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunResult {
     /// the subgraph-count estimate (median of means over iterations)
@@ -172,6 +236,8 @@ pub struct RunResult {
     /// calibrated seconds per compute unit
     pub flop_time: f64,
     pub threads: ThreadStats,
+    /// the exchange schedule chosen for each non-leaf subtemplate
+    pub comm_decisions: Vec<CommDecision>,
     /// modeled per-rank memory exceeded `mem_limit`
     pub oom: bool,
 }

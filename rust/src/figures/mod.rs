@@ -6,9 +6,17 @@
 //! reported times are model-clock (calibrated compute replay + Hockney
 //! transfers). Shapes — who wins, by what factor, where crossovers fall —
 //! are the reproduction target, not absolute seconds.
+//!
+//! Every run goes through the `api` facade: each figure opens one
+//! [`Session`] per dataset and sweeps templates/modes/ranks against it,
+//! so the partition/request-list setup is built once per rank count
+//! instead of once per run — the multi-template sweeps (Figs 13–15 touch
+//! all ten templates) are where the session amortization pays off.
 
+use crate::api::{CountJob, CountJobBuilder, JobReport, PartitionKind, Session, SessionOptions};
 use crate::baseline;
-use crate::coordinator::{DistributedRunner, ModeSelect, RunConfig, RunResult};
+use crate::comm::AdaptivePolicy;
+use crate::coordinator::ModeSelect;
 use crate::graph::{loader, Dataset, Graph};
 use crate::metrics::Series;
 use crate::template::{builtin, complexity, BUILTIN_NAMES};
@@ -41,28 +49,44 @@ impl FigureCtx {
         loader::load_or_generate(&cache, || ds.generate(scale)).expect("dataset cache")
     }
 
-    pub fn run(&self, template: &str, g: &Graph, mode: ModeSelect, ranks: usize) -> RunResult {
-        self.run_cfg(template, g, mode, ranks, |_| {})
+    /// Open a session on a dataset analog (random partition, ctx seed).
+    pub fn session(&self, ds: Dataset, base_scale: u32) -> Session {
+        self.session_with(ds, base_scale, PartitionKind::Random)
+    }
+
+    /// Open a session with an explicit partition strategy (ablation A2).
+    pub fn session_with(&self, ds: Dataset, base_scale: u32, partition: PartitionKind) -> Session {
+        Session::with_options(
+            self.graph(ds, base_scale),
+            SessionOptions {
+                seed: self.seed,
+                partition,
+                load_xla: false,
+            },
+        )
+        .expect("session without XLA cannot fail")
+    }
+
+    pub fn run(&self, s: &Session, template: &str, mode: ModeSelect, ranks: usize) -> JobReport {
+        self.run_cfg(s, template, mode, ranks, |b| b)
     }
 
     pub fn run_cfg(
         &self,
+        s: &Session,
         template: &str,
-        g: &Graph,
         mode: ModeSelect,
         ranks: usize,
-        tweak: impl FnOnce(&mut RunConfig),
-    ) -> RunResult {
+        tweak: impl FnOnce(CountJobBuilder) -> CountJobBuilder,
+    ) -> JobReport {
         let t = builtin(template).expect("builtin template");
-        let mut cfg = RunConfig {
-            n_ranks: ranks,
-            mode,
-            n_iterations: self.iters,
-            seed: self.seed,
-            ..RunConfig::default()
-        };
-        tweak(&mut cfg);
-        DistributedRunner::new(&t, g, cfg).run()
+        let b = CountJob::builder(t)
+            .ranks(ranks)
+            .mode(mode)
+            .iterations(self.iters)
+            .seed(self.seed);
+        let job = tweak(b).build().expect("valid figure job");
+        s.count(&job).expect("figure job run")
     }
 }
 
@@ -84,7 +108,7 @@ pub fn table3() -> Vec<Series> {
 /// Fig 6: Naive implementation, scaling template size on R500K3, 4 → 8
 /// ranks: computation vs communication time.
 pub fn fig6(ctx: &FigureCtx) -> Vec<Series> {
-    let g = ctx.graph(Dataset::R500K3, 2000);
+    let s = ctx.session(Dataset::R500K3, 2000);
     let mut comp = Series::new(
         "Fig 6 — Naive: compute time (model s) on R500K3 (expectation: halves 4→8 ranks for small T)",
         &["4 ranks", "8 ranks"],
@@ -99,7 +123,7 @@ pub fn fig6(ctx: &FigureCtx) -> Vec<Series> {
         let mut comp_row = Vec::new();
         let mut comm_row = Vec::new();
         for ranks in [4, 8] {
-            let r = ctx.run(tpl, &g, ModeSelect::Naive, ranks);
+            let r = ctx.run(&s, tpl, ModeSelect::Naive, ranks);
             comp_row.push(r.model.comp);
             comm_row.push(r.model.comm_exposed);
         }
@@ -112,7 +136,7 @@ pub fn fig6(ctx: &FigureCtx) -> Vec<Series> {
 /// Fig 7: strong scaling Naive vs Pipeline on R500K3 (u10-2, u12-1,
 /// u12-2), 4–10 ranks: speedup, total time, compute ratio.
 pub fn fig7(ctx: &FigureCtx) -> Vec<Series> {
-    let g = ctx.graph(Dataset::R500K3, 2000);
+    let s = ctx.session(Dataset::R500K3, 2000);
     let ranks = [4, 6, 8, 10];
     let cols = ["4 ranks", "6 ranks", "8 ranks", "10 ranks"];
     let mut out = Vec::new();
@@ -135,7 +159,7 @@ pub fn fig7(ctx: &FigureCtx) -> Vec<Series> {
             let mut srow = Vec::new();
             let mut rrow = Vec::new();
             for &p in &ranks {
-                let r = ctx.run(tpl, &g, *mode, p);
+                let r = ctx.run(&s, tpl, *mode, p);
                 if mi == 0 && p == ranks[0] {
                     base = r.model.total;
                 }
@@ -158,7 +182,7 @@ pub fn fig7(ctx: &FigureCtx) -> Vec<Series> {
 /// small templates on the big-graph analogs.
 pub fn fig8(ctx: &FigureCtx) -> Vec<Series> {
     let ranks_large = [4, 6, 8, 10];
-    let g_r500 = ctx.graph(Dataset::R500K3, 2000);
+    let s_r500 = ctx.session(Dataset::R500K3, 2000);
     let mut large = Series::new(
         "Fig 8 — mean overlap ratio ρ, Pipeline on R500K3 (expectation: u12-2 ≈ 0.3, u12-1 < 0.1 at scale)",
         &["4 ranks", "6 ranks", "8 ranks", "10 ranks"],
@@ -167,7 +191,7 @@ pub fn fig8(ctx: &FigureCtx) -> Vec<Series> {
     for tpl in ["u10-2", "u12-1", "u12-2"] {
         let row = ranks_large
             .iter()
-            .map(|&p| ctx.run(tpl, &g_r500, ModeSelect::Pipeline, p).model.mean_rho())
+            .map(|&p| ctx.run(&s_r500, tpl, ModeSelect::Pipeline, p).model.mean_rho())
             .collect();
         large.push_row(tpl, row);
     }
@@ -182,11 +206,11 @@ pub fn fig8(ctx: &FigureCtx) -> Vec<Series> {
         (Dataset::SkS, 8000),
         (Dataset::FriendsterS, 8000),
     ] {
-        let g = ctx.graph(ds, base);
+        let s = ctx.session(ds, base);
         for tpl in ["u3-1", "u5-2"] {
             let row = ranks_small
                 .iter()
-                .map(|&p| ctx.run(tpl, &g, ModeSelect::Pipeline, p).model.mean_rho())
+                .map(|&p| ctx.run(&s, tpl, ModeSelect::Pipeline, p).model.mean_rho())
                 .collect();
             small.push_row(&format!("{} {}", ds.abbrev(), tpl), row);
         }
@@ -205,29 +229,29 @@ pub fn fig9(ctx: &FigureCtx) -> Vec<Series> {
         (Dataset::SkS, 8000),
         (Dataset::FriendsterS, 8000),
     ] {
-        let g = ctx.graph(ds, base);
+        let s = ctx.session(ds, base);
         for tpl in ["u3-1", "u5-2"] {
-            let mut s = Series::new(
+            let mut series = Series::new(
                 &format!(
                     "Fig 9 — {} {tpl}: speedup vs 10-rank Pipeline (expectation: Adaptive ≥ Pipeline)",
                     ds.abbrev()
                 ),
                 &cols,
             );
-            s.precision = 2;
+            series.precision = 2;
             let mut base_t = 0.0;
             for mode in [ModeSelect::Pipeline, ModeSelect::Adaptive] {
                 let mut row = Vec::new();
                 for &p in &ranks {
-                    let r = ctx.run(tpl, &g, mode, p);
+                    let r = ctx.run(&s, tpl, mode, p);
                     if mode == ModeSelect::Pipeline && p == ranks[0] {
                         base_t = r.model.total;
                     }
                     row.push(base_t / r.model.total);
                 }
-                s.push_row(mode.name(), row);
+                series.push_row(mode.name(), row);
             }
-            out.push(s);
+            out.push(series);
         }
     }
     out
@@ -255,8 +279,8 @@ pub fn fig10(ctx: &FigureCtx) -> Vec<Series> {
                 n_vertices: (5_000_000 / scale as usize) * p / 4,
                 n_edges: (250_000_000 / scale as u64) * p as u64 / 4,
             };
-            let g = ctx.graph(ds, 1);
-            let r = ctx.run("u12-2", &g, mode, p);
+            let s = ctx.session(ds, 1);
+            let r = ctx.run(&s, "u12-2", mode, p);
             trow.push(r.model.total);
             rrow.push(r.model.comm_ratio());
         }
@@ -284,9 +308,9 @@ pub fn fig11(ctx: &FigureCtx) -> Vec<Series> {
     );
     skew.precision = 4;
     for (ds, base) in &data {
-        let g = ctx.graph(*ds, *base);
-        let a = ctx.run("u12-2", &g, ModeSelect::Adaptive, 4);
-        let b = ctx.run("u12-2", &g, ModeSelect::AdaptiveLb, 4);
+        let s = ctx.session(*ds, *base);
+        let a = ctx.run(&s, "u12-2", ModeSelect::Adaptive, 4);
+        let b = ctx.run(&s, "u12-2", ModeSelect::AdaptiveLb, 4);
         skew.push_row(
             &ds.abbrev(),
             vec![a.model.total, b.model.total, a.model.total / b.model.total],
@@ -298,27 +322,27 @@ pub fn fig11(ctx: &FigureCtx) -> Vec<Series> {
     let threads = [6, 12, 24, 48];
     let cols = ["6 thr", "12 thr", "24 thr", "48 thr"];
     for (ds, base) in [(Dataset::MiamiS, 500), (Dataset::R250K8, 2000)] {
-        let g = ctx.graph(ds, base);
-        let mut s = Series::new(
+        let s = ctx.session(ds, base);
+        let mut series = Series::new(
             &format!(
                 "Fig 11b — {} u12-2 model time (s) vs thread count (expectation: Naive degrades past 24 threads on skewed data; AdaptiveLB flat)",
                 ds.abbrev()
             ),
             &cols,
         );
-        s.precision = 4;
+        series.precision = 4;
         for mode in [ModeSelect::Naive, ModeSelect::AdaptiveLb] {
             let row = threads
                 .iter()
                 .map(|&t| {
-                    ctx.run_cfg("u12-2", &g, mode, 4, |c| c.n_threads = t)
+                    ctx.run_cfg(&s, "u12-2", mode, 4, |b| b.threads(t))
                         .model
                         .total
                 })
                 .collect();
-            s.push_row(mode.name(), row);
+            series.push_row(mode.name(), row);
         }
-        out.push(s);
+        out.push(series);
     }
 
     // (c) average thread concurrency (the VTune histograms)
@@ -328,9 +352,9 @@ pub fn fig11(ctx: &FigureCtx) -> Vec<Series> {
     );
     conc.precision = 1;
     for (ds, base) in [(Dataset::MiamiS, 500), (Dataset::R250K8, 2000)] {
-        let g = ctx.graph(ds, base);
-        let a = ctx.run("u12-2", &g, ModeSelect::Naive, 4);
-        let b = ctx.run("u12-2", &g, ModeSelect::AdaptiveLb, 4);
+        let s = ctx.session(ds, base);
+        let a = ctx.run(&s, "u12-2", ModeSelect::Naive, 4);
+        let b = ctx.run(&s, "u12-2", ModeSelect::AdaptiveLb, 4);
         conc.push_row(
             &ds.abbrev(),
             vec![a.threads.avg_concurrency, b.threads.avg_concurrency],
@@ -348,11 +372,11 @@ pub fn fig11(ctx: &FigureCtx) -> Vec<Series> {
     );
     gran.precision = 4;
     for (ds, base) in [(Dataset::R250K3, 2000), (Dataset::R250K8, 2000)] {
-        let g = ctx.graph(ds, base);
+        let s = ctx.session(ds, base);
         let row = sizes
             .iter()
-            .map(|&s| {
-                ctx.run_cfg("u12-2", &g, ModeSelect::AdaptiveLb, 4, |c| c.task_size = s)
+            .map(|&ts| {
+                ctx.run_cfg(&s, "u12-2", ModeSelect::AdaptiveLb, 4, |b| b.task_size(ts))
                     .model
                     .total
             })
@@ -365,26 +389,26 @@ pub fn fig11(ctx: &FigureCtx) -> Vec<Series> {
 
 /// Fig 12: peak memory per rank, Naive vs Pipeline, u10-2/u12-1/u12-2.
 pub fn fig12(ctx: &FigureCtx) -> Vec<Series> {
-    let g = ctx.graph(Dataset::R500K3, 2000);
+    let s = ctx.session(Dataset::R500K3, 2000);
     let ranks = [4, 6, 8, 10];
     let cols = ["4 ranks", "6 ranks", "8 ranks", "10 ranks"];
     let mut out = Vec::new();
     for tpl in ["u10-2", "u12-1", "u12-2"] {
-        let mut s = Series::new(
+        let mut series = Series::new(
             &format!(
                 "Fig 12 — {tpl}: peak memory per rank (MiB), Naive vs Pipeline (expectation: 2–5x reduction)"
             ),
             &cols,
         );
-        s.precision = 2;
+        series.precision = 2;
         for mode in [ModeSelect::Naive, ModeSelect::Pipeline] {
             let row = ranks
                 .iter()
-                .map(|&p| ctx.run(tpl, &g, mode, p).peak_mem() as f64 / (1 << 20) as f64)
+                .map(|&p| ctx.run(&s, tpl, mode, p).peak_mem() as f64 / (1 << 20) as f64)
                 .collect();
-            s.push_row(mode.name(), row);
+            series.push_row(mode.name(), row);
         }
-        out.push(s);
+        out.push(series);
     }
     out
 }
@@ -393,76 +417,76 @@ pub fn fig12(ctx: &FigureCtx) -> Vec<Series> {
 /// templates u3-1 → u15-2 (Fascia OOMs beyond u12-2).
 pub fn fig13(ctx: &FigureCtx) -> Vec<Series> {
     let base_scale = 8000;
-    let g = ctx.graph(Dataset::TwitterS, base_scale);
-    let mut s = Series::new(
+    let s = ctx.session(Dataset::TwitterS, base_scale);
+    let mut series = Series::new(
         "Fig 13 — TW analog: total time (model s), AdaptiveLB vs MPI-Fascia (expectation: parity ≤u7-2, ≥2x at u10-2, ~5x at u12-2, Fascia OOM >u12-2)",
         &["AdaptiveLB", "MPI-Fascia", "speedup"],
     );
-    s.precision = 4;
+    series.precision = 4;
     let scale = base_scale * ctx.scale_mult;
     for tpl in BUILTIN_NAMES {
-        let ours = ctx.run(tpl, &g, ModeSelect::AdaptiveLb, 16);
+        let ours = ctx.run(&s, tpl, ModeSelect::AdaptiveLb, 16);
         let t = builtin(tpl).unwrap();
-        let fas = baseline::run_fascia(&t, &g, 16, scale, ctx.seed);
+        let fas = baseline::run_fascia(&t, s.graph(), 16, scale, ctx.seed);
         let (ft, sp) = if fas.oom {
             (f64::NAN, f64::NAN) // OOM: Fascia cannot run this template
         } else {
             (fas.model.total, fas.model.total / ours.model.total)
         };
-        s.push_row(tpl, vec![ours.model.total, ft, sp]);
+        series.push_row(tpl, vec![ours.model.total, ft, sp]);
     }
-    vec![s]
+    vec![series]
 }
 
 /// Fig 14: compute/communication ratio, AdaptiveLB vs Fascia on TW analog.
 pub fn fig14(ctx: &FigureCtx) -> Vec<Series> {
     let base_scale = 8000;
-    let g = ctx.graph(Dataset::TwitterS, base_scale);
+    let s = ctx.session(Dataset::TwitterS, base_scale);
     let scale = base_scale * ctx.scale_mult;
-    let mut s = Series::new(
+    let mut series = Series::new(
         "Fig 14 — TW analog: communication fraction (expectation: Fascia → ~80% at u10-2; AdaptiveLB stays ≈40–50%)",
         &["AdaptiveLB", "MPI-Fascia"],
     );
-    s.precision = 2;
+    series.precision = 2;
     for tpl in ["u3-1", "u5-2", "u10-2", "u12-2"] {
-        let ours = ctx.run(tpl, &g, ModeSelect::AdaptiveLb, 16);
+        let ours = ctx.run(&s, tpl, ModeSelect::AdaptiveLb, 16);
         let t = builtin(tpl).unwrap();
-        let fas = baseline::run_fascia(&t, &g, 16, scale, ctx.seed);
+        let fas = baseline::run_fascia(&t, s.graph(), 16, scale, ctx.seed);
         let fr = if fas.oom {
             f64::NAN
         } else {
             fas.model.comm_ratio()
         };
-        s.push_row(tpl, vec![ours.model.comm_ratio(), fr]);
+        series.push_row(tpl, vec![ours.model.comm_ratio(), fr]);
     }
-    vec![s]
+    vec![series]
 }
 
 /// Fig 15: strong scaling AdaptiveLB vs Fascia on the TW analog, 8→16
 /// ranks (Fascia cannot run on 8 ranks for large templates: OOM).
 pub fn fig15(ctx: &FigureCtx) -> Vec<Series> {
     let base_scale = 8000;
-    let g = ctx.graph(Dataset::TwitterS, base_scale);
+    let s = ctx.session(Dataset::TwitterS, base_scale);
     let scale = base_scale * ctx.scale_mult;
     let ranks = [8, 12, 16];
     let cols = ["8 ranks", "12 ranks", "16 ranks"];
     let mut out = Vec::new();
     for tpl in ["u5-2", "u10-2", "u12-2"] {
-        let mut s = Series::new(
+        let mut series = Series::new(
             &format!("Fig 15 — {tpl} TW analog: total time (model s); NaN = OOM"),
             &cols,
         );
-        s.precision = 4;
+        series.precision = 4;
         let row_ours = ranks
             .iter()
-            .map(|&p| ctx.run(tpl, &g, ModeSelect::AdaptiveLb, p).model.total)
+            .map(|&p| ctx.run(&s, tpl, ModeSelect::AdaptiveLb, p).model.total)
             .collect();
-        s.push_row("AdaptiveLB", row_ours);
+        series.push_row("AdaptiveLB", row_ours);
         let t = builtin(tpl).unwrap();
         let row_fas = ranks
             .iter()
             .map(|&p| {
-                let r = baseline::run_fascia(&t, &g, p, scale, ctx.seed);
+                let r = baseline::run_fascia(&t, s.graph(), p, scale, ctx.seed);
                 if r.oom {
                     f64::NAN
                 } else {
@@ -470,8 +494,8 @@ pub fn fig15(ctx: &FigureCtx) -> Vec<Series> {
                 }
             })
             .collect();
-        s.push_row("MPI-Fascia", row_fas);
-        out.push(s);
+        series.push_row("MPI-Fascia", row_fas);
+        out.push(series);
     }
     out
 }
@@ -481,87 +505,56 @@ pub fn fig15(ctx: &FigureCtx) -> Vec<Series> {
 /// The paper fixes g = 1 (Fig 2); this sweep justifies that default for
 /// high-intensity templates and shows the all-to-all limit g = P-1.
 pub fn abl_group_size(ctx: &FigureCtx) -> Vec<Series> {
-    let g = ctx.graph(Dataset::R500K3, 2000);
+    let s = ctx.session(Dataset::R500K3, 2000);
     let gs = [1usize, 2, 4, 8, 15];
     let cols: Vec<String> = gs.iter().map(|x| format!("g={x}")).collect();
     let cols: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
-    let mut s = Series::new(
+    let mut series = Series::new(
         "Ablation A1 — u12-2, 16 ranks: total model time (s) vs ring group size g",
         &cols,
     );
-    s.precision = 4;
-    let t = builtin("u12-2").unwrap();
+    series.precision = 4;
     let row = gs
         .iter()
-        .map(|&gsz| {
-            let mut cfg = RunConfig {
-                n_ranks: 16,
-                mode: ModeSelect::Pipeline,
-                n_iterations: ctx.iters,
-                seed: ctx.seed,
-                ..RunConfig::default()
-            };
-            cfg.policy.intensity_threshold = 0.0;
-            let mut r = DistributedRunner::new(&t, &g, cfg);
-            // force the ring width by rewriting the schedule choice:
-            // Pipeline mode uses g=1; emulate other widths via policy
-            let _ = &mut r;
-            run_with_group(&t, &g, 16, gsz, ctx)
-        })
+        .map(|&gsz| run_with_group(&s, 16, gsz, ctx))
         .collect();
-    s.push_row("Pipeline", row);
-    vec![s]
+    series.push_row("Pipeline", row);
+    vec![series]
 }
 
-fn run_with_group(
-    t: &crate::template::Template,
-    g: &Graph,
-    ranks: usize,
-    group: usize,
-    ctx: &FigureCtx,
-) -> f64 {
-    // group size is plumbed through CommMode::Pipeline { g }
-    let mut cfg = RunConfig {
-        n_ranks: ranks,
-        mode: if group >= ranks - 1 {
-            ModeSelect::Naive
-        } else {
-            ModeSelect::Pipeline
-        },
-        n_iterations: ctx.iters,
-        seed: ctx.seed,
-        ..RunConfig::default()
+fn run_with_group(s: &Session, ranks: usize, group: usize, ctx: &FigureCtx) -> f64 {
+    // group size is plumbed through CountJob::group_size; always pipeline
+    // (intensity threshold 0) except at the all-to-all limit g = P-1
+    let mut policy = AdaptivePolicy::default();
+    policy.intensity_threshold = 0.0;
+    let mode = if group >= ranks - 1 {
+        ModeSelect::Naive
+    } else {
+        ModeSelect::Pipeline
     };
-    cfg.policy.intensity_threshold = 0.0;
-    let mut runner = DistributedRunner::new(t, g, cfg);
-    runner.set_group_size(group);
-    runner.run().model.total
+    ctx.run_cfg(s, "u12-2", mode, ranks, |b| b.policy(policy).group_size(group))
+        .model
+        .total
 }
 
 /// Ablation A2 — vertex partitioning: the Eq-5 analysis assumes random
 /// partitioning; contiguous blocks concentrate R-MAT hubs and skew both
 /// the exchange volume and the per-rank compute.
 pub fn abl_partition(ctx: &FigureCtx) -> Vec<Series> {
-    let g = ctx.graph(Dataset::R250K8, 2000);
-    let mut s = Series::new(
+    let mut series = Series::new(
         "Ablation A2 — u12-2, 8 ranks, R250K8: random vs block partition",
         &["model time (s)", "peak MiB/rank", "straggler (s)"],
     );
-    s.precision = 4;
-    let t = builtin("u12-2").unwrap();
+    series.precision = 4;
     for block in [false, true] {
-        let cfg = RunConfig {
-            n_ranks: 8,
-            n_iterations: ctx.iters,
-            seed: ctx.seed,
-            ..RunConfig::default()
+        let partition = if block {
+            PartitionKind::Block
+        } else {
+            PartitionKind::Random
         };
-        let mut r = DistributedRunner::new(&t, &g, cfg);
-        if block {
-            r.use_block_partition();
-        }
-        let res = r.run();
-        s.push_row(
+        let s = ctx.session_with(Dataset::R250K8, 2000, partition);
+        let res = ctx.run(&s, "u12-2", ModeSelect::AdaptiveLb, 8);
+        series.push_row(
             if block { "block" } else { "random" },
             vec![
                 res.model.total,
@@ -570,40 +563,35 @@ pub fn abl_partition(ctx: &FigureCtx) -> Vec<Series> {
             ],
         );
     }
-    vec![s]
+    vec![series]
 }
 
 /// Ablation A3 — interconnect: on a slower network (10 GbE) the adaptive
 /// switch point moves (pipelining pays off earlier in template size).
 pub fn abl_network(ctx: &FigureCtx) -> Vec<Series> {
-    let g = ctx.graph(Dataset::R500K3, 2000);
-    let mut s = Series::new(
+    let s = ctx.session(Dataset::R500K3, 2000);
+    let mut series = Series::new(
         "Ablation A3 — u10-2 & u12-2, 8 ranks: Naive vs Pipeline on InfiniBand vs 10GbE (model s)",
         &["IB Naive", "IB Pipeline", "10GbE Naive", "10GbE Pipeline"],
     );
-    s.precision = 4;
+    series.precision = 4;
     for tpl in ["u10-2", "u12-2"] {
-        let t = builtin(tpl).unwrap();
         let mut row = Vec::new();
         for net in [
             crate::comm::HockneyParams::infiniband(),
             crate::comm::HockneyParams::tengige(),
         ] {
             for mode in [ModeSelect::Naive, ModeSelect::Pipeline] {
-                let cfg = RunConfig {
-                    n_ranks: 8,
-                    mode,
-                    net,
-                    n_iterations: ctx.iters,
-                    seed: ctx.seed,
-                    ..RunConfig::default()
-                };
-                row.push(DistributedRunner::new(&t, &g, cfg).run().model.total);
+                row.push(
+                    ctx.run_cfg(&s, tpl, mode, 8, |b| b.net(net))
+                        .model
+                        .total,
+                );
             }
         }
-        s.push_row(tpl, row);
+        series.push_row(tpl, row);
     }
-    vec![s]
+    vec![series]
 }
 
 /// All figure IDs the harness knows.

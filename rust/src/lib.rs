@@ -20,7 +20,21 @@
 //!
 //! See `DESIGN.md` for the system inventory and experiment index, and
 //! `EXPERIMENTS.md` for paper-vs-measured results.
+//!
+//! **Start at [`api`].** `api::Session` + `api::CountJob` +
+//! `api::JobReport` are the supported public surface: sessions amortize
+//! graph setup across templates, jobs are validated at build time, and
+//! reports serialize to JSON/CSV. The modules below it (`coordinator`,
+//! `comm`, `colorcount`, …) are the engine room — stable enough to read,
+//! but their types are wired together for you by the facade.
 
+#![allow(
+    clippy::too_many_arguments,
+    clippy::needless_range_loop,
+    clippy::field_reassign_with_default
+)]
+
+pub mod api;
 pub mod baseline;
 pub mod colorcount;
 pub mod combin;

@@ -1,23 +1,32 @@
-//! `harpsg` — the CLI launcher for the coordinator.
+//! `harpsg` — the CLI launcher for the coordinator. A thin shell over
+//! `harpsg::api`: it parses flags strictly (unknown or duplicated flags
+//! are errors, routed through the typed `HarpsgError`), opens a
+//! `Session`, builds a validated `CountJob`, and prints the `JobReport`
+//! as either the human block or JSON (`--json`).
 //!
 //! Subcommands:
-//!   count     --template <name|path> --dataset <abbrev|path> [options]
-//!   run       --config <file.toml>
+//!   count     --template <name|path> --dataset <abbrev|path> [options] [--json] [--progress]
+//!   run       --config <file.toml> [--json] [--progress]
 //!   templates                      (print the Table-3 complexity table)
 //!   artifacts                      (check the AOT artifact manifest)
 //!
 //! Examples:
 //!   harpsg count --template u10-2 --dataset R500K3 --scale 2000 \
-//!       --ranks 8 --mode adaptive-lb --iters 2
+//!       --ranks 8 --mode adaptive-lb --iters 2 --json
 //!   harpsg run --config configs/quickstart.toml
 
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+use harpsg::api::{
+    CountJob, HarpsgError, JobReport, PartitionKind, Session, SessionOptions, StderrProgress,
+};
 use harpsg::config::RunSpec;
-use harpsg::coordinator::{DistributedRunner, EngineKind, ModeSelect, RunConfig};
+use harpsg::coordinator::{EngineKind, ModeSelect, RunConfig};
 use harpsg::graph::{degree_stats, loader, Dataset, Graph};
-use harpsg::runtime::{XlaCombine, XlaRuntime};
-use harpsg::template::{builtin, complexity, Template, BUILTIN_NAMES};
+use harpsg::runtime::XlaRuntime;
+use harpsg::template::{builtin, Template, BUILTIN_NAMES};
 use harpsg::util::{human_bytes, human_secs};
+use std::collections::HashMap;
+use std::sync::Arc;
 
 fn main() {
     if let Err(e) = real_main() {
@@ -43,11 +52,52 @@ fn real_main() -> Result<()> {
     }
 }
 
-fn flag(args: &[String], name: &str) -> Option<String> {
-    args.iter()
-        .position(|a| a == name)
-        .and_then(|i| args.get(i + 1))
-        .cloned()
+/// Strict flag parser: every argument must be a known value flag (followed
+/// by its value) or a known boolean flag, and none may repeat. Anything
+/// else is a typed error — the old parser silently dropped unknown flags.
+fn parse_flags(
+    args: &[String],
+    value_flags: &[&str],
+    bool_flags: &[&str],
+) -> Result<HashMap<String, String>, HarpsgError> {
+    let mut out = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        let flag = args[i].as_str();
+        if bool_flags.contains(&flag) {
+            if out.insert(flag.to_string(), String::new()).is_some() {
+                return Err(HarpsgError::DuplicateFlag(flag.to_string()));
+            }
+            i += 1;
+        } else if value_flags.contains(&flag) {
+            let value = args
+                .get(i + 1)
+                .ok_or_else(|| HarpsgError::MissingValue(format!("flag `{flag}` needs a value")))?;
+            if out.insert(flag.to_string(), value.clone()).is_some() {
+                return Err(HarpsgError::DuplicateFlag(flag.to_string()));
+            }
+            i += 2;
+        } else {
+            return Err(HarpsgError::UnknownFlag(flag.to_string()));
+        }
+    }
+    Ok(out)
+}
+
+fn parse_number<T: std::str::FromStr>(flags: &HashMap<String, String>, flag: &str) -> Result<Option<T>, HarpsgError> {
+    match flags.get(flag) {
+        None => Ok(None),
+        Some(v) => v.parse::<T>().map(Some).map_err(|_| {
+            HarpsgError::Parse(format!("`{flag}`: expected a number, got `{v}`"))
+        }),
+    }
+}
+
+fn require<'f>(flags: &'f HashMap<String, String>, flag: &str) -> Result<&'f str, HarpsgError> {
+    flags
+        .get(flag)
+        .map(|s| s.as_str())
+        .ok_or_else(|| HarpsgError::MissingValue(format!("flag `{flag}` is required")))
 }
 
 fn load_template(spec: &str) -> Result<Template> {
@@ -55,7 +105,7 @@ fn load_template(spec: &str) -> Result<Template> {
         builtin(spec)
     } else {
         let text = std::fs::read_to_string(spec)
-            .with_context(|| format!("read template file {spec}"))?;
+            .map_err(|e| HarpsgError::Io(format!("read template file {spec}: {e}")))?;
         Template::parse(spec, &text)
     }
 }
@@ -80,29 +130,62 @@ fn load_dataset(spec: &str, scale: u32) -> Result<Graph> {
     }
 }
 
-fn execute(t: &Template, g: &Graph, cfg: RunConfig) -> Result<()> {
-    let st = degree_stats(g);
+/// Run one job through the facade and print the report.
+/// `explicit_task_size` carries an explicitly passed `--task-size` into
+/// the builder so its mode/task-size consistency validation applies —
+/// wholesale `config()` alone cannot tell "set" from "default".
+fn execute(
+    t: Template,
+    g: Graph,
+    cfg: RunConfig,
+    explicit_task_size: Option<u32>,
+    json: bool,
+    progress: bool,
+) -> Result<()> {
+    let session = Session::with_options(
+        g,
+        SessionOptions {
+            seed: cfg.seed,
+            partition: PartitionKind::Random,
+            load_xla: cfg.engine == EngineKind::Xla,
+        },
+    )
+    .context("open session (XLA engines need `make artifacts`)")?;
+    let mut builder = CountJob::builder(t).config(cfg);
+    if let Some(ts) = explicit_task_size {
+        builder = builder.task_size(ts);
+    }
+    let job = builder.build()?;
+    let report = if progress {
+        session.count_with_progress(&job, Arc::new(StderrProgress))?
+    } else {
+        session.count(&job)?
+    };
+    if json {
+        println!("{}", report.to_json_string());
+    } else {
+        print_human(&session, &report);
+    }
+    Ok(())
+}
+
+fn print_human(session: &Session, r: &JobReport) {
+    let st = degree_stats(session.graph());
     println!(
         "graph: {} vertices, {} edges, avg deg {:.1}, max deg {}",
         st.n_vertices, st.n_edges, st.avg_degree, st.max_degree
     );
-    let tc = complexity(t);
     println!(
-        "template: {} (k={}, intensity {:.1}) — {} mode on {} ranks",
-        t.name,
-        t.size(),
-        tc.intensity,
-        cfg.mode.name(),
-        cfg.n_ranks
+        "template: {} (k={}, intensity {:.1}) — {} mode on {} ranks ({} engine)",
+        r.template, r.k, r.complexity.intensity, r.mode, r.n_ranks, r.engine
     );
-    let use_xla = cfg.engine == EngineKind::Xla;
-    let mut runner = DistributedRunner::new(t, g, cfg);
-    if use_xla {
-        let rt = XlaRuntime::load_default().context("load artifacts (run `make artifacts`)")?;
-        println!("engine: XLA via PJRT ({})", rt.platform);
-        runner.xla = Some(XlaCombine::new(std::sync::Arc::new(rt)));
+    if let Some(d) = r.comm_decisions.first() {
+        println!(
+            "exchange: {} in {} step(s) per subtemplate",
+            d.mode_name(),
+            d.n_steps
+        );
     }
-    let r = runner.run();
     println!();
     println!("estimate:        {:.6e} embeddings", r.estimate);
     println!(
@@ -112,60 +195,91 @@ fn execute(t: &Template, g: &Graph, cfg: RunConfig) -> Result<()> {
         r.model.mean_rho()
     );
     println!("peak memory:     {} per rank", human_bytes(r.peak_mem()));
+    println!(
+        "setup:           {} ({})",
+        human_secs(r.setup_seconds),
+        if r.setup_reused { "reused" } else { "built" }
+    );
     println!("real wall-clock: {}", human_secs(r.real_seconds));
     if r.oom {
         println!("WARNING: modeled per-rank memory exceeds the configured limit (OOM)");
     }
-    Ok(())
 }
 
 fn cmd_count(args: &[String]) -> Result<()> {
-    let template = flag(args, "--template").context("--template required")?;
-    let dataset = flag(args, "--dataset").context("--dataset required")?;
-    let scale: u32 = flag(args, "--scale")
-        .map(|s| s.parse())
-        .transpose()?
-        .unwrap_or(2000);
+    let flags = parse_flags(
+        args,
+        &[
+            "--template",
+            "--dataset",
+            "--scale",
+            "--ranks",
+            "--threads",
+            "--iters",
+            "--seed",
+            "--task-size",
+            "--mode",
+            "--engine",
+            "--mem-limit-mb",
+        ],
+        &["--json", "--progress"],
+    )?;
+    let template = require(&flags, "--template")?.to_string();
+    let dataset = require(&flags, "--dataset")?.to_string();
+    let scale: u32 = parse_number(&flags, "--scale")?.unwrap_or(2000);
     let mut cfg = RunConfig::default();
-    if let Some(v) = flag(args, "--ranks") {
-        cfg.n_ranks = v.parse()?;
+    if let Some(v) = parse_number::<usize>(&flags, "--ranks")? {
+        cfg.n_ranks = v;
     }
-    if let Some(v) = flag(args, "--threads") {
-        cfg.n_threads = v.parse()?;
+    if let Some(v) = parse_number::<usize>(&flags, "--threads")? {
+        cfg.n_threads = v;
     }
-    if let Some(v) = flag(args, "--iters") {
-        cfg.n_iterations = v.parse()?;
+    if let Some(v) = parse_number::<usize>(&flags, "--iters")? {
+        cfg.n_iterations = v;
     }
-    if let Some(v) = flag(args, "--seed") {
-        cfg.seed = v.parse()?;
+    if let Some(v) = parse_number::<u64>(&flags, "--seed")? {
+        cfg.seed = v;
     }
-    if let Some(v) = flag(args, "--task-size") {
-        cfg.task_size = v.parse()?;
+    let explicit_task_size = parse_number::<u32>(&flags, "--task-size")?;
+    if let Some(v) = parse_number::<u64>(&flags, "--mem-limit-mb")? {
+        cfg.mem_limit = Some(v << 20);
     }
-    if let Some(v) = flag(args, "--mode") {
-        cfg.mode = match v.as_str() {
-            "naive" => ModeSelect::Naive,
-            "pipeline" => ModeSelect::Pipeline,
-            "adaptive" => ModeSelect::Adaptive,
-            "adaptive-lb" => ModeSelect::AdaptiveLb,
-            other => bail!("unknown mode {other}"),
-        };
+    if let Some(m) = flags.get("--mode") {
+        cfg.mode = ModeSelect::parse(m).ok_or_else(|| HarpsgError::UnknownMode(m.clone()))?;
     }
-    if flag(args, "--engine").as_deref() == Some("xla") {
-        cfg.engine = EngineKind::Xla;
+    if let Some(e) = flags.get("--engine") {
+        cfg.engine = EngineKind::parse(e).ok_or_else(|| HarpsgError::UnknownEngine(e.clone()))?;
     }
     let t = load_template(&template)?;
     let g = load_dataset(&dataset, scale)?;
-    execute(&t, &g, cfg)
+    execute(
+        t,
+        g,
+        cfg,
+        explicit_task_size,
+        flags.contains_key("--json"),
+        flags.contains_key("--progress"),
+    )
 }
 
 fn cmd_run(args: &[String]) -> Result<()> {
-    let path = flag(args, "--config").context("--config required")?;
-    let text = std::fs::read_to_string(&path).with_context(|| format!("read {path}"))?;
+    let flags = parse_flags(args, &["--config"], &["--json", "--progress"])?;
+    let path = require(&flags, "--config")?;
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| HarpsgError::Io(format!("read config {path}: {e}")))?;
+    // RunSpec::from_doc already enforces mode/task-size consistency for
+    // explicitly configured keys, so no explicit task size is re-applied
     let spec = RunSpec::parse(&text)?;
     let t = load_template(&spec.template)?;
     let g = load_dataset(&spec.dataset, spec.scale)?;
-    execute(&t, &g, spec.run)
+    execute(
+        t,
+        g,
+        spec.run,
+        None,
+        flags.contains_key("--json"),
+        flags.contains_key("--progress"),
+    )
 }
 
 fn cmd_templates() -> Result<()> {
@@ -174,7 +288,7 @@ fn cmd_templates() -> Result<()> {
         "template", "k", "memory", "computation", "intensity"
     );
     for name in BUILTIN_NAMES {
-        let c = complexity(&builtin(name)?);
+        let c = harpsg::template::complexity(&builtin(name)?);
         println!(
             "{:>8} {:>4} {:>10} {:>13} {:>10.1}",
             name, c.k, c.memory, c.computation, c.intensity

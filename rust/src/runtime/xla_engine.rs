@@ -3,246 +3,321 @@
 //! compiles them on the PJRT CPU client, and serves the DP contraction
 //! from the coordinator's hot path. Python is never involved at runtime —
 //! the Rust binary is self-contained once artifacts exist.
+//!
+//! The real PJRT path needs the external `xla` bindings crate, which is
+//! not vendored in this offline environment, so it is gated behind the
+//! `pjrt` cargo feature. Without the feature a stub with the identical
+//! public API compiles instead: `XlaRuntime::load*` fails with a clear
+//! message and `XlaCombine::contract_touched` falls back to the native
+//! combine, so callers (CLI, examples, tests) never need their own cfg.
 
-use super::manifest::Manifest;
-use crate::colorcount::{CombineScratch, Count, CountTable};
-use crate::combin::SplitTable;
-use anyhow::{Context, Result};
-use std::collections::HashMap;
-use std::path::Path;
-use std::sync::Mutex;
+#[cfg(feature = "pjrt")]
+mod imp {
+    use crate::colorcount::{CombineScratch, Count, CountTable};
+    use crate::combin::SplitTable;
+    use crate::runtime::manifest::Manifest;
+    use anyhow::{Context, Result};
+    use std::collections::HashMap;
+    use std::path::Path;
+    use std::sync::Mutex;
 
-/// One compiled combine executable plus its lowered shapes.
-struct LoadedCombine {
-    exe: xla::PjRtLoadedExecutable,
-    block: usize,
-    c1: usize,
-    c2: usize,
-    n_sets: usize,
-    n_splits: usize,
-    /// cached split-table literals, keyed by the table's identity
-    /// (k, a, a1) — rebuilt only when the split changes
-    tables: Mutex<Option<((usize, usize, usize), xla::Literal, xla::Literal)>>,
-}
-
-/// PJRT runtime holding all compiled artifacts.
-pub struct XlaRuntime {
-    pub manifest: Manifest,
-    combines: HashMap<(usize, usize, usize), LoadedCombine>,
-    pub platform: String,
-}
-
-impl XlaRuntime {
-    /// Load + compile every combine artifact in `dir`.
-    pub fn load(dir: &Path) -> Result<XlaRuntime> {
-        let manifest = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
-        let platform = client.platform_name();
-        let mut combines = HashMap::new();
-        for e in &manifest.entries {
-            if e.kind != super::manifest::ArtifactKind::Combine {
-                continue;
-            }
-            let proto = xla::HloModuleProto::from_text_file(
-                e.file.to_str().context("artifact path not UTF-8")?,
-            )
-            .with_context(|| format!("parse HLO text {:?}", e.file))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .with_context(|| format!("compile {:?}", e.file))?;
-            combines.insert(
-                (e.k, e.a, e.a1),
-                LoadedCombine {
-                    exe,
-                    block: e.block,
-                    c1: e.c1,
-                    c2: e.c2,
-                    n_sets: e.n_sets,
-                    n_splits: e.n_splits,
-                    tables: Mutex::new(None),
-                },
-            );
-        }
-        Ok(XlaRuntime {
-            manifest,
-            combines,
-            platform,
-        })
+    /// One compiled combine executable plus its lowered shapes.
+    struct LoadedCombine {
+        exe: xla::PjRtLoadedExecutable,
+        block: usize,
+        c1: usize,
+        c2: usize,
+        n_sets: usize,
+        n_splits: usize,
+        /// cached split-table literals, keyed by the table's identity
+        /// (k, a, a1) — rebuilt only when the split changes
+        tables: Mutex<Option<((usize, usize, usize), xla::Literal, xla::Literal)>>,
     }
 
-    /// Load from the default `artifacts/` next to the crate root.
-    pub fn load_default() -> Result<XlaRuntime> {
-        let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        Self::load(&dir)
+    /// PJRT runtime holding all compiled artifacts.
+    pub struct XlaRuntime {
+        pub manifest: Manifest,
+        combines: HashMap<(usize, usize, usize), LoadedCombine>,
+        pub platform: String,
     }
 
-    pub fn has_combine(&self, k: usize, a: usize, a1: usize) -> bool {
-        self.combines.contains_key(&(k, a, a1))
-    }
-
-    /// Run one padded combine block through PJRT:
-    /// passive [block, c1], agg [block, c2] -> [block, n_sets].
-    fn run_block(&self, lc: &LoadedCombine, split: &SplitTable, passive: &[f32], agg: &[f32]) -> Result<Vec<f32>> {
-        let p_lit = xla::Literal::vec1(passive).reshape(&[lc.block as i64, lc.c1 as i64])?;
-        let a_lit = xla::Literal::vec1(agg).reshape(&[lc.block as i64, lc.c2 as i64])?;
-        // build (or reuse) the split-table literals
-        let key = (split.k, split.a, split.a1);
-        let mut guard = lc.tables.lock().unwrap();
-        if guard.as_ref().map(|(k, _, _)| *k) != Some(key) {
-            let t0: Vec<i32> = split.idx1.iter().map(|&x| x as i32).collect();
-            let t1: Vec<i32> = split.idx2.iter().map(|&x| x as i32).collect();
-            let dims = [lc.n_sets as i64, lc.n_splits as i64];
-            *guard = Some((
-                key,
-                xla::Literal::vec1(&t0).reshape(&dims)?,
-                xla::Literal::vec1(&t1).reshape(&dims)?,
-            ));
-        }
-        let (_, t0_lit, t1_lit) = guard.as_ref().unwrap();
-        let result = lc.exe.execute::<xla::Literal>(&[
-            p_lit,
-            a_lit,
-            t0_lit.clone(),
-            t1_lit.clone(),
-        ])?[0][0]
-            .to_literal_sync()?;
-        // lowered with return_tuple=True -> unwrap the 1-tuple
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
-    }
-}
-
-/// Combine backend plugged into `DistributedRunner` when
-/// `EngineKind::Xla` is selected: consumes the aggregation scratch in
-/// padded blocks through the PJRT executable and accumulates into `out`.
-pub struct XlaCombine {
-    pub rt: std::sync::Arc<XlaRuntime>,
-}
-
-impl XlaCombine {
-    pub fn new(rt: std::sync::Arc<XlaRuntime>) -> Self {
-        XlaCombine { rt }
-    }
-
-    /// Drop-in replacement for `colorcount::contract_touched`, returning
-    /// the same unit count. Falls back to the native path when no artifact
-    /// covers the split shape (documented behaviour: artifacts ship for
-    /// the small-template manifest).
-    pub fn contract_touched(
-        &self,
-        out: &mut CountTable,
-        passive: &CountTable,
-        split: &SplitTable,
-        scratch: &mut CombineScratch,
-    ) -> u64 {
-        let Some(lc) = self.rt.combines.get(&(split.k, split.a, split.a1)) else {
-            return crate::colorcount::contract_touched(out, passive, split, scratch);
-        };
-        debug_assert_eq!(lc.n_sets, split.n_sets);
-        debug_assert_eq!(lc.n_splits, split.n_splits);
-        let block = lc.block;
-        let touched: Vec<u32> = scratch.touched_rows().to_vec();
-        let mut units = 0u64;
-        for chunk in touched.chunks(block) {
-            // gather padded passive + agg blocks
-            let mut p_blk = vec![0f32; block * lc.c1];
-            let mut a_blk = vec![0f32; block * lc.c2];
-            for (r, &v) in chunk.iter().enumerate() {
-                p_blk[r * lc.c1..(r + 1) * lc.c1].copy_from_slice(passive.row(v as usize));
-                a_blk[r * lc.c2..(r + 1) * lc.c2].copy_from_slice(scratch.agg_row(v as usize));
-            }
-            let res = self
-                .rt
-                .run_block(lc, split, &p_blk, &a_blk)
-                .expect("PJRT combine execution");
-            for (r, &v) in chunk.iter().enumerate() {
-                let orow = out.row_mut(v as usize);
-                let src = &res[r * lc.n_sets..(r + 1) * lc.n_sets];
-                for (o, &x) in orow.iter_mut().zip(src) {
-                    *o += x as Count;
+    impl XlaRuntime {
+        /// Load + compile every combine artifact in `dir`.
+        pub fn load(dir: &Path) -> Result<XlaRuntime> {
+            let manifest = Manifest::load(dir)?;
+            let client = xla::PjRtClient::cpu().context("PJRT CPU client")?;
+            let platform = client.platform_name();
+            let mut combines = HashMap::new();
+            for e in &manifest.entries {
+                if e.kind != crate::runtime::manifest::ArtifactKind::Combine {
+                    continue;
                 }
+                let proto = xla::HloModuleProto::from_text_file(
+                    e.file.to_str().context("artifact path not UTF-8")?,
+                )
+                .with_context(|| format!("parse HLO text {:?}", e.file))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                let exe = client
+                    .compile(&comp)
+                    .with_context(|| format!("compile {:?}", e.file))?;
+                combines.insert(
+                    (e.k, e.a, e.a1),
+                    LoadedCombine {
+                        exe,
+                        block: e.block,
+                        c1: e.c1,
+                        c2: e.c2,
+                        n_sets: e.n_sets,
+                        n_splits: e.n_splits,
+                        tables: Mutex::new(None),
+                    },
+                );
             }
-            units += (chunk.len() * lc.n_sets * lc.n_splits) as u64;
+            Ok(XlaRuntime {
+                manifest,
+                combines,
+                platform,
+            })
         }
-        scratch.finish();
-        units
+
+        /// Load from the default `artifacts/` next to the crate root.
+        pub fn load_default() -> Result<XlaRuntime> {
+            let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+            Self::load(&dir)
+        }
+
+        pub fn has_combine(&self, k: usize, a: usize, a1: usize) -> bool {
+            self.combines.contains_key(&(k, a, a1))
+        }
+
+        /// Run one padded combine block through PJRT:
+        /// passive [block, c1], agg [block, c2] -> [block, n_sets].
+        fn run_block(
+            &self,
+            lc: &LoadedCombine,
+            split: &SplitTable,
+            passive: &[f32],
+            agg: &[f32],
+        ) -> Result<Vec<f32>> {
+            let p_lit = xla::Literal::vec1(passive).reshape(&[lc.block as i64, lc.c1 as i64])?;
+            let a_lit = xla::Literal::vec1(agg).reshape(&[lc.block as i64, lc.c2 as i64])?;
+            // build (or reuse) the split-table literals
+            let key = (split.k, split.a, split.a1);
+            let mut guard = lc.tables.lock().unwrap();
+            if guard.as_ref().map(|(k, _, _)| *k) != Some(key) {
+                let t0: Vec<i32> = split.idx1.iter().map(|&x| x as i32).collect();
+                let t1: Vec<i32> = split.idx2.iter().map(|&x| x as i32).collect();
+                let dims = [lc.n_sets as i64, lc.n_splits as i64];
+                *guard = Some((
+                    key,
+                    xla::Literal::vec1(&t0).reshape(&dims)?,
+                    xla::Literal::vec1(&t1).reshape(&dims)?,
+                ));
+            }
+            let (_, t0_lit, t1_lit) = guard.as_ref().unwrap();
+            let result = lc.exe.execute::<xla::Literal>(&[
+                p_lit,
+                a_lit,
+                t0_lit.clone(),
+                t1_lit.clone(),
+            ])?[0][0]
+                .to_literal_sync()?;
+            // lowered with return_tuple=True -> unwrap the 1-tuple
+            let out = result.to_tuple1()?;
+            Ok(out.to_vec::<f32>()?)
+        }
+    }
+
+    /// Combine backend plugged into `DistributedRunner` when
+    /// `EngineKind::Xla` is selected: consumes the aggregation scratch in
+    /// padded blocks through the PJRT executable and accumulates into `out`.
+    pub struct XlaCombine {
+        pub rt: std::sync::Arc<XlaRuntime>,
+    }
+
+    impl XlaCombine {
+        pub fn new(rt: std::sync::Arc<XlaRuntime>) -> Self {
+            XlaCombine { rt }
+        }
+
+        /// Drop-in replacement for `colorcount::contract_touched`, returning
+        /// the same unit count. Falls back to the native path when no artifact
+        /// covers the split shape (documented behaviour: artifacts ship for
+        /// the small-template manifest).
+        pub fn contract_touched(
+            &self,
+            out: &mut CountTable,
+            passive: &CountTable,
+            split: &SplitTable,
+            scratch: &mut CombineScratch,
+        ) -> u64 {
+            let Some(lc) = self.rt.combines.get(&(split.k, split.a, split.a1)) else {
+                return crate::colorcount::contract_touched(out, passive, split, scratch);
+            };
+            debug_assert_eq!(lc.n_sets, split.n_sets);
+            debug_assert_eq!(lc.n_splits, split.n_splits);
+            let block = lc.block;
+            let touched: Vec<u32> = scratch.touched_rows().to_vec();
+            let mut units = 0u64;
+            for chunk in touched.chunks(block) {
+                // gather padded passive + agg blocks
+                let mut p_blk = vec![0f32; block * lc.c1];
+                let mut a_blk = vec![0f32; block * lc.c2];
+                for (r, &v) in chunk.iter().enumerate() {
+                    p_blk[r * lc.c1..(r + 1) * lc.c1].copy_from_slice(passive.row(v as usize));
+                    a_blk[r * lc.c2..(r + 1) * lc.c2].copy_from_slice(scratch.agg_row(v as usize));
+                }
+                let res = self
+                    .rt
+                    .run_block(lc, split, &p_blk, &a_blk)
+                    .expect("PJRT combine execution");
+                for (r, &v) in chunk.iter().enumerate() {
+                    let orow = out.row_mut(v as usize);
+                    let src = &res[r * lc.n_sets..(r + 1) * lc.n_sets];
+                    for (o, &x) in orow.iter_mut().zip(src) {
+                        *o += x as Count;
+                    }
+                }
+                units += (chunk.len() * lc.n_sets * lc.n_splits) as u64;
+            }
+            scratch.finish();
+            units
+        }
+    }
+
+    #[cfg(test)]
+    mod tests {
+        use super::*;
+        use crate::colorcount::aggregate_batch;
+        use crate::combin::Binomial;
+        use std::sync::Arc;
+
+        fn runtime() -> Option<Arc<XlaRuntime>> {
+            XlaRuntime::load_default().ok().map(Arc::new)
+        }
+
+        #[test]
+        fn xla_combine_matches_native() {
+            let Some(rt) = runtime() else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            assert!(rt.has_combine(5, 3, 1), "u5-2 shape in manifest");
+            let binom = Binomial::new();
+            let split = SplitTable::new(5, 3, 1, &binom);
+            let n = 40;
+            let c1 = 5;
+            let c2 = binom.c(5, 2) as usize;
+            let mut passive = CountTable::zeros(n, c1);
+            let mut active = CountTable::zeros(n, c2);
+            for (i, x) in passive.data.iter_mut().enumerate() {
+                *x = ((i * 3) % 7) as f32;
+            }
+            for (i, x) in active.data.iter_mut().enumerate() {
+                *x = ((i * 5) % 11) as f32;
+            }
+            let pairs: Vec<(u32, u32)> = (0..n as u32)
+                .flat_map(|v| [(v, (v + 1) % n as u32), (v, (v + 7) % n as u32)])
+                .collect();
+
+            let run = |xla: bool| -> CountTable {
+                let mut out = CountTable::zeros(n, split.n_sets);
+                let mut scratch = CombineScratch::new(n, c2);
+                scratch.begin(c2);
+                aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+                if xla {
+                    let xc = XlaCombine::new(rt.clone());
+                    xc.contract_touched(&mut out, &passive, &split, &mut scratch);
+                } else {
+                    crate::colorcount::contract_touched(&mut out, &passive, &split, &mut scratch);
+                }
+                out
+            };
+            let native = run(false);
+            let xla = run(true);
+            for (a, b) in native.data.iter().zip(&xla.data) {
+                assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+            }
+        }
+
+        #[test]
+        fn missing_shape_falls_back() {
+            let Some(rt) = runtime() else {
+                eprintln!("skipping: artifacts not built");
+                return;
+            };
+            // k=12 shapes are not in the manifest — must silently use native
+            let binom = Binomial::new();
+            let split = SplitTable::new(12, 3, 1, &binom);
+            assert!(!rt.has_combine(12, 3, 1));
+            let mut out = CountTable::zeros(4, split.n_sets);
+            let passive = CountTable::zeros(4, binom.c(12, 1) as usize);
+            let active = CountTable::zeros(4, binom.c(12, 2) as usize);
+            let mut scratch = CombineScratch::new(4, active.n_sets);
+            scratch.begin(active.n_sets);
+            aggregate_batch(&mut scratch, &active, [(0u32, 1u32)].into_iter());
+            let xc = XlaCombine::new(rt);
+            let units = xc.contract_touched(&mut out, &passive, &split, &mut scratch);
+            assert!(units > 0);
+        }
     }
 }
 
-#[cfg(test)]
-mod tests {
-    use super::*;
-    use crate::colorcount::aggregate_batch;
-    use crate::combin::Binomial;
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use crate::colorcount::{CombineScratch, CountTable};
+    use crate::combin::SplitTable;
+    use crate::runtime::manifest::Manifest;
+    use anyhow::{bail, Result};
+    use std::path::Path;
     use std::sync::Arc;
 
-    fn runtime() -> Option<Arc<XlaRuntime>> {
-        XlaRuntime::load_default().ok().map(Arc::new)
+    /// Stub runtime compiled when the `pjrt` feature is off: loading always
+    /// fails so callers take their documented "artifacts unavailable" path.
+    pub struct XlaRuntime {
+        pub manifest: Manifest,
+        pub platform: String,
     }
 
-    #[test]
-    fn xla_combine_matches_native() {
-        let Some(rt) = runtime() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        assert!(rt.has_combine(5, 3, 1), "u5-2 shape in manifest");
-        let binom = Binomial::new();
-        let split = SplitTable::new(5, 3, 1, &binom);
-        let n = 40;
-        let c1 = 5;
-        let c2 = binom.c(5, 2) as usize;
-        let mut passive = CountTable::zeros(n, c1);
-        let mut active = CountTable::zeros(n, c2);
-        for (i, x) in passive.data.iter_mut().enumerate() {
-            *x = ((i * 3) % 7) as f32;
+    impl XlaRuntime {
+        pub fn load(_dir: &Path) -> Result<XlaRuntime> {
+            bail!(
+                "harpsg was built without the `pjrt` feature; \
+                 the XLA/PJRT engine is unavailable (rebuild with \
+                 `--features pjrt` and the xla bindings crate)"
+            )
         }
-        for (i, x) in active.data.iter_mut().enumerate() {
-            *x = ((i * 5) % 11) as f32;
-        }
-        let pairs: Vec<(u32, u32)> = (0..n as u32)
-            .flat_map(|v| [(v, (v + 1) % n as u32), (v, (v + 7) % n as u32)])
-            .collect();
 
-        let run = |xla: bool| -> CountTable {
-            let mut out = CountTable::zeros(n, split.n_sets);
-            let mut scratch = CombineScratch::new(n, c2);
-            scratch.begin(c2);
-            aggregate_batch(&mut scratch, &active, pairs.iter().copied());
-            if xla {
-                let xc = XlaCombine::new(rt.clone());
-                xc.contract_touched(&mut out, &passive, &split, &mut scratch);
-            } else {
-                crate::colorcount::contract_touched(&mut out, &passive, &split, &mut scratch);
-            }
-            out
-        };
-        let native = run(false);
-        let xla = run(true);
-        for (a, b) in native.data.iter().zip(&xla.data) {
-            assert!((a - b).abs() < 1e-3, "{a} vs {b}");
+        pub fn load_default() -> Result<XlaRuntime> {
+            Self::load(Path::new("artifacts"))
+        }
+
+        pub fn has_combine(&self, _k: usize, _a: usize, _a1: usize) -> bool {
+            false
         }
     }
 
-    #[test]
-    fn missing_shape_falls_back() {
-        let Some(rt) = runtime() else {
-            eprintln!("skipping: artifacts not built");
-            return;
-        };
-        // k=12 shapes are not in the manifest — must silently use native
-        let binom = Binomial::new();
-        let split = SplitTable::new(12, 3, 1, &binom);
-        assert!(!rt.has_combine(12, 3, 1));
-        let mut out = CountTable::zeros(4, split.n_sets);
-        let passive = CountTable::zeros(4, binom.c(12, 1) as usize);
-        let active = CountTable::zeros(4, binom.c(12, 2) as usize);
-        let mut scratch = CombineScratch::new(4, active.n_sets);
-        scratch.begin(active.n_sets);
-        aggregate_batch(&mut scratch, &active, [(0u32, 1u32)].into_iter());
-        let xc = XlaCombine::new(rt);
-        let units = xc.contract_touched(&mut out, &passive, &split, &mut scratch);
-        assert!(units > 0);
+    /// Stub combine backend: always the native contraction, bit-identical
+    /// to `colorcount::contract_touched` by construction.
+    pub struct XlaCombine {
+        pub rt: Arc<XlaRuntime>,
+    }
+
+    impl XlaCombine {
+        pub fn new(rt: Arc<XlaRuntime>) -> Self {
+            XlaCombine { rt }
+        }
+
+        pub fn contract_touched(
+            &self,
+            out: &mut CountTable,
+            passive: &CountTable,
+            split: &SplitTable,
+            scratch: &mut CombineScratch,
+        ) -> u64 {
+            crate::colorcount::contract_touched(out, passive, split, scratch)
+        }
     }
 }
+
+pub use imp::{XlaCombine, XlaRuntime};

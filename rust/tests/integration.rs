@@ -1,15 +1,31 @@
 //! Cross-module integration tests: the invariants a downstream user
 //! relies on, exercised over the real stack (graph gen → partition →
 //! distributed DP → estimate; plus the AOT/PJRT path when artifacts are
-//! built).
+//! built). All distributed runs go through the `harpsg::api` facade —
+//! `Session` + `CountJob` + `JobReport` — which is exactly how the CLI
+//! and the figure harness drive the system.
 
+use harpsg::api::{CountJob, HarpsgError, PartitionKind, Progress, Session, SessionOptions};
 use harpsg::colorcount::{count_embeddings, Engine};
-use harpsg::coordinator::{DistributedRunner, EngineKind, ModeSelect, RunConfig};
+use harpsg::coordinator::{EngineKind, ModeSelect};
 use harpsg::graph::rmat::{generate, RmatParams};
-use harpsg::graph::Dataset;
-use harpsg::runtime::{XlaCombine, XlaRuntime};
+use harpsg::graph::{Dataset, Graph};
 use harpsg::template::{builtin, BUILTIN_NAMES};
 use harpsg::util::prop;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+fn session_with_seed(g: Graph, seed: u64) -> Session {
+    Session::with_options(
+        g,
+        SessionOptions {
+            seed,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        },
+    )
+    .expect("session")
+}
 
 /// The core invariant, at integration scale: any (mode, ranks, template)
 /// combination produces the same colorful counts as the single-rank
@@ -17,6 +33,7 @@ use harpsg::util::prop;
 #[test]
 fn distributed_count_invariance_matrix() {
     let g = generate(&RmatParams::with_skew(300, 2_500, 3, 99));
+    let session = session_with_seed(g.clone(), 5);
     for tpl in ["u3-1", "u5-2", "u7-2", "u10-2"] {
         let t = builtin(tpl).unwrap();
         let engine = Engine::new(&t);
@@ -25,14 +42,14 @@ fn distributed_count_invariance_matrix() {
             .collect();
         for mode in [ModeSelect::Naive, ModeSelect::Pipeline, ModeSelect::AdaptiveLb] {
             for ranks in [2, 7] {
-                let cfg = RunConfig {
-                    n_ranks: ranks,
-                    mode,
-                    n_iterations: 2,
-                    seed: 5,
-                    ..RunConfig::default()
-                };
-                let r = DistributedRunner::new(&t, &g, cfg).run();
+                let job = CountJob::builder(t.clone())
+                    .ranks(ranks)
+                    .mode(mode)
+                    .iterations(2)
+                    .seed(5)
+                    .build()
+                    .unwrap();
+                let r = session.count(&job).unwrap();
                 for (it, (a, b)) in r.colorful.iter().zip(&reference).enumerate() {
                     let rel = (a - b).abs() / b.abs().max(1.0);
                     assert!(
@@ -43,6 +60,8 @@ fn distributed_count_invariance_matrix() {
             }
         }
     }
+    // the whole matrix used exactly one plan per rank count
+    assert_eq!(session.cached_plans(), 2);
 }
 
 /// Property-style sweep: random graph/template/mode/rank combinations
@@ -67,16 +86,18 @@ fn prop_distributed_invariance() {
         let single = Engine::new(&t)
             .run_iteration(&g, harpsg::util::mix2(seed, 0))
             .colorful;
-        let cfg = RunConfig {
-            n_ranks: ranks,
-            mode,
-            n_iterations: 1,
-            seed,
-            task_size: gen.usize_in(1, 100) as u32,
-            n_threads: gen.usize_in(1, 48),
-            ..RunConfig::default()
-        };
-        let r = DistributedRunner::new(&t, &g, cfg).run();
+        let session = session_with_seed(g, seed);
+        let mut builder = CountJob::builder(t)
+            .ranks(ranks)
+            .mode(mode)
+            .iterations(1)
+            .seed(seed)
+            .threads(gen.usize_in(1, 48));
+        if mode == ModeSelect::AdaptiveLb {
+            builder = builder.task_size(gen.usize_in(1, 100) as u32);
+        }
+        let job = builder.build().map_err(|e| e.to_string())?;
+        let r = session.count(&job).map_err(|e| e.to_string())?;
         let rel = (r.colorful[0] - single).abs() / single.abs().max(1.0);
         if rel < 1e-3 {
             Ok(())
@@ -96,58 +117,231 @@ fn estimator_converges_distributed() {
     let t = builtin("u5-2").unwrap();
     let truth = count_embeddings(&t, &g);
     assert!(truth > 0.0);
-    let cfg = RunConfig {
-        n_ranks: 4,
-        n_iterations: 800,
-        seed: 11,
-        ..RunConfig::default()
-    };
-    let r = DistributedRunner::new(&t, &g, cfg).run();
+    let session = session_with_seed(g, 11);
+    let job = CountJob::builder(t)
+        .ranks(4)
+        .iterations(800)
+        .seed(11)
+        .build()
+        .unwrap();
+    let r = session.count(&job).unwrap();
     let rel = (r.estimate - truth).abs() / truth;
     assert!(rel < 0.2, "estimate {} vs exact {truth} (rel {rel})", r.estimate);
 }
 
 /// All ten builtin templates run through the full stack without panicking
-/// and yield finite estimates (tiny workload).
+/// and yield finite estimates (tiny workload) — one session, one shared
+/// exchange plan.
 #[test]
 fn all_templates_run_end_to_end() {
     let g = generate(&RmatParams::with_skew(64, 600, 3, 21));
+    let session = Session::new(g);
     for tpl in BUILTIN_NAMES {
-        let t = builtin(tpl).unwrap();
-        let cfg = RunConfig {
-            n_ranks: 3,
-            n_iterations: 1,
-            ..RunConfig::default()
-        };
-        let r = DistributedRunner::new(&t, &g, cfg).run();
+        let job = CountJob::of_builtin(tpl)
+            .unwrap()
+            .ranks(3)
+            .iterations(1)
+            .build()
+            .unwrap();
+        let r = session.count(&job).unwrap();
         assert!(r.estimate.is_finite(), "{tpl}");
         assert!(r.model.total > 0.0, "{tpl}");
         assert!(r.peak_mem() > 0, "{tpl}");
+        assert!(!r.comm_decisions.is_empty(), "{tpl}");
     }
+    assert_eq!(session.cached_plans(), 1);
+}
+
+/// THE acceptance check for the session facade: a multi-template batch
+/// reuses one partition + request-list build and still produces
+/// bit-identical estimates to fresh per-template sessions.
+#[test]
+fn session_batch_reuses_setup_bit_identically() {
+    let g = generate(&RmatParams::with_skew(200, 1_600, 3, 77));
+    let names = ["u3-1", "u5-2", "u7-2", "u10-2"];
+    let mk_job = |name: &str| {
+        CountJob::of_builtin(name)
+            .unwrap()
+            .ranks(4)
+            .iterations(2)
+            .seed(9)
+            .build()
+            .unwrap()
+    };
+
+    let batch_session = session_with_seed(g.clone(), 9);
+    let jobs: Vec<_> = names.iter().map(|n| mk_job(n)).collect();
+    let batch = batch_session.count_batch(&jobs).unwrap();
+
+    // one plan served all four templates…
+    assert_eq!(batch_session.cached_plans(), 1);
+    assert!(Arc::ptr_eq(
+        &batch_session.plan(4),
+        &batch_session.plan(4)
+    ));
+    // …and every job after the first says so
+    assert!(!batch[0].setup_reused);
+    assert!(batch[1..].iter().all(|r| r.setup_reused));
+
+    // bit-identical to per-template sessions with the same options
+    for (name, batched) in names.iter().zip(&batch) {
+        let solo_session = session_with_seed(g.clone(), 9);
+        let solo = solo_session.count(&mk_job(name)).unwrap();
+        assert_eq!(
+            solo.estimate.to_bits(),
+            batched.estimate.to_bits(),
+            "{name}: batch and solo estimates must be bit-identical"
+        );
+        assert_eq!(solo.colorful, batched.colorful, "{name}");
+        assert_eq!(solo.samples, batched.samples, "{name}");
+        assert_eq!(solo.peak_mem_per_rank, batched.peak_mem_per_rank, "{name}");
+    }
+}
+
+/// Counting observer: every callback fires, with internally consistent
+/// totals (ring of 5 ranks with g=1 → 4 exchange steps per combine).
+#[test]
+fn progress_observer_streams_events() {
+    #[derive(Default)]
+    struct Counter {
+        run_starts: AtomicUsize,
+        iterations: AtomicUsize,
+        sub_starts: AtomicUsize,
+        sub_dones: AtomicUsize,
+        steps: AtomicUsize,
+        run_ends: AtomicUsize,
+    }
+    impl Progress for Counter {
+        fn on_run_start(&self, n_iterations: usize, n_subtemplates: usize) {
+            assert_eq!(n_iterations, 2);
+            assert!(n_subtemplates > 0);
+            self.run_starts.fetch_add(1, Ordering::SeqCst);
+        }
+        fn on_iteration(&self, _it: usize, n: usize) {
+            assert_eq!(n, 2);
+            self.iterations.fetch_add(1, Ordering::SeqCst);
+        }
+        fn on_subtemplate_start(&self, _sub: usize, n_steps: usize, pipelined: bool) {
+            assert!(pipelined);
+            assert_eq!(n_steps, 4);
+            self.sub_starts.fetch_add(1, Ordering::SeqCst);
+        }
+        fn on_exchange_step(&self, _sub: usize, step: usize, n_steps: usize) {
+            assert!(step < n_steps);
+            self.steps.fetch_add(1, Ordering::SeqCst);
+        }
+        fn on_subtemplate_done(&self, _sub: usize) {
+            self.sub_dones.fetch_add(1, Ordering::SeqCst);
+        }
+        fn on_run_end(&self) {
+            self.run_ends.fetch_add(1, Ordering::SeqCst);
+        }
+    }
+
+    let g = generate(&RmatParams::with_skew(80, 500, 3, 13));
+    let session = Session::new(g);
+    let job = CountJob::of_builtin("u5-2")
+        .unwrap()
+        .ranks(5)
+        .mode(ModeSelect::Pipeline)
+        .iterations(2)
+        .build()
+        .unwrap();
+    let counter = Arc::new(Counter::default());
+    let report = session.count_with_progress(&job, counter.clone()).unwrap();
+
+    assert_eq!(counter.run_starts.load(Ordering::SeqCst), 1);
+    assert_eq!(counter.run_ends.load(Ordering::SeqCst), 1);
+    assert_eq!(counter.iterations.load(Ordering::SeqCst), 2);
+    let subs = counter.sub_starts.load(Ordering::SeqCst);
+    assert!(subs > 0);
+    assert_eq!(counter.sub_dones.load(Ordering::SeqCst), subs);
+    // every combine runs its full 4-step ring
+    assert_eq!(counter.steps.load(Ordering::SeqCst), subs * 4);
+    // the report agrees with what the observer saw
+    assert_eq!(report.n_iterations, 2);
+    assert!(report.comm_decisions.iter().all(|d| d.n_steps == 4));
+}
+
+/// `JobReport::to_json_string` must round-trip through the crate's own
+/// JSON parser with the headline fields intact — this is the contract
+/// behind `harpsg count --json`.
+#[test]
+fn json_report_roundtrips() {
+    let g = generate(&RmatParams::with_skew(90, 700, 3, 17));
+    let session = Session::new(g);
+    let job = CountJob::of_builtin("u7-2")
+        .unwrap()
+        .ranks(4)
+        .iterations(2)
+        .build()
+        .unwrap();
+    let report = session.count(&job).unwrap();
+    let parsed = harpsg::util::jsonparse::parse(&report.to_json_string()).unwrap();
+
+    let tpl = parsed.get("template").unwrap();
+    assert_eq!(tpl.get("name").unwrap().as_str(), Some("u7-2"));
+    assert_eq!(tpl.get("k").unwrap().as_usize(), Some(7));
+    let cfg = parsed.get("config").unwrap();
+    assert_eq!(cfg.get("ranks").unwrap().as_usize(), Some(4));
+    assert_eq!(cfg.get("mode").unwrap().as_str(), Some("AdaptiveLB"));
+    let est = parsed.get("estimate").unwrap().as_f64().unwrap();
+    assert!((est - report.estimate).abs() <= 1e-9 * report.estimate.abs().max(1.0));
+    assert_eq!(parsed.get("colorful").unwrap().as_arr().unwrap().len(), 2);
+    let mem = parsed.get("memory").unwrap();
+    assert_eq!(
+        mem.get("peak_per_rank").unwrap().as_arr().unwrap().len(),
+        4
+    );
+    assert!(!parsed.get("comm").unwrap().as_arr().unwrap().is_empty());
+}
+
+/// Jobs that select the XLA engine on a session without the runtime are
+/// rejected with the typed error, not a panic at run time.
+#[test]
+fn xla_without_runtime_is_a_typed_error() {
+    let g = generate(&RmatParams::with_skew(40, 160, 1, 23));
+    let session = Session::new(g);
+    let job = CountJob::of_builtin("u3-1")
+        .unwrap()
+        .ranks(2)
+        .engine(EngineKind::Xla)
+        .build()
+        .unwrap();
+    assert!(matches!(
+        session.count(&job),
+        Err(HarpsgError::EngineUnavailable(_))
+    ));
 }
 
 /// The XLA engine (PJRT artifacts) produces identical counts to the
 /// native engine through the full distributed stack.
 #[test]
 fn xla_engine_matches_native_end_to_end() {
-    let Ok(rt) = XlaRuntime::load_default() else {
-        eprintln!("skipping: run `make artifacts` first");
+    let xla_session = Session::with_options(
+        Dataset::MiamiS.generate(4000),
+        SessionOptions {
+            seed: 42,
+            partition: PartitionKind::Random,
+            load_xla: true,
+        },
+    );
+    let Ok(session) = xla_session else {
+        eprintln!("skipping: run `make artifacts` first (or build with --features pjrt)");
         return;
     };
-    let rt = std::sync::Arc::new(rt);
-    let g = Dataset::MiamiS.generate(4000);
     for tpl in ["u3-1", "u5-2", "u7-2"] {
-        let t = builtin(tpl).unwrap();
-        let mk = |engine| RunConfig {
-            n_ranks: 3,
-            n_iterations: 2,
-            engine,
-            ..RunConfig::default()
+        let mk = |engine| {
+            CountJob::of_builtin(tpl)
+                .unwrap()
+                .ranks(3)
+                .iterations(2)
+                .engine(engine)
+                .build()
+                .unwrap()
         };
-        let native = DistributedRunner::new(&t, &g, mk(EngineKind::Native)).run();
-        let mut xrun = DistributedRunner::new(&t, &g, mk(EngineKind::Xla));
-        xrun.xla = Some(XlaCombine::new(rt.clone()));
-        let xla = xrun.run();
+        let native = session.count(&mk(EngineKind::Native)).unwrap();
+        let xla = session.count(&mk(EngineKind::Xla)).unwrap();
         for (a, b) in native.colorful.iter().zip(&xla.colorful) {
             let rel = (a - b).abs() / b.abs().max(1.0);
             assert!(rel < 1e-4, "{tpl}: native {a} vs xla {b}");
@@ -160,16 +354,17 @@ fn xla_engine_matches_native_end_to_end() {
 #[test]
 fn pipeline_memory_dominance() {
     let g = generate(&RmatParams::with_skew(400, 8_000, 3, 31));
+    let session = Session::new(g);
     for tpl in ["u10-2", "u12-1", "u12-2"] {
-        let t = builtin(tpl).unwrap();
         let run = |mode| {
-            let cfg = RunConfig {
-                n_ranks: 8,
-                mode,
-                n_iterations: 1,
-                ..RunConfig::default()
-            };
-            DistributedRunner::new(&t, &g, cfg).run().peak_mem()
+            let job = CountJob::of_builtin(tpl)
+                .unwrap()
+                .ranks(8)
+                .mode(mode)
+                .iterations(1)
+                .build()
+                .unwrap();
+            session.count(&job).unwrap().peak_mem()
         };
         let naive = run(ModeSelect::Naive);
         let pipe = run(ModeSelect::Pipeline);
@@ -180,19 +375,22 @@ fn pipeline_memory_dominance() {
     }
 }
 
-/// Estimates must be deterministic given a seed (full stack).
+/// Estimates must be deterministic given a seed (full stack, across
+/// separately-opened sessions).
 #[test]
 fn runs_are_reproducible() {
     let g = generate(&RmatParams::with_skew(128, 900, 3, 8));
-    let t = builtin("u7-2").unwrap();
-    let mk = || RunConfig {
-        n_ranks: 5,
-        n_iterations: 3,
-        seed: 77,
-        ..RunConfig::default()
+    let mk_job = || {
+        CountJob::of_builtin("u7-2")
+            .unwrap()
+            .ranks(5)
+            .iterations(3)
+            .seed(77)
+            .build()
+            .unwrap()
     };
-    let a = DistributedRunner::new(&t, &g, mk()).run();
-    let b = DistributedRunner::new(&t, &g, mk()).run();
+    let a = session_with_seed(g.clone(), 77).count(&mk_job()).unwrap();
+    let b = session_with_seed(g, 77).count(&mk_job()).unwrap();
     assert_eq!(a.colorful, b.colorful);
     assert_eq!(a.estimate, b.estimate);
     assert_eq!(a.peak_mem_per_rank, b.peak_mem_per_rank);
