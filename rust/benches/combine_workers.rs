@@ -1,0 +1,86 @@
+//! Serial vs parallel combine across `max_task_size` settings — the
+//! Alg-4 / Fig-11 trade-off measured on the *real* executor instead of
+//! the virtual-thread replay. A skewed (hub-heavy) pair distribution
+//! shows why neighbor-list partitioning matters: with per-vertex tasks
+//! (`mts=0`) the hub pins one worker; bounded tasks spread it.
+//!
+//! Run: `cargo bench --bench combine_workers` (HARPSG_BENCH_MS tunes the
+//! per-case budget).
+
+use harpsg::colorcount::parallel::{combine_batches, PairBatch};
+use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable};
+use harpsg::combin::{Binomial, SplitTable};
+use harpsg::metrics::bench;
+
+fn mk_tables(n: usize, c1: usize, c2: usize) -> (CountTable, CountTable) {
+    let mut passive = CountTable::zeros(n, c1);
+    let mut active = CountTable::zeros(n, c2);
+    for (i, x) in passive.data.iter_mut().enumerate() {
+        *x = ((i * 7) % 5) as f32;
+    }
+    for (i, x) in active.data.iter_mut().enumerate() {
+        *x = ((i * 3) % 4) as f32;
+    }
+    (passive, active)
+}
+
+/// A hub-heavy workload: `n_hubs` vertices carry `hub_deg` pairs each,
+/// the rest a flat `deg` — the degree shape of the paper's social graphs.
+fn skewed_pairs(n: usize, deg: usize, n_hubs: usize, hub_deg: usize) -> Vec<(u32, u32)> {
+    let mut pairs = Vec::new();
+    for v in 0..n as u32 {
+        let d = if (v as usize) < n_hubs { hub_deg } else { deg };
+        for i in 1..=d as u32 {
+            pairs.push((v, (v.wrapping_mul(31).wrapping_add(i * 7)) % n as u32));
+        }
+    }
+    pairs
+}
+
+fn bench_shape(label: &str, k: usize, a: usize, a1: usize, n: usize) {
+    let binom = Binomial::new();
+    let split = SplitTable::new(k, a, a1, &binom);
+    let c1 = binom.c(k, a1) as usize;
+    let c2 = binom.c(k, a - a1) as usize;
+    let (passive, active) = mk_tables(n, c1, c2);
+    let pairs = skewed_pairs(n, 8, 4, 4 * n);
+    let units = pairs.len() as f64 * c2 as f64;
+
+    // serial reference: the scratch-based aggregate + contract
+    let mut out = CountTable::zeros(n, split.n_sets);
+    let mut scratch = CombineScratch::new(n, c2);
+    let t_serial = bench(&format!("{label}/serial"), || {
+        scratch.begin(c2);
+        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        contract_touched(&mut out, &passive, &split, &mut scratch);
+    });
+    println!("  -> {:.2} ns/pair-unit\n", t_serial * 1e9 / units);
+
+    for workers in [1usize, 2, 4, 8] {
+        for mts in [0u32, 64, 256] {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let t = bench(
+                &format!("{label}/exec w={workers} mts={mts}"),
+                || {
+                    let batch = [PairBatch {
+                        pairs: &pairs,
+                        rows: &active,
+                    }];
+                    combine_batches(&mut out, &passive, &split, &batch, mts, workers)
+                },
+            );
+            println!(
+                "  -> {:.2} ns/pair-unit, {:.2}x vs serial\n",
+                t * 1e9 / units,
+                t_serial / t
+            );
+        }
+    }
+}
+
+fn main() {
+    println!("== combine executor: serial vs workers x max_task_size ==");
+    bench_shape("u5-2-root (k5,a5,a1=1) n=4096", 5, 5, 1, 4096);
+    bench_shape("u10-2-mid (k10,a5,a1=1) n=2048", 10, 5, 1, 2048);
+    bench_shape("u12-2-mid (k12,a6,a1=2) n=1024", 12, 6, 2, 1024);
+}

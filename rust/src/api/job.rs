@@ -78,6 +78,16 @@ impl CountJobBuilder {
         self
     }
 
+    /// Real combine-executor threads (1..=512, the CLI's `--workers`).
+    /// Unlike [`Self::threads`] — the *modeled* virtual-thread count —
+    /// this spawns actual OS threads for every combine. Counts and
+    /// estimates are bit-identical for any value; only the measured
+    /// per-worker record in the report changes.
+    pub fn workers(mut self, n: usize) -> Self {
+        self.cfg.n_workers = n;
+        self
+    }
+
     /// Color-coding iterations (≥ 1).
     pub fn iterations(mut self, n: usize) -> Self {
         self.cfg.n_iterations = n;
@@ -161,6 +171,17 @@ impl CountJobBuilder {
         if cfg.n_threads == 0 {
             return Err(HarpsgError::InvalidJob("n_threads must be ≥ 1".into()));
         }
+        if cfg.n_workers == 0 {
+            return Err(HarpsgError::InvalidJob(
+                "n_workers must be ≥ 1 (real combine-executor threads)".into(),
+            ));
+        }
+        if cfg.n_workers > 512 {
+            return Err(HarpsgError::InvalidJob(format!(
+                "n_workers {} exceeds the executor limit of 512",
+                cfg.n_workers
+            )));
+        }
         if cfg.n_iterations == 0 {
             return Err(HarpsgError::InvalidJob("n_iterations must be ≥ 1".into()));
         }
@@ -227,6 +248,19 @@ mod tests {
             base().iterations(0).build(),
             Err(HarpsgError::InvalidJob(_))
         ));
+    }
+
+    #[test]
+    fn worker_count_bounds() {
+        assert!(matches!(
+            base().workers(0).build(),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        assert!(matches!(
+            base().workers(513).build(),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        assert_eq!(base().workers(8).build().unwrap().config().n_workers, 8);
     }
 
     #[test]

@@ -4,6 +4,7 @@
 //! setup accounting, and it serializes to JSON (via the in-repo
 //! `util::Json` writer) and CSV (via `metrics::Series`).
 
+use crate::colorcount::ExecStats;
 use crate::coordinator::{CommDecision, ModelTime, RunResult, ThreadStats};
 use crate::graph::Graph;
 use crate::metrics::Series;
@@ -29,6 +30,8 @@ pub struct JobReport {
     pub engine: String,
     pub n_ranks: usize,
     pub n_threads: usize,
+    /// configured real combine-executor threads (`--workers`)
+    pub n_workers: usize,
     pub n_iterations: usize,
     pub seed: u64,
     pub task_size: u32,
@@ -41,7 +44,11 @@ pub struct JobReport {
     pub model: ModelTime,
     /// exchange schedule chosen per non-leaf subtemplate
     pub comm_decisions: Vec<CommDecision>,
+    /// modeled (virtual-replay) thread stats — the Fig-11 reconstruction
     pub threads: ThreadStats,
+    /// *measured* per-worker record of the real combine executor (busy
+    /// seconds, tasks, pairs per worker) — see `colorcount::parallel`
+    pub workers: ExecStats,
     pub peak_mem_per_rank: Vec<u64>,
     /// measured seconds per compute unit
     pub flop_time: f64,
@@ -73,6 +80,7 @@ impl JobReport {
             engine: job.cfg.engine.name().to_string(),
             n_ranks: job.cfg.n_ranks,
             n_threads: job.cfg.n_threads,
+            n_workers: job.cfg.n_workers,
             n_iterations: job.cfg.n_iterations,
             seed: job.cfg.seed,
             task_size: job.cfg.effective_task_size(),
@@ -82,6 +90,7 @@ impl JobReport {
             model: r.model,
             comm_decisions: r.comm_decisions,
             threads: r.threads,
+            workers: r.workers,
             peak_mem_per_rank: r.peak_mem_per_rank,
             flop_time: r.flop_time,
             real_seconds: r.real_seconds,
@@ -127,6 +136,7 @@ impl JobReport {
                     ("engine".into(), Json::Str(self.engine.clone())),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),
+                    ("workers".into(), Json::Num(self.n_workers as f64)),
                     ("iterations".into(), Json::Num(self.n_iterations as f64)),
                     // string, not number: u64 seeds above 2^53 would lose
                     // precision through a JSON double
@@ -189,6 +199,42 @@ impl JobReport {
                     (
                         "concurrency_histogram".into(),
                         num_arr(&self.threads.concurrency_histogram),
+                    ),
+                ]),
+            ),
+            (
+                // measured (not modeled) combine-executor record
+                "workers".into(),
+                Json::Obj(vec![
+                    ("configured".into(), Json::Num(self.n_workers as f64)),
+                    (
+                        "busy".into(),
+                        Json::Num(self.workers.busy_workers() as f64),
+                    ),
+                    ("imbalance".into(), Json::Num(self.workers.imbalance())),
+                    (
+                        "busy_seconds".into(),
+                        num_arr(&self.workers.busy_seconds),
+                    ),
+                    (
+                        "tasks".into(),
+                        Json::Arr(
+                            self.workers
+                                .worker_tasks
+                                .iter()
+                                .map(|&t| Json::Num(t as f64))
+                                .collect(),
+                        ),
+                    ),
+                    (
+                        "pairs".into(),
+                        Json::Arr(
+                            self.workers
+                                .worker_pairs
+                                .iter()
+                                .map(|&p| Json::Num(p as f64))
+                                .collect(),
+                        ),
                     ),
                 ]),
             ),

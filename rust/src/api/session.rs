@@ -243,6 +243,31 @@ mod tests {
     }
 
     #[test]
+    fn workers_knob_is_bit_stable_via_facade() {
+        // the facade-level acceptance check: --workers N reproduces
+        // --workers 1 exactly, while the measured record reflects N
+        let s = Session::new(graph());
+        let mk = |w: usize| {
+            CountJob::of_builtin("u5-2")
+                .unwrap()
+                .ranks(4)
+                .iterations(2)
+                .workers(w)
+                .build()
+                .unwrap()
+        };
+        let one = s.count(&mk(1)).unwrap();
+        let four = s.count(&mk(4)).unwrap();
+        assert_eq!(one.estimate.to_bits(), four.estimate.to_bits());
+        assert_eq!(one.colorful, four.colorful);
+        assert_eq!(one.n_workers, 1);
+        assert_eq!(four.n_workers, 4);
+        assert_eq!(four.workers.n_workers(), 4);
+        assert_eq!(one.workers.n_pairs, four.workers.n_pairs);
+        assert!(four.workers.n_pairs > 0);
+    }
+
+    #[test]
     fn block_partition_sessions_differ_from_random() {
         let g = graph();
         let s_rand = Session::new(g.clone());

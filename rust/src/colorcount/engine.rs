@@ -17,6 +17,7 @@
 //! sets sums to the full result. The distributed coordinator leans on this
 //! to interleave per-step computation with communication (Alg 3).
 
+use super::parallel::{combine_batches, ExecStats, PairBatch};
 use super::table::{init_leaf_table, Coloring, Count, CountTable};
 use crate::combin::{Binomial, SplitTable};
 use crate::graph::Graph;
@@ -183,6 +184,57 @@ pub fn aggregate_batch(
     n
 }
 
+/// Contract one vertex row through the split table:
+/// `orow[s] += Σ_j prow[idx1[s,j]] · arow[idx2[s,j]]`. This is the inner
+/// kernel shared by the serial [`contract_touched`] and the parallel
+/// executor ([`super::parallel`]) so both paths run bit-identical
+/// arithmetic. Returns the (set, split) units processed for this row.
+///
+/// SAFETY contract for the unchecked accesses: callers must guarantee
+/// every `split.idx1` entry is `< prow.len()` and every `split.idx2`
+/// entry is `< arow.len()` (the public entry points debug-assert this).
+#[inline]
+pub(crate) fn contract_row(
+    orow: &mut [Count],
+    prow: &[Count],
+    arow: &[Count],
+    split: &SplitTable,
+) -> u64 {
+    let n_splits = split.n_splits;
+    let n_sets = split.n_sets;
+    let idx1 = &split.idx1[..n_sets * n_splits];
+    let idx2 = &split.idx2[..n_sets * n_splits];
+    let mut flat = 0usize;
+    for o in orow.iter_mut().take(n_sets) {
+        // two accumulators break the FMA dependency chain over the
+        // (short, 2–70 long) split run — measured win in §Perf
+        let mut acc0 = 0.0f32;
+        let mut acc1 = 0.0f32;
+        let mut j = 0;
+        // SAFETY: flat+j < n_sets*n_splits by loop structure; index
+        // ranges validated by the caller (see the function docs).
+        unsafe {
+            while j + 2 <= n_splits {
+                let p0 = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
+                let a0 = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
+                let p1 = *prow.get_unchecked(*idx1.get_unchecked(flat + j + 1) as usize);
+                let a1 = *arow.get_unchecked(*idx2.get_unchecked(flat + j + 1) as usize);
+                acc0 += p0 * a0;
+                acc1 += p1 * a1;
+                j += 2;
+            }
+            if j < n_splits {
+                let p = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
+                let a = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
+                acc0 += p * a;
+            }
+        }
+        flat += n_splits;
+        *o += acc0 + acc1;
+    }
+    (n_sets * n_splits) as u64
+}
+
 /// Contract the touched aggregation rows into `out` through the split
 /// table: `out[v,s] += Σ_j passive[v,t0[s,j]] · agg[v,t1[s,j]]`, then
 /// clear the touched set (ready for the next step). Returns the number of
@@ -193,53 +245,22 @@ pub fn contract_touched(
     split: &SplitTable,
     scratch: &mut CombineScratch,
 ) -> u64 {
-    let n_splits = split.n_splits;
-    let n_sets = split.n_sets;
     let mut units = 0u64;
-    // SAFETY of the unchecked accesses below: `SplitTable::new` constructs
-    // idx1/idx2 as ranks into C(k,a1)/C(k,a2) (tests assert the bijection),
-    // and the passive/agg rows have exactly those widths — enforced by the
-    // debug asserts. Bounds checks on these 10⁷+ L1-resident gathers are
-    // the measured hot-path cost (EXPERIMENTS.md §Perf).
+    // SAFETY of the unchecked accesses in `contract_row`: `SplitTable::new`
+    // constructs idx1/idx2 as ranks into C(k,a1)/C(k,a2) (tests assert the
+    // bijection), and the passive/agg rows have exactly those widths —
+    // enforced by the debug asserts. Bounds checks on these 10⁷+
+    // L1-resident gathers are the measured hot-path cost
+    // (EXPERIMENTS.md §Perf).
     debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets));
     debug_assert!(split.idx2.iter().all(|&i| (i as usize) < scratch.n_agg_sets));
-    let idx1 = &split.idx1[..n_sets * n_splits];
-    let idx2 = &split.idx2[..n_sets * n_splits];
     for ti in 0..scratch.touched.len() {
         let v = scratch.touched[ti] as usize;
         let prow = passive.row(v);
         let lo = v * scratch.n_agg_sets;
         let arow = &scratch.agg[lo..lo + scratch.n_agg_sets];
         let orow = out.row_mut(v);
-        let mut flat = 0usize;
-        for o in orow.iter_mut().take(n_sets) {
-            // two accumulators break the FMA dependency chain over the
-            // (short, 2–70 long) split run — measured win in §Perf
-            let mut acc0 = 0.0f32;
-            let mut acc1 = 0.0f32;
-            let mut j = 0;
-            // SAFETY: flat+j < n_sets*n_splits by loop structure; index
-            // ranges validated above.
-            unsafe {
-                while j + 2 <= n_splits {
-                    let p0 = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
-                    let a0 = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
-                    let p1 = *prow.get_unchecked(*idx1.get_unchecked(flat + j + 1) as usize);
-                    let a1 = *arow.get_unchecked(*idx2.get_unchecked(flat + j + 1) as usize);
-                    acc0 += p0 * a0;
-                    acc1 += p1 * a1;
-                    j += 2;
-                }
-                if j < n_splits {
-                    let p = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
-                    let a = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
-                    acc0 += p * a;
-                }
-            }
-            flat += n_splits;
-            *o += acc0 + acc1;
-        }
-        units += (n_sets * n_splits) as u64;
+        units += contract_row(orow, prow, arow, split);
     }
     scratch.finish();
     units
@@ -267,22 +288,21 @@ impl Engine {
         }
     }
 
-    /// Run the DP bottom-up for one coloring and return the counts.
-    pub fn run_iteration(&self, g: &Graph, iter_seed: u64) -> IterationOutput {
+    /// One DAG walk shared by every engine flavor: leaf init, one
+    /// `combine(out, active, passive, split)` call per non-leaf
+    /// subtemplate, last-use table freeing, and the root total. The
+    /// combine closure is the only thing that differs between the serial
+    /// and parallel paths, so their surrounding plumbing cannot diverge.
+    fn run_iteration_with(
+        &self,
+        g: &Graph,
+        iter_seed: u64,
+        mut combine: impl FnMut(&mut CountTable, &CountTable, &CountTable, &SplitTable),
+    ) -> IterationOutput {
         let n = g.n_vertices();
         let vertices: Vec<u32> = (0..n as u32).collect();
         let coloring = Coloring::random(n, self.ctx.k, iter_seed);
         let mut tables: Vec<Option<CountTable>> = vec![None; self.ctx.dag.subs.len()];
-        let max_agg = self
-            .ctx
-            .dag
-            .subs
-            .iter()
-            .filter(|s| !s.is_leaf())
-            .map(|s| self.ctx.binom.c(self.ctx.k, s.active_size(&self.ctx.dag)) as usize)
-            .max()
-            .unwrap_or(1);
-        let mut scratch = CombineScratch::new(n, max_agg);
         let last_use = self.ctx.dag.last_use();
 
         for (step, &i) in self.ctx.dag.order.iter().enumerate() {
@@ -295,11 +315,7 @@ impl Engine {
                 {
                     let active = tables[sub.active.unwrap()].as_ref().unwrap();
                     let passive = tables[sub.passive.unwrap()].as_ref().unwrap();
-                    scratch.begin(active.n_sets);
-                    let pairs = (0..n as u32)
-                        .flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)));
-                    aggregate_batch(&mut scratch, active, pairs);
-                    contract_touched(&mut out, passive, split, &mut scratch);
+                    combine(&mut out, active, passive, split);
                 }
                 tables[i] = Some(out);
             }
@@ -317,6 +333,62 @@ impl Engine {
             colorful,
             estimate: colorful * self.ctx.colorful_scale() / self.ctx.aut as f64,
         }
+    }
+
+    /// Run the DP bottom-up for one coloring and return the counts.
+    pub fn run_iteration(&self, g: &Graph, iter_seed: u64) -> IterationOutput {
+        let n = g.n_vertices();
+        let max_agg = self
+            .ctx
+            .dag
+            .subs
+            .iter()
+            .filter(|s| !s.is_leaf())
+            .map(|s| self.ctx.binom.c(self.ctx.k, s.active_size(&self.ctx.dag)) as usize)
+            .max()
+            .unwrap_or(1);
+        let mut scratch = CombineScratch::new(n, max_agg);
+        self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
+            scratch.begin(active.n_sets);
+            let pairs = (0..n as u32).flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)));
+            aggregate_batch(&mut scratch, active, pairs);
+            contract_touched(out, passive, split, &mut scratch);
+        })
+    }
+
+    /// Run one coloring iteration on the real multithreaded combine
+    /// executor: every non-leaf combine consumes the Alg-4 task queue
+    /// (built at `max_task_size` granularity; `0` = per-vertex tasks)
+    /// with `n_workers` OS threads.
+    ///
+    /// Determinism contract (see [`super::parallel`]): the returned counts
+    /// depend on `max_task_size` but **not** on `n_workers`, and with
+    /// `max_task_size == 0` they are bit-identical to
+    /// [`Engine::run_iteration`]. The second return value is the measured
+    /// per-worker execution record of the whole iteration.
+    pub fn run_iteration_workers(
+        &self,
+        g: &Graph,
+        iter_seed: u64,
+        n_workers: usize,
+        max_task_size: u32,
+    ) -> (IterationOutput, ExecStats) {
+        // the flat (v, u) adjacency pair list every combine consumes,
+        // grouped by v in CSR order — the same pair order the serial
+        // engine's iterator produces
+        let pairs: Vec<(u32, u32)> = (0..g.n_vertices() as u32)
+            .flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)))
+            .collect();
+        let mut stats = ExecStats::zeros(n_workers);
+        let out = self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: active,
+            }];
+            let st = combine_batches(out, passive, split, &batch, max_task_size, n_workers);
+            stats.merge(&st);
+        });
+        (out, stats)
     }
 }
 
@@ -429,6 +501,35 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn parallel_iteration_bit_identical_to_serial() {
+        // the executor at per-vertex granularity must reproduce the
+        // serial engine exactly, for any worker count
+        let g = crate::graph::rmat::generate(&crate::graph::rmat::RmatParams::with_skew(
+            48, 200, 3, 7,
+        ));
+        for tpl in ["u3-1", "u5-2"] {
+            let t = builtin(tpl).unwrap();
+            let e = Engine::new(&t);
+            let serial = e.run_iteration(&g, 11);
+            for workers in [1, 2, 4] {
+                let (par, stats) = e.run_iteration_workers(&g, 11, workers, 0);
+                assert_eq!(
+                    serial.colorful.to_bits(),
+                    par.colorful.to_bits(),
+                    "{tpl} workers={workers}"
+                );
+                assert_eq!(
+                    serial.estimate.to_bits(),
+                    par.estimate.to_bits(),
+                    "{tpl} workers={workers}"
+                );
+                assert_eq!(stats.n_workers(), workers);
+                assert!(stats.n_pairs > 0);
+            }
+        }
     }
 
     #[test]

@@ -1,14 +1,17 @@
 //! The color-coding counting substrate: count tables and colorings
 //! (`table`), the DP engine with the factored combine (`engine`), the
-//! (ε,δ) estimation loop (`estimate`), and the exact backtracking oracle
-//! used by tests and examples (`brute`).
+//! real multithreaded combine executor over the Alg-4 task queue
+//! (`parallel`), the (ε,δ) estimation loop (`estimate`), and the exact
+//! backtracking oracle used by tests and examples (`brute`).
 
 pub mod brute;
 pub mod engine;
 pub mod estimate;
+pub mod parallel;
 pub mod table;
 
 pub use brute::count_embeddings;
 pub use engine::{aggregate_batch, contract_touched, CombineScratch, Engine, EngineContext};
 pub use estimate::{estimate, iteration_bound, median_of_means, Estimate};
+pub use parallel::{aggregate_merged, combine_batches, ExecStats, PairBatch};
 pub use table::{init_leaf_table, Coloring, Count, CountTable};

@@ -1,0 +1,665 @@
+//! The real shared-memory parallel combine executor over the Alg-4 task
+//! queue (paper Fig 11 / Alg 4, executed rather than replayed).
+//!
+//! [`combine_batches`] consumes the neighbor-pair lists of one combine as
+//! a queue of [`crate::sched::Task`]s (built by [`crate::sched::make_tasks`]
+//! at `max_task_size` granularity) on a `std::thread::scope` worker pool —
+//! no new dependencies, no work survives the call.
+//!
+//! # Determinism contract
+//!
+//! The result is **bit-identical for every worker count**, because the
+//! floating-point evaluation order is fixed by the *task decomposition*,
+//! never by the thread schedule:
+//!
+//! 1. **Aggregate** — each task's partial aggregation row
+//!    `p = Σ active[u]` is accumulated pair-by-pair from zero into a slot
+//!    keyed by the task's canonical index. Which worker computes a slot is
+//!    scheduling-dependent; the slot's value is not.
+//! 2. **Merge + contract** — per vertex, the task partials are folded
+//!    left-to-right in canonical `(vertex, batch, start)` order, and the
+//!    merged row is contracted through the split table with the exact
+//!    kernel the serial engine uses ([`super::engine`]'s `contract_row`).
+//!    Vertices are claimed dynamically but write disjoint output rows.
+//!
+//! Relation to the serial path: with per-vertex tasks
+//! (`max_task_size == 0`) every vertex is a single chunk, so the executor
+//! is bit-identical to the serial `aggregate_batch` + `contract_touched`
+//! pipeline. When a hub's neighbor list *is* split, the chunked left fold
+//! legitimately rounds f32 sums differently from the serial running sum
+//! (≈1e-7 relative) — but identically for 1, 2, 4, … workers, which is
+//! the invariant the differential suite enforces. On integer-valued
+//! tables (all DP tables before any f32 rounding occurs) even split
+//! vertices are exact, hence bit-identical to serial too.
+
+use super::engine::contract_row;
+use super::table::{Count, CountTable};
+use crate::combin::SplitTable;
+use crate::sched::make_tasks;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Instant;
+
+/// One neighbor-pair batch of a combine: `pairs` are `(v_row, u_row)`
+/// entries with each vertex's pairs stored contiguously (CSR order), and
+/// `rows` is the active-child count table the `u_row` indices point into
+/// (a local table, or one received step buffer of the exchange).
+pub struct PairBatch<'a> {
+    pub pairs: &'a [(u32, u32)],
+    pub rows: &'a CountTable,
+}
+
+/// Measured execution record of one (or, after [`ExecStats::merge`],
+/// many) parallel combines: totals plus per-worker busy time and work
+/// counters. This is the *real* counterpart of the modeled
+/// [`crate::coordinator::ThreadStats`] — wall-clock seconds from
+/// `Instant`, not virtual-replay units.
+#[derive(Debug, Clone, Default)]
+pub struct ExecStats {
+    /// tasks consumed from the Alg-4 queue
+    pub n_tasks: u64,
+    /// adjacency pairs aggregated
+    pub n_pairs: u64,
+    /// (vertex, set, split) contraction units (the Eq-4 measure)
+    pub units: u64,
+    /// measured seconds each worker spent in the combine phases
+    pub busy_seconds: Vec<f64>,
+    /// tasks each worker claimed
+    pub worker_tasks: Vec<u64>,
+    /// pairs each worker aggregated
+    pub worker_pairs: Vec<u64>,
+}
+
+impl ExecStats {
+    pub fn zeros(n_workers: usize) -> ExecStats {
+        ExecStats {
+            n_tasks: 0,
+            n_pairs: 0,
+            units: 0,
+            busy_seconds: vec![0.0; n_workers],
+            worker_tasks: vec![0; n_workers],
+            worker_pairs: vec![0; n_workers],
+        }
+    }
+
+    /// The worker-pool size this record was measured with.
+    pub fn n_workers(&self) -> usize {
+        self.busy_seconds.len()
+    }
+
+    /// Workers that executed at least one task (the Fig-11 "busy thread"
+    /// notion, measured instead of modeled).
+    pub fn busy_workers(&self) -> usize {
+        self.worker_tasks.iter().filter(|&&t| t > 0).count()
+    }
+
+    /// Max/mean busy-time ratio across the pool (1.0 = perfectly
+    /// balanced; the measured analogue of the Fig-11 imbalance).
+    pub fn imbalance(&self) -> f64 {
+        let n = self.busy_seconds.len();
+        if n == 0 {
+            return 1.0;
+        }
+        let max = self.busy_seconds.iter().copied().fold(0.0, f64::max);
+        let mean = self.busy_seconds.iter().sum::<f64>() / n as f64;
+        if mean <= 0.0 {
+            1.0
+        } else {
+            max / mean
+        }
+    }
+
+    /// Accumulate another combine's record (same worker-pool size).
+    pub fn merge(&mut self, other: &ExecStats) {
+        assert_eq!(
+            self.busy_seconds.len(),
+            other.busy_seconds.len(),
+            "cannot merge stats from different worker-pool sizes"
+        );
+        self.n_tasks += other.n_tasks;
+        self.n_pairs += other.n_pairs;
+        self.units += other.units;
+        for (a, b) in self.busy_seconds.iter_mut().zip(&other.busy_seconds) {
+            *a += *b;
+        }
+        for (a, b) in self.worker_tasks.iter_mut().zip(&other.worker_tasks) {
+            *a += *b;
+        }
+        for (a, b) in self.worker_pairs.iter_mut().zip(&other.worker_pairs) {
+            *a += *b;
+        }
+    }
+}
+
+/// One schedulable unit: `len` pairs at absolute offset `off` of batch
+/// `batch`'s pair list, all owned by `vertex`. Canonical index = position
+/// in the plan's task vector (sorted by vertex, then batch, then start).
+struct ExecTask {
+    vertex: u32,
+    batch: u32,
+    off: usize,
+    len: u32,
+}
+
+/// Raw-pointer handle that lets scoped workers write disjoint windows of
+/// a shared buffer. SAFETY: every use below pairs it with a claim scheme
+/// (atomic task/group counters) that makes the written windows disjoint.
+#[derive(Clone, Copy)]
+struct SendPtr(*mut Count);
+unsafe impl Send for SendPtr {}
+unsafe impl Sync for SendPtr {}
+
+/// Run `worker` on `n_workers` scoped threads (inline when 1) and collect
+/// each worker's result in worker-index order.
+fn run_workers<R, F>(n_workers: usize, worker: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    if n_workers == 1 {
+        return vec![worker(0)];
+    }
+    let worker = &worker;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..n_workers)
+            .map(|w| s.spawn(move || worker(w)))
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("combine worker panicked"))
+            .collect()
+    })
+}
+
+/// Build the canonical task plan: per-batch Alg-4 queues (unshuffled, so
+/// the canonical order is reproducible) flattened and stably sorted by
+/// vertex, plus the per-vertex group ranges `[lo, hi)` into that order.
+fn build_plan(
+    n_rows: usize,
+    batches: &[PairBatch<'_>],
+    max_task_size: u32,
+) -> (Vec<ExecTask>, Vec<(usize, usize)>) {
+    let mut tasks: Vec<ExecTask> = Vec::new();
+    let mut degs = vec![0u32; n_rows];
+    let mut first = vec![usize::MAX; n_rows];
+    for (bi, b) in batches.iter().enumerate() {
+        degs.fill(0);
+        first.fill(usize::MAX);
+        for (i, &(v, _)) in b.pairs.iter().enumerate() {
+            let v = v as usize;
+            assert!(v < n_rows, "pair vertex row {v} out of range ({n_rows})");
+            if first[v] == usize::MAX {
+                first[v] = i;
+            } else {
+                // hard assert: a non-contiguous list would silently route
+                // pairs to the wrong vertex (task windows are offsets into
+                // the vertex's run), so fail loudly in release builds too
+                assert_eq!(
+                    first[v] + degs[v] as usize,
+                    i,
+                    "batch pairs must be grouped contiguously by vertex"
+                );
+            }
+            degs[v] += 1;
+        }
+        for t in make_tasks(&degs, max_task_size, None) {
+            tasks.push(ExecTask {
+                vertex: t.vertex,
+                batch: bi as u32,
+                off: first[t.vertex as usize] + t.start as usize,
+                len: t.len,
+            });
+        }
+    }
+    // canonical order: (vertex, batch, start). `make_tasks` already emits
+    // (vertex, start)-sorted queues per batch, so a *stable* sort on the
+    // vertex key alone finishes the job.
+    tasks.sort_by_key(|t| t.vertex);
+    let mut groups: Vec<(usize, usize)> = Vec::new();
+    let mut lo = 0usize;
+    for i in 1..=tasks.len() {
+        if i == tasks.len() || tasks[i].vertex != tasks[lo].vertex {
+            groups.push((lo, i));
+            lo = i;
+        }
+    }
+    (tasks, groups)
+}
+
+/// Left-fold the task partials of one group (tasks `lo..hi`) into `dst`
+/// in canonical order. THE determinism-critical merge: every consumer of
+/// a multi-task vertex must fold through this one function so the
+/// float-add sequence cannot diverge between paths.
+fn fold_group(partials: &[Count], lo: usize, hi: usize, n_agg: usize, dst: &mut [Count]) {
+    dst.copy_from_slice(&partials[lo * n_agg..(lo + 1) * n_agg]);
+    for t in lo + 1..hi {
+        for (a, &x) in dst.iter_mut().zip(&partials[t * n_agg..(t + 1) * n_agg]) {
+            *a += x;
+        }
+    }
+}
+
+/// Fold the per-worker phase-1 records into the combine's stats.
+fn absorb_phase1(stats: &mut ExecStats, p1: Vec<(f64, u64, u64)>) {
+    for (w, (busy, t, p)) in p1.into_iter().enumerate() {
+        stats.busy_seconds[w] += busy;
+        stats.worker_tasks[w] += t;
+        stats.worker_pairs[w] += p;
+        stats.n_tasks += t;
+        stats.n_pairs += p;
+    }
+}
+
+/// Phase 1: claim tasks off the shared queue and accumulate each task's
+/// partial aggregation row into its canonical slot of `partials`.
+/// Returns per-worker (busy seconds, tasks, pairs).
+fn aggregate_phase(
+    tasks: &[ExecTask],
+    batches: &[PairBatch<'_>],
+    n_agg: usize,
+    partials: &mut [Count],
+    n_workers: usize,
+) -> Vec<(f64, u64, u64)> {
+    debug_assert_eq!(partials.len(), tasks.len() * n_agg);
+    let next = AtomicUsize::new(0);
+    let ptr = SendPtr(partials.as_mut_ptr());
+    let worker = |_w: usize| -> (f64, u64, u64) {
+        let t0 = Instant::now();
+        let mut my_tasks = 0u64;
+        let mut my_pairs = 0u64;
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= tasks.len() {
+                break;
+            }
+            let t = &tasks[i];
+            let b = &batches[t.batch as usize];
+            // SAFETY: slot `i` is an `n_agg`-wide window written only by
+            // the worker that claimed index `i` from the atomic counter;
+            // windows of distinct indices are disjoint.
+            let slot =
+                unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n_agg), n_agg) };
+            for &(_, u) in &b.pairs[t.off..t.off + t.len as usize] {
+                let urow = b.rows.row(u as usize);
+                for (a, &x) in slot.iter_mut().zip(urow) {
+                    *a += x;
+                }
+            }
+            my_tasks += 1;
+            my_pairs += t.len as u64;
+        }
+        (t0.elapsed().as_secs_f64(), my_tasks, my_pairs)
+    };
+    run_workers(n_workers, worker)
+}
+
+/// Phase 2: claim per-vertex groups, fold each group's task partials in
+/// canonical order, and contract the merged row into `out`. Returns
+/// per-worker (busy seconds, contraction units).
+#[allow(clippy::too_many_arguments)]
+fn contract_phase(
+    tasks: &[ExecTask],
+    groups: &[(usize, usize)],
+    partials: &[Count],
+    out: &mut CountTable,
+    passive: &CountTable,
+    split: &SplitTable,
+    n_agg: usize,
+    n_workers: usize,
+) -> Vec<(f64, u64)> {
+    let next = AtomicUsize::new(0);
+    let n_sets = out.n_sets;
+    let optr = SendPtr(out.data.as_mut_ptr());
+    let worker = |_w: usize| -> (f64, u64) {
+        let t0 = Instant::now();
+        let mut units = 0u64;
+        let mut fold: Vec<Count> = vec![0.0; n_agg];
+        loop {
+            let gi = next.fetch_add(1, Ordering::Relaxed);
+            if gi >= groups.len() {
+                break;
+            }
+            let (lo, hi) = groups[gi];
+            let v = tasks[lo].vertex as usize;
+            let arow: &[Count] = if hi - lo == 1 {
+                &partials[lo * n_agg..(lo + 1) * n_agg]
+            } else {
+                // deterministic merge in canonical (vertex, batch, start)
+                // order — the same float-add sequence for every worker
+                // count
+                fold_group(partials, lo, hi, n_agg, &mut fold);
+                &fold
+            };
+            let prow = passive.row(v);
+            // SAFETY: each group owns a distinct vertex `v`, claimed once
+            // from the atomic counter, so output rows are written
+            // disjointly; `v < out.n_rows` because `build_plan` asserted
+            // every pair's vertex row against `n_rows`.
+            let orow =
+                unsafe { std::slice::from_raw_parts_mut(optr.0.add(v * n_sets), n_sets) };
+            units += contract_row(orow, prow, arow, split);
+        }
+        (t0.elapsed().as_secs_f64(), units)
+    };
+    run_workers(n_workers, worker)
+}
+
+/// Execute one combine (the factored Eq-1 aggregate + contract) over the
+/// given pair batches on `n_workers` real threads, adding into `out`.
+/// See the module docs for the determinism contract. Returns the measured
+/// execution record (vector fields have length `n_workers`).
+pub fn combine_batches(
+    out: &mut CountTable,
+    passive: &CountTable,
+    split: &SplitTable,
+    batches: &[PairBatch<'_>],
+    max_task_size: u32,
+    n_workers: usize,
+) -> ExecStats {
+    assert!(n_workers >= 1, "combine executor needs at least one worker");
+    let mut stats = ExecStats::zeros(n_workers);
+    let n_agg = match batches.first() {
+        Some(b) => b.rows.n_sets,
+        None => return stats,
+    };
+    for b in batches {
+        assert_eq!(
+            b.rows.n_sets, n_agg,
+            "all batches of one combine must share the active-table width"
+        );
+    }
+    debug_assert_eq!(out.n_sets, split.n_sets);
+    debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets));
+    debug_assert!(split.idx2.iter().all(|&i| (i as usize) < n_agg));
+    if batches.iter().all(|b| b.pairs.is_empty()) {
+        return stats;
+    }
+
+    let (tasks, groups) = build_plan(out.n_rows, batches, max_task_size);
+    // spawning more threads than tasks is pure overhead; clamping the
+    // pool never changes the result (determinism is schedule-free) and
+    // the stats vectors keep their configured `n_workers` length
+    // (tasks is non-empty here: some batch had pairs)
+    let pool = n_workers.clamp(1, tasks.len());
+    let mut partials: Vec<Count> = vec![0.0; tasks.len() * n_agg];
+    let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool);
+    let p2 = contract_phase(&tasks, &groups, &partials, out, passive, split, n_agg, pool);
+    absorb_phase1(&mut stats, p1);
+    for (w, (busy, units)) in p2.into_iter().enumerate() {
+        stats.busy_seconds[w] += busy;
+        stats.units += units;
+    }
+    stats
+}
+
+/// Verification hook (property tests, benches): run only the aggregation
+/// phase + deterministic merge and return the dense merged aggregation
+/// table — row `v` equals what the canonical fold leaves for vertex `v`,
+/// zero for vertices with no pairs — plus the phase-1 execution record.
+pub fn aggregate_merged(
+    n_rows: usize,
+    batches: &[PairBatch<'_>],
+    max_task_size: u32,
+    n_workers: usize,
+) -> (CountTable, ExecStats) {
+    assert!(n_workers >= 1, "combine executor needs at least one worker");
+    let n_agg = batches.first().map_or(0, |b| b.rows.n_sets);
+    for b in batches {
+        assert_eq!(b.rows.n_sets, n_agg);
+    }
+    let mut merged = CountTable::zeros(n_rows, n_agg);
+    let mut stats = ExecStats::zeros(n_workers);
+    if n_agg == 0 || batches.iter().all(|b| b.pairs.is_empty()) {
+        return (merged, stats);
+    }
+    let (tasks, groups) = build_plan(n_rows, batches, max_task_size);
+    let pool = n_workers.clamp(1, tasks.len());
+    let mut partials: Vec<Count> = vec![0.0; tasks.len() * n_agg];
+    let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool);
+    absorb_phase1(&mut stats, p1);
+    for &(lo, hi) in &groups {
+        let v = tasks[lo].vertex as usize;
+        fold_group(&partials, lo, hi, n_agg, merged.row_mut(v));
+    }
+    (merged, stats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
+    use crate::combin::Binomial;
+    use crate::util::prop;
+
+    fn mk_tables(n: usize, c1: usize, c2: usize) -> (CountTable, CountTable) {
+        let mut passive = CountTable::zeros(n, c1);
+        let mut active = CountTable::zeros(n, c2);
+        for (i, x) in passive.data.iter_mut().enumerate() {
+            // fractional values so rounding differences cannot hide
+            *x = ((i * 7) % 5) as f32 + 0.125;
+        }
+        for (i, x) in active.data.iter_mut().enumerate() {
+            *x = ((i * 3) % 4) as f32 + 0.375;
+        }
+        (passive, active)
+    }
+
+    fn ring_pairs(n: usize, deg: usize) -> Vec<(u32, u32)> {
+        (0..n as u32)
+            .flat_map(|v| (1..=deg as u32).map(move |d| (v, (v + d) % n as u32)))
+            .collect()
+    }
+
+    #[test]
+    fn matches_serial_combine_per_vertex_tasks() {
+        // per-vertex granularity: bit-identical to aggregate_batch +
+        // contract_touched for any worker count
+        let binom = Binomial::new();
+        let split = SplitTable::new(5, 3, 1, &binom);
+        let c1 = 5;
+        let c2 = binom.c(5, 2) as usize;
+        let n = 37;
+        let (passive, active) = mk_tables(n, c1, c2);
+        let pairs = ring_pairs(n, 6);
+
+        let mut serial = CountTable::zeros(n, split.n_sets);
+        let mut scratch = CombineScratch::new(n, c2);
+        scratch.begin(c2);
+        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        contract_touched(&mut serial, &passive, &split, &mut scratch);
+
+        for workers in [1, 2, 4, 7] {
+            let mut par = CountTable::zeros(n, split.n_sets);
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: &active,
+            }];
+            let st = combine_batches(&mut par, &passive, &split, &batch, 0, workers);
+            assert_eq!(st.n_pairs, pairs.len() as u64);
+            for (a, b) in par.data.iter().zip(&serial.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn split_tasks_are_worker_count_invariant() {
+        // hub splitting changes the float fold vs serial, but the result
+        // must be bit-identical across worker counts
+        let binom = Binomial::new();
+        let split = SplitTable::new(6, 4, 2, &binom);
+        let c1 = binom.c(6, 2) as usize;
+        let c2 = binom.c(6, 2) as usize;
+        let n = 24;
+        let (passive, active) = mk_tables(n, c1, c2);
+        // one hub with a long list plus a ring
+        let mut pairs: Vec<(u32, u32)> = (0..200u32).map(|i| (0, i % n as u32)).collect();
+        pairs.extend((1..n as u32).map(|v| (v, (v + 1) % n as u32)));
+        for mts in [1u32, 3, 16] {
+            let run = |workers: usize| {
+                let mut out = CountTable::zeros(n, split.n_sets);
+                let batch = [PairBatch {
+                    pairs: &pairs,
+                    rows: &active,
+                }];
+                combine_batches(&mut out, &passive, &split, &batch, mts, workers);
+                out
+            };
+            let reference = run(1);
+            for workers in [2, 3, 4, 7] {
+                let out = run(workers);
+                for (a, b) in out.data.iter().zip(&reference.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "mts={mts} workers={workers}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn multi_batch_fold_is_deterministic() {
+        // two batches (the exchange-fold shape): same invariance
+        let binom = Binomial::new();
+        let split = SplitTable::new(4, 3, 1, &binom);
+        let c1 = 4;
+        let c2 = binom.c(4, 2) as usize;
+        let n = 16;
+        let (passive, active_a) = mk_tables(n, c1, c2);
+        let (_, active_b) = mk_tables(n + 3, c1, c2);
+        let pairs_a = ring_pairs(n, 3);
+        let pairs_b: Vec<(u32, u32)> = (0..n as u32)
+            .map(|v| (v, (v * 5 + 1) % (n as u32 + 3)))
+            .collect();
+        let run = |workers: usize| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let batches = [
+                PairBatch {
+                    pairs: &pairs_a,
+                    rows: &active_a,
+                },
+                PairBatch {
+                    pairs: &pairs_b,
+                    rows: &active_b,
+                },
+            ];
+            let st = combine_batches(&mut out, &passive, &split, &batches, 2, workers);
+            (out, st)
+        };
+        let (reference, st1) = run(1);
+        assert_eq!(st1.n_pairs, (pairs_a.len() + pairs_b.len()) as u64);
+        assert_eq!(st1.busy_workers(), 1);
+        for workers in [2, 5] {
+            let (out, st) = run(workers);
+            assert_eq!(st.n_pairs, st1.n_pairs);
+            assert_eq!(st.n_tasks, st1.n_tasks);
+            for (a, b) in out.data.iter().zip(&reference.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
+    }
+
+    #[test]
+    fn empty_and_zero_width_inputs() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(4, 3, 1, &binom);
+        let c2 = binom.c(4, 2) as usize;
+        let (passive, active) = mk_tables(4, 4, c2);
+        let mut out = CountTable::zeros(4, split.n_sets);
+        // no batches at all
+        let st = combine_batches(&mut out, &passive, &split, &[], 0, 3);
+        assert_eq!(st.n_tasks, 0);
+        // batches with no pairs
+        let batch = [PairBatch {
+            pairs: &[],
+            rows: &active,
+        }];
+        let st = combine_batches(&mut out, &passive, &split, &batch, 0, 3);
+        assert_eq!(st.n_pairs, 0);
+        assert!(out.data.iter().all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn stats_account_every_task_and_pair() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(5, 3, 1, &binom);
+        let c2 = binom.c(5, 2) as usize;
+        let n = 20;
+        let (passive, active) = mk_tables(n, 5, c2);
+        let pairs = ring_pairs(n, 7);
+        let mut out = CountTable::zeros(n, split.n_sets);
+        let batch = [PairBatch {
+            pairs: &pairs,
+            rows: &active,
+        }];
+        let st = combine_batches(&mut out, &passive, &split, &batch, 3, 4);
+        assert_eq!(st.n_workers(), 4);
+        assert_eq!(st.n_pairs, pairs.len() as u64);
+        // 7 pairs per vertex at size-3 tasks → 3 tasks per vertex
+        assert_eq!(st.n_tasks, (n * 3) as u64);
+        assert_eq!(st.worker_tasks.iter().sum::<u64>(), st.n_tasks);
+        assert_eq!(st.worker_pairs.iter().sum::<u64>(), st.n_pairs);
+        assert_eq!(st.units, (n * split.n_sets * split.n_splits) as u64);
+        assert!(st.imbalance() >= 1.0 - 1e-9);
+    }
+
+    #[test]
+    fn prop_merged_aggregation_matches_serial() {
+        // random degree sequences, task sizes and worker counts: the
+        // merged per-worker accumulators equal the serial aggregate_batch
+        // rows exactly on integer-valued data (exact f32 sums), and every
+        // task/pair is processed exactly once
+        prop::check("parallel_aggregate", |gen| {
+            let n = gen.usize_in(1, 40);
+            let n_agg = gen.usize_in(1, 10);
+            let n_src = gen.usize_in(1, 30);
+            let mut rows = CountTable::zeros(n_src, n_agg);
+            for x in rows.data.iter_mut() {
+                *x = gen.usize_in(0, 5) as f32;
+            }
+            let degs: Vec<u32> = (0..n).map(|_| gen.usize_in(0, 25) as u32).collect();
+            let mut pairs: Vec<(u32, u32)> = Vec::new();
+            for (v, &d) in degs.iter().enumerate() {
+                for _ in 0..d {
+                    pairs.push((v as u32, gen.usize_in(0, n_src - 1) as u32));
+                }
+            }
+            let mts = gen.usize_in(0, 30) as u32;
+            let workers = gen.usize_in(1, 9);
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: &rows,
+            }];
+            let (merged, st) = aggregate_merged(n, &batch, mts, workers);
+            // coverage accounting: no task skipped or double-claimed
+            let expect_tasks = make_tasks(&degs, mts, None).len() as u64;
+            if st.n_tasks != expect_tasks {
+                return Err(format!("{} tasks != expected {expect_tasks}", st.n_tasks));
+            }
+            if st.n_pairs != pairs.len() as u64 {
+                return Err(format!("{} pairs != {}", st.n_pairs, pairs.len()));
+            }
+            if st.worker_tasks.iter().sum::<u64>() != st.n_tasks
+                || st.worker_pairs.iter().sum::<u64>() != st.n_pairs
+            {
+                return Err("per-worker counters do not sum to totals".into());
+            }
+            // exactness vs the serial path
+            let mut scratch = CombineScratch::new(n, n_agg);
+            scratch.begin(n_agg);
+            aggregate_batch(&mut scratch, &rows, pairs.iter().copied());
+            for (v, &d) in degs.iter().enumerate() {
+                let got = merged.row(v);
+                if d == 0 {
+                    if got.iter().any(|&x| x != 0.0) {
+                        return Err(format!("vertex {v} has no pairs but nonzero row"));
+                    }
+                } else {
+                    let want = scratch.agg_row(v);
+                    if got != want {
+                        return Err(format!("vertex {v}: {got:?} != serial {want:?}"));
+                    }
+                }
+            }
+            scratch.finish();
+            Ok(())
+        });
+    }
+}

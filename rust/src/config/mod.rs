@@ -129,12 +129,13 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 14] = [
+const KNOWN_KEYS: [&str; 15] = [
     "template",
     "dataset",
     "scale",
     "run.ranks",
     "run.threads",
+    "run.workers",
     "run.task_size",
     "run.iterations",
     "run.seed",
@@ -206,6 +207,10 @@ impl RunSpec {
         }
         if let Some(t) = want_nonneg(doc, "run.threads")? {
             run.n_threads = t as usize;
+        }
+        if let Some(w) = want_nonneg(doc, "run.workers")? {
+            // range validation (≥ 1, ≤ 512) happens in CountJob::build
+            run.n_workers = w as usize;
         }
         let task_size_set = want_nonneg(doc, "run.task_size")?;
         if let Some(s) = task_size_set {
@@ -281,6 +286,7 @@ scale = 1000
 [run]
 ranks = 8
 threads = 48
+workers = 4
 task_size = 50
 iterations = 2
 mode = "adaptive-lb"
@@ -298,8 +304,19 @@ beta = 1.7e-10
         assert_eq!(spec.dataset, "R500K3");
         assert_eq!(spec.scale, 1000);
         assert_eq!(spec.run.n_ranks, 8);
+        assert_eq!(spec.run.n_workers, 4);
         assert_eq!(spec.run.mode, ModeSelect::AdaptiveLb);
         assert!((spec.run.net.alpha - 2e-6).abs() < 1e-18);
+    }
+
+    #[test]
+    fn workers_key_parses_and_defaults() {
+        // default when omitted
+        let spec = RunSpec::parse(&SAMPLE.replace("workers = 4\n", "")).unwrap();
+        assert_eq!(spec.run.n_workers, 1);
+        // wrong type is a typed parse error
+        let bad = SAMPLE.replace("workers = 4", "workers = \"four\"");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 
     #[test]

@@ -28,6 +28,7 @@ use super::memory::{MemClass, MemoryAccountant};
 use super::run::{CommDecision, EngineKind, ModelTime, RunConfig, RunResult, ThreadStats};
 use crate::api::Progress;
 use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
+use crate::colorcount::parallel::{combine_batches, ExecStats, PairBatch};
 use crate::colorcount::EngineContext;
 use crate::colorcount::{init_leaf_table, median_of_means, Coloring, CountTable};
 use crate::comm::{CommMode, Fabric, Packet, Schedule};
@@ -210,6 +211,11 @@ impl<'g> DistributedRunner<'g> {
         let n_subs = self.ctx.dag.subs.len();
         let last_use = self.ctx.dag.last_use();
         let eff_task = self.cfg.effective_task_size();
+        // the parallel executor serves the native engine (and the XLA
+        // stub fallback); only a *loaded* XLA runtime keeps the serial
+        // scratch-based combine so its kernel sees the same buffers
+        let use_exec = !(self.cfg.engine == EngineKind::Xla && self.xla.is_some());
+        let mut measured = ExecStats::zeros(self.cfg.n_workers);
 
         // the comm decision is per template (Alg 3 line 2) and therefore
         // identical for every non-leaf subtemplate; record it per sub so
@@ -267,9 +273,16 @@ impl<'g> DistributedRunner<'g> {
             let iter_seed = crate::util::mix2(self.cfg.seed, it as u64);
             let coloring = Coloring::random(self.g.n_vertices(), k, iter_seed);
             let mut tables: Vec<Vec<Option<CountTable>>> = vec![vec![None; n_subs]; n_ranks];
-            let mut scratches: Vec<CombineScratch> = (0..n_ranks)
-                .map(|p| CombineScratch::new(self.plan.part.n_local(p), max_agg))
-                .collect();
+            // per-vertex scratch rows only back the serial XLA path; the
+            // executor keeps its own per-task partials (the `Scratch`
+            // memory accounting below models either)
+            let mut scratches: Vec<CombineScratch> = if use_exec {
+                Vec::new()
+            } else {
+                (0..n_ranks)
+                    .map(|p| CombineScratch::new(self.plan.part.n_local(p), max_agg))
+                    .collect()
+            };
             for (p, m) in mems.iter_mut().enumerate() {
                 m.alloc(
                     MemClass::Scratch,
@@ -297,6 +310,8 @@ impl<'g> DistributedRunner<'g> {
                         &mut busy_units,
                         eff_task,
                         it,
+                        use_exec,
+                        &mut measured,
                     );
                     records.push(rec);
                 }
@@ -411,12 +426,18 @@ impl<'g> DistributedRunner<'g> {
                 concurrency_histogram: hist_units.iter().map(|&u| u * flop_time).collect(),
             },
             comm_decisions,
+            workers: measured,
             oom,
         }
     }
 
     /// One non-leaf subtemplate combine across all ranks: local phase, then
-    /// the scheduled exchange. Returns the model record.
+    /// the scheduled exchange. Real counting runs on the parallel combine
+    /// executor (`colorcount::parallel`, `cfg.n_workers` threads) unless a
+    /// loaded XLA runtime keeps the serial scratch path — `use_exec` is
+    /// decided once in `run()`, which also sizes `scratches` to match;
+    /// `measured` accumulates the executor's per-worker record. Returns
+    /// the model record.
     #[allow(clippy::too_many_arguments)]
     fn combine_subtemplate(
         &mut self,
@@ -430,6 +451,8 @@ impl<'g> DistributedRunner<'g> {
         busy_units: &mut f64,
         eff_task: u32,
         iteration: usize,
+        use_exec: bool,
+        measured: &mut ExecStats,
     ) -> SubRecord {
         let n_ranks = self.cfg.n_ranks;
         let sub = self.ctx.dag.subs[i].clone();
@@ -482,13 +505,33 @@ impl<'g> DistributedRunner<'g> {
             let t0 = Instant::now();
             let active = tables[p][act_idx].as_ref().unwrap();
             let passive = tables[p][pass_idx].as_ref().unwrap();
-            scratches[p].begin(a2_sets);
-            let n_pairs = aggregate_batch(
-                &mut scratches[p],
-                active,
-                self.plan.local_pairs[p].iter().copied(),
-            );
-            let _ = self.contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
+            let n_pairs = if use_exec {
+                let batch = [PairBatch {
+                    pairs: &self.plan.local_pairs[p],
+                    rows: active,
+                }];
+                let st = combine_batches(
+                    &mut outs[p],
+                    passive,
+                    &split,
+                    &batch,
+                    eff_task,
+                    self.cfg.n_workers,
+                );
+                let n = st.n_pairs;
+                measured.merge(&st);
+                n
+            } else {
+                scratches[p].begin(a2_sets);
+                let n = aggregate_batch(
+                    &mut scratches[p],
+                    active,
+                    self.plan.local_pairs[p].iter().copied(),
+                );
+                let _ =
+                    self.contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
+                n
+            };
             let dt = t0.elapsed().as_secs_f64();
             *total_units += n_pairs as f64 * pair_units;
             *real_compute += dt;
@@ -532,29 +575,60 @@ impl<'g> DistributedRunner<'g> {
                 let mut recv_bytes = 0u64;
                 let n_msgs = packets.len();
                 let mut degs = vec![0u32; self.plan.part.n_local(p)];
-                let t0 = Instant::now();
-                let passive = tables[p][pass_idx].as_ref().unwrap();
-                scratches[p].begin(a2_sets);
-                let mut n_pairs = 0u64;
+                // materialize the received row blocks (identical packet
+                // accounting for both combine paths)
+                let mut bufs: Vec<(usize, CountTable)> = Vec::with_capacity(packets.len());
                 for pkt in &packets {
                     recv_bytes += pkt.bytes();
                     mems[p].alloc(MemClass::RecvBuffer, pkt.bytes());
                     let q = pkt.sender();
-                    let buf = CountTable {
-                        n_rows: pkt.rows.len() / a2_sets.max(1),
-                        n_sets: a2_sets,
-                        data: pkt.rows.clone(),
-                    };
-                    n_pairs += aggregate_batch(
-                        &mut scratches[p],
-                        &buf,
-                        self.plan.plans[p][q].iter().copied(),
-                    );
+                    bufs.push((
+                        q,
+                        CountTable {
+                            n_rows: pkt.rows.len() / a2_sets.max(1),
+                            n_sets: a2_sets,
+                            data: pkt.rows.clone(),
+                        },
+                    ));
                     for &(v, _) in &self.plan.plans[p][q] {
                         degs[v as usize] += 1;
                     }
                 }
-                let _ = self.contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
+                let t0 = Instant::now();
+                let passive = tables[p][pass_idx].as_ref().unwrap();
+                let n_pairs = if use_exec {
+                    let batches: Vec<PairBatch> = bufs
+                        .iter()
+                        .map(|(q, buf)| PairBatch {
+                            pairs: &self.plan.plans[p][*q],
+                            rows: buf,
+                        })
+                        .collect();
+                    let st = combine_batches(
+                        &mut outs[p],
+                        passive,
+                        &split,
+                        &batches,
+                        eff_task,
+                        self.cfg.n_workers,
+                    );
+                    let n = st.n_pairs;
+                    measured.merge(&st);
+                    n
+                } else {
+                    scratches[p].begin(a2_sets);
+                    let mut n = 0u64;
+                    for (q, buf) in &bufs {
+                        n += aggregate_batch(
+                            &mut scratches[p],
+                            buf,
+                            self.plan.plans[p][*q].iter().copied(),
+                        );
+                    }
+                    let _ = self
+                        .contract_backend(&mut outs[p], passive, &split, &mut scratches[p]);
+                    n
+                };
                 let dt = t0.elapsed().as_secs_f64();
                 *total_units += n_pairs as f64 * pair_units;
                 *real_compute += dt;
@@ -753,6 +827,47 @@ mod tests {
         for d in &res.comm_decisions {
             assert!(!d.pipelined);
             assert_eq!(d.n_steps, 1);
+        }
+    }
+
+    #[test]
+    fn worker_counts_are_bit_identical() {
+        // the acceptance invariant: any worker count reproduces the
+        // single-worker run exactly, in every communication mode
+        let g = small_graph(41);
+        let tpl = builtin("u5-2").unwrap();
+        for mode in [
+            ModeSelect::Naive,
+            ModeSelect::Pipeline,
+            ModeSelect::AdaptiveLb,
+        ] {
+            let run_with = |workers: usize| {
+                let mut cfg = RunConfig::default();
+                cfg.n_ranks = 3;
+                cfg.mode = mode;
+                cfg.n_iterations = 2;
+                cfg.n_workers = workers;
+                DistributedRunner::new(&tpl, &g, cfg).run()
+            };
+            let base = run_with(1);
+            assert_eq!(base.workers.n_workers(), 1);
+            assert!(base.workers.n_pairs > 0);
+            assert!(base.workers.busy_seconds[0] > 0.0);
+            for workers in [2, 4] {
+                let r = run_with(workers);
+                assert_eq!(r.colorful, base.colorful, "{mode:?} workers={workers}");
+                assert_eq!(
+                    r.estimate.to_bits(),
+                    base.estimate.to_bits(),
+                    "{mode:?} workers={workers}"
+                );
+                // the task queue and its consumption totals are
+                // schedule-independent too
+                assert_eq!(r.workers.n_workers(), workers);
+                assert_eq!(r.workers.n_pairs, base.workers.n_pairs);
+                assert_eq!(r.workers.n_tasks, base.workers.n_tasks);
+                assert_eq!(r.workers.units, base.workers.units);
+            }
         }
     }
 

@@ -2,6 +2,7 @@
 //! four implementations of Table 1 (Naive / Pipeline / Adaptive /
 //! AdaptiveLB) are configurations of one runner.
 
+use crate::colorcount::ExecStats;
 use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
 
 /// Paper Table 1: the four experiment code versions.
@@ -82,6 +83,11 @@ pub struct RunConfig {
     pub n_ranks: usize,
     /// virtual threads per rank for the thread-level replay
     pub n_threads: usize,
+    /// real combine-executor threads (the `--workers` knob). Unlike
+    /// `n_threads` (a *model* of the paper's 48-thread nodes), this spawns
+    /// actual OS threads for every combine; counts are bit-identical for
+    /// any value (see `colorcount::parallel`).
+    pub n_workers: usize,
     /// Alg-4 max task size; 0 = per-vertex granularity
     pub task_size: u32,
     pub mode: ModeSelect,
@@ -104,6 +110,7 @@ impl Default for RunConfig {
         RunConfig {
             n_ranks: 4,
             n_threads: 48,
+            n_workers: 1,
             task_size: 50,
             mode: ModeSelect::AdaptiveLb,
             n_iterations: 1,
@@ -187,7 +194,9 @@ impl ModelTime {
     }
 }
 
-/// Aggregated thread-level stats (Fig 11's VTune histograms).
+/// Aggregated thread-level stats (Fig 11's VTune histograms). These are
+/// *modeled* (virtual-replay) figures; the *measured* per-worker record
+/// of the real combine executor lives in [`RunResult::workers`].
 #[derive(Debug, Clone, Default)]
 pub struct ThreadStats {
     /// time-weighted average concurrency
@@ -236,6 +245,10 @@ pub struct RunResult {
     /// calibrated seconds per compute unit
     pub flop_time: f64,
     pub threads: ThreadStats,
+    /// measured per-worker execution record of the real combine executor,
+    /// summed over every combine of the run (empty-ish when the XLA
+    /// backend bypassed the executor)
+    pub workers: ExecStats,
     /// the exchange schedule chosen for each non-leaf subtemplate
     pub comm_decisions: Vec<CommDecision>,
     /// modeled per-rank memory exceeded `mem_limit`

@@ -12,7 +12,7 @@
 //!
 //! Examples:
 //!   harpsg count --template u10-2 --dataset R500K3 --scale 2000 \
-//!       --ranks 8 --mode adaptive-lb --iters 2 --json
+//!       --ranks 8 --workers 4 --mode adaptive-lb --iters 2 --json
 //!   harpsg run --config configs/quickstart.toml
 
 use anyhow::{Context, Result};
@@ -194,6 +194,12 @@ fn print_human(session: &Session, r: &JobReport) {
         100.0 * (1.0 - r.model.comm_ratio()),
         r.model.mean_rho()
     );
+    println!(
+        "workers:         {} configured, {} measured busy, imbalance {:.2}",
+        r.n_workers,
+        r.workers.busy_workers(),
+        r.workers.imbalance()
+    );
     println!("peak memory:     {} per rank", human_bytes(r.peak_mem()));
     println!(
         "setup:           {} ({})",
@@ -215,6 +221,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--scale",
             "--ranks",
             "--threads",
+            "--workers",
             "--iters",
             "--seed",
             "--task-size",
@@ -233,6 +240,9 @@ fn cmd_count(args: &[String]) -> Result<()> {
     }
     if let Some(v) = parse_number::<usize>(&flags, "--threads")? {
         cfg.n_threads = v;
+    }
+    if let Some(v) = parse_number::<usize>(&flags, "--workers")? {
+        cfg.n_workers = v;
     }
     if let Some(v) = parse_number::<usize>(&flags, "--iters")? {
         cfg.n_iterations = v;

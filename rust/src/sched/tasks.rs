@@ -20,12 +20,26 @@ pub struct Task {
     pub len: u32,
 }
 
+/// Largest per-vertex workload `make_tasks` will split. Entries above
+/// this are saturated (documented edge case): the split loop's `u32`
+/// offset arithmetic (`pos + l`) and every downstream
+/// `start + len + slack` computation then stay strictly below
+/// `u32::MAX`, with 2¹⁶ of headroom for callers that add fixed slack to
+/// task ends. Real CSR degrees are bounded by the graph's edge count and
+/// sit far below this; only synthetic/corrupt inputs can hit it.
+pub const MAX_TASK_SPAN: u32 = u32::MAX - (1 << 16);
+
 /// Build the task queue for a set of per-vertex workloads (Alg 4).
 /// `degrees[r]` is the number of adjacency pairs vertex-row `r` must
 /// process in this combine step. `max_task_size == 0` disables splitting.
+///
+/// Entries above [`MAX_TASK_SPAN`] are saturated to it (the tasks then
+/// cover `[0, MAX_TASK_SPAN)` of that vertex's list) rather than fed into
+/// the `u32` split arithmetic — see the const's docs.
 pub fn make_tasks(degrees: &[u32], max_task_size: u32, shuffle_seed: Option<u64>) -> Vec<Task> {
     let mut q = Vec::new();
-    for (r, &n) in degrees.iter().enumerate() {
+    for (r, &raw) in degrees.iter().enumerate() {
+        let n = raw.min(MAX_TASK_SPAN);
         if n == 0 {
             continue;
         }
@@ -158,6 +172,30 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn saturates_overflowing_degrees() {
+        // regression: a pathological degree near u32::MAX must neither
+        // wrap the split arithmetic nor blow up the queue — it is
+        // saturated to MAX_TASK_SPAN (a large task size keeps the queue
+        // small enough to materialize here)
+        let s = 1u32 << 30;
+        let q = make_tasks(&[u32::MAX, 7], s, None);
+        let mut covered = 0u64;
+        for t in &q {
+            if t.vertex == 0 {
+                assert!(t.len <= s);
+                assert!(t.start as u64 + t.len as u64 <= MAX_TASK_SPAN as u64);
+                covered += t.len as u64;
+            }
+        }
+        assert_eq!(covered, MAX_TASK_SPAN as u64);
+        // sane entries are untouched
+        assert!(q.iter().any(|t| t.vertex == 1 && t.start == 0 && t.len == 7));
+        // boundary value passes through un-saturated
+        let q = make_tasks(&[MAX_TASK_SPAN], s, None);
+        assert_eq!(q.iter().map(|t| t.len as u64).sum::<u64>(), MAX_TASK_SPAN as u64);
     }
 
     #[test]
