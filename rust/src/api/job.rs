@@ -4,7 +4,7 @@
 
 use super::error::HarpsgError;
 use crate::comm::{AdaptivePolicy, HockneyParams};
-use crate::coordinator::{EngineKind, ModeSelect, RunConfig};
+use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use crate::template::{builtin, Template};
 
 /// A validated request to count one template. Construct with
@@ -110,6 +110,15 @@ impl CountJobBuilder {
     /// session to have been opened with `load_xla`.
     pub fn engine(mut self, e: EngineKind) -> Self {
         self.cfg.engine = e;
+        self
+    }
+
+    /// Exchange executor: the rank-parallel pipelined executor (default)
+    /// or the sequential reference path. Estimates are bit-identical
+    /// either way; only the measured-pipeline report and the real
+    /// wall-clock change.
+    pub fn exchange(mut self, e: ExchangeExec) -> Self {
+        self.cfg.exchange = e;
         self
     }
 
@@ -284,6 +293,17 @@ mod tests {
             .is_ok());
         // untouched defaults pass regardless of mode
         assert!(base().mode(ModeSelect::Naive).build().is_ok());
+    }
+
+    #[test]
+    fn exchange_executor_knob() {
+        assert_eq!(
+            base().build().unwrap().config().exchange,
+            ExchangeExec::Threaded,
+            "rank-parallel pipelined executor is the default"
+        );
+        let job = base().exchange(ExchangeExec::Sequential).build().unwrap();
+        assert_eq!(job.config().exchange, ExchangeExec::Sequential);
     }
 
     #[test]

@@ -1,7 +1,10 @@
 //! Progress observation for long-running counting jobs. The coordinator
-//! invokes these callbacks synchronously from its run loop, so CLIs can
-//! stream status lines and services can push job state without polling.
-//! All methods have empty defaults — implement only what you need.
+//! invokes these callbacks synchronously as events happen — run/iteration
+//! events from its run loop, and per-exchange-step events from whichever
+//! rank worker thread completed the step when the rank-parallel executor
+//! is active — so CLIs can stream status lines and services can push job
+//! state without polling. All methods have empty defaults — implement
+//! only what you need.
 
 /// Observer of a counting run. Implementations must be `Send + Sync`
 /// because a session may be driven from a worker thread; callbacks take
@@ -22,6 +25,15 @@ pub trait Progress: Send + Sync {
     /// Called after each exchange step of subtemplate `sub` completes on
     /// every rank.
     fn on_exchange_step(&self, _sub: usize, _step: usize, _n_steps: usize) {}
+
+    /// Called right after [`Progress::on_exchange_step`] when the
+    /// rank-parallel pipelined executor ran the step: `comp_s` is the
+    /// rank-averaged wall seconds spent folding the step's received rows,
+    /// `wait_s` the rank-averaged seconds blocked waiting for them (the
+    /// step's *exposed* communication; `comp_s / (comp_s + wait_s)` is
+    /// the measured overlap ρ). Not called by the sequential executor,
+    /// which has no real overlap to measure.
+    fn on_exchange_measured(&self, _sub: usize, _step: usize, _comp_s: f64, _wait_s: f64) {}
 
     /// Called once a subtemplate's combine (local + exchange) is done.
     fn on_subtemplate_done(&self, _sub: usize) {}

@@ -8,6 +8,7 @@ use crate::colorcount::ExecStats;
 use crate::coordinator::{CommDecision, ModelTime, RunResult, ThreadStats};
 use crate::graph::Graph;
 use crate::metrics::Series;
+use crate::pipeline::MeasuredPipeline;
 use crate::template::{complexity, TemplateComplexity};
 use crate::util::Json;
 
@@ -28,6 +29,8 @@ pub struct JobReport {
     pub mode: String,
     /// combine backend name ("native" | "xla")
     pub engine: String,
+    /// exchange executor name ("threaded" | "sequential")
+    pub exchange: String,
     pub n_ranks: usize,
     pub n_threads: usize,
     /// configured real combine-executor threads (`--workers`)
@@ -49,6 +52,10 @@ pub struct JobReport {
     /// *measured* per-worker record of the real combine executor (busy
     /// seconds, tasks, pairs per worker) — see `colorcount::parallel`
     pub workers: ExecStats,
+    /// *measured* pipeline record of the rank-parallel exchange executor
+    /// (real per-step overlap ρ, exposed wait, per-rank receive-buffer
+    /// peaks); `None` when the sequential executor ran
+    pub measured: Option<MeasuredPipeline>,
     pub peak_mem_per_rank: Vec<u64>,
     /// measured seconds per compute unit
     pub flop_time: f64,
@@ -78,6 +85,7 @@ impl JobReport {
             graph_edges: g.n_edges,
             mode: job.cfg.mode.name().to_string(),
             engine: job.cfg.engine.name().to_string(),
+            exchange: job.cfg.exchange.name().to_string(),
             n_ranks: job.cfg.n_ranks,
             n_threads: job.cfg.n_threads,
             n_workers: job.cfg.n_workers,
@@ -91,6 +99,7 @@ impl JobReport {
             comm_decisions: r.comm_decisions,
             threads: r.threads,
             workers: r.workers,
+            measured: r.measured,
             peak_mem_per_rank: r.peak_mem_per_rank,
             flop_time: r.flop_time,
             real_seconds: r.real_seconds,
@@ -134,6 +143,7 @@ impl JobReport {
                 Json::Obj(vec![
                     ("mode".into(), Json::Str(self.mode.clone())),
                     ("engine".into(), Json::Str(self.engine.clone())),
+                    ("exchange".into(), Json::Str(self.exchange.clone())),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),
                     ("workers".into(), Json::Num(self.n_workers as f64)),
@@ -173,6 +183,62 @@ impl JobReport {
                         ),
                     ),
                 ]),
+            ),
+            (
+                // the rank-parallel executor's *measured* overlap record,
+                // next to the modeled section above: real per-step ρ
+                // (comp / (comp + wait)), the exposed wait the threads
+                // actually paid, and the streaming memory bound. `null`
+                // when the sequential executor ran.
+                "pipeline_measured".into(),
+                match &self.measured {
+                    None => Json::Null,
+                    Some(m) => Json::Obj(vec![
+                        (
+                            "steps".into(),
+                            Json::Arr(
+                                m.mean_steps()
+                                    .iter()
+                                    .enumerate()
+                                    .map(|(w, s)| {
+                                        Json::Obj(vec![
+                                            ("step".into(), Json::Num(w as f64)),
+                                            ("comp_s".into(), Json::Num(s.comp_s)),
+                                            ("wait_s".into(), Json::Num(s.wait_s)),
+                                            ("rho".into(), Json::Num(s.rho())),
+                                        ])
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                        ("mean_rho".into(), Json::Num(m.mean_rho())),
+                        ("comp_s".into(), Json::Num(m.comp_s)),
+                        ("exposed_wait_s".into(), Json::Num(m.exposed_wait_s)),
+                        ("combines".into(), Json::Num(m.n_combines as f64)),
+                        (
+                            "recv_peak_per_rank".into(),
+                            Json::Arr(
+                                m.recv_peak_per_rank
+                                    .iter()
+                                    .map(|&b| Json::Num(b as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "max_step_recv_bytes_per_rank".into(),
+                            Json::Arr(
+                                m.max_step_recv_bytes_per_rank
+                                    .iter()
+                                    .map(|&b| Json::Num(b as f64))
+                                    .collect(),
+                            ),
+                        ),
+                        (
+                            "in_flight_peak_bytes".into(),
+                            Json::Num(m.in_flight_peak_bytes as f64),
+                        ),
+                    ]),
+                },
             ),
             (
                 "comm".into(),

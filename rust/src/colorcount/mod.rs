@@ -13,5 +13,5 @@ pub mod table;
 pub use brute::count_embeddings;
 pub use engine::{aggregate_batch, contract_touched, CombineScratch, Engine, EngineContext};
 pub use estimate::{estimate, iteration_bound, median_of_means, Estimate};
-pub use parallel::{aggregate_merged, combine_batches, ExecStats, PairBatch};
+pub use parallel::{aggregate_merged, combine_batches, nested_budget, ExecStats, PairBatch};
 pub use table::{init_leaf_table, Coloring, Count, CountTable};

@@ -115,19 +115,49 @@ impl ExecStats {
             other.busy_seconds.len(),
             "cannot merge stats from different worker-pool sizes"
         );
+        self.absorb(other);
+    }
+
+    /// Accumulate a record measured on a pool **no wider** than this one,
+    /// folding worker `w` of `other` into worker `w` here.
+    pub fn absorb(&mut self, other: &ExecStats) {
+        self.absorb_at(other, 0);
+    }
+
+    /// Accumulate a narrower record with its lanes shifted by
+    /// `lane_offset` (wrapping at this record's width). This is how the
+    /// rank-parallel executor rolls its per-rank nested pools (width
+    /// [`nested_budget`]) into the run-level record: rank `p`'s pool
+    /// lands at offset `p * nested`, so the distinct threads that were
+    /// genuinely busy in parallel stay distinct in the per-worker
+    /// breakdown instead of all collapsing onto slot 0.
+    pub fn absorb_at(&mut self, other: &ExecStats, lane_offset: usize) {
+        let n = self.busy_seconds.len();
+        assert!(
+            other.busy_seconds.len() <= n,
+            "cannot absorb stats from a wider pool ({} > {n})",
+            other.busy_seconds.len(),
+        );
         self.n_tasks += other.n_tasks;
         self.n_pairs += other.n_pairs;
         self.units += other.units;
-        for (a, b) in self.busy_seconds.iter_mut().zip(&other.busy_seconds) {
-            *a += *b;
-        }
-        for (a, b) in self.worker_tasks.iter_mut().zip(&other.worker_tasks) {
-            *a += *b;
-        }
-        for (a, b) in self.worker_pairs.iter_mut().zip(&other.worker_pairs) {
-            *a += *b;
+        for w in 0..other.busy_seconds.len() {
+            let slot = (lane_offset + w) % n;
+            self.busy_seconds[slot] += other.busy_seconds[w];
+            self.worker_tasks[slot] += other.worker_tasks[w];
+            self.worker_pairs[slot] += other.worker_pairs[w];
         }
     }
+}
+
+/// Per-lane worker budget for nested parallelism: when `n_lanes` rank
+/// threads each drive their own combine pool out of a run-wide budget of
+/// `total_workers`, give each lane `ceil(total / lanes)` (≥ 1) workers.
+/// Oversubscribing by at most `lanes - 1` threads beats idling lanes, and
+/// the split can never change results — the executor is bit-identical for
+/// every worker count.
+pub fn nested_budget(total_workers: usize, n_lanes: usize) -> usize {
+    total_workers.max(1).div_ceil(n_lanes.max(1))
 }
 
 /// One schedulable unit: `len` pairs at absolute offset `off` of batch
@@ -554,6 +584,65 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
             }
         }
+    }
+
+    #[test]
+    fn nested_budget_splits_the_pool() {
+        assert_eq!(nested_budget(4, 4), 1);
+        assert_eq!(nested_budget(4, 2), 2);
+        assert_eq!(nested_budget(5, 2), 3); // ceil
+        assert_eq!(nested_budget(1, 6), 1); // never zero
+        assert_eq!(nested_budget(0, 3), 1);
+        assert_eq!(nested_budget(8, 0), 8); // degenerate lane count
+    }
+
+    #[test]
+    fn absorb_narrower_pool_into_wider() {
+        let mut wide = ExecStats::zeros(4);
+        let mut narrow = ExecStats::zeros(2);
+        narrow.n_tasks = 3;
+        narrow.n_pairs = 10;
+        narrow.units = 7;
+        narrow.busy_seconds = vec![0.5, 0.25];
+        narrow.worker_tasks = vec![2, 1];
+        narrow.worker_pairs = vec![6, 4];
+        wide.absorb(&narrow);
+        wide.absorb(&narrow);
+        assert_eq!(wide.n_tasks, 6);
+        assert_eq!(wide.n_pairs, 20);
+        assert_eq!(wide.units, 14);
+        assert_eq!(wide.worker_tasks, vec![4, 2, 0, 0]);
+        assert_eq!(wide.busy_seconds[0], 1.0);
+        assert_eq!(wide.n_workers(), 4, "width stays the configured pool");
+    }
+
+    #[test]
+    fn absorb_at_spreads_lanes_across_the_record() {
+        // two 2-wide rank pools at offsets 0 and 2 of a 4-wide record:
+        // each rank's workers stay distinct slots
+        let mut run = ExecStats::zeros(4);
+        let mut lane = ExecStats::zeros(2);
+        lane.worker_tasks = vec![5, 3];
+        lane.busy_seconds = vec![1.0, 0.5];
+        lane.n_tasks = 8;
+        run.absorb_at(&lane, 0);
+        run.absorb_at(&lane, 2);
+        assert_eq!(run.worker_tasks, vec![5, 3, 5, 3]);
+        assert_eq!(run.busy_seconds, vec![1.0, 0.5, 1.0, 0.5]);
+        assert_eq!(run.n_tasks, 16);
+        assert_eq!(run.busy_workers(), 4);
+        // offsets wrap at the record width
+        let mut narrow = ExecStats::zeros(2);
+        narrow.absorb_at(&lane, 3);
+        assert_eq!(narrow.worker_tasks, vec![3, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "wider pool")]
+    fn absorb_rejects_wider_source() {
+        let mut narrow = ExecStats::zeros(2);
+        let wide = ExecStats::zeros(3);
+        narrow.absorb(&wide);
     }
 
     #[test]

@@ -5,8 +5,24 @@
 //! DESIGN.md §1). Data movement is real (actual count rows are copied
 //! between rank-owned buffers and drive the receiver's DP update);
 //! *timing* is modeled by the Hockney parameters over the measured bytes.
+//!
+//! Two fabrics share the packet format:
+//!
+//! * [`Fabric`] — the original single-threaded mailbox, used by the
+//!   sequential exchange executor (one step at a time, all ranks in one
+//!   loop).
+//! * [`ThreadedFabric`] — the thread-safe variant behind the rank-parallel
+//!   pipelined executor: every rank runs on its own thread, `send` is
+//!   callable from any of them, and [`ThreadedFabric::recv_step`] blocks
+//!   until a step's full packet set has arrived, returning it in the
+//!   canonical `(step, sender, seq)` order so delivery is deterministic
+//!   regardless of thread interleaving.
 
 use super::packet::Packet;
+use crate::coordinator::memory::{MemClass, SharedAccountant};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Condvar, Mutex};
+use std::time::Duration;
 
 /// Mailbox fabric for `n_ranks` simulated ranks.
 #[derive(Debug)]
@@ -72,6 +88,177 @@ impl Fabric {
     }
 }
 
+/// A queued packet plus the metadata that fixes its canonical position.
+#[derive(Debug)]
+struct Queued {
+    sender: usize,
+    step: usize,
+    /// per-(sender, step) sequence number, assigned at send time
+    seq: u64,
+    pkt: Packet,
+}
+
+/// How long a receiver may block waiting for a step's packets before the
+/// fabric declares the exchange wedged. This is a deadlock backstop, not
+/// a workload limit: a healthy wait is bounded by the slowest peer's
+/// previous fold step, so the window must comfortably exceed any single
+/// step's compute (debug builds on large graphs included).
+const RECV_TIMEOUT: Duration = Duration::from_secs(600);
+
+/// Thread-safe mailbox fabric for the rank-parallel exchange executor.
+///
+/// Senders may run on any thread; every send is stamped with a
+/// per-(sender, step) sequence number, and [`Self::recv_step`] hands the
+/// receiver its packets sorted by `(sender, seq)` — so the fold order a
+/// receiver sees is exactly the order the sequential executor produces
+/// (ascending sender rank, send order within a sender), independent of
+/// which thread ran first.
+///
+/// Byte/message accounting is per `(rank, step)` — the threaded analogue
+/// of calling `reset_accounting` at each step boundary — and the payload
+/// bytes parked in inboxes are charged to a [`SharedAccountant`] under
+/// `MemClass::RecvBuffer` from send until receive, exposing the true
+/// in-flight high-water mark of the pipeline.
+#[derive(Debug)]
+pub struct ThreadedFabric {
+    pub n_ranks: usize,
+    pub n_steps: usize,
+    inboxes: Vec<Mutex<Vec<Queued>>>,
+    arrivals: Vec<Condvar>,
+    /// `[rank][step]` bytes sent
+    sent_bytes: Vec<Vec<AtomicU64>>,
+    /// `[rank][step]` messages sent
+    sent_msgs: Vec<Vec<AtomicU64>>,
+    /// `[sender][step]` next sequence number
+    seqs: Vec<Vec<AtomicU64>>,
+    /// payload bytes currently parked in inboxes (sent, not yet received)
+    in_flight: SharedAccountant,
+}
+
+impl ThreadedFabric {
+    pub fn new(n_ranks: usize, n_steps: usize) -> Self {
+        fn counters(n_ranks: usize, n_steps: usize) -> Vec<Vec<AtomicU64>> {
+            (0..n_ranks)
+                .map(|_| (0..n_steps).map(|_| AtomicU64::new(0)).collect())
+                .collect()
+        }
+        ThreadedFabric {
+            n_ranks,
+            n_steps,
+            inboxes: (0..n_ranks).map(|_| Mutex::new(Vec::new())).collect(),
+            arrivals: (0..n_ranks).map(|_| Condvar::new()).collect(),
+            sent_bytes: counters(n_ranks, n_steps),
+            sent_msgs: counters(n_ranks, n_steps),
+            seqs: counters(n_ranks, n_steps),
+            in_flight: SharedAccountant::new(),
+        }
+    }
+
+    /// Send a packet; the packet's `offset` field is its exchange step.
+    /// Callable from any thread.
+    pub fn send(&self, p: Packet) {
+        let to = p.receiver();
+        let from = p.sender();
+        let step = p.offset();
+        assert!(to < self.n_ranks, "receiver {to} out of range");
+        assert!(from < self.n_ranks, "sender {from} out of range");
+        assert!(step < self.n_steps, "step {step} out of range ({})", self.n_steps);
+        let bytes = p.bytes();
+        self.sent_bytes[from][step].fetch_add(bytes, Ordering::Relaxed);
+        self.sent_msgs[from][step].fetch_add(1, Ordering::Relaxed);
+        let seq = self.seqs[from][step].fetch_add(1, Ordering::Relaxed);
+        self.in_flight.alloc(MemClass::RecvBuffer, bytes);
+        {
+            let mut ib = self.inboxes[to].lock().unwrap();
+            ib.push(Queued {
+                sender: from,
+                step,
+                seq,
+                pkt: p,
+            });
+        }
+        self.arrivals[to].notify_all();
+    }
+
+    /// Block until at least `n_expected` packets for `step` sit in rank
+    /// `p`'s inbox, then take every packet of that step, sorted by
+    /// `(sender, seq)`. Packets of other steps stay queued. Panics if the
+    /// wait exceeds [`RECV_TIMEOUT`] (a wedged exchange, not slow I/O).
+    pub fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> Vec<Packet> {
+        let mut ib = self.inboxes[p].lock().unwrap();
+        while ib.iter().filter(|q| q.step == step).count() < n_expected {
+            let (guard, timeout) = self.arrivals[p].wait_timeout(ib, RECV_TIMEOUT).unwrap();
+            ib = guard;
+            if timeout.timed_out() && ib.iter().filter(|q| q.step == step).count() < n_expected {
+                panic!(
+                    "rank {p} timed out waiting for {n_expected} packet(s) of step {step} \
+                     ({} arrived)",
+                    ib.iter().filter(|q| q.step == step).count()
+                );
+            }
+        }
+        let mut got = Vec::with_capacity(n_expected);
+        let mut rest = Vec::with_capacity(ib.len().saturating_sub(n_expected));
+        for q in ib.drain(..) {
+            if q.step == step {
+                got.push(q);
+            } else {
+                rest.push(q);
+            }
+        }
+        *ib = rest;
+        drop(ib);
+        got.sort_by_key(|q| (q.sender, q.seq));
+        let bytes: u64 = got.iter().map(|q| q.pkt.bytes()).sum();
+        self.in_flight.free(MemClass::RecvBuffer, bytes);
+        got.into_iter().map(|q| q.pkt).collect()
+    }
+
+    /// Packets currently waiting for rank `p` (any step).
+    pub fn pending(&self, p: usize) -> usize {
+        self.inboxes[p].lock().unwrap().len()
+    }
+
+    /// Bytes rank `p` sent at `step`.
+    pub fn sent_bytes(&self, p: usize, step: usize) -> u64 {
+        self.sent_bytes[p][step].load(Ordering::Relaxed)
+    }
+
+    /// Messages rank `p` sent at `step`.
+    pub fn sent_msgs(&self, p: usize, step: usize) -> u64 {
+        self.sent_msgs[p][step].load(Ordering::Relaxed)
+    }
+
+    /// Total bytes rank `p` sent across all steps (matches the sequential
+    /// fabric's accounting summed over its per-step resets).
+    pub fn total_sent_bytes(&self, p: usize) -> u64 {
+        (0..self.n_steps).map(|w| self.sent_bytes(p, w)).sum()
+    }
+
+    /// Total messages rank `p` sent across all steps.
+    pub fn total_sent_msgs(&self, p: usize) -> u64 {
+        (0..self.n_steps).map(|w| self.sent_msgs(p, w)).sum()
+    }
+
+    /// Payload bytes currently in flight (sent, not yet received).
+    pub fn in_flight_bytes(&self) -> u64 {
+        self.in_flight.current(MemClass::RecvBuffer)
+    }
+
+    /// High-water mark of in-flight payload bytes over the fabric's life.
+    pub fn in_flight_peak(&self) -> u64 {
+        self.in_flight.peak()
+    }
+
+    /// Assert no packets are stranded (end-of-exchange invariant).
+    pub fn assert_empty(&self) {
+        for (p, ib) in self.inboxes.iter().enumerate() {
+            let n = ib.lock().unwrap().len();
+            assert!(n == 0, "rank {p} has {n} stranded packets");
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -107,5 +294,163 @@ mod tests {
         let mut f = Fabric::new(2);
         f.send(Packet::new(0, 1, 0, 0, 1, vec![1.0]));
         f.assert_empty();
+    }
+
+    /// One send per sender rank, per step, per receiver: `(sender, step,
+    /// k)` encoded in the payload so order and content are checkable.
+    fn payload(sender: usize, step: usize, k: usize) -> Vec<f32> {
+        vec![sender as f32, step as f32, k as f32]
+    }
+
+    /// Satellite: random send schedules executed by genuinely concurrent
+    /// sender threads always drain in canonical `(step, sender, seq)`
+    /// order, and the threaded fabric's byte/message accounting matches
+    /// the sequential fabric fed the identical schedule.
+    #[test]
+    fn prop_threaded_fabric_canonical_and_accounted() {
+        crate::util::prop::check("threaded_fabric", |gen| {
+            let n_ranks = gen.usize_in(2, 6);
+            let n_steps = gen.usize_in(1, 4);
+            // per-sender ordered send streams (the order a rank thread
+            // would issue them in)
+            let mut by_sender: Vec<Vec<(usize, usize)>> = Vec::new();
+            for _ in 0..n_ranks {
+                let n_sends = gen.usize_in(0, 12);
+                by_sender.push(
+                    (0..n_sends)
+                        .map(|_| {
+                            (
+                                gen.usize_in(0, n_ranks - 1),
+                                gen.usize_in(0, n_steps - 1),
+                            )
+                        })
+                        .collect(),
+                );
+            }
+
+            let fab = ThreadedFabric::new(n_ranks, n_steps);
+            std::thread::scope(|s| {
+                for (from, sends) in by_sender.iter().enumerate() {
+                    let fab = &fab;
+                    s.spawn(move || {
+                        for (k, &(to, step)) in sends.iter().enumerate() {
+                            fab.send(Packet::new(from, to, step, 0, 3, payload(from, step, k)));
+                        }
+                    });
+                }
+            });
+
+            // sequential reference for the accounting comparison
+            let mut seq_fab = Fabric::new(n_ranks);
+            for (from, sends) in by_sender.iter().enumerate() {
+                for (k, &(to, step)) in sends.iter().enumerate() {
+                    seq_fab.send(Packet::new(from, to, step, 0, 3, payload(from, step, k)));
+                }
+            }
+            for p in 0..n_ranks {
+                if fab.total_sent_bytes(p) != seq_fab.sent_bytes(p) {
+                    return Err(format!(
+                        "rank {p}: threaded {} bytes != sequential {}",
+                        fab.total_sent_bytes(p),
+                        seq_fab.sent_bytes(p)
+                    ));
+                }
+                if fab.total_sent_msgs(p) != seq_fab.sent_msgs(p) as u64 {
+                    return Err(format!("rank {p}: message counts differ"));
+                }
+            }
+
+            // canonical drain: for each (receiver, step), the packets come
+            // out sorted by sender, and within a sender in send order
+            for p in 0..n_ranks {
+                for w in 0..n_steps {
+                    let mut expect: Vec<Vec<f32>> = Vec::new();
+                    for (from, sends) in by_sender.iter().enumerate() {
+                        for (k, &(to, step)) in sends.iter().enumerate() {
+                            if to == p && step == w {
+                                expect.push(payload(from, w, k));
+                            }
+                        }
+                    }
+                    let got = fab.recv_step(p, w, expect.len());
+                    if got.len() != expect.len() {
+                        return Err(format!(
+                            "rank {p} step {w}: {} packets != expected {}",
+                            got.len(),
+                            expect.len()
+                        ));
+                    }
+                    for (pkt, want) in got.iter().zip(&expect) {
+                        if pkt.rows != *want {
+                            return Err(format!(
+                                "rank {p} step {w}: non-canonical order {:?} vs {want:?}",
+                                pkt.rows
+                            ));
+                        }
+                    }
+                }
+            }
+            fab.assert_empty();
+            if fab.in_flight_bytes() != 0 {
+                return Err("in-flight bytes nonzero after full drain".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn threaded_recv_leaves_other_steps_queued() {
+        let fab = ThreadedFabric::new(2, 2);
+        fab.send(Packet::new(0, 1, 1, 0, 1, vec![1.0])); // step 1 first
+        fab.send(Packet::new(0, 1, 0, 0, 1, vec![2.0]));
+        let step0 = fab.recv_step(1, 0, 1);
+        assert_eq!(step0.len(), 1);
+        assert_eq!(step0[0].rows, vec![2.0]);
+        assert_eq!(fab.pending(1), 1, "step-1 packet stays queued");
+        let step1 = fab.recv_step(1, 1, 1);
+        assert_eq!(step1[0].rows, vec![1.0]);
+        fab.assert_empty();
+    }
+
+    #[test]
+    fn threaded_in_flight_high_water() {
+        let fab = ThreadedFabric::new(2, 1);
+        let a = Packet::new(0, 1, 0, 0, 2, vec![0.0; 2]);
+        let b = Packet::new(0, 1, 0, 0, 4, vec![0.0; 4]);
+        let total = a.bytes() + b.bytes();
+        fab.send(a);
+        fab.send(b);
+        assert_eq!(fab.in_flight_bytes(), total);
+        let got = fab.recv_step(1, 0, 2);
+        assert_eq!(got.len(), 2);
+        assert_eq!(fab.in_flight_bytes(), 0);
+        assert_eq!(fab.in_flight_peak(), total);
+    }
+
+    #[test]
+    #[should_panic(expected = "stranded")]
+    fn threaded_stranded_packets_detected() {
+        let fab = ThreadedFabric::new(2, 1);
+        fab.send(Packet::new(0, 1, 0, 0, 1, vec![1.0]));
+        fab.assert_empty();
+    }
+
+    #[test]
+    fn threaded_recv_blocks_until_late_sender() {
+        // receiver starts waiting before the second sender has sent:
+        // recv_step must block, then deliver in canonical sender order
+        let fab = ThreadedFabric::new(3, 1);
+        fab.send(Packet::new(1, 2, 0, 0, 1, vec![1.0]));
+        let senders: Vec<Packet> = std::thread::scope(|s| {
+            let h = s.spawn(|| fab.recv_step(2, 0, 2));
+            s.spawn(|| {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+                fab.send(Packet::new(0, 2, 0, 0, 1, vec![0.0]));
+            });
+            h.join().unwrap()
+        });
+        assert_eq!(senders.len(), 2);
+        assert_eq!(senders[0].sender(), 0, "sorted by sender, not arrival");
+        assert_eq!(senders[1].sender(), 1);
     }
 }

@@ -12,5 +12,5 @@ pub mod packet;
 pub use adaptive::{AdaptivePolicy, CombineShape, CommMode};
 pub use group::{Schedule, StepPlan};
 pub use hockney::HockneyParams;
-pub use mailbox::Fabric;
+pub use mailbox::{Fabric, ThreadedFabric};
 pub use packet::{decode_meta, encode_meta, Packet};

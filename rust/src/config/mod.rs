@@ -7,7 +7,7 @@
 
 use crate::api::HarpsgError;
 use crate::comm::HockneyParams;
-use crate::coordinator::{EngineKind, ModeSelect, RunConfig};
+use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
@@ -129,7 +129,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 15] = [
+const KNOWN_KEYS: [&str; 16] = [
     "template",
     "dataset",
     "scale",
@@ -141,6 +141,7 @@ const KNOWN_KEYS: [&str; 15] = [
     "run.seed",
     "run.mode",
     "run.engine",
+    "run.exchange",
     "run.mem_limit_mb",
     "net.alpha",
     "net.beta",
@@ -230,6 +231,13 @@ impl RunSpec {
             run.engine =
                 EngineKind::parse(e).ok_or_else(|| HarpsgError::UnknownEngine(e.to_string()))?;
         }
+        if let Some(x) = want_str(doc, "run.exchange")? {
+            run.exchange = ExchangeExec::parse(x).ok_or_else(|| {
+                HarpsgError::Parse(format!(
+                    "`run.exchange`: unknown executor `{x}` (threaded|sequential)"
+                ))
+            })?;
+        }
         if let Some(a) = want_float(doc, "net.alpha")? {
             run.net.alpha = a;
         }
@@ -316,6 +324,20 @@ beta = 1.7e-10
         assert_eq!(spec.run.n_workers, 1);
         // wrong type is a typed parse error
         let bad = SAMPLE.replace("workers = 4", "workers = \"four\"");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn exchange_key_parses_and_defaults() {
+        // default when omitted: the rank-parallel pipelined executor
+        let spec = RunSpec::parse(SAMPLE).unwrap();
+        assert_eq!(spec.run.exchange, ExchangeExec::Threaded);
+        let with_key = format!("{SAMPLE}\n[run]\nexchange = \"sequential\"\n");
+        assert_eq!(
+            RunSpec::parse(&with_key).unwrap().run.exchange,
+            ExchangeExec::Sequential
+        );
+        let bad = format!("{SAMPLE}\n[run]\nexchange = \"quantum\"\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 

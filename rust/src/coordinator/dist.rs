@@ -25,15 +25,18 @@
 //! amortizing the dominant setup cost of multi-template sweeps.
 
 use super::memory::{MemClass, MemoryAccountant};
-use super::run::{CommDecision, EngineKind, ModelTime, RunConfig, RunResult, ThreadStats};
+use super::run::{
+    CommDecision, EngineKind, ExchangeExec, ModelTime, RunConfig, RunResult, ThreadStats,
+};
 use crate::api::Progress;
 use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
-use crate::colorcount::parallel::{combine_batches, ExecStats, PairBatch};
+use crate::colorcount::parallel::{combine_batches, nested_budget, ExecStats, PairBatch};
 use crate::colorcount::EngineContext;
 use crate::colorcount::{init_leaf_table, median_of_means, Coloring, CountTable};
-use crate::comm::{CommMode, Fabric, Packet, Schedule};
+use crate::combin::SplitTable;
+use crate::comm::{CommMode, Fabric, HockneyParams, Packet, Schedule, ThreadedFabric};
 use crate::graph::{Graph, Partition, RequestLists};
-use crate::pipeline::{naive, pipelined, PipelineReport, StepTiming};
+use crate::pipeline::{naive, pipelined, MeasuredPipeline, PipelineReport, StepTiming};
 use crate::sched::{make_tasks, replay, TaskCostModel};
 use crate::template::{complexity, Template, TemplateComplexity};
 use std::sync::Arc;
@@ -215,7 +218,12 @@ impl<'g> DistributedRunner<'g> {
         // stub fallback); only a *loaded* XLA runtime keeps the serial
         // scratch-based combine so its kernel sees the same buffers
         let use_exec = !(self.cfg.engine == EngineKind::Xla && self.xla.is_some());
+        // the rank-parallel pipelined executor needs the combine executor
+        // (per-rank nested pools); the serial-scratch XLA path falls back
+        // to the sequential exchange
+        let exec_threaded = use_exec && self.cfg.exchange == ExchangeExec::Threaded;
         let mut measured = ExecStats::zeros(self.cfg.n_workers);
+        let mut pipe = MeasuredPipeline::new(n_ranks);
 
         // the comm decision is per template (Alg 3 line 2) and therefore
         // identical for every non-leaf subtemplate; record it per sub so
@@ -299,20 +307,36 @@ impl<'g> DistributedRunner<'g> {
                         tables[p][i] = Some(t);
                     }
                 } else {
-                    let rec = self.combine_subtemplate(
-                        i,
-                        &mut tables,
-                        &mut scratches,
-                        &mut mems,
-                        &mut total_units,
-                        &mut real_compute,
-                        &mut hist_units,
-                        &mut busy_units,
-                        eff_task,
-                        it,
-                        use_exec,
-                        &mut measured,
-                    );
+                    let rec = if exec_threaded {
+                        self.combine_subtemplate_threaded(
+                            i,
+                            &mut tables,
+                            &mut mems,
+                            &mut total_units,
+                            &mut real_compute,
+                            &mut hist_units,
+                            &mut busy_units,
+                            eff_task,
+                            it,
+                            &mut measured,
+                            &mut pipe,
+                        )
+                    } else {
+                        self.combine_subtemplate(
+                            i,
+                            &mut tables,
+                            &mut scratches,
+                            &mut mems,
+                            &mut total_units,
+                            &mut real_compute,
+                            &mut hist_units,
+                            &mut busy_units,
+                            eff_task,
+                            it,
+                            use_exec,
+                            &mut measured,
+                        )
+                    };
                     records.push(rec);
                 }
                 // free tables whose last reader has run
@@ -427,6 +451,7 @@ impl<'g> DistributedRunner<'g> {
             },
             comm_decisions,
             workers: measured,
+            measured: if exec_threaded { Some(pipe) } else { None },
             oom,
         }
     }
@@ -486,16 +511,8 @@ impl<'g> DistributedRunner<'g> {
             mems[p].alloc(MemClass::CountTable, o.bytes());
         }
 
-        let shuffle_seed = |p: usize, w: usize| {
-            if eff_task > 0 {
-                Some(crate::util::mix2(
-                    self.cfg.seed,
-                    (iteration as u64) << 32 | (i as u64) << 16 | (p as u64) << 8 | w as u64,
-                ))
-            } else {
-                None
-            }
-        };
+        let shuffle_seed =
+            |p: usize, w: usize| model_shuffle_seed(self.cfg.seed, iteration, i, p, w, eff_task);
 
         // ---- local phase ----
         // NB: `pass_idx` may equal `act_idx` (deduplicated shapes, e.g. a
@@ -575,24 +592,25 @@ impl<'g> DistributedRunner<'g> {
                 let mut recv_bytes = 0u64;
                 let n_msgs = packets.len();
                 let mut degs = vec![0u32; self.plan.part.n_local(p)];
-                // materialize the received row blocks (identical packet
-                // accounting for both combine paths)
+                // view the received row blocks as count tables by *moving*
+                // each packet's payload — receiving never copies a row
                 let mut bufs: Vec<(usize, CountTable)> = Vec::with_capacity(packets.len());
-                for pkt in &packets {
-                    recv_bytes += pkt.bytes();
-                    mems[p].alloc(MemClass::RecvBuffer, pkt.bytes());
+                for pkt in packets {
+                    let bytes = pkt.bytes();
+                    recv_bytes += bytes;
+                    mems[p].alloc(MemClass::RecvBuffer, bytes);
                     let q = pkt.sender();
+                    for &(v, _) in &self.plan.plans[p][q] {
+                        degs[v as usize] += 1;
+                    }
                     bufs.push((
                         q,
                         CountTable {
                             n_rows: pkt.rows.len() / a2_sets.max(1),
                             n_sets: a2_sets,
-                            data: pkt.rows.clone(),
+                            data: pkt.rows,
                         },
                     ));
-                    for &(v, _) in &self.plan.plans[p][q] {
-                        degs[v as usize] += 1;
-                    }
                 }
                 let t0 = Instant::now();
                 let passive = tables[p][pass_idx].as_ref().unwrap();
@@ -682,6 +700,448 @@ impl<'g> DistributedRunner<'g> {
             steps,
             pipelined: is_pipelined,
         }
+    }
+
+    /// One non-leaf combine on the **rank-parallel pipelined executor**:
+    /// every simulated rank runs on its own scoped thread against the
+    /// thread-safe [`ThreadedFabric`], executing the paper's Fig-3
+    /// schedule for real — at step `w` a rank first posts its sends, then
+    /// folds step `w-1`'s received rows while `w`'s packets arrive from
+    /// the other rank threads. Received payloads are moved (never cloned)
+    /// into the fold and released the moment the step's combine finishes,
+    /// so a rank's `RecvBuffer` high-water mark is genuinely one step's
+    /// slice.
+    ///
+    /// Estimates are bit-identical to [`Self::combine_subtemplate`]: the
+    /// fabric delivers each step's packets in canonical (sender, seq)
+    /// order — the exact fold order of the sequential loop — and the
+    /// combine executor is worker-count-invariant, so neither the thread
+    /// interleaving nor the per-rank [`nested_budget`] pool width can
+    /// move a bit (`tests/pipeline_exec.rs` enforces this).
+    ///
+    /// Returns the model record; the *measured* overlap (real per-step ρ,
+    /// blocked wait, per-rank receive peaks) accumulates into `pipe`.
+    #[allow(clippy::too_many_arguments)]
+    fn combine_subtemplate_threaded(
+        &mut self,
+        i: usize,
+        tables: &mut [Vec<Option<CountTable>>],
+        mems: &mut [MemoryAccountant],
+        total_units: &mut f64,
+        real_compute: &mut f64,
+        hist_units: &mut [f64],
+        busy_units: &mut f64,
+        eff_task: u32,
+        iteration: usize,
+        measured: &mut ExecStats,
+        pipe: &mut MeasuredPipeline,
+    ) -> SubRecord {
+        let n_ranks = self.cfg.n_ranks;
+        let sub = self.ctx.dag.subs[i].clone();
+        let split = self.ctx.splits[i].clone().expect("non-leaf split");
+        let a2_sets = self.ctx.binom.c(self.ctx.k, sub.active_size(&self.ctx.dag)) as usize;
+        let pass_idx = sub.passive.unwrap();
+        let act_idx = sub.active.unwrap();
+        let (schedule, is_pipelined) = self.schedule();
+        let n_steps = schedule.n_steps();
+        if let Some(pr) = &self.progress {
+            pr.on_subtemplate_start(i, n_steps, is_pipelined);
+        }
+        let cost_model = TaskCostModel {
+            unit_per_pair: (split.n_sets * split.n_splits) as f64,
+            unit_per_task: 0.0,
+            overhead: self.cfg.task_overhead_units,
+        };
+
+        let mut outs: Vec<CountTable> = (0..n_ranks)
+            .map(|p| CountTable::zeros(self.plan.part.n_local(p), split.n_sets))
+            .collect();
+        for (p, o) in outs.iter().enumerate() {
+            mems[p].alloc(MemClass::CountTable, o.bytes());
+        }
+
+        let fabric = ThreadedFabric::new(n_ranks, n_steps);
+        let nested = nested_budget(self.cfg.n_workers, n_ranks);
+        let notify = StepNotifier::new(self.progress.clone(), i, n_steps, n_ranks);
+        let env = RankEnv {
+            sub: i,
+            iteration,
+            eff_task,
+            a2_sets,
+            act_idx,
+            pass_idx,
+            nested,
+            n_threads: self.cfg.n_threads,
+            phys_cores: self.cfg.phys_cores,
+            seed: self.cfg.seed,
+            net: self.cfg.net,
+            cost_model,
+            plan: &self.plan,
+            schedule: &schedule,
+            split: &split,
+            fabric: &fabric,
+            notify: &notify,
+        };
+
+        let logs: Vec<RankLog> = std::thread::scope(|s| {
+            let handles: Vec<_> = outs
+                .iter_mut()
+                .zip(mems.iter_mut())
+                .zip(tables.iter())
+                .enumerate()
+                .map(|(p, ((out, mem), rank_tables))| {
+                    let env = &env;
+                    s.spawn(move || rank_exchange_worker(env, p, rank_tables, out, mem))
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("rank exchange worker panicked"))
+                .collect()
+        });
+        fabric.assert_empty();
+        pipe.observe_in_flight_peak(fabric.in_flight_peak());
+
+        // deterministic reduction, rank-major (0..P) regardless of which
+        // thread finished first
+        let mut local_makespan = vec![0.0f64; n_ranks];
+        let mut steps: Vec<Vec<(f64, f64)>> = vec![Vec::with_capacity(n_ranks); n_steps];
+        let mut step_comp = vec![0.0f64; n_steps];
+        let mut step_wait = vec![0.0f64; n_steps];
+        for (p, lg) in logs.into_iter().enumerate() {
+            local_makespan[p] = lg.local_makespan;
+            for (w, st) in lg.steps.iter().enumerate() {
+                steps[w].push((st.makespan_units, st.comm_s));
+                step_comp[w] += st.comp_s;
+                step_wait[w] += st.wait_s;
+            }
+            *total_units += lg.units;
+            *real_compute += lg.real_compute;
+            for (c, t) in lg.hist.iter().enumerate() {
+                hist_units[c.min(hist_units.len() - 1)] += t;
+            }
+            *busy_units += lg.busy_units;
+            // rank p's nested lanes land at offset p·nested so genuinely
+            // concurrent threads stay distinct in the per-worker record
+            measured.absorb_at(&lg.stats, p * nested);
+            pipe.observe_rank(p, lg.recv_peak, lg.max_step_recv_bytes);
+        }
+        for w in 0..n_steps {
+            pipe.add_step(
+                w,
+                step_comp[w] / n_ranks as f64,
+                step_wait[w] / n_ranks as f64,
+            );
+        }
+        pipe.finish_combine();
+
+        for (p, o) in outs.into_iter().enumerate() {
+            tables[p][i] = Some(o);
+        }
+        // per-step notifications already streamed live via `StepNotifier`
+        if let Some(pr) = &self.progress {
+            pr.on_subtemplate_done(i);
+        }
+
+        SubRecord {
+            sub: i,
+            local_makespan,
+            steps,
+            pipelined: is_pipelined,
+        }
+    }
+}
+
+/// Everything a rank worker thread reads (immutably) during one threaded
+/// combine; one instance is shared by all rank threads of the combine.
+struct RankEnv<'a> {
+    /// subtemplate index
+    sub: usize,
+    iteration: usize,
+    eff_task: u32,
+    a2_sets: usize,
+    act_idx: usize,
+    pass_idx: usize,
+    /// per-rank nested combine-pool width ([`nested_budget`])
+    nested: usize,
+    n_threads: usize,
+    phys_cores: usize,
+    seed: u64,
+    net: HockneyParams,
+    cost_model: TaskCostModel,
+    plan: &'a ExchangePlan,
+    schedule: &'a Schedule,
+    split: &'a SplitTable,
+    fabric: &'a ThreadedFabric,
+    notify: &'a StepNotifier,
+}
+
+/// One rank's model + measured record for one exchange step.
+struct RankStepLog {
+    /// thread-replay makespan of the step's fold, compute units
+    makespan_units: f64,
+    /// Hockney-modeled transfer seconds (same formula as the sequential
+    /// executor: max of the receive and send sides)
+    comm_s: f64,
+    /// measured wall seconds folding the step's rows
+    comp_s: f64,
+    /// measured wall seconds blocked waiting for the step's packets
+    wait_s: f64,
+}
+
+/// Everything one rank worker brings home from one threaded combine.
+struct RankLog {
+    local_makespan: f64,
+    steps: Vec<RankStepLog>,
+    units: f64,
+    real_compute: f64,
+    hist: Vec<f64>,
+    busy_units: f64,
+    stats: ExecStats,
+    /// high-water mark of this rank's `RecvBuffer` bytes
+    recv_peak: u64,
+    /// largest single step's received bytes (the streaming bound)
+    max_step_recv_bytes: u64,
+}
+
+/// The Alg-4 shuffle seed for the *model* task queue of one (iteration,
+/// subtemplate, rank, step) cell — the single definition both executors
+/// share, so their modeled queues match bit-for-bit. `None` disables
+/// shuffling at per-vertex granularity. NB: the local phase passes
+/// `usize::MAX` as its step slot, whose all-ones bits OR over the other
+/// fields — every local phase therefore shares one seed,
+/// `mix2(seed, u64::MAX)`. That collapse is historical behavior, kept
+/// bit-compatible with the original sequential executor.
+fn model_shuffle_seed(
+    seed: u64,
+    iteration: usize,
+    sub: usize,
+    rank: usize,
+    step: usize,
+    eff_task: u32,
+) -> Option<u64> {
+    if eff_task > 0 {
+        Some(crate::util::mix2(
+            seed,
+            (iteration as u64) << 32 | (sub as u64) << 16 | (rank as u64) << 8 | step as u64,
+        ))
+    } else {
+        None
+    }
+}
+
+/// Per-step completion barrier for live progress streaming from the
+/// rank-parallel executor: the *last* rank to finish folding step `w`
+/// fires `on_exchange_step`/`on_exchange_measured` with the rank-averaged
+/// measurements, so observers see each step as it completes on every
+/// rank — the same contract the sequential executor honors — instead of
+/// a burst after the whole combine. (Steps complete in order on every
+/// rank; only a descheduled firing thread can briefly reorder two
+/// adjacent notifications.)
+struct StepNotifier {
+    progress: Option<Arc<dyn Progress>>,
+    sub: usize,
+    n_steps: usize,
+    n_ranks: usize,
+    /// per step: (Σ comp_s, Σ wait_s, ranks done)
+    acc: Vec<std::sync::Mutex<(f64, f64, usize)>>,
+}
+
+impl StepNotifier {
+    fn new(
+        progress: Option<Arc<dyn Progress>>,
+        sub: usize,
+        n_steps: usize,
+        n_ranks: usize,
+    ) -> Self {
+        StepNotifier {
+            progress,
+            sub,
+            n_steps,
+            n_ranks,
+            acc: (0..n_steps)
+                .map(|_| std::sync::Mutex::new((0.0, 0.0, 0)))
+                .collect(),
+        }
+    }
+
+    /// Record one rank's measurements for step `w`; fires the progress
+    /// callbacks when this was the last rank to complete the step.
+    fn record(&self, w: usize, comp_s: f64, wait_s: f64) {
+        let done = {
+            let mut g = self.acc[w].lock().unwrap();
+            g.0 += comp_s;
+            g.1 += wait_s;
+            g.2 += 1;
+            if g.2 == self.n_ranks {
+                Some((g.0 / self.n_ranks as f64, g.1 / self.n_ranks as f64))
+            } else {
+                None
+            }
+        };
+        if let Some((comp, wait)) = done {
+            if let Some(pr) = &self.progress {
+                pr.on_exchange_step(self.sub, w, self.n_steps);
+                pr.on_exchange_measured(self.sub, w, comp, wait);
+            }
+        }
+    }
+}
+
+/// The body of one rank's worker thread: local combine, then the Fig-3
+/// pipelined loop — post step `w`'s sends, fold step `w-1` while `w` is
+/// in flight. See [`DistributedRunner::combine_subtemplate_threaded`] for
+/// the determinism argument.
+fn rank_exchange_worker(
+    env: &RankEnv<'_>,
+    p: usize,
+    rank_tables: &[Option<CountTable>],
+    out: &mut CountTable,
+    mem: &mut MemoryAccountant,
+) -> RankLog {
+    let n_steps = env.schedule.n_steps();
+    let n_local = env.plan.part.n_local(p);
+    let active = rank_tables[env.act_idx].as_ref().unwrap();
+    let passive = rank_tables[env.pass_idx].as_ref().unwrap();
+    let shuffle_seed =
+        |w: usize| model_shuffle_seed(env.seed, env.iteration, env.sub, p, w, env.eff_task);
+
+    let mut stats = ExecStats::zeros(env.nested);
+    let mut units = 0.0f64;
+    let mut real_compute = 0.0f64;
+    let mut hist = vec![0.0f64; env.n_threads + 1];
+    let mut busy_units = 0.0f64;
+    let mut steps: Vec<RankStepLog> = Vec::with_capacity(n_steps);
+    let mut recv_peak = 0u64;
+    let mut max_step_recv_bytes = 0u64;
+
+    // ---- local phase ----
+    let t0 = Instant::now();
+    let batch = [PairBatch {
+        pairs: &env.plan.local_pairs[p],
+        rows: active,
+    }];
+    let st = combine_batches(out, passive, env.split, &batch, env.eff_task, env.nested);
+    real_compute += t0.elapsed().as_secs_f64();
+    units += st.n_pairs as f64 * env.cost_model.unit_per_pair;
+    stats.merge(&st);
+    let mut degs = vec![0u32; n_local];
+    for &(v, _) in &env.plan.local_pairs[p] {
+        degs[v as usize] += 1;
+    }
+    let tasks = make_tasks(&degs, env.eff_task, shuffle_seed(usize::MAX));
+    let costs: Vec<f64> = tasks.iter().map(|t| env.cost_model.cost(t)).collect();
+    let rep = replay(&costs, env.n_threads, env.phys_cores);
+    let local_makespan = rep.makespan;
+    for (c, t) in rep.concurrency_histogram.iter().enumerate() {
+        hist[c.min(env.n_threads)] += t;
+        busy_units += c as f64 * t;
+    }
+
+    // ---- exchange: fold one step while the next is in flight ----
+    let mut fold_step = |w: usize| {
+        let wait0 = Instant::now();
+        let packets = env
+            .fabric
+            .recv_step(p, w, env.schedule.plans[w][p].recv_from.len());
+        let wait_s = wait0.elapsed().as_secs_f64();
+        let n_msgs = packets.len();
+        let mut recv_bytes = 0u64;
+        let mut degs = vec![0u32; n_local];
+        let mut bufs: Vec<(usize, CountTable)> = Vec::with_capacity(n_msgs);
+        for pkt in packets {
+            let bytes = pkt.bytes();
+            recv_bytes += bytes;
+            mem.alloc(MemClass::RecvBuffer, bytes);
+            let q = pkt.sender();
+            for &(v, _) in &env.plan.plans[p][q] {
+                degs[v as usize] += 1;
+            }
+            // streaming fold input: the payload is *moved* out of the
+            // packet — receiving never copies a row
+            bufs.push((
+                q,
+                CountTable {
+                    n_rows: pkt.rows.len() / env.a2_sets.max(1),
+                    n_sets: env.a2_sets,
+                    data: pkt.rows,
+                },
+            ));
+        }
+        recv_peak = recv_peak.max(mem.current(MemClass::RecvBuffer));
+        max_step_recv_bytes = max_step_recv_bytes.max(recv_bytes);
+        let tc0 = Instant::now();
+        let batches: Vec<PairBatch> = bufs
+            .iter()
+            .map(|(q, buf)| PairBatch {
+                pairs: &env.plan.plans[p][*q],
+                rows: buf,
+            })
+            .collect();
+        let st = combine_batches(out, passive, env.split, &batches, env.eff_task, env.nested);
+        let comp_s = tc0.elapsed().as_secs_f64();
+        drop(batches);
+        drop(bufs);
+        // the step's slice is released the moment its fold completes —
+        // the real memory bound, not bookkeeping
+        mem.free(MemClass::RecvBuffer, recv_bytes);
+        stats.merge(&st);
+        units += st.n_pairs as f64 * env.cost_model.unit_per_pair;
+        real_compute += comp_s;
+        let tasks = make_tasks(&degs, env.eff_task, shuffle_seed(w));
+        let costs: Vec<f64> = tasks.iter().map(|t| env.cost_model.cost(t)).collect();
+        let rep = replay(&costs, env.n_threads, env.phys_cores);
+        for (c, t) in rep.concurrency_histogram.iter().enumerate() {
+            hist[c.min(env.n_threads)] += t;
+            busy_units += c as f64 * t;
+        }
+        let comm = env.net.step(n_msgs, recv_bytes).max(env.net.step(
+            env.schedule.plans[w][p].send_to.len(),
+            env.fabric.sent_bytes(p, w),
+        ));
+        steps.push(RankStepLog {
+            makespan_units: rep.makespan,
+            comm_s: comm,
+            comp_s,
+            wait_s,
+        });
+        // live progress: the last rank to finish the step fires the
+        // observer callbacks with the rank-averaged measurements
+        env.notify.record(w, comp_s, wait_s);
+    };
+
+    for w in 0..n_steps {
+        // post step w's sends, non-blocking
+        for &q in &env.schedule.plans[w][p].send_to {
+            let want = env.plan.req.rows(q, p);
+            let mut rows = Vec::with_capacity(want.len() * env.a2_sets);
+            for &u in want {
+                let r = env.plan.part.local_index[u as usize] as usize;
+                rows.extend_from_slice(active.row(r));
+            }
+            env.fabric
+                .send(Packet::new(p, q, w, env.sub, env.a2_sets, rows));
+        }
+        // ... then fold the previous step while w's packets fly
+        if w > 0 {
+            fold_step(w - 1);
+        }
+    }
+    if n_steps > 0 {
+        fold_step(n_steps - 1);
+    }
+    drop(fold_step);
+
+    RankLog {
+        local_makespan,
+        steps,
+        units,
+        real_compute,
+        hist,
+        busy_units,
+        stats,
+        recv_peak,
+        max_step_recv_bytes,
     }
 }
 
@@ -786,6 +1246,119 @@ mod tests {
             pipe.peak_mem(),
             naive.peak_mem()
         );
+    }
+
+    /// Satellite (behavior, not bookkeeping): on the streaming executor a
+    /// rank's measured `RecvBuffer` high-water mark is bounded by the
+    /// largest *single step's* received bytes — computed here
+    /// independently from the exchange plan and schedule, not from the
+    /// executor's own report.
+    #[test]
+    fn streaming_recv_peak_bounded_by_one_step() {
+        let g = small_graph(13);
+        let tpl = builtin("u10-2").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 6;
+        cfg.mode = ModeSelect::Pipeline;
+        cfg.n_iterations = 2;
+        let mut r = DistributedRunner::new(&tpl, &g, cfg);
+
+        // the plan-derived bound: per rank, the largest step slice any
+        // non-leaf subtemplate can receive (12-byte packet header + the
+        // requested rows at that sub's active width)
+        let (schedule, pipelined) = r.schedule();
+        assert!(pipelined);
+        let n_ranks = r.cfg.n_ranks;
+        let mut bound = vec![0u64; n_ranks];
+        for sub in r.ctx.dag.subs.iter().filter(|s| !s.is_leaf()) {
+            let a2 = r.ctx.binom.c(r.ctx.k, sub.active_size(&r.ctx.dag));
+            for plans_w in &schedule.plans {
+                for (p, b) in bound.iter_mut().enumerate() {
+                    let step_bytes: u64 = plans_w[p]
+                        .recv_from
+                        .iter()
+                        .map(|&q| 12 + r.plan.req.rows(p, q).len() as u64 * a2 * 4)
+                        .sum();
+                    *b = (*b).max(step_bytes);
+                }
+            }
+        }
+
+        let res = r.run();
+        let m = res.measured.as_ref().expect("threaded run reports measured");
+        assert_eq!(m.recv_peak_per_rank.len(), n_ranks);
+        for p in 0..n_ranks {
+            assert!(
+                m.recv_peak_per_rank[p] <= m.max_step_recv_bytes_per_rank[p],
+                "rank {p}: peak {} exceeds its own largest step {}",
+                m.recv_peak_per_rank[p],
+                m.max_step_recv_bytes_per_rank[p]
+            );
+            assert!(
+                m.recv_peak_per_rank[p] <= bound[p],
+                "rank {p}: measured peak {} exceeds plan-derived step bound {}",
+                m.recv_peak_per_rank[p],
+                bound[p]
+            );
+            assert!(m.recv_peak_per_rank[p] > 0, "rank {p} received nothing");
+        }
+        // a multi-step run really did fold step w-1 while w was in
+        // flight: the record covers every combine and every step
+        assert_eq!(m.steps.len(), schedule.n_steps());
+        assert!(m.n_combines > 0);
+    }
+
+    /// The threaded executor is a drop-in: bit-identical estimates and an
+    /// identical memory ledger vs. the sequential reference, in every
+    /// mode (the full matrix lives in `tests/pipeline_exec.rs`).
+    #[test]
+    fn threaded_equals_sequential_executor() {
+        let g = small_graph(47);
+        let tpl = builtin("u7-2").unwrap();
+        for mode in [ModeSelect::Naive, ModeSelect::Pipeline, ModeSelect::AdaptiveLb] {
+            let run_with = |exchange: ExchangeExec| {
+                let mut cfg = RunConfig::default();
+                cfg.n_ranks = 5;
+                cfg.mode = mode;
+                cfg.n_iterations = 2;
+                cfg.n_workers = 2;
+                cfg.exchange = exchange;
+                DistributedRunner::new(&tpl, &g, cfg).run()
+            };
+            let seq = run_with(ExchangeExec::Sequential);
+            let thr = run_with(ExchangeExec::Threaded);
+            assert_eq!(seq.colorful, thr.colorful, "{mode:?}");
+            assert_eq!(seq.estimate.to_bits(), thr.estimate.to_bits(), "{mode:?}");
+            assert_eq!(seq.samples, thr.samples, "{mode:?}");
+            assert_eq!(seq.peak_mem_per_rank, thr.peak_mem_per_rank, "{mode:?}");
+            // the work totals agree too: same task queues either way
+            assert_eq!(seq.workers.n_tasks, thr.workers.n_tasks, "{mode:?}");
+            assert_eq!(seq.workers.n_pairs, thr.workers.n_pairs, "{mode:?}");
+            assert!(seq.measured.is_none());
+            assert!(thr.measured.is_some());
+            // the *model* clock is executor-independent: both paths feed
+            // the Eq 9–14 algebra the same replayed makespans and
+            // Hockney byte counts, so every modeled figure is bit-equal
+            // (guards the duplicated step bookkeeping in the two
+            // executors against one-sided edits)
+            assert_eq!(
+                seq.model.total.to_bits(),
+                thr.model.total.to_bits(),
+                "{mode:?}: modeled makespan diverged between executors"
+            );
+            assert_eq!(seq.model.comp.to_bits(), thr.model.comp.to_bits(), "{mode:?}");
+            assert_eq!(
+                seq.model.comm_total.to_bits(),
+                thr.model.comm_total.to_bits(),
+                "{mode:?}"
+            );
+            assert_eq!(
+                seq.model.comm_exposed.to_bits(),
+                thr.model.comm_exposed.to_bits(),
+                "{mode:?}"
+            );
+            assert_eq!(seq.model.rho_by_sub, thr.model.rho_by_sub, "{mode:?}");
+        }
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! one step's slice at a time: the 2–5× peak reduction of Fig 12 falls
 //! straight out of this ledger.
 
+use std::sync::atomic::{AtomicU64, Ordering};
+
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum MemClass {
     CountTable,
@@ -63,6 +65,70 @@ impl MemoryAccountant {
     }
 }
 
+/// Thread-safe ledger for buffers that several threads allocate and free
+/// concurrently — in the rank-parallel exchange executor, packet payloads
+/// are charged by sender threads and released by receiver threads, so the
+/// single-owner [`MemoryAccountant`] cannot account them. Lock-free:
+/// per-class current bytes plus a monotone high-water mark.
+///
+/// The allocated class's contribution to the peak is exact even under
+/// contention: `alloc` derives its observation from the `fetch_add`
+/// return value, so the class's true high-water mark is always captured
+/// (a ledger used for a single class — like the fabric's in-flight
+/// tracking — therefore records an exact peak). Other classes are added
+/// from racy loads, so a *multi*-class peak can only land between the
+/// max per-class peak and the true combined one. `free` saturates at
+/// zero, so a racing release can never underflow the ledger.
+#[derive(Debug, Default)]
+pub struct SharedAccountant {
+    current: [AtomicU64; N_CLASSES],
+    peak: AtomicU64,
+}
+
+impl SharedAccountant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn alloc(&self, class: MemClass, bytes: u64) {
+        let idx = class_idx(class);
+        // the fetch_add return value pins this class's exact level at the
+        // moment of allocation — a later free by another thread cannot
+        // erase the observation (a racy re-read of `current` could)
+        let mut observed = self.current[idx].fetch_add(bytes, Ordering::Relaxed) + bytes;
+        for (j, c) in self.current.iter().enumerate() {
+            if j != idx {
+                observed += c.load(Ordering::Relaxed);
+            }
+        }
+        self.peak.fetch_max(observed, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, class: MemClass, bytes: u64) {
+        let c = &self.current[class_idx(class)];
+        let mut cur = c.load(Ordering::Relaxed);
+        loop {
+            let next = cur.saturating_sub(bytes);
+            match c.compare_exchange_weak(cur, next, Ordering::Relaxed, Ordering::Relaxed) {
+                Ok(_) => break,
+                Err(observed) => cur = observed,
+            }
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.current.iter().map(|c| c.load(Ordering::Relaxed)).sum()
+    }
+
+    pub fn current(&self, class: MemClass) -> u64 {
+        self.current[class_idx(class)].load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -87,6 +153,48 @@ mod tests {
         m.alloc(MemClass::Scratch, 5);
         assert_eq!(m.peak_by_class[class_idx(MemClass::CountTable)], 200);
         assert_eq!(m.peak_by_class[class_idx(MemClass::Graph)], 10);
+    }
+
+    #[test]
+    fn shared_accountant_tracks_peak_and_saturates() {
+        let m = SharedAccountant::new();
+        m.alloc(MemClass::RecvBuffer, 100);
+        m.alloc(MemClass::CountTable, 50);
+        assert_eq!(m.total(), 150);
+        assert_eq!(m.peak(), 150);
+        m.free(MemClass::RecvBuffer, 100);
+        assert_eq!(m.current(MemClass::RecvBuffer), 0);
+        assert_eq!(m.peak(), 150, "peak is sticky");
+        // saturating free: an over-release clamps at zero, never wraps
+        m.free(MemClass::CountTable, 10_000);
+        assert_eq!(m.current(MemClass::CountTable), 0);
+        assert_eq!(m.total(), 0);
+    }
+
+    #[test]
+    fn shared_accountant_concurrent_alloc_free() {
+        // 8 threads × 200 balanced alloc/free rounds: the total never
+        // underflows, the final ledger is exactly zero, and the recorded
+        // peak is sane — at least one thread's live slice, at most the
+        // sum of everything ever allocated.
+        const THREADS: usize = 8;
+        const ROUNDS: usize = 200;
+        const BYTES: u64 = 64;
+        let m = SharedAccountant::new();
+        std::thread::scope(|s| {
+            for _ in 0..THREADS {
+                s.spawn(|| {
+                    for _ in 0..ROUNDS {
+                        m.alloc(MemClass::RecvBuffer, BYTES);
+                        assert!(m.peak() >= m.current(MemClass::RecvBuffer));
+                        m.free(MemClass::RecvBuffer, BYTES);
+                    }
+                });
+            }
+        });
+        assert_eq!(m.total(), 0, "balanced alloc/free must return to zero");
+        assert!(m.peak() >= BYTES);
+        assert!(m.peak() <= (THREADS * ROUNDS) as u64 * BYTES);
     }
 
     #[test]

@@ -8,5 +8,8 @@ pub mod memory;
 pub mod run;
 
 pub use dist::{DistributedRunner, ExchangePlan};
-pub use memory::{MemClass, MemoryAccountant};
-pub use run::{CommDecision, EngineKind, ModeSelect, ModelTime, RunConfig, RunResult, ThreadStats};
+pub use memory::{MemClass, MemoryAccountant, SharedAccountant};
+pub use run::{
+    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RunConfig, RunResult,
+    ThreadStats,
+};

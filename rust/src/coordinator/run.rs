@@ -4,6 +4,7 @@
 
 use crate::colorcount::ExecStats;
 use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
+use crate::pipeline::MeasuredPipeline;
 
 /// Paper Table 1: the four experiment code versions.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -78,6 +79,37 @@ impl EngineKind {
     }
 }
 
+/// Which executor drives the per-subtemplate exchange.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ExchangeExec {
+    /// the historical reference path: every step runs to completion over
+    /// all ranks in one loop on the calling thread
+    Sequential,
+    /// the rank-parallel pipelined executor: one worker thread per rank,
+    /// step `w`'s packets in flight while step `w-1`'s rows fold — the
+    /// paper's Fig-3 schedule executed, not just modeled. Bit-identical
+    /// estimates to `Sequential` (enforced by `tests/pipeline_exec.rs`).
+    Threaded,
+}
+
+impl ExchangeExec {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ExchangeExec::Sequential => "sequential",
+            ExchangeExec::Threaded => "threaded",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<ExchangeExec> {
+        match name {
+            "sequential" => Some(ExchangeExec::Sequential),
+            "threaded" => Some(ExchangeExec::Threaded),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub n_ranks: usize,
@@ -103,6 +135,10 @@ pub struct RunConfig {
     /// per-task scheduling overhead in compute units (Alg-4 granularity
     /// trade-off, Fig 11 bottom-right)
     pub task_overhead_units: f64,
+    /// exchange executor: rank-parallel pipelined (default) or the
+    /// sequential reference path. A loaded XLA runtime forces the
+    /// sequential path (its kernel owns the serial scratch buffers).
+    pub exchange: ExchangeExec,
 }
 
 impl Default for RunConfig {
@@ -121,6 +157,7 @@ impl Default for RunConfig {
             engine: EngineKind::Native,
             phys_cores: crate::sched::PHYSICAL_CORES,
             task_overhead_units: 10_000.0,
+            exchange: ExchangeExec::Threaded,
         }
     }
 }
@@ -251,6 +288,11 @@ pub struct RunResult {
     pub workers: ExecStats,
     /// the exchange schedule chosen for each non-leaf subtemplate
     pub comm_decisions: Vec<CommDecision>,
+    /// measured overlap/memory record of the rank-parallel pipelined
+    /// executor — real per-step ρ, exposed wait, per-rank `RecvBuffer`
+    /// peaks — next to the *modeled* figures in [`RunResult::model`].
+    /// `None` when the sequential executor ran (config, or XLA fallback).
+    pub measured: Option<MeasuredPipeline>,
     /// modeled per-rank memory exceeded `mem_limit`
     pub oom: bool,
 }
@@ -286,6 +328,15 @@ mod tests {
         c.mode = ModeSelect::Adaptive;
         assert_eq!(c.comm_mode(0.1), CommMode::AllToAll);
         assert!(matches!(c.comm_mode(100.0), CommMode::Pipeline { .. }));
+    }
+
+    #[test]
+    fn exchange_exec_parse_roundtrip() {
+        for e in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+            assert_eq!(ExchangeExec::parse(e.name()), Some(e));
+        }
+        assert_eq!(ExchangeExec::parse("warp"), None);
+        assert_eq!(RunConfig::default().exchange, ExchangeExec::Threaded);
     }
 
     #[test]

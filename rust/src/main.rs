@@ -13,6 +13,7 @@
 //! Examples:
 //!   harpsg count --template u10-2 --dataset R500K3 --scale 2000 \
 //!       --ranks 8 --workers 4 --mode adaptive-lb --iters 2 --json
+//!   harpsg count --template u7-2 --dataset MI --exchange sequential
 //!   harpsg run --config configs/quickstart.toml
 
 use anyhow::{Context, Result};
@@ -20,7 +21,7 @@ use harpsg::api::{
     CountJob, HarpsgError, JobReport, PartitionKind, Session, SessionOptions, StderrProgress,
 };
 use harpsg::config::RunSpec;
-use harpsg::coordinator::{EngineKind, ModeSelect, RunConfig};
+use harpsg::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use harpsg::graph::{degree_stats, loader, Dataset, Graph};
 use harpsg::runtime::XlaRuntime;
 use harpsg::template::{builtin, Template, BUILTIN_NAMES};
@@ -194,6 +195,14 @@ fn print_human(session: &Session, r: &JobReport) {
         100.0 * (1.0 - r.model.comm_ratio()),
         r.model.mean_rho()
     );
+    if let Some(m) = &r.measured {
+        println!(
+            "pipeline (real): mean rho {:.2}, exposed wait {}, recv peak {} per rank",
+            m.mean_rho(),
+            human_secs(m.exposed_wait_s),
+            human_bytes(m.recv_peak())
+        );
+    }
     println!(
         "workers:         {} configured, {} measured busy, imbalance {:.2}",
         r.n_workers,
@@ -227,6 +236,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--task-size",
             "--mode",
             "--engine",
+            "--exchange",
             "--mem-limit-mb",
         ],
         &["--json", "--progress"],
@@ -259,6 +269,13 @@ fn cmd_count(args: &[String]) -> Result<()> {
     }
     if let Some(e) = flags.get("--engine") {
         cfg.engine = EngineKind::parse(e).ok_or_else(|| HarpsgError::UnknownEngine(e.clone()))?;
+    }
+    if let Some(x) = flags.get("--exchange") {
+        cfg.exchange = ExchangeExec::parse(x).ok_or_else(|| {
+            HarpsgError::Parse(format!(
+                "`--exchange`: unknown executor `{x}` (threaded|sequential)"
+            ))
+        })?;
     }
     let t = load_template(&template)?;
     let g = load_dataset(&dataset, scale)?;

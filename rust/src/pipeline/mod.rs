@@ -124,6 +124,132 @@ pub fn pipelined(timings: &[Vec<StepTiming>]) -> PipelineReport {
     }
 }
 
+// ---------------------------------------------------------------------
+// Measured pipeline (the rank-parallel executor's real counterpart)
+// ---------------------------------------------------------------------
+
+/// One exchange step as the rank-parallel executor actually ran it:
+/// seconds spent folding the step's received rows vs. seconds blocked
+/// waiting for them to arrive. The modeled [`StepTiming`] predicts this
+/// pair; `MeasuredStep` is what the threads really did.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct MeasuredStep {
+    /// wall seconds folding this step's received rows (rank-averaged,
+    /// summed over combines until [`MeasuredPipeline`] normalizes)
+    pub comp_s: f64,
+    /// wall seconds blocked waiting for this step's packets — the
+    /// *exposed* (non-overlapped) communication of the real schedule
+    pub wait_s: f64,
+}
+
+impl MeasuredStep {
+    /// Measured overlap ratio: the fraction of the stage spent computing
+    /// rather than blocked. 1.0 when the transfer hid completely behind
+    /// the previous step's fold (the Fig-3 ideal), 0.0 when the rank only
+    /// waited. Steps that did neither (empty exchange) count as fully
+    /// overlapped.
+    pub fn rho(&self) -> f64 {
+        let total = self.comp_s + self.wait_s;
+        if total <= 0.0 {
+            1.0
+        } else {
+            self.comp_s / total
+        }
+    }
+}
+
+/// Aggregated measured-overlap record of a run: what the rank-parallel
+/// pipelined executor *did*, next to the [`PipelineReport`] the time
+/// algebra *predicts*. Accumulated over every non-leaf combine of every
+/// iteration; step entries hold rank-averaged seconds summed over
+/// combines (normalize per combine with [`Self::mean_steps`]).
+#[derive(Debug, Clone, Default)]
+pub struct MeasuredPipeline {
+    /// per exchange step: rank-averaged compute/wait seconds, summed over
+    /// all combines
+    pub steps: Vec<MeasuredStep>,
+    /// total rank-averaged fold seconds across the run's exchanges
+    pub comp_s: f64,
+    /// total rank-averaged blocked-wait seconds (the run's real exposed
+    /// communication)
+    pub exposed_wait_s: f64,
+    /// per-rank high-water mark of `MemClass::RecvBuffer` bytes
+    pub recv_peak_per_rank: Vec<u64>,
+    /// per-rank largest single-step received bytes — the streaming
+    /// executor's guaranteed bound on `recv_peak_per_rank`
+    pub max_step_recv_bytes_per_rank: Vec<u64>,
+    /// high-water mark of payload bytes parked in the fabric (sent, not
+    /// yet received) — the cost of overlapping send w with fold w-1
+    pub in_flight_peak_bytes: u64,
+    /// non-leaf combines folded into this record
+    pub n_combines: u64,
+}
+
+impl MeasuredPipeline {
+    pub fn new(n_ranks: usize) -> Self {
+        MeasuredPipeline {
+            recv_peak_per_rank: vec![0; n_ranks],
+            max_step_recv_bytes_per_rank: vec![0; n_ranks],
+            ..Default::default()
+        }
+    }
+
+    /// Fold one combine's step record in: `comp_s`/`wait_s` must already
+    /// be rank-averaged seconds for step `w`.
+    pub fn add_step(&mut self, w: usize, comp_s: f64, wait_s: f64) {
+        if self.steps.len() <= w {
+            self.steps.resize(w + 1, MeasuredStep::default());
+        }
+        self.steps[w].comp_s += comp_s;
+        self.steps[w].wait_s += wait_s;
+        self.comp_s += comp_s;
+        self.exposed_wait_s += wait_s;
+    }
+
+    /// Record one rank's memory observations from one combine.
+    pub fn observe_rank(&mut self, p: usize, recv_peak: u64, max_step_bytes: u64) {
+        self.recv_peak_per_rank[p] = self.recv_peak_per_rank[p].max(recv_peak);
+        self.max_step_recv_bytes_per_rank[p] =
+            self.max_step_recv_bytes_per_rank[p].max(max_step_bytes);
+    }
+
+    pub fn observe_in_flight_peak(&mut self, bytes: u64) {
+        self.in_flight_peak_bytes = self.in_flight_peak_bytes.max(bytes);
+    }
+
+    pub fn finish_combine(&mut self) {
+        self.n_combines += 1;
+    }
+
+    /// Per-combine step averages (rank-averaged seconds per step).
+    pub fn mean_steps(&self) -> Vec<MeasuredStep> {
+        let n = self.n_combines.max(1) as f64;
+        self.steps
+            .iter()
+            .map(|s| MeasuredStep {
+                comp_s: s.comp_s / n,
+                wait_s: s.wait_s / n,
+            })
+            .collect()
+    }
+
+    /// Mean measured overlap over the non-cold-start steps, mirroring
+    /// [`PipelineReport::mean_rho`]. Step 0's wait can never be hidden
+    /// (there is no earlier fold to overlap with), so it is excluded;
+    /// single-step exchanges (all-to-all) report 0.
+    pub fn mean_rho(&self) -> f64 {
+        if self.steps.len() <= 1 {
+            return 0.0;
+        }
+        self.steps[1..].iter().map(|s| s.rho()).sum::<f64>() / (self.steps.len() - 1) as f64
+    }
+
+    /// Largest per-rank receive-buffer high-water mark.
+    pub fn recv_peak(&self) -> u64 {
+        self.recv_peak_per_rank.iter().copied().max().unwrap_or(0)
+    }
+}
+
 /// Naive (all-to-all, no interleave): every rank first completes the whole
 /// exchange, then computes on the full received buffer.
 pub fn naive(timings: &[Vec<StepTiming>]) -> PipelineReport {
@@ -218,5 +344,52 @@ mod tests {
         let r = pipelined(&t);
         assert!(r.mean_rho() < 1e-12);
         assert!((r.comm_exposed - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_pipeline_accumulates_and_normalizes() {
+        let mut m = MeasuredPipeline::new(2);
+        // two combines with the same 3-step shape
+        for _ in 0..2 {
+            m.add_step(0, 0.0, 1.0); // cold start: pure wait
+            m.add_step(1, 2.0, 0.0); // fully hidden
+            m.add_step(2, 1.0, 1.0); // half hidden
+            m.finish_combine();
+        }
+        assert_eq!(m.n_combines, 2);
+        assert!((m.comp_s - 6.0).abs() < 1e-12);
+        assert!((m.exposed_wait_s - 4.0).abs() < 1e-12);
+        let means = m.mean_steps();
+        assert_eq!(means.len(), 3);
+        assert!((means[1].comp_s - 2.0).abs() < 1e-12);
+        assert!((means[2].wait_s - 1.0).abs() < 1e-12);
+        // rho: step0 excluded, step1 = 1.0, step2 = 0.5
+        assert!((m.mean_rho() - 0.75).abs() < 1e-12);
+        assert!((m.steps[0].rho() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn measured_pipeline_memory_observations() {
+        let mut m = MeasuredPipeline::new(3);
+        m.observe_rank(0, 100, 120);
+        m.observe_rank(0, 80, 90); // maxima stick
+        m.observe_rank(2, 50, 60);
+        m.observe_in_flight_peak(40);
+        m.observe_in_flight_peak(30);
+        assert_eq!(m.recv_peak_per_rank, vec![100, 0, 50]);
+        assert_eq!(m.max_step_recv_bytes_per_rank, vec![120, 0, 60]);
+        assert_eq!(m.recv_peak(), 100);
+        assert_eq!(m.in_flight_peak_bytes, 40);
+    }
+
+    #[test]
+    fn measured_step_rho_edge_cases() {
+        assert!((MeasuredStep { comp_s: 0.0, wait_s: 0.0 }.rho() - 1.0).abs() < 1e-12);
+        assert!((MeasuredStep { comp_s: 3.0, wait_s: 1.0 }.rho() - 0.75).abs() < 1e-12);
+        // single-step (all-to-all) exchanges have no overlap window
+        let mut m = MeasuredPipeline::new(1);
+        m.add_step(0, 5.0, 5.0);
+        m.finish_combine();
+        assert_eq!(m.mean_rho(), 0.0);
     }
 }

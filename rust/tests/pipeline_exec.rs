@@ -1,0 +1,279 @@
+//! Differential suite for the rank-parallel pipelined exchange executor
+//! (`ExchangeExec::Threaded`): the real Fig-3 schedule — rank threads,
+//! in-flight packets, streaming fold — must be a *bit-exact* drop-in for
+//! the sequential reference exchange.
+//!
+//! 1. **builtin × mode × ranks matrix** — threaded estimates, colorful
+//!    counts, samples and per-rank memory ledgers are bit-identical to
+//!    the sequential executor for every builtin template, all four comm
+//!    modes, and rank counts {1, 2, 5, 6};
+//! 2. **repeated-run determinism** — same seed, 10 runs: identical
+//!    colorful counts, catching any thread-interleaving nondeterminism;
+//! 3. **measured pipeline report** — a threaded run's `JobReport` JSON
+//!    carries the `pipeline_measured` section (real per-step ρ, exposed
+//!    wait, per-rank receive peaks), with the streaming memory bound
+//!    (peak ≤ one step's received bytes) holding in pipelined mode.
+
+use harpsg::api::{CountJob, PartitionKind, Session, SessionOptions};
+use harpsg::coordinator::{ExchangeExec, ModeSelect};
+use harpsg::graph::rmat::{generate, RmatParams};
+use harpsg::template::{builtin, BUILTIN_NAMES};
+use harpsg::util::Json;
+
+const MODES: [ModeSelect; 4] = [
+    ModeSelect::Naive,
+    ModeSelect::Pipeline,
+    ModeSelect::Adaptive,
+    ModeSelect::AdaptiveLb,
+];
+
+/// Rank counts under differential test. CI's matrix sets
+/// `HARPSG_TEST_RANKS=N` to pin the suite to {1, N}; the default runs the
+/// full fixed set {1, 2, 5, 6} (1 = degenerate no-exchange, 2 = pipeline
+/// falls back to all-to-all, 5/6 = odd/even multi-step rings).
+fn test_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 1 {
+                return vec![1, n];
+            }
+            if n == 1 {
+                return vec![1];
+            }
+        }
+    }
+    vec![1, 2, 5, 6]
+}
+
+/// Combine-pool width, honoring the CI thread matrix the same way
+/// `tests/differential.rs` does: `HARPSG_TEST_WORKERS=N` pins to N.
+fn test_workers() -> usize {
+    std::env::var("HARPSG_TEST_WORKERS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .filter(|&n| n >= 1)
+        .unwrap_or(4)
+}
+
+fn session(n: usize, m: u64, skew: u32, seed: u64) -> Session {
+    Session::with_options(
+        generate(&RmatParams::with_skew(n, m, skew, seed)),
+        SessionOptions {
+            seed: 7,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        },
+    )
+    .unwrap()
+}
+
+fn job(tpl: &str, ranks: usize, mode: ModeSelect, exec: ExchangeExec, workers: usize) -> CountJob {
+    CountJob::of_builtin(tpl)
+        .unwrap()
+        .ranks(ranks)
+        .mode(mode)
+        .exchange(exec)
+        .iterations(1)
+        .seed(7)
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+/// Satellite 1: the full differential matrix. Every builtin template, all
+/// four comm modes, rank counts {1, 2, 5, 6} — threaded bit-identical to
+/// sequential. The k ≥ 13 templates dominate the runtime, so they run on
+/// a smaller graph with the ring sizes that matter ({1, 6}); every mode
+/// still crosses both executors there.
+#[test]
+fn every_builtin_threaded_matches_sequential_bitwise() {
+    let light = session(44, 170, 3, 2026);
+    let heavy = session(16, 48, 2, 2027);
+    let ranks = test_rank_counts();
+    let workers = test_workers();
+    for tpl in BUILTIN_NAMES {
+        let k = builtin(tpl).unwrap().size();
+        let (s, tpl_ranks) = if k >= 13 {
+            let trimmed = if ranks.len() > 2 {
+                vec![1, 6]
+            } else {
+                ranks.clone()
+            };
+            (&heavy, trimmed)
+        } else {
+            (&light, ranks.clone())
+        };
+        for mode in MODES {
+            for &r in &tpl_ranks {
+                let seq = s
+                    .count(&job(tpl, r, mode, ExchangeExec::Sequential, workers))
+                    .unwrap();
+                let thr = s
+                    .count(&job(tpl, r, mode, ExchangeExec::Threaded, workers))
+                    .unwrap();
+                assert_eq!(
+                    seq.estimate.to_bits(),
+                    thr.estimate.to_bits(),
+                    "{tpl} {mode:?} P={r}: threaded {} vs sequential {}",
+                    thr.estimate,
+                    seq.estimate
+                );
+                assert_eq!(seq.colorful, thr.colorful, "{tpl} {mode:?} P={r}");
+                assert_eq!(seq.samples, thr.samples, "{tpl} {mode:?} P={r}");
+                assert_eq!(
+                    seq.peak_mem_per_rank, thr.peak_mem_per_rank,
+                    "{tpl} {mode:?} P={r}: memory ledgers diverged"
+                );
+                // same Alg-4 queues and pair totals on either executor
+                assert_eq!(seq.workers.n_tasks, thr.workers.n_tasks, "{tpl} {mode:?} P={r}");
+                assert_eq!(seq.workers.n_pairs, thr.workers.n_pairs, "{tpl} {mode:?} P={r}");
+                assert!(seq.measured.is_none(), "{tpl} {mode:?} P={r}");
+                assert!(thr.measured.is_some(), "{tpl} {mode:?} P={r}");
+            }
+        }
+    }
+}
+
+/// Satellite 2: interleaving nondeterminism cannot hide behind a single
+/// lucky schedule — 10 repeated threaded runs with the same seed produce
+/// identical colorful counts and estimates, bit for bit.
+#[test]
+fn repeated_threaded_runs_are_deterministic() {
+    let s = session(60, 320, 3, 99);
+    let mk = || job("u7-2", 5, ModeSelect::Pipeline, ExchangeExec::Threaded, test_workers());
+    let reference = s.count(&mk()).unwrap();
+    assert!(!reference.colorful.is_empty());
+    for run in 1..10 {
+        let r = s.count(&mk()).unwrap();
+        assert_eq!(
+            reference.colorful, r.colorful,
+            "run {run}: colorful counts diverged across identical runs"
+        );
+        assert_eq!(
+            reference.estimate.to_bits(),
+            r.estimate.to_bits(),
+            "run {run}"
+        );
+        assert_eq!(reference.samples, r.samples, "run {run}");
+    }
+}
+
+/// Worker-count invariance survives the nested rank×worker budget: the
+/// threaded executor gives every rank `ceil(workers / ranks)` combine
+/// threads, and any configured width reproduces width 1 exactly.
+#[test]
+fn threaded_worker_counts_are_bit_identical() {
+    let s = session(50, 240, 3, 31);
+    for mode in [ModeSelect::Pipeline, ModeSelect::AdaptiveLb] {
+        let base = s
+            .count(&job("u5-2", 5, mode, ExchangeExec::Threaded, 1))
+            .unwrap();
+        for workers in [2, test_workers(), 7] {
+            let r = s
+                .count(&job("u5-2", 5, mode, ExchangeExec::Threaded, workers))
+                .unwrap();
+            assert_eq!(
+                base.estimate.to_bits(),
+                r.estimate.to_bits(),
+                "{mode:?} workers={workers}"
+            );
+            assert_eq!(base.colorful, r.colorful, "{mode:?} workers={workers}");
+            assert_eq!(r.workers.n_workers(), workers, "{mode:?}");
+            assert_eq!(base.workers.n_tasks, r.workers.n_tasks, "{mode:?}");
+            assert_eq!(base.workers.n_pairs, r.workers.n_pairs, "{mode:?}");
+        }
+    }
+}
+
+/// Acceptance: a pipelined threaded run reports a measured pipeline —
+/// real per-step ρ in [0, 1], per-rank receive peaks — and the streaming
+/// bound holds: every rank's measured `RecvBuffer` peak is at most one
+/// exchange step's received bytes.
+#[test]
+fn measured_pipeline_reported_and_peak_bounded() {
+    let s = session(80, 420, 3, 55);
+    let report = s
+        .count(&job("u10-2", 6, ModeSelect::Pipeline, ExchangeExec::Threaded, test_workers()))
+        .unwrap();
+    let m = report.measured.as_ref().expect("measured pipeline section");
+    // ring of 6 ranks, g = 1 → 5 steps per combine
+    assert_eq!(m.steps.len(), 5);
+    assert!(m.n_combines > 0);
+    assert!(m.comp_s > 0.0, "folds took real time");
+    for step in m.mean_steps() {
+        let rho = step.rho();
+        assert!((0.0..=1.0).contains(&rho), "rho {rho} out of range");
+    }
+    assert!((0.0..=1.0).contains(&m.mean_rho()));
+    assert_eq!(m.recv_peak_per_rank.len(), 6);
+    for (p, (&peak, &bound)) in m
+        .recv_peak_per_rank
+        .iter()
+        .zip(&m.max_step_recv_bytes_per_rank)
+        .enumerate()
+    {
+        assert!(peak > 0, "rank {p} received nothing");
+        assert!(
+            peak <= bound,
+            "rank {p}: peak {peak} exceeds one step's bytes {bound}"
+        );
+    }
+}
+
+/// The JSON contract behind `harpsg count --json`: threaded runs carry a
+/// `pipeline_measured` object (per-step rho/comp/wait, peaks); sequential
+/// runs serialize the field as `null`; the config section names the
+/// executor.
+#[test]
+fn json_report_carries_measured_pipeline() {
+    let s = session(70, 360, 3, 21);
+    let thr = s
+        .count(&job("u7-2", 5, ModeSelect::Pipeline, ExchangeExec::Threaded, 2))
+        .unwrap();
+    let parsed = harpsg::util::jsonparse::parse(&thr.to_json_string()).unwrap();
+    assert_eq!(
+        parsed
+            .get("config")
+            .unwrap()
+            .get("exchange")
+            .unwrap()
+            .as_str(),
+        Some("threaded")
+    );
+    let mp = parsed.get("pipeline_measured").unwrap();
+    let steps = mp.get("steps").unwrap().as_arr().unwrap();
+    assert_eq!(steps.len(), 4, "ring of 5 ranks → 4 steps");
+    for step in steps {
+        let rho = step.get("rho").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&rho));
+        assert!(step.get("comp_s").unwrap().as_f64().is_some());
+        assert!(step.get("wait_s").unwrap().as_f64().is_some());
+    }
+    assert!(mp.get("mean_rho").unwrap().as_f64().is_some());
+    assert!(mp.get("exposed_wait_s").unwrap().as_f64().unwrap() >= 0.0);
+    let peaks = mp.get("recv_peak_per_rank").unwrap().as_arr().unwrap();
+    let bounds = mp
+        .get("max_step_recv_bytes_per_rank")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(peaks.len(), 5);
+    for (peak, bound) in peaks.iter().zip(bounds) {
+        assert!(peak.as_f64().unwrap() <= bound.as_f64().unwrap());
+    }
+
+    let seq = s
+        .count(&job("u7-2", 5, ModeSelect::Pipeline, ExchangeExec::Sequential, 2))
+        .unwrap();
+    let parsed = harpsg::util::jsonparse::parse(&seq.to_json_string()).unwrap();
+    assert_eq!(*parsed.get("pipeline_measured").unwrap(), Json::Null);
+    assert_eq!(
+        parsed
+            .get("config")
+            .unwrap()
+            .get("exchange")
+            .unwrap()
+            .as_str(),
+        Some("sequential")
+    );
+}
