@@ -40,6 +40,33 @@ fn main() {
         );
     }
 
+    println!("\n== model-driven group-size sweep (P = 10, u12-2 shape) ==");
+    let binom = harpsg::combin::Binomial::new();
+    let tc = complexity(&builtin("u12-2").unwrap());
+    for rows in [5.0, 50.0, 500.0, 5_000.0, 50_000.0] {
+        let shape = harpsg::comm::CombineShape {
+            k: 12,
+            size: 8,
+            passive_size: 4,
+            active_size: 4,
+            remote_rows_per_step: rows,
+            n_ranks: 10,
+        };
+        let (mode, pred) = pol.choose_group(&tc, &shape, &binom);
+        println!(
+            "  {:>7.0} rows/peer -> {:<16} (W={}, predicted rho {:.2})",
+            rows,
+            match mode {
+                CommMode::AllToAll => "all-to-all".to_string(),
+                CommMode::Pipeline { g } => format!("ring g={g}"),
+            },
+            pred.n_steps,
+            pred.rho,
+        );
+    }
+    println!("(starved steps fall back to bulk; mid-range loads widen the group");
+    println!(" to amortize the per-step floor; compute-rich loads keep g = 1)");
+
     println!("\n== measured overlap ratio ρ (pipeline forced) ==");
     let session = Session::new(Dataset::R500K3.generate(8000));
     for (name, ranks) in [("u5-2", 8), ("u10-2", 8), ("u12-2", 8), ("u12-1", 8)] {
@@ -56,6 +83,31 @@ fn main() {
             r.model.mean_rho(),
             100.0 * r.model.comm_ratio(),
             if r.setup_reused { "reused" } else { "built" }
+        );
+    }
+
+    println!("\n== adaptive per-subtemplate decisions (sweep + calibration) ==");
+    let job = CountJob::of_builtin("u12-2")
+        .expect("builtin")
+        .ranks(8)
+        .mode(ModeSelect::Adaptive)
+        .adaptive(true)
+        .iterations(2)
+        .build()
+        .expect("valid job");
+    let r = session.count(&job).expect("count");
+    for d in &r.comm_decisions {
+        println!(
+            "  sub {:>2}: {:<10} g={} ({} steps)  rho pred {:.2} / meas {}",
+            d.sub,
+            d.mode_name(),
+            d.g,
+            d.n_steps,
+            d.predicted_rho,
+            match d.measured_rho {
+                Some(m) => format!("{m:.2}"),
+                None => "-".into(),
+            },
         );
     }
     println!("\nhigh-intensity templates hide their transfers; small ones can't —");

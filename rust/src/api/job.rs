@@ -4,7 +4,7 @@
 
 use super::error::HarpsgError;
 use crate::comm::{AdaptivePolicy, HockneyParams};
-use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
+use crate::coordinator::{validate_group_size, EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use crate::template::{builtin, Template};
 
 /// A validated request to count one template. Construct with
@@ -148,7 +148,17 @@ impl CountJobBuilder {
         self
     }
 
-    /// Ablation hook: force the ring group size (1 ≤ g ≤ ranks-1).
+    /// Model-driven per-subtemplate group-size selection (the coordinator
+    /// sweep + runtime calibration feedback). Only meaningful for the
+    /// Adaptive/AdaptiveLB modes (validated in `build`); the static
+    /// intensity switch with g = 1 remains the default.
+    pub fn adaptive(mut self, on: bool) -> Self {
+        self.cfg.adaptive_group = on;
+        self
+    }
+
+    /// Ablation hook: force the ring group size. Feasibility (2g+1 ≤
+    /// ranks, or g = ranks-1 for all-to-all) is validated in `build`.
     pub fn group_size(mut self, g: usize) -> Self {
         self.group_size = Some(g);
         self
@@ -208,17 +218,23 @@ impl CountJobBuilder {
                 cfg.mode.flag()
             )));
         }
+        if cfg.adaptive_group
+            && !matches!(cfg.mode, ModeSelect::Adaptive | ModeSelect::AdaptiveLb)
+        {
+            return Err(HarpsgError::InvalidJob(format!(
+                "adaptive group selection only applies to adaptive/adaptive-lb; mode is {}",
+                cfg.mode.flag()
+            )));
+        }
         if let Some(g) = self.group_size {
-            if g == 0 {
-                return Err(HarpsgError::InvalidJob("group_size must be ≥ 1".into()));
+            if cfg.adaptive_group {
+                return Err(HarpsgError::InvalidJob(
+                    "group_size (the forced-ring ablation) and adaptive group \
+                     selection are mutually exclusive"
+                        .into(),
+                ));
             }
-            if cfg.n_ranks < 2 || g > cfg.n_ranks - 1 {
-                return Err(HarpsgError::InvalidJob(format!(
-                    "group_size {g} out of range for {} ranks (1..={})",
-                    cfg.n_ranks,
-                    cfg.n_ranks.saturating_sub(1)
-                )));
-            }
+            validate_group_size(g, cfg.n_ranks)?;
         }
         Ok(CountJob {
             template: self.template,
@@ -308,10 +324,51 @@ mod tests {
 
     #[test]
     fn group_size_bounds() {
+        // feasible rings (2g+1 ≤ P) and the g = P-1 all-to-all degenerate
+        assert!(base().ranks(8).group_size(3).build().is_ok());
         assert!(base().ranks(8).group_size(7).build().is_ok());
+        // the half-open band (P-1)/2 < g < P-1 is a typed error now
+        for bad in [4usize, 5, 6] {
+            assert!(
+                base().ranks(8).group_size(bad).build().is_err(),
+                "g={bad} must be infeasible at P=8"
+            );
+        }
         assert!(base().ranks(8).group_size(8).build().is_err());
         assert!(base().ranks(8).group_size(0).build().is_err());
         assert!(base().ranks(1).group_size(1).build().is_err());
+        // P = 2 / P = 3 regression: only all-to-all (and g = 1 at P = 3)
+        assert!(base().ranks(2).group_size(1).build().is_ok());
+        assert!(base().ranks(2).group_size(2).build().is_err());
+        assert!(base().ranks(3).group_size(1).build().is_ok());
+        assert!(base().ranks(3).group_size(2).build().is_ok());
+        assert!(base().ranks(3).group_size(3).build().is_err());
+    }
+
+    #[test]
+    fn adaptive_knob_mode_consistency() {
+        // default mode is adaptive-lb: the sweep is legal
+        let job = base().adaptive(true).build().unwrap();
+        assert!(job.config().adaptive_group);
+        assert!(base()
+            .mode(ModeSelect::Adaptive)
+            .adaptive(true)
+            .build()
+            .is_ok());
+        // fixed-shape modes cannot take the sweep
+        for mode in [ModeSelect::Naive, ModeSelect::Pipeline] {
+            let err = base().mode(mode).adaptive(true).build().unwrap_err();
+            assert!(matches!(err, HarpsgError::InvalidJob(_)), "{mode:?}");
+        }
+        // the forced-ring ablation contradicts the sweep
+        assert!(base()
+            .ranks(8)
+            .adaptive(true)
+            .group_size(2)
+            .build()
+            .is_err());
+        // off by default
+        assert!(!base().build().unwrap().config().adaptive_group);
     }
 
     #[test]

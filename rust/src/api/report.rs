@@ -31,6 +31,8 @@ pub struct JobReport {
     pub engine: String,
     /// exchange executor name ("threaded" | "sequential")
     pub exchange: String,
+    /// model-driven per-subtemplate group selection was enabled
+    pub adaptive: bool,
     pub n_ranks: usize,
     pub n_threads: usize,
     /// configured real combine-executor threads (`--workers`)
@@ -86,6 +88,7 @@ impl JobReport {
             mode: job.cfg.mode.name().to_string(),
             engine: job.cfg.engine.name().to_string(),
             exchange: job.cfg.exchange.name().to_string(),
+            adaptive: job.cfg.adaptive_group,
             n_ranks: job.cfg.n_ranks,
             n_threads: job.cfg.n_threads,
             n_workers: job.cfg.n_workers,
@@ -144,6 +147,7 @@ impl JobReport {
                     ("mode".into(), Json::Str(self.mode.clone())),
                     ("engine".into(), Json::Str(self.engine.clone())),
                     ("exchange".into(), Json::Str(self.exchange.clone())),
+                    ("adaptive".into(), Json::Bool(self.adaptive)),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),
                     ("workers".into(), Json::Num(self.n_workers as f64)),
@@ -241,6 +245,10 @@ impl JobReport {
                 },
             ),
             (
+                // per-subtemplate exchange decisions: the chosen shape and
+                // the model's predicted overlap next to what the
+                // rank-parallel executor measured (`rho_meas` is null for
+                // sequential runs and single-step schedules)
                 "comm".into(),
                 Json::Arr(
                     self.comm_decisions
@@ -249,7 +257,16 @@ impl JobReport {
                             Json::Obj(vec![
                                 ("sub".into(), Json::Num(d.sub as f64)),
                                 ("mode".into(), Json::Str(d.mode_name().to_string())),
+                                ("g".into(), Json::Num(d.g as f64)),
                                 ("n_steps".into(), Json::Num(d.n_steps as f64)),
+                                ("rho_pred".into(), Json::Num(d.predicted_rho)),
+                                (
+                                    "rho_meas".into(),
+                                    match d.measured_rho {
+                                        Some(m) => Json::Num(m),
+                                        None => Json::Null,
+                                    },
+                                ),
                             ])
                         })
                         .collect(),

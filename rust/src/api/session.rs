@@ -174,7 +174,9 @@ impl Session {
             plan,
         );
         if let Some(g) = job.group_size {
-            runner.set_group_size(g);
+            // already validated against the rank count in CountJob::build;
+            // the runner re-checks and the typed error propagates
+            runner.set_group_size(g)?;
         }
         if job.cfg.engine == EngineKind::Xla {
             if let Some(rt) = &self.xla {

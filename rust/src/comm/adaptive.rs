@@ -1,18 +1,34 @@
-//! The adaptive mode switch (Alg 3 line 2): use the pipelined ring for
-//! compute-heavy templates, fall back to all-to-all when there is not
-//! enough computation to hide the per-step transfers.
+//! The adaptive communication decision (Alg 3 line 2, generalized): pick
+//! the exchange shape of every subtemplate combine from the Eq 8 / Eq 14
+//! Hockney + compute model instead of a hard-wired switch.
 //!
-//! The implementation follows the paper: the decision is made per template
-//! from its Table-3 computation intensity (the paper's "if |Ti| is large"
-//! with the §3.2.2 justification). The Hockney-based per-step model is
-//! also exposed here — the figure harness uses it to *predict* the overlap
-//! ratio ρ (Eq 14) that the pipeline ledger later measures.
+//! Two layers:
+//!
+//! * [`AdaptivePolicy::choose`] — the paper's coarse per-template gate
+//!   ("if |Ti| is large", §3.2.2): pipeline compute-heavy templates, stay
+//!   on all-to-all otherwise. Kept as the fast path and as the first
+//!   filter of the sweep below.
+//! * [`AdaptivePolicy::choose_group`] — the model-driven sweep: for one
+//!   subtemplate combine ([`CombineShape`]) evaluate every feasible ring
+//!   group size `g ∈ 1..=(P-1)/2` through the per-step compute (Eq 4) and
+//!   transfer (Eq 8) models, predict the overlap ratio ρ (Eq 14) and the
+//!   pipelined makespan (Eq 9–13, including the short last step when
+//!   `g ∤ P-1`), pick the `g` maximizing predicted ρ, and fall back to
+//!   bulk all-to-all when no candidate's predicted makespan beats it.
+//!
+//! The model self-calibrates at runtime through [`GroupCalibration`]: the
+//! coordinator feeds back the measured per-unit compute cost and the
+//! measured per-step ρ of previous iterations, which rescale the compute
+//! and transfer models for the next iteration's decisions.
 
+use crate::colorcount::Count;
 use crate::combin::Binomial;
+use crate::comm::group::Schedule;
 use crate::comm::hockney::HockneyParams;
+use crate::comm::packet::Packet;
 use crate::template::TemplateComplexity;
 
-/// Which exchange schedule to use for a template's combines.
+/// Which exchange schedule to use for a combine.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CommMode {
     AllToAll,
@@ -46,7 +62,7 @@ impl Default for AdaptivePolicy {
     }
 }
 
-/// Inputs describing one subtemplate combine on one rank (model helper).
+/// Inputs describing one subtemplate combine on one rank.
 #[derive(Debug, Clone, Copy)]
 pub struct CombineShape {
     pub k: usize,
@@ -56,45 +72,284 @@ pub struct CombineShape {
     pub passive_size: usize,
     /// |Ti''|
     pub active_size: usize,
-    /// expected remote neighbor rows per step, ≈ |E|/P² (Eq 5)
+    /// expected remote neighbor rows received *per peer* per step,
+    /// ≈ |E|/P² (Eq 5); the coordinator passes the exact request-list
+    /// mean instead of the asymptotic estimate
     pub remote_rows_per_step: f64,
     pub n_ranks: usize,
 }
 
+/// One candidate exchange shape, evaluated through the model: the ring
+/// with `g` offsets per step (or single-step all-to-all when
+/// `n_steps == 1`), its predicted first-step compute/transfer seconds,
+/// overlap ratio ρ and end-to-end exchange makespan.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupPrediction {
+    /// offsets per step (the paper's group size is 2g+1)
+    pub g: usize,
+    /// W = ceil((P-1)/g)
+    pub n_steps: usize,
+    /// modeled fold seconds for a full step's received rows (Eq 4)
+    pub step_comp: f64,
+    /// modeled transfer seconds for a full step (Eq 8)
+    pub step_comm: f64,
+    /// predicted mean overlap ratio ρ over the non-cold-start steps
+    /// (Eq 14); 0 for a single-step exchange (nothing to overlap)
+    pub rho: f64,
+    /// predicted exchange makespan (Eq 9–13): cold-start transfer, then
+    /// each stage overlaps the previous step's fold with the next
+    /// transfer, plus the final exposed fold
+    pub makespan: f64,
+}
+
+/// Runtime feedback folded into the policy between iterations: the
+/// coordinator's measured per-unit compute cost and the mismatch between
+/// predicted and measured per-step overlap. Both are EWMA-smoothed and
+/// clamped so one noisy iteration cannot capsize the decisions.
+#[derive(Debug, Clone, Copy)]
+pub struct GroupCalibration {
+    /// measured seconds per compute unit (None until the first feedback)
+    pub flop_time: Option<f64>,
+    /// multiplicative correction on the modeled transfer times: > 1 when
+    /// measured overlap keeps falling short of the prediction (transfers
+    /// effectively cost more than the Hockney parameters claim)
+    pub comm_scale: f64,
+    /// ρ observations folded in
+    pub n_rho: u64,
+}
+
+impl Default for GroupCalibration {
+    fn default() -> Self {
+        GroupCalibration {
+            flop_time: None,
+            comm_scale: 1.0,
+            n_rho: 0,
+        }
+    }
+}
+
+impl GroupCalibration {
+    /// Fold in one iteration's measured seconds-per-unit (EWMA).
+    pub fn observe_flop_time(&mut self, measured: f64) {
+        let m = measured.max(1e-12);
+        self.flop_time = Some(match self.flop_time {
+            None => m,
+            Some(prev) => 0.5 * prev + 0.5 * m,
+        });
+    }
+
+    /// Fold in one (predicted ρ, measured ρ) observation — the
+    /// coordinator feeds one per iteration, geometric-meaned over that
+    /// iteration's combines. Measured overlap below the prediction means
+    /// the model undercosts transfers: scale them up, and vice versa. The
+    /// per-observation step is damped (square root) and the total
+    /// correction clamped to [1/4, 4], so one noisy iteration cannot
+    /// capsize the decisions.
+    pub fn observe_rho(&mut self, predicted: f64, measured: f64) {
+        let p = predicted.clamp(0.05, 1.0);
+        let m = measured.clamp(0.05, 1.0);
+        let step = (p / m).sqrt().clamp(0.5, 2.0);
+        self.comm_scale = (self.comm_scale * step).clamp(0.25, 4.0);
+        self.n_rho += 1;
+    }
+}
+
 impl AdaptivePolicy {
-    /// The mode switch (Alg 3 line 2).
+    /// Largest ring group size feasible at `n_ranks`: the pipelined ring
+    /// needs full communication groups of m = 2g+1 ≤ P, i.e. g ≤ (P-1)/2.
+    /// 0 means no pipelined ring exists (P < 3).
+    pub fn max_feasible_group(n_ranks: usize) -> usize {
+        n_ranks.saturating_sub(1) / 2
+    }
+
+    /// The feasible ring group sizes at `n_ranks` (empty below P = 3).
+    pub fn feasible_groups(n_ranks: usize) -> std::ops::RangeInclusive<usize> {
+        1..=Self::max_feasible_group(n_ranks)
+    }
+
+    /// Wire bytes of one count row at the engine's actual element width
+    /// (the fabric moves `Count` rows, so the model must charge
+    /// `size_of::<Count>()` per entry — not a hard-coded width).
+    pub fn row_bytes(k: usize, active_size: usize, binom: &Binomial) -> u64 {
+        binom.c(k, active_size) * std::mem::size_of::<Count>() as u64
+    }
+
+    /// A policy with the runtime feedback applied: measured flop time
+    /// replaces the configured one, and the transfer model is rescaled by
+    /// the observed overlap mismatch.
+    pub fn calibrated(&self, cal: &GroupCalibration) -> AdaptivePolicy {
+        let mut p = *self;
+        if let Some(ft) = cal.flop_time {
+            p.flop_time = ft;
+        }
+        p.net.alpha *= cal.comm_scale;
+        p.net.beta *= cal.comm_scale;
+        p.net.step_overhead *= cal.comm_scale;
+        p
+    }
+
+    /// The coarse per-template mode switch (Alg 3 line 2). `Pipeline`
+    /// requires a feasible ring (2g+1 ≤ P), so P < 3 never pipelines
+    /// regardless of `min_ranks`.
     pub fn choose(&self, tc: &TemplateComplexity, n_ranks: usize) -> CommMode {
-        if n_ranks >= self.min_ranks && tc.intensity >= self.intensity_threshold {
+        if n_ranks >= self.min_ranks
+            && Self::max_feasible_group(n_ranks) >= 1
+            && tc.intensity >= self.intensity_threshold
+        {
             CommMode::Pipeline { g: 1 }
         } else {
             CommMode::AllToAll
         }
     }
 
-    /// Modeled per-step computation time (Eq 4 scaled by `flop_time`).
-    pub fn step_compute(&self, s: &CombineShape, binom: &Binomial) -> f64 {
+    /// Modeled fold time for a step that receives from `offsets` peers
+    /// (Eq 4 scaled by `flop_time`).
+    pub fn step_compute_g(&self, s: &CombineShape, offsets: usize, binom: &Binomial) -> f64 {
         let units = binom.c(s.k, s.size) as f64 * binom.c(s.size, s.passive_size) as f64;
-        self.flop_time * units * s.remote_rows_per_step.max(0.0)
+        self.flop_time * units * offsets as f64 * s.remote_rows_per_step.max(0.0)
     }
 
-    /// Modeled per-step communication time (Eq 8, incl. the per-step
-    /// software overhead).
+    /// Modeled transfer time for a step that exchanges with `offsets`
+    /// peers (Eq 8): per-step software overhead, per-message latency, and
+    /// the payload at the engine's element width plus the per-packet
+    /// header the fabric actually accounts.
+    pub fn step_comm_g(&self, s: &CombineShape, offsets: usize, binom: &Binomial) -> f64 {
+        let row_bytes = Self::row_bytes(s.k, s.active_size, binom);
+        let rows = offsets as f64 * s.remote_rows_per_step.max(0.0);
+        let bytes = rows * row_bytes as f64 + (offsets as u64 * Packet::HEADER_BYTES) as f64;
+        self.net.step(offsets, bytes.round() as u64)
+    }
+
+    /// Back-compat g = 1 helpers (the shape the paper's Fig 8 analysis
+    /// uses).
+    pub fn step_compute(&self, s: &CombineShape, binom: &Binomial) -> f64 {
+        self.step_compute_g(s, 1, binom)
+    }
+
     pub fn step_comm(&self, s: &CombineShape, binom: &Binomial) -> f64 {
-        let row_bytes = binom.c(s.k, s.active_size) * 4;
-        self.net
-            .step(1, (s.remote_rows_per_step.max(0.0) * row_bytes as f64) as u64)
+        self.step_comm_g(s, 1, binom)
     }
 
-    /// The predicted overlap ratio ρ (Eq 14) under pipelining: as the rank
-    /// count grows, per-step compute shrinks ∝ 1/P² against the α latency
-    /// floor, which is exactly why small templates stop overlapping
-    /// (paper Fig 8).
+    /// The predicted overlap ratio ρ (Eq 14) of the g = 1 ring: as the
+    /// rank count grows, per-step compute shrinks ∝ 1/P² against the α
+    /// latency floor, which is exactly why small templates stop
+    /// overlapping (paper Fig 8).
     pub fn overlap(&self, s: &CombineShape, binom: &Binomial) -> f64 {
         let comm = self.step_comm(s, binom);
         if comm <= 0.0 {
             return 1.0;
         }
         (self.step_compute(s, binom) / comm).min(1.0)
+    }
+
+    /// Evaluate the ring with `g` offsets per step through the pipeline
+    /// algebra, honoring the short last step when `g ∤ P-1`. The per-step
+    /// chunking comes from [`Schedule::ring_step_sizes`] — the same
+    /// definition the executed schedule is built from.
+    pub fn predict_group(&self, s: &CombineShape, g: usize, binom: &Binomial) -> GroupPrediction {
+        let g = g.max(1);
+        let sizes = Schedule::ring_step_sizes(s.n_ranks, g);
+        let n_steps = sizes.len();
+        if n_steps == 0 {
+            return GroupPrediction {
+                g,
+                n_steps: 0,
+                step_comp: 0.0,
+                step_comm: 0.0,
+                rho: 0.0,
+                makespan: 0.0,
+            };
+        }
+        let comp: Vec<f64> = sizes
+            .iter()
+            .map(|&m| self.step_compute_g(s, m, binom))
+            .collect();
+        let comm: Vec<f64> = sizes
+            .iter()
+            .map(|&m| self.step_comm_g(s, m, binom))
+            .collect();
+        // Eq 9–13: cold-start transfer; stage w overlaps fold(w-1) with
+        // transfer(w); the last step's fold is fully exposed.
+        let mut makespan = comm[0];
+        let mut rho_sum = 0.0;
+        for w in 1..n_steps {
+            makespan += comm[w].max(comp[w - 1]);
+            rho_sum += if comm[w] <= 0.0 {
+                1.0
+            } else {
+                (comp[w - 1] / comm[w]).min(1.0)
+            };
+        }
+        makespan += comp[n_steps - 1];
+        let rho = if n_steps > 1 {
+            rho_sum / (n_steps - 1) as f64
+        } else {
+            0.0
+        };
+        GroupPrediction {
+            g,
+            n_steps,
+            step_comp: comp[0],
+            step_comm: comm[0],
+            rho,
+            makespan,
+        }
+    }
+
+    /// Evaluate the single-step bulk all-to-all (the naive schedule):
+    /// every transfer exposed, then the full fold.
+    pub fn predict_all_to_all(&self, s: &CombineShape, binom: &Binomial) -> GroupPrediction {
+        let peers = s.n_ranks.saturating_sub(1).max(1);
+        let comp = self.step_compute_g(s, peers, binom);
+        let comm = self.step_comm_g(s, peers, binom);
+        GroupPrediction {
+            g: peers,
+            n_steps: 1,
+            step_comp: comp,
+            step_comm: comm,
+            rho: 0.0,
+            makespan: comm + comp,
+        }
+    }
+
+    /// The model-driven sweep: the intensity gate first (paper Alg 3
+    /// line 2), then every feasible `g ∈ 1..=(P-1)/2` through
+    /// [`Self::predict_group`]. Among the candidates whose predicted
+    /// makespan beats the single-step bulk exchange, the argmax-ρ one
+    /// wins (ties broken by smaller predicted makespan, then smaller
+    /// `g` — the paper's default); all-to-all when no candidate beats it.
+    pub fn choose_group(
+        &self,
+        tc: &TemplateComplexity,
+        s: &CombineShape,
+        binom: &Binomial,
+    ) -> (CommMode, GroupPrediction) {
+        const RHO_EPS: f64 = 1e-9;
+        let all = self.predict_all_to_all(s, binom);
+        if s.n_ranks < self.min_ranks || tc.intensity < self.intensity_threshold {
+            return (CommMode::AllToAll, all);
+        }
+        let mut best: Option<GroupPrediction> = None;
+        for g in Self::feasible_groups(s.n_ranks) {
+            let p = self.predict_group(s, g, binom);
+            if p.makespan >= all.makespan {
+                continue; // cannot beat the bulk exchange
+            }
+            let replace = match &best {
+                None => true,
+                Some(b) => {
+                    p.rho > b.rho + RHO_EPS
+                        || ((p.rho - b.rho).abs() <= RHO_EPS && p.makespan < b.makespan)
+                }
+            };
+            if replace {
+                best = Some(p);
+            }
+        }
+        match best {
+            Some(b) => (CommMode::Pipeline { g: b.g }, b),
+            None => (CommMode::AllToAll, all),
+        }
     }
 }
 
@@ -131,6 +386,31 @@ mod tests {
         let pol = AdaptivePolicy::default();
         let tc = complexity(&builtin("u12-2").unwrap());
         assert_eq!(pol.choose(&tc, 2), CommMode::AllToAll);
+        // …even when min_ranks is mistuned: no ring of groups 2g+1 ≤ 2
+        // exists, so the gate must clamp on feasibility (the historical
+        // bug returned Pipeline{g: 1} here)
+        let mut loose = pol;
+        loose.min_ranks = 1;
+        assert_eq!(loose.choose(&tc, 2), CommMode::AllToAll);
+        assert_eq!(AdaptivePolicy::max_feasible_group(2), 0);
+        assert!(AdaptivePolicy::feasible_groups(2).next().is_none());
+    }
+
+    #[test]
+    fn three_ranks_feasibility_clamp() {
+        // P = 3: exactly one feasible ring group size (g = 1, m = 3)
+        assert_eq!(AdaptivePolicy::max_feasible_group(3), 1);
+        let feas: Vec<usize> = AdaptivePolicy::feasible_groups(3).collect();
+        assert_eq!(feas, vec![1]);
+        let pol = AdaptivePolicy::default();
+        let tc = complexity(&builtin("u12-2").unwrap());
+        let b = crate::combin::Binomial::new();
+        let s = shape(12, 8, 4, 500.0, 3);
+        let (mode, pred) = pol.choose_group(&tc, &s, &b);
+        if let CommMode::Pipeline { g } = mode {
+            assert_eq!(g, 1, "only g = 1 is feasible at P = 3");
+            assert_eq!(pred.n_steps, 2);
+        }
     }
 
     fn shape(k: usize, size: usize, pass: usize, rows: f64, ranks: usize) -> CombineShape {
@@ -178,5 +458,199 @@ mod tests {
         pol.net = HockneyParams::tengige();
         let slow = pol.overlap(&s, &b);
         assert!(slow <= fast);
+    }
+
+    #[test]
+    fn row_bytes_track_engine_element_width() {
+        let b = Binomial::new();
+        // the fabric ships Count rows: the model must charge exactly that
+        let expect = b.c(12, 4) * std::mem::size_of::<Count>() as u64;
+        assert_eq!(AdaptivePolicy::row_bytes(12, 4, &b), expect);
+        // and the per-step bytes the model charges match a real packet
+        // carrying the same rows (header included)
+        let n_sets = b.c(12, 4) as usize;
+        let rows_per_peer = 7usize;
+        let pkt = Packet::new(0, 1, 0, 0, n_sets, vec![0.0; rows_per_peer * n_sets]);
+        assert_eq!(
+            pkt.bytes(),
+            rows_per_peer as u64 * AdaptivePolicy::row_bytes(12, 4, &b) + Packet::HEADER_BYTES
+        );
+    }
+
+    #[test]
+    fn step_counts_match_ring_schedule() {
+        // the model predicts against the exact chunking the executed
+        // schedule realizes (shared by construction; pinned here anyway)
+        for p in 1..20usize {
+            for g in 1..20usize {
+                let sizes = Schedule::ring_step_sizes(p, g);
+                let sched = Schedule::ring(p, g);
+                assert_eq!(sizes.len(), sched.n_steps(), "P={p} g={g}");
+                for (w, os) in sched.offsets.iter().enumerate() {
+                    assert_eq!(sizes[w], os.len(), "P={p} g={g} step {w}");
+                }
+            }
+        }
+    }
+
+    /// The mid-regime where the sweep genuinely prefers g = 2: per-step
+    /// compute at g = 1 sits below the transfer floor (ρ < 1) but doubling
+    /// the group crosses it, and the predicted pipelined makespan still
+    /// beats bulk all-to-all. Worked constants: P = 6, IB overhead 50 µs,
+    /// x₁ ≈ 40 µs.
+    #[test]
+    fn sweep_picks_wider_group_in_mid_regime() {
+        let b = Binomial::new();
+        let mut pol = AdaptivePolicy::default();
+        let s = shape(12, 8, 4, 1.0, 6);
+        // units = C(12,8)·C(8,4) = 495·70 = 34650; aim x₁ = 40 µs
+        pol.flop_time = 40.0e-6 / 34650.0;
+        let tc = complexity(&builtin("u12-1").unwrap());
+        assert!(tc.intensity >= pol.intensity_threshold);
+        let (mode, pred) = pol.choose_group(&tc, &s, &b);
+        assert_eq!(mode, CommMode::Pipeline { g: 2 }, "prediction: {pred:?}");
+        assert_eq!(pred.n_steps, 3); // ceil(5/2)
+        let rho1 = pol.predict_group(&s, 1, &b).rho;
+        assert!(pred.rho > rho1, "g=2 must out-overlap g=1 here");
+        assert!(pred.makespan < pol.predict_all_to_all(&s, &b).makespan);
+    }
+
+    /// Compute-rich shapes tie at ρ = 1 for every g; the tie-break keeps
+    /// the paper's g = 1 default (finest pipelining, smallest slices).
+    #[test]
+    fn compute_bound_keeps_paper_default_group() {
+        let b = Binomial::new();
+        let mut pol = AdaptivePolicy::default();
+        pol.flop_time = 1.0e-6; // grossly compute-bound
+        let s = shape(12, 8, 4, 100.0, 8);
+        let tc = complexity(&builtin("u12-2").unwrap());
+        let (mode, pred) = pol.choose_group(&tc, &s, &b);
+        assert_eq!(mode, CommMode::Pipeline { g: 1 });
+        assert!((pred.rho - 1.0).abs() < 1e-9);
+    }
+
+    /// Nothing to hide (no compute): the extra per-step overheads make
+    /// every ring worse than one bulk exchange — the fallback must fire.
+    #[test]
+    fn comm_only_falls_back_to_all_to_all() {
+        let b = Binomial::new();
+        let mut pol = AdaptivePolicy::default();
+        pol.flop_time = 1.0e-15;
+        let s = shape(12, 8, 4, 50.0, 8);
+        let tc = complexity(&builtin("u12-2").unwrap());
+        let (mode, pred) = pol.choose_group(&tc, &s, &b);
+        assert_eq!(mode, CommMode::AllToAll);
+        assert_eq!(pred.n_steps, 1);
+        assert_eq!(pred.rho, 0.0);
+    }
+
+    /// Satellite: the chosen `g` is the argmax of modeled ρ over the
+    /// feasible candidates 1..=(P-1)/2 whose predicted makespan beats the
+    /// bulk exchange, for random shapes and policies; the all-to-all
+    /// fallback fires exactly when no candidate beats it.
+    #[test]
+    fn prop_choice_is_rho_argmax_over_feasible_range() {
+        let b = Binomial::new();
+        let tc_hi = TemplateComplexity {
+            name: "synthetic".into(),
+            k: 12,
+            memory: 1,
+            computation: 100,
+            intensity: 100.0, // always past the gate: exercise the sweep
+        };
+        crate::util::prop::check("rho_argmax", |gen| {
+            let ranks = gen.usize_in(2, 24);
+            let size = gen.usize_in(2, 10);
+            let pass = gen.usize_in(1, size - 1);
+            let s = CombineShape {
+                k: 12,
+                size,
+                passive_size: pass,
+                active_size: size - pass,
+                remote_rows_per_step: gen.f64_in(0.0, 5_000.0),
+                n_ranks: ranks,
+            };
+            let mut pol = AdaptivePolicy::default();
+            pol.flop_time = 10f64.powf(gen.f64_in(-12.0, -5.0));
+            if gen.bool() {
+                pol.net = HockneyParams::tengige();
+            }
+            let (mode, pred) = pol.choose_group(&tc_hi, &s, &b);
+            let all = pol.predict_all_to_all(&s, &b);
+            // the contenders: feasible rings predicted to beat bulk
+            let contenders: Vec<GroupPrediction> = AdaptivePolicy::feasible_groups(ranks)
+                .map(|g| pol.predict_group(&s, g, &b))
+                .filter(|p| p.makespan < all.makespan)
+                .collect();
+            let best_rho = contenders.iter().map(|p| p.rho).fold(0.0f64, f64::max);
+            match mode {
+                CommMode::Pipeline { g } => {
+                    if g > AdaptivePolicy::max_feasible_group(ranks) {
+                        return Err(format!("infeasible g={g} at P={ranks}"));
+                    }
+                    if pred.makespan >= all.makespan {
+                        return Err(format!(
+                            "pipelined makespan {} does not beat all-to-all {}",
+                            pred.makespan, all.makespan
+                        ));
+                    }
+                    if pred.rho + 1e-9 < best_rho {
+                        return Err(format!(
+                            "chose g={g} with rho {} < contender max {}",
+                            pred.rho, best_rho
+                        ));
+                    }
+                }
+                CommMode::AllToAll => {
+                    if !contenders.is_empty() {
+                        return Err(format!(
+                            "fell back to all-to-all although {} candidate(s) \
+                             beat it at P={ranks}",
+                            contenders.len()
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn calibration_feedback_moves_the_model_the_right_way() {
+        let b = Binomial::new();
+        let pol = AdaptivePolicy::default();
+        let s = shape(10, 6, 3, 200.0, 8);
+
+        // measured overlap short of the prediction → transfers are
+        // undercosted → comm_scale rises → predicted ρ drops
+        let mut cal = GroupCalibration::default();
+        cal.observe_rho(0.9, 0.3);
+        assert!(cal.comm_scale > 1.0);
+        let before = pol.predict_group(&s, 1, &b).rho;
+        let after = pol.calibrated(&cal).predict_group(&s, 1, &b).rho;
+        assert!(after <= before, "rho {after} must not rise past {before}");
+
+        // the other direction: better-than-predicted overlap cheapens the
+        // modeled transfers
+        let mut cal2 = GroupCalibration::default();
+        cal2.observe_rho(0.3, 0.9);
+        assert!(cal2.comm_scale < 1.0);
+
+        // clamps hold under hostile streaks
+        for _ in 0..100 {
+            cal.observe_rho(1.0, 0.05);
+            cal2.observe_rho(0.05, 1.0);
+        }
+        assert!(cal.comm_scale <= 4.0 + 1e-12);
+        assert!(cal2.comm_scale >= 0.25 - 1e-12);
+
+        // flop-time feedback: EWMA lands between old and new observations
+        let mut cal3 = GroupCalibration::default();
+        cal3.observe_flop_time(2.0e-9);
+        assert_eq!(cal3.flop_time, Some(2.0e-9));
+        cal3.observe_flop_time(4.0e-9);
+        let ft = cal3.flop_time.unwrap();
+        assert!(ft > 2.0e-9 && ft < 4.0e-9);
+        assert_eq!(pol.calibrated(&cal3).flop_time, ft);
     }
 }

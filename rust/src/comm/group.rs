@@ -26,16 +26,31 @@ pub struct Schedule {
 }
 
 impl Schedule {
-    /// Ring-ordered schedule with `g ≥ 1` offsets per step.
-    pub fn ring(n_ranks: usize, g: usize) -> Self {
-        assert!(n_ranks >= 1);
+    /// Offsets-per-step chunk sizes of the ring: `g` per step, with the
+    /// remainder `(P-1) mod g` forming the short last step. This is the
+    /// single definition of the ring's chunking — [`Self::ring`] builds
+    /// its schedule from it and the adaptive model predicts against it,
+    /// so predictions and executed schedules agree by construction.
+    pub fn ring_step_sizes(n_ranks: usize, g: usize) -> Vec<usize> {
         let g = g.max(1);
-        let mut offsets = Vec::new();
+        let mut sizes = Vec::new();
         let mut o = 1usize;
         while o < n_ranks {
             let hi = (o + g).min(n_ranks);
-            offsets.push((o..hi).collect::<Vec<_>>());
+            sizes.push(hi - o);
             o = hi;
+        }
+        sizes
+    }
+
+    /// Ring-ordered schedule with `g ≥ 1` offsets per step.
+    pub fn ring(n_ranks: usize, g: usize) -> Self {
+        assert!(n_ranks >= 1);
+        let mut offsets = Vec::new();
+        let mut o = 1usize;
+        for m in Self::ring_step_sizes(n_ranks, g) {
+            offsets.push((o..o + m).collect::<Vec<_>>());
+            o += m;
         }
         let plans = offsets
             .iter()

@@ -129,6 +129,10 @@ pub struct ThreadedFabric {
     sent_bytes: Vec<Vec<AtomicU64>>,
     /// `[rank][step]` messages sent
     sent_msgs: Vec<Vec<AtomicU64>>,
+    /// `[rank][step]` bytes received (drained via [`Self::recv_step`]) —
+    /// the receive-side mirror of `sent_bytes`, which the adaptive model's
+    /// per-step byte accounting must reproduce exactly
+    recv_bytes: Vec<Vec<AtomicU64>>,
     /// `[sender][step]` next sequence number
     seqs: Vec<Vec<AtomicU64>>,
     /// payload bytes currently parked in inboxes (sent, not yet received)
@@ -149,6 +153,7 @@ impl ThreadedFabric {
             arrivals: (0..n_ranks).map(|_| Condvar::new()).collect(),
             sent_bytes: counters(n_ranks, n_steps),
             sent_msgs: counters(n_ranks, n_steps),
+            recv_bytes: counters(n_ranks, n_steps),
             seqs: counters(n_ranks, n_steps),
             in_flight: SharedAccountant::new(),
         }
@@ -210,6 +215,7 @@ impl ThreadedFabric {
         drop(ib);
         got.sort_by_key(|q| (q.sender, q.seq));
         let bytes: u64 = got.iter().map(|q| q.pkt.bytes()).sum();
+        self.recv_bytes[p][step].fetch_add(bytes, Ordering::Relaxed);
         self.in_flight.free(MemClass::RecvBuffer, bytes);
         got.into_iter().map(|q| q.pkt).collect()
     }
@@ -227,6 +233,11 @@ impl ThreadedFabric {
     /// Messages rank `p` sent at `step`.
     pub fn sent_msgs(&self, p: usize, step: usize) -> u64 {
         self.sent_msgs[p][step].load(Ordering::Relaxed)
+    }
+
+    /// Bytes rank `p` received (drained) at `step`.
+    pub fn recv_bytes(&self, p: usize, step: usize) -> u64 {
+        self.recv_bytes[p][step].load(Ordering::Relaxed)
     }
 
     /// Total bytes rank `p` sent across all steps (matches the sequential

@@ -9,7 +9,7 @@ pub mod hockney;
 pub mod mailbox;
 pub mod packet;
 
-pub use adaptive::{AdaptivePolicy, CombineShape, CommMode};
+pub use adaptive::{AdaptivePolicy, CombineShape, CommMode, GroupCalibration, GroupPrediction};
 pub use group::{Schedule, StepPlan};
 pub use hockney::HockneyParams;
 pub use mailbox::{Fabric, ThreadedFabric};

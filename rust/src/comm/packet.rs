@@ -6,6 +6,8 @@
 //! lets Harp reconfigure routing on-the-fly instead of baking the
 //! collective into the program structure.
 
+use crate::colorcount::Count;
+
 /// sender: 10 bits (≤1024 ranks), receiver: 10 bits, offset: 12 bits.
 pub const SENDER_BITS: u32 = 10;
 pub const RECEIVER_BITS: u32 = 10;
@@ -32,8 +34,9 @@ pub fn decode_meta(meta: u32) -> (usize, usize, usize) {
     (sender, receiver, offset)
 }
 
-/// A count-row packet: `rows` are f32 count-table rows for the vertices the
-/// receiver requested (in the receiver's request-list order), flattened.
+/// A count-row packet: `rows` are count-table rows (at the engine's
+/// [`Count`] element width) for the vertices the receiver requested (in
+/// the receiver's request-list order), flattened.
 #[derive(Debug, Clone)]
 pub struct Packet {
     pub meta: u32,
@@ -41,17 +44,21 @@ pub struct Packet {
     pub subtemplate: u32,
     /// row width (number of color sets)
     pub n_sets: u32,
-    pub rows: Vec<f32>,
+    pub rows: Vec<Count>,
 }
 
 impl Packet {
+    /// Wire bytes of the packet envelope: the 4-byte meta ID plus the
+    /// 8-byte (subtemplate, n_sets) header.
+    pub const HEADER_BYTES: u64 = 12;
+
     pub fn new(
         sender: usize,
         receiver: usize,
         offset: usize,
         subtemplate: usize,
         n_sets: usize,
-        rows: Vec<f32>,
+        rows: Vec<Count>,
     ) -> Self {
         Packet {
             meta: encode_meta(sender, receiver, offset),
@@ -76,9 +83,12 @@ impl Packet {
         decode_meta(self.meta).2
     }
 
-    /// Payload size on the wire (meta + header + rows).
+    /// Payload size on the wire (meta + header + rows at the engine's
+    /// element width). The adaptive model charges the same per-packet
+    /// header and per-entry width, so modeled step bytes and the fabric's
+    /// measured accounting agree exactly.
     pub fn bytes(&self) -> u64 {
-        4 + 8 + (self.rows.len() * 4) as u64
+        Self::HEADER_BYTES + (self.rows.len() * std::mem::size_of::<Count>()) as u64
     }
 }
 

@@ -129,7 +129,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 16] = [
+const KNOWN_KEYS: [&str; 17] = [
     "template",
     "dataset",
     "scale",
@@ -142,6 +142,7 @@ const KNOWN_KEYS: [&str; 16] = [
     "run.mode",
     "run.engine",
     "run.exchange",
+    "run.adaptive",
     "run.mem_limit_mb",
     "net.alpha",
     "net.beta",
@@ -175,6 +176,16 @@ fn want_float(doc: &Doc, key: &str) -> Result<Option<f64>, HarpsgError> {
         Some(Value::Int(i)) => Ok(Some(*i as f64)),
         Some(other) => Err(HarpsgError::Parse(format!(
             "`{key}`: expected a number, got {other:?}"
+        ))),
+    }
+}
+
+fn want_bool(doc: &Doc, key: &str) -> Result<Option<bool>, HarpsgError> {
+    match doc.get(key) {
+        None => Ok(None),
+        Some(Value::Bool(b)) => Ok(Some(*b)),
+        Some(other) => Err(HarpsgError::Parse(format!(
+            "`{key}`: expected a boolean, got {other:?}"
         ))),
     }
 }
@@ -238,6 +249,9 @@ impl RunSpec {
                 ))
             })?;
         }
+        if let Some(b) = want_bool(doc, "run.adaptive")? {
+            run.adaptive_group = b;
+        }
         if let Some(a) = want_float(doc, "net.alpha")? {
             run.net.alpha = a;
         }
@@ -264,6 +278,16 @@ impl RunSpec {
         if task_size_set.is_some() && run.mode != ModeSelect::AdaptiveLb {
             return Err(HarpsgError::InvalidJob(format!(
                 "`run.task_size` only applies to adaptive-lb; mode is {}",
+                run.mode.flag()
+            )));
+        }
+        // mirror the CountJob builder: the model-driven sweep only makes
+        // sense when an adaptive mode is driving the decision
+        if run.adaptive_group
+            && !matches!(run.mode, ModeSelect::Adaptive | ModeSelect::AdaptiveLb)
+        {
+            return Err(HarpsgError::InvalidJob(format!(
+                "`run.adaptive` only applies to adaptive/adaptive-lb; mode is {}",
                 run.mode.flag()
             )));
         }
@@ -339,6 +363,29 @@ beta = 1.7e-10
         );
         let bad = format!("{SAMPLE}\n[run]\nexchange = \"quantum\"\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn adaptive_key_parses_and_validates() {
+        // default: off
+        assert!(!RunSpec::parse(SAMPLE).unwrap().run.adaptive_group);
+        let with_key = format!("{SAMPLE}\n[run]\nadaptive = true\n");
+        assert!(RunSpec::parse(&with_key).unwrap().run.adaptive_group);
+        // wrong type is a typed parse error
+        let bad = format!("{SAMPLE}\n[run]\nadaptive = 1\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        // sweep without an adaptive mode is inconsistent
+        let naive = SAMPLE
+            .replace("mode = \"adaptive-lb\"", "mode = \"naive\"")
+            .replace("task_size = 50\n", "");
+        let bad = format!("{naive}\n[run]\nadaptive = true\n");
+        assert!(matches!(
+            RunSpec::parse(&bad),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        // …and `adaptive = false` with any mode stays fine
+        let ok = format!("{naive}\n[run]\nadaptive = false\n");
+        assert!(!RunSpec::parse(&ok).unwrap().run.adaptive_group);
     }
 
     #[test]

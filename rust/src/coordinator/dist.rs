@@ -26,21 +26,61 @@
 
 use super::memory::{MemClass, MemoryAccountant};
 use super::run::{
-    CommDecision, EngineKind, ExchangeExec, ModelTime, RunConfig, RunResult, ThreadStats,
+    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RunConfig, RunResult,
+    ThreadStats,
 };
-use crate::api::Progress;
+use crate::api::{HarpsgError, Progress};
 use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
 use crate::colorcount::parallel::{combine_batches, nested_budget, ExecStats, PairBatch};
 use crate::colorcount::EngineContext;
-use crate::colorcount::{init_leaf_table, median_of_means, Coloring, CountTable};
+use crate::colorcount::{init_leaf_table, median_of_means, Coloring, Count, CountTable};
 use crate::combin::SplitTable;
-use crate::comm::{CommMode, Fabric, HockneyParams, Packet, Schedule, ThreadedFabric};
+use crate::comm::{
+    AdaptivePolicy, CombineShape, CommMode, Fabric, GroupCalibration, HockneyParams, Packet,
+    Schedule, ThreadedFabric,
+};
 use crate::graph::{Graph, Partition, RequestLists};
 use crate::pipeline::{naive, pipelined, MeasuredPipeline, PipelineReport, StepTiming};
 use crate::sched::{make_tasks, replay, TaskCostModel};
 use crate::template::{complexity, Template, TemplateComplexity};
 use std::sync::Arc;
 use std::time::Instant;
+
+/// Feasibility clamp for a forced ring group size: a pipelined ring
+/// needs full communication groups of m = 2g+1 ≤ P; `g = P-1` is the
+/// degenerate single-step all-to-all. Everything else (including the
+/// half-open band (P-1)/2 < g < P-1, which would schedule overlapping
+/// groups the Fig-2 routing cannot realize) is a typed error.
+pub fn validate_group_size(g: usize, n_ranks: usize) -> Result<(), HarpsgError> {
+    if g == 0 {
+        return Err(HarpsgError::InvalidJob("group_size must be ≥ 1".into()));
+    }
+    if n_ranks >= 2 && g == n_ranks - 1 {
+        return Ok(()); // the all-to-all degenerate
+    }
+    // the one feasibility predicate (shared with the adaptive sweep)
+    let max_ring = AdaptivePolicy::max_feasible_group(n_ranks);
+    if g <= max_ring {
+        return Ok(());
+    }
+    Err(HarpsgError::InvalidJob(format!(
+        "group_size {g} infeasible for {n_ranks} ranks: a pipelined ring needs \
+         2g+1 ≤ P (g ≤ {max_ring}), or g = P-1 = {} for all-to-all",
+        n_ranks.saturating_sub(1)
+    )))
+}
+
+/// One subtemplate's exchange decision for one iteration: the schedule the
+/// executors run plus the model context the report carries.
+#[derive(Debug, Clone)]
+struct SubDecision {
+    schedule: Schedule,
+    pipelined: bool,
+    /// ring offsets per step (P-1 for all-to-all)
+    g: usize,
+    /// the model's predicted mean ρ for this shape (0 for all-to-all)
+    predicted_rho: f64,
+}
 
 /// Raw per-subtemplate model records in compute *units*; converted to
 /// seconds once the unit cost is calibrated from the real measurements.
@@ -65,6 +105,10 @@ pub struct ExchangePlan {
     pub(crate) local_pairs: Vec<Vec<(u32, u32)>>,
     /// `plans[p][q]`: (v_local_row, row index in the buffer received from q)
     pub(crate) plans: Vec<Vec<Vec<(u32, u32)>>>,
+    /// mean request-list length over ordered rank pairs — the exact value
+    /// of the paper's Eq-5 `≈ |E|/P²` estimate, fed to the adaptive
+    /// model as the expected remote rows per peer per step
+    mean_remote_rows: f64,
 }
 
 impl ExchangePlan {
@@ -87,11 +131,21 @@ impl ExchangePlan {
                 }
             }
         }
+        let mut req_rows = 0u64;
+        for p in 0..n_ranks {
+            for q in 0..n_ranks {
+                if p != q {
+                    req_rows += req.rows(p, q).len() as u64;
+                }
+            }
+        }
+        let ordered_pairs = (n_ranks * n_ranks.saturating_sub(1)).max(1);
         ExchangePlan {
             part,
             req,
             local_pairs,
             plans,
+            mean_remote_rows: req_rows as f64 / ordered_pairs as f64,
         }
     }
 
@@ -108,6 +162,12 @@ impl ExchangePlan {
 
     pub fn n_ranks(&self) -> usize {
         self.part.n_ranks
+    }
+
+    /// Mean remote rows a rank requests from one peer (the exact Eq-5
+    /// quantity) — the `remote_rows_per_step` input of [`CombineShape`].
+    pub fn mean_remote_rows(&self) -> f64 {
+        self.mean_remote_rows
     }
 }
 
@@ -163,8 +223,13 @@ impl<'g> DistributedRunner<'g> {
     }
 
     /// Ablation hook: force the ring group size (offsets per step).
-    pub fn set_group_size(&mut self, g: usize) {
+    /// Validates ring feasibility against the configured rank count —
+    /// `2g+1 ≤ P`, or the degenerate all-to-all `g = P-1` — instead of
+    /// silently scheduling an infeasible ring.
+    pub fn set_group_size(&mut self, g: usize) -> Result<(), HarpsgError> {
+        validate_group_size(g, self.cfg.n_ranks)?;
         self.group_override = Some(g);
+        Ok(())
     }
 
     /// Attach a progress observer (see `api::Progress`).
@@ -178,16 +243,85 @@ impl<'g> DistributedRunner<'g> {
         self.plan = Arc::new(ExchangePlan::block(self.g, self.cfg.n_ranks));
     }
 
-    /// The exchange schedule for this template under the configured mode.
-    pub fn schedule(&self) -> (Schedule, bool) {
+    /// The combine shape of subtemplate `i` — the adaptive model's input.
+    fn combine_shape(&self, i: usize) -> CombineShape {
+        let dag = &self.ctx.dag;
+        let sub = &dag.subs[i];
+        CombineShape {
+            k: self.ctx.k,
+            size: sub.size,
+            passive_size: sub.passive_size(dag),
+            active_size: sub.active_size(dag),
+            remote_rows_per_step: self.plan.mean_remote_rows(),
+            n_ranks: self.cfg.n_ranks,
+        }
+    }
+
+    /// The single CommMode → concrete-schedule translation (the forced
+    /// `group_override` wins over any mode): returns the schedule, whether
+    /// it pipelines, and the offsets-per-step `g` it realizes. Shared by
+    /// [`Self::schedule`] and [`Self::decide_sub`] so the two can't drift.
+    fn shape_of(&self, mode: CommMode) -> (Schedule, bool, usize) {
+        let n_ranks = self.cfg.n_ranks;
         if let Some(g) = self.group_override {
-            let pipelined = g < self.cfg.n_ranks.saturating_sub(1);
-            return (Schedule::ring(self.cfg.n_ranks, g), pipelined);
+            return (
+                Schedule::ring(n_ranks, g),
+                g < n_ranks.saturating_sub(1),
+                g,
+            );
         }
-        match self.cfg.comm_mode(self.tc.intensity) {
-            CommMode::AllToAll => (Schedule::all_to_all(self.cfg.n_ranks), false),
-            CommMode::Pipeline { g } => (Schedule::ring(self.cfg.n_ranks, g), true),
+        match mode {
+            CommMode::AllToAll => (
+                Schedule::all_to_all(n_ranks),
+                false,
+                n_ranks.saturating_sub(1).max(1),
+            ),
+            CommMode::Pipeline { g } => (Schedule::ring(n_ranks, g), true, g),
         }
+    }
+
+    /// Decide the exchange shape of one subtemplate combine for the next
+    /// iteration. Precedence: the `group_override` ablation hook, then —
+    /// with `adaptive_group` on in the Adaptive/AdaptiveLB modes — the
+    /// calibrated model sweep ([`AdaptivePolicy::choose_group`]), else the
+    /// historical static per-template switch.
+    fn decide_sub(&self, i: usize, cal: &GroupCalibration) -> SubDecision {
+        let binom = &self.ctx.binom;
+        let shape = self.combine_shape(i);
+        let pol = self.cfg.policy.calibrated(cal);
+        let adaptive = self.group_override.is_none()
+            && self.cfg.adaptive_group
+            && matches!(self.cfg.mode, ModeSelect::Adaptive | ModeSelect::AdaptiveLb);
+        let (mode, pred) = if adaptive {
+            let (mode, pred) = pol.choose_group(&self.tc, &shape, binom);
+            (mode, Some(pred))
+        } else {
+            (self.cfg.comm_mode(self.tc.intensity), None)
+        };
+        let (schedule, pipelined, g) = self.shape_of(mode);
+        let predicted_rho = if pipelined {
+            pred.filter(|p| p.g == g)
+                .map(|p| p.rho)
+                .unwrap_or_else(|| pol.predict_group(&shape, g, binom).rho)
+        } else {
+            0.0
+        };
+        SubDecision {
+            schedule,
+            pipelined,
+            g,
+            predicted_rho,
+        }
+    }
+
+    /// The template-level schedule under the *static* switch (or the
+    /// forced override) — what every subtemplate gets when the adaptive
+    /// sweep is off. Sweep-enabled runs decide per subtemplate inside
+    /// `run()` (see `RunResult::comm_decisions`); this accessor
+    /// deliberately reports the static shape.
+    pub fn schedule(&self) -> (Schedule, bool) {
+        let (schedule, pipelined, _) = self.shape_of(self.cfg.comm_mode(self.tc.intensity));
+        (schedule, pipelined)
     }
 
     fn contract_backend(
@@ -225,23 +359,35 @@ impl<'g> DistributedRunner<'g> {
         let mut measured = ExecStats::zeros(self.cfg.n_workers);
         let mut pipe = MeasuredPipeline::new(n_ranks);
 
-        // the comm decision is per template (Alg 3 line 2) and therefore
-        // identical for every non-leaf subtemplate; record it per sub so
-        // reports can show the exchange shape next to each combine
-        let (sched, sched_pipelined) = self.schedule();
-        let comm_decisions: Vec<CommDecision> = self
+        // Exchange decisions are per subtemplate and per iteration: the
+        // static modes (Alg 3 line 2) give every non-leaf sub the same
+        // shape, while the adaptive sweep may pick a different g per sub
+        // and recalibrate between iterations. The final iteration's
+        // decisions are what the report carries.
+        let non_leaf: Vec<usize> = self
             .ctx
             .dag
             .order
             .iter()
             .copied()
             .filter(|&i| !self.ctx.dag.subs[i].is_leaf())
-            .map(|i| CommDecision {
-                sub: i,
-                pipelined: sched_pipelined,
-                n_steps: sched.n_steps(),
-            })
             .collect();
+        let mut cal = GroupCalibration::default();
+        let mut decisions: Vec<Option<SubDecision>> = vec![None; n_subs];
+        // per-sub measured overlap (threaded executor only): Σρ, count,
+        // and the (pipelined, g) shape the measurements belong to —
+        // calibration can change a sub's shape between iterations, and
+        // ρ measured under a different g must not be paired with the
+        // final shape's prediction
+        let mut rho_meas_sum = vec![0.0f64; n_subs];
+        let mut rho_meas_n = vec![0u64; n_subs];
+        let mut rho_meas_shape: Vec<Option<(bool, usize)>> = vec![None; n_subs];
+        // this iteration's (predicted ρ, measured ρ) feedback pairs
+        let mut iter_feedback: Vec<(f64, f64)> = Vec::new();
+        // units/seconds already folded into the calibration, so each
+        // iteration feeds only its own delta (not the running mean —
+        // the EWMA does the smoothing)
+        let (mut fed_units, mut fed_compute) = (0.0f64, 0.0f64);
         if let Some(pr) = &self.progress {
             pr.on_run_start(self.cfg.n_iterations, n_subs);
         }
@@ -278,6 +424,20 @@ impl<'g> DistributedRunner<'g> {
             if let Some(pr) = &self.progress {
                 pr.on_iteration(it, self.cfg.n_iterations);
             }
+            // (re)decide every combine's exchange shape with the current
+            // calibration — iteration 0 uses the configured policy, later
+            // iterations fold in the measured flop time and overlap. A
+            // shape change discards the ρ measured under the old shape.
+            for &i in &non_leaf {
+                let d = self.decide_sub(i, &cal);
+                let shape_key = Some((d.pipelined, d.g));
+                if rho_meas_shape[i] != shape_key {
+                    rho_meas_shape[i] = shape_key;
+                    rho_meas_sum[i] = 0.0;
+                    rho_meas_n[i] = 0;
+                }
+                decisions[i] = Some(d);
+            }
             let iter_seed = crate::util::mix2(self.cfg.seed, it as u64);
             let coloring = Coloring::random(self.g.n_vertices(), k, iter_seed);
             let mut tables: Vec<Vec<Option<CountTable>>> = vec![vec![None; n_subs]; n_ranks];
@@ -294,7 +454,7 @@ impl<'g> DistributedRunner<'g> {
             for (p, m) in mems.iter_mut().enumerate() {
                 m.alloc(
                     MemClass::Scratch,
-                    (self.plan.part.n_local(p) * max_agg * 4) as u64,
+                    (self.plan.part.n_local(p) * max_agg * std::mem::size_of::<Count>()) as u64,
                 );
             }
 
@@ -307,9 +467,11 @@ impl<'g> DistributedRunner<'g> {
                         tables[p][i] = Some(t);
                     }
                 } else {
-                    let rec = if exec_threaded {
+                    let dec = decisions[i].as_ref().expect("sub decided this iteration");
+                    let (rec, meas_rho) = if exec_threaded {
                         self.combine_subtemplate_threaded(
                             i,
+                            dec,
                             &mut tables,
                             &mut mems,
                             &mut total_units,
@@ -322,8 +484,9 @@ impl<'g> DistributedRunner<'g> {
                             &mut pipe,
                         )
                     } else {
-                        self.combine_subtemplate(
+                        let rec = self.combine_subtemplate(
                             i,
+                            dec,
                             &mut tables,
                             &mut scratches,
                             &mut mems,
@@ -335,8 +498,16 @@ impl<'g> DistributedRunner<'g> {
                             it,
                             use_exec,
                             &mut measured,
-                        )
+                        );
+                        (rec, None)
                     };
+                    if let Some(r) = meas_rho {
+                        rho_meas_sum[i] += r;
+                        rho_meas_n[i] += 1;
+                        if dec.pipelined {
+                            iter_feedback.push((dec.predicted_rho, r));
+                        }
+                    }
                     records.push(rec);
                 }
                 // free tables whose last reader has run
@@ -364,8 +535,37 @@ impl<'g> DistributedRunner<'g> {
                 }
                 mems[p].free(
                     MemClass::Scratch,
-                    (self.plan.part.n_local(p) * max_agg * 4) as u64,
+                    (self.plan.part.n_local(p) * max_agg * std::mem::size_of::<Count>()) as u64,
                 );
+            }
+
+            // the runtime feedback loop: this iteration's measured
+            // seconds-per-unit (the delta, not the running mean) and its
+            // predicted-vs-measured overlap pairs recalibrate the model
+            // before the next iteration's decisions (adaptive sweep only —
+            // the static modes never read `cal`)
+            if self.cfg.adaptive_group {
+                let du = total_units - fed_units;
+                let dc = real_compute - fed_compute;
+                if du > 0.0 {
+                    cal.observe_flop_time((dc / du).max(1e-12));
+                }
+                fed_units = total_units;
+                fed_compute = real_compute;
+                // one damped calibration step per iteration, not per
+                // combine: geometric-mean the iteration's pairs first so
+                // feedback strength doesn't scale with subtemplate count
+                if !iter_feedback.is_empty() {
+                    let n = iter_feedback.len() as f64;
+                    let (mut lp, mut lm) = (0.0f64, 0.0f64);
+                    for (pred, meas) in iter_feedback.drain(..) {
+                        lp += pred.clamp(0.05, 1.0).ln();
+                        lm += meas.clamp(0.05, 1.0).ln();
+                    }
+                    cal.observe_rho((lp / n).exp(), (lm / n).exp());
+                }
+            } else {
+                iter_feedback.clear();
             }
         }
 
@@ -430,6 +630,37 @@ impl<'g> DistributedRunner<'g> {
             None => false,
         };
         let total_hist: f64 = hist_units.iter().sum();
+        // the report's per-subtemplate decisions: the final iteration's
+        // shapes, with the run's mean measured overlap next to each
+        // (a zero-iteration run never filled them — report the initial
+        // decisions instead of panicking, like the historical path)
+        for &i in &non_leaf {
+            if decisions[i].is_none() {
+                decisions[i] = Some(self.decide_sub(i, &cal));
+            }
+        }
+        let comm_decisions: Vec<CommDecision> = non_leaf
+            .iter()
+            .map(|&i| {
+                let d = decisions[i].as_ref().expect("sub decided");
+                CommDecision {
+                    sub: i,
+                    pipelined: d.pipelined,
+                    g: d.g,
+                    n_steps: d.schedule.n_steps(),
+                    predicted_rho: d.predicted_rho,
+                    // only meaningful when the *final* shape pipelines:
+                    // calibration can flip a sub to all-to-all after a
+                    // ring iteration already measured ρ, and the report
+                    // contract keeps rho_meas null for single-step shapes
+                    measured_rho: if d.pipelined && rho_meas_n[i] > 0 {
+                        Some(rho_meas_sum[i] / rho_meas_n[i] as f64)
+                    } else {
+                        None
+                    },
+                }
+            })
+            .collect();
         if let Some(pr) = &self.progress {
             pr.on_run_end();
         }
@@ -467,6 +698,7 @@ impl<'g> DistributedRunner<'g> {
     fn combine_subtemplate(
         &mut self,
         i: usize,
+        dec: &SubDecision,
         tables: &mut [Vec<Option<CountTable>>],
         scratches: &mut [CombineScratch],
         mems: &mut [MemoryAccountant],
@@ -485,7 +717,8 @@ impl<'g> DistributedRunner<'g> {
         let a2_sets = self.ctx.binom.c(self.ctx.k, sub.active_size(&self.ctx.dag)) as usize;
         let pass_idx = sub.passive.unwrap();
         let act_idx = sub.active.unwrap();
-        let (schedule, is_pipelined) = self.schedule();
+        let schedule = &dec.schedule;
+        let is_pipelined = dec.pipelined;
         if let Some(pr) = &self.progress {
             pr.on_subtemplate_start(i, schedule.n_steps(), is_pipelined);
         }
@@ -719,12 +952,15 @@ impl<'g> DistributedRunner<'g> {
     /// interleaving nor the per-rank [`nested_budget`] pool width can
     /// move a bit (`tests/pipeline_exec.rs` enforces this).
     ///
-    /// Returns the model record; the *measured* overlap (real per-step ρ,
-    /// blocked wait, per-rank receive peaks) accumulates into `pipe`.
+    /// Returns the model record plus this combine's measured mean ρ over
+    /// the overlap-capable steps (`None` for single-step schedules); the
+    /// *measured* overlap (real per-step ρ, blocked wait, per-rank
+    /// receive peaks) also accumulates into `pipe`.
     #[allow(clippy::too_many_arguments)]
     fn combine_subtemplate_threaded(
         &mut self,
         i: usize,
+        dec: &SubDecision,
         tables: &mut [Vec<Option<CountTable>>],
         mems: &mut [MemoryAccountant],
         total_units: &mut f64,
@@ -735,14 +971,15 @@ impl<'g> DistributedRunner<'g> {
         iteration: usize,
         measured: &mut ExecStats,
         pipe: &mut MeasuredPipeline,
-    ) -> SubRecord {
+    ) -> (SubRecord, Option<f64>) {
         let n_ranks = self.cfg.n_ranks;
         let sub = self.ctx.dag.subs[i].clone();
         let split = self.ctx.splits[i].clone().expect("non-leaf split");
         let a2_sets = self.ctx.binom.c(self.ctx.k, sub.active_size(&self.ctx.dag)) as usize;
         let pass_idx = sub.passive.unwrap();
         let act_idx = sub.active.unwrap();
-        let (schedule, is_pipelined) = self.schedule();
+        let schedule = &dec.schedule;
+        let is_pipelined = dec.pipelined;
         let n_steps = schedule.n_steps();
         if let Some(pr) = &self.progress {
             pr.on_subtemplate_start(i, n_steps, is_pipelined);
@@ -777,7 +1014,7 @@ impl<'g> DistributedRunner<'g> {
             net: self.cfg.net,
             cost_model,
             plan: &self.plan,
-            schedule: &schedule,
+            schedule,
             split: &split,
             fabric: &fabric,
             notify: &notify,
@@ -835,6 +1072,21 @@ impl<'g> DistributedRunner<'g> {
         }
         pipe.finish_combine();
 
+        // this combine's measured mean ρ over the overlap-capable steps
+        // (step 0's wait can never be hidden — same convention as
+        // `MeasuredPipeline::mean_rho`), fed back into the calibration
+        // and reported per subtemplate next to the prediction
+        let meas_rho = if n_steps > 1 {
+            let mut sum = 0.0;
+            for w in 1..n_steps {
+                let tot = step_comp[w] + step_wait[w];
+                sum += if tot <= 0.0 { 1.0 } else { step_comp[w] / tot };
+            }
+            Some(sum / (n_steps - 1) as f64)
+        } else {
+            None
+        };
+
         for (p, o) in outs.into_iter().enumerate() {
             tables[p][i] = Some(o);
         }
@@ -843,12 +1095,15 @@ impl<'g> DistributedRunner<'g> {
             pr.on_subtemplate_done(i);
         }
 
-        SubRecord {
-            sub: i,
-            local_makespan,
-            steps,
-            pipelined: is_pipelined,
-        }
+        (
+            SubRecord {
+                sub: i,
+                local_makespan,
+                steps,
+                pipelined: is_pipelined,
+            },
+            meas_rho,
+        )
     }
 }
 
@@ -1148,7 +1403,6 @@ fn rank_exchange_worker(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::coordinator::run::ModeSelect;
     use crate::graph::rmat::{generate, RmatParams};
     use crate::template::builtin;
 
@@ -1264,8 +1518,8 @@ mod tests {
         let mut r = DistributedRunner::new(&tpl, &g, cfg);
 
         // the plan-derived bound: per rank, the largest step slice any
-        // non-leaf subtemplate can receive (12-byte packet header + the
-        // requested rows at that sub's active width)
+        // non-leaf subtemplate can receive (packet header + the requested
+        // rows at that sub's active width and the engine element size)
         let (schedule, pipelined) = r.schedule();
         assert!(pipelined);
         let n_ranks = r.cfg.n_ranks;
@@ -1277,7 +1531,12 @@ mod tests {
                     let step_bytes: u64 = plans_w[p]
                         .recv_from
                         .iter()
-                        .map(|&q| 12 + r.plan.req.rows(p, q).len() as u64 * a2 * 4)
+                        .map(|&q| {
+                            Packet::HEADER_BYTES
+                                + r.plan.req.rows(p, q).len() as u64
+                                    * a2
+                                    * std::mem::size_of::<Count>() as u64
+                        })
                         .sum();
                     *b = (*b).max(step_bytes);
                 }
@@ -1394,12 +1653,176 @@ mod tests {
         assert!(!res.comm_decisions.is_empty());
         for d in &res.comm_decisions {
             assert!(d.pipelined);
+            assert_eq!(d.g, 1);
+            assert_eq!(d.group_size(), Some(3));
             assert_eq!(d.n_steps, 5); // ring of 6 ranks, g = 1
+            // default executor is threaded: a 5-step ring has an overlap
+            // window, so the measured ρ must be recorded and sane
+            let m = d.measured_rho.expect("threaded pipelined combine");
+            assert!((0.0..=1.0).contains(&m), "rho {m}");
+            assert!((0.0..=1.0).contains(&d.predicted_rho));
         }
         let res = run_mode("u10-2", &g, ModeSelect::Naive, 6);
         for d in &res.comm_decisions {
             assert!(!d.pipelined);
+            assert_eq!(d.g, 5); // all-to-all exchanges with all P-1 peers
             assert_eq!(d.n_steps, 1);
+            assert_eq!(d.predicted_rho, 0.0);
+            assert!(d.measured_rho.is_none(), "single step has no overlap window");
+        }
+    }
+
+    /// Satellite regression (P = 2 and P = 3): every boundary a group size
+    /// crosses on its way into a ring schedule clamps to 2g+1 ≤ P (with
+    /// the g = P-1 all-to-all degenerate) and reports a typed error.
+    #[test]
+    fn group_size_clamped_at_small_rank_counts() {
+        // P = 2: no pipelined ring exists; only the all-to-all degenerate
+        assert!(validate_group_size(1, 2).is_ok());
+        assert!(matches!(
+            validate_group_size(2, 2),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        // P = 3: g = 1 (groups of 3) and g = 2 (all-to-all) only
+        assert!(validate_group_size(1, 3).is_ok());
+        assert!(validate_group_size(2, 3).is_ok());
+        assert!(matches!(
+            validate_group_size(3, 3),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        // the half-open band (P-1)/2 < g < P-1 is infeasible
+        assert!(validate_group_size(3, 8).is_ok());
+        for bad in [4usize, 5, 6] {
+            assert!(validate_group_size(bad, 8).is_err(), "g={bad} P=8");
+        }
+        assert!(validate_group_size(7, 8).is_ok());
+        assert!(validate_group_size(0, 8).is_err());
+
+        // the runner-level ablation hook rejects instead of scheduling
+        let g = small_graph(59);
+        let tpl = builtin("u5-2").unwrap();
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 3;
+        cfg.n_iterations = 1;
+        let mut r = DistributedRunner::new(&tpl, &g, cfg);
+        assert!(r.set_group_size(1).is_ok());
+        assert!(matches!(
+            r.set_group_size(3),
+            Err(HarpsgError::InvalidJob(_))
+        ));
+        let mut cfg2 = RunConfig::default();
+        cfg2.n_ranks = 2;
+        cfg2.n_iterations = 1;
+        let mut r2 = DistributedRunner::new(&tpl, &g, cfg2);
+        assert!(r2.set_group_size(2).is_err());
+        assert!(r2.set_group_size(1).is_ok(), "g = P-1 all-to-all stays legal");
+        let res = r2.run();
+        assert!(res.comm_decisions.iter().all(|d| !d.pipelined));
+    }
+
+    /// Satellite: the adaptive model's byte accounting *is* the fabric's.
+    /// Per (rank, step), the modeled row width (engine element size ×
+    /// active sets) plus the per-packet header reproduce exactly what a
+    /// `ThreadedFabric` measures when the executor's packets for a real
+    /// exchange plan flow through it — for g = 1, a wider ring, and the
+    /// all-to-all schedule.
+    #[test]
+    fn modeled_step_bytes_match_threaded_fabric() {
+        let g = small_graph(53);
+        let tpl = builtin("u10-2").unwrap();
+        let ctx = EngineContext::new(&tpl);
+        let n_ranks = 5usize;
+        let plan = ExchangePlan::random(&g, n_ranks, 42);
+        for ring_g in [1usize, 2, 4] {
+            let sched = Schedule::ring(n_ranks, ring_g);
+            for (i, sub) in ctx.dag.subs.iter().enumerate() {
+                if sub.is_leaf() {
+                    continue;
+                }
+                let a = sub.active_size(&ctx.dag);
+                let a2_sets = ctx.binom.c(ctx.k, a) as usize;
+                let row_bytes = AdaptivePolicy::row_bytes(ctx.k, a, &ctx.binom);
+                let fab = ThreadedFabric::new(n_ranks, sched.n_steps());
+                for (w, plans_w) in sched.plans.iter().enumerate() {
+                    for p in 0..n_ranks {
+                        for &q in &plans_w[p].send_to {
+                            let want = plan.req.rows(q, p);
+                            let rows = vec![0.0; want.len() * a2_sets];
+                            fab.send(Packet::new(p, q, w, i, a2_sets, rows));
+                        }
+                    }
+                }
+                for (w, plans_w) in sched.plans.iter().enumerate() {
+                    for p in 0..n_ranks {
+                        let modeled: u64 = plans_w[p]
+                            .send_to
+                            .iter()
+                            .map(|&q| {
+                                plan.req.rows(q, p).len() as u64 * row_bytes
+                                    + Packet::HEADER_BYTES
+                            })
+                            .sum();
+                        assert_eq!(
+                            fab.sent_bytes(p, w),
+                            modeled,
+                            "g={ring_g} sub {i} rank {p} step {w}"
+                        );
+                        let _ = fab.recv_step(p, w, plans_w[p].recv_from.len());
+                        // …and the receive side agrees with the same model
+                        let modeled_recv: u64 = plans_w[p]
+                            .recv_from
+                            .iter()
+                            .map(|&q| {
+                                plan.req.rows(p, q).len() as u64 * row_bytes
+                                    + Packet::HEADER_BYTES
+                            })
+                            .sum();
+                        assert_eq!(
+                            fab.recv_bytes(p, w),
+                            modeled_recv,
+                            "recv g={ring_g} sub {i} rank {p} step {w}"
+                        );
+                    }
+                }
+                fab.assert_empty();
+            }
+        }
+    }
+
+    /// Adaptive sweep end-to-end: decisions stay feasible, the counting
+    /// math is schedule-invariant (bit-identical estimates vs the static
+    /// path), and multi-iteration runs recalibrate without disturbance.
+    #[test]
+    fn adaptive_sweep_matches_static_estimates() {
+        let g = small_graph(61);
+        let tpl = builtin("u10-2").unwrap();
+        let mk = |adaptive: bool, exchange: ExchangeExec| {
+            let mut cfg = RunConfig::default();
+            cfg.n_ranks = 6;
+            cfg.mode = ModeSelect::Adaptive;
+            cfg.n_iterations = 3;
+            cfg.adaptive_group = adaptive;
+            cfg.exchange = exchange;
+            DistributedRunner::new(&tpl, &g, cfg).run()
+        };
+        let base = mk(false, ExchangeExec::Sequential);
+        for exchange in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+            let r = mk(true, exchange);
+            assert_eq!(r.colorful, base.colorful, "{exchange:?}");
+            assert_eq!(r.estimate.to_bits(), base.estimate.to_bits(), "{exchange:?}");
+            assert!(!r.comm_decisions.is_empty());
+            for d in &r.comm_decisions {
+                if d.pipelined {
+                    assert!(
+                        d.g <= AdaptivePolicy::max_feasible_group(6),
+                        "infeasible g {}",
+                        d.g
+                    );
+                    assert!((0.0..=1.0).contains(&d.predicted_rho));
+                } else {
+                    assert_eq!(d.n_steps, 1);
+                }
+            }
         }
     }
 

@@ -139,6 +139,13 @@ pub struct RunConfig {
     /// sequential reference path. A loaded XLA runtime forces the
     /// sequential path (its kernel owns the serial scratch buffers).
     pub exchange: ExchangeExec,
+    /// model-driven per-subtemplate group-size selection (the `--adaptive`
+    /// knob): in the Adaptive/AdaptiveLB modes, sweep every feasible ring
+    /// group size `g ∈ 1..=(P-1)/2` through the Hockney + compute model
+    /// per subtemplate and feed measured flop time / overlap back into
+    /// the policy between iterations. Off (the default) keeps the
+    /// historical static switch (intensity threshold, fixed g = 1).
+    pub adaptive_group: bool,
 }
 
 impl Default for RunConfig {
@@ -158,6 +165,7 @@ impl Default for RunConfig {
             phys_cores: crate::sched::PHYSICAL_CORES,
             task_overhead_units: 10_000.0,
             exchange: ExchangeExec::Threaded,
+            adaptive_group: false,
         }
     }
 }
@@ -185,7 +193,9 @@ impl RunConfig {
         match self.mode {
             ModeSelect::Naive => CommMode::AllToAll,
             ModeSelect::Pipeline => {
-                if self.n_ranks >= 3 {
+                // same feasibility predicate as the sweep: a pipelined
+                // ring needs 2g+1 ≤ P
+                if AdaptivePolicy::max_feasible_group(self.n_ranks) >= 1 {
                     CommMode::Pipeline { g: 1 }
                 } else {
                     CommMode::AllToAll
@@ -242,18 +252,31 @@ pub struct ThreadStats {
     pub concurrency_histogram: Vec<f64>,
 }
 
-/// The exchange shape chosen for one subtemplate combine: Alg 3 decides
-/// per template, so every non-leaf subtemplate of a run shares the same
-/// decision — recorded per sub so `api::JobReport` can show the schedule
-/// next to each combine.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// The exchange shape chosen for one subtemplate combine. The static
+/// modes decide once per template (Alg 3), so every non-leaf subtemplate
+/// shares one decision; with `adaptive_group` on, the model-driven sweep
+/// decides per subtemplate (and recalibrates between iterations — the
+/// recorded decision is the final iteration's). `api::JobReport` shows
+/// the schedule and the predicted vs measured overlap next to each
+/// combine.
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct CommDecision {
     /// index of the subtemplate in the partition DAG
     pub sub: usize,
     /// true = Adaptive-Group ring, false = bulk all-to-all
     pub pipelined: bool,
+    /// ring offsets per step (communication groups of 2g+1 ranks);
+    /// `P - 1` for the single-step all-to-all
+    pub g: usize,
     /// exchange steps `W` (1 for all-to-all)
     pub n_steps: usize,
+    /// the model's predicted mean overlap ratio ρ (Eq 14) for the chosen
+    /// shape (0 for all-to-all — nothing overlaps in one bulk step)
+    pub predicted_rho: f64,
+    /// measured mean per-step ρ = comp/(comp+wait) over this sub's
+    /// combines, from the rank-parallel executor; `None` when the
+    /// sequential executor ran or the schedule had no overlap window
+    pub measured_rho: Option<f64>,
 }
 
 impl CommDecision {
@@ -263,6 +286,12 @@ impl CommDecision {
         } else {
             "all-to-all"
         }
+    }
+
+    /// The paper's ring group size m = 2g+1; `None` for all-to-all, whose
+    /// single step spans all ranks (print `mode_name` instead).
+    pub fn group_size(&self) -> Option<usize> {
+        self.pipelined.then_some(2 * self.g + 1)
     }
 }
 

@@ -506,7 +506,9 @@ pub fn fig15(ctx: &FigureCtx) -> Vec<Series> {
 /// high-intensity templates and shows the all-to-all limit g = P-1.
 pub fn abl_group_size(ctx: &FigureCtx) -> Vec<Series> {
     let s = ctx.session(Dataset::R500K3, 2000);
-    let gs = [1usize, 2, 4, 8, 15];
+    // feasible rings at P = 16 need 2g+1 ≤ 16 (g ≤ 7); g = 15 is the
+    // all-to-all limit — anything between is rejected by validation
+    let gs = [1usize, 2, 4, 7, 15];
     let cols: Vec<String> = gs.iter().map(|x| format!("g={x}")).collect();
     let cols: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
     let mut series = Series::new(
@@ -535,6 +537,48 @@ fn run_with_group(s: &Session, ranks: usize, group: usize, ctx: &FigureCtx) -> f
     ctx.run_cfg(s, "u12-2", mode, ranks, |b| b.policy(policy).group_size(group))
         .model
         .total
+}
+
+/// Ablation A4 — model-driven Adaptive-Group selection: per-subtemplate
+/// chosen group sizes with predicted vs measured overlap, against the
+/// fixed g = 1 ring and the naive bulk exchange. The sweep should never
+/// lose to the fixed shapes on the model clock (it may tie when it picks
+/// the same shape everywhere).
+pub fn abl_adaptive(ctx: &FigureCtx) -> Vec<Series> {
+    let s = ctx.session(Dataset::R500K3, 2000);
+    let mut series = Series::new(
+        "Ablation A4 — u12-2: model-driven group selection (adaptive) vs fixed g=1 ring vs naive (model s; max g over subs; mean rho over pipelined subs)",
+        &["adaptive", "g=1 ring", "naive", "max g", "rho pred", "rho meas"],
+    );
+    series.precision = 4;
+    for ranks in [6usize, 10, 16] {
+        let ad = ctx.run_cfg(&s, "u12-2", ModeSelect::Adaptive, ranks, |b| b.adaptive(true));
+        let ring = ctx.run(&s, "u12-2", ModeSelect::Pipeline, ranks);
+        let naive = ctx.run(&s, "u12-2", ModeSelect::Naive, ranks);
+        let piped: Vec<_> = ad.comm_decisions.iter().filter(|d| d.pipelined).collect();
+        let max_g = piped.iter().map(|d| d.g).max().unwrap_or(0);
+        let mean = |xs: Vec<f64>| {
+            if xs.is_empty() {
+                f64::NAN
+            } else {
+                xs.iter().sum::<f64>() / xs.len() as f64
+            }
+        };
+        let rho_pred = mean(piped.iter().map(|d| d.predicted_rho).collect());
+        let rho_meas = mean(piped.iter().filter_map(|d| d.measured_rho).collect());
+        series.push_row(
+            &format!("{ranks} ranks"),
+            vec![
+                ad.model.total,
+                ring.model.total,
+                naive.model.total,
+                max_g as f64,
+                rho_pred,
+                rho_meas,
+            ],
+        );
+    }
+    vec![series]
 }
 
 /// Ablation A2 — vertex partitioning: the Eq-5 analysis assumes random
@@ -595,9 +639,22 @@ pub fn abl_network(ctx: &FigureCtx) -> Vec<Series> {
 }
 
 /// All figure IDs the harness knows.
-pub const ALL_FIGURES: [&str; 14] = [
-    "table3", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12", "fig13", "fig14",
-    "fig15", "abl-group-size", "abl-partition", "abl-network",
+pub const ALL_FIGURES: [&str; 15] = [
+    "table3",
+    "fig6",
+    "fig7",
+    "fig8",
+    "fig9",
+    "fig10",
+    "fig11",
+    "fig12",
+    "fig13",
+    "fig14",
+    "fig15",
+    "abl-group-size",
+    "abl-adaptive",
+    "abl-partition",
+    "abl-network",
 ];
 
 /// Dispatch by ID.
@@ -615,6 +672,7 @@ pub fn run_figure(id: &str, ctx: &FigureCtx) -> Option<Vec<Series>> {
         "fig14" => fig14(ctx),
         "fig15" => fig15(ctx),
         "abl-group-size" => abl_group_size(ctx),
+        "abl-adaptive" => abl_adaptive(ctx),
         "abl-partition" => abl_partition(ctx),
         "abl-network" => abl_network(ctx),
         _ => return None,

@@ -3,9 +3,72 @@
 //! for caching generated analogs between runs.
 
 use super::csr::{Graph, GraphBuilder};
-use anyhow::{bail, Context, Result};
+use anyhow::{Context, Result};
+use std::fmt;
 use std::io::{BufRead, BufReader, BufWriter, Read, Write};
 use std::path::Path;
+
+/// Typed corruption diagnostics for the `HARPSG01` binary graph format.
+/// Every structural invariant of the CSR payload is checked up front so a
+/// corrupt cache file fails here with a precise reason instead of
+/// panicking later inside the engine (out-of-bounds rows, bogus slices).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum GraphLoadError {
+    /// the 8-byte magic is not `HARPSG01`
+    BadMagic,
+    /// an I/O failure while opening or reading, annotated with the path
+    Io(String),
+    /// the file is shorter (or longer) than the header-declared payload
+    Truncated { expected: u64, actual: u64 },
+    /// a header-declared size (vertex count or adjacency total) is so
+    /// large the payload length overflows u64 — no real file matches
+    SizeOverflow,
+    /// `offsets` must start at 0 and be non-decreasing
+    NonMonotoneOffsets { index: usize },
+    /// an adjacency entry names a vertex ≥ n_vertices
+    AdjOutOfRange {
+        index: usize,
+        value: u32,
+        n_vertices: usize,
+    },
+    /// `offsets[n]` disagrees with the header's undirected edge count
+    /// (a valid CSR stores each edge in both endpoint lists)
+    EdgeCountMismatch { header: u64, adjacency: u64 },
+}
+
+impl fmt::Display for GraphLoadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphLoadError::BadMagic => write!(f, "not a HARPSG01 binary graph"),
+            GraphLoadError::Io(m) => write!(f, "io error: {m}"),
+            GraphLoadError::Truncated { expected, actual } => write!(
+                f,
+                "corrupt payload: expected {expected} bytes, file has {actual}"
+            ),
+            GraphLoadError::SizeOverflow => {
+                write!(f, "corrupt header: declared sizes overflow u64")
+            }
+            GraphLoadError::NonMonotoneOffsets { index } => {
+                write!(f, "corrupt CSR: offsets[{index}] breaks monotonicity")
+            }
+            GraphLoadError::AdjOutOfRange {
+                index,
+                value,
+                n_vertices,
+            } => write!(
+                f,
+                "corrupt CSR: adj[{index}] = {value} out of range for {n_vertices} vertices"
+            ),
+            GraphLoadError::EdgeCountMismatch { header, adjacency } => write!(
+                f,
+                "corrupt CSR: header claims {header} edges but the adjacency \
+                 holds {adjacency} entries (expected 2x)"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for GraphLoadError {}
 
 /// Load an edge-list text file: one `u v` pair per line; lines starting
 /// with `#` or `%` are comments; blank lines ignored.
@@ -54,30 +117,87 @@ pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
     Ok(())
 }
 
-pub fn load_binary(path: &Path) -> Result<Graph> {
-    let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
+/// Load a `HARPSG01` binary graph, validating every structural invariant
+/// before the CSR is handed to the engine: magic, header-vs-file length
+/// (truncation *and* trailing garbage), monotone offsets starting at 0,
+/// adjacency entries < n_vertices, and the 2·n_edges adjacency total.
+/// Corruption reports a typed [`GraphLoadError`] instead of a later panic.
+pub fn load_binary(path: &Path) -> Result<Graph, GraphLoadError> {
+    let io_err = |e: std::io::Error| GraphLoadError::Io(format!("{}: {e}", path.display()));
+    let f = std::fs::File::open(path).map_err(io_err)?;
+    let file_len = f.metadata().map_err(io_err)?.len();
     let mut r = BufReader::new(f);
     let mut magic = [0u8; 8];
-    r.read_exact(&mut magic)?;
+    r.read_exact(&mut magic).map_err(io_err)?;
     if &magic != BIN_MAGIC {
-        bail!("{}: not a HARPSG01 binary graph", path.display());
+        return Err(GraphLoadError::BadMagic);
     }
     let mut u64buf = [0u8; 8];
-    r.read_exact(&mut u64buf)?;
-    let n = u64::from_le_bytes(u64buf) as usize;
-    r.read_exact(&mut u64buf)?;
+    r.read_exact(&mut u64buf).map_err(io_err)?;
+    let n64 = u64::from_le_bytes(u64buf);
+    r.read_exact(&mut u64buf).map_err(io_err)?;
     let n_edges = u64::from_le_bytes(u64buf);
-    let mut offsets = Vec::with_capacity(n + 1);
-    for _ in 0..=n {
-        r.read_exact(&mut u64buf)?;
-        offsets.push(u64::from_le_bytes(u64buf));
+
+    // validate the declared sizes against the real file length *before*
+    // allocating — a corrupt header must not drive a huge allocation
+    const HEADER_LEN: u64 = 8 + 8 + 8;
+    let offsets_bytes = n64
+        .checked_add(1)
+        .and_then(|c| c.checked_mul(8))
+        .ok_or(GraphLoadError::SizeOverflow)?;
+    let min_len = HEADER_LEN
+        .checked_add(offsets_bytes)
+        .ok_or(GraphLoadError::SizeOverflow)?;
+    if file_len < min_len {
+        return Err(GraphLoadError::Truncated {
+            expected: min_len,
+            actual: file_len,
+        });
     }
-    let total = offsets[n] as usize;
+    let n = n64 as usize;
+
+    let mut offsets = Vec::with_capacity(n + 1);
+    for i in 0..=n {
+        r.read_exact(&mut u64buf).map_err(io_err)?;
+        let o = u64::from_le_bytes(u64buf);
+        let floor = offsets.last().copied().unwrap_or(0);
+        if (i == 0 && o != 0) || o < floor {
+            return Err(GraphLoadError::NonMonotoneOffsets { index: i });
+        }
+        offsets.push(o);
+    }
+    let total = offsets[n];
+    let expected_len = min_len
+        .checked_add(total.checked_mul(4).ok_or(GraphLoadError::SizeOverflow)?)
+        .ok_or(GraphLoadError::SizeOverflow)?;
+    if file_len != expected_len {
+        return Err(GraphLoadError::Truncated {
+            expected: expected_len,
+            actual: file_len,
+        });
+    }
+    // each undirected edge sits in both endpoints' neighbor lists
+    if n_edges.checked_mul(2) != Some(total) {
+        return Err(GraphLoadError::EdgeCountMismatch {
+            header: n_edges,
+            adjacency: total,
+        });
+    }
+
+    let total = total as usize;
     let mut adj = Vec::with_capacity(total);
     let mut u32buf = [0u8; 4];
-    for _ in 0..total {
-        r.read_exact(&mut u32buf)?;
-        adj.push(u32::from_le_bytes(u32buf));
+    for i in 0..total {
+        r.read_exact(&mut u32buf).map_err(io_err)?;
+        let v = u32::from_le_bytes(u32buf);
+        if v as usize >= n {
+            return Err(GraphLoadError::AdjOutOfRange {
+                index: i,
+                value: v,
+                n_vertices: n,
+            });
+        }
+        adj.push(v);
     }
     Ok(Graph {
         offsets,
@@ -89,7 +209,7 @@ pub fn load_binary(path: &Path) -> Result<Graph> {
 /// Load `path` if it exists, else run `gen`, cache to `path`, and return.
 pub fn load_or_generate(path: &Path, gen: impl FnOnce() -> Graph) -> Result<Graph> {
     if path.exists() {
-        load_binary(path)
+        load_binary(path).with_context(|| format!("load cached graph {}", path.display()))
     } else {
         let g = gen();
         if let Some(dir) = path.parent() {
@@ -142,7 +262,109 @@ mod tests {
     fn binary_rejects_garbage() {
         let p = tmp("garbage.bin");
         std::fs::write(&p, b"NOTAGRPH........").unwrap();
-        assert!(load_binary(&p).is_err());
+        assert!(matches!(load_binary(&p), Err(GraphLoadError::BadMagic)));
+    }
+
+    /// Satellite: corrupt-file fixtures — every structural invariant of
+    /// the binary CSR fails with its typed diagnosis, never a panic.
+    #[test]
+    fn binary_corruption_is_typed() {
+        let g = graph_from_edges(5, &[(0, 1), (1, 2), (3, 4), (0, 4)]);
+        let p = tmp("corrupt_base.bin");
+        save_binary(&g, &p).unwrap();
+        let good = std::fs::read(&p).unwrap();
+        // layout: magic 8 | n 8 | n_edges 8 | offsets (n+1)·8 | adj ·4
+        let off0 = 24usize;
+        let adj0 = off0 + (g.n_vertices() + 1) * 8;
+        let t = tmp("corrupt_mut.bin");
+
+        // truncated payload: the last adjacency entry is missing
+        std::fs::write(&t, &good[..good.len() - 4]).unwrap();
+        match load_binary(&t) {
+            Err(GraphLoadError::Truncated { expected, actual }) => {
+                assert_eq!(expected as usize, good.len());
+                assert_eq!(actual as usize, good.len() - 4);
+            }
+            other => panic!("want Truncated, got {other:?}"),
+        }
+
+        // trailing garbage is corruption too, not silently ignored
+        let mut longer = good.clone();
+        longer.extend_from_slice(&[0u8; 3]);
+        std::fs::write(&t, &longer).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::Truncated { .. })
+        ));
+
+        // offsets must start at 0…
+        let mut bad = good.clone();
+        bad[off0..off0 + 8].copy_from_slice(&1u64.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::NonMonotoneOffsets { index: 0 })
+        ));
+
+        // …and never decrease: a spiked offsets[1] trips the next index
+        let mut bad = good.clone();
+        bad[off0 + 8..off0 + 16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::NonMonotoneOffsets { index: 2 })
+        ));
+
+        // adjacency entries must name real vertices
+        let mut bad = good.clone();
+        bad[adj0..adj0 + 4].copy_from_slice(&99u32.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        match load_binary(&t) {
+            Err(GraphLoadError::AdjOutOfRange {
+                index,
+                value,
+                n_vertices,
+            }) => {
+                assert_eq!(index, 0);
+                assert_eq!(value, 99);
+                assert_eq!(n_vertices, 5);
+            }
+            other => panic!("want AdjOutOfRange, got {other:?}"),
+        }
+
+        // header edge count must match the adjacency total (2 per edge)
+        let mut bad = good.clone();
+        bad[16..24].copy_from_slice(&5u64.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::EdgeCountMismatch {
+                header: 5,
+                adjacency: 8
+            })
+        ));
+
+        // a header-declared size too large for the file cannot allocate:
+        // an overflowing vertex count is its own typed diagnosis…
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(load_binary(&t), Err(GraphLoadError::SizeOverflow)));
+        // …and a merely-huge one reports the real expected length
+        let mut bad = good.clone();
+        bad[8..16].copy_from_slice(&(1u64 << 40).to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        match load_binary(&t) {
+            Err(GraphLoadError::Truncated { expected, actual }) => {
+                assert_eq!(expected, 24 + ((1u64 << 40) + 1) * 8);
+                assert_eq!(actual as usize, good.len());
+            }
+            other => panic!("want Truncated, got {other:?}"),
+        }
+
+        // the untouched baseline still loads
+        let ok = load_binary(&p).unwrap();
+        assert_eq!(ok.adj, g.adj);
     }
 
     #[test]

@@ -9,6 +9,7 @@ pub mod rmat;
 pub mod stats;
 
 pub use csr::{graph_from_edges, Graph, GraphBuilder};
+pub use loader::GraphLoadError;
 pub use partition::{Partition, RequestLists};
 pub use rmat::RmatParams;
 pub use stats::{degree_stats, Dataset, DegreeStats, DEFAULT_SCALE};

@@ -13,6 +13,7 @@
 //! Examples:
 //!   harpsg count --template u10-2 --dataset R500K3 --scale 2000 \
 //!       --ranks 8 --workers 4 --mode adaptive-lb --iters 2 --json
+//!   harpsg count --template u12-1 --dataset R500K3 --ranks 8 --adaptive
 //!   harpsg count --template u7-2 --dataset MI --exchange sequential
 //!   harpsg run --config configs/quickstart.toml
 
@@ -180,7 +181,27 @@ fn print_human(session: &Session, r: &JobReport) {
         "template: {} (k={}, intensity {:.1}) — {} mode on {} ranks ({} engine)",
         r.template, r.k, r.complexity.intensity, r.mode, r.n_ranks, r.engine
     );
-    if let Some(d) = r.comm_decisions.first() {
+    if r.adaptive {
+        // the sweep decides per subtemplate: show each combine's shape
+        // and its predicted vs measured overlap
+        println!("exchange (adaptive per subtemplate):");
+        for d in &r.comm_decisions {
+            let meas = match d.measured_rho {
+                Some(m) => format!("{m:.2}"),
+                None => "-".to_string(),
+            };
+            println!(
+                "  sub {:>2}: {:<10} g={} ({} step{})  rho pred {:.2} / meas {}",
+                d.sub,
+                d.mode_name(),
+                d.g,
+                d.n_steps,
+                if d.n_steps == 1 { "" } else { "s" },
+                d.predicted_rho,
+                meas
+            );
+        }
+    } else if let Some(d) = r.comm_decisions.first() {
         println!(
             "exchange: {} in {} step(s) per subtemplate",
             d.mode_name(),
@@ -239,7 +260,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--exchange",
             "--mem-limit-mb",
         ],
-        &["--json", "--progress"],
+        &["--json", "--progress", "--adaptive"],
     )?;
     let template = require(&flags, "--template")?.to_string();
     let dataset = require(&flags, "--dataset")?.to_string();
@@ -277,6 +298,8 @@ fn cmd_count(args: &[String]) -> Result<()> {
             ))
         })?;
     }
+    // mode/adaptive consistency is validated by the CountJob builder
+    cfg.adaptive_group = flags.contains_key("--adaptive");
     let t = load_template(&template)?;
     let g = load_dataset(&dataset, scale)?;
     execute(

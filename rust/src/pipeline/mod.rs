@@ -168,6 +168,10 @@ pub struct MeasuredPipeline {
     /// per exchange step: rank-averaged compute/wait seconds, summed over
     /// all combines
     pub steps: Vec<MeasuredStep>,
+    /// combines that actually ran each step — per-sub schedules differ
+    /// under the adaptive sweep, so step `w`'s seconds must be normalized
+    /// by the combines that had a step `w`, not the total
+    pub step_counts: Vec<u64>,
     /// total rank-averaged fold seconds across the run's exchanges
     pub comp_s: f64,
     /// total rank-averaged blocked-wait seconds (the run's real exposed
@@ -199,9 +203,11 @@ impl MeasuredPipeline {
     pub fn add_step(&mut self, w: usize, comp_s: f64, wait_s: f64) {
         if self.steps.len() <= w {
             self.steps.resize(w + 1, MeasuredStep::default());
+            self.step_counts.resize(w + 1, 0);
         }
         self.steps[w].comp_s += comp_s;
         self.steps[w].wait_s += wait_s;
+        self.step_counts[w] += 1;
         self.comp_s += comp_s;
         self.exposed_wait_s += wait_s;
     }
@@ -221,14 +227,18 @@ impl MeasuredPipeline {
         self.n_combines += 1;
     }
 
-    /// Per-combine step averages (rank-averaged seconds per step).
+    /// Per-combine step averages (rank-averaged seconds per step), each
+    /// step normalized by the combines that actually ran it.
     pub fn mean_steps(&self) -> Vec<MeasuredStep> {
-        let n = self.n_combines.max(1) as f64;
         self.steps
             .iter()
-            .map(|s| MeasuredStep {
-                comp_s: s.comp_s / n,
-                wait_s: s.wait_s / n,
+            .zip(&self.step_counts)
+            .map(|(s, &n)| {
+                let n = n.max(1) as f64;
+                MeasuredStep {
+                    comp_s: s.comp_s / n,
+                    wait_s: s.wait_s / n,
+                }
             })
             .collect()
     }
@@ -366,6 +376,25 @@ mod tests {
         // rho: step0 excluded, step1 = 1.0, step2 = 0.5
         assert!((m.mean_rho() - 0.75).abs() < 1e-12);
         assert!((m.steps[0].rho() - 0.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_steps_normalizes_by_per_step_combine_count() {
+        // heterogeneous schedules (the adaptive sweep): a 1-step
+        // all-to-all combine next to a 3-step ring — later steps must be
+        // averaged over the combines that actually ran them
+        let mut m = MeasuredPipeline::new(2);
+        m.add_step(0, 1.0, 1.0);
+        m.finish_combine();
+        m.add_step(0, 3.0, 1.0);
+        m.add_step(1, 2.0, 0.0);
+        m.add_step(2, 4.0, 4.0);
+        m.finish_combine();
+        assert_eq!(m.step_counts, vec![2, 1, 1]);
+        let means = m.mean_steps();
+        assert!((means[0].comp_s - 2.0).abs() < 1e-12); // (1+3)/2
+        assert!((means[1].comp_s - 2.0).abs() < 1e-12); // 2/1, not 2/2
+        assert!((means[2].wait_s - 4.0).abs() < 1e-12); // 4/1
     }
 
     #[test]
