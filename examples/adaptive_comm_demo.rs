@@ -51,6 +51,7 @@ fn main() {
             active_size: 4,
             remote_rows_per_step: rows,
             n_ranks: 10,
+            wire_row_bytes: None,
         };
         let (mode, pred) = pol.choose_group(&tc, &shape, &binom);
         println!(

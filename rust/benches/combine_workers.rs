@@ -8,7 +8,7 @@
 //! per-case budget).
 
 use harpsg::colorcount::parallel::{combine_batches, PairBatch};
-use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable};
+use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable, RowsRef};
 use harpsg::combin::{Binomial, SplitTable};
 use harpsg::metrics::bench;
 
@@ -51,7 +51,7 @@ fn bench_shape(label: &str, k: usize, a: usize, a1: usize, n: usize) {
     let mut scratch = CombineScratch::new(n, c2);
     let t_serial = bench(&format!("{label}/serial"), || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
         contract_touched(&mut out, &passive, &split, &mut scratch);
     });
     println!("  -> {:.2} ns/pair-unit\n", t_serial * 1e9 / units);
@@ -64,9 +64,9 @@ fn bench_shape(label: &str, k: usize, a: usize, a1: usize, n: usize) {
                 || {
                     let batch = [PairBatch {
                         pairs: &pairs,
-                        rows: &active,
+                        rows: RowsRef::Dense(&active),
                     }];
-                    combine_batches(&mut out, &passive, &split, &batch, mts, workers)
+                    combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, mts, workers)
                 },
             );
             println!(

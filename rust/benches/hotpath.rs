@@ -3,7 +3,7 @@
 //! kernels the end-to-end figures spend >80% of their compute in, and the
 //! primary target of EXPERIMENTS.md §Perf.
 
-use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable};
+use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable, RowsRef};
 use harpsg::combin::{Binomial, SplitTable};
 use harpsg::metrics::bench;
 
@@ -34,12 +34,12 @@ fn bench_combine(label: &str, k: usize, a: usize, a1: usize, n: usize, deg: usiz
 
     let t_agg = bench(&format!("{label}/aggregate n={n} deg={deg}"), || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
         scratch.finish();
     });
     let t_full = bench(&format!("{label}/agg+contract"), || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
         contract_touched(&mut out, &passive, &split, &mut scratch);
     });
     println!(
@@ -68,12 +68,12 @@ fn bench_xla_vs_native() {
     let xc = harpsg::runtime::XlaCombine::new(rt);
     bench("xla-combine k5_a3 n=512 (PJRT)", || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
         xc.contract_touched(&mut out, &passive, &split, &mut scratch);
     });
     bench("native-combine k5_a3 n=512", || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
         contract_touched(&mut out, &passive, &split, &mut scratch);
     });
 }

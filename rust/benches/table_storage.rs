@@ -1,0 +1,95 @@
+//! Table-storage bench: combine time and exchanged bytes across the
+//! dense / sparse representations at several table densities — the
+//! trade-off behind the `Auto` policy's threshold. Sparse aggregation
+//! skips zero entries (flops ∝ density) and sparse packets shrink wire
+//! bytes by ~density at 8 bytes/entry vs 4 dense; both flip against
+//! sparse as density approaches the break-even near 1/2.
+//!
+//! Run: `cargo bench --bench table_storage` (HARPSG_BENCH_MS tunes the
+//! per-case budget).
+
+use harpsg::colorcount::parallel::{combine_batches, PairBatch};
+use harpsg::colorcount::{
+    encode_rows, CountTable, RowsRef, SparseTable, StorageMode, StoragePolicy, TableStorage,
+};
+use harpsg::combin::{Binomial, SplitTable};
+use harpsg::metrics::bench;
+
+/// A table with a deterministic ~`density` fill.
+fn mk_table(n: usize, n_sets: usize, density: f64) -> CountTable {
+    let mut t = CountTable::zeros(n, n_sets);
+    let period = (1.0 / density.max(1e-6)).round().max(1.0) as usize;
+    for (i, x) in t.data.iter_mut().enumerate() {
+        if i % period == 0 {
+            *x = ((i * 7) % 5) as f32 + 0.5;
+        }
+    }
+    t
+}
+
+fn ring_pairs(n: usize, deg: usize) -> Vec<(u32, u32)> {
+    (0..n as u32)
+        .flat_map(|v| (1..=deg as u32).map(move |d| (v, (v + d) % n as u32)))
+        .collect()
+}
+
+fn bench_density(k: usize, a: usize, a1: usize, n: usize, density: f64) {
+    let binom = Binomial::new();
+    let split = SplitTable::new(k, a, a1, &binom);
+    let c1 = binom.c(k, a1) as usize;
+    let c2 = binom.c(k, a - a1) as usize;
+    let passive = mk_table(n, c1, 0.9);
+    let active = mk_table(n, c2, density);
+    let sp_active = SparseTable::from_dense(&active);
+    let pairs = ring_pairs(n, 12);
+    let units = pairs.len() as f64 * c2 as f64;
+
+    let label = format!("k{k} a{a} n={n} density={density:.2}");
+    let mut out = CountTable::zeros(n, split.n_sets);
+    let t_dense = bench(&format!("{label}/combine dense"), || {
+        let batch = [PairBatch {
+            pairs: &pairs,
+            rows: RowsRef::Dense(&active),
+        }];
+        combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 0, 1)
+    });
+    let t_sparse = bench(&format!("{label}/combine sparse"), || {
+        let batch = [PairBatch {
+            pairs: &pairs,
+            rows: RowsRef::Sparse(&sp_active),
+        }];
+        combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 0, 1)
+    });
+    println!(
+        "  -> dense {:.2} ns/unit, sparse {:.2} ns/unit ({:.2}x)",
+        t_dense * 1e9 / units,
+        t_sparse * 1e9 / units,
+        t_dense / t_sparse
+    );
+
+    // exchanged bytes: encode every row once per representation (the
+    // exchange ships request-list subsets; whole-table is the bound)
+    let dense_store = TableStorage::Dense(active.clone());
+    let sparse_store = TableStorage::Sparse(sp_active.clone());
+    let dense_wire = encode_rows(&dense_store, 0..n).wire_bytes();
+    let sparse_wire = encode_rows(&sparse_store, 0..n).wire_bytes();
+    let auto = StoragePolicy::of(StorageMode::Auto);
+    println!(
+        "  -> wire: dense {dense_wire} B, sparse {sparse_wire} B ({:.2}x); auto picks {}\n",
+        dense_wire as f64 / sparse_wire as f64,
+        if auto.wants_sparse(n, c2, sp_active.nnz()) {
+            "sparse"
+        } else {
+            "dense"
+        }
+    );
+}
+
+fn main() {
+    println!("== table storage: dense vs sparse across densities ==");
+    for density in [0.05, 0.15, 0.35, 0.75] {
+        bench_density(10, 5, 1, 2048, density);
+    }
+    println!("== leaf shape (one-hot rows, k=12) ==");
+    bench_density(12, 6, 2, 1024, 1.0 / 12.0);
+}

@@ -3,6 +3,7 @@
 //! rule up front so the coordinator never has to panic on a bad config.
 
 use super::error::HarpsgError;
+use crate::colorcount::StorageMode;
 use crate::comm::{AdaptivePolicy, HockneyParams};
 use crate::coordinator::{validate_group_size, EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use crate::template::{builtin, Template};
@@ -119,6 +120,16 @@ impl CountJobBuilder {
     /// wall-clock change.
     pub fn exchange(mut self, e: ExchangeExec) -> Self {
         self.cfg.exchange = e;
+        self
+    }
+
+    /// Count-table storage (the CLI's `--table-storage`): `Dense` (the
+    /// historical layout, default), `Sparse`, or `Auto` — pick per table
+    /// from the measured density, storing and shipping sparse where it
+    /// pays. Estimates are bit-identical for every choice; the report's
+    /// `storage` section and memory peaks show what changed.
+    pub fn table_storage(mut self, s: StorageMode) -> Self {
+        self.cfg.table_storage = s;
         self
     }
 
@@ -309,6 +320,25 @@ mod tests {
             .is_ok());
         // untouched defaults pass regardless of mode
         assert!(base().mode(ModeSelect::Naive).build().is_ok());
+    }
+
+    #[test]
+    fn table_storage_knob() {
+        assert_eq!(
+            base().build().unwrap().config().table_storage,
+            StorageMode::Dense,
+            "dense layout stays the default"
+        );
+        for mode in [StorageMode::Dense, StorageMode::Sparse, StorageMode::Auto] {
+            let job = base().table_storage(mode).build().unwrap();
+            assert_eq!(job.config().table_storage, mode);
+        }
+        // orthogonal to every other knob, including the adaptive sweep
+        assert!(base()
+            .table_storage(StorageMode::Auto)
+            .adaptive(true)
+            .build()
+            .is_ok());
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! `util::Json` writer) and CSV (via `metrics::Series`).
 
 use crate::colorcount::ExecStats;
-use crate::coordinator::{CommDecision, ModelTime, RunResult, ThreadStats};
+use crate::coordinator::{CommDecision, ModelTime, RunResult, StorageDecision, ThreadStats};
 use crate::graph::Graph;
 use crate::metrics::Series;
 use crate::pipeline::MeasuredPipeline;
@@ -31,6 +31,8 @@ pub struct JobReport {
     pub engine: String,
     /// exchange executor name ("threaded" | "sequential")
     pub exchange: String,
+    /// count-table storage mode ("dense" | "sparse" | "auto")
+    pub table_storage: String,
     /// model-driven per-subtemplate group selection was enabled
     pub adaptive: bool,
     pub n_ranks: usize,
@@ -58,7 +60,13 @@ pub struct JobReport {
     /// (real per-step overlap ρ, exposed wait, per-rank receive-buffer
     /// peaks); `None` when the sequential executor ran
     pub measured: Option<MeasuredPipeline>,
+    /// per-subtemplate storage outcome (final iteration): measured
+    /// density, chosen representation, resident vs dense-layout bytes
+    pub storage: Vec<StorageDecision>,
     pub peak_mem_per_rank: Vec<u64>,
+    /// per-rank peaks under the unconditional dense layout (the baseline
+    /// the `bytes_saved` delta is measured against)
+    pub peak_mem_dense_per_rank: Vec<u64>,
     /// measured seconds per compute unit
     pub flop_time: f64,
     /// real single-core wall-clock of the run, seconds
@@ -88,6 +96,7 @@ impl JobReport {
             mode: job.cfg.mode.name().to_string(),
             engine: job.cfg.engine.name().to_string(),
             exchange: job.cfg.exchange.name().to_string(),
+            table_storage: job.cfg.table_storage.name().to_string(),
             adaptive: job.cfg.adaptive_group,
             n_ranks: job.cfg.n_ranks,
             n_threads: job.cfg.n_threads,
@@ -103,7 +112,9 @@ impl JobReport {
             threads: r.threads,
             workers: r.workers,
             measured: r.measured,
+            storage: r.storage,
             peak_mem_per_rank: r.peak_mem_per_rank,
+            peak_mem_dense_per_rank: r.peak_mem_dense_per_rank,
             flop_time: r.flop_time,
             real_seconds: r.real_seconds,
             oom: r.oom,
@@ -115,6 +126,20 @@ impl JobReport {
     /// Largest per-rank peak, bytes (the Fig-12 quantity).
     pub fn peak_mem(&self) -> u64 {
         self.peak_mem_per_rank.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest per-rank peak under the dense-baseline ledger.
+    pub fn peak_mem_dense(&self) -> u64 {
+        self.peak_mem_dense_per_rank
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak-memory savings against the dense layout (0 in dense mode).
+    pub fn peak_bytes_saved(&self) -> u64 {
+        self.peak_mem_dense().saturating_sub(self.peak_mem())
     }
 
     /// The full report as a JSON value.
@@ -147,6 +172,7 @@ impl JobReport {
                     ("mode".into(), Json::Str(self.mode.clone())),
                     ("engine".into(), Json::Str(self.engine.clone())),
                     ("exchange".into(), Json::Str(self.exchange.clone())),
+                    ("table_storage".into(), Json::Str(self.table_storage.clone())),
                     ("adaptive".into(), Json::Bool(self.adaptive)),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),
@@ -273,6 +299,33 @@ impl JobReport {
                 ),
             ),
             (
+                // per-subtemplate storage outcome (final iteration): the
+                // measured density probe, the representation the policy
+                // picked per rank, and the resident-vs-dense byte delta
+                "storage".into(),
+                Json::Arr(
+                    self.storage
+                        .iter()
+                        .map(|d| {
+                            Json::Obj(vec![
+                                ("sub".into(), Json::Num(d.sub as f64)),
+                                ("density".into(), Json::Num(d.density)),
+                                (
+                                    "storage".into(),
+                                    Json::Str(d.storage_name().to_string()),
+                                ),
+                                ("dense_bytes".into(), Json::Num(d.dense_bytes as f64)),
+                                (
+                                    "resident_bytes".into(),
+                                    Json::Num(d.resident_bytes as f64),
+                                ),
+                                ("bytes_saved".into(), Json::Num(d.bytes_saved() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
                 "threads".into(),
                 Json::Obj(vec![
                     (
@@ -334,6 +387,17 @@ impl JobReport {
                         ),
                     ),
                     ("peak".into(), Json::Num(self.peak_mem() as f64)),
+                    // what the unconditional dense layout would have
+                    // peaked at (== peak in dense mode), and the delta
+                    // the chosen storage saved
+                    (
+                        "peak_dense_baseline".into(),
+                        Json::Num(self.peak_mem_dense() as f64),
+                    ),
+                    (
+                        "bytes_saved".into(),
+                        Json::Num(self.peak_bytes_saved() as f64),
+                    ),
                     ("oom".into(), Json::Bool(self.oom)),
                 ]),
             ),

@@ -18,6 +18,7 @@
 //! to interleave per-step computation with communication (Alg 3).
 
 use super::parallel::{combine_batches, ExecStats, PairBatch};
+use super::storage::RowsRef;
 use super::table::{init_leaf_table, Coloring, Count, CountTable};
 use crate::combin::{Binomial, SplitTable};
 use crate::graph::Graph;
@@ -148,14 +149,16 @@ impl CombineScratch {
 /// `agg[v,·] += active_row(u)` for every (v, u) adjacency pair in `pairs`.
 ///
 /// `pairs` yields `(local_row_of_v, row_index_of_u_in_rows)`; `rows` is the
-/// active-child table slice the u-rows live in (local table or a received
-/// step buffer). Returns the number of pairs processed.
+/// active-child row source the u-rows live in (a local table or a received
+/// step buffer, dense or sparse — see `super::storage`; sparse sources add
+/// only their stored entries, which is bit-identical). Returns the number
+/// of pairs processed.
 pub fn aggregate_batch(
     scratch: &mut CombineScratch,
-    rows: &CountTable,
+    rows: RowsRef<'_>,
     pairs: impl Iterator<Item = (u32, u32)>,
 ) -> u64 {
-    let n_sets = rows.n_sets;
+    let n_sets = rows.n_sets();
     debug_assert_eq!(n_sets, scratch.n_agg_sets);
     let mut n = 0u64;
     for (v, u) in pairs {
@@ -165,20 +168,7 @@ pub fn aggregate_batch(
             scratch.touched.push(v as u32);
             scratch.agg_row_mut(v).fill(0.0);
         }
-        // SAFETY: callers hand rows/pairs built together (local tables or
-        // request-list buffers); debug builds still bounds-check via the
-        // asserts below.
-        debug_assert!((u as usize + 1) * n_sets <= rows.data.len());
-        debug_assert!((v + 1) * n_sets <= scratch.agg.len());
-        unsafe {
-            let urow = rows.data.get_unchecked(u as usize * n_sets..(u as usize + 1) * n_sets);
-            let arow = scratch
-                .agg
-                .get_unchecked_mut(v * n_sets..(v + 1) * n_sets);
-            for (a, &x) in arow.iter_mut().zip(urow) {
-                *a += x;
-            }
-        }
+        rows.add_row_into(u as usize, scratch.agg_row_mut(v));
         n += 1;
     }
     n
@@ -351,7 +341,7 @@ impl Engine {
         self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
             scratch.begin(active.n_sets);
             let pairs = (0..n as u32).flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)));
-            aggregate_batch(&mut scratch, active, pairs);
+            aggregate_batch(&mut scratch, RowsRef::Dense(active), pairs);
             contract_touched(out, passive, split, &mut scratch);
         })
     }
@@ -383,9 +373,16 @@ impl Engine {
         let out = self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
             let batch = [PairBatch {
                 pairs: &pairs,
-                rows: active,
+                rows: RowsRef::Dense(active),
             }];
-            let st = combine_batches(out, passive, split, &batch, max_task_size, n_workers);
+            let st = combine_batches(
+                out,
+                RowsRef::Dense(passive),
+                split,
+                &batch,
+                max_task_size,
+                n_workers,
+            );
             stats.merge(&st);
         });
         (out, stats)
@@ -479,7 +476,7 @@ mod tests {
             let mut out = CountTable::zeros(n, split.n_sets);
             let mut scratch = CombineScratch::new(n, c2);
             scratch.begin(c2);
-            aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+            aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
             contract_touched(&mut out, &passive, &split, &mut scratch);
             // naive path
             let mut naive = CountTable::zeros(n, split.n_sets);
@@ -554,7 +551,7 @@ mod tests {
             let mut scratch = CombineScratch::new(n, c2);
             for ch in chunks {
                 scratch.begin(c2);
-                aggregate_batch(&mut scratch, &active, ch.iter().copied());
+                aggregate_batch(&mut scratch, RowsRef::Dense(&active), ch.iter().copied());
                 contract_touched(&mut out, &passive, &split, &mut scratch);
             }
             out

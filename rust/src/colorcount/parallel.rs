@@ -33,6 +33,7 @@
 //! vertices are exact, hence bit-identical to serial too.
 
 use super::engine::contract_row;
+use super::storage::RowsRef;
 use super::table::{Count, CountTable};
 use crate::combin::SplitTable;
 use crate::sched::make_tasks;
@@ -41,11 +42,14 @@ use std::time::Instant;
 
 /// One neighbor-pair batch of a combine: `pairs` are `(v_row, u_row)`
 /// entries with each vertex's pairs stored contiguously (CSR order), and
-/// `rows` is the active-child count table the `u_row` indices point into
-/// (a local table, or one received step buffer of the exchange).
+/// `rows` is the active-child row source the `u_row` indices point into
+/// (a local table, or one received step buffer of the exchange — dense or
+/// sparse, see `super::storage`; sparse iteration skips a row's zero
+/// entries, which is bit-identical because every aggregation slot sums
+/// independently).
 pub struct PairBatch<'a> {
     pub pairs: &'a [(u32, u32)],
-    pub rows: &'a CountTable,
+    pub rows: RowsRef<'a>,
 }
 
 /// Measured execution record of one (or, after [`ExecStats::merge`],
@@ -309,10 +313,7 @@ fn aggregate_phase(
             let slot =
                 unsafe { std::slice::from_raw_parts_mut(ptr.0.add(i * n_agg), n_agg) };
             for &(_, u) in &b.pairs[t.off..t.off + t.len as usize] {
-                let urow = b.rows.row(u as usize);
-                for (a, &x) in slot.iter_mut().zip(urow) {
-                    *a += x;
-                }
+                b.rows.add_row_into(u as usize, slot);
             }
             my_tasks += 1;
             my_pairs += t.len as u64;
@@ -323,26 +324,31 @@ fn aggregate_phase(
 }
 
 /// Phase 2: claim per-vertex groups, fold each group's task partials in
-/// canonical order, and contract the merged row into `out`. Returns
-/// per-worker (busy seconds, contraction units).
+/// canonical order, and contract the merged row into `out`. A sparse
+/// passive table is materialized one row at a time into a per-worker
+/// scratch buffer — the materialized row equals the dense original
+/// exactly, so the contraction arithmetic is representation-independent.
+/// Returns per-worker (busy seconds, contraction units).
 #[allow(clippy::too_many_arguments)]
 fn contract_phase(
     tasks: &[ExecTask],
     groups: &[(usize, usize)],
     partials: &[Count],
     out: &mut CountTable,
-    passive: &CountTable,
+    passive: RowsRef<'_>,
     split: &SplitTable,
     n_agg: usize,
     n_workers: usize,
 ) -> Vec<(f64, u64)> {
     let next = AtomicUsize::new(0);
     let n_sets = out.n_sets;
+    let n_passive = passive.n_sets();
     let optr = SendPtr(out.data.as_mut_ptr());
     let worker = |_w: usize| -> (f64, u64) {
         let t0 = Instant::now();
         let mut units = 0u64;
         let mut fold: Vec<Count> = vec![0.0; n_agg];
+        let mut prow_buf: Vec<Count> = vec![0.0; n_passive];
         loop {
             let gi = next.fetch_add(1, Ordering::Relaxed);
             if gi >= groups.len() {
@@ -359,7 +365,7 @@ fn contract_phase(
                 fold_group(partials, lo, hi, n_agg, &mut fold);
                 &fold
             };
-            let prow = passive.row(v);
+            let prow = passive.row_in(v, &mut prow_buf);
             // SAFETY: each group owns a distinct vertex `v`, claimed once
             // from the atomic counter, so output rows are written
             // disjointly; `v < out.n_rows` because `build_plan` asserted
@@ -379,7 +385,7 @@ fn contract_phase(
 /// execution record (vector fields have length `n_workers`).
 pub fn combine_batches(
     out: &mut CountTable,
-    passive: &CountTable,
+    passive: RowsRef<'_>,
     split: &SplitTable,
     batches: &[PairBatch<'_>],
     max_task_size: u32,
@@ -388,17 +394,18 @@ pub fn combine_batches(
     assert!(n_workers >= 1, "combine executor needs at least one worker");
     let mut stats = ExecStats::zeros(n_workers);
     let n_agg = match batches.first() {
-        Some(b) => b.rows.n_sets,
+        Some(b) => b.rows.n_sets(),
         None => return stats,
     };
     for b in batches {
         assert_eq!(
-            b.rows.n_sets, n_agg,
+            b.rows.n_sets(),
+            n_agg,
             "all batches of one combine must share the active-table width"
         );
     }
     debug_assert_eq!(out.n_sets, split.n_sets);
-    debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets));
+    debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets()));
     debug_assert!(split.idx2.iter().all(|&i| (i as usize) < n_agg));
     if batches.iter().all(|b| b.pairs.is_empty()) {
         return stats;
@@ -432,9 +439,9 @@ pub fn aggregate_merged(
     n_workers: usize,
 ) -> (CountTable, ExecStats) {
     assert!(n_workers >= 1, "combine executor needs at least one worker");
-    let n_agg = batches.first().map_or(0, |b| b.rows.n_sets);
+    let n_agg = batches.first().map_or(0, |b| b.rows.n_sets());
     for b in batches {
-        assert_eq!(b.rows.n_sets, n_agg);
+        assert_eq!(b.rows.n_sets(), n_agg);
     }
     let mut merged = CountTable::zeros(n_rows, n_agg);
     let mut stats = ExecStats::zeros(n_workers);
@@ -457,6 +464,7 @@ pub fn aggregate_merged(
 mod tests {
     use super::*;
     use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
+    use crate::colorcount::storage::SparseTable;
     use crate::combin::Binomial;
     use crate::util::prop;
 
@@ -494,21 +502,93 @@ mod tests {
         let mut serial = CountTable::zeros(n, split.n_sets);
         let mut scratch = CombineScratch::new(n, c2);
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
         contract_touched(&mut serial, &passive, &split, &mut scratch);
 
         for workers in [1, 2, 4, 7] {
             let mut par = CountTable::zeros(n, split.n_sets);
             let batch = [PairBatch {
                 pairs: &pairs,
-                rows: &active,
+                rows: RowsRef::Dense(&active),
             }];
-            let st = combine_batches(&mut par, &passive, &split, &batch, 0, workers);
+            let st = combine_batches(
+                &mut par,
+                RowsRef::Dense(&passive),
+                &split,
+                &batch,
+                0,
+                workers,
+            );
             assert_eq!(st.n_pairs, pairs.len() as u64);
             for (a, b) in par.data.iter().zip(&serial.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
             }
         }
+    }
+
+    /// Representation independence: sparse active and/or passive sources
+    /// reproduce the dense combine bit for bit, for any worker count —
+    /// the executor-level leg of the storage invariant.
+    #[test]
+    fn sparse_sources_are_bit_identical_to_dense() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(5, 3, 1, &binom);
+        let c1 = 5;
+        let c2 = binom.c(5, 2) as usize;
+        let n = 29;
+        let (mut passive, mut active) = mk_tables(n, c1, c2);
+        // punch holes so the sparse layouts genuinely skip entries
+        for (i, x) in passive.data.iter_mut().enumerate() {
+            if i % 3 != 0 {
+                *x = 0.0;
+            }
+        }
+        for (i, x) in active.data.iter_mut().enumerate() {
+            if i % 4 != 1 {
+                *x = 0.0;
+            }
+        }
+        let sp_passive = SparseTable::from_dense(&passive);
+        let sp_active = SparseTable::from_dense(&active);
+        let pairs = ring_pairs(n, 5);
+        let run = |p: RowsRef<'_>, a: RowsRef<'_>, workers: usize| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: a,
+            }];
+            combine_batches(&mut out, p, &split, &batch, 3, workers);
+            out
+        };
+        let reference = run(RowsRef::Dense(&passive), RowsRef::Dense(&active), 1);
+        for workers in [1, 4] {
+            for (p, a) in [
+                (RowsRef::Sparse(&sp_passive), RowsRef::Dense(&active)),
+                (RowsRef::Dense(&passive), RowsRef::Sparse(&sp_active)),
+                (RowsRef::Sparse(&sp_passive), RowsRef::Sparse(&sp_active)),
+            ] {
+                let out = run(p, a, workers);
+                for (x, y) in out.data.iter().zip(&reference.data) {
+                    assert_eq!(x.to_bits(), y.to_bits(), "workers={workers}");
+                }
+            }
+        }
+        // the serial aggregation kernel agrees too
+        let mut dense_scr = CombineScratch::new(n, c2);
+        dense_scr.begin(c2);
+        aggregate_batch(&mut dense_scr, RowsRef::Dense(&active), pairs.iter().copied());
+        let mut sparse_scr = CombineScratch::new(n, c2);
+        sparse_scr.begin(c2);
+        aggregate_batch(
+            &mut sparse_scr,
+            RowsRef::Sparse(&sp_active),
+            pairs.iter().copied(),
+        );
+        for v in 0..n {
+            assert_eq!(dense_scr.agg_row(v), sparse_scr.agg_row(v), "vertex {v}");
+        }
+        dense_scr.finish();
+        sparse_scr.finish();
     }
 
     #[test]
@@ -529,9 +609,16 @@ mod tests {
                 let mut out = CountTable::zeros(n, split.n_sets);
                 let batch = [PairBatch {
                     pairs: &pairs,
-                    rows: &active,
+                    rows: RowsRef::Dense(&active),
                 }];
-                combine_batches(&mut out, &passive, &split, &batch, mts, workers);
+                combine_batches(
+                    &mut out,
+                    RowsRef::Dense(&passive),
+                    &split,
+                    &batch,
+                    mts,
+                    workers,
+                );
                 out
             };
             let reference = run(1);
@@ -563,14 +650,21 @@ mod tests {
             let batches = [
                 PairBatch {
                     pairs: &pairs_a,
-                    rows: &active_a,
+                    rows: RowsRef::Dense(&active_a),
                 },
                 PairBatch {
                     pairs: &pairs_b,
-                    rows: &active_b,
+                    rows: RowsRef::Dense(&active_b),
                 },
             ];
-            let st = combine_batches(&mut out, &passive, &split, &batches, 2, workers);
+            let st = combine_batches(
+                &mut out,
+                RowsRef::Dense(&passive),
+                &split,
+                &batches,
+                2,
+                workers,
+            );
             (out, st)
         };
         let (reference, st1) = run(1);
@@ -653,14 +747,14 @@ mod tests {
         let (passive, active) = mk_tables(4, 4, c2);
         let mut out = CountTable::zeros(4, split.n_sets);
         // no batches at all
-        let st = combine_batches(&mut out, &passive, &split, &[], 0, 3);
+        let st = combine_batches(&mut out, RowsRef::Dense(&passive), &split, &[], 0, 3);
         assert_eq!(st.n_tasks, 0);
         // batches with no pairs
         let batch = [PairBatch {
             pairs: &[],
-            rows: &active,
+            rows: RowsRef::Dense(&active),
         }];
-        let st = combine_batches(&mut out, &passive, &split, &batch, 0, 3);
+        let st = combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 0, 3);
         assert_eq!(st.n_pairs, 0);
         assert!(out.data.iter().all(|&x| x == 0.0));
     }
@@ -676,9 +770,9 @@ mod tests {
         let mut out = CountTable::zeros(n, split.n_sets);
         let batch = [PairBatch {
             pairs: &pairs,
-            rows: &active,
+            rows: RowsRef::Dense(&active),
         }];
-        let st = combine_batches(&mut out, &passive, &split, &batch, 3, 4);
+        let st = combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 3, 4);
         assert_eq!(st.n_workers(), 4);
         assert_eq!(st.n_pairs, pairs.len() as u64);
         // 7 pairs per vertex at size-3 tasks → 3 tasks per vertex
@@ -714,7 +808,7 @@ mod tests {
             let workers = gen.usize_in(1, 9);
             let batch = [PairBatch {
                 pairs: &pairs,
-                rows: &rows,
+                rows: RowsRef::Dense(&rows),
             }];
             let (merged, st) = aggregate_merged(n, &batch, mts, workers);
             // coverage accounting: no task skipped or double-claimed
@@ -733,7 +827,7 @@ mod tests {
             // exactness vs the serial path
             let mut scratch = CombineScratch::new(n, n_agg);
             scratch.begin(n_agg);
-            aggregate_batch(&mut scratch, &rows, pairs.iter().copied());
+            aggregate_batch(&mut scratch, RowsRef::Dense(&rows), pairs.iter().copied());
             for (v, &d) in degs.iter().enumerate() {
                 let got = merged.row(v);
                 if d == 0 {

@@ -1,0 +1,752 @@
+//! Adaptive dense/sparse storage for count tables.
+//!
+//! Tree-template count tables are overwhelmingly sparse for small and
+//! mid-size subtemplates (a leaf table is one-hot: density exactly 1/k),
+//! yet the DP kernels want dense rows for their gathered contraction.
+//! This module is the seam between the two worlds:
+//!
+//! * [`SparseTable`] — a CSR-style `(set_rank, count)` per-row layout;
+//! * [`TableStorage`] — a count table *at rest*, in whichever
+//!   representation the [`StoragePolicy`] picked from the measured
+//!   density ([`CountTable::density`]);
+//! * [`RowsRef`] — a borrowed row source feeding the aggregation kernels
+//!   (`agg[v,·] += row(u)`), dense or sparse. Skipping a row's zero
+//!   entries is **bit-exact**: every aggregation slot accumulates
+//!   independently, and omitting `+= 0.0` terms from a non-negative
+//!   running sum cannot move a bit (counts are never `-0.0` or NaN);
+//! * [`RowsPayload`] + [`encode_rows`] — the one wire codec both exchange
+//!   executors share. A packet's byte size ([`RowsPayload::wire_bytes`])
+//!   *is* the resident size of the decoded table, so the fabric's
+//!   accounting, the `MemoryAccountant` ledger and the Hockney model all
+//!   speak the same byte counts.
+//!
+//! Representation never changes numerics: compressing and re-reading a
+//! table reproduces the dense rows exactly (round-trip property tests
+//! below), so estimates are bit-identical across every storage mode —
+//! the invariant `tests/storage.rs` enforces end to end.
+
+use super::table::{Count, CountTable};
+
+/// Auto-policy default: store a table sparse when fewer than this
+/// fraction of its entries are non-zero (and the sparse layout is
+/// actually smaller — an entry costs 8 bytes against 4 dense, so the
+/// break-even sits near density 1/2; 0.35 leaves margin for the per-row
+/// offset overhead and the scatter/gather cost of sparse iteration).
+pub const DEFAULT_SPARSE_THRESHOLD: f64 = 0.35;
+
+/// Bytes of one sparse entry on the wire and in memory: a `u32` set rank
+/// plus an `f32` count.
+pub const SPARSE_ENTRY_BYTES: u64 = 8;
+
+/// Bytes of one per-row offset (`u32`).
+pub const SPARSE_OFFSET_BYTES: u64 = 4;
+
+/// The `--table-storage` knob: which representation count tables use.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StorageMode {
+    /// today's unconditional dense `Vec<f32>` layout
+    Dense,
+    /// force the per-row `(set_rank, count)` layout everywhere it fits
+    Sparse,
+    /// pick per table from the measured density ([`CountTable::density`])
+    Auto,
+}
+
+impl StorageMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            StorageMode::Dense => "dense",
+            StorageMode::Sparse => "sparse",
+            StorageMode::Auto => "auto",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<StorageMode> {
+        match name {
+            "dense" => Some(StorageMode::Dense),
+            "sparse" => Some(StorageMode::Sparse),
+            "auto" => Some(StorageMode::Auto),
+            _ => None,
+        }
+    }
+}
+
+/// The per-table storage decision rule. One policy instance drives a
+/// whole run; decisions are taken per freshly built table from its
+/// measured non-zero count, so they are deterministic given the data.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StoragePolicy {
+    pub mode: StorageMode,
+    /// `Auto` density cutoff (see [`DEFAULT_SPARSE_THRESHOLD`])
+    pub sparse_threshold: f64,
+}
+
+impl StoragePolicy {
+    /// The historical behaviour: everything dense.
+    pub fn dense() -> StoragePolicy {
+        Self::of(StorageMode::Dense)
+    }
+
+    pub fn of(mode: StorageMode) -> StoragePolicy {
+        StoragePolicy {
+            mode,
+            sparse_threshold: DEFAULT_SPARSE_THRESHOLD,
+        }
+    }
+
+    /// Should a freshly built `n_rows × n_sets` table with `nnz` non-zero
+    /// entries be stored sparse? `Sparse` forces it wherever the `u32`
+    /// entry indexing fits; `Auto` additionally requires the measured
+    /// density to undercut the threshold *and* the sparse layout to be
+    /// genuinely smaller in bytes.
+    pub fn wants_sparse(&self, n_rows: usize, n_sets: usize, nnz: usize) -> bool {
+        if nnz > u32::MAX as usize {
+            return false; // offsets are u32: fall back to dense
+        }
+        match self.mode {
+            StorageMode::Dense => false,
+            StorageMode::Sparse => true,
+            StorageMode::Auto => {
+                let cells = n_rows * n_sets;
+                if cells == 0 {
+                    return false;
+                }
+                let density = nnz as f64 / cells as f64;
+                density < self.sparse_threshold
+                    && SparseTable::bytes_for(n_rows, nnz)
+                        < CountTable::dense_bytes_for(n_rows, n_sets)
+            }
+        }
+    }
+}
+
+/// Expected wire/resident bytes of one sparse-encoded row at the given
+/// density — the Hockney model's per-row charge under sparse encoding
+/// (entries plus this row's offset share). The executors' per-step comm
+/// uses the fabric's *measured* bytes; this expectation only feeds the
+/// `CommDecision` ρ predictions, calibrated from the previous iteration's
+/// measured density.
+pub fn expected_sparse_row_bytes(density: f64, n_sets: usize) -> f64 {
+    density.clamp(0.0, 1.0) * n_sets as f64 * SPARSE_ENTRY_BYTES as f64
+        + SPARSE_OFFSET_BYTES as f64
+}
+
+/// CSR-style sparse count table: per row, the `(set_rank, count)` pairs
+/// of its non-zero entries, set ranks strictly ascending. Semantically
+/// identical to the dense table it was built from — `to_dense` is an
+/// exact inverse of `from_dense` (bitwise, including `total()`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SparseTable {
+    pub n_rows: usize,
+    pub n_sets: usize,
+    /// `n_rows + 1` monotone offsets into `entries`
+    pub offsets: Vec<u32>,
+    /// `(set_rank, count)` pairs, row-major, ranks ascending within a row
+    pub entries: Vec<(u32, Count)>,
+}
+
+impl SparseTable {
+    /// Compress a dense table (entries must fit `u32` indexing — the
+    /// policy's `wants_sparse` guarantees it).
+    pub fn from_dense(t: &CountTable) -> SparseTable {
+        Self::from_dense_counted(t, t.nnz())
+    }
+
+    /// [`Self::from_dense`] with the non-zero count already known (the
+    /// policy path measures it once and passes it down, so storing a
+    /// table costs one counting sweep plus the compression pass). `nnz`
+    /// must equal `t.nnz()`; it only sizes the buffer and guards the
+    /// `u32` indexing.
+    pub fn from_dense_counted(t: &CountTable, nnz: usize) -> SparseTable {
+        debug_assert_eq!(nnz, t.nnz());
+        assert!(nnz <= u32::MAX as usize, "sparse table exceeds u32 indexing");
+        let mut offsets = Vec::with_capacity(t.n_rows + 1);
+        let mut entries = Vec::with_capacity(nnz);
+        offsets.push(0u32);
+        for r in 0..t.n_rows {
+            for (s, &x) in t.row(r).iter().enumerate() {
+                if x != 0.0 {
+                    entries.push((s as u32, x));
+                }
+            }
+            offsets.push(entries.len() as u32);
+        }
+        SparseTable {
+            n_rows: t.n_rows,
+            n_sets: t.n_sets,
+            offsets,
+            entries,
+        }
+    }
+
+    /// Exact dense reconstruction (round-trip inverse of `from_dense`).
+    pub fn to_dense(&self) -> CountTable {
+        let mut t = CountTable::zeros(self.n_rows, self.n_sets);
+        for r in 0..self.n_rows {
+            let row = t.row_mut(r);
+            for &(s, x) in self.row_entries(r) {
+                row[s as usize] = x;
+            }
+        }
+        t
+    }
+
+    #[inline]
+    pub fn row_entries(&self, r: usize) -> &[(u32, Count)] {
+        let lo = self.offsets[r] as usize;
+        let hi = self.offsets[r + 1] as usize;
+        &self.entries[lo..hi]
+    }
+
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Resident bytes of this layout — equal, by construction, to the
+    /// wire bytes of the same rows under sparse encoding.
+    pub fn bytes(&self) -> u64 {
+        Self::bytes_for(self.n_rows, self.entries.len())
+    }
+
+    /// Layout bytes of an `n_rows`-row sparse table with `nnz` entries.
+    pub fn bytes_for(n_rows: usize, nnz: usize) -> u64 {
+        (n_rows as u64 + 1) * SPARSE_OFFSET_BYTES + nnz as u64 * SPARSE_ENTRY_BYTES
+    }
+
+    /// Sum of every entry (f64 accumulation, row-major entry order —
+    /// bit-identical to the dense `total()`, which only adds `+0.0`
+    /// terms where this skips them).
+    pub fn total(&self) -> f64 {
+        self.entries.iter().map(|&(_, x)| x as f64).sum()
+    }
+
+    /// Fraction of non-zero entries.
+    pub fn density(&self) -> f64 {
+        let cells = self.n_rows * self.n_sets;
+        if cells == 0 {
+            0.0
+        } else {
+            self.entries.len() as f64 / cells as f64
+        }
+    }
+}
+
+/// A count table at rest, in whichever representation the policy picked.
+/// This is what the coordinator's per-subtemplate slots hold; the DP
+/// kernels read it through [`RowsRef`] / a materialized passive row.
+#[derive(Debug, Clone)]
+pub enum TableStorage {
+    Dense(CountTable),
+    Sparse(SparseTable),
+}
+
+impl TableStorage {
+    /// Store a freshly built dense table per the policy, measuring its
+    /// non-zero count on the way (the [`CountTable::density`] probe —
+    /// this is the decision input *and* the per-subtemplate figure the
+    /// report surfaces). The count is taken once and threaded through
+    /// the whole decision + compression, so storing a table costs one
+    /// counting sweep regardless of the outcome. Returns the storage
+    /// plus the measured `nnz`.
+    pub fn from_dense_policy(t: CountTable, policy: &StoragePolicy) -> (TableStorage, usize) {
+        let nnz = t.nnz();
+        if policy.wants_sparse(t.n_rows, t.n_sets, nnz) {
+            (
+                TableStorage::Sparse(SparseTable::from_dense_counted(&t, nnz)),
+                nnz,
+            )
+        } else {
+            (TableStorage::Dense(t), nnz)
+        }
+    }
+
+    /// Decode a received payload into a table (moves the payload's
+    /// buffers — receiving never copies a row). Validates the sparse
+    /// structure (monotone offsets, strictly ascending in-range ranks):
+    /// the aggregation kernels scatter through these indices unchecked.
+    pub fn from_payload(payload: RowsPayload, n_sets: usize) -> TableStorage {
+        match payload {
+            RowsPayload::Dense(data) => {
+                let n_sets = n_sets.max(1);
+                debug_assert_eq!(data.len() % n_sets, 0);
+                TableStorage::Dense(CountTable {
+                    n_rows: data.len() / n_sets,
+                    n_sets,
+                    data,
+                })
+            }
+            RowsPayload::Sparse { offsets, entries } => {
+                assert!(
+                    !offsets.is_empty() && offsets[0] == 0,
+                    "sparse payload: offsets must start at 0"
+                );
+                assert_eq!(
+                    *offsets.last().unwrap() as usize,
+                    entries.len(),
+                    "sparse payload: last offset must equal the entry count"
+                );
+                for w in offsets.windows(2) {
+                    assert!(w[0] <= w[1], "sparse payload: offsets must be monotone");
+                    let (lo, hi) = (w[0] as usize, w[1] as usize);
+                    let mut prev: Option<u32> = None;
+                    for &(rank, _) in &entries[lo..hi] {
+                        assert!(
+                            (rank as usize) < n_sets,
+                            "sparse payload: set rank {rank} out of range ({n_sets})"
+                        );
+                        if let Some(p) = prev {
+                            assert!(p < rank, "sparse payload: set ranks must ascend within a row");
+                        }
+                        prev = Some(rank);
+                    }
+                }
+                TableStorage::Sparse(SparseTable {
+                    n_rows: offsets.len() - 1,
+                    n_sets,
+                    offsets,
+                    entries,
+                })
+            }
+        }
+    }
+
+    pub fn n_rows(&self) -> usize {
+        match self {
+            TableStorage::Dense(t) => t.n_rows,
+            TableStorage::Sparse(t) => t.n_rows,
+        }
+    }
+
+    pub fn n_sets(&self) -> usize {
+        match self {
+            TableStorage::Dense(t) => t.n_sets,
+            TableStorage::Sparse(t) => t.n_sets,
+        }
+    }
+
+    /// Sum of every entry — bit-identical across representations.
+    pub fn total(&self) -> f64 {
+        match self {
+            TableStorage::Dense(t) => t.total(),
+            TableStorage::Sparse(t) => t.total(),
+        }
+    }
+
+    /// Resident bytes of the live representation (what the memory
+    /// accountant charges).
+    pub fn bytes(&self) -> u64 {
+        match self {
+            TableStorage::Dense(t) => t.bytes(),
+            TableStorage::Sparse(t) => t.bytes(),
+        }
+    }
+
+    /// What the unconditional dense layout would hold for this table —
+    /// the baseline the report's `bytes_saved` delta is measured against.
+    pub fn dense_bytes(&self) -> u64 {
+        CountTable::dense_bytes_for(self.n_rows(), self.n_sets())
+    }
+
+    pub fn density(&self) -> f64 {
+        match self {
+            TableStorage::Dense(t) => t.density(),
+            TableStorage::Sparse(t) => t.density(),
+        }
+    }
+
+    pub fn is_sparse(&self) -> bool {
+        matches!(self, TableStorage::Sparse(_))
+    }
+
+    pub fn as_rows(&self) -> RowsRef<'_> {
+        match self {
+            TableStorage::Dense(t) => RowsRef::Dense(t),
+            TableStorage::Sparse(t) => RowsRef::Sparse(t),
+        }
+    }
+
+    /// The dense table behind this storage. Only the serial-scratch XLA
+    /// combine path calls this, and that path forces a dense policy —
+    /// a sparse table here is a coordinator bug.
+    pub fn as_dense(&self) -> &CountTable {
+        match self {
+            TableStorage::Dense(t) => t,
+            TableStorage::Sparse(_) => {
+                panic!("dense table required (XLA serial path runs a dense-only policy)")
+            }
+        }
+    }
+}
+
+/// A borrowed row source for the aggregation kernels: rows of the active
+/// child's table (local, or one received step buffer), dense or sparse.
+#[derive(Clone, Copy)]
+pub enum RowsRef<'a> {
+    Dense(&'a CountTable),
+    Sparse(&'a SparseTable),
+}
+
+impl RowsRef<'_> {
+    #[inline]
+    pub fn n_sets(&self) -> usize {
+        match self {
+            RowsRef::Dense(t) => t.n_sets,
+            RowsRef::Sparse(t) => t.n_sets,
+        }
+    }
+
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        match self {
+            RowsRef::Dense(t) => t.n_rows,
+            RowsRef::Sparse(t) => t.n_rows,
+        }
+    }
+
+    /// `dst[j] += row(u)[j]` — THE aggregation kernel every executor
+    /// funnels through. The sparse arm adds only the stored entries;
+    /// omitting a slot's `+= 0.0` terms is bit-exact (module docs).
+    ///
+    /// SAFETY of the unchecked accesses: `dst.len()` must equal this
+    /// source's `n_sets` (callers debug-assert it); sparse set ranks were
+    /// validated `< n_sets` at construction ([`TableStorage::from_payload`],
+    /// [`SparseTable::from_dense`]).
+    #[inline]
+    pub fn add_row_into(&self, u: usize, dst: &mut [Count]) {
+        match self {
+            RowsRef::Dense(t) => {
+                let n = t.n_sets;
+                debug_assert!(dst.len() == n && (u + 1) * n <= t.data.len());
+                unsafe {
+                    let urow = t.data.get_unchecked(u * n..(u + 1) * n);
+                    for (a, &x) in dst.iter_mut().zip(urow) {
+                        *a += x;
+                    }
+                }
+            }
+            RowsRef::Sparse(t) => {
+                debug_assert_eq!(dst.len(), t.n_sets);
+                for &(rank, x) in t.row_entries(u) {
+                    debug_assert!((rank as usize) < dst.len());
+                    unsafe {
+                        *dst.get_unchecked_mut(rank as usize) += x;
+                    }
+                }
+            }
+        }
+    }
+
+    /// Materialize row `u` as a dense slice, reusing `buf` for the
+    /// sparse scatter — the passive-row reader of the contraction phase.
+    /// The materialized row equals the dense original exactly.
+    #[inline]
+    pub fn row_in<'s>(&'s self, u: usize, buf: &'s mut [Count]) -> &'s [Count] {
+        match self {
+            RowsRef::Dense(t) => t.row(u),
+            RowsRef::Sparse(t) => {
+                debug_assert_eq!(buf.len(), t.n_sets);
+                buf.fill(0.0);
+                for &(rank, x) in t.row_entries(u) {
+                    buf[rank as usize] = x;
+                }
+                buf
+            }
+        }
+    }
+}
+
+/// The wire form of a packet's count rows — what the exchange ships.
+/// `wire_bytes` is the one sizing rule shared by `Packet::bytes()`, the
+/// fabric's accounting, the recv-buffer ledger and the model tests.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RowsPayload {
+    /// flat `n_rows × n_sets` rows (today's layout)
+    Dense(Vec<Count>),
+    /// CSR rows: `n_rows + 1` offsets plus `(set_rank, count)` entries
+    Sparse {
+        offsets: Vec<u32>,
+        entries: Vec<(u32, Count)>,
+    },
+}
+
+impl RowsPayload {
+    /// Payload bytes on the wire (header excluded).
+    pub fn wire_bytes(&self) -> u64 {
+        match self {
+            RowsPayload::Dense(data) => (data.len() * std::mem::size_of::<Count>()) as u64,
+            RowsPayload::Sparse { offsets, entries } => {
+                offsets.len() as u64 * SPARSE_OFFSET_BYTES
+                    + entries.len() as u64 * SPARSE_ENTRY_BYTES
+            }
+        }
+    }
+
+    /// Rows carried, given the row width.
+    pub fn n_rows(&self, n_sets: usize) -> usize {
+        match self {
+            RowsPayload::Dense(data) => data.len() / n_sets.max(1),
+            RowsPayload::Sparse { offsets, .. } => offsets.len().saturating_sub(1),
+        }
+    }
+}
+
+/// Encode the given rows of a table for the wire, in iteration order —
+/// the single send-side serializer both exchange executors share. Dense
+/// tables ship flat rows (byte-identical to the historical serializer).
+/// Sparse tables ship their CSR rows *when that is the smaller encoding
+/// for the requested subset*, and fall back to flat rows otherwise (a
+/// request list can be denser than its table's average), so a packet's
+/// wire bytes never exceed the dense encoding of the same rows.
+pub fn encode_rows(table: &TableStorage, rows: impl Iterator<Item = usize>) -> RowsPayload {
+    match table {
+        TableStorage::Dense(t) => {
+            let (lo, _) = rows.size_hint();
+            let mut data = Vec::with_capacity(lo * t.n_sets);
+            for r in rows {
+                data.extend_from_slice(t.row(r));
+            }
+            RowsPayload::Dense(data)
+        }
+        TableStorage::Sparse(t) => {
+            let picks: Vec<usize> = rows.collect();
+            let mut offsets = Vec::with_capacity(picks.len() + 1);
+            let mut entries = Vec::new();
+            offsets.push(0u32);
+            for &r in &picks {
+                entries.extend_from_slice(t.row_entries(r));
+                offsets.push(entries.len() as u32);
+            }
+            let sparse_bytes = offsets.len() as u64 * SPARSE_OFFSET_BYTES
+                + entries.len() as u64 * SPARSE_ENTRY_BYTES;
+            let dense_bytes = CountTable::dense_bytes_for(picks.len(), t.n_sets);
+            if sparse_bytes < dense_bytes {
+                RowsPayload::Sparse { offsets, entries }
+            } else {
+                let mut data: Vec<Count> = vec![0.0; picks.len() * t.n_sets];
+                for (i, &r) in picks.iter().enumerate() {
+                    let dst = &mut data[i * t.n_sets..(i + 1) * t.n_sets];
+                    for &(rank, x) in t.row_entries(r) {
+                        dst[rank as usize] = x;
+                    }
+                }
+                RowsPayload::Dense(data)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn random_table(gen: &mut prop::Gen) -> CountTable {
+        let n_rows = gen.usize_in(0, 12);
+        let n_sets = gen.usize_in(1, 9);
+        let mut t = CountTable::zeros(n_rows, n_sets);
+        // mix of all-zero rows, fully-dense rows and scattered fills
+        for r in 0..n_rows {
+            match gen.usize_in(0, 3) {
+                0 => {} // all-zero row
+                1 => {
+                    for x in t.row_mut(r) {
+                        *x = 1.0 + (r as f32) * 0.125; // fully dense row
+                    }
+                }
+                _ => {
+                    for s in 0..n_sets {
+                        if gen.usize_in(0, 2) == 0 {
+                            t.row_mut(r)[s] = (1 + s + r) as f32 * 0.375;
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Satellite: sparse↔dense round-trip on random tables, including
+    /// all-zero and fully-dense rows — bitwise rows, equal totals/bytes
+    /// math, and the payload codec reproducing any row subset exactly.
+    #[test]
+    fn prop_sparse_dense_roundtrip() {
+        prop::check("storage_roundtrip", |gen| {
+            let t = random_table(gen);
+            let sp = SparseTable::from_dense(&t);
+            if sp.nnz() != t.nnz() {
+                return Err(format!("nnz {} != dense {}", sp.nnz(), t.nnz()));
+            }
+            let back = sp.to_dense();
+            if back.n_rows != t.n_rows || back.n_sets != t.n_sets {
+                return Err("shape changed through round-trip".into());
+            }
+            for (a, b) in back.data.iter().zip(&t.data) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("round-trip moved a bit: {a} vs {b}"));
+                }
+            }
+            if sp.total().to_bits() != t.total().to_bits() {
+                return Err(format!("total {} != dense {}", sp.total(), t.total()));
+            }
+            if sp.bytes() != SparseTable::bytes_for(t.n_rows, t.nnz()) {
+                return Err("bytes_for disagrees with bytes".into());
+            }
+            if (sp.density() - t.density()).abs() > 1e-12 {
+                return Err("density diverged".into());
+            }
+
+            // codec round-trip over a random row subset, both encodings
+            let n_pick = if t.n_rows == 0 { 0 } else { gen.usize_in(0, t.n_rows) };
+            let picks: Vec<usize> = (0..n_pick).map(|_| gen.usize_in(0, t.n_rows - 1)).collect();
+            let dense_store = TableStorage::Dense(t.clone());
+            let sparse_store = TableStorage::Sparse(sp);
+            for store in [&dense_store, &sparse_store] {
+                let payload = encode_rows(store, picks.iter().copied());
+                if payload.n_rows(t.n_sets) != picks.len() {
+                    return Err("payload row count wrong".into());
+                }
+                let decoded = TableStorage::from_payload(payload, t.n_sets);
+                for (i, &r) in picks.iter().enumerate() {
+                    let mut want = vec![0.0; t.n_sets];
+                    let mut got = vec![0.0; t.n_sets];
+                    dense_store.as_rows().add_row_into(r, &mut want);
+                    decoded.as_rows().add_row_into(i, &mut got);
+                    for (a, b) in got.iter().zip(&want) {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("row {r} decoded {a} != {b}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn wire_bytes_match_resident_bytes() {
+        let mut t = CountTable::zeros(4, 6);
+        t.row_mut(0)[1] = 2.0;
+        t.row_mut(2)[5] = 3.0;
+        t.row_mut(2)[0] = 1.0;
+        let sp = SparseTable::from_dense(&t);
+        let payload = encode_rows(&TableStorage::Sparse(sp.clone()), 0..4);
+        // encoding the whole table is exactly the resident layout
+        assert_eq!(payload.wire_bytes(), sp.bytes());
+        assert_eq!(sp.bytes(), 5 * 4 + 3 * 8);
+        let dense_payload = encode_rows(&TableStorage::Dense(t.clone()), 0..4);
+        assert_eq!(dense_payload.wire_bytes(), t.bytes());
+        // the decoded storages account the same bytes they arrived as
+        assert_eq!(
+            TableStorage::from_payload(payload, 6).bytes(),
+            5 * 4 + 3 * 8
+        );
+        assert_eq!(TableStorage::from_payload(dense_payload, 6).bytes(), t.bytes());
+    }
+
+    #[test]
+    fn auto_policy_thresholds() {
+        let pol = StoragePolicy::of(StorageMode::Auto);
+        // one-hot leaf shape: k=12 → density 1/12, clearly sparse
+        assert!(pol.wants_sparse(100, 12, 100));
+        // dense table: never
+        assert!(!pol.wants_sparse(100, 12, 1200));
+        // density under the threshold but bytes not smaller (tiny rows):
+        // n_sets=1 → sparse costs 8·nnz + offsets vs 4·rows dense
+        assert!(!pol.wants_sparse(10, 1, 3));
+        // forced modes ignore density
+        assert!(StoragePolicy::of(StorageMode::Sparse).wants_sparse(10, 4, 40));
+        assert!(!StoragePolicy::dense().wants_sparse(10, 4, 0));
+        // empty table stays dense
+        assert!(!pol.wants_sparse(0, 0, 0));
+    }
+
+    #[test]
+    fn expected_sparse_row_bytes_tracks_codec() {
+        // a row at measured density d costs ~ 8·d·n_sets + its offset
+        let n_sets = 20usize;
+        let mut t = CountTable::zeros(1, n_sets);
+        for s in 0..5 {
+            t.row_mut(0)[s] = 1.0;
+        }
+        let sp = SparseTable::from_dense(&t);
+        let payload = encode_rows(&TableStorage::Sparse(sp), std::iter::once(0));
+        let expect = expected_sparse_row_bytes(0.25, n_sets);
+        // one row: wire = offsets(2·4) + entries(5·8); the model charges
+        // one offset per row — off by the single base offset
+        assert_eq!(payload.wire_bytes(), 48);
+        assert!((expect - 44.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn encode_rows_falls_back_to_dense_when_smaller() {
+        // a sparse-stored table whose requested subset is fully dense:
+        // the codec must ship flat rows, keeping wire ≤ dense always
+        let mut t = CountTable::zeros(3, 2);
+        for r in 0..3 {
+            t.row_mut(r)[0] = 1.0;
+            t.row_mut(r)[1] = 2.0;
+        }
+        let sp = TableStorage::Sparse(SparseTable::from_dense(&t));
+        let payload = encode_rows(&sp, 0..3);
+        assert!(matches!(payload, RowsPayload::Dense(_)));
+        assert_eq!(payload.wire_bytes(), 24); // 3 rows × 2 sets × 4 B
+        // the fallback reproduces the rows exactly
+        match &payload {
+            RowsPayload::Dense(data) => assert_eq!(data.as_slice(), t.data.as_slice()),
+            RowsPayload::Sparse { .. } => unreachable!(),
+        }
+        // an empty request list costs 0 payload bytes, not an offset
+        let empty = encode_rows(&sp, std::iter::empty());
+        assert!(matches!(empty, RowsPayload::Dense(_)));
+        assert_eq!(empty.wire_bytes(), 0);
+        // a genuinely sparse subset stays sparse on the wire
+        let mut holey = CountTable::zeros(4, 6);
+        holey.row_mut(1)[3] = 5.0;
+        let sp = TableStorage::Sparse(SparseTable::from_dense(&holey));
+        let payload = encode_rows(&sp, 0..4);
+        assert!(matches!(payload, RowsPayload::Sparse { .. }));
+        assert_eq!(payload.wire_bytes(), 5 * 4 + 8);
+    }
+
+    #[test]
+    fn storage_mode_parse_roundtrip() {
+        for m in [StorageMode::Dense, StorageMode::Sparse, StorageMode::Auto] {
+            assert_eq!(StorageMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(StorageMode::parse("csr"), None);
+    }
+
+    #[test]
+    #[should_panic(expected = "ascend")]
+    fn from_payload_rejects_unsorted_rows() {
+        let payload = RowsPayload::Sparse {
+            offsets: vec![0, 2],
+            entries: vec![(3, 1.0), (1, 2.0)],
+        };
+        let _ = TableStorage::from_payload(payload, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn from_payload_rejects_oversized_rank() {
+        let payload = RowsPayload::Sparse {
+            offsets: vec![0, 1],
+            entries: vec![(9, 1.0)],
+        };
+        let _ = TableStorage::from_payload(payload, 4);
+    }
+
+    #[test]
+    fn row_in_materializes_sparse_rows() {
+        let mut t = CountTable::zeros(3, 5);
+        t.row_mut(1)[0] = 4.0;
+        t.row_mut(1)[4] = 0.5;
+        let sp = SparseTable::from_dense(&t);
+        let rows = RowsRef::Sparse(&sp);
+        let mut buf = vec![7.0; 5]; // stale garbage must be cleared
+        assert_eq!(rows.row_in(1, &mut buf), t.row(1));
+        let mut buf2 = vec![1.0; 5];
+        assert_eq!(rows.row_in(0, &mut buf2), t.row(0));
+    }
+}

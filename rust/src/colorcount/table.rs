@@ -44,13 +44,26 @@ impl CountTable {
         (self.data.len() * std::mem::size_of::<Count>()) as u64
     }
 
+    /// Bytes the dense layout holds for an `n_rows × n_sets` table — the
+    /// baseline `super::storage` measures its savings against.
+    pub fn dense_bytes_for(n_rows: usize, n_sets: usize) -> u64 {
+        (n_rows * n_sets * std::mem::size_of::<Count>()) as u64
+    }
+
+    /// Number of non-zero entries.
+    pub fn nnz(&self) -> usize {
+        self.data.iter().filter(|&&x| x != 0.0).count()
+    }
+
     /// Fraction of non-zero entries — count tables are sparse for small
-    /// subtemplates; used by ablation benches.
+    /// subtemplates. This probe drives the `Auto` storage policy
+    /// (`super::storage`) and the per-subtemplate `density` field of the
+    /// job report.
     pub fn density(&self) -> f64 {
         if self.data.is_empty() {
             return 0.0;
         }
-        self.data.iter().filter(|&&x| x != 0.0).count() as f64 / self.data.len() as f64
+        self.nnz() as f64 / self.data.len() as f64
     }
 }
 

@@ -77,6 +77,13 @@ pub struct CombineShape {
     /// mean instead of the asymptotic estimate
     pub remote_rows_per_step: f64,
     pub n_ranks: usize,
+    /// expected *encoded* wire bytes per shipped row, when the active
+    /// table is stored (and therefore shipped) sparse — the coordinator
+    /// derives it from the previous iteration's measured density
+    /// (`colorcount::storage::expected_sparse_row_bytes`). `None` keeps
+    /// the dense charge `size_of::<Count>() · C(k, |Ti''|)`, so dense
+    /// runs predict byte-for-byte what they always did.
+    pub wire_row_bytes: Option<f64>,
 }
 
 /// One candidate exchange shape, evaluated through the model: the ring
@@ -211,12 +218,16 @@ impl AdaptivePolicy {
 
     /// Modeled transfer time for a step that exchanges with `offsets`
     /// peers (Eq 8): per-step software overhead, per-message latency, and
-    /// the payload at the engine's element width plus the per-packet
-    /// header the fabric actually accounts.
+    /// the payload at its *encoded* width — the engine's dense element
+    /// width by default, or the shape's expected sparse row bytes when
+    /// the active table ships sparse — plus the per-packet header the
+    /// fabric actually accounts.
     pub fn step_comm_g(&self, s: &CombineShape, offsets: usize, binom: &Binomial) -> f64 {
-        let row_bytes = Self::row_bytes(s.k, s.active_size, binom);
+        let row_bytes = s
+            .wire_row_bytes
+            .unwrap_or_else(|| Self::row_bytes(s.k, s.active_size, binom) as f64);
         let rows = offsets as f64 * s.remote_rows_per_step.max(0.0);
-        let bytes = rows * row_bytes as f64 + (offsets as u64 * Packet::HEADER_BYTES) as f64;
+        let bytes = rows * row_bytes + (offsets as u64 * Packet::HEADER_BYTES) as f64;
         self.net.step(offsets, bytes.round() as u64)
     }
 
@@ -421,6 +432,7 @@ mod tests {
             active_size: size - pass,
             remote_rows_per_step: rows,
             n_ranks: ranks,
+            wire_row_bytes: None,
         }
     }
 
@@ -475,6 +487,38 @@ mod tests {
             pkt.bytes(),
             rows_per_peer as u64 * AdaptivePolicy::row_bytes(12, 4, &b) + Packet::HEADER_BYTES
         );
+    }
+
+    /// Sparse-encoded exchanges charge the measured-density wire model:
+    /// cheaper transfers than dense for the same shape, raising predicted
+    /// ρ — the model stays honest about what the fabric will ship.
+    #[test]
+    fn sparse_wire_bytes_move_the_model() {
+        let b = Binomial::new();
+        let pol = AdaptivePolicy::default();
+        let mut s = shape(10, 6, 3, 2_000.0, 8);
+        let dense_comm = pol.step_comm_g(&s, 1, &b);
+        let n_sets = b.c(10, 3) as usize;
+        let density = 0.1;
+        s.wire_row_bytes = Some(crate::colorcount::storage::expected_sparse_row_bytes(
+            density, n_sets,
+        ));
+        let sparse_comm = pol.step_comm_g(&s, 1, &b);
+        assert!(
+            sparse_comm < dense_comm,
+            "sparse {sparse_comm} must undercut dense {dense_comm}"
+        );
+        assert!(pol.overlap(&s, &b) >= {
+            let mut d = s;
+            d.wire_row_bytes = None;
+            pol.overlap(&d, &b)
+        });
+        // near-full density the sparse encoding is *more* expensive
+        // (8 bytes/entry vs 4) and the model must say so
+        s.wire_row_bytes = Some(crate::colorcount::storage::expected_sparse_row_bytes(
+            1.0, n_sets,
+        ));
+        assert!(pol.step_comm_g(&s, 1, &b) > dense_comm);
     }
 
     #[test]
@@ -569,6 +613,7 @@ mod tests {
                 active_size: size - pass,
                 remote_rows_per_step: gen.f64_in(0.0, 5_000.0),
                 n_ranks: ranks,
+                wire_row_bytes: None,
             };
             let mut pol = AdaptivePolicy::default();
             pol.flop_time = 10f64.powf(gen.f64_in(-12.0, -5.0));

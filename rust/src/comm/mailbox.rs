@@ -392,10 +392,10 @@ mod tests {
                         ));
                     }
                     for (pkt, want) in got.iter().zip(&expect) {
-                        if pkt.rows != *want {
+                        if pkt.dense_rows() != want.as_slice() {
                             return Err(format!(
                                 "rank {p} step {w}: non-canonical order {:?} vs {want:?}",
-                                pkt.rows
+                                pkt.dense_rows()
                             ));
                         }
                     }
@@ -416,10 +416,10 @@ mod tests {
         fab.send(Packet::new(0, 1, 0, 0, 1, vec![2.0]));
         let step0 = fab.recv_step(1, 0, 1);
         assert_eq!(step0.len(), 1);
-        assert_eq!(step0[0].rows, vec![2.0]);
+        assert_eq!(step0[0].dense_rows(), &[2.0]);
         assert_eq!(fab.pending(1), 1, "step-1 packet stays queued");
         let step1 = fab.recv_step(1, 1, 1);
-        assert_eq!(step1[0].rows, vec![1.0]);
+        assert_eq!(step1[0].dense_rows(), &[1.0]);
         fab.assert_empty();
     }
 

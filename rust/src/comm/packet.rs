@@ -6,6 +6,7 @@
 //! lets Harp reconfigure routing on-the-fly instead of baking the
 //! collective into the program structure.
 
+use crate::colorcount::storage::RowsPayload;
 use crate::colorcount::Count;
 
 /// sender: 10 bits (≤1024 ranks), receiver: 10 bits, offset: 12 bits.
@@ -34,9 +35,11 @@ pub fn decode_meta(meta: u32) -> (usize, usize, usize) {
     (sender, receiver, offset)
 }
 
-/// A count-row packet: `rows` are count-table rows (at the engine's
-/// [`Count`] element width) for the vertices the receiver requested (in
-/// the receiver's request-list order), flattened.
+/// A count-row packet: count-table rows for the vertices the receiver
+/// requested (in the receiver's request-list order), carried in whichever
+/// encoding the sender's table storage uses — flat dense rows at the
+/// engine's [`Count`] element width, or CSR `(set_rank, count)` sparse
+/// rows ([`RowsPayload`], `colorcount::storage`).
 #[derive(Debug, Clone)]
 pub struct Packet {
     pub meta: u32,
@@ -44,14 +47,17 @@ pub struct Packet {
     pub subtemplate: u32,
     /// row width (number of color sets)
     pub n_sets: u32,
-    pub rows: Vec<Count>,
+    pub payload: RowsPayload,
 }
 
 impl Packet {
     /// Wire bytes of the packet envelope: the 4-byte meta ID plus the
-    /// 8-byte (subtemplate, n_sets) header.
+    /// 8-byte (subtemplate, n_sets) header. The encoding tag rides in the
+    /// header's spare bits.
     pub const HEADER_BYTES: u64 = 12;
 
+    /// A dense-row packet (the historical constructor — byte-identical
+    /// wire size to the original flat layout).
     pub fn new(
         sender: usize,
         receiver: usize,
@@ -60,11 +66,31 @@ impl Packet {
         n_sets: usize,
         rows: Vec<Count>,
     ) -> Self {
+        Self::with_payload(
+            sender,
+            receiver,
+            offset,
+            subtemplate,
+            n_sets,
+            RowsPayload::Dense(rows),
+        )
+    }
+
+    /// A packet around an already-encoded payload (what the exchange
+    /// executors build via `colorcount::storage::encode_rows`).
+    pub fn with_payload(
+        sender: usize,
+        receiver: usize,
+        offset: usize,
+        subtemplate: usize,
+        n_sets: usize,
+        payload: RowsPayload,
+    ) -> Self {
         Packet {
             meta: encode_meta(sender, receiver, offset),
             subtemplate: subtemplate as u32,
             n_sets: n_sets as u32,
-            rows,
+            payload,
         }
     }
 
@@ -83,12 +109,34 @@ impl Packet {
         decode_meta(self.meta).2
     }
 
-    /// Payload size on the wire (meta + header + rows at the engine's
-    /// element width). The adaptive model charges the same per-packet
-    /// header and per-entry width, so modeled step bytes and the fabric's
-    /// measured accounting agree exactly.
+    /// Packet size on the wire: header plus the *encoded* payload bytes
+    /// ([`RowsPayload::wire_bytes`] — the one sizing rule the adaptive
+    /// model, the fabric accounting and the recv-buffer ledger share, so
+    /// modeled step bytes and measured accounting agree exactly).
     pub fn bytes(&self) -> u64 {
-        Self::HEADER_BYTES + (self.rows.len() * std::mem::size_of::<Count>()) as u64
+        Self::HEADER_BYTES + self.payload.wire_bytes()
+    }
+
+    /// Rows this packet carries.
+    pub fn n_rows(&self) -> usize {
+        self.payload.n_rows(self.n_sets.max(1) as usize)
+    }
+
+    /// What the same rows would cost under the dense encoding — the
+    /// baseline for the `bytes_saved` accounting of the report and the
+    /// dense-ledger side of `coordinator::memory::DualAccountant`.
+    pub fn dense_equiv_bytes(&self) -> u64 {
+        Self::HEADER_BYTES
+            + (self.n_rows() * self.n_sets as usize * std::mem::size_of::<Count>()) as u64
+    }
+
+    /// The dense payload's rows (test convenience; panics on a sparse
+    /// payload).
+    pub fn dense_rows(&self) -> &[Count] {
+        match &self.payload {
+            RowsPayload::Dense(rows) => rows,
+            RowsPayload::Sparse { .. } => panic!("packet carries a sparse payload"),
+        }
     }
 }
 
@@ -130,5 +178,26 @@ mod tests {
         assert_eq!(p.receiver(), 7);
         assert_eq!(p.offset(), 11);
         assert_eq!(p.bytes(), 4 + 8 + 32);
+        assert_eq!(p.n_rows(), 2);
+        // dense packets are their own dense equivalent
+        assert_eq!(p.dense_equiv_bytes(), p.bytes());
+        assert_eq!(p.dense_rows(), &[1.0; 8]);
+    }
+
+    #[test]
+    fn sparse_packet_bytes_follow_the_codec() {
+        // 3 rows × 4 sets with 2 non-zeros: wire = header + offsets + entries
+        let payload = RowsPayload::Sparse {
+            offsets: vec![0, 1, 1, 2],
+            entries: vec![(0, 1.0), (3, 2.0)],
+        };
+        let wire = payload.wire_bytes();
+        let p = Packet::with_payload(0, 1, 0, 2, 4, payload);
+        assert_eq!(wire, 4 * 4 + 2 * 8);
+        assert_eq!(p.bytes(), Packet::HEADER_BYTES + wire);
+        assert_eq!(p.n_rows(), 3);
+        // the dense encoding of the same rows would cost 3·4·4 payload bytes
+        assert_eq!(p.dense_equiv_bytes(), Packet::HEADER_BYTES + 48);
+        assert!(p.bytes() < p.dense_equiv_bytes());
     }
 }

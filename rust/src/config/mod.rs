@@ -6,6 +6,7 @@
 //! ("..."), integer, float and boolean values, `#` comments.
 
 use crate::api::HarpsgError;
+use crate::colorcount::StorageMode;
 use crate::comm::HockneyParams;
 use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use anyhow::{anyhow, bail, Result};
@@ -129,7 +130,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 17] = [
+const KNOWN_KEYS: [&str; 18] = [
     "template",
     "dataset",
     "scale",
@@ -143,6 +144,7 @@ const KNOWN_KEYS: [&str; 17] = [
     "run.engine",
     "run.exchange",
     "run.adaptive",
+    "run.table_storage",
     "run.mem_limit_mb",
     "net.alpha",
     "net.beta",
@@ -251,6 +253,13 @@ impl RunSpec {
         }
         if let Some(b) = want_bool(doc, "run.adaptive")? {
             run.adaptive_group = b;
+        }
+        if let Some(s) = want_str(doc, "run.table_storage")? {
+            run.table_storage = StorageMode::parse(s).ok_or_else(|| {
+                HarpsgError::Parse(format!(
+                    "`run.table_storage`: unknown storage `{s}` (dense|sparse|auto)"
+                ))
+            })?;
         }
         if let Some(a) = want_float(doc, "net.alpha")? {
             run.net.alpha = a;
@@ -386,6 +395,28 @@ beta = 1.7e-10
         // …and `adaptive = false` with any mode stays fine
         let ok = format!("{naive}\n[run]\nadaptive = false\n");
         assert!(!RunSpec::parse(&ok).unwrap().run.adaptive_group);
+    }
+
+    #[test]
+    fn table_storage_key_parses_and_validates() {
+        // default: the historical dense layout
+        assert_eq!(
+            RunSpec::parse(SAMPLE).unwrap().run.table_storage,
+            StorageMode::Dense
+        );
+        for (spelling, mode) in [
+            ("dense", StorageMode::Dense),
+            ("sparse", StorageMode::Sparse),
+            ("auto", StorageMode::Auto),
+        ] {
+            let with_key = format!("{SAMPLE}\n[run]\ntable_storage = \"{spelling}\"\n");
+            assert_eq!(RunSpec::parse(&with_key).unwrap().run.table_storage, mode);
+        }
+        // unknown spellings and wrong types are typed errors
+        let bad = format!("{SAMPLE}\n[run]\ntable_storage = \"csr\"\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        let bad = format!("{SAMPLE}\n[run]\ntable_storage = 1\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 
     #[test]

@@ -65,6 +65,66 @@ impl MemoryAccountant {
     }
 }
 
+/// Two ledgers in lockstep: the **real** one charges the resident bytes
+/// of whichever table/packet representation is actually live (dense rows
+/// or sparse `(set_rank, count)` entries — `colorcount::storage`), while
+/// the **dense** one charges what the unconditional dense layout would
+/// have held at the same program points. Their peaks are the run's
+/// `peak_mem_per_rank` and `peak_mem_dense_per_rank`; the difference is
+/// the report's `bytes_saved` — the Eq 7/12 accounting measured against
+/// its own dense baseline without running the job twice.
+///
+/// Classes whose bytes are representation-independent (graph CSR,
+/// aggregation scratch) are charged identically through [`Self::alloc`];
+/// count tables and receive buffers go through [`Self::alloc2`] with
+/// both byte counts.
+#[derive(Debug, Clone, Default)]
+pub struct DualAccountant {
+    pub real: MemoryAccountant,
+    pub dense: MemoryAccountant,
+}
+
+impl DualAccountant {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Charge both ledgers the same bytes (representation-independent
+    /// allocations).
+    pub fn alloc(&mut self, class: MemClass, bytes: u64) {
+        self.alloc2(class, bytes, bytes);
+    }
+
+    pub fn free(&mut self, class: MemClass, bytes: u64) {
+        self.free2(class, bytes, bytes);
+    }
+
+    /// Charge the live representation's bytes to the real ledger and the
+    /// dense layout's bytes to the baseline ledger.
+    pub fn alloc2(&mut self, class: MemClass, real_bytes: u64, dense_bytes: u64) {
+        self.real.alloc(class, real_bytes);
+        self.dense.alloc(class, dense_bytes);
+    }
+
+    pub fn free2(&mut self, class: MemClass, real_bytes: u64, dense_bytes: u64) {
+        self.real.free(class, real_bytes);
+        self.dense.free(class, dense_bytes);
+    }
+
+    /// Release everything both ledgers hold in `class` (the bulk-mode
+    /// end-of-exchange drain, where the two sides hold different totals).
+    pub fn release_all(&mut self, class: MemClass) {
+        let r = self.real.current(class);
+        let d = self.dense.current(class);
+        self.free2(class, r, d);
+    }
+
+    /// The real ledger's current bytes in `class`.
+    pub fn current(&self, class: MemClass) -> u64 {
+        self.real.current(class)
+    }
+}
+
 /// Thread-safe ledger for buffers that several threads allocate and free
 /// concurrently — in the rank-parallel exchange executor, packet payloads
 /// are charged by sender threads and released by receiver threads, so the
@@ -195,6 +255,29 @@ mod tests {
         assert_eq!(m.total(), 0, "balanced alloc/free must return to zero");
         assert!(m.peak() >= BYTES);
         assert!(m.peak() <= (THREADS * ROUNDS) as u64 * BYTES);
+    }
+
+    #[test]
+    fn dual_ledger_tracks_real_and_dense_baselines() {
+        let mut m = DualAccountant::new();
+        m.alloc(MemClass::Graph, 100); // representation-independent
+        m.alloc2(MemClass::CountTable, 30, 400); // sparse table, dense worth 400
+        assert_eq!(m.real.peak, 130);
+        assert_eq!(m.dense.peak, 500);
+        assert_eq!(m.current(MemClass::CountTable), 30);
+        m.alloc2(MemClass::RecvBuffer, 8, 64);
+        m.alloc2(MemClass::RecvBuffer, 16, 64);
+        assert_eq!(m.real.peak, 154);
+        assert_eq!(m.dense.peak, 628);
+        m.release_all(MemClass::RecvBuffer);
+        assert_eq!(m.real.current(MemClass::RecvBuffer), 0);
+        assert_eq!(m.dense.current(MemClass::RecvBuffer), 0);
+        m.free2(MemClass::CountTable, 30, 400);
+        assert_eq!(m.real.total(), 100);
+        assert_eq!(m.dense.total(), 100);
+        // peaks stay sticky and ordered: real never exceeds dense when
+        // every alloc2 charged real ≤ dense
+        assert!(m.real.peak <= m.dense.peak);
     }
 
     #[test]

@@ -8,8 +8,8 @@ pub mod memory;
 pub mod run;
 
 pub use dist::{validate_group_size, DistributedRunner, ExchangePlan};
-pub use memory::{MemClass, MemoryAccountant, SharedAccountant};
+pub use memory::{DualAccountant, MemClass, MemoryAccountant, SharedAccountant};
 pub use run::{
     CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RunConfig, RunResult,
-    ThreadStats,
+    StorageDecision, ThreadStats,
 };

@@ -2,7 +2,7 @@
 //! four implementations of Table 1 (Naive / Pipeline / Adaptive /
 //! AdaptiveLB) are configurations of one runner.
 
-use crate::colorcount::ExecStats;
+use crate::colorcount::{ExecStats, StorageMode};
 use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
 use crate::pipeline::MeasuredPipeline;
 
@@ -146,6 +146,14 @@ pub struct RunConfig {
     /// the policy between iterations. Off (the default) keeps the
     /// historical static switch (intensity threshold, fixed g = 1).
     pub adaptive_group: bool,
+    /// count-table representation (the `--table-storage` knob): `Dense`
+    /// (the historical layout, default), `Sparse` (force per-row
+    /// `(set_rank, count)` storage and wire encoding), or `Auto` (pick
+    /// per table from the measured density — `colorcount::storage`).
+    /// Estimates are bit-identical for every choice; only resident
+    /// bytes, wire bytes and speed change. A *loaded* XLA runtime forces
+    /// dense (its kernel views tables as dense blocks).
+    pub table_storage: StorageMode,
 }
 
 impl Default for RunConfig {
@@ -166,6 +174,7 @@ impl Default for RunConfig {
             task_overhead_units: 10_000.0,
             exchange: ExchangeExec::Threaded,
             adaptive_group: false,
+            table_storage: StorageMode::Dense,
         }
     }
 }
@@ -295,6 +304,46 @@ impl CommDecision {
     }
 }
 
+/// Per-subtemplate storage outcome of the run's final iteration, all
+/// ranks aggregated: the measured density of the built tables (the
+/// un-dead-coded `CountTable::density` probe), how many ranks stored the
+/// table sparse, and the resident vs dense-layout bytes. Surfaced in the
+/// report's JSON `storage` section and the CLI's human output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageDecision {
+    /// index of the subtemplate in the partition DAG
+    pub sub: usize,
+    /// fraction of non-zero entries across all ranks' tables
+    pub density: f64,
+    /// ranks that stored this sub's table sparse (decisions are
+    /// per-rank, data-driven; `Auto` can legitimately mix)
+    pub sparse_ranks: usize,
+    pub n_ranks: usize,
+    /// bytes the unconditional dense layout would hold, summed over ranks
+    pub dense_bytes: u64,
+    /// bytes actually resident, summed over ranks
+    pub resident_bytes: u64,
+}
+
+impl StorageDecision {
+    /// Resident savings against the dense layout (0 when the sparse
+    /// representation did not pay off).
+    pub fn bytes_saved(&self) -> u64 {
+        self.dense_bytes.saturating_sub(self.resident_bytes)
+    }
+
+    /// "dense", "sparse", or "mixed" (per-rank decisions disagreed).
+    pub fn storage_name(&self) -> &'static str {
+        if self.sparse_ranks == 0 {
+            "dense"
+        } else if self.sparse_ranks == self.n_ranks {
+            "sparse"
+        } else {
+            "mixed"
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunResult {
     /// the subgraph-count estimate (median of means over iterations)
@@ -306,8 +355,15 @@ pub struct RunResult {
     pub model: ModelTime,
     /// real single-core wall-clock of the whole run, seconds
     pub real_seconds: f64,
-    /// per-rank peak memory, bytes
+    /// per-rank peak memory, bytes (resident bytes of the live table
+    /// representations — the Eq 7/12 ledger)
     pub peak_mem_per_rank: Vec<u64>,
+    /// what the per-rank peaks would have been under the unconditional
+    /// dense layout (the `DualAccountant` baseline ledger); equal to
+    /// `peak_mem_per_rank` in dense mode
+    pub peak_mem_dense_per_rank: Vec<u64>,
+    /// final-iteration storage outcome per subtemplate
+    pub storage: Vec<StorageDecision>,
     /// calibrated seconds per compute unit
     pub flop_time: f64,
     pub threads: ThreadStats,
@@ -329,6 +385,21 @@ pub struct RunResult {
 impl RunResult {
     pub fn peak_mem(&self) -> u64 {
         self.peak_mem_per_rank.iter().copied().max().unwrap_or(0)
+    }
+
+    /// Largest per-rank peak under the dense-baseline ledger.
+    pub fn peak_mem_dense(&self) -> u64 {
+        self.peak_mem_dense_per_rank
+            .iter()
+            .copied()
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Peak-memory delta against the dense baseline (the Fig-12-style
+    /// savings the sparse storage buys; 0 in dense mode).
+    pub fn peak_bytes_saved(&self) -> u64 {
+        self.peak_mem_dense().saturating_sub(self.peak_mem())
     }
 }
 

@@ -14,6 +14,7 @@
 //!   harpsg count --template u10-2 --dataset R500K3 --scale 2000 \
 //!       --ranks 8 --workers 4 --mode adaptive-lb --iters 2 --json
 //!   harpsg count --template u12-1 --dataset R500K3 --ranks 8 --adaptive
+//!   harpsg count --template u12-1 --dataset R500K3 --ranks 6 --table-storage auto
 //!   harpsg count --template u7-2 --dataset MI --exchange sequential
 //!   harpsg run --config configs/quickstart.toml
 
@@ -21,6 +22,7 @@ use anyhow::{Context, Result};
 use harpsg::api::{
     CountJob, HarpsgError, JobReport, PartitionKind, Session, SessionOptions, StderrProgress,
 };
+use harpsg::colorcount::StorageMode;
 use harpsg::config::RunSpec;
 use harpsg::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use harpsg::graph::{degree_stats, loader, Dataset, Graph};
@@ -231,6 +233,25 @@ fn print_human(session: &Session, r: &JobReport) {
         r.workers.imbalance()
     );
     println!("peak memory:     {} per rank", human_bytes(r.peak_mem()));
+    if r.table_storage != "dense" {
+        println!(
+            "table storage:   {} (dense baseline {}, saved {} at peak)",
+            r.table_storage,
+            human_bytes(r.peak_mem_dense()),
+            human_bytes(r.peak_bytes_saved())
+        );
+        for d in r.storage.iter().filter(|d| d.storage_name() != "dense") {
+            println!(
+                "  sub {:>2}: {:<6} density {:.3}, {} -> {} ({} saved)",
+                d.sub,
+                d.storage_name(),
+                d.density,
+                human_bytes(d.dense_bytes),
+                human_bytes(d.resident_bytes),
+                human_bytes(d.bytes_saved())
+            );
+        }
+    }
     println!(
         "setup:           {} ({})",
         human_secs(r.setup_seconds),
@@ -258,6 +279,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--mode",
             "--engine",
             "--exchange",
+            "--table-storage",
             "--mem-limit-mb",
         ],
         &["--json", "--progress", "--adaptive"],
@@ -295,6 +317,13 @@ fn cmd_count(args: &[String]) -> Result<()> {
         cfg.exchange = ExchangeExec::parse(x).ok_or_else(|| {
             HarpsgError::Parse(format!(
                 "`--exchange`: unknown executor `{x}` (threaded|sequential)"
+            ))
+        })?;
+    }
+    if let Some(s) = flags.get("--table-storage") {
+        cfg.table_storage = StorageMode::parse(s).ok_or_else(|| {
+            HarpsgError::Parse(format!(
+                "`--table-storage`: unknown storage `{s}` (dense|sparse|auto)"
             ))
         })?;
     }

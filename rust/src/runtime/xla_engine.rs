@@ -188,7 +188,7 @@ mod imp {
     #[cfg(test)]
     mod tests {
         use super::*;
-        use crate::colorcount::aggregate_batch;
+        use crate::colorcount::{aggregate_batch, RowsRef};
         use crate::combin::Binomial;
         use std::sync::Arc;
 
@@ -224,7 +224,7 @@ mod imp {
                 let mut out = CountTable::zeros(n, split.n_sets);
                 let mut scratch = CombineScratch::new(n, c2);
                 scratch.begin(c2);
-                aggregate_batch(&mut scratch, &active, pairs.iter().copied());
+                aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
                 if xla {
                     let xc = XlaCombine::new(rt.clone());
                     xc.contract_touched(&mut out, &passive, &split, &mut scratch);
@@ -255,7 +255,11 @@ mod imp {
             let active = CountTable::zeros(4, binom.c(12, 2) as usize);
             let mut scratch = CombineScratch::new(4, active.n_sets);
             scratch.begin(active.n_sets);
-            aggregate_batch(&mut scratch, &active, [(0u32, 1u32)].into_iter());
+            aggregate_batch(
+                &mut scratch,
+                RowsRef::Dense(&active),
+                [(0u32, 1u32)].into_iter(),
+            );
             let xc = XlaCombine::new(rt);
             let units = xc.contract_touched(&mut out, &passive, &split, &mut scratch);
             assert!(units > 0);

@@ -211,6 +211,7 @@ fn adaptive_selects_wider_group_and_stays_exact() {
                 active_size: sub.active_size(&dag),
                 remote_rows_per_step: rows,
                 n_ranks: ranks,
+                wire_row_bytes: None,
             };
             if let (CommMode::Pipeline { g }, _) = policy.choose_group(&tc, &shape, &binom) {
                 if g > 1 {

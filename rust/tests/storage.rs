@@ -1,0 +1,295 @@
+//! Differential + acceptance suite for the adaptive dense/sparse
+//! count-table storage (`colorcount::storage`, `--table-storage`):
+//!
+//! 1. **representation invariance** — estimates, colorful counts and
+//!    samples are bit-identical across all three storage modes, both
+//!    exchange executors and rank counts {1, 2, 5, 6}, against the
+//!    sequential dense baseline;
+//! 2. **memory acceptance** — on a 12-vertex template at P = 6 the
+//!    `Auto` policy's accounted peak lands strictly below the dense
+//!    baseline, with the delta reported in the JSON `memory` section;
+//! 3. **wire contract** — sparse-aware exchange never ships more bytes
+//!    than the dense encoding under `Auto`, and the JSON report carries
+//!    the per-subtemplate `storage` section (density / storage /
+//!    bytes_saved).
+//!
+//! CI's storage-matrix feeds `HARPSG_TEST_STORAGE={dense,sparse,auto}`
+//! to pin the mode set (and `HARPSG_TEST_RANKS` as everywhere else).
+
+use harpsg::api::{CountJob, JobReport, PartitionKind, Session, SessionOptions};
+use harpsg::colorcount::StorageMode;
+use harpsg::coordinator::{ExchangeExec, ModeSelect};
+use harpsg::graph::rmat::{generate, RmatParams};
+
+/// Storage modes under differential test. CI's storage-matrix sets
+/// `HARPSG_TEST_STORAGE` to pin the suite to one mode; unset runs all
+/// three (dense is always re-run as the baseline regardless).
+fn test_storage_modes() -> Vec<StorageMode> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_STORAGE") {
+        if let Some(m) = StorageMode::parse(v.trim()) {
+            return vec![m];
+        }
+    }
+    vec![StorageMode::Dense, StorageMode::Sparse, StorageMode::Auto]
+}
+
+/// Rank counts, honoring the CI matrix the same way
+/// `tests/pipeline_exec.rs` does.
+fn test_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 1 {
+                return vec![1, n];
+            }
+            if n == 1 {
+                return vec![1];
+            }
+        }
+    }
+    vec![1, 2, 5, 6]
+}
+
+fn session(n: usize, m: u64, skew: u32, seed: u64) -> Session {
+    Session::with_options(
+        generate(&RmatParams::with_skew(n, m, skew, seed)),
+        SessionOptions {
+            seed: 7,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        },
+    )
+    .unwrap()
+}
+
+fn job(
+    tpl: &str,
+    ranks: usize,
+    mode: ModeSelect,
+    exec: ExchangeExec,
+    storage: StorageMode,
+) -> CountJob {
+    CountJob::of_builtin(tpl)
+        .unwrap()
+        .ranks(ranks)
+        .mode(mode)
+        .exchange(exec)
+        .table_storage(storage)
+        .iterations(1)
+        .seed(7)
+        .workers(2)
+        .build()
+        .unwrap()
+}
+
+/// Satellite: the storage differential leg. Every (storage mode ×
+/// exchange executor × rank count × comm mode) combination reports
+/// estimates bit-identical to the sequential dense baseline — storage is
+/// a representation change, never a numerics change.
+#[test]
+fn storage_modes_bit_identical_to_sequential_dense_baseline() {
+    let s = session(52, 260, 3, 4242);
+    let ranks = test_rank_counts();
+    let storages = test_storage_modes();
+    for tpl in ["u5-2", "u10-2"] {
+        for comm in [ModeSelect::Naive, ModeSelect::Pipeline] {
+            for &r in &ranks {
+                let base = s
+                    .count(&job(tpl, r, comm, ExchangeExec::Sequential, StorageMode::Dense))
+                    .unwrap();
+                assert_eq!(base.peak_mem(), base.peak_mem_dense());
+                for &storage in &storages {
+                    for exec in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+                        let got = s.count(&job(tpl, r, comm, exec, storage)).unwrap();
+                        assert_eq!(
+                            base.estimate.to_bits(),
+                            got.estimate.to_bits(),
+                            "{tpl} {comm:?} P={r} {storage:?} {exec:?}: {} vs dense {}",
+                            got.estimate,
+                            base.estimate
+                        );
+                        assert_eq!(
+                            base.colorful, got.colorful,
+                            "{tpl} {comm:?} P={r} {storage:?} {exec:?}"
+                        );
+                        assert_eq!(
+                            base.samples, got.samples,
+                            "{tpl} {comm:?} P={r} {storage:?} {exec:?}"
+                        );
+                        // the dense-baseline ledger is storage-invariant:
+                        // every mode reproduces the dense run's real peaks
+                        assert_eq!(
+                            got.peak_mem_dense_per_rank, base.peak_mem_per_rank,
+                            "{tpl} {comm:?} P={r} {storage:?} {exec:?}: baseline ledger"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Acceptance: on a 12-vertex template at P = 6 the Auto policy's
+/// accounted peak is strictly below the dense baseline, the delta is
+/// reported (in the result and in JSON), and the one-hot leaves show up
+/// as sparse with their measured 1/k density.
+#[test]
+fn auto_storage_reduces_peak_on_twelve_vertex_template() {
+    let s = session(72, 400, 3, 99);
+    let run = |storage| {
+        s.count(&job(
+            "u12-1",
+            6,
+            ModeSelect::Pipeline,
+            ExchangeExec::Threaded,
+            storage,
+        ))
+        .unwrap()
+    };
+    let dense = run(StorageMode::Dense);
+    let auto = run(StorageMode::Auto);
+    assert_eq!(auto.estimate.to_bits(), dense.estimate.to_bits());
+    assert!(
+        auto.peak_mem() < dense.peak_mem(),
+        "auto peak {} must be strictly below dense {}",
+        auto.peak_mem(),
+        dense.peak_mem()
+    );
+    assert_eq!(auto.peak_mem_dense(), dense.peak_mem());
+    assert_eq!(
+        auto.peak_bytes_saved(),
+        dense.peak_mem() - auto.peak_mem(),
+        "the reported delta is exactly the baseline gap"
+    );
+    assert_eq!(dense.peak_bytes_saved(), 0);
+    // the density probe drove real decisions: a fully-sparse sub with
+    // leaf density 1/12 and genuine savings
+    let leaf = auto
+        .storage
+        .iter()
+        .find(|d| d.storage_name() == "sparse" && (d.density - 1.0 / 12.0).abs() < 1e-9)
+        .expect("one-hot leaves stored sparse under auto");
+    assert!(leaf.bytes_saved() > 0);
+    assert!(leaf.resident_bytes < leaf.dense_bytes);
+    // dense runs report every table dense with nothing saved
+    assert!(dense
+        .storage
+        .iter()
+        .all(|d| d.storage_name() == "dense" && d.bytes_saved() == 0));
+}
+
+/// Under `Auto`, the sparse-aware exchange never ships a step that
+/// out-weighs the dense encoding: per rank, the largest step's received
+/// bytes and the streaming recv peak are bounded by the dense run's.
+#[test]
+fn auto_exchange_never_exceeds_dense_wire_bytes() {
+    let s = session(80, 420, 3, 55);
+    let run = |storage| {
+        s.count(&job(
+            "u10-2",
+            6,
+            ModeSelect::Pipeline,
+            ExchangeExec::Threaded,
+            storage,
+        ))
+        .unwrap()
+    };
+    let dense = run(StorageMode::Dense);
+    let auto = run(StorageMode::Auto);
+    let d = dense.measured.as_ref().expect("threaded run measures");
+    let a = auto.measured.as_ref().expect("threaded run measures");
+    for p in 0..6 {
+        assert!(
+            a.max_step_recv_bytes_per_rank[p] <= d.max_step_recv_bytes_per_rank[p],
+            "rank {p}: auto step bytes {} exceed dense {}",
+            a.max_step_recv_bytes_per_rank[p],
+            d.max_step_recv_bytes_per_rank[p]
+        );
+        assert!(a.recv_peak_per_rank[p] <= d.recv_peak_per_rank[p], "rank {p}");
+        assert!(a.recv_peak_per_rank[p] > 0, "rank {p} received nothing");
+    }
+    assert!(auto.peak_mem() <= dense.peak_mem());
+}
+
+/// The JSON contract behind `harpsg count --json --table-storage …`:
+/// `config.table_storage` names the mode, the `storage` array carries
+/// per-sub density/storage/bytes_saved, and the `memory` section reports
+/// the dense baseline and the saved delta.
+#[test]
+fn json_report_carries_storage_section() {
+    let s = session(60, 320, 3, 21);
+    let parse = |r: &JobReport| harpsg::util::jsonparse::parse(&r.to_json_string()).unwrap();
+
+    let auto = s
+        .count(&job(
+            "u10-2",
+            5,
+            ModeSelect::Pipeline,
+            ExchangeExec::Threaded,
+            StorageMode::Auto,
+        ))
+        .unwrap();
+    let parsed = parse(&auto);
+    assert_eq!(
+        parsed
+            .get("config")
+            .unwrap()
+            .get("table_storage")
+            .unwrap()
+            .as_str(),
+        Some("auto")
+    );
+    let storage = parsed.get("storage").unwrap().as_arr().unwrap();
+    assert!(!storage.is_empty());
+    let mut saw_sparse = false;
+    for d in storage {
+        let density = d.get("density").unwrap().as_f64().unwrap();
+        assert!((0.0..=1.0).contains(&density));
+        let name = d.get("storage").unwrap().as_str().unwrap();
+        assert!(["dense", "sparse", "mixed"].contains(&name));
+        let dense_b = d.get("dense_bytes").unwrap().as_f64().unwrap();
+        let resident = d.get("resident_bytes").unwrap().as_f64().unwrap();
+        let saved = d.get("bytes_saved").unwrap().as_f64().unwrap();
+        assert!(
+            ((dense_b - resident).max(0.0) - saved).abs() < 1e-9,
+            "bytes_saved must equal max(dense - resident, 0)"
+        );
+        if name == "sparse" {
+            saw_sparse = true;
+            assert!(resident < dense_b);
+        }
+    }
+    assert!(saw_sparse, "auto on u10-2 must store something sparse");
+    let mem = parsed.get("memory").unwrap();
+    let peak = mem.get("peak").unwrap().as_f64().unwrap();
+    let baseline = mem.get("peak_dense_baseline").unwrap().as_f64().unwrap();
+    let saved = mem.get("bytes_saved").unwrap().as_f64().unwrap();
+    assert!(baseline >= peak);
+    assert!((baseline - peak - saved).abs() < 1e-9);
+
+    // dense runs: baseline == peak, nothing saved
+    let dense = s
+        .count(&job(
+            "u10-2",
+            5,
+            ModeSelect::Pipeline,
+            ExchangeExec::Threaded,
+            StorageMode::Dense,
+        ))
+        .unwrap();
+    let parsed = parse(&dense);
+    assert_eq!(
+        parsed
+            .get("config")
+            .unwrap()
+            .get("table_storage")
+            .unwrap()
+            .as_str(),
+        Some("dense")
+    );
+    let mem = parsed.get("memory").unwrap();
+    assert_eq!(mem.get("bytes_saved").unwrap().as_f64(), Some(0.0));
+    assert_eq!(
+        mem.get("peak").unwrap().as_f64(),
+        mem.get("peak_dense_baseline").unwrap().as_f64()
+    );
+}
