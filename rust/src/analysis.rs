@@ -1,0 +1,373 @@
+//! Static-analysis gate over the crate sources.
+//!
+//! The concurrency refactor that introduced [`crate::util::shim`] comes
+//! with three whole-tree invariants that `rustc` cannot enforce on its
+//! own. This module is a small, dependency-free checker for them, run in
+//! CI as the `analysis-gate` binary and unit-tested here against both the
+//! live tree and seeded violations:
+//!
+//! 1. **Atomics go through the shim.** No file outside `util/shim` may
+//!    name `std`/`core` atomics or a memory-ordering constant. Call sites
+//!    must use the ordering-free shim API so the model checker sees every
+//!    operation and orderings are chosen in exactly one place.
+//! 2. **Every `unsafe` site carries a `SAFETY:` comment.** A line comment
+//!    stating the proof obligation must sit directly above the statement
+//!    containing the `unsafe` token (attributes and the statement's own
+//!    continuation lines may intervene; blank lines and completed
+//!    statements may not).
+//! 3. **Fabric types stay behind the executors.** Only `comm/` (the
+//!    fabrics themselves) and `coordinator/` (the executors and the
+//!    distributed driver) may name a `Fabric` type; everything else must
+//!    go through the executor layer so delivery stays canonical.
+//!
+//! The matcher works on comment-stripped lines, so prose mentions of the
+//! forbidden names are fine. The needles the checker searches for are
+//! assembled at runtime (`concat`) so this file does not flag itself.
+
+use std::fs;
+use std::io;
+use std::path::Path;
+
+/// One gate violation: which rule fired, where, and the offending text.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Violation {
+    /// Path relative to the scanned root, with `/` separators.
+    pub file: String,
+    /// 1-based line number.
+    pub line: usize,
+    /// One of [`RULE_ATOMICS`], [`RULE_SAFETY`], [`RULE_FABRIC`].
+    pub rule: &'static str,
+    pub detail: String,
+}
+
+pub const RULE_ATOMICS: &str = "shim-atomics";
+pub const RULE_SAFETY: &str = "safety-comment";
+pub const RULE_FABRIC: &str = "fabric-access";
+
+/// How many lines above an `unsafe` token the `SAFETY:` comment may
+/// start, counting the statement's own continuation lines.
+const SAFETY_LOOKBACK: usize = 8;
+
+struct Needles {
+    sync_atomic: String,
+    orderings: Vec<String>,
+    unsafe_kw: String,
+    safety_tag: String,
+    fabric: String,
+}
+
+impl Needles {
+    // Built at runtime so the checker's own source never contains the
+    // patterns it hunts for.
+    fn new() -> Self {
+        Needles {
+            sync_atomic: ["::sync", "::atomic"].concat(),
+            orderings: ["Relaxed", "SeqCst", "Acquire", "Release", "AcqRel"]
+                .iter()
+                .map(|v| ["Ordering", "::", v].concat())
+                .collect(),
+            unsafe_kw: ["un", "safe"].concat(),
+            safety_tag: ["SAFE", "TY:"].concat(),
+            fabric: ["Fab", "ric"].concat(),
+        }
+    }
+}
+
+/// The code part of a source line: everything before the first `//`.
+/// (Good enough for this tree — no string literal here embeds `//`.)
+fn strip_comment(line: &str) -> &str {
+    match line.find("//") {
+        Some(p) => &line[..p],
+        None => line,
+    }
+}
+
+fn is_comment_line(line: &str) -> bool {
+    line.trim_start().starts_with("//")
+}
+
+fn is_attr_line(line: &str) -> bool {
+    line.trim_start().starts_with("#[")
+}
+
+fn is_ident_char(c: Option<char>) -> bool {
+    matches!(c, Some(c) if c.is_alphanumeric() || c == '_')
+}
+
+/// Whole-word occurrence check: `needle` must not be embedded in a
+/// longer identifier.
+fn contains_word(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let pre = hay[..at].chars().next_back();
+        let post = hay[at + needle.len()..].chars().next();
+        if !is_ident_char(pre) && !is_ident_char(post) {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// Identifier-suffix occurrence check: matches `needle` and any longer
+/// identifier ending in it (`Fabric` must catch `ThreadedFabric` too),
+/// but not identifiers that merely continue past it.
+fn contains_word_suffix(hay: &str, needle: &str) -> bool {
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle) {
+        let at = from + p;
+        let post = hay[at + needle.len()..].chars().next();
+        if !is_ident_char(post) {
+            return true;
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
+/// Does a `SAFETY:` comment sit directly above line index `i`?
+/// Climbs over comment lines, attributes, and unfinished statement
+/// lines (e.g. `let slot =`); stops at blank lines or lines whose code
+/// part ends a statement or block (`;`, `{`, `}`).
+fn has_safety_comment_above(lines: &[&str], i: usize, n: &Needles) -> bool {
+    let lo = i.saturating_sub(SAFETY_LOOKBACK);
+    for j in (lo..i).rev() {
+        let line = lines[j];
+        if line.trim().is_empty() {
+            return false;
+        }
+        if is_comment_line(line) {
+            if line.contains(&n.safety_tag) {
+                return true;
+            }
+            continue;
+        }
+        if is_attr_line(line) {
+            continue;
+        }
+        let code = strip_comment(line).trim_end();
+        if code.ends_with(';') || code.ends_with('{') || code.ends_with('}') {
+            return false;
+        }
+        // a continuation line of the statement that holds the token —
+        // but it may still carry a trailing SAFETY comment
+        if line.contains(&n.safety_tag) {
+            return true;
+        }
+    }
+    false
+}
+
+fn atomics_whitelisted(file: &str) -> bool {
+    file.contains("util/shim")
+}
+
+fn fabric_whitelisted(file: &str) -> bool {
+    file.starts_with("comm/") || file.starts_with("coordinator/")
+}
+
+/// Check one file's source. `file` is the root-relative path used both
+/// for reporting and for the per-rule whitelists.
+pub fn check_source(file: &str, src: &str) -> Vec<Violation> {
+    let n = Needles::new();
+    let lines: Vec<&str> = src.lines().collect();
+    let mut out = Vec::new();
+    for (i, raw) in lines.iter().enumerate() {
+        let code = strip_comment(raw);
+        if code.trim().is_empty() {
+            continue;
+        }
+        let mut push = |rule, detail: String| {
+            out.push(Violation {
+                file: file.to_string(),
+                line: i + 1,
+                rule,
+                detail,
+            })
+        };
+        if !atomics_whitelisted(file) {
+            if code.contains(&n.sync_atomic) {
+                push(
+                    RULE_ATOMICS,
+                    format!("direct {} use; go through util::shim", n.sync_atomic),
+                );
+            }
+            if let Some(o) = n.orderings.iter().find(|o| code.contains(o.as_str())) {
+                push(
+                    RULE_ATOMICS,
+                    format!("explicit {o}; orderings are chosen by util::shim"),
+                );
+            }
+        }
+        if contains_word(code, &n.unsafe_kw) && !has_safety_comment_above(&lines, i, &n) {
+            push(
+                RULE_SAFETY,
+                format!("{} block without a {} comment above", n.unsafe_kw, n.safety_tag),
+            );
+        }
+        if !fabric_whitelisted(file) && contains_word_suffix(code, &n.fabric) {
+            push(
+                RULE_FABRIC,
+                format!(
+                    "{} access outside comm/ and coordinator/; use the executor layer",
+                    n.fabric
+                ),
+            );
+        }
+    }
+    out
+}
+
+fn walk(dir: &Path, files: &mut Vec<std::path::PathBuf>) -> io::Result<()> {
+    for entry in fs::read_dir(dir)? {
+        let path = entry?.path();
+        if path.is_dir() {
+            walk(&path, files)?;
+        } else if path.extension().is_some_and(|e| e == "rs") {
+            files.push(path);
+        }
+    }
+    Ok(())
+}
+
+/// Check every `.rs` file under `root` (normally the crate's `src/`).
+/// Files are visited in sorted order so reports are deterministic.
+pub fn check_tree(root: &Path) -> io::Result<Vec<Violation>> {
+    let mut files = Vec::new();
+    walk(root, &mut files)?;
+    files.sort();
+    let mut out = Vec::new();
+    for path in files {
+        let rel = path
+            .strip_prefix(root)
+            .unwrap_or(&path)
+            .to_string_lossy()
+            .replace('\\', "/");
+        let src = fs::read_to_string(&path)?;
+        out.extend(check_source(&rel, &src));
+    }
+    Ok(out)
+}
+
+/// Render violations one per line, `file:line [rule] detail`.
+pub fn render(violations: &[Violation]) -> String {
+    let mut s = String::new();
+    for v in violations {
+        s.push_str(&format!("{}:{} [{}] {}\n", v.file, v.line, v.rule, v.detail));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    // Seeded sources are assembled at runtime for the same reason the
+    // needles are: the gate scans this file too.
+    fn kw() -> String {
+        ["un", "safe"].concat()
+    }
+
+    #[test]
+    fn gate_passes_on_the_tree() {
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src");
+        let v = check_tree(&root).expect("scan src tree");
+        assert!(v.is_empty(), "gate violations in tree:\n{}", render(&v));
+    }
+
+    #[test]
+    fn atomic_import_outside_shim_is_flagged() {
+        let src = ["use std", "::sync", "::atomic::AtomicU64;\n"].concat();
+        let v = check_source("colorcount/x.rs", &src);
+        assert_eq!(v.len(), 1, "{}", render(&v));
+        assert_eq!(v[0].rule, RULE_ATOMICS);
+        assert_eq!(v[0].line, 1);
+        assert!(check_source("util/shim/x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn explicit_ordering_is_flagged_but_comments_are_not() {
+        let ord = ["Ordering", "::", "Relaxed"].concat();
+        let src = format!("fn f(a: &A) {{ a.load({ord}); }}\n");
+        let v = check_source("graph.rs", &src);
+        assert_eq!(v.len(), 1, "{}", render(&v));
+        assert_eq!(v[0].rule, RULE_ATOMICS);
+        let commented = format!("// historical note about {ord}\n");
+        assert!(check_source("graph.rs", &commented).is_empty());
+    }
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = format!("{} impl Send for X {{}}\n", kw());
+        let v = check_source("sched.rs", &src);
+        assert_eq!(v.len(), 1, "{}", render(&v));
+        assert_eq!(v[0].rule, RULE_SAFETY);
+    }
+
+    #[test]
+    fn safety_comment_above_satisfies_the_rule() {
+        let tag = ["SAFE", "TY:"].concat();
+        let src = format!(
+            "// {tag} X holds no thread-affine state.\n{} impl Send for X {{}}\n",
+            kw()
+        );
+        assert!(check_source("sched.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn safety_comment_climbs_continuation_lines_but_not_statements() {
+        let tag = ["SAFE", "TY:"].concat();
+        // comment above a multi-line statement: accepted
+        let ok = format!(
+            "// {tag} window is claimed once.\nlet slot =\n    {} {{ w() }};\n",
+            kw()
+        );
+        assert!(check_source("sched.rs", &ok).is_empty());
+        // a completed statement between comment and token: rejected
+        let bad = format!(
+            "// {tag} window is claimed once.\nlet n = 3;\nlet s = {} {{ w() }};\n",
+            kw()
+        );
+        let v = check_source("sched.rs", &bad);
+        assert_eq!(v.len(), 1, "{}", render(&v));
+        assert_eq!(v[0].rule, RULE_SAFETY);
+        // a blank line between comment and token: rejected
+        let blank = format!(
+            "// {tag} window is claimed once.\n\nlet s = {} {{ w() }};\n",
+            kw()
+        );
+        assert_eq!(check_source("sched.rs", &blank).len(), 1);
+    }
+
+    #[test]
+    fn unsafe_inside_identifiers_or_comments_is_ignored() {
+        let src = format!("let {}_mode = 3; // {} is discussed here\n", kw(), kw());
+        // `unsafe_mode` fails the word-boundary check; the comment is
+        // stripped before matching
+        assert!(check_source("sched.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn fabric_outside_comm_and_coordinator_is_flagged() {
+        let ty = ["Threaded", "Fab", "ric"].concat();
+        let src = format!("let f = {ty}::connect(2, 1);\n");
+        let v = check_source("colorcount/x.rs", &src);
+        assert_eq!(v.len(), 1, "{}", render(&v));
+        assert_eq!(v[0].rule, RULE_FABRIC);
+        assert!(check_source("comm/x.rs", &src).is_empty());
+        assert!(check_source("coordinator/x.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn render_is_one_line_per_violation() {
+        let v = vec![Violation {
+            file: "a.rs".into(),
+            line: 7,
+            rule: RULE_FABRIC,
+            detail: "d".into(),
+        }];
+        assert_eq!(render(&v), "a.rs:7 [fabric-access] d\n");
+    }
+}

@@ -1,0 +1,32 @@
+//! CI entry point for the static-analysis gate ([`harpsg::analysis`]).
+//!
+//! Scans the crate's `src/` tree (or the directory given as the first
+//! argument) and exits non-zero if any gate rule fires, printing one
+//! `file:line [rule] detail` line per violation.
+
+use std::path::PathBuf;
+use std::process::ExitCode;
+
+use harpsg::analysis;
+
+fn main() -> ExitCode {
+    let root = std::env::args()
+        .nth(1)
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("src"));
+    match analysis::check_tree(&root) {
+        Ok(v) if v.is_empty() => {
+            println!("analysis gate: clean ({})", root.display());
+            ExitCode::SUCCESS
+        }
+        Ok(v) => {
+            eprint!("{}", analysis::render(&v));
+            eprintln!("analysis gate: {} violation(s) in {}", v.len(), root.display());
+            ExitCode::FAILURE
+        }
+        Err(e) => {
+            eprintln!("analysis gate: cannot scan {}: {e}", root.display());
+            ExitCode::FAILURE
+        }
+    }
+}

@@ -37,7 +37,7 @@ use super::storage::RowsRef;
 use super::table::{Count, CountTable};
 use crate::combin::SplitTable;
 use crate::sched::make_tasks;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use crate::util::shim::AtomicUsize;
 use std::time::Instant;
 
 /// One neighbor-pair batch of a combine: `pairs` are `(v_row, u_row)`
@@ -175,12 +175,52 @@ struct ExecTask {
 }
 
 /// Raw-pointer handle that lets scoped workers write disjoint windows of
-/// a shared buffer. SAFETY: every use below pairs it with a claim scheme
-/// (atomic task/group counters) that makes the written windows disjoint.
+/// a shared buffer. Every use below pairs it with a claim scheme (atomic
+/// task/group counters) that makes the written windows disjoint; debug
+/// builds additionally verify disjointness with a [`ClaimTracker`].
 #[derive(Clone, Copy)]
 struct SendPtr(*mut Count);
+
+// SAFETY: moving the raw pointer between threads is sound because every
+// dereference goes through a window claimed exactly once from an atomic
+// counter (see the `from_raw_parts_mut` sites), so no two threads ever
+// write overlapping memory through it.
 unsafe impl Send for SendPtr {}
+
+// SAFETY: shared references to SendPtr only copy the pointer value; all
+// writes through it are to pairwise-disjoint claimed windows (same claim
+// scheme as the Send impl), so concurrent use cannot race.
 unsafe impl Sync for SendPtr {}
+
+/// Debug-build ledger of the windows workers have claimed through a
+/// [`SendPtr`]: asserts no window key is ever claimed twice (the
+/// disjointness every unsafe slice reconstruction relies on), and that a
+/// phase ends with every expected window claimed exactly once.
+#[cfg(debug_assertions)]
+struct ClaimTracker {
+    claimed: crate::util::shim::Mutex<std::collections::HashSet<usize>>,
+}
+
+#[cfg(debug_assertions)]
+impl ClaimTracker {
+    fn new() -> Self {
+        ClaimTracker {
+            claimed: crate::util::shim::Mutex::new(std::collections::HashSet::new()),
+        }
+    }
+
+    fn claim(&self, key: usize) {
+        assert!(
+            self.claimed.lock().unwrap().insert(key),
+            "SendPtr window {key} claimed twice — disjointness violated"
+        );
+    }
+
+    fn assert_complete(&self, expected: usize) {
+        let n = self.claimed.lock().unwrap().len();
+        assert_eq!(n, expected, "unclaimed SendPtr windows at end of phase");
+    }
+}
 
 /// Run `worker` on `n_workers` scoped threads (inline when 1) and collect
 /// each worker's result in worker-index order.
@@ -296,15 +336,19 @@ fn aggregate_phase(
     debug_assert_eq!(partials.len(), tasks.len() * n_agg);
     let next = AtomicUsize::new(0);
     let ptr = SendPtr(partials.as_mut_ptr());
+    #[cfg(debug_assertions)]
+    let claims = ClaimTracker::new();
     let worker = |_w: usize| -> (f64, u64, u64) {
         let t0 = Instant::now();
         let mut my_tasks = 0u64;
         let mut my_pairs = 0u64;
         loop {
-            let i = next.fetch_add(1, Ordering::Relaxed);
+            let i = next.fetch_add(1);
             if i >= tasks.len() {
                 break;
             }
+            #[cfg(debug_assertions)]
+            claims.claim(i);
             let t = &tasks[i];
             let b = &batches[t.batch as usize];
             // SAFETY: slot `i` is an `n_agg`-wide window written only by
@@ -320,7 +364,10 @@ fn aggregate_phase(
         }
         (t0.elapsed().as_secs_f64(), my_tasks, my_pairs)
     };
-    run_workers(n_workers, worker)
+    let recs = run_workers(n_workers, worker);
+    #[cfg(debug_assertions)]
+    claims.assert_complete(tasks.len());
+    recs
 }
 
 /// Phase 2: claim per-vertex groups, fold each group's task partials in
@@ -344,16 +391,20 @@ fn contract_phase(
     let n_sets = out.n_sets;
     let n_passive = passive.n_sets();
     let optr = SendPtr(out.data.as_mut_ptr());
+    #[cfg(debug_assertions)]
+    let claims = ClaimTracker::new();
     let worker = |_w: usize| -> (f64, u64) {
         let t0 = Instant::now();
         let mut units = 0u64;
         let mut fold: Vec<Count> = vec![0.0; n_agg];
         let mut prow_buf: Vec<Count> = vec![0.0; n_passive];
         loop {
-            let gi = next.fetch_add(1, Ordering::Relaxed);
+            let gi = next.fetch_add(1);
             if gi >= groups.len() {
                 break;
             }
+            #[cfg(debug_assertions)]
+            claims.claim(gi);
             let (lo, hi) = groups[gi];
             let v = tasks[lo].vertex as usize;
             let arow: &[Count] = if hi - lo == 1 {
@@ -376,7 +427,10 @@ fn contract_phase(
         }
         (t0.elapsed().as_secs_f64(), units)
     };
-    run_workers(n_workers, worker)
+    let recs = run_workers(n_workers, worker);
+    #[cfg(debug_assertions)]
+    claims.assert_complete(groups.len());
+    recs
 }
 
 /// Execute one combine (the factored Eq-1 aggregate + contract) over the
@@ -524,6 +578,24 @@ mod tests {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
             }
         }
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "claimed twice")]
+    fn claim_tracker_rejects_overlap() {
+        let t = ClaimTracker::new();
+        t.claim(3);
+        t.claim(3);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "unclaimed SendPtr windows")]
+    fn claim_tracker_rejects_incomplete_phase() {
+        let t = ClaimTracker::new();
+        t.claim(0);
+        t.assert_complete(2);
     }
 
     /// Representation independence: sparse active and/or passive sources

@@ -418,6 +418,9 @@ impl RowsRef<'_> {
             RowsRef::Dense(t) => {
                 let n = t.n_sets;
                 debug_assert!(dst.len() == n && (u + 1) * n <= t.data.len());
+                // SAFETY: `u` is a validated row index (`(u + 1) * n <=
+                // data.len()`, checked by callers and debug-asserted
+                // above), so the window is in bounds.
                 unsafe {
                     let urow = t.data.get_unchecked(u * n..(u + 1) * n);
                     for (a, &x) in dst.iter_mut().zip(urow) {
@@ -429,6 +432,9 @@ impl RowsRef<'_> {
                 debug_assert_eq!(dst.len(), t.n_sets);
                 for &(rank, x) in t.row_entries(u) {
                     debug_assert!((rank as usize) < dst.len());
+                    // SAFETY: stored set ranks were validated `< n_sets`
+                    // at table construction and `dst.len() == n_sets` is
+                    // the documented precondition (debug-asserted above).
                     unsafe {
                         *dst.get_unchecked_mut(rank as usize) += x;
                     }

@@ -20,8 +20,7 @@
 
 use super::packet::Packet;
 use crate::coordinator::memory::{MemClass, SharedAccountant};
-use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Condvar, Mutex};
+use crate::util::shim::{AtomicU64, Condvar, Mutex};
 use std::time::Duration;
 
 /// Mailbox fabric for `n_ranks` simulated ranks.
@@ -135,6 +134,11 @@ pub struct ThreadedFabric {
     recv_bytes: Vec<Vec<AtomicU64>>,
     /// `[sender][step]` next sequence number
     seqs: Vec<Vec<AtomicU64>>,
+    /// `[rank][step]` drain count — [`Self::recv_step`] is a one-shot
+    /// collective per (rank, step); a second drain means the executor's
+    /// step bookkeeping is broken, so it panics rather than returning an
+    /// empty (silently wrong) packet set
+    drained: Vec<Vec<AtomicU64>>,
     /// payload bytes currently parked in inboxes (sent, not yet received)
     in_flight: SharedAccountant,
 }
@@ -155,6 +159,7 @@ impl ThreadedFabric {
             sent_msgs: counters(n_ranks, n_steps),
             recv_bytes: counters(n_ranks, n_steps),
             seqs: counters(n_ranks, n_steps),
+            drained: counters(n_ranks, n_steps),
             in_flight: SharedAccountant::new(),
         }
     }
@@ -169,9 +174,9 @@ impl ThreadedFabric {
         assert!(from < self.n_ranks, "sender {from} out of range");
         assert!(step < self.n_steps, "step {step} out of range ({})", self.n_steps);
         let bytes = p.bytes();
-        self.sent_bytes[from][step].fetch_add(bytes, Ordering::Relaxed);
-        self.sent_msgs[from][step].fetch_add(1, Ordering::Relaxed);
-        let seq = self.seqs[from][step].fetch_add(1, Ordering::Relaxed);
+        self.sent_bytes[from][step].fetch_add(bytes);
+        self.sent_msgs[from][step].fetch_add(1);
+        let seq = self.seqs[from][step].fetch_add(1);
         self.in_flight.alloc(MemClass::RecvBuffer, bytes);
         {
             let mut ib = self.inboxes[to].lock().unwrap();
@@ -188,8 +193,14 @@ impl ThreadedFabric {
     /// Block until at least `n_expected` packets for `step` sit in rank
     /// `p`'s inbox, then take every packet of that step, sorted by
     /// `(sender, seq)`. Packets of other steps stay queued. Panics if the
-    /// wait exceeds [`RECV_TIMEOUT`] (a wedged exchange, not slow I/O).
+    /// wait exceeds [`RECV_TIMEOUT`] (a wedged exchange, not slow I/O) or
+    /// if the same (rank, step) is drained twice (an executor bug: the
+    /// second caller would block forever or steal late packets).
     pub fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> Vec<Packet> {
+        assert!(p < self.n_ranks, "receiver {p} out of range");
+        assert!(step < self.n_steps, "step {step} out of range ({})", self.n_steps);
+        let drains = self.drained[p][step].fetch_add(1);
+        assert!(drains == 0, "rank {p}: double drain of step {step}");
         let mut ib = self.inboxes[p].lock().unwrap();
         while ib.iter().filter(|q| q.step == step).count() < n_expected {
             let (guard, timeout) = self.arrivals[p].wait_timeout(ib, RECV_TIMEOUT).unwrap();
@@ -215,7 +226,7 @@ impl ThreadedFabric {
         drop(ib);
         got.sort_by_key(|q| (q.sender, q.seq));
         let bytes: u64 = got.iter().map(|q| q.pkt.bytes()).sum();
-        self.recv_bytes[p][step].fetch_add(bytes, Ordering::Relaxed);
+        self.recv_bytes[p][step].fetch_add(bytes);
         self.in_flight.free(MemClass::RecvBuffer, bytes);
         got.into_iter().map(|q| q.pkt).collect()
     }
@@ -227,17 +238,17 @@ impl ThreadedFabric {
 
     /// Bytes rank `p` sent at `step`.
     pub fn sent_bytes(&self, p: usize, step: usize) -> u64 {
-        self.sent_bytes[p][step].load(Ordering::Relaxed)
+        self.sent_bytes[p][step].load()
     }
 
     /// Messages rank `p` sent at `step`.
     pub fn sent_msgs(&self, p: usize, step: usize) -> u64 {
-        self.sent_msgs[p][step].load(Ordering::Relaxed)
+        self.sent_msgs[p][step].load()
     }
 
     /// Bytes rank `p` received (drained) at `step`.
     pub fn recv_bytes(&self, p: usize, step: usize) -> u64 {
-        self.recv_bytes[p][step].load(Ordering::Relaxed)
+        self.recv_bytes[p][step].load()
     }
 
     /// Total bytes rank `p` sent across all steps (matches the sequential
@@ -463,5 +474,160 @@ mod tests {
         assert_eq!(senders.len(), 2);
         assert_eq!(senders[0].sender(), 0, "sorted by sender, not arrival");
         assert_eq!(senders[1].sender(), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "double drain")]
+    fn threaded_double_drain_detected() {
+        // recv_step is a one-shot collective per (rank, step): a second
+        // drain is an executor bug and must fail loudly, not block or
+        // return an empty set
+        let fab = ThreadedFabric::new(2, 1);
+        fab.send(Packet::new(0, 1, 0, 0, 1, vec![1.0]));
+        let got = fab.recv_step(1, 0, 1);
+        assert_eq!(got.len(), 1);
+        let _ = fab.recv_step(1, 0, 0);
+    }
+
+    #[test]
+    fn threaded_distinct_steps_are_independent_drains() {
+        // the double-drain tracker is keyed per (rank, step): draining
+        // every step of a rank once is the normal pipelined pattern
+        let fab = ThreadedFabric::new(2, 2);
+        fab.send(Packet::new(0, 1, 0, 0, 1, vec![1.0]));
+        fab.send(Packet::new(0, 1, 1, 0, 1, vec![2.0]));
+        assert_eq!(fab.recv_step(1, 0, 1).len(), 1);
+        assert_eq!(fab.recv_step(1, 1, 1).len(), 1);
+        fab.assert_empty();
+    }
+
+    #[test]
+    #[should_panic(expected = "stranded")]
+    fn teardown_detects_partially_drained_exchange() {
+        // a partial drain (step 0 taken, step 1 left queued) must be
+        // caught by the end-of-exchange teardown check
+        let fab = ThreadedFabric::new(2, 2);
+        fab.send(Packet::new(0, 1, 0, 0, 1, vec![1.0]));
+        fab.send(Packet::new(0, 1, 1, 0, 1, vec![2.0]));
+        let _ = fab.recv_step(1, 0, 1);
+        fab.assert_empty();
+    }
+
+    #[test]
+    fn reversed_arrival_still_folds_canonically() {
+        // physical arrival order fully inverted (later steps first,
+        // higher sender ranks first): every drain still comes out in
+        // canonical (sender, seq) order with byte accounting intact
+        let fab = ThreadedFabric::new(3, 2);
+        fab.send(Packet::new(1, 2, 1, 0, 3, payload(1, 1, 0)));
+        fab.send(Packet::new(1, 2, 0, 0, 3, payload(1, 0, 0)));
+        fab.send(Packet::new(0, 2, 1, 0, 3, payload(0, 1, 0)));
+        fab.send(Packet::new(0, 2, 1, 0, 3, payload(0, 1, 1)));
+        fab.send(Packet::new(0, 2, 0, 0, 3, payload(0, 0, 0)));
+        let s0 = fab.recv_step(2, 0, 2);
+        let got0: Vec<usize> = s0.iter().map(|p| p.sender()).collect();
+        assert_eq!(got0, [0, 1]);
+        assert_eq!(s0[0].dense_rows(), payload(0, 0, 0).as_slice());
+        let s1 = fab.recv_step(2, 1, 3);
+        let got1: Vec<usize> = s1.iter().map(|p| p.sender()).collect();
+        assert_eq!(got1, [0, 0, 1], "senders ascending, seq within sender");
+        assert_eq!(s1[0].dense_rows(), payload(0, 1, 0).as_slice());
+        assert_eq!(s1[1].dense_rows(), payload(0, 1, 1).as_slice());
+        fab.assert_empty();
+        assert_eq!(fab.in_flight_bytes(), 0);
+    }
+}
+
+/// Exhaustive small-config schedules of the threaded fabric protocol
+/// under the bounded-interleaving model checker: canonical drain order,
+/// conservation of in-flight bytes, and deadlock reporting.
+#[cfg(all(test, feature = "model-check"))]
+mod model_tests {
+    use super::*;
+    use crate::util::shim::model;
+    use std::sync::Arc;
+
+    #[test]
+    fn model_two_senders_always_drain_canonically() {
+        // 2 senders × 1 receiver, one step: whatever order the sends
+        // land in, the receiver sees (sender, seq) canonical order and
+        // the ledger conserves
+        let pkt_bytes = Packet::new(0, 2, 0, 0, 1, vec![0.0]).bytes();
+        model::Model::new().preemption_bound(2).check(move || {
+            let fab = Arc::new(ThreadedFabric::new(3, 1));
+            let f0 = Arc::clone(&fab);
+            let s0 = model::spawn(move || {
+                f0.send(Packet::new(0, 2, 0, 0, 1, vec![10.0]));
+                f0.send(Packet::new(0, 2, 0, 0, 1, vec![11.0]));
+            });
+            let f1 = Arc::clone(&fab);
+            let s1 = model::spawn(move || {
+                f1.send(Packet::new(1, 2, 0, 0, 1, vec![20.0]));
+            });
+            let fr = Arc::clone(&fab);
+            let r = model::spawn(move || {
+                let got = fr.recv_step(2, 0, 3);
+                let vals: Vec<f32> = got.iter().map(|p| p.dense_rows()[0]).collect();
+                assert_eq!(vals, [10.0, 11.0, 20.0], "canonical (sender, seq) order");
+            });
+            s0.join();
+            s1.join();
+            r.join();
+            fab.assert_empty();
+            assert_eq!(fab.in_flight_bytes(), 0, "all charged bytes released");
+            assert!(fab.in_flight_peak() >= pkt_bytes, "peak below one packet");
+            assert!(fab.in_flight_peak() <= 3 * pkt_bytes);
+            assert_eq!(fab.recv_bytes(2, 0), 3 * pkt_bytes);
+        });
+    }
+
+    #[test]
+    fn model_two_rank_two_step_pipeline() {
+        // the Fig-3 overlap shape on 2 ranks × 2 steps: each rank posts
+        // both steps' sends up front (so a step-1 packet can arrive
+        // before step 0 is drained), then drains its steps in order.
+        // Every schedule must complete with canonical per-step payloads.
+        model::Model::new().preemption_bound(2).check(|| {
+            let fab = Arc::new(ThreadedFabric::new(2, 2));
+            let run = |fab: Arc<ThreadedFabric>, r: usize| {
+                let q = 1 - r;
+                fab.send(Packet::new(r, q, 0, 0, 1, vec![(10 * r) as f32]));
+                fab.send(Packet::new(r, q, 1, 0, 1, vec![(10 * r + 1) as f32]));
+                let s0 = fab.recv_step(r, 0, 1);
+                assert_eq!(s0[0].dense_rows(), &[(10 * q) as f32]);
+                let s1 = fab.recv_step(r, 1, 1);
+                assert_eq!(s1[0].dense_rows(), &[(10 * q + 1) as f32]);
+            };
+            let f0 = Arc::clone(&fab);
+            let t0 = model::spawn(move || run(f0, 0));
+            let f1 = Arc::clone(&fab);
+            let t1 = model::spawn(move || run(f1, 1));
+            t0.join();
+            t1.join();
+            fab.assert_empty();
+            assert_eq!(fab.in_flight_bytes(), 0);
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn model_missing_packet_reported_as_deadlock() {
+        // the receiver expects two packets but only one is ever sent: in
+        // the model build the condvar wait cannot time out, so the
+        // checker must diagnose the blocked receiver as a deadlock (with
+        // its BlockedCondvar state in the report)
+        model::Model::new().check(|| {
+            let fab = Arc::new(ThreadedFabric::new(3, 1));
+            let fs = Arc::clone(&fab);
+            let s = model::spawn(move || {
+                fs.send(Packet::new(0, 2, 0, 0, 1, vec![1.0]));
+            });
+            let fr = Arc::clone(&fab);
+            let r = model::spawn(move || {
+                let _ = fr.recv_step(2, 0, 2);
+            });
+            s.join();
+            r.join();
+        });
     }
 }

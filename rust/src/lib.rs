@@ -34,6 +34,7 @@
     clippy::field_reassign_with_default
 )]
 
+pub mod analysis;
 pub mod api;
 pub mod baseline;
 pub mod colorcount;

@@ -1,10 +1,13 @@
 //! Small shared utilities: deterministic RNG, human formatting, a tiny
 //! JSON writer (no serde facade crate is vendored in this environment),
-//! and an in-repo property-testing harness.
+//! an in-repo property-testing harness, and the sync-primitive shim that
+//! every concurrent component routes its atomics and locks through
+//! (`shim` — swap in the model checker with `--features model-check`).
 
 pub mod jsonparse;
 pub mod prop;
 pub mod rng;
+pub mod shim;
 
 pub use rng::{mix2, splitmix64, Rng};
 

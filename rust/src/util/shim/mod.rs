@@ -1,0 +1,156 @@
+//! Sync-primitive abstraction layer: the one place the crate touches
+//! atomics and blocking primitives.
+//!
+//! Every concurrent component (`coordinator::memory::SharedAccountant`,
+//! `comm::mailbox::ThreadedFabric`, the `colorcount::parallel` task
+//! counters) goes through these types instead of `std::sync` directly —
+//! the static-analysis gate (`crate::analysis`) enforces it. In a normal
+//! build the shim compiles to the plain std primitives with relaxed
+//! atomic orderings (exactly what the code used before the shim existed:
+//! none of the call sites rely on cross-variable ordering, only on the
+//! atomicity of each RMW). With `--features model-check` the same API is
+//! backed by [`model`], a loom-style deterministic bounded-interleaving
+//! explorer: each operation becomes a schedule point, and `Mutex` /
+//! `Condvar` are instrumented variants that cooperate with the model
+//! scheduler while leaving code outside an exploration on the real
+//! primitives.
+//!
+//! The atomic API is deliberately **ordering-free**: call sites cannot
+//! choose an `Ordering`, so the model build can run everything SeqCst
+//! (interleaving exploration subsumes weak-memory reordering for these
+//! protocols) while the normal build stays relaxed.
+
+#[cfg(feature = "model-check")]
+pub mod model;
+
+#[cfg(feature = "model-check")]
+pub use model::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+#[cfg(not(feature = "model-check"))]
+pub use std::sync::{Condvar, Mutex, MutexGuard, WaitTimeoutResult};
+
+use std::sync::atomic::Ordering;
+use std::sync::atomic::{AtomicU64 as StdAtomicU64, AtomicUsize as StdAtomicUsize};
+
+#[cfg(feature = "model-check")]
+const ORD: Ordering = Ordering::SeqCst;
+#[cfg(not(feature = "model-check"))]
+const ORD: Ordering = Ordering::Relaxed;
+
+/// Schedule point: under the model checker, hand control back to the
+/// scheduler before the operation; a no-op otherwise (including for
+/// threads that are not part of an active exploration).
+#[inline]
+fn schedule_point() {
+    #[cfg(feature = "model-check")]
+    model::yield_if_modeled();
+}
+
+/// Ordering-free `u64` atomic. Relaxed in normal builds, SeqCst plus a
+/// schedule point per operation under `model-check`.
+#[derive(Debug, Default)]
+pub struct AtomicU64(StdAtomicU64);
+
+impl AtomicU64 {
+    pub const fn new(v: u64) -> Self {
+        AtomicU64(StdAtomicU64::new(v))
+    }
+
+    #[inline]
+    pub fn load(&self) -> u64 {
+        schedule_point();
+        self.0.load(ORD)
+    }
+
+    #[inline]
+    pub fn store(&self, v: u64) {
+        schedule_point();
+        self.0.store(v, ORD);
+    }
+
+    /// Add and return the **previous** value.
+    #[inline]
+    pub fn fetch_add(&self, v: u64) -> u64 {
+        schedule_point();
+        self.0.fetch_add(v, ORD)
+    }
+
+    /// Monotone max and return the **previous** value.
+    #[inline]
+    pub fn fetch_max(&self, v: u64) -> u64 {
+        schedule_point();
+        self.0.fetch_max(v, ORD)
+    }
+
+    /// Compare-and-swap. Unlike the std `_weak` variant this never fails
+    /// spuriously (the model checker needs CAS loops to terminate within
+    /// a bounded schedule), so `Err` always carries a genuinely different
+    /// current value.
+    #[inline]
+    pub fn compare_exchange_weak(&self, current: u64, new: u64) -> Result<u64, u64> {
+        schedule_point();
+        self.0.compare_exchange(current, new, ORD, ORD)
+    }
+}
+
+/// Ordering-free `usize` atomic (the parallel executor's task counters).
+#[derive(Debug, Default)]
+pub struct AtomicUsize(StdAtomicUsize);
+
+impl AtomicUsize {
+    pub const fn new(v: usize) -> Self {
+        AtomicUsize(StdAtomicUsize::new(v))
+    }
+
+    #[inline]
+    pub fn load(&self) -> usize {
+        schedule_point();
+        self.0.load(ORD)
+    }
+
+    /// Add and return the **previous** value.
+    #[inline]
+    pub fn fetch_add(&self, v: usize) -> usize {
+        schedule_point();
+        self.0.fetch_add(v, ORD)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn atomics_roundtrip() {
+        let a = AtomicU64::new(5);
+        assert_eq!(a.fetch_add(3), 5);
+        assert_eq!(a.load(), 8);
+        a.store(2);
+        assert_eq!(a.fetch_max(7), 2);
+        assert_eq!(a.fetch_max(1), 7);
+        assert_eq!(a.compare_exchange_weak(7, 9), Ok(7));
+        assert_eq!(a.compare_exchange_weak(7, 11), Err(9));
+        let u = AtomicUsize::new(0);
+        assert_eq!(u.fetch_add(1), 0);
+        assert_eq!(u.load(), 1);
+    }
+
+    #[test]
+    fn locks_roundtrip() {
+        // outside an exploration the shim locks behave like std locks,
+        // model-check feature on or off
+        let m = Mutex::new(1u32);
+        {
+            let mut g = m.lock().unwrap();
+            *g += 1;
+        }
+        assert_eq!(*m.lock().unwrap(), 2);
+        let cv = Condvar::new();
+        let g = m.lock().unwrap();
+        let (g, t) = cv
+            .wait_timeout(g, std::time::Duration::from_millis(1))
+            .unwrap();
+        assert!(t.timed_out());
+        drop(g);
+    }
+}

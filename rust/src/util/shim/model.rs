@@ -1,0 +1,934 @@
+//! Deterministic bounded-interleaving model checker (loom/CHESS style),
+//! compiled only under `--features model-check`.
+//!
+//! [`Model::check`] runs a closure many times, once per thread schedule.
+//! Threads spawned with [`spawn`] are real OS threads, but a scheduler
+//! serializes them: at every shim operation (atomic op, lock, condvar
+//! wait) the running thread parks and the coordinator picks who runs
+//! next. Exactly one model thread is ever runnable, so each execution is
+//! fully deterministic and replayable from the recorded decision vector.
+//! The schedule space is explored depth-first with a **preemption bound**
+//! (CHESS): a context switch away from a still-runnable thread counts as
+//! a preemption, and schedules needing more than the bound are pruned —
+//! small bounds are known to expose the overwhelming majority of real
+//! concurrency bugs while keeping the space exhaustive-izable.
+//!
+//! What a failed check reports: the panic message of the failing
+//! assertion (or a deadlock diagnosis with every thread's blocked state)
+//! plus the thread schedule that produced it.
+//!
+//! Scope: this explores **interleavings over sequentially consistent
+//! operations**. The shim runs all atomics SeqCst in this build, so
+//! weak-memory reorderings are out of scope — the protocols under test
+//! (accountant, mailbox) claim only interleaving-level invariants.
+
+use std::any::Any;
+use std::cell::RefCell;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicUsize as StdAtomicUsize, Ordering};
+use std::sync::{
+    Arc, Condvar as StdCondvar, LockResult, Mutex as StdMutex, MutexGuard as StdMutexGuard,
+    PoisonError, TryLockError,
+};
+use std::time::Duration;
+
+/// Sentinel panic payload used to unwind model threads when an
+/// exploration aborts (after a user panic or a deadlock); never reported
+/// as a failure itself.
+struct ModelAbort;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Status {
+    /// runnable, waiting for a grant
+    Ready,
+    /// currently executing (at most one thread at a time)
+    Running,
+    /// parked until the mutex with this id is released
+    BlockedMutex(usize),
+    /// parked until the condvar with this id is notified
+    BlockedCondvar(usize),
+    /// parked until the thread with this tid finishes
+    BlockedJoin(usize),
+    Finished,
+}
+
+struct SchedState {
+    status: Vec<Status>,
+    /// per-thread "you may take one step" flags; a grant survives until
+    /// the thread consumes it, so grant/park races cannot lose wakeups
+    granted: Vec<bool>,
+    abort: bool,
+    /// first user panic message of this execution
+    failure: Option<String>,
+}
+
+struct Scheduler {
+    state: StdMutex<SchedState>,
+    /// the coordinator waits here for the running thread to park
+    coord_cv: StdCondvar,
+    /// model threads wait here for their grant
+    thread_cv: StdCondvar,
+    os_handles: StdMutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+struct ThreadCtx {
+    sched: Arc<Scheduler>,
+    tid: usize,
+}
+
+thread_local! {
+    static CTX: RefCell<Option<ThreadCtx>> = const { RefCell::new(None) };
+}
+
+fn current() -> Option<(Arc<Scheduler>, usize)> {
+    CTX.with(|c| c.borrow().as_ref().map(|x| (Arc::clone(&x.sched), x.tid)))
+}
+
+/// Schedule point for shim atomics: if the calling thread belongs to an
+/// active exploration, park and wait to be rescheduled; otherwise no-op.
+pub(crate) fn yield_if_modeled() {
+    if let Some((sched, tid)) = current() {
+        sched.park(tid, Status::Ready);
+    }
+}
+
+impl Scheduler {
+    fn new() -> Arc<Scheduler> {
+        Arc::new(Scheduler {
+            state: StdMutex::new(SchedState {
+                status: Vec::new(),
+                granted: Vec::new(),
+                abort: false,
+                failure: None,
+            }),
+            coord_cv: StdCondvar::new(),
+            thread_cv: StdCondvar::new(),
+            os_handles: StdMutex::new(Vec::new()),
+        })
+    }
+
+    fn register(&self) -> usize {
+        let mut st = self.state.lock().unwrap();
+        st.status.push(Status::Ready);
+        st.granted.push(false);
+        st.status.len() - 1
+    }
+
+    /// THE scheduling primitive: move `tid` into `status` (Ready or a
+    /// Blocked variant), wake the coordinator, and sleep until granted
+    /// the next step. Unwinds with [`ModelAbort`] if the exploration is
+    /// aborted while parked.
+    fn park(&self, tid: usize, status: Status) {
+        let mut st = self.state.lock().unwrap();
+        st.status[tid] = status;
+        self.coord_cv.notify_all();
+        loop {
+            if st.abort {
+                drop(st);
+                std::panic::panic_any(ModelAbort);
+            }
+            if st.granted[tid] {
+                break;
+            }
+            st = self.thread_cv.wait(st).unwrap();
+        }
+        st.granted[tid] = false;
+        st.status[tid] = Status::Running;
+    }
+
+    /// A mutex was released: its waiters become runnable. Called by the
+    /// running thread, so no other thread can race the status flips.
+    fn mutex_released(&self, id: usize) {
+        let mut st = self.state.lock().unwrap();
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedMutex(id) {
+                *s = Status::Ready;
+            }
+        }
+    }
+
+    /// A condvar was notified: wake all its waiters (or only the
+    /// lowest-tid one for `notify_one`). Waking means "runnable and will
+    /// re-contend for the mutex" — exactly the std semantics.
+    fn cond_notified(&self, id: usize, all: bool) {
+        let mut st = self.state.lock().unwrap();
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedCondvar(id) {
+                *s = Status::Ready;
+                if !all {
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Terminal protocol of a model thread: record the outcome, wake
+    /// joiners, and hand control back to the coordinator.
+    fn finish(&self, tid: usize, panic: Option<Box<dyn Any + Send>>) {
+        let mut st = self.state.lock().unwrap();
+        st.status[tid] = Status::Finished;
+        for s in st.status.iter_mut() {
+            if *s == Status::BlockedJoin(tid) {
+                *s = Status::Ready;
+            }
+        }
+        if let Some(p) = panic {
+            if !p.is::<ModelAbort>() {
+                if st.failure.is_none() {
+                    st.failure = Some(panic_message(p.as_ref()));
+                }
+                st.abort = true;
+            }
+        }
+        self.coord_cv.notify_all();
+        self.thread_cv.notify_all();
+    }
+
+    /// Coordinator: wait until no thread is running or holds an
+    /// unconsumed grant, then classify the quiescent state.
+    fn wait_quiescent(&self) -> Quiescent {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if st.abort {
+                return Quiescent::Aborted;
+            }
+            let busy = st.status.iter().any(|s| *s == Status::Running)
+                || st.granted.iter().any(|&g| g);
+            if !busy {
+                if st.status.iter().all(|s| *s == Status::Finished) {
+                    return Quiescent::AllFinished;
+                }
+                let ready: Vec<usize> = st
+                    .status
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, s)| **s == Status::Ready)
+                    .map(|(i, _)| i)
+                    .collect();
+                if ready.is_empty() {
+                    return Quiescent::Deadlock(describe(&st.status));
+                }
+                return Quiescent::Ready(ready);
+            }
+            st = self.coord_cv.wait(st).unwrap();
+        }
+    }
+
+    fn grant(&self, tid: usize) {
+        let mut st = self.state.lock().unwrap();
+        st.granted[tid] = true;
+        self.thread_cv.notify_all();
+    }
+
+    /// Abort the execution (normal completion included — then it's a
+    /// no-op wake), unwind every surviving model thread, and join the OS
+    /// threads so no execution leaks into the next schedule.
+    fn drain(&self) {
+        {
+            let mut st = self.state.lock().unwrap();
+            st.abort = true;
+            self.thread_cv.notify_all();
+        }
+        let mut st = self.state.lock().unwrap();
+        while !st.status.iter().all(|s| *s == Status::Finished) {
+            self.thread_cv.notify_all();
+            let (g, _) = self
+                .coord_cv
+                .wait_timeout(st, Duration::from_millis(5))
+                .unwrap();
+            st = g;
+        }
+        drop(st);
+        let handles: Vec<_> = std::mem::take(&mut *self.os_handles.lock().unwrap());
+        for h in handles {
+            let _ = h.join();
+        }
+    }
+}
+
+enum Quiescent {
+    AllFinished,
+    Aborted,
+    Ready(Vec<usize>),
+    Deadlock(String),
+}
+
+fn panic_message(p: &(dyn Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+fn describe(status: &[Status]) -> String {
+    let parts: Vec<String> = status
+        .iter()
+        .enumerate()
+        .map(|(i, s)| format!("thread {i}: {s:?}"))
+        .collect();
+    parts.join(", ")
+}
+
+/// Handle to a thread spawned with [`spawn`] inside an exploration.
+pub struct JoinHandle<T> {
+    tid: usize,
+    result: Arc<StdMutex<Option<T>>>,
+    sched: Arc<Scheduler>,
+}
+
+impl<T> JoinHandle<T> {
+    /// Block (as a model schedule point) until the thread finishes and
+    /// return its value. Panics if the target thread panicked.
+    pub fn join(self) -> T {
+        let (_, me) = current().expect("JoinHandle::join outside a model exploration");
+        loop {
+            let finished = {
+                let st = self.sched.state.lock().unwrap();
+                st.status[self.tid] == Status::Finished
+            };
+            if finished {
+                break;
+            }
+            self.sched.park(me, Status::BlockedJoin(self.tid));
+        }
+        let v = self.result.lock().unwrap().take();
+        v.expect("model thread panicked; its value was never produced")
+    }
+}
+
+/// Spawn a thread inside the current exploration. Must be called from a
+/// model thread (the `check` closure or one of its descendants).
+pub fn spawn<T, F>(f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let (sched, _) = current().expect("model::spawn outside a model exploration");
+    spawn_on(&sched, f)
+}
+
+fn spawn_on<T, F>(sched: &Arc<Scheduler>, f: F) -> JoinHandle<T>
+where
+    F: FnOnce() -> T + Send + 'static,
+    T: Send + 'static,
+{
+    let tid = sched.register();
+    let result = Arc::new(StdMutex::new(None));
+    let res = Arc::clone(&result);
+    let s = Arc::clone(sched);
+    let os = std::thread::Builder::new()
+        .name(format!("model-{tid}"))
+        .spawn(move || {
+            CTX.with(|c| {
+                *c.borrow_mut() = Some(ThreadCtx {
+                    sched: Arc::clone(&s),
+                    tid,
+                })
+            });
+            let out = catch_unwind(AssertUnwindSafe(|| {
+                // wait for the first grant before touching user code
+                s.park(tid, Status::Ready);
+                f()
+            }));
+            CTX.with(|c| *c.borrow_mut() = None);
+            match out {
+                Ok(v) => {
+                    *res.lock().unwrap() = Some(v);
+                    s.finish(tid, None);
+                }
+                Err(p) => s.finish(tid, Some(p)),
+            }
+        })
+        .expect("failed to spawn model thread");
+    sched.os_handles.lock().unwrap().push(os);
+    JoinHandle {
+        tid,
+        result,
+        sched: Arc::clone(sched),
+    }
+}
+
+/// One scheduling decision of an execution.
+struct Decision {
+    /// runnable tids at the decision point (sorted ascending)
+    ready: Vec<usize>,
+    /// index into `ready` that was granted
+    chosen: usize,
+    /// tid that was running before this decision (None at the start)
+    prev: Option<usize>,
+}
+
+enum Outcome {
+    Completed,
+    Failure(String),
+    Deadlock(String),
+}
+
+/// Execute the program once under the schedule forced by `forced`
+/// (decision indices); beyond the forced prefix, default to running the
+/// previous thread (no preemption) or the lowest ready tid.
+fn run_once(f: &Arc<dyn Fn() + Send + Sync>, forced: &[usize]) -> (Vec<Decision>, Outcome) {
+    let sched = Scheduler::new();
+    let root = Arc::clone(f);
+    // the root handle is intentionally dropped: run_once observes
+    // completion through the scheduler, not through join()
+    let _root_handle = spawn_on(&sched, move || root());
+    let mut trace: Vec<Decision> = Vec::new();
+    let mut prev: Option<usize> = None;
+    let deadlock = loop {
+        match sched.wait_quiescent() {
+            Quiescent::AllFinished | Quiescent::Aborted => break None,
+            Quiescent::Deadlock(d) => break Some(d),
+            Quiescent::Ready(ready) => {
+                let idx = match forced.get(trace.len()) {
+                    Some(&i) => {
+                        assert!(
+                            i < ready.len(),
+                            "model replay diverged: the program is not deterministic \
+                             under a fixed schedule"
+                        );
+                        i
+                    }
+                    None => prev
+                        .and_then(|p| ready.iter().position(|&t| t == p))
+                        .unwrap_or(0),
+                };
+                let tid = ready[idx];
+                trace.push(Decision {
+                    ready,
+                    chosen: idx,
+                    prev,
+                });
+                prev = Some(tid);
+                sched.grant(tid);
+            }
+        }
+    };
+    sched.drain();
+    let failure = sched.state.lock().unwrap().failure.take();
+    let outcome = if let Some(msg) = failure {
+        Outcome::Failure(msg)
+    } else if let Some(d) = deadlock {
+        Outcome::Deadlock(d)
+    } else {
+        Outcome::Completed
+    };
+    (trace, outcome)
+}
+
+/// Does choosing `ready[idx]` at this decision preempt a still-runnable
+/// previous thread?
+fn is_preemptive(d: &Decision, idx: usize) -> bool {
+    match d.prev {
+        Some(p) => d.ready.contains(&p) && d.ready[idx] != p,
+        None => false,
+    }
+}
+
+/// DFS step: rewrite `forced` to the next unexplored schedule prefix
+/// within the preemption bound; false when the space is exhausted.
+fn next_schedule(forced: &mut Vec<usize>, trace: &[Decision], bound: usize) -> bool {
+    // preemptions consumed by the executed prefix strictly before each depth
+    let mut used = Vec::with_capacity(trace.len() + 1);
+    used.push(0usize);
+    for d in trace {
+        used.push(used.last().unwrap() + usize::from(is_preemptive(d, d.chosen)));
+    }
+    for depth in (0..trace.len()).rev() {
+        let d = &trace[depth];
+        for idx in d.chosen + 1..d.ready.len() {
+            if used[depth] + usize::from(is_preemptive(d, idx)) <= bound {
+                forced.clear();
+                forced.extend(trace[..depth].iter().map(|x| x.chosen));
+                forced.push(idx);
+                return true;
+            }
+        }
+    }
+    false
+}
+
+/// Exploration configuration. `preemption_bound` caps context switches
+/// away from a runnable thread per schedule (CHESS-style); raise it for
+/// stronger guarantees at combinatorial cost. `max_schedules` is a
+/// safety valve: exceeding it panics rather than silently truncating,
+/// keeping "exhaustively explored" an honest claim.
+pub struct Model {
+    max_schedules: usize,
+    preemption_bound: usize,
+}
+
+impl Default for Model {
+    fn default() -> Self {
+        Model {
+            max_schedules: 100_000,
+            preemption_bound: 2,
+        }
+    }
+}
+
+impl Model {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn max_schedules(mut self, n: usize) -> Self {
+        self.max_schedules = n;
+        self
+    }
+
+    pub fn preemption_bound(mut self, n: usize) -> Self {
+        self.preemption_bound = n;
+        self
+    }
+
+    /// Run `f` under every thread schedule within the preemption bound.
+    /// Panics — with the failing schedule — on the first assertion
+    /// failure or deadlock. Returns the number of schedules explored.
+    pub fn check<F>(self, f: F) -> usize
+    where
+        F: Fn() + Send + Sync + 'static,
+    {
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(f);
+        let mut forced: Vec<usize> = Vec::new();
+        let mut n = 0usize;
+        loop {
+            let (trace, outcome) = run_once(&f, &forced);
+            n += 1;
+            match outcome {
+                Outcome::Completed => {}
+                Outcome::Failure(msg) => {
+                    let sched: Vec<usize> = trace.iter().map(|d| d.ready[d.chosen]).collect();
+                    panic!("model check failed on schedule #{n} (thread order {sched:?}): {msg}");
+                }
+                Outcome::Deadlock(d) => {
+                    let sched: Vec<usize> = trace.iter().map(|d| d.ready[d.chosen]).collect();
+                    panic!(
+                        "model check found a deadlock on schedule #{n} \
+                         (thread order {sched:?}): {d}"
+                    );
+                }
+            }
+            assert!(
+                n < self.max_schedules,
+                "model check hit the {}-schedule budget before exhausting the space; \
+                 shrink the test configuration or raise max_schedules",
+                self.max_schedules
+            );
+            if !next_schedule(&mut forced, &trace, self.preemption_bound) {
+                return n;
+            }
+        }
+    }
+}
+
+/// [`Model::check`] with the default bounds.
+pub fn check<F>(f: F) -> usize
+where
+    F: Fn() + Send + Sync + 'static,
+{
+    Model::new().check(f)
+}
+
+// ---------------------------------------------------------------------
+// Instrumented lock primitives (drop-in for std::sync via util::shim).
+// ---------------------------------------------------------------------
+
+static NEXT_RESOURCE_ID: StdAtomicUsize = StdAtomicUsize::new(0);
+
+fn next_id() -> usize {
+    NEXT_RESOURCE_ID.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Mutex that registers lock/unlock as model schedule points. Outside an
+/// exploration it behaves exactly like `std::sync::Mutex`.
+#[derive(Debug)]
+pub struct Mutex<T> {
+    id: usize,
+    inner: StdMutex<T>,
+}
+
+impl<T: Default> Default for Mutex<T> {
+    fn default() -> Self {
+        Mutex::new(T::default())
+    }
+}
+
+impl<T> Mutex<T> {
+    pub fn new(value: T) -> Self {
+        Mutex {
+            id: next_id(),
+            inner: StdMutex::new(value),
+        }
+    }
+
+    pub fn lock(&self) -> LockResult<MutexGuard<'_, T>> {
+        match current() {
+            None => match self.inner.lock() {
+                Ok(g) => Ok(MutexGuard {
+                    lock: self,
+                    inner: Some(g),
+                }),
+                Err(pe) => Err(PoisonError::new(MutexGuard {
+                    lock: self,
+                    inner: Some(pe.into_inner()),
+                })),
+            },
+            Some((sched, tid)) => {
+                // schedule point before the acquire attempt, then park on
+                // the mutex id until the holder releases
+                sched.park(tid, Status::Ready);
+                loop {
+                    match self.inner.try_lock() {
+                        Ok(g) => {
+                            return Ok(MutexGuard {
+                                lock: self,
+                                inner: Some(g),
+                            })
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            sched.park(tid, Status::BlockedMutex(self.id));
+                        }
+                        Err(TryLockError::Poisoned(pe)) => {
+                            return Err(PoisonError::new(MutexGuard {
+                                lock: self,
+                                inner: Some(pe.into_inner()),
+                            }))
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Guard for the instrumented [`Mutex`]; releasing it wakes model
+/// threads blocked on the same mutex.
+pub struct MutexGuard<'a, T> {
+    lock: &'a Mutex<T>,
+    inner: Option<StdMutexGuard<'a, T>>,
+}
+
+impl<'a, T> MutexGuard<'a, T> {
+    fn take_std(&mut self) -> StdMutexGuard<'a, T> {
+        self.inner.take().expect("guard already released")
+    }
+}
+
+impl<T> std::ops::Deref for MutexGuard<'_, T> {
+    type Target = T;
+
+    fn deref(&self) -> &T {
+        self.inner.as_ref().expect("guard already released")
+    }
+}
+
+impl<T> std::ops::DerefMut for MutexGuard<'_, T> {
+    fn deref_mut(&mut self) -> &mut T {
+        self.inner.as_mut().expect("guard already released")
+    }
+}
+
+impl<T> Drop for MutexGuard<'_, T> {
+    fn drop(&mut self) {
+        let held = self.inner.take();
+        if held.is_some() {
+            // release the real lock before telling the scheduler, so a
+            // woken thread's try_lock can succeed immediately
+            drop(held);
+            if let Some((sched, _)) = current() {
+                sched.mutex_released(self.lock.id);
+            }
+        }
+    }
+}
+
+/// Condvar that cooperates with the model scheduler. In-model waits
+/// never time out: a lost wakeup therefore surfaces as a reported model
+/// deadlock instead of being papered over by a timeout.
+#[derive(Debug)]
+pub struct Condvar {
+    id: usize,
+    inner: StdCondvar,
+}
+
+impl Default for Condvar {
+    fn default() -> Self {
+        Condvar::new()
+    }
+}
+
+impl Condvar {
+    pub fn new() -> Self {
+        Condvar {
+            id: next_id(),
+            inner: StdCondvar::new(),
+        }
+    }
+
+    pub fn wait<'a, T>(&self, guard: MutexGuard<'a, T>) -> LockResult<MutexGuard<'a, T>> {
+        let mut guard = guard;
+        match current() {
+            None => {
+                let std_g = guard.take_std();
+                let lock = guard.lock;
+                drop(guard); // inert: the std guard has been taken out
+                match self.inner.wait(std_g) {
+                    Ok(g) => Ok(MutexGuard {
+                        lock,
+                        inner: Some(g),
+                    }),
+                    Err(pe) => Err(PoisonError::new(MutexGuard {
+                        lock,
+                        inner: Some(pe.into_inner()),
+                    })),
+                }
+            }
+            Some((sched, tid)) => {
+                // atomically (w.r.t. the model: this thread keeps running
+                // until it parks) release the mutex and park on the
+                // condvar, then re-contend for the mutex once notified
+                drop(guard.take_std());
+                sched.mutex_released(guard.lock.id);
+                sched.park(tid, Status::BlockedCondvar(self.id));
+                loop {
+                    match guard.lock.inner.try_lock() {
+                        Ok(g) => {
+                            guard.inner = Some(g);
+                            return Ok(guard);
+                        }
+                        Err(TryLockError::WouldBlock) => {
+                            sched.park(tid, Status::BlockedMutex(guard.lock.id));
+                        }
+                        Err(TryLockError::Poisoned(pe)) => {
+                            guard.inner = Some(pe.into_inner());
+                            return Err(PoisonError::new(guard));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    pub fn wait_timeout<'a, T>(
+        &self,
+        guard: MutexGuard<'a, T>,
+        dur: Duration,
+    ) -> LockResult<(MutexGuard<'a, T>, WaitTimeoutResult)> {
+        match current() {
+            None => {
+                let mut guard = guard;
+                let std_g = guard.take_std();
+                let lock = guard.lock;
+                drop(guard);
+                match self.inner.wait_timeout(std_g, dur) {
+                    Ok((g, t)) => Ok((
+                        MutexGuard {
+                            lock,
+                            inner: Some(g),
+                        },
+                        WaitTimeoutResult {
+                            timed: t.timed_out(),
+                        },
+                    )),
+                    Err(pe) => {
+                        let (g, t) = pe.into_inner();
+                        Err(PoisonError::new((
+                            MutexGuard {
+                                lock,
+                                inner: Some(g),
+                            },
+                            WaitTimeoutResult {
+                                timed: t.timed_out(),
+                            },
+                        )))
+                    }
+                }
+            }
+            Some(_) => match self.wait(guard) {
+                Ok(g) => Ok((g, WaitTimeoutResult { timed: false })),
+                Err(pe) => Err(PoisonError::new((
+                    pe.into_inner(),
+                    WaitTimeoutResult { timed: false },
+                ))),
+            },
+        }
+    }
+
+    pub fn notify_all(&self) {
+        match current() {
+            None => self.inner.notify_all(),
+            Some((sched, _)) => sched.cond_notified(self.id, true),
+        }
+    }
+
+    pub fn notify_one(&self) {
+        match current() {
+            None => self.inner.notify_one(),
+            Some((sched, _)) => sched.cond_notified(self.id, false),
+        }
+    }
+}
+
+/// Mirror of `std::sync::WaitTimeoutResult` for the shim signature.
+#[derive(Debug, Clone, Copy)]
+pub struct WaitTimeoutResult {
+    timed: bool,
+}
+
+impl WaitTimeoutResult {
+    pub fn timed_out(&self) -> bool {
+        self.timed
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::shim::AtomicU64;
+
+    #[test]
+    fn explores_both_orders_of_two_ops() {
+        let n = check(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let (a1, a2) = (Arc::clone(&a), Arc::clone(&a));
+            let t1 = spawn(move || a1.fetch_add(1));
+            let t2 = spawn(move || a2.fetch_add(2));
+            let (p1, p2) = (t1.join(), t2.join());
+            // each thread observed the other either before or after
+            assert!(p1 == 0 || p1 == 2, "t1 saw {p1}");
+            assert!(p2 == 0 || p2 == 1, "t2 saw {p2}");
+            assert_eq!(a.load(), 3);
+        });
+        assert!(n >= 2, "only {n} schedules explored");
+    }
+
+    #[test]
+    fn finds_the_lost_update() {
+        // the classic torn read-modify-write: load then store is not
+        // atomic, and the explorer must find the schedule that loses one
+        // increment — proof the interleaving search is genuine
+        let lost = Arc::new(StdMutex::new(false));
+        let seen = Arc::clone(&lost);
+        check(move || {
+            let a = Arc::new(AtomicU64::new(0));
+            let (a1, a2) = (Arc::clone(&a), Arc::clone(&a));
+            let t1 = spawn(move || {
+                let v = a1.load();
+                a1.store(v + 1);
+            });
+            let t2 = spawn(move || {
+                let v = a2.load();
+                a2.store(v + 1);
+            });
+            t1.join();
+            t2.join();
+            let v = a.load();
+            assert!(v == 1 || v == 2);
+            if v == 1 {
+                *seen.lock().unwrap() = true;
+            }
+        });
+        assert!(
+            *lost.lock().unwrap(),
+            "exploration never produced the lost update"
+        );
+    }
+
+    #[test]
+    fn mutex_provides_mutual_exclusion() {
+        check(|| {
+            let m = Arc::new(Mutex::new(0u64));
+            let (m1, m2) = (Arc::clone(&m), Arc::clone(&m));
+            let t1 = spawn(move || {
+                let mut g = m1.lock().unwrap();
+                let v = *g;
+                *g = v + 1;
+            });
+            let t2 = spawn(move || {
+                let mut g = m2.lock().unwrap();
+                let v = *g;
+                *g = v + 1;
+            });
+            t1.join();
+            t2.join();
+            // under a mutex the read-modify-write can never tear
+            assert_eq!(*m.lock().unwrap(), 2);
+        });
+    }
+
+    #[test]
+    fn condvar_handoff_completes_in_every_schedule() {
+        check(|| {
+            let m = Arc::new(Mutex::new(false));
+            let cv = Arc::new(Condvar::new());
+            let (m1, cv1) = (Arc::clone(&m), Arc::clone(&cv));
+            let waiter = spawn(move || {
+                let mut g = m1.lock().unwrap();
+                while !*g {
+                    g = cv1.wait(g).unwrap();
+                }
+            });
+            let (m2, cv2) = (Arc::clone(&m), Arc::clone(&cv));
+            let setter = spawn(move || {
+                let mut g = m2.lock().unwrap();
+                *g = true;
+                drop(g);
+                cv2.notify_all();
+            });
+            // if any schedule loses the wakeup, the waiter never
+            // finishes and the checker reports a deadlock
+            waiter.join();
+            setter.join();
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "deadlock")]
+    fn detects_lock_order_inversion() {
+        check(|| {
+            let a = Arc::new(Mutex::new(()));
+            let b = Arc::new(Mutex::new(()));
+            let (a1, b1) = (Arc::clone(&a), Arc::clone(&b));
+            let t1 = spawn(move || {
+                let _ga = a1.lock().unwrap();
+                let _gb = b1.lock().unwrap();
+            });
+            let (a2, b2) = (Arc::clone(&a), Arc::clone(&b));
+            let t2 = spawn(move || {
+                let _gb = b2.lock().unwrap();
+                let _ga = a2.lock().unwrap();
+            });
+            t1.join();
+            t2.join();
+        });
+    }
+
+    #[test]
+    fn replays_are_deterministic() {
+        // same forced schedule twice → same decision trace
+        let f: Arc<dyn Fn() + Send + Sync> = Arc::new(|| {
+            let a = Arc::new(AtomicU64::new(0));
+            let (a1, a2) = (Arc::clone(&a), Arc::clone(&a));
+            let t1 = spawn(move || {
+                a1.fetch_add(1);
+            });
+            let t2 = spawn(move || {
+                a2.fetch_add(1);
+            });
+            t1.join();
+            t2.join();
+        });
+        let (trace1, _) = run_once(&f, &[]);
+        let forced: Vec<usize> = trace1.iter().map(|d| d.chosen).collect();
+        let (trace2, _) = run_once(&f, &forced);
+        assert_eq!(trace1.len(), trace2.len());
+        for (d1, d2) in trace1.iter().zip(&trace2) {
+            assert_eq!(d1.ready, d2.ready);
+            assert_eq!(d1.chosen, d2.chosen);
+        }
+    }
+}
