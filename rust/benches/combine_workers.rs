@@ -7,8 +7,10 @@
 //! Run: `cargo bench --bench combine_workers` (HARPSG_BENCH_MS tunes the
 //! per-case budget).
 
-use harpsg::colorcount::parallel::{combine_batches, PairBatch};
-use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable, RowsRef};
+use harpsg::colorcount::parallel::{combine_batches, combine_batches_with, PairBatch};
+use harpsg::colorcount::{
+    aggregate_batch, contract_touched, CombineScratch, CountTable, KernelMode, RowsRef,
+};
 use harpsg::combin::{Binomial, SplitTable};
 use harpsg::metrics::bench;
 
@@ -51,7 +53,7 @@ fn bench_shape(label: &str, k: usize, a: usize, a1: usize, n: usize) {
     let mut scratch = CombineScratch::new(n, c2);
     let t_serial = bench(&format!("{label}/serial"), || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
         contract_touched(&mut out, &passive, &split, &mut scratch);
     });
     println!("  -> {:.2} ns/pair-unit\n", t_serial * 1e9 / units);
@@ -64,9 +66,9 @@ fn bench_shape(label: &str, k: usize, a: usize, a1: usize, n: usize) {
                 || {
                     let batch = [PairBatch {
                         pairs: &pairs,
-                        rows: RowsRef::Dense(&active),
+                        rows: RowsRef::dense(&active),
                     }];
-                    combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, mts, workers)
+                    combine_batches(&mut out, RowsRef::dense(&passive), &split, &batch, mts, workers)
                 },
             );
             println!(
@@ -75,6 +77,32 @@ fn bench_shape(label: &str, k: usize, a: usize, a1: usize, n: usize) {
                 t_serial / t
             );
         }
+    }
+
+    // SIMD legs: the fused row-block executor shards by adjacency rows, so
+    // `max_task_size` is moot — the grid is kernel x workers only.
+    for workers in [1usize, 2, 4, 8] {
+        let mut out = CountTable::zeros(n, split.n_sets);
+        let t = bench(&format!("{label}/exec w={workers} kernel=simd"), || {
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: RowsRef::dense(&active),
+            }];
+            combine_batches_with(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                0,
+                workers,
+                KernelMode::Simd,
+            )
+        });
+        println!(
+            "  -> {:.2} ns/pair-unit, {:.2}x vs serial\n",
+            t * 1e9 / units,
+            t_serial / t
+        );
     }
 }
 

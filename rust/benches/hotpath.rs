@@ -1,9 +1,22 @@
 //! Hot-path benches: the DP combine (aggregate + contract) at the block
-//! shapes of u5-2 / u10-2 / u12-2, native vs XLA backends. These are the
-//! kernels the end-to-end figures spend >80% of their compute in, and the
+//! shapes of u5-2 / u10-2 / u12-2 / u15-1, native vs XLA backends, plus
+//! the sparse-storage and vectorized-kernel legs. These are the kernels
+//! the end-to-end figures spend >80% of their compute in, and the
 //! primary target of EXPERIMENTS.md §Perf.
+//!
+//! All cases report a throughput figure in Munits/s, where one *unit* is
+//! one fused multiply-add in the combine decomposition:
+//!   SpMM units   = |pairs| * n_agg        (neighbor-row accumulation)
+//!   eMA units    = n * n_sets * n_splits  (split-table contraction)
+//! Units/second is shape-independent, so legs at different template
+//! shapes and densities are directly comparable.
+//!
+//! Run: `cargo bench --bench hotpath` (HARPSG_BENCH_MS tunes budgets).
 
-use harpsg::colorcount::{aggregate_batch, contract_touched, CombineScratch, CountTable, RowsRef};
+use harpsg::colorcount::parallel::{combine_batches_with, PairBatch};
+use harpsg::colorcount::{
+    aggregate_batch, contract_touched, CombineScratch, CountTable, KernelMode, RowsRef, SparseTable,
+};
 use harpsg::combin::{Binomial, SplitTable};
 use harpsg::metrics::bench;
 
@@ -19,35 +32,168 @@ fn mk_tables(n: usize, c1: usize, c2: usize) -> (CountTable, CountTable) {
     (passive, active)
 }
 
+/// Thin a dense table down to roughly `density` non-zero entries per row,
+/// keeping a deterministic scatter so sparse rows are realistic (not a
+/// prefix) for the row-scratch path.
+fn thin_to_density(t: &mut CountTable, density: f64) {
+    let keep_every = (1.0 / density.max(1e-9)).round() as usize;
+    for (i, x) in t.data.iter_mut().enumerate() {
+        if (i * 2654435761) % keep_every.max(1) != 0 {
+            *x = 0.0;
+        } else if *x == 0.0 {
+            *x = 1.0;
+        }
+    }
+}
+
+fn ring_pairs(n: usize, deg: usize) -> Vec<(u32, u32)> {
+    (0..n as u32)
+        .flat_map(|v| (1..=deg as u32).map(move |d| (v, (v + d) % n as u32)))
+        .collect()
+}
+
+fn combine_units(pairs: usize, n: usize, c2: usize, split: &SplitTable) -> f64 {
+    pairs as f64 * c2 as f64 + n as f64 * (split.n_sets * split.n_splits) as f64
+}
+
+fn report_rate(t: f64, units: f64) {
+    println!("  -> {:.1} Munits/s ({:.2} ns/unit)\n", units / t / 1e6, t * 1e9 / units);
+}
+
 fn bench_combine(label: &str, k: usize, a: usize, a1: usize, n: usize, deg: usize) {
     let binom = Binomial::new();
     let split = SplitTable::new(k, a, a1, &binom);
     let c1 = binom.c(k, a1) as usize;
     let c2 = binom.c(k, a - a1) as usize;
     let (passive, active) = mk_tables(n, c1, c2);
-    let pairs: Vec<(u32, u32)> = (0..n as u32)
-        .flat_map(|v| (1..=deg as u32).map(move |d| (v, (v + d) % n as u32)))
-        .collect();
+    let pairs = ring_pairs(n, deg);
     let mut out = CountTable::zeros(n, split.n_sets);
     let mut scratch = CombineScratch::new(n, c2);
-    let units = pairs.len() as f64 * c2 as f64 + n as f64 * (split.n_sets * split.n_splits) as f64;
+    let units = combine_units(pairs.len(), n, c2, &split);
 
     let t_agg = bench(&format!("{label}/aggregate n={n} deg={deg}"), || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
         scratch.finish();
     });
     let t_full = bench(&format!("{label}/agg+contract"), || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
         contract_touched(&mut out, &passive, &split, &mut scratch);
     });
     println!(
-        "  -> {:.2} ns/unit ({:.0} units/op, agg share {:.0}%)\n",
+        "  -> {:.1} Munits/s ({:.2} ns/unit, agg share {:.0}%)\n",
+        units / t_full / 1e6,
         t_full * 1e9 / units,
-        units,
         100.0 * t_agg / t_full
     );
+}
+
+/// Sparse legs: the same combine with the *active* rows stored sparse at a
+/// sweep of densities, plus a sparse-passive leg that exercises the
+/// touched-set row scratch (`RowScratch`) on every contracted vertex.
+fn bench_sparse(label: &str, k: usize, a: usize, a1: usize, n: usize, deg: usize) {
+    let binom = Binomial::new();
+    let split = SplitTable::new(k, a, a1, &binom);
+    let c1 = binom.c(k, a1) as usize;
+    let c2 = binom.c(k, a - a1) as usize;
+    let pairs = ring_pairs(n, deg);
+    let units = combine_units(pairs.len(), n, c2, &split);
+
+    for density in [0.5f64, 0.1, 0.02] {
+        let (mut passive, mut active) = mk_tables(n, c1, c2);
+        thin_to_density(&mut active, density);
+        thin_to_density(&mut passive, density);
+        let sp_active = SparseTable::from_dense(&active);
+        let sp_passive = SparseTable::from_dense(&passive);
+
+        let mut out = CountTable::zeros(n, split.n_sets);
+        let t = bench(
+            &format!("{label}/sparse-active d={density}"),
+            || {
+                let batch = [PairBatch {
+                    pairs: &pairs,
+                    rows: RowsRef::sparse(&sp_active),
+                }];
+                combine_batches_with(
+                    &mut out,
+                    RowsRef::dense(&passive),
+                    &split,
+                    &batch,
+                    0,
+                    1,
+                    KernelMode::Scalar,
+                )
+            },
+        );
+        report_rate(t, units);
+
+        let mut out = CountTable::zeros(n, split.n_sets);
+        let t = bench(
+            &format!("{label}/sparse-passive d={density}"),
+            || {
+                let batch = [PairBatch {
+                    pairs: &pairs,
+                    rows: RowsRef::dense(&active),
+                }];
+                combine_batches_with(
+                    &mut out,
+                    RowsRef::sparse(&sp_passive),
+                    &split,
+                    &batch,
+                    0,
+                    1,
+                    KernelMode::Scalar,
+                )
+            },
+        );
+        report_rate(t, units);
+    }
+}
+
+/// Scalar vs vectorized combine kernel on the wide shapes where the SIMD
+/// chunking has lanes to fill (u12 root: n_agg=495; u15 mid: n_agg=1365).
+fn bench_kernels(label: &str, k: usize, a: usize, a1: usize, n: usize, deg: usize) {
+    let binom = Binomial::new();
+    let split = SplitTable::new(k, a, a1, &binom);
+    let c1 = binom.c(k, a1) as usize;
+    let c2 = binom.c(k, a - a1) as usize;
+    let (passive, active) = mk_tables(n, c1, c2);
+    let pairs = ring_pairs(n, deg);
+    let units = combine_units(pairs.len(), n, c2, &split);
+
+    let mut t_scalar = f64::NAN;
+    for kernel in [KernelMode::Scalar, KernelMode::Simd] {
+        for workers in [1usize, 4] {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let t = bench(
+                &format!("{label}/{} w={workers}", kernel.name()),
+                || {
+                    let batch = [PairBatch {
+                        pairs: &pairs,
+                        rows: RowsRef::dense(&active),
+                    }];
+                    combine_batches_with(
+                        &mut out,
+                        RowsRef::dense(&passive),
+                        &split,
+                        &batch,
+                        0,
+                        workers,
+                        kernel,
+                    )
+                },
+            );
+            if kernel == KernelMode::Scalar && workers == 1 {
+                t_scalar = t;
+            }
+            println!(
+                "  -> {:.1} Munits/s ({:.2}x vs scalar w=1)\n",
+                units / t / 1e6,
+                t_scalar / t
+            );
+        }
+    }
 }
 
 fn bench_xla_vs_native() {
@@ -68,12 +214,12 @@ fn bench_xla_vs_native() {
     let xc = harpsg::runtime::XlaCombine::new(rt);
     bench("xla-combine k5_a3 n=512 (PJRT)", || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
         xc.contract_touched(&mut out, &passive, &split, &mut scratch);
     });
     bench("native-combine k5_a3 n=512", || {
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
         contract_touched(&mut out, &passive, &split, &mut scratch);
     });
 }
@@ -84,6 +230,11 @@ fn main() {
     bench_combine("u10-2-mid  (k10,a5,a1=1)", 10, 5, 1, 4096, 16);
     bench_combine("u12-2-mid  (k12,a6,a1=2)", 12, 6, 2, 1024, 16);
     bench_combine("u12-2-root (k12,a12,a1=8)", 12, 12, 8, 1024, 16);
+    println!("== sparse storage: density sweep ==");
+    bench_sparse("u12-2-mid (k12,a6,a1=2) n=1024", 12, 6, 2, 1024, 16);
+    println!("== combine kernel: scalar vs simd ==");
+    bench_kernels("u12-2-root (k12,a12,a1=8) n=1024", 12, 12, 8, 1024, 16);
+    bench_kernels("u15-1-mid  (k15,a7,a1=3) n=256", 15, 7, 3, 256, 16);
     println!("== XLA (PJRT) vs native backend ==");
     bench_xla_vs_native();
 }

@@ -49,16 +49,16 @@ fn bench_density(k: usize, a: usize, a1: usize, n: usize, density: f64) {
     let t_dense = bench(&format!("{label}/combine dense"), || {
         let batch = [PairBatch {
             pairs: &pairs,
-            rows: RowsRef::Dense(&active),
+            rows: RowsRef::dense(&active),
         }];
-        combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 0, 1)
+        combine_batches(&mut out, RowsRef::dense(&passive), &split, &batch, 0, 1)
     });
     let t_sparse = bench(&format!("{label}/combine sparse"), || {
         let batch = [PairBatch {
             pairs: &pairs,
-            rows: RowsRef::Sparse(&sp_active),
+            rows: RowsRef::sparse(&sp_active),
         }];
-        combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 0, 1)
+        combine_batches(&mut out, RowsRef::dense(&passive), &split, &batch, 0, 1)
     });
     println!(
         "  -> dense {:.2} ns/unit, sparse {:.2} ns/unit ({:.2}x)",

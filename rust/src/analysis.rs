@@ -278,6 +278,40 @@ mod tests {
     }
 
     #[test]
+    fn gate_covers_the_vectorized_kernel_hot_path() {
+        // The SIMD combine kernel and its row-block executor are the
+        // densest unsafe code in the tree; make sure the gate's pass over
+        // them is not vacuous. Each file must (a) pass as written and
+        // (b) fail once its SAFETY comments are stripped — proving the
+        // gate genuinely sees every unchecked access in the hot path.
+        let tag = ["SAFE", "TY:"].concat();
+        for rel in ["colorcount/kernel.rs", "colorcount/parallel.rs"] {
+            let path = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("src")
+                .join(rel);
+            let src = std::fs::read_to_string(&path).expect("read hot-path module");
+            let v = check_source(rel, &src);
+            assert!(v.is_empty(), "{rel} must pass the gate:\n{}", render(&v));
+            assert!(
+                src.contains(&tag),
+                "{rel} must document its {} sites",
+                kw()
+            );
+            let stripped: String = src
+                .lines()
+                .filter(|l| !l.contains(&tag))
+                .map(|l| format!("{l}\n"))
+                .collect();
+            let v = check_source(rel, &stripped);
+            assert!(
+                v.iter().any(|v| v.rule == RULE_SAFETY),
+                "stripping {} comments from {rel} must trip the gate",
+                tag
+            );
+        }
+    }
+
+    #[test]
     fn atomic_import_outside_shim_is_flagged() {
         let src = ["use std", "::sync", "::atomic::AtomicU64;\n"].concat();
         let v = check_source("colorcount/x.rs", &src);

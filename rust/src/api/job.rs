@@ -3,7 +3,7 @@
 //! rule up front so the coordinator never has to panic on a bad config.
 
 use super::error::HarpsgError;
-use crate::colorcount::StorageMode;
+use crate::colorcount::{KernelMode, StorageMode};
 use crate::comm::{AdaptivePolicy, HockneyParams};
 use crate::coordinator::{validate_group_size, EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use crate::template::{builtin, Template};
@@ -130,6 +130,18 @@ impl CountJobBuilder {
     /// `storage` section and memory peaks show what changed.
     pub fn table_storage(mut self, s: StorageMode) -> Self {
         self.cfg.table_storage = s;
+        self
+    }
+
+    /// Combine kernel (the CLI's `--kernel`): `Scalar` (the historical
+    /// loops, default — and the differential baseline), `Simd` (the
+    /// chunked-lane SpMM + fused eMA row-block executor), or `Auto`
+    /// (pick per combine from the aggregation width). Bit-identical on
+    /// integer-valued DP tables; see `colorcount::kernel` for the
+    /// tolerance policy on fractional data. Results never depend on the
+    /// worker count either way.
+    pub fn kernel(mut self, k: KernelMode) -> Self {
+        self.cfg.kernel = k;
         self
     }
 
@@ -335,6 +347,26 @@ mod tests {
         }
         // orthogonal to every other knob, including the adaptive sweep
         assert!(base()
+            .table_storage(StorageMode::Auto)
+            .adaptive(true)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn kernel_knob() {
+        assert_eq!(
+            base().build().unwrap().config().kernel,
+            KernelMode::Scalar,
+            "scalar baseline stays the default"
+        );
+        for mode in [KernelMode::Scalar, KernelMode::Simd, KernelMode::Auto] {
+            let job = base().kernel(mode).build().unwrap();
+            assert_eq!(job.config().kernel, mode);
+        }
+        // orthogonal to storage and the adaptive sweep
+        assert!(base()
+            .kernel(KernelMode::Simd)
             .table_storage(StorageMode::Auto)
             .adaptive(true)
             .build()

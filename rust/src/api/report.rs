@@ -33,6 +33,8 @@ pub struct JobReport {
     pub exchange: String,
     /// count-table storage mode ("dense" | "sparse" | "auto")
     pub table_storage: String,
+    /// combine kernel ("scalar" | "simd" | "auto")
+    pub kernel: String,
     /// model-driven per-subtemplate group selection was enabled
     pub adaptive: bool,
     pub n_ranks: usize,
@@ -97,6 +99,7 @@ impl JobReport {
             engine: job.cfg.engine.name().to_string(),
             exchange: job.cfg.exchange.name().to_string(),
             table_storage: job.cfg.table_storage.name().to_string(),
+            kernel: job.cfg.kernel.name().to_string(),
             adaptive: job.cfg.adaptive_group,
             n_ranks: job.cfg.n_ranks,
             n_threads: job.cfg.n_threads,
@@ -173,6 +176,7 @@ impl JobReport {
                     ("engine".into(), Json::Str(self.engine.clone())),
                     ("exchange".into(), Json::Str(self.exchange.clone())),
                     ("table_storage".into(), Json::Str(self.table_storage.clone())),
+                    ("kernel".into(), Json::Str(self.kernel.clone())),
                     ("adaptive".into(), Json::Bool(self.adaptive)),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),

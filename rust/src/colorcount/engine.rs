@@ -17,10 +17,11 @@
 //! sets sums to the full result. The distributed coordinator leans on this
 //! to interleave per-step computation with communication (Alg 3).
 
-use super::parallel::{combine_batches, ExecStats, PairBatch};
+use super::kernel::KernelMode;
+use super::parallel::{combine_batches_with, ExecStats, PairBatch};
 use super::storage::RowsRef;
 use super::table::{init_leaf_table, Coloring, Count, CountTable};
-use crate::combin::{Binomial, SplitTable};
+use crate::combin::{Binomial, CheckedSplit, SplitTable};
 use crate::graph::Graph;
 use crate::template::{automorphism_count, partition_template, PartitionDag, Template};
 
@@ -176,33 +177,43 @@ pub fn aggregate_batch(
 
 /// Contract one vertex row through the split table:
 /// `orow[s] += Σ_j prow[idx1[s,j]] · arow[idx2[s,j]]`. This is the inner
-/// kernel shared by the serial [`contract_touched`] and the parallel
-/// executor ([`super::parallel`]) so both paths run bit-identical
-/// arithmetic. Returns the (set, split) units processed for this row.
+/// scalar kernel shared by the serial [`contract_touched`] and the
+/// parallel executor ([`super::parallel`]) so both paths run
+/// bit-identical arithmetic — and the differential baseline the SIMD
+/// kernel ([`super::kernel`]) is measured against. Returns the
+/// (set, split) units processed for this row.
 ///
-/// SAFETY contract for the unchecked accesses: callers must guarantee
-/// every `split.idx1` entry is `< prow.len()` and every `split.idx2`
-/// entry is `< arow.len()` (the public entry points debug-assert this).
+/// The unchecked gathers are justified by the [`CheckedSplit`] operand:
+/// its construction validated every `idx1`/`idx2` entry against the
+/// passive/aggregation widths, and the row-length equalities are
+/// asserted here (three compares per row, amortized over the
+/// `n_sets · n_splits` element ops).
 #[inline]
 pub(crate) fn contract_row(
     orow: &mut [Count],
     prow: &[Count],
     arow: &[Count],
-    split: &SplitTable,
+    cs: &CheckedSplit<'_>,
 ) -> u64 {
+    let split = cs.split();
     let n_splits = split.n_splits;
     let n_sets = split.n_sets;
+    assert_eq!(prow.len(), cs.n_passive(), "passive row width");
+    assert_eq!(arow.len(), cs.n_agg(), "aggregation row width");
+    assert_eq!(orow.len(), n_sets, "output row width");
     let idx1 = &split.idx1[..n_sets * n_splits];
     let idx2 = &split.idx2[..n_sets * n_splits];
     let mut flat = 0usize;
-    for o in orow.iter_mut().take(n_sets) {
+    for o in orow.iter_mut() {
         // two accumulators break the FMA dependency chain over the
         // (short, 2–70 long) split run — measured win in §Perf
         let mut acc0 = 0.0f32;
         let mut acc1 = 0.0f32;
         let mut j = 0;
-        // SAFETY: flat+j < n_sets*n_splits by loop structure; index
-        // ranges validated by the caller (see the function docs).
+        // SAFETY: flat+j < n_sets*n_splits by loop structure; the
+        // gathered prow/arow indices are in range because `cs` validated
+        // every split-table entry against exactly the row widths
+        // asserted above (CheckedSplit::new).
         unsafe {
             while j + 2 <= n_splits {
                 let p0 = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
@@ -236,21 +247,19 @@ pub fn contract_touched(
     scratch: &mut CombineScratch,
 ) -> u64 {
     let mut units = 0u64;
-    // SAFETY of the unchecked accesses in `contract_row`: `SplitTable::new`
-    // constructs idx1/idx2 as ranks into C(k,a1)/C(k,a2) (tests assert the
-    // bijection), and the passive/agg rows have exactly those widths —
-    // enforced by the debug asserts. Bounds checks on these 10⁷+
-    // L1-resident gathers are the measured hot-path cost
-    // (EXPERIMENTS.md §Perf).
-    debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets));
-    debug_assert!(split.idx2.iter().all(|&i| (i as usize) < scratch.n_agg_sets));
+    // one checked construction per combine: validates every idx1/idx2
+    // entry against the operand widths, so the per-element gathers in
+    // `contract_row` run unchecked (bounds checks on these 10⁷+
+    // L1-resident gathers are the measured hot-path cost,
+    // EXPERIMENTS.md §Perf)
+    let cs = CheckedSplit::new(split, passive.n_sets, scratch.n_agg_sets);
     for ti in 0..scratch.touched.len() {
         let v = scratch.touched[ti] as usize;
         let prow = passive.row(v);
         let lo = v * scratch.n_agg_sets;
         let arow = &scratch.agg[lo..lo + scratch.n_agg_sets];
         let orow = out.row_mut(v);
-        units += contract_row(orow, prow, arow, split);
+        units += contract_row(orow, prow, arow, &cs);
     }
     scratch.finish();
     units
@@ -341,7 +350,7 @@ impl Engine {
         self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
             scratch.begin(active.n_sets);
             let pairs = (0..n as u32).flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)));
-            aggregate_batch(&mut scratch, RowsRef::Dense(active), pairs);
+            aggregate_batch(&mut scratch, RowsRef::dense(active), pairs);
             contract_touched(out, passive, split, &mut scratch);
         })
     }
@@ -363,6 +372,24 @@ impl Engine {
         n_workers: usize,
         max_task_size: u32,
     ) -> (IterationOutput, ExecStats) {
+        self.run_iteration_workers_kernel(g, iter_seed, n_workers, max_task_size, KernelMode::Scalar)
+    }
+
+    /// [`Engine::run_iteration_workers`] with an explicit combine-kernel
+    /// choice (the `--kernel` knob): `Scalar` is the historical executor,
+    /// `Simd` runs the fused row-block SpMM/eMA kernel
+    /// ([`super::kernel`]), `Auto` resolves per combine from the shape.
+    /// The SIMD path ignores `max_task_size` (it shards by adjacency
+    /// row-blocks, never splitting a vertex) and is bit-identical for
+    /// every worker count.
+    pub fn run_iteration_workers_kernel(
+        &self,
+        g: &Graph,
+        iter_seed: u64,
+        n_workers: usize,
+        max_task_size: u32,
+        kernel: KernelMode,
+    ) -> (IterationOutput, ExecStats) {
         // the flat (v, u) adjacency pair list every combine consumes,
         // grouped by v in CSR order — the same pair order the serial
         // engine's iterator produces
@@ -373,15 +400,16 @@ impl Engine {
         let out = self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
             let batch = [PairBatch {
                 pairs: &pairs,
-                rows: RowsRef::Dense(active),
+                rows: RowsRef::dense(active),
             }];
-            let st = combine_batches(
+            let st = combine_batches_with(
                 out,
-                RowsRef::Dense(passive),
+                RowsRef::dense(passive),
                 split,
                 &batch,
                 max_task_size,
                 n_workers,
+                kernel,
             );
             stats.merge(&st);
         });
@@ -476,7 +504,7 @@ mod tests {
             let mut out = CountTable::zeros(n, split.n_sets);
             let mut scratch = CombineScratch::new(n, c2);
             scratch.begin(c2);
-            aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+            aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
             contract_touched(&mut out, &passive, &split, &mut scratch);
             // naive path
             let mut naive = CountTable::zeros(n, split.n_sets);
@@ -551,7 +579,7 @@ mod tests {
             let mut scratch = CombineScratch::new(n, c2);
             for ch in chunks {
                 scratch.begin(c2);
-                aggregate_batch(&mut scratch, RowsRef::Dense(&active), ch.iter().copied());
+                aggregate_batch(&mut scratch, RowsRef::dense(&active), ch.iter().copied());
                 contract_touched(&mut out, &passive, &split, &mut scratch);
             }
             out

@@ -1,0 +1,325 @@
+//! Vectorized SpMM / eMA combine kernels (the SubGraph2Vec decomposition).
+//!
+//! The factored combine of Eq 1 is two linear-algebra kernels over the
+//! active child's color-set columns, viewed as a dense row-major block:
+//!
+//! ```text
+//!   SpMM:  agg[v, ·]  = Σ_{u ∈ N(v)} active[u, ·]      (A · X, A = adjacency)
+//!   eMA :  out[v, s] += Σ_j passive[v, t0[s,j]] · agg[v, t1[s,j]]
+//! ```
+//!
+//! This module holds the vectorized forms of both stages, written with
+//! explicit chunked-`f32` lanes ([`LANE`]-wide `[f32; 8]` chunks, plain
+//! stable Rust — the optimizer maps a fixed-width independent-lane loop
+//! straight onto the target's vector registers) plus the `--kernel` knob
+//! ([`KernelMode`]) that selects between them and the scalar baseline.
+//! The row-block executor that shards the adjacency's CSR view over
+//! workers lives in [`super::parallel`]; the per-row arithmetic is here so
+//! the serial engine, the parallel executor and the benches share one
+//! implementation.
+//!
+//! # Determinism and tolerance policy
+//!
+//! * **SpMM stage** ([`add_rows_chunked`]): element-wise `dst[j] += src[j]`
+//!   in chunks. Every aggregation slot accumulates independently and in
+//!   the same source order as the scalar loop, so this stage is
+//!   **bit-identical** to the scalar baseline, always.
+//! * **eMA stage** ([`contract_row_simd`]): the per-set gather dot product
+//!   runs on [`LANE`] independent accumulators — term `j` lands in lane
+//!   `j % LANE` — folded by the fixed reduction tree
+//!   `((l0+l1)+(l2+l3)) + ((l4+l5)+(l6+l7))`. The chunk width and tree
+//!   are constants, so the summation order is a pure function of
+//!   `n_splits`: reproducible bit-for-bit across runs, worker counts and
+//!   block sizes. It *differs* from the scalar kernel's two-accumulator
+//!   order, which matters only once f32 rounding occurs: on
+//!   integer-valued tables (every DP table, as long as counts stay below
+//!   2^24) both orders are exact, hence bit-identical. On general
+//!   fractional data the reordering moves each output by at most a few
+//!   ULPs (both orders carry the standard `n_splits · ε` bound for sums
+//!   of non-negative terms), which is the documented tolerance the
+//!   differential suite (`tests/kernel.rs`) pins: bit-identity on
+//!   integer tables, ≤ 1e-4 relative on fractional ones.
+
+use super::table::Count;
+use crate::combin::CheckedSplit;
+
+/// Chunk width of the explicit f32 lanes. Eight `f32`s fill one AVX2
+/// register (and two NEON ones); the fixed width is also what pins the
+/// eMA reduction-tree order.
+pub const LANE: usize = 8;
+
+/// The `--kernel` knob: which combine kernel the executors run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KernelMode {
+    /// the scalar differential baseline (historical per-element loops)
+    Scalar,
+    /// chunked-lane SpMM + eMA over row-blocks
+    Simd,
+    /// pick per combine from the shape ([`KernelMode::resolve`])
+    Auto,
+}
+
+impl KernelMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            KernelMode::Scalar => "scalar",
+            KernelMode::Simd => "simd",
+            KernelMode::Auto => "auto",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<KernelMode> {
+        match name {
+            "scalar" => Some(KernelMode::Scalar),
+            "simd" => Some(KernelMode::Simd),
+            "auto" => Some(KernelMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// Resolve `Auto` for one combine from its aggregation-row width:
+    /// the chunked kernels win once a row spans at least one full lane
+    /// chunk; narrower rows (tiny subtemplates) stay on the scalar path
+    /// where the chunk remainder handling is pure overhead. The input is
+    /// a pure function of the template shape — identical on every rank
+    /// and worker, so the choice can never diverge across a run.
+    pub fn resolve(&self, n_agg: usize) -> ResolvedKernel {
+        match self {
+            KernelMode::Scalar => ResolvedKernel::Scalar,
+            KernelMode::Simd => ResolvedKernel::Simd,
+            KernelMode::Auto => {
+                if n_agg >= LANE {
+                    ResolvedKernel::Simd
+                } else {
+                    ResolvedKernel::Scalar
+                }
+            }
+        }
+    }
+}
+
+/// A concrete kernel choice for one combine (no `Auto` left).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ResolvedKernel {
+    Scalar,
+    Simd,
+}
+
+/// The SpMM inner step: `dst[j] += src[j]` over explicit [`LANE`]-wide
+/// chunks with a scalar remainder. Each slot accumulates independently in
+/// the same order as the scalar loop, so this is bit-identical to it —
+/// the chunking only tells the optimizer the lanes don't alias.
+#[inline]
+pub fn add_rows_chunked(dst: &mut [Count], src: &[Count]) {
+    assert_eq!(dst.len(), src.len(), "row widths must match");
+    let mut d = dst.chunks_exact_mut(LANE);
+    let mut s = src.chunks_exact(LANE);
+    for (dc, sc) in d.by_ref().zip(s.by_ref()) {
+        // fixed-size array views: the length is a compile-time constant,
+        // so the loop below compiles to one vector add per chunk
+        let dc: &mut [Count; LANE] = dc.try_into().unwrap();
+        let sc: &[Count; LANE] = sc.try_into().unwrap();
+        for l in 0..LANE {
+            dc[l] += sc[l];
+        }
+    }
+    for (a, &x) in d.into_remainder().iter_mut().zip(s.remainder()) {
+        *a += x;
+    }
+}
+
+/// Fold [`LANE`] lane accumulators through the fixed reduction tree —
+/// THE one place the eMA summation order is defined.
+#[inline]
+fn reduce_lanes(acc: [f32; LANE]) -> f32 {
+    ((acc[0] + acc[1]) + (acc[2] + acc[3])) + ((acc[4] + acc[5]) + (acc[6] + acc[7]))
+}
+
+/// The vectorized eMA stage: contract one vertex row through the split
+/// table, `orow[s] += Σ_j prow[idx1[s,j]] · arow[idx2[s,j]]`, with the
+/// per-set dot product spread over [`LANE`] accumulators (term `j` in
+/// lane `j % LANE`) and folded by [`reduce_lanes`]. Same contraction as
+/// the scalar `contract_row`, reordered as documented in the module docs.
+/// Returns the (set, split) units processed.
+pub(crate) fn contract_row_simd(
+    orow: &mut [Count],
+    prow: &[Count],
+    arow: &[Count],
+    cs: &CheckedSplit<'_>,
+) -> u64 {
+    let split = cs.split();
+    let n_splits = split.n_splits;
+    let n_sets = split.n_sets;
+    // the checked-construction contract: `cs` validated every idx1/idx2
+    // against these widths, so the row-length equalities below are the
+    // only remaining obligations of the unchecked gathers
+    assert_eq!(prow.len(), cs.n_passive(), "passive row width");
+    assert_eq!(arow.len(), cs.n_agg(), "aggregation row width");
+    assert_eq!(orow.len(), n_sets, "output row width");
+    let idx1 = &split.idx1[..n_sets * n_splits];
+    let idx2 = &split.idx2[..n_sets * n_splits];
+    let mut flat = 0usize;
+    for o in orow.iter_mut() {
+        let mut acc = [0.0f32; LANE];
+        let mut j = 0;
+        // SAFETY: flat+j+l < n_sets*n_splits by the loop bounds, so the
+        // idx reads are in range of the slices above; the gathered
+        // prow/arow indices are < prow.len()/arow.len() because `cs`
+        // validated every table entry against exactly these widths at
+        // construction (CheckedSplit::new), asserted again per row above.
+        unsafe {
+            while j + LANE <= n_splits {
+                for (l, a) in acc.iter_mut().enumerate() {
+                    let p = *prow.get_unchecked(*idx1.get_unchecked(flat + j + l) as usize);
+                    let x = *arow.get_unchecked(*idx2.get_unchecked(flat + j + l) as usize);
+                    *a += p * x;
+                }
+                j += LANE;
+            }
+            // remainder terms land in lanes 0..(n_splits % LANE), keeping
+            // lane l = Σ of terms j ≡ l (mod LANE) exactly
+            let mut l = 0;
+            while j < n_splits {
+                let p = *prow.get_unchecked(*idx1.get_unchecked(flat + j) as usize);
+                let x = *arow.get_unchecked(*idx2.get_unchecked(flat + j) as usize);
+                acc[l] += p * x;
+                l += 1;
+                j += 1;
+            }
+        }
+        flat += n_splits;
+        *o += reduce_lanes(acc);
+    }
+    (n_sets * n_splits) as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::combin::{Binomial, SplitTable};
+    use crate::util::prop;
+
+    #[test]
+    fn kernel_mode_parse_roundtrip() {
+        for m in [KernelMode::Scalar, KernelMode::Simd, KernelMode::Auto] {
+            assert_eq!(KernelMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(KernelMode::parse("avx"), None);
+    }
+
+    #[test]
+    fn auto_resolves_by_lane_width() {
+        assert_eq!(KernelMode::Auto.resolve(LANE), ResolvedKernel::Simd);
+        assert_eq!(KernelMode::Auto.resolve(LANE - 1), ResolvedKernel::Scalar);
+        assert_eq!(KernelMode::Scalar.resolve(1000), ResolvedKernel::Scalar);
+        assert_eq!(KernelMode::Simd.resolve(1), ResolvedKernel::Simd);
+    }
+
+    #[test]
+    fn chunked_add_bit_identical_to_scalar() {
+        prop::check("add_rows_chunked", |gen| {
+            let n = gen.usize_in(0, 40);
+            let mut dst: Vec<f32> = (0..n).map(|i| (i as f32) * 0.37 + 0.1).collect();
+            let src: Vec<f32> = (0..n).map(|i| (i as f32) * 1.13 - 3.0).collect();
+            let mut want = dst.clone();
+            for (a, &x) in want.iter_mut().zip(&src) {
+                *a += x;
+            }
+            add_rows_chunked(&mut dst, &src);
+            for (a, b) in dst.iter().zip(&want) {
+                if a.to_bits() != b.to_bits() {
+                    return Err(format!("chunked add moved a bit: {a} vs {b}"));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The documented reduction-tree order, pinned: lane l holds the sum
+    /// of terms j ≡ l (mod LANE), folded ((0+1)+(2+3))+((4+5)+(6+7)).
+    /// A reference implementation of exactly that order must match the
+    /// kernel bit-for-bit on arbitrary fractional inputs.
+    #[test]
+    fn prop_reduction_tree_order_is_pinned() {
+        prop::check("simd_tree_order", |gen| {
+            let binom = Binomial::new();
+            let k = gen.usize_in(4, 8);
+            let a = gen.usize_in(2, k);
+            let a1 = gen.usize_in(1, a - 1);
+            let split = SplitTable::new(k, a, a1, &binom);
+            let c1 = binom.c(k, a1) as usize;
+            let c2 = binom.c(k, a - a1) as usize;
+            let prow: Vec<f32> = (0..c1).map(|i| (i as f32) * 0.311 + 0.77).collect();
+            let arow: Vec<f32> = (0..c2).map(|i| (i as f32) * 0.177 + 0.35).collect();
+            let cs = crate::combin::CheckedSplit::new(&split, c1, c2);
+            let mut got = vec![0.0f32; split.n_sets];
+            contract_row_simd(&mut got, &prow, &arow, &cs);
+            // reference: the documented order, written naively
+            for s in 0..split.n_sets {
+                let (r1, r2) = split.row(s);
+                let mut lanes = [0.0f32; LANE];
+                for j in 0..split.n_splits {
+                    lanes[j % LANE] += prow[r1[j] as usize] * arow[r2[j] as usize];
+                }
+                let want = ((lanes[0] + lanes[1]) + (lanes[2] + lanes[3]))
+                    + ((lanes[4] + lanes[5]) + (lanes[6] + lanes[7]));
+                if got[s].to_bits() != want.to_bits() {
+                    return Err(format!(
+                        "set {s}: kernel {} != documented order {want}",
+                        got[s]
+                    ));
+                }
+            }
+            Ok(())
+        });
+    }
+
+    /// The ULP policy: on integer-valued rows the reordered sum is exact,
+    /// hence bit-identical to the scalar kernel; on fractional rows it
+    /// stays within the documented relative tolerance.
+    #[test]
+    fn simd_contract_matches_scalar_within_policy() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(6, 4, 2, &binom);
+        let c1 = binom.c(6, 2) as usize;
+        let c2 = binom.c(6, 2) as usize;
+        let cs = crate::combin::CheckedSplit::new(&split, c1, c2);
+
+        // integer-valued: bit identity
+        let prow: Vec<f32> = (0..c1).map(|i| ((i * 3) % 7) as f32).collect();
+        let arow: Vec<f32> = (0..c2).map(|i| ((i * 5) % 4) as f32).collect();
+        let mut simd = vec![0.0f32; split.n_sets];
+        let mut scalar = vec![0.0f32; split.n_sets];
+        contract_row_simd(&mut simd, &prow, &arow, &cs);
+        crate::colorcount::engine::contract_row(&mut scalar, &prow, &arow, &cs);
+        for (a, b) in simd.iter().zip(&scalar) {
+            assert_eq!(a.to_bits(), b.to_bits(), "integer rows must be exact");
+        }
+
+        // fractional: ≤ 1e-4 relative (far looser than the ~n_splits·ε
+        // bound both orders carry; the slack keeps the test robust)
+        let prow: Vec<f32> = (0..c1).map(|i| (i as f32) * 0.123 + 0.531).collect();
+        let arow: Vec<f32> = (0..c2).map(|i| (i as f32) * 0.731 + 0.25).collect();
+        let mut simd = vec![0.0f32; split.n_sets];
+        let mut scalar = vec![0.0f32; split.n_sets];
+        contract_row_simd(&mut simd, &prow, &arow, &cs);
+        crate::colorcount::engine::contract_row(&mut scalar, &prow, &arow, &cs);
+        for (a, b) in simd.iter().zip(&scalar) {
+            let rel = (a - b).abs() / b.abs().max(1e-12);
+            assert!(rel <= 1e-4, "fractional rows out of tolerance: {a} vs {b}");
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "aggregation row width")]
+    fn contract_row_simd_rejects_missized_agg_row() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(5, 3, 1, &binom);
+        let cs = crate::combin::CheckedSplit::new(&split, 5, 10);
+        let mut orow = vec![0.0f32; split.n_sets];
+        let prow = vec![0.0f32; 5];
+        let arow = vec![0.0f32; 9]; // one short of the validated width
+        contract_row_simd(&mut orow, &prow, &arow, &cs);
+    }
+}

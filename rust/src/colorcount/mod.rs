@@ -1,14 +1,16 @@
 //! The color-coding counting substrate: count tables and colorings
 //! (`table`), the DP engine with the factored combine (`engine`), the
 //! real multithreaded combine executor over the Alg-4 task queue
-//! (`parallel`), the adaptive dense/sparse table representations and the
-//! shared wire codec (`storage`), the (ε,δ) estimation loop (`estimate`),
-//! and the exact backtracking oracle used by tests and examples
-//! (`brute`).
+//! (`parallel`), the vectorized SpMM/eMA combine kernel and the
+//! `--kernel` knob behind it (`kernel`), the adaptive dense/sparse table
+//! representations and the shared wire codec (`storage`), the (ε,δ)
+//! estimation loop (`estimate`), and the exact backtracking oracle used
+//! by tests and examples (`brute`).
 
 pub mod brute;
 pub mod engine;
 pub mod estimate;
+pub mod kernel;
 pub mod parallel;
 pub mod storage;
 pub mod table;
@@ -16,8 +18,12 @@ pub mod table;
 pub use brute::count_embeddings;
 pub use engine::{aggregate_batch, contract_touched, CombineScratch, Engine, EngineContext};
 pub use estimate::{estimate, iteration_bound, median_of_means, Estimate};
-pub use parallel::{aggregate_merged, combine_batches, nested_budget, ExecStats, PairBatch};
+pub use kernel::{KernelMode, ResolvedKernel, LANE};
+pub use parallel::{
+    aggregate_merged, combine_batches, combine_batches_with, nested_budget, ExecStats, PairBatch,
+};
 pub use storage::{
-    encode_rows, RowsPayload, RowsRef, SparseTable, StorageMode, StoragePolicy, TableStorage,
+    encode_rows, RowScratch, RowsPayload, RowsRef, SparseTable, StorageMode, StoragePolicy,
+    TableStorage,
 };
 pub use table::{init_leaf_table, Coloring, Count, CountTable};

@@ -33,9 +33,10 @@
 //! vertices are exact, hence bit-identical to serial too.
 
 use super::engine::contract_row;
-use super::storage::RowsRef;
+use super::kernel::{contract_row_simd, KernelMode, ResolvedKernel};
+use super::storage::{RowScratch, RowsRef};
 use super::table::{Count, CountTable};
-use crate::combin::SplitTable;
+use crate::combin::{CheckedSplit, SplitTable};
 use crate::sched::make_tasks;
 use crate::util::shim::AtomicUsize;
 use std::time::Instant;
@@ -372,9 +373,10 @@ fn aggregate_phase(
 
 /// Phase 2: claim per-vertex groups, fold each group's task partials in
 /// canonical order, and contract the merged row into `out`. A sparse
-/// passive table is materialized one row at a time into a per-worker
-/// scratch buffer — the materialized row equals the dense original
-/// exactly, so the contraction arithmetic is representation-independent.
+/// passive table is materialized one row at a time through a per-worker
+/// [`RowScratch`] (touched-entry clearing, not a full-width `fill`) —
+/// the materialized row equals the dense original exactly, so the
+/// contraction arithmetic is representation-independent.
 /// Returns per-worker (busy seconds, contraction units).
 #[allow(clippy::too_many_arguments)]
 fn contract_phase(
@@ -383,13 +385,12 @@ fn contract_phase(
     partials: &[Count],
     out: &mut CountTable,
     passive: RowsRef<'_>,
-    split: &SplitTable,
+    cs: &CheckedSplit<'_>,
     n_agg: usize,
     n_workers: usize,
 ) -> Vec<(f64, u64)> {
     let next = AtomicUsize::new(0);
     let n_sets = out.n_sets;
-    let n_passive = passive.n_sets();
     let optr = SendPtr(out.data.as_mut_ptr());
     #[cfg(debug_assertions)]
     let claims = ClaimTracker::new();
@@ -397,7 +398,7 @@ fn contract_phase(
         let t0 = Instant::now();
         let mut units = 0u64;
         let mut fold: Vec<Count> = vec![0.0; n_agg];
-        let mut prow_buf: Vec<Count> = vec![0.0; n_passive];
+        let mut prow_scratch = RowScratch::new(cs.n_passive());
         loop {
             let gi = next.fetch_add(1);
             if gi >= groups.len() {
@@ -416,14 +417,14 @@ fn contract_phase(
                 fold_group(partials, lo, hi, n_agg, &mut fold);
                 &fold
             };
-            let prow = passive.row_in(v, &mut prow_buf);
+            let prow = prow_scratch.row(passive, v);
             // SAFETY: each group owns a distinct vertex `v`, claimed once
             // from the atomic counter, so output rows are written
             // disjointly; `v < out.n_rows` because `build_plan` asserted
             // every pair's vertex row against `n_rows`.
             let orow =
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(v * n_sets), n_sets) };
-            units += contract_row(orow, prow, arow, split);
+            units += contract_row(orow, prow, arow, cs);
         }
         (t0.elapsed().as_secs_f64(), units)
     };
@@ -433,8 +434,137 @@ fn contract_phase(
     recs
 }
 
+/// Vertex rows per claimable block of the fused SIMD executor: big enough
+/// to amortize the claim, small enough that stragglers rebalance (a
+/// 4096-row step buffer still yields 64 claimable blocks).
+const SIMD_BLOCK: usize = 64;
+
+/// Per-batch CSR index of one combine's pair lists: `run[v] = (first,
+/// deg)` — vertex `v`'s pairs sit at `pairs[first..first + deg]`. Same
+/// contiguity contract (hard-asserted) as [`build_plan`].
+fn index_batches(n_rows: usize, batches: &[PairBatch<'_>]) -> Vec<Vec<(usize, u32)>> {
+    let mut runs = Vec::with_capacity(batches.len());
+    for b in batches {
+        let mut run: Vec<(usize, u32)> = vec![(usize::MAX, 0); n_rows];
+        for (i, &(v, _)) in b.pairs.iter().enumerate() {
+            let v = v as usize;
+            assert!(v < n_rows, "pair vertex row {v} out of range ({n_rows})");
+            let (first, deg) = &mut run[v];
+            if *first == usize::MAX {
+                *first = i;
+            } else {
+                // hard assert: a non-contiguous list would silently route
+                // pairs to the wrong vertex (same contract as build_plan)
+                assert_eq!(
+                    *first + *deg as usize,
+                    i,
+                    "batch pairs must be grouped contiguously by vertex"
+                );
+            }
+            *deg += 1;
+        }
+        runs.push(run);
+    }
+    runs
+}
+
+/// The fused SpMM + eMA executor ([`super::kernel`]): workers claim
+/// [`SIMD_BLOCK`]-row blocks of the output, and for each vertex aggregate
+/// its full neighbor run (all batches, canonical order) into a per-worker
+/// row buffer — the SpMM stage, chunked-lane adds — then immediately
+/// contract it through the split table with the lane-tree eMA kernel.
+///
+/// One worker owns a vertex end to end, so there is no cross-task merge
+/// and no `partials` round-trip; the aggregation float order is the
+/// canonical (vertex, batch, pair) order for **every** worker and block
+/// count, hence bit-identical to the serial `aggregate_batch`. Only the
+/// eMA lane tree reorders sums relative to the scalar `contract_row`
+/// (see the kernel module's tolerance policy). `max_task_size` does not
+/// apply: the shards are row blocks, never splitting a vertex.
+fn combine_rowblocks_simd(
+    out: &mut CountTable,
+    passive: RowsRef<'_>,
+    cs: &CheckedSplit<'_>,
+    batches: &[PairBatch<'_>],
+    n_agg: usize,
+    n_workers: usize,
+    stats: &mut ExecStats,
+) {
+    let n_rows = out.n_rows;
+    let runs = index_batches(n_rows, batches);
+    let n_blocks = n_rows.div_ceil(SIMD_BLOCK);
+    let pool = n_workers.clamp(1, n_blocks);
+    let next = AtomicUsize::new(0);
+    let n_sets = out.n_sets;
+    let optr = SendPtr(out.data.as_mut_ptr());
+    #[cfg(debug_assertions)]
+    let claims = ClaimTracker::new();
+    let runs = &runs;
+    let worker = |_w: usize| -> (f64, u64, u64, u64) {
+        let t0 = Instant::now();
+        let mut my_blocks = 0u64;
+        let mut my_pairs = 0u64;
+        let mut my_units = 0u64;
+        let mut agg: Vec<Count> = vec![0.0; n_agg];
+        let mut prow_scratch = RowScratch::new(cs.n_passive());
+        loop {
+            let bi = next.fetch_add(1);
+            if bi >= n_blocks {
+                break;
+            }
+            #[cfg(debug_assertions)]
+            claims.claim(bi);
+            let lo = bi * SIMD_BLOCK;
+            let hi = (lo + SIMD_BLOCK).min(n_rows);
+            for v in lo..hi {
+                let mut touched = false;
+                for (b, run) in batches.iter().zip(runs) {
+                    let (first, deg) = run[v];
+                    if deg == 0 {
+                        continue;
+                    }
+                    if !touched {
+                        agg.fill(0.0);
+                        touched = true;
+                    }
+                    for &(_, u) in &b.pairs[first..first + deg as usize] {
+                        b.rows.add_row_into_chunked(u as usize, &mut agg);
+                    }
+                    my_pairs += deg as u64;
+                }
+                if !touched {
+                    continue;
+                }
+                let prow = prow_scratch.row(passive, v);
+                // SAFETY: each block covers a distinct `[lo, hi)` row
+                // range claimed once from the atomic counter, so output
+                // rows are written disjointly; `v < n_rows == out.n_rows`
+                // by the block clamp above.
+                let orow =
+                    unsafe { std::slice::from_raw_parts_mut(optr.0.add(v * n_sets), n_sets) };
+                my_units += contract_row_simd(orow, prow, &agg, cs);
+            }
+            my_blocks += 1;
+        }
+        (t0.elapsed().as_secs_f64(), my_blocks, my_pairs, my_units)
+    };
+    let recs = run_workers(pool, worker);
+    #[cfg(debug_assertions)]
+    claims.assert_complete(n_blocks);
+    for (w, (busy, blocks, pairs, units)) in recs.into_iter().enumerate() {
+        stats.busy_seconds[w] += busy;
+        stats.worker_tasks[w] += blocks;
+        stats.worker_pairs[w] += pairs;
+        stats.n_tasks += blocks;
+        stats.n_pairs += pairs;
+        stats.units += units;
+    }
+}
+
 /// Execute one combine (the factored Eq-1 aggregate + contract) over the
-/// given pair batches on `n_workers` real threads, adding into `out`.
+/// given pair batches on `n_workers` real threads, adding into `out`,
+/// with the scalar kernel — the historical executor and the differential
+/// baseline the SIMD path is tested against.
 /// See the module docs for the determinism contract. Returns the measured
 /// execution record (vector fields have length `n_workers`).
 pub fn combine_batches(
@@ -444,6 +574,34 @@ pub fn combine_batches(
     batches: &[PairBatch<'_>],
     max_task_size: u32,
     n_workers: usize,
+) -> ExecStats {
+    combine_batches_with(
+        out,
+        passive,
+        split,
+        batches,
+        max_task_size,
+        n_workers,
+        KernelMode::Scalar,
+    )
+}
+
+/// [`combine_batches`] with an explicit combine-kernel choice (the
+/// `--kernel` knob): `Scalar` runs the two-phase task executor, `Simd`
+/// runs the fused row-block SpMM/eMA executor
+/// ([`combine_rowblocks_simd`]), `Auto` resolves per combine from the
+/// aggregation width. The split table is validated against the operand
+/// widths once here ([`CheckedSplit`]) — both contraction kernels gather
+/// through it unchecked.
+#[allow(clippy::too_many_arguments)]
+pub fn combine_batches_with(
+    out: &mut CountTable,
+    passive: RowsRef<'_>,
+    split: &SplitTable,
+    batches: &[PairBatch<'_>],
+    max_task_size: u32,
+    n_workers: usize,
+    kernel: KernelMode,
 ) -> ExecStats {
     assert!(n_workers >= 1, "combine executor needs at least one worker");
     let mut stats = ExecStats::zeros(n_workers);
@@ -458,26 +616,36 @@ pub fn combine_batches(
             "all batches of one combine must share the active-table width"
         );
     }
-    debug_assert_eq!(out.n_sets, split.n_sets);
-    debug_assert!(split.idx1.iter().all(|&i| (i as usize) < passive.n_sets()));
-    debug_assert!(split.idx2.iter().all(|&i| (i as usize) < n_agg));
+    assert_eq!(
+        out.n_sets, split.n_sets,
+        "output width must match the split table"
+    );
+    let cs = CheckedSplit::new(split, passive.n_sets(), n_agg);
     if batches.iter().all(|b| b.pairs.is_empty()) {
         return stats;
     }
 
-    let (tasks, groups) = build_plan(out.n_rows, batches, max_task_size);
-    // spawning more threads than tasks is pure overhead; clamping the
-    // pool never changes the result (determinism is schedule-free) and
-    // the stats vectors keep their configured `n_workers` length
-    // (tasks is non-empty here: some batch had pairs)
-    let pool = n_workers.clamp(1, tasks.len());
-    let mut partials: Vec<Count> = vec![0.0; tasks.len() * n_agg];
-    let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool);
-    let p2 = contract_phase(&tasks, &groups, &partials, out, passive, split, n_agg, pool);
-    absorb_phase1(&mut stats, p1);
-    for (w, (busy, units)) in p2.into_iter().enumerate() {
-        stats.busy_seconds[w] += busy;
-        stats.units += units;
+    match kernel.resolve(n_agg) {
+        ResolvedKernel::Simd => {
+            combine_rowblocks_simd(out, passive, &cs, batches, n_agg, n_workers, &mut stats);
+        }
+        ResolvedKernel::Scalar => {
+            let (tasks, groups) = build_plan(out.n_rows, batches, max_task_size);
+            // spawning more threads than tasks is pure overhead; clamping
+            // the pool never changes the result (determinism is
+            // schedule-free) and the stats vectors keep their configured
+            // `n_workers` length (tasks is non-empty here: some batch had
+            // pairs)
+            let pool = n_workers.clamp(1, tasks.len());
+            let mut partials: Vec<Count> = vec![0.0; tasks.len() * n_agg];
+            let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool);
+            let p2 = contract_phase(&tasks, &groups, &partials, out, passive, &cs, n_agg, pool);
+            absorb_phase1(&mut stats, p1);
+            for (w, (busy, units)) in p2.into_iter().enumerate() {
+                stats.busy_seconds[w] += busy;
+                stats.units += units;
+            }
+        }
     }
     stats
 }
@@ -556,18 +724,18 @@ mod tests {
         let mut serial = CountTable::zeros(n, split.n_sets);
         let mut scratch = CombineScratch::new(n, c2);
         scratch.begin(c2);
-        aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
         contract_touched(&mut serial, &passive, &split, &mut scratch);
 
         for workers in [1, 2, 4, 7] {
             let mut par = CountTable::zeros(n, split.n_sets);
             let batch = [PairBatch {
                 pairs: &pairs,
-                rows: RowsRef::Dense(&active),
+                rows: RowsRef::dense(&active),
             }];
             let st = combine_batches(
                 &mut par,
-                RowsRef::Dense(&passive),
+                RowsRef::dense(&passive),
                 &split,
                 &batch,
                 0,
@@ -632,12 +800,12 @@ mod tests {
             combine_batches(&mut out, p, &split, &batch, 3, workers);
             out
         };
-        let reference = run(RowsRef::Dense(&passive), RowsRef::Dense(&active), 1);
+        let reference = run(RowsRef::dense(&passive), RowsRef::dense(&active), 1);
         for workers in [1, 4] {
             for (p, a) in [
-                (RowsRef::Sparse(&sp_passive), RowsRef::Dense(&active)),
-                (RowsRef::Dense(&passive), RowsRef::Sparse(&sp_active)),
-                (RowsRef::Sparse(&sp_passive), RowsRef::Sparse(&sp_active)),
+                (RowsRef::sparse(&sp_passive), RowsRef::dense(&active)),
+                (RowsRef::dense(&passive), RowsRef::sparse(&sp_active)),
+                (RowsRef::sparse(&sp_passive), RowsRef::sparse(&sp_active)),
             ] {
                 let out = run(p, a, workers);
                 for (x, y) in out.data.iter().zip(&reference.data) {
@@ -648,12 +816,12 @@ mod tests {
         // the serial aggregation kernel agrees too
         let mut dense_scr = CombineScratch::new(n, c2);
         dense_scr.begin(c2);
-        aggregate_batch(&mut dense_scr, RowsRef::Dense(&active), pairs.iter().copied());
+        aggregate_batch(&mut dense_scr, RowsRef::dense(&active), pairs.iter().copied());
         let mut sparse_scr = CombineScratch::new(n, c2);
         sparse_scr.begin(c2);
         aggregate_batch(
             &mut sparse_scr,
-            RowsRef::Sparse(&sp_active),
+            RowsRef::sparse(&sp_active),
             pairs.iter().copied(),
         );
         for v in 0..n {
@@ -681,11 +849,11 @@ mod tests {
                 let mut out = CountTable::zeros(n, split.n_sets);
                 let batch = [PairBatch {
                     pairs: &pairs,
-                    rows: RowsRef::Dense(&active),
+                    rows: RowsRef::dense(&active),
                 }];
                 combine_batches(
                     &mut out,
-                    RowsRef::Dense(&passive),
+                    RowsRef::dense(&passive),
                     &split,
                     &batch,
                     mts,
@@ -722,16 +890,16 @@ mod tests {
             let batches = [
                 PairBatch {
                     pairs: &pairs_a,
-                    rows: RowsRef::Dense(&active_a),
+                    rows: RowsRef::dense(&active_a),
                 },
                 PairBatch {
                     pairs: &pairs_b,
-                    rows: RowsRef::Dense(&active_b),
+                    rows: RowsRef::dense(&active_b),
                 },
             ];
             let st = combine_batches(
                 &mut out,
-                RowsRef::Dense(&passive),
+                RowsRef::dense(&passive),
                 &split,
                 &batches,
                 2,
@@ -749,6 +917,109 @@ mod tests {
             for (a, b) in out.data.iter().zip(&reference.data) {
                 assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
             }
+        }
+    }
+
+    /// SIMD leg of the executor invariants: on integer-valued tables the
+    /// fused row-block kernel is bit-identical to the scalar executor
+    /// (lane-tree reorder of exact sums), for every worker count, dense
+    /// and sparse sources, single- and multi-batch.
+    #[test]
+    fn simd_executor_matches_scalar_bitwise_on_integer_tables() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(6, 4, 2, &binom);
+        let c1 = binom.c(6, 2) as usize;
+        let c2 = binom.c(6, 2) as usize; // 15 ≥ LANE → Auto picks Simd
+        let n = 150; // > SIMD_BLOCK so blocks genuinely shard
+        let mut passive = CountTable::zeros(n, c1);
+        let mut active = CountTable::zeros(n, c2);
+        for (i, x) in passive.data.iter_mut().enumerate() {
+            *x = ((i * 7) % 6) as f32; // integer-valued: sums are exact
+        }
+        for (i, x) in active.data.iter_mut().enumerate() {
+            *x = ((i * 3) % 5) as f32;
+        }
+        let sp_active = SparseTable::from_dense(&active);
+        let pairs = ring_pairs(n, 6);
+        let run = |rows: RowsRef<'_>, workers: usize, kernel: KernelMode| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let batch = [PairBatch { pairs: &pairs, rows }];
+            let st = combine_batches_with(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                4,
+                workers,
+                kernel,
+            );
+            (out, st)
+        };
+        let (reference, _) = run(RowsRef::dense(&active), 1, KernelMode::Scalar);
+        for workers in [1, 2, 4, 7] {
+            for kernel in [KernelMode::Simd, KernelMode::Auto] {
+                for rows in [RowsRef::dense(&active), RowsRef::sparse(&sp_active)] {
+                    let (out, st) = run(rows, workers, kernel);
+                    assert_eq!(st.n_pairs, pairs.len() as u64);
+                    assert_eq!(st.n_tasks, (n as u64).div_ceil(SIMD_BLOCK as u64));
+                    assert_eq!(
+                        st.units,
+                        (n * split.n_sets * split.n_splits) as u64,
+                        "every vertex contracts the full split table"
+                    );
+                    for (a, b) in out.data.iter().zip(&reference.data) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+                    }
+                }
+            }
+        }
+    }
+
+    /// Narrow aggregation widths fall back to scalar under `Auto` (no
+    /// lane win below one chunk) — and the forced `Simd` remainder path
+    /// still matches within the documented policy on fractional data.
+    #[test]
+    fn simd_executor_fractional_data_within_policy() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(5, 3, 1, &binom);
+        let c1 = 5;
+        let c2 = binom.c(5, 2) as usize;
+        let n = 70;
+        let (passive, active) = mk_tables(n, c1, c2);
+        let pairs = ring_pairs(n, 5);
+        let run = |workers: usize, kernel: KernelMode| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: RowsRef::dense(&active),
+            }];
+            combine_batches_with(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                0,
+                workers,
+                kernel,
+            );
+            out
+        };
+        let scalar = run(1, KernelMode::Scalar);
+        // worker-count invariance of the SIMD path itself is bitwise
+        let simd1 = run(1, KernelMode::Simd);
+        for workers in [2, 5] {
+            let out = run(workers, KernelMode::Simd);
+            for (a, b) in out.data.iter().zip(&simd1.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
+        // vs scalar: within the documented ≤1e-4 relative policy
+        for (a, b) in simd1.data.iter().zip(&scalar.data) {
+            let denom = b.abs().max(1.0);
+            assert!(
+                (a - b).abs() / denom <= 1e-4,
+                "simd {a} vs scalar {b} outside tolerance"
+            );
         }
     }
 
@@ -819,14 +1090,14 @@ mod tests {
         let (passive, active) = mk_tables(4, 4, c2);
         let mut out = CountTable::zeros(4, split.n_sets);
         // no batches at all
-        let st = combine_batches(&mut out, RowsRef::Dense(&passive), &split, &[], 0, 3);
+        let st = combine_batches(&mut out, RowsRef::dense(&passive), &split, &[], 0, 3);
         assert_eq!(st.n_tasks, 0);
         // batches with no pairs
         let batch = [PairBatch {
             pairs: &[],
-            rows: RowsRef::Dense(&active),
+            rows: RowsRef::dense(&active),
         }];
-        let st = combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 0, 3);
+        let st = combine_batches(&mut out, RowsRef::dense(&passive), &split, &batch, 0, 3);
         assert_eq!(st.n_pairs, 0);
         assert!(out.data.iter().all(|&x| x == 0.0));
     }
@@ -842,9 +1113,9 @@ mod tests {
         let mut out = CountTable::zeros(n, split.n_sets);
         let batch = [PairBatch {
             pairs: &pairs,
-            rows: RowsRef::Dense(&active),
+            rows: RowsRef::dense(&active),
         }];
-        let st = combine_batches(&mut out, RowsRef::Dense(&passive), &split, &batch, 3, 4);
+        let st = combine_batches(&mut out, RowsRef::dense(&passive), &split, &batch, 3, 4);
         assert_eq!(st.n_workers(), 4);
         assert_eq!(st.n_pairs, pairs.len() as u64);
         // 7 pairs per vertex at size-3 tasks → 3 tasks per vertex
@@ -880,7 +1151,7 @@ mod tests {
             let workers = gen.usize_in(1, 9);
             let batch = [PairBatch {
                 pairs: &pairs,
-                rows: RowsRef::Dense(&rows),
+                rows: RowsRef::dense(&rows),
             }];
             let (merged, st) = aggregate_merged(n, &batch, mts, workers);
             // coverage accounting: no task skipped or double-claimed
@@ -899,7 +1170,7 @@ mod tests {
             // exactness vs the serial path
             let mut scratch = CombineScratch::new(n, n_agg);
             scratch.begin(n_agg);
-            aggregate_batch(&mut scratch, RowsRef::Dense(&rows), pairs.iter().copied());
+            aggregate_batch(&mut scratch, RowsRef::dense(&rows), pairs.iter().copied());
             for (v, &d) in degs.iter().enumerate() {
                 let got = merged.row(v);
                 if d == 0 {

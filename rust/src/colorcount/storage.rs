@@ -361,8 +361,8 @@ impl TableStorage {
 
     pub fn as_rows(&self) -> RowsRef<'_> {
         match self {
-            TableStorage::Dense(t) => RowsRef::Dense(t),
-            TableStorage::Sparse(t) => RowsRef::Sparse(t),
+            TableStorage::Dense(t) => RowsRef::dense(t),
+            TableStorage::Sparse(t) => RowsRef::sparse(t),
         }
     }
 
@@ -381,26 +381,88 @@ impl TableStorage {
 
 /// A borrowed row source for the aggregation kernels: rows of the active
 /// child's table (local, or one received step buffer), dense or sparse.
+///
+/// Construction is **checked**: [`RowsRef::dense`] validates the table's
+/// shape coherence (`data.len() == n_rows * n_sets`) and
+/// [`RowsRef::sparse`] validates the CSR structure (offset vector length
+/// and monotonicity, entry count, set ranks `< n_sets`) — once per
+/// borrow, in release builds too. The representation is private, so
+/// every `RowsRef` in the program went through these checks; that
+/// invariant (not a caller comment) is what justifies the per-element
+/// unchecked accesses in the hot kernels below.
 #[derive(Clone, Copy)]
-pub enum RowsRef<'a> {
+pub struct RowsRef<'a>(RowsRepr<'a>);
+
+#[derive(Clone, Copy)]
+enum RowsRepr<'a> {
     Dense(&'a CountTable),
     Sparse(&'a SparseTable),
 }
 
-impl RowsRef<'_> {
+impl<'a> RowsRef<'a> {
+    /// Borrow a dense table as a row source.
+    ///
+    /// # Panics
+    /// When the table's buffer does not hold exactly
+    /// `n_rows * n_sets` entries.
+    #[inline]
+    pub fn dense(t: &'a CountTable) -> RowsRef<'a> {
+        assert_eq!(
+            t.data.len(),
+            t.n_rows * t.n_sets,
+            "malformed dense table: {} entries for {} x {}",
+            t.data.len(),
+            t.n_rows,
+            t.n_sets
+        );
+        RowsRef(RowsRepr::Dense(t))
+    }
+
+    /// Borrow a sparse table as a row source. O(n_rows + nnz) structure
+    /// validation — once per borrow, amortized over every row the
+    /// aggregation kernels then scatter unchecked.
+    ///
+    /// # Panics
+    /// When the offsets are not a monotone `n_rows + 1` vector ending at
+    /// the entry count, or any stored set rank is `>= n_sets`.
+    pub fn sparse(t: &'a SparseTable) -> RowsRef<'a> {
+        assert_eq!(
+            t.offsets.len(),
+            t.n_rows + 1,
+            "malformed sparse table: {} offsets for {} rows",
+            t.offsets.len(),
+            t.n_rows
+        );
+        assert_eq!(
+            *t.offsets.last().unwrap() as usize,
+            t.entries.len(),
+            "malformed sparse table: last offset must equal the entry count"
+        );
+        assert!(
+            t.offsets.windows(2).all(|w| w[0] <= w[1]),
+            "malformed sparse table: offsets must be monotone"
+        );
+        assert!(
+            t.entries.iter().all(|&(rank, _)| (rank as usize) < t.n_sets),
+            "malformed sparse table: set rank out of range ({})",
+            t.n_sets
+        );
+        RowsRef(RowsRepr::Sparse(t))
+    }
+
     #[inline]
     pub fn n_sets(&self) -> usize {
-        match self {
-            RowsRef::Dense(t) => t.n_sets,
-            RowsRef::Sparse(t) => t.n_sets,
+        match self.0 {
+            RowsRepr::Dense(t) => t.n_sets,
+            RowsRepr::Sparse(t) => t.n_sets,
         }
     }
 
     #[inline]
     pub fn n_rows(&self) -> usize {
-        match self {
-            RowsRef::Dense(t) => t.n_rows,
-            RowsRef::Sparse(t) => t.n_rows,
+        match self.0 {
+            RowsRepr::Dense(t) => t.n_rows,
+            RowsRepr::Sparse(t) => t.n_rows,
         }
     }
 
@@ -408,19 +470,20 @@ impl RowsRef<'_> {
     /// funnels through. The sparse arm adds only the stored entries;
     /// omitting a slot's `+= 0.0` terms is bit-exact (module docs).
     ///
-    /// SAFETY of the unchecked accesses: `dst.len()` must equal this
-    /// source's `n_sets` (callers debug-assert it); sparse set ranks were
-    /// validated `< n_sets` at construction ([`TableStorage::from_payload`],
-    /// [`SparseTable::from_dense`]).
+    /// The row index is checked here (one compare per row, amortized over
+    /// the `n_sets` element ops); everything else the unchecked accesses
+    /// rely on was validated at construction of this `RowsRef`.
     #[inline]
     pub fn add_row_into(&self, u: usize, dst: &mut [Count]) {
-        match self {
-            RowsRef::Dense(t) => {
+        match self.0 {
+            RowsRepr::Dense(t) => {
                 let n = t.n_sets;
-                debug_assert!(dst.len() == n && (u + 1) * n <= t.data.len());
-                // SAFETY: `u` is a validated row index (`(u + 1) * n <=
-                // data.len()`, checked by callers and debug-asserted
-                // above), so the window is in bounds.
+                assert!(u < t.n_rows, "row {u} out of range ({})", t.n_rows);
+                assert_eq!(dst.len(), n, "destination width");
+                // SAFETY: `u < n_rows` asserted above and
+                // `data.len() == n_rows * n_sets` was validated at
+                // construction (RowsRef::dense), so the window is in
+                // bounds.
                 unsafe {
                     let urow = t.data.get_unchecked(u * n..(u + 1) * n);
                     for (a, &x) in dst.iter_mut().zip(urow) {
@@ -428,13 +491,12 @@ impl RowsRef<'_> {
                     }
                 }
             }
-            RowsRef::Sparse(t) => {
-                debug_assert_eq!(dst.len(), t.n_sets);
+            RowsRepr::Sparse(t) => {
+                assert_eq!(dst.len(), t.n_sets, "destination width");
                 for &(rank, x) in t.row_entries(u) {
-                    debug_assert!((rank as usize) < dst.len());
                     // SAFETY: stored set ranks were validated `< n_sets`
-                    // at table construction and `dst.len() == n_sets` is
-                    // the documented precondition (debug-asserted above).
+                    // at construction of this RowsRef (RowsRef::sparse)
+                    // and `dst.len() == n_sets` is asserted above.
                     unsafe {
                         *dst.get_unchecked_mut(rank as usize) += x;
                     }
@@ -443,20 +505,80 @@ impl RowsRef<'_> {
         }
     }
 
+    /// The SpMM-stage variant of [`Self::add_row_into`]: dense rows go
+    /// through the chunked-lane add ([`super::kernel::add_rows_chunked`],
+    /// bit-identical to the scalar loop — every slot accumulates
+    /// independently in the same order), sparse rows keep the scalar
+    /// scatter (a short entry list gains nothing from lanes).
+    #[inline]
+    pub fn add_row_into_chunked(&self, u: usize, dst: &mut [Count]) {
+        match self.0 {
+            RowsRepr::Dense(t) => {
+                assert!(u < t.n_rows, "row {u} out of range ({})", t.n_rows);
+                super::kernel::add_rows_chunked(dst, t.row(u));
+            }
+            RowsRepr::Sparse(_) => self.add_row_into(u, dst),
+        }
+    }
+
     /// Materialize row `u` as a dense slice, reusing `buf` for the
     /// sparse scatter — the passive-row reader of the contraction phase.
     /// The materialized row equals the dense original exactly.
+    /// (Per-row `fill(0.0)`; the executors use [`RowScratch`], which
+    /// clears at touched-entry granularity instead.)
     #[inline]
     pub fn row_in<'s>(&'s self, u: usize, buf: &'s mut [Count]) -> &'s [Count] {
-        match self {
-            RowsRef::Dense(t) => t.row(u),
-            RowsRef::Sparse(t) => {
+        match self.0 {
+            RowsRepr::Dense(t) => t.row(u),
+            RowsRepr::Sparse(t) => {
                 debug_assert_eq!(buf.len(), t.n_sets);
                 buf.fill(0.0);
                 for &(rank, x) in t.row_entries(u) {
                     buf[rank as usize] = x;
                 }
                 buf
+            }
+        }
+    }
+}
+
+/// Reusable passive-row materialization scratch for the contraction
+/// phase. Where [`RowsRef::row_in`] pays a full-width `fill(0.0)` per
+/// materialized row, this clears **only the entries the previous sparse
+/// row wrote** (touched-entry granularity) — O(prev_nnz + nnz) per row
+/// instead of O(n_sets). Dense sources return the table row directly and
+/// never touch the buffer, so stale sparse entries survive a dense
+/// interleaving and are still cleared before the next sparse scatter.
+pub struct RowScratch {
+    buf: Vec<Count>,
+    written: Vec<u32>,
+}
+
+impl RowScratch {
+    pub fn new(n_sets: usize) -> RowScratch {
+        RowScratch {
+            buf: vec![0.0; n_sets],
+            written: Vec::new(),
+        }
+    }
+
+    /// Materialize row `u` of `rows` as a dense slice. Equals the dense
+    /// original exactly, whatever was materialized before.
+    #[inline]
+    pub fn row<'s>(&'s mut self, rows: RowsRef<'s>, u: usize) -> &'s [Count] {
+        match rows.0 {
+            RowsRepr::Dense(t) => t.row(u),
+            RowsRepr::Sparse(t) => {
+                assert_eq!(self.buf.len(), t.n_sets, "scratch width");
+                for &w in &self.written {
+                    self.buf[w as usize] = 0.0;
+                }
+                self.written.clear();
+                for &(rank, x) in t.row_entries(u) {
+                    self.buf[rank as usize] = x;
+                    self.written.push(rank);
+                }
+                &self.buf
             }
         }
     }
@@ -749,7 +871,7 @@ mod tests {
         t.row_mut(1)[0] = 4.0;
         t.row_mut(1)[4] = 0.5;
         let sp = SparseTable::from_dense(&t);
-        let rows = RowsRef::Sparse(&sp);
+        let rows = RowsRef::sparse(&sp);
         let mut buf = vec![7.0; 5]; // stale garbage must be cleared
         assert_eq!(rows.row_in(1, &mut buf), t.row(1));
         let mut buf2 = vec![1.0; 5];

@@ -12,7 +12,7 @@
 
 pub mod split;
 
-pub use split::SplitTable;
+pub use split::{CheckedSplit, SplitTable};
 
 /// Maximum supported number of colors (the paper scales templates to 15
 /// vertices; masks are u32 so anything ≤ 31 works, 16 keeps tables small).

@@ -92,6 +92,71 @@ impl SplitTable {
     }
 }
 
+/// A [`SplitTable`] validated once against the operand widths of a
+/// combine: every `idx1` entry is `< n_passive` and every `idx2` entry is
+/// `< n_agg`, and the flattened index vectors have exactly
+/// `n_sets * n_splits` entries. The contraction kernels
+/// (`colorcount::engine::contract_row` and the SIMD variant) take this
+/// type instead of a raw `&SplitTable`, so their per-element
+/// `get_unchecked` gathers are justified by a checked construction — a
+/// malformed table panics here, once, in release builds too, instead of
+/// being UB in the hot loop.
+pub struct CheckedSplit<'a> {
+    split: &'a SplitTable,
+    n_passive: usize,
+    n_agg: usize,
+}
+
+impl<'a> CheckedSplit<'a> {
+    /// Validate `split` against the passive-row width `n_passive` and the
+    /// aggregation-row width `n_agg`. O(n_sets · n_splits) — once per
+    /// combine, amortized over every vertex row it contracts.
+    ///
+    /// # Panics
+    /// When an index vector has the wrong length or any entry is out of
+    /// range for the given widths.
+    pub fn new(split: &'a SplitTable, n_passive: usize, n_agg: usize) -> Self {
+        let flat = split.n_sets * split.n_splits;
+        assert!(
+            split.idx1.len() == flat && split.idx2.len() == flat,
+            "split table index vectors must be n_sets*n_splits = {flat} long \
+             (got {} / {})",
+            split.idx1.len(),
+            split.idx2.len()
+        );
+        assert!(
+            split.idx1.iter().all(|&i| (i as usize) < n_passive),
+            "split table idx1 out of range for passive width {n_passive}"
+        );
+        assert!(
+            split.idx2.iter().all(|&i| (i as usize) < n_agg),
+            "split table idx2 out of range for aggregation width {n_agg}"
+        );
+        CheckedSplit {
+            split,
+            n_passive,
+            n_agg,
+        }
+    }
+
+    #[inline]
+    pub fn split(&self) -> &'a SplitTable {
+        self.split
+    }
+
+    /// Passive-row width the table was validated against.
+    #[inline]
+    pub fn n_passive(&self) -> usize {
+        self.n_passive
+    }
+
+    /// Aggregation-row width the table was validated against.
+    #[inline]
+    pub fn n_agg(&self) -> usize {
+        self.n_agg
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -150,6 +215,41 @@ mod tests {
             }
             Ok(())
         });
+    }
+
+    #[test]
+    fn checked_split_accepts_exact_widths() {
+        let b = Binomial::new();
+        let t = SplitTable::new(5, 3, 1, &b);
+        let cs = CheckedSplit::new(&t, b.c(5, 1) as usize, b.c(5, 2) as usize);
+        assert_eq!(cs.n_passive(), 5);
+        assert_eq!(cs.n_agg(), 10);
+        assert_eq!(cs.split().n_sets, t.n_sets);
+    }
+
+    #[test]
+    #[should_panic(expected = "idx1 out of range")]
+    fn checked_split_rejects_narrow_passive() {
+        let b = Binomial::new();
+        let t = SplitTable::new(5, 3, 1, &b);
+        let _ = CheckedSplit::new(&t, 2, b.c(5, 2) as usize);
+    }
+
+    #[test]
+    #[should_panic(expected = "idx2 out of range")]
+    fn checked_split_rejects_narrow_agg() {
+        let b = Binomial::new();
+        let t = SplitTable::new(5, 3, 1, &b);
+        let _ = CheckedSplit::new(&t, 5, 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "index vectors")]
+    fn checked_split_rejects_truncated_indices() {
+        let b = Binomial::new();
+        let mut t = SplitTable::new(5, 3, 1, &b);
+        t.idx2.pop();
+        let _ = CheckedSplit::new(&t, 5, 10);
     }
 
     #[test]

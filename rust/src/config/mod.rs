@@ -6,7 +6,7 @@
 //! ("..."), integer, float and boolean values, `#` comments.
 
 use crate::api::HarpsgError;
-use crate::colorcount::StorageMode;
+use crate::colorcount::{KernelMode, StorageMode};
 use crate::comm::HockneyParams;
 use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use anyhow::{anyhow, bail, Result};
@@ -130,7 +130,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 18] = [
+const KNOWN_KEYS: [&str; 19] = [
     "template",
     "dataset",
     "scale",
@@ -145,6 +145,7 @@ const KNOWN_KEYS: [&str; 18] = [
     "run.exchange",
     "run.adaptive",
     "run.table_storage",
+    "run.kernel",
     "run.mem_limit_mb",
     "net.alpha",
     "net.beta",
@@ -258,6 +259,13 @@ impl RunSpec {
             run.table_storage = StorageMode::parse(s).ok_or_else(|| {
                 HarpsgError::Parse(format!(
                     "`run.table_storage`: unknown storage `{s}` (dense|sparse|auto)"
+                ))
+            })?;
+        }
+        if let Some(s) = want_str(doc, "run.kernel")? {
+            run.kernel = KernelMode::parse(s).ok_or_else(|| {
+                HarpsgError::Parse(format!(
+                    "`run.kernel`: unknown kernel `{s}` (scalar|simd|auto)"
                 ))
             })?;
         }
@@ -416,6 +424,28 @@ beta = 1.7e-10
         let bad = format!("{SAMPLE}\n[run]\ntable_storage = \"csr\"\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
         let bad = format!("{SAMPLE}\n[run]\ntable_storage = 1\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn kernel_key_parses_and_validates() {
+        // default: the scalar differential baseline
+        assert_eq!(
+            RunSpec::parse(SAMPLE).unwrap().run.kernel,
+            KernelMode::Scalar
+        );
+        for (spelling, mode) in [
+            ("scalar", KernelMode::Scalar),
+            ("simd", KernelMode::Simd),
+            ("auto", KernelMode::Auto),
+        ] {
+            let with_key = format!("{SAMPLE}\n[run]\nkernel = \"{spelling}\"\n");
+            assert_eq!(RunSpec::parse(&with_key).unwrap().run.kernel, mode);
+        }
+        // unknown spellings and wrong types are typed errors
+        let bad = format!("{SAMPLE}\n[run]\nkernel = \"avx\"\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        let bad = format!("{SAMPLE}\n[run]\nkernel = 8\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 

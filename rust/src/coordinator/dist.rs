@@ -31,9 +31,9 @@ use super::run::{
 };
 use crate::api::{HarpsgError, Progress};
 use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
-use crate::colorcount::parallel::{combine_batches, nested_budget, ExecStats, PairBatch};
+use crate::colorcount::parallel::{combine_batches_with, nested_budget, ExecStats, PairBatch};
 use crate::colorcount::storage::{self, StoragePolicy, TableStorage};
-use crate::colorcount::EngineContext;
+use crate::colorcount::{EngineContext, KernelMode};
 use crate::colorcount::{init_leaf_table, median_of_means, Coloring, Count, CountTable};
 use crate::combin::SplitTable;
 use crate::comm::{
@@ -913,13 +913,14 @@ impl<'g> DistributedRunner<'g> {
                     pairs: &self.plan.local_pairs[p],
                     rows: active.as_rows(),
                 }];
-                let st = combine_batches(
+                let st = combine_batches_with(
                     &mut outs[p],
                     passive.as_rows(),
                     &split,
                     &batch,
                     eff_task,
                     self.cfg.n_workers,
+                    self.cfg.kernel,
                 );
                 let n = st.n_pairs;
                 measured.merge(&st);
@@ -1004,13 +1005,14 @@ impl<'g> DistributedRunner<'g> {
                             rows: buf.as_rows(),
                         })
                         .collect();
-                    let st = combine_batches(
+                    let st = combine_batches_with(
                         &mut outs[p],
                         passive.as_rows(),
                         &split,
                         &batches,
                         eff_task,
                         self.cfg.n_workers,
+                        self.cfg.kernel,
                     );
                     let n = st.n_pairs;
                     measured.merge(&st);
@@ -1163,6 +1165,7 @@ impl<'g> DistributedRunner<'g> {
             act_idx,
             pass_idx,
             nested,
+            kernel: self.cfg.kernel,
             n_threads: self.cfg.n_threads,
             phys_cores: self.cfg.phys_cores,
             seed: self.cfg.seed,
@@ -1275,6 +1278,8 @@ struct RankEnv<'a> {
     pass_idx: usize,
     /// per-rank nested combine-pool width ([`nested_budget`])
     nested: usize,
+    /// combine-kernel choice (the `--kernel` knob)
+    kernel: KernelMode,
     n_threads: usize,
     phys_cores: usize,
     seed: u64,
@@ -1432,13 +1437,14 @@ fn rank_exchange_worker(
         pairs: &env.plan.local_pairs[p],
         rows: active.as_rows(),
     }];
-    let st = combine_batches(
+    let st = combine_batches_with(
         out,
         passive.as_rows(),
         env.split,
         &batch,
         env.eff_task,
         env.nested,
+        env.kernel,
     );
     real_compute += t0.elapsed().as_secs_f64();
     units += st.n_pairs as f64 * env.cost_model.unit_per_pair;
@@ -1492,13 +1498,14 @@ fn rank_exchange_worker(
                 rows: buf.as_rows(),
             })
             .collect();
-        let st = combine_batches(
+        let st = combine_batches_with(
             out,
             passive.as_rows(),
             env.split,
             &batches,
             env.eff_task,
             env.nested,
+            env.kernel,
         );
         let comp_s = tc0.elapsed().as_secs_f64();
         drop(batches);
@@ -2117,6 +2124,42 @@ mod tests {
         assert_eq!(leaf.storage_name(), "sparse");
         // dense mode reports every table dense
         assert!(dense.storage.iter().all(|d| d.storage_name() == "dense"));
+    }
+
+    /// Kernel-knob acceptance core: DP tables are integer-valued, so the
+    /// SIMD lane-tree reorder is exact and estimates are bit-identical
+    /// across all three kernel modes, both exchange executors and worker
+    /// counts (the full template × rank matrix lives in
+    /// `tests/kernel.rs`).
+    #[test]
+    fn kernel_modes_bit_identical_across_executors() {
+        let g = small_graph(67);
+        let tpl = builtin("u12-1").unwrap();
+        let run_with = |kernel: KernelMode, exchange: ExchangeExec, workers: usize| {
+            let mut cfg = RunConfig::default();
+            cfg.n_ranks = 5;
+            cfg.mode = ModeSelect::AdaptiveLb;
+            cfg.n_iterations = 1;
+            cfg.n_workers = workers;
+            cfg.kernel = kernel;
+            cfg.exchange = exchange;
+            DistributedRunner::new(&tpl, &g, cfg).run()
+        };
+        let baseline = run_with(KernelMode::Scalar, ExchangeExec::Sequential, 1);
+        for exchange in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+            for kernel in [KernelMode::Scalar, KernelMode::Simd, KernelMode::Auto] {
+                for workers in [1, 3] {
+                    let r = run_with(kernel, exchange, workers);
+                    assert_eq!(
+                        r.estimate.to_bits(),
+                        baseline.estimate.to_bits(),
+                        "{kernel:?} {exchange:?} workers={workers}"
+                    );
+                    assert_eq!(r.colorful, baseline.colorful);
+                    assert_eq!(r.samples, baseline.samples);
+                }
+            }
+        }
     }
 
     /// Adaptive sweep end-to-end: decisions stay feasible, the counting

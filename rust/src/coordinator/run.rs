@@ -2,7 +2,7 @@
 //! four implementations of Table 1 (Naive / Pipeline / Adaptive /
 //! AdaptiveLB) are configurations of one runner.
 
-use crate::colorcount::{ExecStats, StorageMode};
+use crate::colorcount::{ExecStats, KernelMode, StorageMode};
 use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
 use crate::pipeline::MeasuredPipeline;
 
@@ -154,6 +154,17 @@ pub struct RunConfig {
     /// bytes, wire bytes and speed change. A *loaded* XLA runtime forces
     /// dense (its kernel views tables as dense blocks).
     pub table_storage: StorageMode,
+    /// combine kernel (the `--kernel` knob): `Scalar` (the historical
+    /// per-element loops, default — and the differential baseline),
+    /// `Simd` (chunked-lane SpMM + fused eMA over adjacency row-blocks,
+    /// `colorcount::kernel`), or `Auto` (pick per combine from the
+    /// aggregation width — identical on every rank and worker, so a run
+    /// never mixes choices for one combine). Bit-identical to scalar on
+    /// integer-valued tables (every DP table below 2^24); fractional data
+    /// follows the documented lane-tree tolerance policy. Results never
+    /// depend on the worker count either way. A *loaded* XLA runtime
+    /// bypasses the native executor entirely, so the knob is inert there.
+    pub kernel: KernelMode,
 }
 
 impl Default for RunConfig {
@@ -175,6 +186,7 @@ impl Default for RunConfig {
             exchange: ExchangeExec::Threaded,
             adaptive_group: false,
             table_storage: StorageMode::Dense,
+            kernel: KernelMode::Scalar,
         }
     }
 }

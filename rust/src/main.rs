@@ -15,6 +15,7 @@
 //!       --ranks 8 --workers 4 --mode adaptive-lb --iters 2 --json
 //!   harpsg count --template u12-1 --dataset R500K3 --ranks 8 --adaptive
 //!   harpsg count --template u12-1 --dataset R500K3 --ranks 6 --table-storage auto
+//!   harpsg count --template u15-1 --dataset R500K3 --workers 4 --kernel simd
 //!   harpsg count --template u7-2 --dataset MI --exchange sequential
 //!   harpsg run --config configs/quickstart.toml
 
@@ -22,7 +23,7 @@ use anyhow::{Context, Result};
 use harpsg::api::{
     CountJob, HarpsgError, JobReport, PartitionKind, Session, SessionOptions, StderrProgress,
 };
-use harpsg::colorcount::StorageMode;
+use harpsg::colorcount::{KernelMode, StorageMode};
 use harpsg::config::RunSpec;
 use harpsg::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
 use harpsg::graph::{degree_stats, loader, Dataset, Graph};
@@ -233,6 +234,9 @@ fn print_human(session: &Session, r: &JobReport) {
         r.workers.imbalance()
     );
     println!("peak memory:     {} per rank", human_bytes(r.peak_mem()));
+    if r.kernel != "scalar" {
+        println!("kernel:          {} combine kernel", r.kernel);
+    }
     if r.table_storage != "dense" {
         println!(
             "table storage:   {} (dense baseline {}, saved {} at peak)",
@@ -280,6 +284,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--engine",
             "--exchange",
             "--table-storage",
+            "--kernel",
             "--mem-limit-mb",
         ],
         &["--json", "--progress", "--adaptive"],
@@ -324,6 +329,13 @@ fn cmd_count(args: &[String]) -> Result<()> {
         cfg.table_storage = StorageMode::parse(s).ok_or_else(|| {
             HarpsgError::Parse(format!(
                 "`--table-storage`: unknown storage `{s}` (dense|sparse|auto)"
+            ))
+        })?;
+    }
+    if let Some(kn) = flags.get("--kernel") {
+        cfg.kernel = KernelMode::parse(kn).ok_or_else(|| {
+            HarpsgError::Parse(format!(
+                "`--kernel`: unknown kernel `{kn}` (scalar|simd|auto)"
             ))
         })?;
     }

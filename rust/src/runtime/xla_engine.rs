@@ -224,7 +224,7 @@ mod imp {
                 let mut out = CountTable::zeros(n, split.n_sets);
                 let mut scratch = CombineScratch::new(n, c2);
                 scratch.begin(c2);
-                aggregate_batch(&mut scratch, RowsRef::Dense(&active), pairs.iter().copied());
+                aggregate_batch(&mut scratch, RowsRef::dense(&active), pairs.iter().copied());
                 if xla {
                     let xc = XlaCombine::new(rt.clone());
                     xc.contract_touched(&mut out, &passive, &split, &mut scratch);
@@ -257,7 +257,7 @@ mod imp {
             scratch.begin(active.n_sets);
             aggregate_batch(
                 &mut scratch,
-                RowsRef::Dense(&active),
+                RowsRef::dense(&active),
                 [(0u32, 1u32)].into_iter(),
             );
             let xc = XlaCombine::new(rt);

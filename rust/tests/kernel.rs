@@ -1,0 +1,209 @@
+//! Differential suite for the vectorized combine kernel
+//! (`colorcount::kernel`, `--kernel`):
+//!
+//! 1. **kernel invariance** — estimates, colorful counts and samples are
+//!    bit-identical across all three kernel modes, both exchange
+//!    executors, both storage representations and rank counts {1, 2, 5,
+//!    6}, against the sequential dense *scalar* baseline. DP count
+//!    tables are integer-valued (every entry is an embedding count well
+//!    below 2^24), so the SIMD lane-tree reassociation is exact and the
+//!    contract is bit-identity, not a tolerance;
+//! 2. **wide-template leg** — the same invariance on a 12-vertex
+//!    template, where the aggregation width (C(12,6) = 924) gives the
+//!    8-lane chunks real work, at a reduced rank matrix;
+//! 3. **report contract** — `config.kernel` in the JSON report names the
+//!    requested mode verbatim.
+//!
+//! CI's kernel-matrix feeds `HARPSG_TEST_KERNEL={scalar,simd,auto}` to
+//! pin the mode set (and `HARPSG_TEST_RANKS` as everywhere else).
+
+use harpsg::api::{CountJob, JobReport, PartitionKind, Session, SessionOptions};
+use harpsg::colorcount::{KernelMode, StorageMode};
+use harpsg::coordinator::{ExchangeExec, ModeSelect};
+use harpsg::graph::rmat::{generate, RmatParams};
+
+/// Kernel modes under differential test. CI's kernel-matrix sets
+/// `HARPSG_TEST_KERNEL` to pin the suite to one mode; unset runs all
+/// three (scalar is always re-run as the baseline regardless).
+fn test_kernel_modes() -> Vec<KernelMode> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_KERNEL") {
+        if let Some(m) = KernelMode::parse(v.trim()) {
+            return vec![m];
+        }
+    }
+    vec![KernelMode::Scalar, KernelMode::Simd, KernelMode::Auto]
+}
+
+/// Rank counts, honoring the CI matrix the same way
+/// `tests/pipeline_exec.rs` does.
+fn test_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 1 {
+                return vec![1, n];
+            }
+            if n == 1 {
+                return vec![1];
+            }
+        }
+    }
+    vec![1, 2, 5, 6]
+}
+
+fn session(n: usize, m: u64, skew: u32, seed: u64) -> Session {
+    Session::with_options(
+        generate(&RmatParams::with_skew(n, m, skew, seed)),
+        SessionOptions {
+            seed: 7,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        },
+    )
+    .unwrap()
+}
+
+fn job(
+    tpl: &str,
+    ranks: usize,
+    exec: ExchangeExec,
+    storage: StorageMode,
+    kernel: KernelMode,
+    workers: usize,
+) -> CountJob {
+    CountJob::of_builtin(tpl)
+        .unwrap()
+        .ranks(ranks)
+        .mode(ModeSelect::Pipeline)
+        .exchange(exec)
+        .table_storage(storage)
+        .kernel(kernel)
+        .iterations(1)
+        .seed(7)
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+/// Tentpole acceptance: the full differential matrix. Every (kernel ×
+/// exchange executor × storage × rank count) combination reports
+/// estimates bit-identical to the sequential dense scalar baseline —
+/// the kernel is an execution-strategy change, never a numerics change
+/// on integer-valued tables.
+#[test]
+fn kernel_modes_bit_identical_to_sequential_scalar_baseline() {
+    let s = session(52, 260, 3, 4242);
+    let ranks = test_rank_counts();
+    let kernels = test_kernel_modes();
+    for tpl in ["u5-2", "u10-2"] {
+        for &r in &ranks {
+            let base = s
+                .count(&job(
+                    tpl,
+                    r,
+                    ExchangeExec::Sequential,
+                    StorageMode::Dense,
+                    KernelMode::Scalar,
+                    2,
+                ))
+                .unwrap();
+            for &kernel in &kernels {
+                for exec in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+                    for storage in [StorageMode::Dense, StorageMode::Sparse] {
+                        let got = s.count(&job(tpl, r, exec, storage, kernel, 2)).unwrap();
+                        assert_eq!(
+                            base.estimate.to_bits(),
+                            got.estimate.to_bits(),
+                            "{tpl} P={r} {kernel:?} {exec:?} {storage:?}: {} vs scalar {}",
+                            got.estimate,
+                            base.estimate
+                        );
+                        assert_eq!(
+                            base.colorful, got.colorful,
+                            "{tpl} P={r} {kernel:?} {exec:?} {storage:?}"
+                        );
+                        assert_eq!(
+                            base.samples, got.samples,
+                            "{tpl} P={r} {kernel:?} {exec:?} {storage:?}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The wide-template leg: u12-1's mid-levels carry aggregation widths in
+/// the hundreds, so the SIMD path runs many full 8-lane chunks per row
+/// (not just the remainder loop). Reduced matrix — threaded executor,
+/// worker sweep, largest pinned rank count — to bound runtime.
+#[test]
+fn simd_kernel_matches_scalar_on_twelve_vertex_template() {
+    let s = session(67, 360, 3, 99);
+    let ranks = test_rank_counts();
+    let r = *ranks.last().unwrap();
+    let base = s
+        .count(&job(
+            "u12-1",
+            r,
+            ExchangeExec::Sequential,
+            StorageMode::Dense,
+            KernelMode::Scalar,
+            1,
+        ))
+        .unwrap();
+    for &kernel in &test_kernel_modes() {
+        for workers in [1usize, 3] {
+            let got = s
+                .count(&job(
+                    "u12-1",
+                    r,
+                    ExchangeExec::Threaded,
+                    StorageMode::Auto,
+                    kernel,
+                    workers,
+                ))
+                .unwrap();
+            assert_eq!(
+                base.estimate.to_bits(),
+                got.estimate.to_bits(),
+                "u12-1 P={r} {kernel:?} w={workers}: {} vs scalar {}",
+                got.estimate,
+                base.estimate
+            );
+            assert_eq!(base.colorful, got.colorful, "u12-1 P={r} {kernel:?} w={workers}");
+            assert_eq!(base.samples, got.samples, "u12-1 P={r} {kernel:?} w={workers}");
+        }
+    }
+}
+
+/// The JSON contract behind `harpsg count --json --kernel …`:
+/// `config.kernel` names the requested mode verbatim (`auto` stays
+/// `auto` — resolution happens per split width at run time).
+#[test]
+fn json_report_carries_kernel_mode() {
+    let s = session(40, 200, 3, 21);
+    let parse = |r: &JobReport| harpsg::util::jsonparse::parse(&r.to_json_string()).unwrap();
+    for (kernel, name) in [
+        (KernelMode::Scalar, "scalar"),
+        (KernelMode::Simd, "simd"),
+        (KernelMode::Auto, "auto"),
+    ] {
+        let rep = s
+            .count(&job(
+                "u5-2",
+                2,
+                ExchangeExec::Threaded,
+                StorageMode::Dense,
+                kernel,
+                2,
+            ))
+            .unwrap();
+        assert_eq!(rep.kernel, name);
+        let parsed = parse(&rep);
+        assert_eq!(
+            parsed.get("config").unwrap().get("kernel").unwrap().as_str(),
+            Some(name),
+            "JSON config.kernel for {kernel:?}"
+        );
+    }
+}
