@@ -6,6 +6,7 @@ use super::error::HarpsgError;
 use crate::colorcount::{KernelMode, StorageMode};
 use crate::comm::{AdaptivePolicy, HockneyParams};
 use crate::coordinator::{validate_group_size, EngineKind, ExchangeExec, ModeSelect, RunConfig};
+use crate::graph::GraphStorageMode;
 use crate::template::{builtin, Template};
 
 /// A validated request to count one template. Construct with
@@ -142,6 +143,27 @@ impl CountJobBuilder {
     /// worker count either way.
     pub fn kernel(mut self, k: KernelMode) -> Self {
         self.cfg.kernel = k;
+        self
+    }
+
+    /// Graph storage backend (the CLI's `--graph-storage`): `Resident`
+    /// (the historical shared CSR, default), `Mmap` (per-rank segment
+    /// files — each rank owns only its vertex partition's adjacency
+    /// slice), or `Auto` (mmap exactly when the full CSR exceeds the
+    /// resident-adjacency budget). Estimates are bit-identical for every
+    /// choice; the report's `config.graph_storage` and
+    /// `memory.graph_resident_per_rank` show what changed.
+    pub fn graph_storage(mut self, s: GraphStorageMode) -> Self {
+        self.cfg.graph_storage = s;
+        self
+    }
+
+    /// Resident-adjacency budget in bytes for `GraphStorageMode::Auto`
+    /// (the CLI's `--graph-budget-mb`). Ignored by the explicit modes;
+    /// unset, `Auto` resolves against
+    /// [`GraphStorageMode::DEFAULT_BUDGET`].
+    pub fn graph_budget(mut self, bytes: u64) -> Self {
+        self.cfg.graph_budget = Some(bytes);
         self
     }
 
@@ -368,6 +390,36 @@ mod tests {
         assert!(base()
             .kernel(KernelMode::Simd)
             .table_storage(StorageMode::Auto)
+            .adaptive(true)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn graph_storage_knob() {
+        use crate::graph::GraphStorageMode as GS;
+        let job = base().build().unwrap();
+        assert_eq!(
+            job.config().graph_storage,
+            GS::Resident,
+            "the resident CSR stays the default"
+        );
+        assert_eq!(job.config().graph_budget, None);
+        for mode in [GS::Resident, GS::Mmap, GS::Auto] {
+            let job = base().graph_storage(mode).build().unwrap();
+            assert_eq!(job.config().graph_storage, mode);
+        }
+        let job = base()
+            .graph_storage(GS::Auto)
+            .graph_budget(64 << 20)
+            .build()
+            .unwrap();
+        assert_eq!(job.config().graph_budget, Some(64 << 20));
+        // orthogonal to the other knobs
+        assert!(base()
+            .graph_storage(GS::Mmap)
+            .table_storage(StorageMode::Auto)
+            .kernel(KernelMode::Auto)
             .adaptive(true)
             .build()
             .is_ok());

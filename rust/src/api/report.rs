@@ -35,6 +35,11 @@ pub struct JobReport {
     pub table_storage: String,
     /// combine kernel ("scalar" | "simd" | "auto")
     pub kernel: String,
+    /// resolved graph-storage backend ("resident" | "mmap") — the run's
+    /// actual decision, `auto` never survives to the report
+    pub graph_storage: String,
+    /// graph bytes each rank kept resident, as charged to the ledger
+    pub graph_resident_per_rank: Vec<u64>,
     /// model-driven per-subtemplate group selection was enabled
     pub adaptive: bool,
     pub n_ranks: usize,
@@ -100,6 +105,8 @@ impl JobReport {
             exchange: job.cfg.exchange.name().to_string(),
             table_storage: job.cfg.table_storage.name().to_string(),
             kernel: job.cfg.kernel.name().to_string(),
+            graph_storage: r.graph_storage,
+            graph_resident_per_rank: r.graph_resident_per_rank,
             adaptive: job.cfg.adaptive_group,
             n_ranks: job.cfg.n_ranks,
             n_threads: job.cfg.n_threads,
@@ -177,6 +184,7 @@ impl JobReport {
                     ("exchange".into(), Json::Str(self.exchange.clone())),
                     ("table_storage".into(), Json::Str(self.table_storage.clone())),
                     ("kernel".into(), Json::Str(self.kernel.clone())),
+                    ("graph_storage".into(), Json::Str(self.graph_storage.clone())),
                     ("adaptive".into(), Json::Bool(self.adaptive)),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),
@@ -401,6 +409,18 @@ impl JobReport {
                     (
                         "bytes_saved".into(),
                         Json::Num(self.peak_bytes_saved() as f64),
+                    ),
+                    // the graph entry of each rank's ledger: an even CSR
+                    // share when resident, the rank's own partition-
+                    // proportional segment slice under --graph-storage mmap
+                    (
+                        "graph_resident_per_rank".into(),
+                        Json::Arr(
+                            self.graph_resident_per_rank
+                                .iter()
+                                .map(|&b| Json::Num(b as f64))
+                                .collect(),
+                        ),
                     ),
                     ("oom".into(), Json::Bool(self.oom)),
                 ]),

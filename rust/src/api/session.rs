@@ -7,8 +7,9 @@ use super::error::HarpsgError;
 use super::job::CountJob;
 use super::progress::Progress;
 use super::report::JobReport;
-use crate::coordinator::{DistributedRunner, EngineKind, ExchangePlan};
-use crate::graph::Graph;
+use crate::coordinator::{DistributedRunner, EngineKind, ExchangePlan, RunConfig};
+use crate::graph::shard::shard_to_scratch;
+use crate::graph::{Graph, Partition};
 use crate::runtime::{XlaCombine, XlaRuntime};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -56,7 +57,10 @@ impl Default for SessionOptions {
 pub struct Session {
     graph: Graph,
     opts: SessionOptions,
-    plans: Mutex<HashMap<usize, Arc<ExchangePlan>>>,
+    /// keyed by (rank count, sharded?): resident and mmap-built plans are
+    /// bit-identical in structure but charge different ledger bytes, so
+    /// they cache side by side
+    plans: Mutex<HashMap<(usize, bool), Arc<ExchangePlan>>>,
     xla: Option<Arc<XlaRuntime>>,
 }
 
@@ -100,30 +104,59 @@ impl Session {
         self.xla.is_some()
     }
 
-    /// The exchange plan for `n_ranks`, built on first use and cached.
-    /// Exposed so tests and tools can observe the reuse (`Arc::ptr_eq`).
+    /// The (resident) exchange plan for `n_ranks`, built on first use and
+    /// cached. Exposed so tests and tools can observe the reuse
+    /// (`Arc::ptr_eq`).
     pub fn plan(&self, n_ranks: usize) -> Arc<ExchangePlan> {
-        self.plan_with_reuse(n_ranks).0
+        self.plan_with_reuse(n_ranks, None)
+            .expect("resident plan build cannot fail")
+            .0
+    }
+
+    /// The partition this session cuts for `n_ranks` — identical for the
+    /// resident and sharded backends by construction.
+    fn partition_for(&self, n_ranks: usize) -> Partition {
+        match self.opts.partition {
+            PartitionKind::Random => {
+                ExchangePlan::random_partition(&self.graph, n_ranks, self.opts.seed)
+            }
+            PartitionKind::Block => Partition::block(self.graph.n_vertices(), n_ranks),
+        }
     }
 
     /// Fetch-or-build under one lock acquisition so concurrent counts
     /// agree on who built the plan (the bool is `true` when it came from
-    /// the cache).
-    fn plan_with_reuse(&self, n_ranks: usize) -> (Arc<ExchangePlan>, bool) {
+    /// the cache). When `cfg` resolves to sharded graph storage, the plan
+    /// is built from scratch per-rank segment files — written, read back
+    /// one slice at a time, and removed before this returns — and cached
+    /// under its own key; the serialization through the cache lock also
+    /// keeps concurrent shard builds from colliding on disk.
+    fn plan_with_reuse(
+        &self,
+        n_ranks: usize,
+        cfg: Option<&RunConfig>,
+    ) -> Result<(Arc<ExchangePlan>, bool), HarpsgError> {
+        let mmap = cfg.is_some_and(|c| {
+            c.graph_storage
+                .resolves_to_mmap(self.graph.bytes(), c.graph_budget)
+        });
         let mut cache = self.plans.lock().unwrap();
-        match cache.get(&n_ranks) {
-            Some(plan) => (plan.clone(), true),
-            None => {
-                let plan = Arc::new(match self.opts.partition {
-                    PartitionKind::Random => {
-                        ExchangePlan::random(&self.graph, n_ranks, self.opts.seed)
-                    }
-                    PartitionKind::Block => ExchangePlan::block(&self.graph, n_ranks),
-                });
-                cache.insert(n_ranks, plan.clone());
-                (plan, false)
-            }
+        if let Some(plan) = cache.get(&(n_ranks, mmap)) {
+            return Ok((plan.clone(), true));
         }
+        let part = self.partition_for(n_ranks);
+        let shard_err = |e: crate::graph::GraphLoadError| {
+            HarpsgError::Io(format!("graph shard storage: {e}"))
+        };
+        let plan = if mmap {
+            let seg = shard_to_scratch(&self.graph, &part).map_err(shard_err)?;
+            ExchangePlan::from_segments(&seg, part).map_err(shard_err)?
+        } else {
+            ExchangePlan::build(&self.graph, part)
+        };
+        let plan = Arc::new(plan);
+        cache.insert((n_ranks, mmap), plan.clone());
+        Ok((plan, false))
     }
 
     /// How many rank counts have a cached plan.
@@ -164,7 +197,7 @@ impl Session {
             ));
         }
         let t0 = Instant::now();
-        let (plan, reused) = self.plan_with_reuse(job.cfg.n_ranks);
+        let (plan, reused) = self.plan_with_reuse(job.cfg.n_ranks, Some(&job.cfg))?;
         let setup_seconds = t0.elapsed().as_secs_f64();
 
         let mut runner = DistributedRunner::with_plan(

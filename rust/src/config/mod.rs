@@ -9,6 +9,7 @@ use crate::api::HarpsgError;
 use crate::colorcount::{KernelMode, StorageMode};
 use crate::comm::HockneyParams;
 use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
+use crate::graph::GraphStorageMode;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
 
@@ -130,7 +131,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 19] = [
+const KNOWN_KEYS: [&str; 21] = [
     "template",
     "dataset",
     "scale",
@@ -146,6 +147,8 @@ const KNOWN_KEYS: [&str; 19] = [
     "run.adaptive",
     "run.table_storage",
     "run.kernel",
+    "run.graph_storage",
+    "run.graph_budget_mb",
     "run.mem_limit_mb",
     "net.alpha",
     "net.beta",
@@ -285,6 +288,16 @@ impl RunSpec {
                     )))
                 }
             };
+        }
+        if let Some(s) = want_str(doc, "run.graph_storage")? {
+            run.graph_storage = GraphStorageMode::parse(s).ok_or_else(|| {
+                HarpsgError::Parse(format!(
+                    "`run.graph_storage`: unknown storage `{s}` (resident|mmap|auto)"
+                ))
+            })?;
+        }
+        if let Some(b) = want_nonneg(doc, "run.graph_budget_mb")? {
+            run.graph_budget = Some((b as u64) << 20);
         }
         if let Some(l) = want_nonneg(doc, "run.mem_limit_mb")? {
             run.mem_limit = Some((l as u64) << 20);
@@ -446,6 +459,37 @@ beta = 1.7e-10
         let bad = format!("{SAMPLE}\n[run]\nkernel = \"avx\"\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
         let bad = format!("{SAMPLE}\n[run]\nkernel = 8\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn graph_storage_key_parses_and_validates() {
+        // default: the historical fully resident CSR
+        assert_eq!(
+            RunSpec::parse(SAMPLE).unwrap().run.graph_storage,
+            GraphStorageMode::Resident
+        );
+        assert_eq!(RunSpec::parse(SAMPLE).unwrap().run.graph_budget, None);
+        for (spelling, mode) in [
+            ("resident", GraphStorageMode::Resident),
+            ("mmap", GraphStorageMode::Mmap),
+            ("auto", GraphStorageMode::Auto),
+        ] {
+            let with_key = format!("{SAMPLE}\n[run]\ngraph_storage = \"{spelling}\"\n");
+            assert_eq!(RunSpec::parse(&with_key).unwrap().run.graph_storage, mode);
+        }
+        // the budget arrives in MiB and lands in bytes
+        let with_budget = format!("{SAMPLE}\n[run]\ngraph_budget_mb = 256\n");
+        assert_eq!(
+            RunSpec::parse(&with_budget).unwrap().run.graph_budget,
+            Some(256 << 20)
+        );
+        // unknown spellings and wrong types are typed errors
+        let bad = format!("{SAMPLE}\n[run]\ngraph_storage = \"disk\"\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        let bad = format!("{SAMPLE}\n[run]\ngraph_storage = 2\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        let bad = format!("{SAMPLE}\n[run]\ngraph_budget_mb = -1\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 

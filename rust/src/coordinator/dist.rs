@@ -40,7 +40,8 @@ use crate::comm::{
     AdaptivePolicy, CombineShape, CommMode, Fabric, GroupCalibration, HockneyParams, Packet,
     Schedule, ThreadedFabric,
 };
-use crate::graph::{Graph, Partition, RequestLists};
+use crate::graph::shard::shard_to_scratch;
+use crate::graph::{Graph, GraphLoadError, GraphStore, Partition, RequestLists, SegmentedGraph};
 use crate::pipeline::{naive, pipelined, MeasuredPipeline, PipelineReport, StepTiming};
 use crate::sched::{make_tasks, replay, TaskCostModel};
 use crate::template::{complexity, Template, TemplateComplexity};
@@ -186,28 +187,67 @@ pub struct ExchangePlan {
     /// of the paper's Eq-5 `≈ |E|/P²` estimate, fed to the adaptive
     /// model as the expected remote rows per peer per step
     mean_remote_rows: f64,
+    /// resolved storage backend the plan was built from ("resident" or
+    /// "mmap") — recorded so the run charges the right ledger class
+    pub graph_storage: &'static str,
+    /// graph bytes each rank keeps resident under that backend, charged
+    /// to the memory ledger and surfaced as `memory.graph_resident_per_rank`
+    pub graph_bytes_per_rank: Vec<u64>,
 }
 
 impl ExchangePlan {
     /// Build the exchange structures for an explicit partition.
     pub fn build(g: &Graph, part: Partition) -> ExchangePlan {
-        let req = RequestLists::build(g, &part);
+        Self::build_with_store(g, part).expect("resident graph store cannot fail")
+    }
+
+    /// Build against any [`GraphStore`]: the plan build is the single
+    /// consumer of adjacency in a distributed run (executors replay the
+    /// precomputed pair lists; remote rows travel via request lists), so
+    /// this is the one place local adjacency reads go through the store.
+    /// Ranks are visited one at a time and each segment view is dropped
+    /// before the next loads — peak graph memory under `mmap` is one
+    /// rank's slice, never the whole CSR.
+    pub fn build_with_store<S: GraphStore + ?Sized>(
+        store: &S,
+        part: Partition,
+    ) -> Result<ExchangePlan, GraphLoadError> {
         let n_ranks = part.n_ranks;
+        let mut needs: Vec<Vec<Vec<u32>>> = vec![vec![Vec::new(); n_ranks]; n_ranks];
         let mut local_pairs = vec![Vec::new(); n_ranks];
         let mut plans = vec![vec![Vec::new(); n_ranks]; n_ranks];
+        let mut graph_bytes = Vec::with_capacity(n_ranks);
+        let mut seen: Vec<u64> = Vec::new();
         for p in 0..n_ranks {
-            for (r, &v) in part.locals[p].iter().enumerate() {
-                for &u in g.neighbors(v) {
+            let view = store.rank_view(&part, p)?;
+            seen.clear();
+            for r in 0..part.locals[p].len() {
+                for &u in view.neighbors(r) {
+                    let q = part.owner_of(u);
+                    if q != p {
+                        seen.push(((q as u64) << 32) | u as u64);
+                    }
+                }
+            }
+            seen.sort_unstable();
+            seen.dedup();
+            for &key in &seen {
+                needs[p][(key >> 32) as usize].push(key as u32);
+            }
+            for r in 0..part.locals[p].len() {
+                for &u in view.neighbors(r) {
                     let q = part.owner_of(u);
                     if q == p {
                         local_pairs[p].push((r as u32, part.local_index[u as usize]));
                     } else {
-                        let row = req.rows(p, q).binary_search(&u).expect("request list");
+                        let row = needs[p][q].binary_search(&u).expect("request list");
                         plans[p][q].push((r as u32, row as u32));
                     }
                 }
             }
+            graph_bytes.push(store.rank_bytes(&part, p));
         }
+        let req = RequestLists { needs };
         let mut req_rows = 0u64;
         for p in 0..n_ranks {
             for q in 0..n_ranks {
@@ -217,19 +257,39 @@ impl ExchangePlan {
             }
         }
         let ordered_pairs = (n_ranks * n_ranks.saturating_sub(1)).max(1);
-        ExchangePlan {
+        Ok(ExchangePlan {
             part,
             req,
             local_pairs,
             plans,
             mean_remote_rows: req_rows as f64 / ordered_pairs as f64,
-        }
+            graph_storage: store.storage_name(),
+            graph_bytes_per_rank: graph_bytes,
+        })
+    }
+
+    /// Build from an on-disk segment set (`--graph-storage mmap`),
+    /// verifying the segments were cut for exactly this partition.
+    pub fn from_segments(
+        seg: &SegmentedGraph,
+        part: Partition,
+    ) -> Result<ExchangePlan, GraphLoadError> {
+        seg.verify_partition(&part)?;
+        Self::build_with_store(seg, part)
+    }
+
+    /// The partition [`Self::random`] builds — the seed mixing is part of
+    /// the reproducibility contract, shared by every entry point (runner,
+    /// session, sharded storage) so identical seeds always cut identical
+    /// partitions regardless of backend.
+    pub fn random_partition(g: &Graph, n_ranks: usize, seed: u64) -> Partition {
+        Partition::random(g.n_vertices(), n_ranks, seed ^ 0x9a27)
     }
 
     /// The paper's default: a hashed random partition (seed-mixed exactly
     /// like the historical `DistributedRunner::new` path).
     pub fn random(g: &Graph, n_ranks: usize, seed: u64) -> ExchangePlan {
-        Self::build(g, Partition::random(g.n_vertices(), n_ranks, seed ^ 0x9a27))
+        Self::build(g, Self::random_partition(g, n_ranks, seed))
     }
 
     /// Contiguous block partition (ablation A2).
@@ -245,6 +305,25 @@ impl ExchangePlan {
     /// quantity) — the `remote_rows_per_step` input of [`CombineShape`].
     pub fn mean_remote_rows(&self) -> f64 {
         self.mean_remote_rows
+    }
+}
+
+/// Build the exchange plan for `part` under the configured graph-storage
+/// mode: `resident` (or `auto` under budget) walks the shared CSR;
+/// `mmap` (or `auto` over budget) cuts scratch per-rank segment files,
+/// builds the plan one rank-slice at a time, and removes the scratch
+/// shards when the [`SegmentedGraph`] drops — after this returns, the
+/// plan is self-contained and no segment is held resident.
+pub fn build_plan_for(
+    g: &Graph,
+    cfg: &RunConfig,
+    part: Partition,
+) -> Result<ExchangePlan, GraphLoadError> {
+    if cfg.graph_storage.resolves_to_mmap(g.bytes(), cfg.graph_budget) {
+        let seg = shard_to_scratch(g, &part)?;
+        ExchangePlan::from_segments(&seg, part)
+    } else {
+        Ok(ExchangePlan::build(g, part))
     }
 }
 
@@ -267,8 +346,9 @@ pub struct DistributedRunner<'g> {
 
 impl<'g> DistributedRunner<'g> {
     pub fn new(t: &Template, g: &'g Graph, cfg: RunConfig) -> Self {
-        let plan = Arc::new(ExchangePlan::random(g, cfg.n_ranks, cfg.seed));
-        Self::with_plan(t, g, cfg, plan)
+        let part = ExchangePlan::random_partition(g, cfg.n_ranks, cfg.seed);
+        let plan = build_plan_for(g, &cfg, part).expect("graph storage sharding failed");
+        Self::with_plan(t, g, cfg, Arc::new(plan))
     }
 
     /// Build with an explicit partition (ablation A2 uses block layout).
@@ -514,13 +594,18 @@ impl<'g> DistributedRunner<'g> {
         let mut records: Vec<SubRecord> = Vec::new();
         let mut mems: Vec<DualAccountant> =
             (0..n_ranks).map(|_| DualAccountant::new()).collect();
-        // CSR share of each rank (graph storage is out of scope for Fig 12
-        // but kept for the totals)
+        // graph bytes each rank keeps resident, as the plan's storage
+        // backend accounted them: an even share of the shared CSR when
+        // resident, the rank's own partition-proportional slice when
+        // sharded (`--graph-storage mmap`) — distinct ledger classes so
+        // Fig-12 style breakdowns can tell the two apart
+        let graph_class = if self.plan.graph_storage == "mmap" {
+            MemClass::GraphShard
+        } else {
+            MemClass::Graph
+        };
         for (p, m) in mems.iter_mut().enumerate() {
-            m.alloc(
-                MemClass::Graph,
-                (self.plan.part.n_local(p) * 12) as u64 + self.g.bytes() / n_ranks as u64,
-            );
+            m.alloc(graph_class, self.plan.graph_bytes_per_rank[p]);
         }
         let mut total_units = 0.0f64;
         let mut real_compute = 0.0f64;
@@ -832,6 +917,8 @@ impl<'g> DistributedRunner<'g> {
             workers: measured,
             measured: if exec_threaded { Some(pipe) } else { None },
             oom,
+            graph_storage: self.plan.graph_storage.to_string(),
+            graph_resident_per_rank: self.plan.graph_bytes_per_rank.clone(),
         }
     }
 

@@ -14,10 +14,14 @@ pub enum MemClass {
     CountTable,
     RecvBuffer,
     Scratch,
+    /// the fully resident shared CSR (an even n_ranks⁻¹ share per rank)
     Graph,
+    /// a rank's own partition-proportional adjacency slice under
+    /// `--graph-storage mmap` — the out-of-core bound the ledger verifies
+    GraphShard,
 }
 
-const N_CLASSES: usize = 4;
+const N_CLASSES: usize = 5;
 
 fn class_idx(c: MemClass) -> usize {
     match c {
@@ -25,6 +29,7 @@ fn class_idx(c: MemClass) -> usize {
         MemClass::RecvBuffer => 1,
         MemClass::Scratch => 2,
         MemClass::Graph => 3,
+        MemClass::GraphShard => 4,
     }
 }
 

@@ -7,7 +7,7 @@ pub mod dist;
 pub mod memory;
 pub mod run;
 
-pub use dist::{validate_group_size, DistributedRunner, ExchangePlan};
+pub use dist::{build_plan_for, validate_group_size, DistributedRunner, ExchangePlan};
 pub use memory::{DualAccountant, MemClass, MemoryAccountant, SharedAccountant};
 pub use run::{
     CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RunConfig, RunResult,

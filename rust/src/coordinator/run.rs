@@ -4,6 +4,7 @@
 
 use crate::colorcount::{ExecStats, KernelMode, StorageMode};
 use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
+use crate::graph::GraphStorageMode;
 use crate::pipeline::MeasuredPipeline;
 
 /// Paper Table 1: the four experiment code versions.
@@ -165,6 +166,18 @@ pub struct RunConfig {
     /// depend on the worker count either way. A *loaded* XLA runtime
     /// bypasses the native executor entirely, so the knob is inert there.
     pub kernel: KernelMode,
+    /// graph storage backend (the `--graph-storage` knob): `Resident`
+    /// (the historical shared CSR, default), `Mmap` (cut the graph into
+    /// per-rank segment files and build the plan one slice at a time —
+    /// each rank owns only its vertex partition's adjacency), or `Auto`
+    /// (mmap exactly when the full CSR exceeds `graph_budget`).
+    /// Estimates are bit-identical for every choice; only the graph
+    /// entry of the memory ledger changes (`graph::shard`).
+    pub graph_storage: GraphStorageMode,
+    /// resident-adjacency budget in bytes that `GraphStorageMode::Auto`
+    /// resolves against (the `--graph-budget-mb` knob); `None` uses
+    /// [`GraphStorageMode::DEFAULT_BUDGET`]
+    pub graph_budget: Option<u64>,
 }
 
 impl Default for RunConfig {
@@ -187,6 +200,8 @@ impl Default for RunConfig {
             adaptive_group: false,
             table_storage: StorageMode::Dense,
             kernel: KernelMode::Scalar,
+            graph_storage: GraphStorageMode::Resident,
+            graph_budget: None,
         }
     }
 }
@@ -392,6 +407,13 @@ pub struct RunResult {
     pub measured: Option<MeasuredPipeline>,
     /// modeled per-rank memory exceeded `mem_limit`
     pub oom: bool,
+    /// resolved graph-storage backend the run used ("resident" or "mmap"
+    /// — `auto` resolves before the plan builds, so it never appears here)
+    pub graph_storage: String,
+    /// graph bytes each rank kept resident, as charged to the memory
+    /// ledger: an even CSR share when resident, the rank's own
+    /// partition-proportional segment slice when sharded
+    pub graph_resident_per_rank: Vec<u64>,
 }
 
 impl RunResult {

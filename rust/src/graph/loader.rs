@@ -14,10 +14,15 @@ use std::path::Path;
 /// panicking later inside the engine (out-of-bounds rows, bogus slices).
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum GraphLoadError {
-    /// the 8-byte magic is not `HARPSG01`
+    /// the 8-byte magic is not `HARPSG01` (or the expected segment magic)
     BadMagic,
-    /// an I/O failure while opening or reading, annotated with the path
-    Io(String),
+    /// an I/O failure while opening or reading: the [`std::io::ErrorKind`]
+    /// is preserved so callers can tell ENOENT from a short read on a
+    /// shard segment, and the detail string carries the path
+    Io {
+        kind: std::io::ErrorKind,
+        detail: String,
+    },
     /// the file is shorter (or longer) than the header-declared payload
     Truncated { expected: u64, actual: u64 },
     /// a header-declared size (vertex count or adjacency total) is so
@@ -34,13 +39,24 @@ pub enum GraphLoadError {
     /// `offsets[n]` disagrees with the header's undirected edge count
     /// (a valid CSR stores each edge in both endpoint lists)
     EdgeCountMismatch { header: u64, adjacency: u64 },
+    /// a neighbor row contains its own vertex — the engine's treelet DP
+    /// assumes simple graphs, and a self-loop double-counts in Eq 5
+    SelfLoop { vertex: u32 },
+    /// a neighbor row repeats an entry — a duplicate edge double-counts
+    DuplicateNeighbor { vertex: u32, value: u32 },
+    /// a neighbor row is not strictly ascending (every builder output is
+    /// sorted; unsorted rows break the exchange's binary searches)
+    UnsortedNeighbors { vertex: u32 },
+    /// a per-rank segment file disagrees with its shared shard header or
+    /// with the partition it claims to implement
+    SegmentMismatch { rank: usize, detail: String },
 }
 
 impl fmt::Display for GraphLoadError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
             GraphLoadError::BadMagic => write!(f, "not a HARPSG01 binary graph"),
-            GraphLoadError::Io(m) => write!(f, "io error: {m}"),
+            GraphLoadError::Io { kind, detail } => write!(f, "io error ({kind:?}): {detail}"),
             GraphLoadError::Truncated { expected, actual } => write!(
                 f,
                 "corrupt payload: expected {expected} bytes, file has {actual}"
@@ -64,14 +80,77 @@ impl fmt::Display for GraphLoadError {
                 "corrupt CSR: header claims {header} edges but the adjacency \
                  holds {adjacency} entries (expected 2x)"
             ),
+            GraphLoadError::SelfLoop { vertex } => {
+                write!(f, "corrupt CSR: vertex {vertex} lists itself as a neighbor")
+            }
+            GraphLoadError::DuplicateNeighbor { vertex, value } => {
+                write!(f, "corrupt CSR: vertex {vertex} lists neighbor {value} twice")
+            }
+            GraphLoadError::UnsortedNeighbors { vertex } => {
+                write!(f, "corrupt CSR: vertex {vertex}'s neighbor row is unsorted")
+            }
+            GraphLoadError::SegmentMismatch { rank, detail } => {
+                write!(f, "corrupt shard segment {rank}: {detail}")
+            }
         }
     }
 }
 
 impl std::error::Error for GraphLoadError {}
 
+/// Annotate an I/O failure with the path it happened on, preserving the
+/// [`std::io::ErrorKind`] for typed matching (ENOENT vs short read).
+pub(crate) fn io_error(path: &Path, e: std::io::Error) -> GraphLoadError {
+    GraphLoadError::Io {
+        kind: e.kind(),
+        detail: format!("{}: {e}", path.display()),
+    }
+}
+
+/// Validate the per-row invariants of a CSR payload: every neighbor row
+/// strictly ascending (no duplicate edges — they double-count in the DP
+/// and skew the Eq 5 `avg_degree` model input) and free of self-loops.
+/// `row_vertex` maps a row index to the global vertex id it stores (the
+/// identity for a resident CSR, `locals[row]` for a shard segment).
+pub(crate) fn validate_rows(
+    offsets: &[u64],
+    adj: &[u32],
+    row_vertex: impl Fn(usize) -> u32,
+) -> Result<(), GraphLoadError> {
+    for r in 0..offsets.len().saturating_sub(1) {
+        let v = row_vertex(r);
+        let row = &adj[offsets[r] as usize..offsets[r + 1] as usize];
+        let mut prev: Option<u32> = None;
+        for &u in row {
+            if u == v {
+                return Err(GraphLoadError::SelfLoop { vertex: v });
+            }
+            match prev {
+                Some(p) if u == p => {
+                    return Err(GraphLoadError::DuplicateNeighbor { vertex: v, value: u })
+                }
+                Some(p) if u < p => return Err(GraphLoadError::UnsortedNeighbors { vertex: v }),
+                _ => {}
+            }
+            prev = Some(u);
+        }
+    }
+    Ok(())
+}
+
 /// Load an edge-list text file: one `u v` pair per line; lines starting
 /// with `#` or `%` are comments; blank lines ignored.
+///
+/// **Duplicate/self-loop policy:** the loader funnels every pair through
+/// [`GraphBuilder`], which *drops* self-loops (`u == v`) and *dedupes*
+/// repeated edges in either orientation (`u v` and `v u` are the same
+/// undirected edge). Real SNAP dumps repeat edges freely; keeping them
+/// would double-count in the CSR and skew the `avg_degree` input to the
+/// Eq 5 cost model, so the simple-graph normal form is enforced here
+/// rather than rejected. Binary and shard loads *verify* the same
+/// invariants instead (typed [`GraphLoadError::DuplicateNeighbor`] /
+/// [`GraphLoadError::SelfLoop`]) because those files claim to already be
+/// in normal form.
 pub fn load_edge_list(path: &Path) -> Result<Graph> {
     let f = std::fs::File::open(path).with_context(|| format!("open {}", path.display()))?;
     let mut b = GraphBuilder::new(0);
@@ -99,34 +178,20 @@ pub fn load_edge_list(path: &Path) -> Result<Graph> {
 
 const BIN_MAGIC: &[u8; 8] = b"HARPSG01";
 
-/// Write the CSR arrays as `HARPSG01 | n_vertices u64 | n_edges u64 |
-/// offsets[] u64 | adj[] u32`, little-endian.
-pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
-    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
-    let mut w = BufWriter::new(f);
-    w.write_all(BIN_MAGIC)?;
-    w.write_all(&(g.n_vertices() as u64).to_le_bytes())?;
-    w.write_all(&g.n_edges.to_le_bytes())?;
-    for &o in &g.offsets {
-        w.write_all(&o.to_le_bytes())?;
-    }
-    for &a in &g.adj {
-        w.write_all(&a.to_le_bytes())?;
-    }
-    w.flush()?;
-    Ok(())
-}
-
-/// Load a `HARPSG01` binary graph, validating every structural invariant
-/// before the CSR is handed to the engine: magic, header-vs-file length
-/// (truncation *and* trailing garbage), monotone offsets starting at 0,
-/// adjacency entries < n_vertices, and the 2·n_edges adjacency total.
-/// Corruption reports a typed [`GraphLoadError`] instead of a later panic.
-pub fn load_binary(path: &Path) -> Result<Graph, GraphLoadError> {
-    let io_err = |e: std::io::Error| GraphLoadError::Io(format!("{}: {e}", path.display()));
-    let f = std::fs::File::open(path).map_err(io_err)?;
-    let file_len = f.metadata().map_err(io_err)?.len();
-    let mut r = BufReader::new(f);
+/// Read and validate the `HARPSG01` header + offsets section: magic,
+/// header-vs-file length (truncation *and* trailing garbage, checked
+/// against the declared sizes *before* allocating — a corrupt header must
+/// not drive a huge allocation), monotone offsets starting at 0, and the
+/// 2·n_edges adjacency total. Shared by [`load_binary`] and the
+/// storage-sharding rewrite in [`crate::graph::partition::shard_binary`];
+/// the reader is left positioned at the adjacency section. Returns
+/// `(n_vertices, n_edges, offsets)`.
+pub(crate) fn read_csr_header<R: Read>(
+    r: &mut R,
+    file_len: u64,
+    path: &Path,
+) -> Result<(usize, u64, Vec<u64>), GraphLoadError> {
+    let io_err = |e: std::io::Error| io_error(path, e);
     let mut magic = [0u8; 8];
     r.read_exact(&mut magic).map_err(io_err)?;
     if &magic != BIN_MAGIC {
@@ -138,8 +203,6 @@ pub fn load_binary(path: &Path) -> Result<Graph, GraphLoadError> {
     r.read_exact(&mut u64buf).map_err(io_err)?;
     let n_edges = u64::from_le_bytes(u64buf);
 
-    // validate the declared sizes against the real file length *before*
-    // allocating — a corrupt header must not drive a huge allocation
     const HEADER_LEN: u64 = 8 + 8 + 8;
     let offsets_bytes = n64
         .checked_add(1)
@@ -183,8 +246,41 @@ pub fn load_binary(path: &Path) -> Result<Graph, GraphLoadError> {
             adjacency: total,
         });
     }
+    Ok((n, n_edges, offsets))
+}
 
-    let total = total as usize;
+/// Write the CSR arrays as `HARPSG01 | n_vertices u64 | n_edges u64 |
+/// offsets[] u64 | adj[] u32`, little-endian.
+pub fn save_binary(g: &Graph, path: &Path) -> Result<()> {
+    let f = std::fs::File::create(path).with_context(|| format!("create {}", path.display()))?;
+    let mut w = BufWriter::new(f);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(g.n_vertices() as u64).to_le_bytes())?;
+    w.write_all(&g.n_edges.to_le_bytes())?;
+    for &o in &g.offsets {
+        w.write_all(&o.to_le_bytes())?;
+    }
+    for &a in &g.adj {
+        w.write_all(&a.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Load a `HARPSG01` binary graph, validating every structural invariant
+/// before the CSR is handed to the engine: magic, header-vs-file length
+/// (truncation *and* trailing garbage), monotone offsets starting at 0,
+/// adjacency entries < n_vertices, strictly-ascending neighbor rows with
+/// no self-loops, and the 2·n_edges adjacency total. Corruption reports a
+/// typed [`GraphLoadError`] instead of a later panic. The same checks run
+/// per segment for sharded storage ([`crate::graph::shard`]).
+pub fn load_binary(path: &Path) -> Result<Graph, GraphLoadError> {
+    let io_err = |e: std::io::Error| io_error(path, e);
+    let f = std::fs::File::open(path).map_err(io_err)?;
+    let file_len = f.metadata().map_err(io_err)?.len();
+    let mut r = BufReader::new(f);
+    let (n, n_edges, offsets) = read_csr_header(&mut r, file_len, path)?;
+    let total = offsets[n] as usize;
     let mut adj = Vec::with_capacity(total);
     let mut u32buf = [0u8; 4];
     for i in 0..total {
@@ -199,6 +295,7 @@ pub fn load_binary(path: &Path) -> Result<Graph, GraphLoadError> {
         }
         adj.push(v);
     }
+    validate_rows(&offsets, &adj, |r| r as u32)?;
     Ok(Graph {
         offsets,
         adj,
@@ -258,11 +355,48 @@ mod tests {
         assert_eq!(g.n_edges, g2.n_edges);
     }
 
+    /// Satellite: the text loader's documented policy — duplicate edges
+    /// (either orientation) collapse to one, self-loops are dropped, and
+    /// the resulting degree statistics see the simple graph only.
+    #[test]
+    fn edge_list_dedupes_and_drops_self_loops() {
+        let p = tmp("dups.txt");
+        std::fs::write(&p, "0 1\n1 0\n0 1\n2 2\n1 2\n2 1\n").unwrap();
+        let g = load_edge_list(&p).unwrap();
+        assert_eq!(g.n_edges, 2); // {0,1} and {1,2}; 2-2 dropped
+        assert_eq!(g.neighbors(1), &[0, 2]);
+        assert_eq!(g.neighbors(2), &[1]);
+        let st = crate::graph::stats::degree_stats(&g);
+        assert!((st.avg_degree - 4.0 / 3.0).abs() < 1e-12);
+    }
+
     #[test]
     fn binary_rejects_garbage() {
         let p = tmp("garbage.bin");
         std::fs::write(&p, b"NOTAGRPH........").unwrap();
         assert!(matches!(load_binary(&p), Err(GraphLoadError::BadMagic)));
+    }
+
+    /// Satellite: `GraphLoadError::Io` carries the `io::ErrorKind`, so a
+    /// missing file and a short read are distinguishable by type.
+    #[test]
+    fn io_errors_carry_kind() {
+        match load_binary(&tmp("does_not_exist.bin")) {
+            Err(GraphLoadError::Io { kind, detail }) => {
+                assert_eq!(kind, std::io::ErrorKind::NotFound);
+                assert!(detail.contains("does_not_exist.bin"));
+            }
+            other => panic!("want Io(NotFound), got {other:?}"),
+        }
+        // a file too short to even hold the magic dies mid-read_exact
+        let p = tmp("stub.bin");
+        std::fs::write(&p, b"HARP").unwrap();
+        match load_binary(&p) {
+            Err(GraphLoadError::Io { kind, .. }) => {
+                assert_eq!(kind, std::io::ErrorKind::UnexpectedEof);
+            }
+            other => panic!("want Io(UnexpectedEof), got {other:?}"),
+        }
     }
 
     /// Satellite: corrupt-file fixtures — every structural invariant of
@@ -361,6 +495,34 @@ mod tests {
             }
             other => panic!("want Truncated, got {other:?}"),
         }
+
+        // a crafted binary whose rows hold self-loops or duplicate edges
+        // would silently double-count; each is its own typed diagnosis.
+        // layout of adj for this graph: v0:[1,4] v1:[0,2] v2:[1] v3:[4] v4:[0,3]
+        let mut bad = good.clone();
+        bad[adj0..adj0 + 4].copy_from_slice(&0u32.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::SelfLoop { vertex: 0 })
+        ));
+        let mut bad = good.clone();
+        bad[adj0 + 4..adj0 + 8].copy_from_slice(&1u32.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::DuplicateNeighbor {
+                vertex: 0,
+                value: 1
+            })
+        ));
+        let mut bad = good.clone();
+        bad[adj0 + 8..adj0 + 12].copy_from_slice(&3u32.to_le_bytes());
+        std::fs::write(&t, &bad).unwrap();
+        assert!(matches!(
+            load_binary(&t),
+            Err(GraphLoadError::UnsortedNeighbors { vertex: 1 })
+        ));
 
         // the untouched baseline still loads
         let ok = load_binary(&p).unwrap();

@@ -6,10 +6,12 @@ pub mod csr;
 pub mod loader;
 pub mod partition;
 pub mod rmat;
+pub mod shard;
 pub mod stats;
 
 pub use csr::{graph_from_edges, Graph, GraphBuilder};
 pub use loader::GraphLoadError;
-pub use partition::{Partition, RequestLists};
+pub use partition::{shard_binary, Partition, RequestLists};
 pub use rmat::RmatParams;
+pub use shard::{GraphStorageMode, GraphStore, RankView, SegmentedGraph};
 pub use stats::{degree_stats, Dataset, DegreeStats, DEFAULT_SCALE};

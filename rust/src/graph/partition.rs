@@ -5,7 +5,11 @@
 //! assumption in the Eq 5 complexity analysis.
 
 use super::csr::Graph;
+use super::loader::{self, GraphLoadError};
+use super::shard::{self, SegmentedGraph};
 use crate::util::mix2;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
 
 /// A partitioning of `0..n_vertices` across `n_ranks` ranks.
 #[derive(Debug, Clone)]
@@ -43,18 +47,30 @@ impl Partition {
     }
 
     /// Contiguous block partition (used by tests and as an ablation).
+    ///
+    /// Blocks are balanced: the first `n_vertices % n_ranks` ranks get one
+    /// extra vertex. The previous ceil-chunk math starved trailing ranks
+    /// whenever `n_ranks` didn't divide `n_vertices` (and emptied *every*
+    /// rank past index `n_vertices` when `n_ranks > n_vertices`); balanced
+    /// blocks leave no rank empty as long as `n_vertices >= n_ranks`.
     pub fn block(n_vertices: usize, n_ranks: usize) -> Self {
         assert!(n_ranks >= 1 && n_ranks <= u16::MAX as usize);
         let mut owner = vec![0u16; n_vertices];
         let mut locals = vec![Vec::new(); n_ranks];
         let mut local_index = vec![0u32; n_vertices];
-        let chunk = n_vertices.div_ceil(n_ranks.max(1)).max(1);
-        for v in 0..n_vertices {
-            let p = (v / chunk).min(n_ranks - 1) as u16;
-            owner[v] = p;
-            local_index[v] = locals[p as usize].len() as u32;
-            locals[p as usize].push(v as u32);
+        let base = n_vertices / n_ranks;
+        let extra = n_vertices % n_ranks;
+        let mut v = 0usize;
+        for p in 0..n_ranks {
+            let len = base + usize::from(p < extra);
+            for _ in 0..len {
+                owner[v] = p as u16;
+                local_index[v] = locals[p].len() as u32;
+                locals[p].push(v as u32);
+                v += 1;
+            }
         }
+        debug_assert_eq!(v, n_vertices);
         Partition {
             n_ranks,
             owner,
@@ -72,6 +88,115 @@ impl Partition {
     pub fn n_local(&self, rank: usize) -> usize {
         self.locals[rank].len()
     }
+
+    /// Storage-sharding step: rewrite a resident CSR into per-rank
+    /// segment files under `dir` (shared header + one segment per rank,
+    /// see [`crate::graph::shard`] for the format). Each rank's segment
+    /// holds exactly its vertices' adjacency rows in `locals` order, so
+    /// an out-of-core run keeps only the partition-proportional slice
+    /// resident. The returned [`SegmentedGraph`] has already re-validated
+    /// the header it wrote.
+    pub fn shard_storage(&self, g: &Graph, dir: &Path) -> Result<SegmentedGraph, GraphLoadError> {
+        assert_eq!(g.n_vertices(), self.owner.len(), "partition/graph mismatch");
+        shard::write_segments(g, self, dir)?;
+        SegmentedGraph::open(dir)
+    }
+}
+
+/// Rewrite a `HARPSG01` binary into per-rank segment files under `dir`
+/// **without materializing the adjacency**: the offsets section is read
+/// first (with the same strict header validation as
+/// [`loader::load_binary`]), per-rank segment headers and local offsets
+/// are derived from it, and the adjacency section is then streamed once,
+/// routing each vertex's row to its owner's segment writer. Peak memory
+/// is the offsets array plus one buffered writer per rank — the path a
+/// multi-billion-edge ingest takes. `partition_for` receives the vertex
+/// count and returns the partition to cut against (e.g.
+/// `|n| Partition::random(n, ranks, seed)`).
+pub fn shard_binary(
+    src: &Path,
+    dir: &Path,
+    partition_for: impl FnOnce(usize) -> Partition,
+) -> Result<SegmentedGraph, GraphLoadError> {
+    let src_err = |e: std::io::Error| loader::io_error(src, e);
+    let f = std::fs::File::open(src).map_err(src_err)?;
+    let file_len = f.metadata().map_err(src_err)?.len();
+    let mut r = BufReader::new(f);
+    let (n, n_edges, offsets) = loader::read_csr_header(&mut r, file_len, src)?;
+    let part = partition_for(n);
+    assert_eq!(part.owner.len(), n, "partition_for returned wrong size");
+
+    std::fs::create_dir_all(dir).map_err(|e| loader::io_error(dir, e))?;
+    let mut segs = Vec::with_capacity(part.n_ranks);
+    let mut writers = Vec::with_capacity(part.n_ranks);
+    for p in 0..part.n_ranks {
+        let sp = dir.join(shard::segment_file_name(p));
+        let io_err = |e: std::io::Error| loader::io_error(&sp, e);
+        let adj_len: u64 = part.locals[p]
+            .iter()
+            .map(|&v| offsets[v as usize + 1] - offsets[v as usize])
+            .sum();
+        let fp = std::fs::File::create(&sp).map_err(io_err)?;
+        let mut w = BufWriter::new(fp);
+        w.write_all(shard::SEG_MAGIC).map_err(io_err)?;
+        w.write_all(&(p as u64).to_le_bytes()).map_err(io_err)?;
+        w.write_all(&(part.locals[p].len() as u64).to_le_bytes())
+            .map_err(io_err)?;
+        w.write_all(&adj_len.to_le_bytes()).map_err(io_err)?;
+        let mut off = 0u64;
+        w.write_all(&off.to_le_bytes()).map_err(io_err)?;
+        for &v in &part.locals[p] {
+            off += offsets[v as usize + 1] - offsets[v as usize];
+            w.write_all(&off.to_le_bytes()).map_err(io_err)?;
+        }
+        segs.push(shard::SegMeta {
+            n_local: part.locals[p].len() as u64,
+            adj_len,
+        });
+        writers.push((w, sp));
+    }
+
+    // single streaming pass over the adjacency, validated row by row
+    // exactly as load_binary would (range, sortedness, loops, dups)
+    let mut u32buf = [0u8; 4];
+    for v in 0..n {
+        let deg = (offsets[v + 1] - offsets[v]) as usize;
+        let (w, sp) = &mut writers[part.owner_of(v as u32)];
+        let mut prev: Option<u32> = None;
+        for j in 0..deg {
+            r.read_exact(&mut u32buf).map_err(src_err)?;
+            let u = u32::from_le_bytes(u32buf);
+            if u as usize >= n {
+                return Err(GraphLoadError::AdjOutOfRange {
+                    index: offsets[v] as usize + j,
+                    value: u,
+                    n_vertices: n,
+                });
+            }
+            if u == v as u32 {
+                return Err(GraphLoadError::SelfLoop { vertex: v as u32 });
+            }
+            match prev {
+                Some(pn) if u == pn => {
+                    return Err(GraphLoadError::DuplicateNeighbor {
+                        vertex: v as u32,
+                        value: u,
+                    })
+                }
+                Some(pn) if u < pn => {
+                    return Err(GraphLoadError::UnsortedNeighbors { vertex: v as u32 })
+                }
+                _ => {}
+            }
+            prev = Some(u);
+            w.write_all(&u32buf).map_err(|e| loader::io_error(sp, e))?;
+        }
+    }
+    for (w, sp) in &mut writers {
+        w.flush().map_err(|e| loader::io_error(sp, e))?;
+    }
+    shard::write_header(dir, n as u64, n_edges, shard::partition_tag(&part), &segs)?;
+    SegmentedGraph::open(dir)
 }
 
 /// For every ordered rank pair, which remote vertices does `p` need?
@@ -149,6 +274,62 @@ mod tests {
         }
     }
 
+    /// Satellite: the old ceil-chunk block math starved trailing ranks
+    /// whenever P∤n (n=6, P=4 gave sizes [2,2,2,0]) and emptied all but
+    /// the first n ranks when P>n with bogus bookkeeping. Balanced blocks
+    /// must cover every vertex, stay contiguous, keep sizes within one of
+    /// each other, and keep `local_index` consistent — including n=0,
+    /// P>n, and every remainder class.
+    #[test]
+    fn block_partition_balanced_covering_consistent() {
+        for n in [0usize, 1, 2, 3, 4, 5, 6, 7, 10, 16, 33] {
+            for p_count in 1..=8usize {
+                let part = Partition::block(n, p_count);
+                assert_eq!(part.n_ranks, p_count);
+                let total: usize = part.locals.iter().map(|l| l.len()).sum();
+                assert_eq!(total, n, "n={n} P={p_count} loses vertices");
+                let sizes: Vec<usize> = part.locals.iter().map(|l| l.len()).collect();
+                let (min, max) = (sizes.iter().min().unwrap(), sizes.iter().max().unwrap());
+                assert!(max - min <= 1, "n={n} P={p_count} sizes {sizes:?}");
+                if n >= p_count {
+                    assert!(*min >= 1, "n={n} P={p_count} starves a rank: {sizes:?}");
+                }
+                // contiguous: owners are non-decreasing across vertex ids
+                for v in 1..n {
+                    assert!(part.owner[v] >= part.owner[v - 1]);
+                }
+                // local_index round-trips through the owner's locals list
+                for v in 0..n {
+                    let o = part.owner[v] as usize;
+                    assert_eq!(part.locals[o][part.local_index[v] as usize], v as u32);
+                }
+            }
+        }
+    }
+
+    /// P > n regression in the style of the P=2/P=3 adaptive regressions:
+    /// the surplus ranks are exactly the empty ones, and request lists
+    /// still build cleanly over them.
+    #[test]
+    fn block_partition_more_ranks_than_vertices() {
+        let g = graph_from_edges(3, &[(0, 1), (1, 2)]);
+        let part = Partition::block(3, 5);
+        for p in 0..3 {
+            assert_eq!(part.locals[p], vec![p as u32]);
+        }
+        for p in 3..5 {
+            assert!(part.locals[p].is_empty());
+            assert_eq!(part.n_local(p), 0);
+        }
+        let req = RequestLists::build(&g, &part);
+        assert_eq!(req.rows(0, 1), &[1]);
+        assert_eq!(req.rows(1, 0), &[0]);
+        assert_eq!(req.rows(1, 2), &[2]);
+        for p in 3..5 {
+            assert_eq!(req.total_in(p), 0);
+        }
+    }
+
     #[test]
     fn request_lists_path_graph() {
         // path 0-1-2-3, ranks: block partition {0,1} {2,3}
@@ -158,6 +339,45 @@ mod tests {
         assert_eq!(req.rows(0, 1), &[2]); // rank0's vertex 1 needs vertex 2
         assert_eq!(req.rows(1, 0), &[1]); // rank1's vertex 2 needs vertex 1
         assert_eq!(req.total_in(0), 1);
+    }
+
+    /// The streaming HARPSG01 rewrite must produce byte-identical segment
+    /// files to the in-memory sharding step.
+    #[test]
+    fn shard_binary_matches_in_memory_sharding() {
+        let g = generate(&RmatParams::with_skew(120, 400, 3, 5));
+        let base = std::env::temp_dir().join(format!("harpsg-shardbin-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let src = base.join("g.bin");
+        std::fs::create_dir_all(&base).unwrap();
+        crate::graph::loader::save_binary(&g, &src).unwrap();
+        let part = Partition::random(g.n_vertices(), 3, 7);
+        let mem_dir = base.join("mem");
+        let stream_dir = base.join("stream");
+        let seg_mem = part.shard_storage(&g, &mem_dir).unwrap();
+        let seg_stream = shard_binary(&src, &stream_dir, |n| {
+            assert_eq!(n, g.n_vertices());
+            part.clone()
+        })
+        .unwrap();
+        assert_eq!(seg_mem.segs, seg_stream.segs);
+        for p in 0..3 {
+            let a = std::fs::read(mem_dir.join(shard::segment_file_name(p))).unwrap();
+            let b = std::fs::read(stream_dir.join(shard::segment_file_name(p))).unwrap();
+            assert_eq!(a, b, "segment {p} differs");
+        }
+        let ha = std::fs::read(mem_dir.join(shard::SHARD_HEADER_FILE)).unwrap();
+        let hb = std::fs::read(stream_dir.join(shard::SHARD_HEADER_FILE)).unwrap();
+        assert_eq!(ha, hb);
+        // and the streamed shards re-load to the resident rows
+        for p in 0..3 {
+            let c = seg_stream.load_rank(p, &part.locals[p]).unwrap();
+            for (r, &v) in part.locals[p].iter().enumerate() {
+                assert_eq!(c.neighbors(r), g.neighbors(v));
+            }
+        }
+        drop((seg_mem, seg_stream));
+        let _ = std::fs::remove_dir_all(&base);
     }
 
     #[test]

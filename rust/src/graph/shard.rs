@@ -1,0 +1,609 @@
+//! Out-of-core, partition-sharded graph storage.
+//!
+//! The paper counts on graphs of 2–5 billion edges; a fully resident CSR
+//! shared by every simulated rank is exactly the "whole graph in RAM per
+//! rank" assumption the Eq 5/Eq 7 memory analysis rejects. This module
+//! breaks it: [`Partition::shard_storage`](super::Partition::shard_storage)
+//! rewrites the resident CSR (and [`super::partition::shard_binary`] a
+//! `HARPSG01` file, streamed) into **per-rank segment files** under a
+//! shared header, and [`SegmentedGraph`] serves each rank *only its own
+//! vertex partition's adjacency slice*. Non-resident neighbor rows never
+//! need local adjacency — they already travel through the request-list
+//! machinery — so the exchange plan is the single consumer of adjacency
+//! and the only layer that changes.
+//!
+//! Storage is selected per job via `--graph-storage resident|mmap|auto`
+//! ([`GraphStorageMode`]): `resident` is the historical shared CSR,
+//! `mmap` maps each rank's segment through a chunked-file view (plain
+//! buffered `std` reads — no OS mmap dependency; segments are loaded one
+//! rank at a time and dropped, so peak graph memory is one slice, not the
+//! whole graph), and `auto` picks `mmap` exactly when the full CSR
+//! exceeds the resident-adjacency budget. The resolved decision and the
+//! per-rank slice bytes are charged to the memory ledger
+//! (`MemClass::GraphShard`) and surfaced in `JobReport` JSON
+//! (`config.graph_storage`, `memory.graph_resident_per_rank`).
+//!
+//! ## On-disk format
+//!
+//! Shared header `shards.hdr`:
+//! `HARPSGS1 | n_vertices u64 | n_edges u64 | n_ranks u64 |
+//!  partition_tag u64 | per-rank (n_local u64, adj_len u64)…`
+//!
+//! Per-rank segment `seg_<p>.bin`:
+//! `HARPSGP1 | rank u64 | n_local u64 | adj_len u64 |
+//!  offsets[(n_local+1)·8] | adj[adj_len·4]`
+//!
+//! all little-endian. Segment offsets are *local-row* offsets; adjacency
+//! entries stay global vertex ids; rows appear in `locals[p]` (ascending
+//! global id) order. `partition_tag` folds the owner array through
+//! [`mix2`] so a segment set can never be silently served for a different
+//! partition. Every validation `load_binary` performs on the monolithic
+//! file runs segment-aware here — magic, exact length, monotone offsets,
+//! adjacency range, row sortedness/self-loops, and cross-file sum checks
+//! — failing with the same typed [`GraphLoadError`]s.
+
+use super::csr::Graph;
+use super::loader::{io_error, validate_rows, GraphLoadError};
+use super::partition::Partition;
+use std::io::{BufWriter, Read, Write};
+use std::path::{Path, PathBuf};
+
+pub(crate) const HDR_MAGIC: &[u8; 8] = b"HARPSGS1";
+pub(crate) const SEG_MAGIC: &[u8; 8] = b"HARPSGP1";
+
+/// Name of the shared shard header inside a shard directory.
+pub const SHARD_HEADER_FILE: &str = "shards.hdr";
+
+/// Name of rank `p`'s segment file inside a shard directory.
+pub fn segment_file_name(rank: usize) -> String {
+    format!("seg_{rank}.bin")
+}
+
+/// Which backend serves each rank's adjacency slice (`--graph-storage`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GraphStorageMode {
+    /// the historical fully resident CSR, shared by every simulated rank
+    Resident,
+    /// per-rank segment files behind a chunked-file view: each rank's
+    /// slice is read from disk during plan build and dropped after use
+    Mmap,
+    /// `mmap` iff the full CSR exceeds the resident-adjacency budget
+    Auto,
+}
+
+impl GraphStorageMode {
+    /// Budget `auto` resolves against when none is configured: 1 GiB.
+    pub const DEFAULT_BUDGET: u64 = 1 << 30;
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GraphStorageMode::Resident => "resident",
+            GraphStorageMode::Mmap => "mmap",
+            GraphStorageMode::Auto => "auto",
+        }
+    }
+
+    pub fn parse(name: &str) -> Option<Self> {
+        match name {
+            "resident" => Some(GraphStorageMode::Resident),
+            "mmap" => Some(GraphStorageMode::Mmap),
+            "auto" => Some(GraphStorageMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// Resolve the mode against the full CSR size and the configured
+    /// resident-adjacency budget (`None` → [`Self::DEFAULT_BUDGET`]).
+    pub fn resolves_to_mmap(&self, graph_bytes: u64, budget: Option<u64>) -> bool {
+        match self {
+            GraphStorageMode::Resident => false,
+            GraphStorageMode::Mmap => true,
+            GraphStorageMode::Auto => graph_bytes > budget.unwrap_or(Self::DEFAULT_BUDGET),
+        }
+    }
+}
+
+/// Deterministic fingerprint of a partition's owner array, stored in the
+/// shard header so segments are never served for a different partition.
+pub fn partition_tag(part: &Partition) -> u64 {
+    let mut h = crate::util::mix2(0x5348_4152_4431u64, part.n_ranks as u64);
+    for (v, &o) in part.owner.iter().enumerate() {
+        h = crate::util::mix2(h, ((v as u64) << 16) | o as u64);
+    }
+    h
+}
+
+/// One rank's adjacency slice, loaded from its segment file: local-row
+/// offsets plus global-id neighbor entries.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RankCsr {
+    pub offsets: Vec<u64>,
+    pub adj: Vec<u32>,
+}
+
+impl RankCsr {
+    #[inline]
+    pub fn neighbors(&self, local_row: usize) -> &[u32] {
+        &self.adj[self.offsets[local_row] as usize..self.offsets[local_row + 1] as usize]
+    }
+}
+
+/// A borrowed (resident) or loaded (segment) view of one rank's rows.
+pub enum RankView<'a> {
+    Resident { g: &'a Graph, locals: &'a [u32] },
+    Loaded(RankCsr),
+}
+
+impl RankView<'_> {
+    /// Neighbor list of the rank's `row`-th local vertex.
+    #[inline]
+    pub fn neighbors(&self, row: usize) -> &[u32] {
+        match self {
+            RankView::Resident { g, locals } => g.neighbors(locals[row]),
+            RankView::Loaded(c) => c.neighbors(row),
+        }
+    }
+}
+
+/// Storage backend abstraction the exchange-plan build runs against: the
+/// resident [`Graph`] and the segment-file [`SegmentedGraph`] both serve
+/// per-rank row views and account their per-rank resident bytes.
+pub trait GraphStore {
+    fn n_vertices(&self) -> usize;
+    fn n_edges(&self) -> u64;
+    /// resolved backend name recorded in plans and reports
+    fn storage_name(&self) -> &'static str;
+    /// graph bytes rank `p` keeps resident, charged to the memory ledger
+    fn rank_bytes(&self, part: &Partition, p: usize) -> u64;
+    /// rank `p`'s adjacency rows, in `part.locals[p]` order
+    fn rank_view<'a>(&'a self, part: &'a Partition, p: usize)
+        -> Result<RankView<'a>, GraphLoadError>;
+}
+
+impl GraphStore for Graph {
+    fn n_vertices(&self) -> usize {
+        Graph::n_vertices(self)
+    }
+    fn n_edges(&self) -> u64 {
+        self.n_edges
+    }
+    fn storage_name(&self) -> &'static str {
+        "resident"
+    }
+    fn rank_bytes(&self, part: &Partition, p: usize) -> u64 {
+        // historical charge: partition bookkeeping (owner + locals +
+        // local_index ≈ 12 B/vertex) plus an even share of the shared CSR
+        (part.n_local(p) * 12) as u64 + self.bytes() / part.n_ranks as u64
+    }
+    fn rank_view<'a>(
+        &'a self,
+        part: &'a Partition,
+        p: usize,
+    ) -> Result<RankView<'a>, GraphLoadError> {
+        Ok(RankView::Resident {
+            g: self,
+            locals: &part.locals[p],
+        })
+    }
+}
+
+/// Per-rank segment metadata from the shared header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SegMeta {
+    pub n_local: u64,
+    pub adj_len: u64,
+}
+
+/// A partition-sharded graph on disk: a directory of per-rank segment
+/// files plus the shared header. Opening validates the header; each
+/// rank's slice is loaded (and fully re-validated) on demand.
+#[derive(Debug)]
+pub struct SegmentedGraph {
+    dir: PathBuf,
+    n_vertices: usize,
+    n_edges: u64,
+    n_ranks: usize,
+    partition_tag: u64,
+    pub segs: Vec<SegMeta>,
+    /// scratch shards remove their directory on drop
+    cleanup: bool,
+}
+
+impl SegmentedGraph {
+    /// Open and validate the shared header under `dir`.
+    pub fn open(dir: &Path) -> Result<Self, GraphLoadError> {
+        let hp = dir.join(SHARD_HEADER_FILE);
+        let buf = std::fs::read(&hp).map_err(|e| io_error(&hp, e))?;
+        if buf.len() < 8 || &buf[..8] != HDR_MAGIC {
+            return Err(GraphLoadError::BadMagic);
+        }
+        let rd_u64 = |at: usize| -> Option<u64> {
+            buf.get(at..at + 8)
+                .map(|b| u64::from_le_bytes(b.try_into().expect("8-byte slice")))
+        };
+        let n_ranks64 = rd_u64(24).ok_or(GraphLoadError::Truncated {
+            expected: 40,
+            actual: buf.len() as u64,
+        })?;
+        let expected = 40u64
+            .checked_add(n_ranks64.checked_mul(16).ok_or(GraphLoadError::SizeOverflow)?)
+            .ok_or(GraphLoadError::SizeOverflow)?;
+        if buf.len() as u64 != expected {
+            return Err(GraphLoadError::Truncated {
+                expected,
+                actual: buf.len() as u64,
+            });
+        }
+        let n64 = rd_u64(8).expect("length checked");
+        if n64 > u32::MAX as u64 {
+            return Err(GraphLoadError::SizeOverflow);
+        }
+        let n_edges = rd_u64(16).expect("length checked");
+        let tag = rd_u64(32).expect("length checked");
+        let n_ranks = n_ranks64 as usize;
+        let mut segs = Vec::with_capacity(n_ranks);
+        let (mut sum_local, mut sum_adj) = (0u64, 0u64);
+        for p in 0..n_ranks {
+            let n_local = rd_u64(40 + 16 * p).expect("length checked");
+            let adj_len = rd_u64(48 + 16 * p).expect("length checked");
+            sum_local = sum_local
+                .checked_add(n_local)
+                .ok_or(GraphLoadError::SizeOverflow)?;
+            sum_adj = sum_adj
+                .checked_add(adj_len)
+                .ok_or(GraphLoadError::SizeOverflow)?;
+            segs.push(SegMeta { n_local, adj_len });
+        }
+        if sum_local != n64 {
+            return Err(GraphLoadError::SegmentMismatch {
+                rank: n_ranks,
+                detail: format!("segments hold {sum_local} vertices, header claims {n64}"),
+            });
+        }
+        if n_edges.checked_mul(2) != Some(sum_adj) {
+            return Err(GraphLoadError::EdgeCountMismatch {
+                header: n_edges,
+                adjacency: sum_adj,
+            });
+        }
+        Ok(SegmentedGraph {
+            dir: dir.to_path_buf(),
+            n_vertices: n64 as usize,
+            n_edges,
+            n_ranks,
+            partition_tag: tag,
+            segs,
+            cleanup: false,
+        })
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Mark this shard set as scratch: the directory is removed on drop.
+    pub fn set_cleanup(&mut self, yes: bool) {
+        self.cleanup = yes;
+    }
+
+    /// Reject a partition other than the one the segments were cut for.
+    pub fn verify_partition(&self, part: &Partition) -> Result<(), GraphLoadError> {
+        if part.n_ranks != self.n_ranks {
+            return Err(GraphLoadError::SegmentMismatch {
+                rank: 0,
+                detail: format!(
+                    "segments cut for {} ranks, partition has {}",
+                    self.n_ranks, part.n_ranks
+                ),
+            });
+        }
+        if partition_tag(part) != self.partition_tag {
+            return Err(GraphLoadError::SegmentMismatch {
+                rank: 0,
+                detail: "partition tag mismatch: segments were cut for a different \
+                         vertex partition"
+                    .to_string(),
+            });
+        }
+        Ok(())
+    }
+
+    /// Load rank `p`'s segment, validating every invariant the monolithic
+    /// loader checks plus the segment-vs-header cross checks. `locals` is
+    /// the rank's vertex list, used both as a length cross-check and to
+    /// map local rows back to global ids for self-loop detection.
+    pub fn load_rank(&self, p: usize, locals: &[u32]) -> Result<RankCsr, GraphLoadError> {
+        let meta = self.segs[p];
+        let sp = self.dir.join(segment_file_name(p));
+        let io_err = |e: std::io::Error| io_error(&sp, e);
+        let f = std::fs::File::open(&sp).map_err(io_err)?;
+        let file_len = f.metadata().map_err(io_err)?.len();
+        let mut r = std::io::BufReader::new(f);
+        let mut magic = [0u8; 8];
+        r.read_exact(&mut magic).map_err(io_err)?;
+        if &magic != SEG_MAGIC {
+            return Err(GraphLoadError::BadMagic);
+        }
+        let mut u64buf = [0u8; 8];
+        let mut rd = |r: &mut std::io::BufReader<std::fs::File>| -> Result<u64, GraphLoadError> {
+            r.read_exact(&mut u64buf).map_err(io_err)?;
+            Ok(u64::from_le_bytes(u64buf))
+        };
+        let rank = rd(&mut r)?;
+        let n_local = rd(&mut r)?;
+        let adj_len = rd(&mut r)?;
+        if rank != p as u64 || n_local != meta.n_local || adj_len != meta.adj_len {
+            return Err(GraphLoadError::SegmentMismatch {
+                rank: p,
+                detail: format!(
+                    "segment header (rank {rank}, {n_local} rows, {adj_len} adj) \
+                     disagrees with shard header (rank {p}, {} rows, {} adj)",
+                    meta.n_local, meta.adj_len
+                ),
+            });
+        }
+        if n_local != locals.len() as u64 {
+            return Err(GraphLoadError::SegmentMismatch {
+                rank: p,
+                detail: format!(
+                    "segment holds {n_local} rows, partition assigns {}",
+                    locals.len()
+                ),
+            });
+        }
+        // exact length before allocating, same alloc-guard as load_binary
+        let expected = 32u64
+            .checked_add(
+                n_local
+                    .checked_add(1)
+                    .and_then(|c| c.checked_mul(8))
+                    .ok_or(GraphLoadError::SizeOverflow)?,
+            )
+            .and_then(|b| b.checked_add(adj_len.checked_mul(4)?))
+            .ok_or(GraphLoadError::SizeOverflow)?;
+        if file_len != expected {
+            return Err(GraphLoadError::Truncated {
+                expected,
+                actual: file_len,
+            });
+        }
+        let rows = n_local as usize;
+        let mut offsets = Vec::with_capacity(rows + 1);
+        let mut u64buf = [0u8; 8];
+        for i in 0..=rows {
+            r.read_exact(&mut u64buf).map_err(io_err)?;
+            let o = u64::from_le_bytes(u64buf);
+            let floor = offsets.last().copied().unwrap_or(0);
+            if (i == 0 && o != 0) || o < floor {
+                return Err(GraphLoadError::NonMonotoneOffsets { index: i });
+            }
+            offsets.push(o);
+        }
+        if offsets[rows] != adj_len {
+            return Err(GraphLoadError::SegmentMismatch {
+                rank: p,
+                detail: format!(
+                    "row offsets end at {} but the segment declares {adj_len} \
+                     adjacency entries",
+                    offsets[rows]
+                ),
+            });
+        }
+        let total = adj_len as usize;
+        let mut adj = Vec::with_capacity(total);
+        let mut u32buf = [0u8; 4];
+        for i in 0..total {
+            r.read_exact(&mut u32buf).map_err(io_err)?;
+            let v = u32::from_le_bytes(u32buf);
+            if v as usize >= self.n_vertices {
+                return Err(GraphLoadError::AdjOutOfRange {
+                    index: i,
+                    value: v,
+                    n_vertices: self.n_vertices,
+                });
+            }
+            adj.push(v);
+        }
+        validate_rows(&offsets, &adj, |row| locals[row])?;
+        Ok(RankCsr { offsets, adj })
+    }
+}
+
+impl GraphStore for SegmentedGraph {
+    fn n_vertices(&self) -> usize {
+        self.n_vertices
+    }
+    fn n_edges(&self) -> u64 {
+        self.n_edges
+    }
+    fn storage_name(&self) -> &'static str {
+        "mmap"
+    }
+    fn rank_bytes(&self, part: &Partition, p: usize) -> u64 {
+        // partition bookkeeping plus this rank's own slice only — the
+        // partition-proportional bound the ledger verifies
+        let n_local = part.n_local(p) as u64;
+        n_local * 12 + (n_local + 1) * 8 + self.segs[p].adj_len * 4
+    }
+    fn rank_view<'a>(
+        &'a self,
+        part: &'a Partition,
+        p: usize,
+    ) -> Result<RankView<'a>, GraphLoadError> {
+        self.load_rank(p, &part.locals[p]).map(RankView::Loaded)
+    }
+}
+
+impl Drop for SegmentedGraph {
+    fn drop(&mut self) {
+        if self.cleanup {
+            let _ = std::fs::remove_dir_all(&self.dir);
+        }
+    }
+}
+
+/// Write the shared header for an already-cut segment set.
+pub(crate) fn write_header(
+    dir: &Path,
+    n_vertices: u64,
+    n_edges: u64,
+    tag: u64,
+    segs: &[SegMeta],
+) -> Result<(), GraphLoadError> {
+    let hp = dir.join(SHARD_HEADER_FILE);
+    let io_err = |e: std::io::Error| io_error(&hp, e);
+    let f = std::fs::File::create(&hp).map_err(io_err)?;
+    let mut w = BufWriter::new(f);
+    let mut write = |b: &[u8]| w.write_all(b).map_err(io_err);
+    write(HDR_MAGIC)?;
+    write(&n_vertices.to_le_bytes())?;
+    write(&n_edges.to_le_bytes())?;
+    write(&(segs.len() as u64).to_le_bytes())?;
+    write(&tag.to_le_bytes())?;
+    for s in segs {
+        write(&s.n_local.to_le_bytes())?;
+        write(&s.adj_len.to_le_bytes())?;
+    }
+    w.flush().map_err(io_err)
+}
+
+/// Cut a resident CSR into per-rank segment files under `dir`.
+pub(crate) fn write_segments(
+    g: &Graph,
+    part: &Partition,
+    dir: &Path,
+) -> Result<(), GraphLoadError> {
+    std::fs::create_dir_all(dir).map_err(|e| io_error(dir, e))?;
+    let mut segs = Vec::with_capacity(part.n_ranks);
+    for p in 0..part.n_ranks {
+        let sp = dir.join(segment_file_name(p));
+        let io_err = |e: std::io::Error| io_error(&sp, e);
+        let f = std::fs::File::create(&sp).map_err(io_err)?;
+        let mut w = BufWriter::new(f);
+        let adj_len: u64 = part.locals[p]
+            .iter()
+            .map(|&v| g.neighbors(v).len() as u64)
+            .sum();
+        w.write_all(SEG_MAGIC).map_err(io_err)?;
+        w.write_all(&(p as u64).to_le_bytes()).map_err(io_err)?;
+        w.write_all(&(part.locals[p].len() as u64).to_le_bytes())
+            .map_err(io_err)?;
+        w.write_all(&adj_len.to_le_bytes()).map_err(io_err)?;
+        let mut off = 0u64;
+        w.write_all(&off.to_le_bytes()).map_err(io_err)?;
+        for &v in &part.locals[p] {
+            off += g.neighbors(v).len() as u64;
+            w.write_all(&off.to_le_bytes()).map_err(io_err)?;
+        }
+        for &v in &part.locals[p] {
+            for &u in g.neighbors(v) {
+                w.write_all(&u.to_le_bytes()).map_err(io_err)?;
+            }
+        }
+        w.flush().map_err(io_err)?;
+        segs.push(SegMeta {
+            n_local: part.locals[p].len() as u64,
+            adj_len,
+        });
+    }
+    write_header(
+        dir,
+        g.n_vertices() as u64,
+        g.n_edges,
+        partition_tag(part),
+        &segs,
+    )
+}
+
+/// Cut a resident CSR into a fresh scratch directory under the system
+/// temp dir; the returned [`SegmentedGraph`] removes it on drop.
+pub fn shard_to_scratch(g: &Graph, part: &Partition) -> Result<SegmentedGraph, GraphLoadError> {
+    let nanos = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_nanos())
+        .unwrap_or(0);
+    let dir = std::env::temp_dir().join(format!(
+        "harpsg-shards-{}-{:x}-{:x}-{}",
+        std::process::id(),
+        nanos,
+        g as *const Graph as usize,
+        part.n_ranks
+    ));
+    write_segments(g, part, &dir)?;
+    let mut seg = SegmentedGraph::open(&dir)?;
+    seg.set_cleanup(true);
+    Ok(seg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::csr::graph_from_edges;
+    use crate::graph::rmat::{generate, RmatParams};
+
+    #[test]
+    fn storage_mode_parse_name_roundtrip() {
+        for m in [
+            GraphStorageMode::Resident,
+            GraphStorageMode::Mmap,
+            GraphStorageMode::Auto,
+        ] {
+            assert_eq!(GraphStorageMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(GraphStorageMode::parse("disk"), None);
+    }
+
+    #[test]
+    fn auto_resolves_against_budget() {
+        use GraphStorageMode::*;
+        assert!(!Resident.resolves_to_mmap(u64::MAX, Some(1)));
+        assert!(Mmap.resolves_to_mmap(0, Some(u64::MAX)));
+        assert!(Auto.resolves_to_mmap(101, Some(100)));
+        assert!(!Auto.resolves_to_mmap(100, Some(100)));
+        assert!(!Auto.resolves_to_mmap(GraphStorageMode::DEFAULT_BUDGET, None));
+    }
+
+    #[test]
+    fn shard_roundtrip_matches_resident_rows() {
+        let g = generate(&RmatParams::with_skew(200, 600, 3, 11));
+        for ranks in [1usize, 2, 5, 6] {
+            let part = Partition::random(g.n_vertices(), ranks, 7);
+            let seg = shard_to_scratch(&g, &part).unwrap();
+            seg.verify_partition(&part).unwrap();
+            assert_eq!(GraphStore::n_vertices(&seg), g.n_vertices());
+            assert_eq!(GraphStore::n_edges(&seg), g.n_edges);
+            for p in 0..ranks {
+                let c = seg.load_rank(p, &part.locals[p]).unwrap();
+                for (r, &v) in part.locals[p].iter().enumerate() {
+                    assert_eq!(c.neighbors(r), g.neighbors(v), "rank {p} row {r}");
+                }
+                // the slice charge is partition-proportional, not n_ranks⁻¹
+                let want =
+                    (part.n_local(p) as u64) * 12 + (part.n_local(p) as u64 + 1) * 8
+                        + c.adj.len() as u64 * 4;
+                assert_eq!(seg.rank_bytes(&part, p), want);
+            }
+        }
+    }
+
+    #[test]
+    fn segments_reject_foreign_partition() {
+        let g = graph_from_edges(6, &[(0, 1), (1, 2), (2, 3), (3, 4), (4, 5)]);
+        let part = Partition::random(6, 2, 7);
+        let seg = shard_to_scratch(&g, &part).unwrap();
+        let other = Partition::random(6, 2, 8);
+        assert!(matches!(
+            seg.verify_partition(&other),
+            Err(GraphLoadError::SegmentMismatch { .. })
+        ));
+        let three = Partition::random(6, 3, 7);
+        assert!(matches!(
+            seg.verify_partition(&three),
+            Err(GraphLoadError::SegmentMismatch { .. })
+        ));
+    }
+}

@@ -17,6 +17,8 @@
 //!   harpsg count --template u12-1 --dataset R500K3 --ranks 6 --table-storage auto
 //!   harpsg count --template u15-1 --dataset R500K3 --workers 4 --kernel simd
 //!   harpsg count --template u7-2 --dataset MI --exchange sequential
+//!   harpsg count --template u10-2 --dataset R500K3 --graph-storage auto \
+//!       --graph-budget-mb 256
 //!   harpsg run --config configs/quickstart.toml
 
 use anyhow::{Context, Result};
@@ -26,7 +28,7 @@ use harpsg::api::{
 use harpsg::colorcount::{KernelMode, StorageMode};
 use harpsg::config::RunSpec;
 use harpsg::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
-use harpsg::graph::{degree_stats, loader, Dataset, Graph};
+use harpsg::graph::{degree_stats, loader, Dataset, Graph, GraphStorageMode};
 use harpsg::runtime::XlaRuntime;
 use harpsg::template::{builtin, Template, BUILTIN_NAMES};
 use harpsg::util::{human_bytes, human_secs};
@@ -237,6 +239,14 @@ fn print_human(session: &Session, r: &JobReport) {
     if r.kernel != "scalar" {
         println!("kernel:          {} combine kernel", r.kernel);
     }
+    if r.graph_storage != "resident" {
+        let max_slice = r.graph_resident_per_rank.iter().copied().max().unwrap_or(0);
+        println!(
+            "graph storage:   {} (largest per-rank slice {})",
+            r.graph_storage,
+            human_bytes(max_slice)
+        );
+    }
     if r.table_storage != "dense" {
         println!(
             "table storage:   {} (dense baseline {}, saved {} at peak)",
@@ -285,6 +295,8 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--exchange",
             "--table-storage",
             "--kernel",
+            "--graph-storage",
+            "--graph-budget-mb",
             "--mem-limit-mb",
         ],
         &["--json", "--progress", "--adaptive"],
@@ -338,6 +350,16 @@ fn cmd_count(args: &[String]) -> Result<()> {
                 "`--kernel`: unknown kernel `{kn}` (scalar|simd|auto)"
             ))
         })?;
+    }
+    if let Some(gs) = flags.get("--graph-storage") {
+        cfg.graph_storage = GraphStorageMode::parse(gs).ok_or_else(|| {
+            HarpsgError::Parse(format!(
+                "`--graph-storage`: unknown storage `{gs}` (resident|mmap|auto)"
+            ))
+        })?;
+    }
+    if let Some(v) = parse_number::<u64>(&flags, "--graph-budget-mb")? {
+        cfg.graph_budget = Some(v << 20);
     }
     // mode/adaptive consistency is validated by the CountJob builder
     cfg.adaptive_group = flags.contains_key("--adaptive");

@@ -1,0 +1,478 @@
+//! Differential + acceptance suite for partition-sharded graph storage
+//! (`graph::shard`, `--graph-storage`):
+//!
+//! 1. **backend invariance** — estimates, colorful counts and samples are
+//!    bit-identical between the resident CSR and the segment-file backend
+//!    across builtin templates, both exchange executors and rank counts
+//!    {1, 2, 5, 6} (the partition, and hence the plan, is identical by
+//!    construction — only where adjacency is read from changes);
+//! 2. **corrupt-segment matrix** — every byte-level corruption of the
+//!    shard header or a segment file fails with its typed
+//!    `GraphLoadError`, in the PR 4 fixture style;
+//! 3. **out-of-core acceptance** — a synthetic R-MAT ≥ 4× larger than the
+//!    configured resident-adjacency budget auto-resolves to `mmap`,
+//!    counts bit-identically to the resident baseline, and every rank's
+//!    graph ledger entry stays within 1.5× of its partition-proportional
+//!    share; the JSON report carries `config.graph_storage` and
+//!    `memory.graph_resident_per_rank`.
+//!
+//! CI's shard-matrix sets `HARPSG_TEST_SHARD=1` to run the full builtin
+//! template sweep (and `HARPSG_TEST_RANKS` as everywhere else); unset,
+//! a trimmed template subset keeps the default run fast.
+
+use harpsg::api::{CountJob, JobReport, PartitionKind, Session, SessionOptions};
+use harpsg::coordinator::{ExchangeExec, ModeSelect};
+use harpsg::graph::rmat::{generate, RmatParams};
+use harpsg::graph::shard::{segment_file_name, shard_to_scratch, SHARD_HEADER_FILE};
+use harpsg::graph::{
+    graph_from_edges, Graph, GraphLoadError, GraphStorageMode, GraphStore, Partition,
+    SegmentedGraph,
+};
+use harpsg::template::BUILTIN_NAMES;
+
+/// Templates under differential test: the full builtin set when CI's
+/// shard-matrix exports `HARPSG_TEST_SHARD=1`, a trimmed subset (leaf,
+/// small tree, medium, 12-vertex) otherwise.
+fn test_templates() -> Vec<&'static str> {
+    if std::env::var("HARPSG_TEST_SHARD").as_deref() == Ok("1") {
+        return BUILTIN_NAMES.to_vec();
+    }
+    vec!["u3-1", "u5-2", "u10-2", "u12-2"]
+}
+
+/// Rank counts, honoring the CI matrix the same way the other
+/// differential suites do.
+fn test_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 1 {
+                return vec![1, n];
+            }
+            if n == 1 {
+                return vec![1];
+            }
+        }
+    }
+    vec![1, 2, 5, 6]
+}
+
+fn session(n: usize, m: u64, skew: u32, seed: u64) -> Session {
+    Session::with_options(
+        generate(&RmatParams::with_skew(n, m, skew, seed)),
+        SessionOptions {
+            seed: 7,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        },
+    )
+    .unwrap()
+}
+
+fn job(tpl: &str, ranks: usize, exec: ExchangeExec, storage: GraphStorageMode) -> CountJob {
+    CountJob::of_builtin(tpl)
+        .unwrap()
+        .ranks(ranks)
+        .mode(ModeSelect::Pipeline)
+        .exchange(exec)
+        .graph_storage(storage)
+        .iterations(1)
+        .seed(7)
+        .workers(2)
+        .build()
+        .unwrap()
+}
+
+/// Tentpole differential leg: for every template × executor × rank count,
+/// the segment-file backend reproduces the resident run bit for bit —
+/// sharding changes where adjacency is read from, never what is counted.
+#[test]
+fn mmap_storage_bit_identical_to_resident_baseline() {
+    let s = session(52, 260, 3, 4242);
+    let ranks = test_rank_counts();
+    for tpl in test_templates() {
+        for &r in &ranks {
+            let base = s
+                .count(&job(tpl, r, ExchangeExec::Sequential, GraphStorageMode::Resident))
+                .unwrap();
+            assert_eq!(base.graph_storage, "resident");
+            for exec in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+                let got = s.count(&job(tpl, r, exec, GraphStorageMode::Mmap)).unwrap();
+                assert_eq!(got.graph_storage, "mmap", "{tpl} P={r} {exec:?}");
+                assert_eq!(
+                    base.estimate.to_bits(),
+                    got.estimate.to_bits(),
+                    "{tpl} P={r} {exec:?}: {} vs resident {}",
+                    got.estimate,
+                    base.estimate
+                );
+                assert_eq!(base.colorful, got.colorful, "{tpl} P={r} {exec:?}");
+                assert_eq!(base.samples, got.samples, "{tpl} P={r} {exec:?}");
+            }
+        }
+    }
+}
+
+/// Satellite regression: more ranks than vertices. The balanced
+/// `Partition::block` fix means surplus ranks are exactly the empty
+/// ones; sharding such a partition writes genuinely empty segments
+/// (header + `offsets = [0]`, no adjacency), and the segment-backed
+/// exchange plan is structurally identical to the resident one.
+#[test]
+fn more_ranks_than_vertices_shards_and_plans() {
+    let g = graph_from_edges(4, &[(0, 1), (1, 2), (2, 3)]);
+    let part = Partition::block(4, 6);
+    for p in 0..4 {
+        assert_eq!(part.locals[p], vec![p as u32]);
+    }
+    for p in 4..6 {
+        assert!(part.locals[p].is_empty());
+    }
+    let seg = shard_to_scratch(&g, &part).unwrap();
+    for p in 4..6 {
+        let c = seg.load_rank(p, &part.locals[p]).unwrap();
+        assert_eq!(c.offsets, vec![0]);
+        assert!(c.adj.is_empty());
+    }
+    let resident = harpsg::coordinator::ExchangePlan::build(&g, part.clone());
+    let sharded = harpsg::coordinator::ExchangePlan::from_segments(&seg, part).unwrap();
+    assert_eq!(resident.part.owner, sharded.part.owner);
+    assert_eq!(resident.req.needs, sharded.req.needs);
+    assert_eq!(resident.mean_remote_rows(), sharded.mean_remote_rows());
+    assert_eq!(resident.graph_storage, "resident");
+    assert_eq!(sharded.graph_storage, "mmap");
+    // empty ranks keep nothing resident beyond their (empty) offsets row
+    for p in 4..6 {
+        assert_eq!(sharded.graph_bytes_per_rank[p], 8);
+    }
+}
+
+/// Fixture graph for the corruption matrix (same shape as the PR 4
+/// loader fixtures): adj rows v0:[1,4] v1:[0,2] v2:[1] v3:[4] v4:[0,3].
+fn fixture() -> (Graph, Partition) {
+    let g = graph_from_edges(5, &[(0, 1), (1, 2), (3, 4), (0, 4)]);
+    let part = Partition::block(5, 1);
+    (g, part)
+}
+
+fn fixture_dir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir()
+        .join("harpsg_shard_tests")
+        .join(format!("{name}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&d);
+    d
+}
+
+fn mutate(path: &std::path::Path, at: usize, bytes: &[u8]) {
+    let mut buf = std::fs::read(path).unwrap();
+    buf[at..at + bytes.len()].copy_from_slice(bytes);
+    std::fs::write(path, &buf).unwrap();
+}
+
+/// Satellite: the corrupt-segment matrix. Every structural invariant of
+/// the shard header fails `SegmentedGraph::open` with its typed
+/// diagnosis, never a panic.
+#[test]
+fn corrupt_shard_header_is_typed() {
+    let (g, part) = fixture();
+    let dir = fixture_dir("hdr");
+    let seg = part.shard_storage(&g, &dir).unwrap();
+    drop(seg);
+    let hp = dir.join(SHARD_HEADER_FILE);
+    let good = std::fs::read(&hp).unwrap();
+    // layout: magic 8 | n 8 | n_edges 8 | n_ranks 8 | tag 8 | per-rank 16
+
+    // a missing header is an I/O error carrying NotFound, not a panic
+    let empty = fixture_dir("hdr-missing");
+    match SegmentedGraph::open(&empty) {
+        Err(GraphLoadError::Io { kind, .. }) => {
+            assert_eq!(kind, std::io::ErrorKind::NotFound)
+        }
+        other => panic!("want Io(NotFound), got {other:?}"),
+    }
+
+    mutate(&hp, 0, b"NOTSHARD");
+    assert!(matches!(
+        SegmentedGraph::open(&dir),
+        Err(GraphLoadError::BadMagic)
+    ));
+    std::fs::write(&hp, &good).unwrap();
+
+    // truncated header: the per-rank table is cut short
+    std::fs::write(&hp, &good[..good.len() - 8]).unwrap();
+    assert!(matches!(
+        SegmentedGraph::open(&dir),
+        Err(GraphLoadError::Truncated { .. })
+    ));
+    std::fs::write(&hp, &good).unwrap();
+
+    // an absurd rank count would imply a header longer than the file
+    mutate(&hp, 24, &u64::MAX.to_le_bytes());
+    assert!(matches!(
+        SegmentedGraph::open(&dir),
+        Err(GraphLoadError::SizeOverflow)
+    ));
+    std::fs::write(&hp, &good).unwrap();
+
+    // segments must cover exactly the declared vertex count
+    mutate(&hp, 40, &99u64.to_le_bytes());
+    assert!(matches!(
+        SegmentedGraph::open(&dir),
+        Err(GraphLoadError::SegmentMismatch { .. })
+    ));
+    std::fs::write(&hp, &good).unwrap();
+
+    // header edge count must match the adjacency total (2 per edge)
+    mutate(&hp, 16, &99u64.to_le_bytes());
+    assert!(matches!(
+        SegmentedGraph::open(&dir),
+        Err(GraphLoadError::EdgeCountMismatch { .. })
+    ));
+    std::fs::write(&hp, &good).unwrap();
+
+    // the untouched baseline still opens
+    assert!(SegmentedGraph::open(&dir).is_ok());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Satellite: the corrupt-segment matrix, segment-file half. Loading a
+/// rank's slice re-runs every `load_binary` invariant segment-aware.
+#[test]
+fn corrupt_segment_file_is_typed() {
+    let (g, part) = fixture();
+    let dir = fixture_dir("seg");
+    let seg = part.shard_storage(&g, &dir).unwrap();
+    let sp = dir.join(segment_file_name(0));
+    let good = std::fs::read(&sp).unwrap();
+    // layout: magic 8 | rank 8 | n_local 8 | adj_len 8 |
+    //         offsets 6·8 (48) | adj 8·4 (32) — adj starts at byte 80
+    let load = |seg: &SegmentedGraph| seg.load_rank(0, &part.locals[0]);
+    assert!(load(&seg).is_ok());
+
+    mutate(&sp, 0, b"NOTASEGM");
+    assert!(matches!(load(&seg), Err(GraphLoadError::BadMagic)));
+    std::fs::write(&sp, &good).unwrap();
+
+    // the segment's own header must agree with the shard header
+    mutate(&sp, 8, &7u64.to_le_bytes());
+    assert!(matches!(
+        load(&seg),
+        Err(GraphLoadError::SegmentMismatch { rank: 0, .. })
+    ));
+    std::fs::write(&sp, &good).unwrap();
+
+    // truncated payload: the last adjacency entry is missing
+    std::fs::write(&sp, &good[..good.len() - 4]).unwrap();
+    match load(&seg) {
+        Err(GraphLoadError::Truncated { expected, actual }) => {
+            assert_eq!(expected as usize, good.len());
+            assert_eq!(actual as usize, good.len() - 4);
+        }
+        other => panic!("want Truncated, got {other:?}"),
+    }
+    std::fs::write(&sp, &good).unwrap();
+
+    // local offsets must start at 0…
+    mutate(&sp, 32, &1u64.to_le_bytes());
+    assert!(matches!(
+        load(&seg),
+        Err(GraphLoadError::NonMonotoneOffsets { index: 0 })
+    ));
+    std::fs::write(&sp, &good).unwrap();
+
+    // …and end exactly at the declared adjacency length
+    mutate(&sp, 32 + 5 * 8, &9u64.to_le_bytes());
+    assert!(matches!(
+        load(&seg),
+        Err(GraphLoadError::SegmentMismatch { rank: 0, .. })
+    ));
+    std::fs::write(&sp, &good).unwrap();
+
+    // adjacency entries must name real vertices
+    mutate(&sp, 80, &99u32.to_le_bytes());
+    match load(&seg) {
+        Err(GraphLoadError::AdjOutOfRange {
+            index,
+            value,
+            n_vertices,
+        }) => {
+            assert_eq!((index, value, n_vertices), (0, 99, 5));
+        }
+        other => panic!("want AdjOutOfRange, got {other:?}"),
+    }
+    std::fs::write(&sp, &good).unwrap();
+
+    // self-loops, duplicates and unsorted rows are diagnosed against the
+    // *global* ids the rows store (adj = [1,4, 0,2, 1, 4, 0,3])
+    mutate(&sp, 80, &0u32.to_le_bytes());
+    assert!(matches!(
+        load(&seg),
+        Err(GraphLoadError::SelfLoop { vertex: 0 })
+    ));
+    std::fs::write(&sp, &good).unwrap();
+
+    mutate(&sp, 84, &1u32.to_le_bytes());
+    assert!(matches!(
+        load(&seg),
+        Err(GraphLoadError::DuplicateNeighbor {
+            vertex: 0,
+            value: 1
+        })
+    ));
+    std::fs::write(&sp, &good).unwrap();
+
+    mutate(&sp, 88, &3u32.to_le_bytes());
+    assert!(matches!(
+        load(&seg),
+        Err(GraphLoadError::UnsortedNeighbors { vertex: 1 })
+    ));
+    std::fs::write(&sp, &good).unwrap();
+
+    // a deleted segment file surfaces as Io(NotFound) at load time
+    std::fs::remove_file(&sp).unwrap();
+    match load(&seg) {
+        Err(GraphLoadError::Io { kind, detail }) => {
+            assert_eq!(kind, std::io::ErrorKind::NotFound);
+            assert!(detail.contains("seg_0.bin"));
+        }
+        other => panic!("want Io(NotFound), got {other:?}"),
+    }
+    std::fs::write(&sp, &good).unwrap();
+    assert!(load(&seg).is_ok());
+    drop(seg);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Scratch shards clean up after themselves: the directory written by
+/// `shard_to_scratch` is gone once the `SegmentedGraph` drops.
+#[test]
+fn scratch_shards_are_removed_on_drop() {
+    let g = generate(&RmatParams::with_skew(60, 200, 3, 9));
+    let part = Partition::random(g.n_vertices(), 3, 7);
+    let seg = shard_to_scratch(&g, &part).unwrap();
+    let dir = seg.dir().to_path_buf();
+    assert!(dir.join(SHARD_HEADER_FILE).exists());
+    assert!(dir.join(segment_file_name(2)).exists());
+    drop(seg);
+    assert!(!dir.exists(), "scratch dir {} must be removed", dir.display());
+}
+
+/// Acceptance (the low-memory CI leg greps for `out_of_core`): a
+/// synthetic R-MAT ≥ 4× the configured resident-adjacency budget
+/// auto-resolves to `mmap`, counts bit-identically to the resident
+/// baseline, and each rank's graph ledger entry stays within 1.5× of its
+/// partition-proportional share of the CSR.
+#[test]
+fn out_of_core_counts_under_budget_bit_identical() {
+    let n = 4096usize;
+    let s = session(n, 16_384, 3, 77);
+    let graph_bytes = s.graph().bytes();
+    // the budget admits at most a quarter of the CSR: the graph is ≥ 4×
+    // larger than what `auto` lets a rank keep resident
+    let budget = graph_bytes / 4;
+    assert!(graph_bytes >= 4 * budget);
+
+    let ranks = 6usize;
+    let mk = |storage: GraphStorageMode| {
+        let mut b = CountJob::of_builtin("u5-2")
+            .unwrap()
+            .ranks(ranks)
+            .mode(ModeSelect::Pipeline)
+            .exchange(ExchangeExec::Threaded)
+            .graph_storage(storage)
+            .iterations(1)
+            .seed(7)
+            .workers(2);
+        if storage == GraphStorageMode::Auto {
+            b = b.graph_budget(budget);
+        }
+        b.build().unwrap()
+    };
+    let base = s.count(&mk(GraphStorageMode::Resident)).unwrap();
+    let auto = s.count(&mk(GraphStorageMode::Auto)).unwrap();
+
+    // auto resolved out-of-core, and nothing about the counts moved
+    assert_eq!(base.graph_storage, "resident");
+    assert_eq!(auto.graph_storage, "mmap");
+    assert_eq!(base.estimate.to_bits(), auto.estimate.to_bits());
+    assert_eq!(base.colorful, auto.colorful);
+    assert_eq!(base.samples, auto.samples);
+
+    // ledger: every rank's graph entry is within 1.5× of its
+    // partition-proportional share (12 B/vertex bookkeeping + its slice
+    // of the CSR), so no rank ever holds anything close to the full graph
+    let plan = s.plan(ranks);
+    assert_eq!(auto.graph_resident_per_rank.len(), ranks);
+    for p in 0..ranks {
+        let n_local = plan.part.n_local(p) as u64;
+        let ideal = 12 * n_local + (graph_bytes * n_local).div_ceil(n as u64);
+        let got = auto.graph_resident_per_rank[p];
+        assert!(
+            (got as f64) <= 1.5 * ideal as f64 + 64.0,
+            "rank {p}: ledger {got} vs proportional bound {ideal}"
+        );
+        assert!(got < graph_bytes, "rank {p} holds the whole CSR");
+        assert!(got > 0, "rank {p} charged nothing");
+    }
+    // the resident baseline charges the historical even share
+    for p in 0..ranks {
+        let want = (plan.part.n_local(p) * 12) as u64 + graph_bytes / ranks as u64;
+        assert_eq!(base.graph_resident_per_rank[p], want);
+    }
+
+    // JSON contract: config.graph_storage + memory.graph_resident_per_rank
+    let parse = |r: &JobReport| harpsg::util::jsonparse::parse(&r.to_json_string()).unwrap();
+    let parsed = parse(&auto);
+    assert_eq!(
+        parsed
+            .get("config")
+            .unwrap()
+            .get("graph_storage")
+            .unwrap()
+            .as_str(),
+        Some("mmap")
+    );
+    let per_rank = parsed
+        .get("memory")
+        .unwrap()
+        .get("graph_resident_per_rank")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(per_rank.len(), ranks);
+    for (p, v) in per_rank.iter().enumerate() {
+        assert_eq!(
+            v.as_f64().unwrap(),
+            auto.graph_resident_per_rank[p] as f64,
+            "rank {p}"
+        );
+    }
+    assert_eq!(
+        parse(&base)
+            .get("config")
+            .unwrap()
+            .get("graph_storage")
+            .unwrap()
+            .as_str(),
+        Some("resident")
+    );
+}
+
+/// The `GraphStore` seam both backends implement: identical topology,
+/// different residency accounting.
+#[test]
+fn graph_store_backends_agree_on_topology() {
+    let g = generate(&RmatParams::with_skew(100, 300, 3, 13));
+    let part = Partition::random(g.n_vertices(), 4, 7);
+    let seg = shard_to_scratch(&g, &part).unwrap();
+    assert_eq!(GraphStore::n_vertices(&g), GraphStore::n_vertices(&seg));
+    assert_eq!(GraphStore::n_edges(&g), GraphStore::n_edges(&seg));
+    assert_eq!(GraphStore::storage_name(&g), "resident");
+    assert_eq!(GraphStore::storage_name(&seg), "mmap");
+    for p in 0..4 {
+        let rv = GraphStore::rank_view(&g, &part, p).unwrap();
+        let sv = GraphStore::rank_view(&seg, &part, p).unwrap();
+        for r in 0..part.n_local(p) {
+            assert_eq!(rv.neighbors(r), sv.neighbors(r), "rank {p} row {r}");
+        }
+    }
+}
