@@ -16,9 +16,16 @@
 //!    continuation lines may intervene; blank lines and completed
 //!    statements may not).
 //! 3. **Fabric types stay behind the executors.** Only `comm/` (the
-//!    fabrics themselves) and `coordinator/` (the executors and the
-//!    distributed driver) may name a `Fabric` type; everything else must
-//!    go through the executor layer so delivery stays canonical.
+//!    fabric trait and both transports — the in-process mailbox and the
+//!    process-mode socket mesh) and `coordinator/` (the executors, the
+//!    distributed driver, and the `procmode` launcher/worker entry
+//!    points) may name a `Fabric` type. Everything else — including the
+//!    `harpsg-rank` worker binary, which funnels through
+//!    `coordinator::procmode::rank_main` — must go through the executor
+//!    layer so delivery stays canonical on every transport. (The matcher
+//!    is an identifier-*suffix* check: `FabricKind`, the mode-matrix
+//!    config enum, continues past the needle and is deliberately exempt —
+//!    the CLI and config layers select a fabric without touching one.)
 //!
 //! The matcher works on comment-stripped lines, so prose mentions of the
 //! forbidden names are fine. The needles the checker searches for are
@@ -385,13 +392,27 @@ mod tests {
 
     #[test]
     fn fabric_outside_comm_and_coordinator_is_flagged() {
-        let ty = ["Threaded", "Fab", "ric"].concat();
-        let src = format!("let f = {ty}::connect(2, 1);\n");
-        let v = check_source("colorcount/x.rs", &src);
-        assert_eq!(v.len(), 1, "{}", render(&v));
-        assert_eq!(v[0].rule, RULE_FABRIC);
-        assert!(check_source("comm/x.rs", &src).is_empty());
-        assert!(check_source("coordinator/x.rs", &src).is_empty());
+        for prefix in ["Threaded", "Socket"] {
+            let ty = [prefix, "Fab", "ric"].concat();
+            let src = format!("let f = {ty}::connect(2, 1);\n");
+            let v = check_source("colorcount/x.rs", &src);
+            assert_eq!(v.len(), 1, "{}", render(&v));
+            assert_eq!(v[0].rule, RULE_FABRIC);
+            assert!(check_source("comm/x.rs", &src).is_empty());
+            assert!(check_source("coordinator/x.rs", &src).is_empty());
+        }
+        // identifiers continuing past the needle are exempt: the CLI's
+        // `FabricKind` selects a transport without naming one
+        let kind = ["Fab", "ric", "Kind"].concat();
+        let src = format!("let k = {kind}::parse(s);\n");
+        assert!(check_source("main.rs", &src).is_empty());
+        // the worker binary itself must stay clean of transport types
+        let root = PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+            .join("src")
+            .join("bin")
+            .join("harpsg_rank.rs");
+        let src = std::fs::read_to_string(&root).expect("read worker binary source");
+        assert!(check_source("bin/harpsg_rank.rs", &src).is_empty());
     }
 
     #[test]

@@ -29,6 +29,9 @@ pub enum HarpsgError {
     EngineUnavailable(String),
     /// an I/O failure, annotated with the path involved
     Io(String),
+    /// a rank transport failure (peer disconnect, timeout, bad frame),
+    /// carrying the full `comm::FabricError` context as text
+    Transport(String),
 }
 
 impl fmt::Display for HarpsgError {
@@ -46,11 +49,18 @@ impl fmt::Display for HarpsgError {
             HarpsgError::Template(m) => write!(f, "template error: {m}"),
             HarpsgError::EngineUnavailable(m) => write!(f, "engine unavailable: {m}"),
             HarpsgError::Io(m) => write!(f, "io error: {m}"),
+            HarpsgError::Transport(m) => write!(f, "transport error: {m}"),
         }
     }
 }
 
 impl std::error::Error for HarpsgError {}
+
+impl From<crate::comm::FabricError> for HarpsgError {
+    fn from(e: crate::comm::FabricError) -> Self {
+        HarpsgError::Transport(e.to_string())
+    }
+}
 
 #[cfg(test)]
 mod tests {
@@ -63,6 +73,18 @@ mod tests {
         assert!(e.to_string().contains("adaptive-lb"));
         let e = HarpsgError::DuplicateFlag("--ranks".into());
         assert!(e.to_string().contains("--ranks"));
+    }
+
+    #[test]
+    fn transport_errors_keep_fabric_context() {
+        let fe = crate::comm::FabricError::timeout(3, 2, "1 of 4 packet(s)").with_peer(1);
+        let e: HarpsgError = fe.into();
+        let s = e.to_string();
+        assert!(s.starts_with("transport error:"), "{s}");
+        assert!(s.contains("rank 3"), "{s}");
+        assert!(s.contains("step 2"), "{s}");
+        assert!(s.contains("peer 1"), "{s}");
+        assert!(s.contains("TimedOut"), "{s}");
     }
 
     #[test]

@@ -5,7 +5,9 @@
 use super::error::HarpsgError;
 use crate::colorcount::{KernelMode, StorageMode};
 use crate::comm::{AdaptivePolicy, HockneyParams};
-use crate::coordinator::{validate_group_size, EngineKind, ExchangeExec, ModeSelect, RunConfig};
+use crate::coordinator::{
+    validate_group_size, EngineKind, ExchangeExec, FabricKind, ModeSelect, RunConfig,
+};
 use crate::graph::GraphStorageMode;
 use crate::template::{builtin, Template};
 
@@ -167,6 +169,19 @@ impl CountJobBuilder {
         self
     }
 
+    /// Rank transport (the CLI's `--fabric`): `Threaded` (simulated
+    /// ranks inside one process, default) or `Socket` (one OS process
+    /// per rank over TCP/Unix sockets). Socket jobs run through the
+    /// `coordinator::procmode` launcher — `Session::count` rejects them
+    /// with a typed error pointing there — and require the native
+    /// engine (validated in `build`). Estimates are bit-identical
+    /// either way; the report's `link` section carries the measured
+    /// per-rank α/β in socket mode.
+    pub fn fabric(mut self, f: FabricKind) -> Self {
+        self.cfg.fabric = f;
+        self
+    }
+
     /// Alg-4 neighbor-list task size — only meaningful for
     /// `ModeSelect::AdaptiveLb` (validated in `build`).
     pub fn task_size(mut self, s: u32) -> Self {
@@ -270,6 +285,13 @@ impl CountJobBuilder {
                 "adaptive group selection only applies to adaptive/adaptive-lb; mode is {}",
                 cfg.mode.flag()
             )));
+        }
+        if cfg.fabric == FabricKind::Socket && cfg.engine == EngineKind::Xla {
+            return Err(HarpsgError::InvalidJob(
+                "the socket fabric requires the native engine (rank processes \
+                 cannot share an XLA runtime)"
+                    .into(),
+            ));
         }
         if let Some(g) = self.group_size {
             if cfg.adaptive_group {
@@ -483,6 +505,25 @@ mod tests {
             .is_err());
         // off by default
         assert!(!base().build().unwrap().config().adaptive_group);
+    }
+
+    #[test]
+    fn fabric_knob() {
+        assert_eq!(
+            base().build().unwrap().config().fabric,
+            FabricKind::Threaded,
+            "the in-process fabric stays the default"
+        );
+        let job = base().fabric(FabricKind::Socket).build().unwrap();
+        assert_eq!(job.config().fabric, FabricKind::Socket);
+        // rank processes cannot share an XLA runtime
+        let err = base()
+            .fabric(FabricKind::Socket)
+            .engine(EngineKind::Xla)
+            .build()
+            .unwrap_err();
+        assert!(matches!(err, HarpsgError::InvalidJob(_)));
+        assert!(err.to_string().contains("native engine"), "{err}");
     }
 
     #[test]

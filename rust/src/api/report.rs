@@ -5,7 +5,9 @@
 //! `util::Json` writer) and CSV (via `metrics::Series`).
 
 use crate::colorcount::ExecStats;
-use crate::coordinator::{CommDecision, ModelTime, RunResult, StorageDecision, ThreadStats};
+use crate::coordinator::{
+    CommDecision, ModelTime, RankLink, RunResult, StorageDecision, ThreadStats,
+};
 use crate::graph::Graph;
 use crate::metrics::Series;
 use crate::pipeline::MeasuredPipeline;
@@ -38,6 +40,12 @@ pub struct JobReport {
     /// resolved graph-storage backend ("resident" | "mmap") — the run's
     /// actual decision, `auto` never survives to the report
     pub graph_storage: String,
+    /// rank transport the job selected ("threaded" | "socket")
+    pub fabric: String,
+    /// measured per-rank link parameters — the OLS fit of real wall-clock
+    /// send timings against the Hockney model (socket fabric only; empty
+    /// when the in-process mailbox carried the exchange)
+    pub link: Vec<RankLink>,
     /// graph bytes each rank kept resident, as charged to the ledger
     pub graph_resident_per_rank: Vec<u64>,
     /// model-driven per-subtemplate group selection was enabled
@@ -87,7 +95,11 @@ pub struct JobReport {
 }
 
 impl JobReport {
-    pub(crate) fn from_run(
+    /// Assemble a report from a finished run. Public (not just
+    /// crate-internal) because the process-mode launcher path composes
+    /// reports outside the `Session` — from the merged [`RunResult`] of
+    /// `coordinator::procmode::launch`.
+    pub fn from_run(
         job: &CountJob,
         g: &Graph,
         r: RunResult,
@@ -106,6 +118,8 @@ impl JobReport {
             table_storage: job.cfg.table_storage.name().to_string(),
             kernel: job.cfg.kernel.name().to_string(),
             graph_storage: r.graph_storage,
+            fabric: job.cfg.fabric.name().to_string(),
+            link: r.link,
             graph_resident_per_rank: r.graph_resident_per_rank,
             adaptive: job.cfg.adaptive_group,
             n_ranks: job.cfg.n_ranks,
@@ -185,6 +199,7 @@ impl JobReport {
                     ("table_storage".into(), Json::Str(self.table_storage.clone())),
                     ("kernel".into(), Json::Str(self.kernel.clone())),
                     ("graph_storage".into(), Json::Str(self.graph_storage.clone())),
+                    ("fabric".into(), Json::Str(self.fabric.clone())),
                     ("adaptive".into(), Json::Bool(self.adaptive)),
                     ("ranks".into(), Json::Num(self.n_ranks as f64)),
                     ("threads".into(), Json::Num(self.n_threads as f64)),
@@ -424,6 +439,26 @@ impl JobReport {
                     ),
                     ("oom".into(), Json::Bool(self.oom)),
                 ]),
+            ),
+            (
+                // measured link parameters per rank process: the OLS fit
+                // of real wall-clock send timings (α seconds, β
+                // seconds/byte) the Hockney calibration loop consumed.
+                // Empty for the in-process fabric, which has no wire.
+                "link".into(),
+                Json::Arr(
+                    self.link
+                        .iter()
+                        .map(|l| {
+                            Json::Obj(vec![
+                                ("rank".into(), Json::Num(l.rank as f64)),
+                                ("alpha_s".into(), Json::Num(l.alpha_s)),
+                                ("beta_s_per_byte".into(), Json::Num(l.beta_s_per_byte)),
+                                ("samples".into(), Json::Num(l.samples as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
             ),
             (
                 "time".into(),

@@ -7,7 +7,7 @@ use super::error::HarpsgError;
 use super::job::CountJob;
 use super::progress::Progress;
 use super::report::JobReport;
-use crate::coordinator::{DistributedRunner, EngineKind, ExchangePlan, RunConfig};
+use crate::coordinator::{DistributedRunner, EngineKind, ExchangePlan, FabricKind, RunConfig};
 use crate::graph::shard::shard_to_scratch;
 use crate::graph::{Graph, Partition};
 use crate::runtime::{XlaCombine, XlaRuntime};
@@ -191,6 +191,16 @@ impl Session {
         job: &CountJob,
         progress: Option<Arc<dyn Progress>>,
     ) -> Result<JobReport, HarpsgError> {
+        if job.cfg.fabric == FabricKind::Socket {
+            // a session owns exactly one process; rank processes are the
+            // launcher's job (`harpsg count --fabric socket` routes there)
+            return Err(HarpsgError::InvalidJob(
+                "socket-fabric jobs run through the rank-process launcher \
+                 (coordinator::procmode::launch / `harpsg count --fabric socket`), \
+                 not Session::count"
+                    .into(),
+            ));
+        }
         if job.cfg.engine == EngineKind::Xla && self.xla.is_none() {
             return Err(HarpsgError::EngineUnavailable(
                 "job selects the XLA engine but the session was opened without `load_xla`".into(),
@@ -264,6 +274,20 @@ mod tests {
             s.count(&job),
             Err(HarpsgError::EngineUnavailable(_))
         ));
+    }
+
+    #[test]
+    fn socket_jobs_are_routed_to_the_launcher() {
+        let s = Session::new(graph());
+        let job = CountJob::of_builtin("u3-1")
+            .unwrap()
+            .ranks(3)
+            .fabric(FabricKind::Socket)
+            .build()
+            .unwrap();
+        let err = s.count(&job).unwrap_err();
+        assert!(matches!(err, HarpsgError::InvalidJob(_)));
+        assert!(err.to_string().contains("launcher"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,15 @@
+//! `harpsg-rank` — one rank of a process-mode count. Not meant to be run
+//! by hand: the launcher (`harpsg count --fabric socket`, or
+//! `coordinator::procmode::launch` from the API) spawns one of these per
+//! rank, feeds the canonical run config on stdin, collects the listen
+//! address, broadcasts the peer list, and parses the result block this
+//! process prints on stdout. See `coordinator/procmode.rs` for the
+//! protocol.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = harpsg::coordinator::rank_main(&args) {
+        eprintln!("harpsg-rank: {e}");
+        std::process::exit(1);
+    }
+}

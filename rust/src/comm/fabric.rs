@@ -1,0 +1,436 @@
+//! The fabric seam: the [`RankFabric`] trait both exchange executors and
+//! the distributed driver are parameterized over, plus the pieces every
+//! implementation shares — the per-`(rank, step)` byte/message ledger
+//! ([`StepLedger`]), the typed transport error ([`FabricError`]), and the
+//! measured link parameters ([`LinkMeasurement`]) a real transport fits
+//! from wall-clock send timings.
+//!
+//! Two implementations exist: the in-process
+//! [`ThreadedFabric`](super::ThreadedFabric) (the default — rank threads
+//! in one address space, modeled clocks) and the
+//! [`SocketFabric`](super::SocketFabric) (rank *processes* framing
+//! packets over TCP or Unix-domain sockets, wall clocks). Both drain in
+//! the canonical `(step, sender, seq)` order, so the fold a receiver
+//! performs is bit-identical whichever transport carried the rows.
+
+use super::packet::Packet;
+use crate::coordinator::memory::{MemClass, SharedAccountant};
+use crate::util::shim::AtomicU64;
+use std::fmt;
+use std::io;
+
+/// A typed transport failure: which local rank observed it, at which
+/// exchange step, about which peer, and the underlying I/O class. This is
+/// what a disconnected or timed-out peer surfaces instead of a hung fold.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FabricError {
+    /// the local rank that observed the failure
+    pub rank: usize,
+    /// the exchange step being sent/drained, when one was in progress
+    pub step: Option<usize>,
+    /// the peer rank involved, when known
+    pub peer: Option<usize>,
+    /// the I/O failure class (`TimedOut`, `ConnectionReset`, …)
+    pub kind: io::ErrorKind,
+    /// human-readable context (addresses, byte counts, digests)
+    pub detail: String,
+}
+
+impl FabricError {
+    pub fn new(rank: usize, kind: io::ErrorKind, detail: impl Into<String>) -> Self {
+        FabricError {
+            rank,
+            step: None,
+            peer: None,
+            kind,
+            detail: detail.into(),
+        }
+    }
+
+    pub fn at_step(mut self, step: usize) -> Self {
+        self.step = Some(step);
+        self
+    }
+
+    pub fn with_peer(mut self, peer: usize) -> Self {
+        self.peer = Some(peer);
+        self
+    }
+
+    /// A receive that outwaited the configured window.
+    pub fn timeout(rank: usize, step: usize, detail: impl Into<String>) -> Self {
+        FabricError::new(rank, io::ErrorKind::TimedOut, detail).at_step(step)
+    }
+}
+
+impl fmt::Display for FabricError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "rank {}", self.rank)?;
+        if let Some(s) = self.step {
+            write!(f, " step {s}")?;
+        }
+        if let Some(p) = self.peer {
+            write!(f, " peer {p}")?;
+        }
+        write!(f, ": {:?}: {}", self.kind, self.detail)
+    }
+}
+
+impl std::error::Error for FabricError {}
+
+pub type FabricResult<T> = Result<T, FabricError>;
+
+/// Measured point-to-point link parameters, least-squares fitted from
+/// `(bytes, seconds)` samples of real blocking sends — the wall-clock
+/// counterpart of the Hockney `(α, β)` the model otherwise simulates.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LinkMeasurement {
+    /// fitted per-message latency, seconds
+    pub alpha_s: f64,
+    /// fitted per-byte transfer time, seconds/byte
+    pub beta_s_per_byte: f64,
+    /// sends the fit was computed from
+    pub samples: usize,
+}
+
+impl LinkMeasurement {
+    /// Ordinary least squares of `secs = α + β·bytes` over the samples.
+    /// Degenerate inputs (fewer than two samples, or all sends the same
+    /// size) pin β at 0 and report the mean latency as α. Fitted values
+    /// are clamped at 0 — noise can drive either coefficient negative.
+    pub fn fit(samples: &[(u64, f64)]) -> Option<LinkMeasurement> {
+        if samples.is_empty() {
+            return None;
+        }
+        let n = samples.len() as f64;
+        let mean_x = samples.iter().map(|&(b, _)| b as f64).sum::<f64>() / n;
+        let mean_y = samples.iter().map(|&(_, s)| s).sum::<f64>() / n;
+        let mut sxx = 0.0;
+        let mut sxy = 0.0;
+        for &(b, s) in samples {
+            let dx = b as f64 - mean_x;
+            sxx += dx * dx;
+            sxy += dx * (s - mean_y);
+        }
+        let (alpha, beta) = if sxx > 0.0 && samples.len() >= 2 {
+            let beta = sxy / sxx;
+            (mean_y - beta * mean_x, beta)
+        } else {
+            (mean_y, 0.0)
+        };
+        Some(LinkMeasurement {
+            alpha_s: alpha.max(0.0),
+            beta_s_per_byte: beta.max(0.0),
+            samples: samples.len(),
+        })
+    }
+
+    /// Predicted seconds for one message of `bytes` under the fit.
+    pub fn step(&self, bytes: u64) -> f64 {
+        self.alpha_s + self.beta_s_per_byte * bytes as f64
+    }
+}
+
+/// The per-`(rank, step)` accounting every [`RankFabric`] shares: bytes
+/// and messages sent, bytes drained, per-(sender, step) send sequence
+/// numbers, the one-shot drain tracker, and the in-flight payload
+/// high-water accountant. Extracting it means the modeled-vs-measured
+/// byte tests (`modeled_step_bytes_match_threaded_fabric` and friends)
+/// read the same counters whichever transport ran, and the hot send path
+/// is two `fetch_add`s on preallocated grids — no per-packet allocation
+/// or cloned accounting state.
+#[derive(Debug)]
+pub struct StepLedger {
+    n_ranks: usize,
+    max_steps: usize,
+    /// steps of the exchange currently in progress
+    n_steps: AtomicU64,
+    /// `[rank][step]` bytes sent
+    sent_bytes: Vec<Vec<AtomicU64>>,
+    /// `[rank][step]` messages sent
+    sent_msgs: Vec<Vec<AtomicU64>>,
+    /// `[rank][step]` bytes received (drained)
+    recv_bytes: Vec<Vec<AtomicU64>>,
+    /// `[sender][step]` next send sequence number
+    seqs: Vec<Vec<AtomicU64>>,
+    /// `[rank][step]` drain count — a drain is a one-shot collective
+    drained: Vec<Vec<AtomicU64>>,
+    /// payload bytes currently parked in inboxes (sent/arrived, not yet
+    /// drained); the peak is the pipeline's in-flight high-water mark
+    in_flight: SharedAccountant,
+}
+
+impl StepLedger {
+    pub fn new(n_ranks: usize, max_steps: usize) -> Self {
+        fn counters(n_ranks: usize, n_steps: usize) -> Vec<Vec<AtomicU64>> {
+            (0..n_ranks)
+                .map(|_| (0..n_steps).map(|_| AtomicU64::new(0)).collect())
+                .collect()
+        }
+        StepLedger {
+            n_ranks,
+            max_steps,
+            n_steps: AtomicU64::new(max_steps as u64),
+            sent_bytes: counters(n_ranks, max_steps),
+            sent_msgs: counters(n_ranks, max_steps),
+            recv_bytes: counters(n_ranks, max_steps),
+            seqs: counters(n_ranks, max_steps),
+            drained: counters(n_ranks, max_steps),
+            in_flight: SharedAccountant::new(),
+        }
+    }
+
+    pub fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    /// Steps of the exchange currently in progress.
+    pub fn n_steps(&self) -> usize {
+        self.n_steps.load() as usize
+    }
+
+    /// Start a new exchange of `n_steps` steps: zero the per-step grids
+    /// and the seq/drain trackers. The in-flight accountant is *not*
+    /// reset — its high-water mark spans the fabric's whole life, and a
+    /// clean previous exchange left its current count at zero anyway.
+    pub fn begin_exchange(&self, n_steps: usize) {
+        assert!(
+            n_steps <= self.max_steps,
+            "exchange of {n_steps} steps exceeds the ledger's {} step capacity",
+            self.max_steps
+        );
+        self.n_steps.store(n_steps as u64);
+        for grid in [
+            &self.sent_bytes,
+            &self.sent_msgs,
+            &self.recv_bytes,
+            &self.seqs,
+            &self.drained,
+        ] {
+            for row in grid.iter() {
+                for c in row.iter() {
+                    c.store(0);
+                }
+            }
+        }
+    }
+
+    /// Account one send; returns the packet's per-(sender, step) sequence
+    /// number. Panics on out-of-range ranks/steps (an executor bug).
+    pub fn note_send(&self, from: usize, to: usize, step: usize, bytes: u64) -> u64 {
+        assert!(to < self.n_ranks, "receiver {to} out of range");
+        assert!(from < self.n_ranks, "sender {from} out of range");
+        assert!(
+            step < self.n_steps(),
+            "step {step} out of range ({})",
+            self.n_steps()
+        );
+        self.sent_bytes[from][step].fetch_add(bytes);
+        self.sent_msgs[from][step].fetch_add(1);
+        self.seqs[from][step].fetch_add(1)
+    }
+
+    /// Account one drained step's bytes on the receive side.
+    pub fn note_recv(&self, p: usize, step: usize, bytes: u64) {
+        self.recv_bytes[p][step].fetch_add(bytes);
+    }
+
+    /// Mark `(p, step)` drained; panics on a double drain — the second
+    /// caller would block forever or steal late packets.
+    pub fn mark_drained(&self, p: usize, step: usize) {
+        assert!(p < self.n_ranks, "receiver {p} out of range");
+        assert!(
+            step < self.n_steps(),
+            "step {step} out of range ({})",
+            self.n_steps()
+        );
+        let drains = self.drained[p][step].fetch_add(1);
+        assert!(drains == 0, "rank {p}: double drain of step {step}");
+    }
+
+    /// Charge arrived-but-not-drained payload bytes.
+    pub fn park(&self, bytes: u64) {
+        self.in_flight.alloc(MemClass::RecvBuffer, bytes);
+    }
+
+    /// Release drained payload bytes.
+    pub fn unpark(&self, bytes: u64) {
+        self.in_flight.free(MemClass::RecvBuffer, bytes);
+    }
+
+    /// Bytes rank `p` sent at `step`.
+    pub fn sent_bytes(&self, p: usize, step: usize) -> u64 {
+        self.sent_bytes[p][step].load()
+    }
+
+    /// Messages rank `p` sent at `step`.
+    pub fn sent_msgs(&self, p: usize, step: usize) -> u64 {
+        self.sent_msgs[p][step].load()
+    }
+
+    /// Bytes rank `p` received (drained) at `step`.
+    pub fn recv_bytes(&self, p: usize, step: usize) -> u64 {
+        self.recv_bytes[p][step].load()
+    }
+
+    /// Total bytes rank `p` sent across the current exchange's steps.
+    pub fn total_sent_bytes(&self, p: usize) -> u64 {
+        (0..self.n_steps()).map(|w| self.sent_bytes(p, w)).sum()
+    }
+
+    /// Total messages rank `p` sent across the current exchange's steps.
+    pub fn total_sent_msgs(&self, p: usize) -> u64 {
+        (0..self.n_steps()).map(|w| self.sent_msgs(p, w)).sum()
+    }
+
+    /// Payload bytes currently in flight (sent, not yet drained).
+    pub fn in_flight_bytes(&self) -> u64 {
+        self.in_flight.current(MemClass::RecvBuffer)
+    }
+
+    /// High-water mark of in-flight payload bytes over the ledger's life.
+    pub fn in_flight_peak(&self) -> u64 {
+        self.in_flight.peak()
+    }
+}
+
+/// The transport seam of the exchange: send packets between ranks and
+/// drain them per step in the canonical `(sender, seq)` order, with the
+/// shared [`StepLedger`] accounting. The executors and the distributed
+/// driver only speak this trait; whether the peer ranks are threads in
+/// this process or processes across a socket is an implementation detail.
+///
+/// Contract:
+/// * [`begin_exchange`](Self::begin_exchange) opens a combine of
+///   `n_steps` steps; every rank participating in the run calls it in the
+///   same order (the control flow is deterministic and replicated).
+/// * [`send`](Self::send) is callable from any rank thread; the packet's
+///   `offset` field is its exchange step.
+/// * [`recv_step`](Self::recv_step) blocks until the step's full packet
+///   set arrived, then returns it sorted by `(sender, seq)` — the one
+///   delivery order every transport must reproduce, because the fold
+///   order determines the f32 sums bit-for-bit.
+/// * Timeouts and peer failures surface as [`FabricError`]; a double
+///   drain stays a panic (an executor bug, not a transport condition).
+pub trait RankFabric: Sync {
+    /// Ranks on the fabric.
+    fn n_ranks(&self) -> usize;
+
+    /// Start a new exchange of `n_steps` steps (resets the per-step
+    /// ledger and sequence/drain trackers).
+    fn begin_exchange(&self, n_steps: usize);
+
+    /// Send a packet; its `offset` field is the exchange step.
+    fn send(&self, p: Packet) -> FabricResult<()>;
+
+    /// Block until `n_expected` packets of `step` arrived for rank `p`,
+    /// then return them sorted by `(sender, seq)`.
+    fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> FabricResult<Vec<Packet>>;
+
+    /// The shared per-(rank, step) accounting.
+    fn ledger(&self) -> &StepLedger;
+
+    /// Packets currently waiting for rank `p` (any step of the current
+    /// exchange).
+    fn pending(&self, p: usize) -> usize;
+
+    /// Assert no packets of the current exchange are stranded.
+    fn assert_empty(&self);
+
+    /// Wall-clock link parameters fitted from real sends, when the
+    /// transport has any (`None` for in-process fabrics).
+    fn measured_link(&self) -> Option<LinkMeasurement> {
+        None
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fabric_error_display_carries_context() {
+        let e = FabricError::timeout(3, 2, "1 of 2 packets").with_peer(1);
+        let s = e.to_string();
+        assert!(s.contains("rank 3"), "{s}");
+        assert!(s.contains("step 2"), "{s}");
+        assert!(s.contains("peer 1"), "{s}");
+        assert!(s.contains("TimedOut"), "{s}");
+        assert_eq!(e.kind, io::ErrorKind::TimedOut);
+    }
+
+    #[test]
+    fn link_fit_recovers_alpha_beta() {
+        // exact line: secs = 1e-4 + 2e-9 * bytes
+        let samples: Vec<(u64, f64)> = [1_000u64, 10_000, 100_000, 500_000]
+            .iter()
+            .map(|&b| (b, 1e-4 + 2e-9 * b as f64))
+            .collect();
+        let m = LinkMeasurement::fit(&samples).unwrap();
+        assert!((m.alpha_s - 1e-4).abs() < 1e-10, "alpha {}", m.alpha_s);
+        assert!(
+            (m.beta_s_per_byte - 2e-9).abs() < 1e-14,
+            "beta {}",
+            m.beta_s_per_byte
+        );
+        assert_eq!(m.samples, 4);
+        assert!((m.step(1_000_000) - (1e-4 + 2e-3)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn link_fit_degenerate_cases() {
+        assert!(LinkMeasurement::fit(&[]).is_none());
+        // one sample: mean latency, zero beta
+        let m = LinkMeasurement::fit(&[(4096, 3e-4)]).unwrap();
+        assert_eq!(m.beta_s_per_byte, 0.0);
+        assert!((m.alpha_s - 3e-4).abs() < 1e-12);
+        // all sends the same size: no slope information
+        let m = LinkMeasurement::fit(&[(100, 1e-4), (100, 3e-4)]).unwrap();
+        assert_eq!(m.beta_s_per_byte, 0.0);
+        assert!((m.alpha_s - 2e-4).abs() < 1e-12);
+        // noise can fit a negative slope; it must clamp at zero
+        let m = LinkMeasurement::fit(&[(100, 5e-4), (100_000, 1e-4)]).unwrap();
+        assert_eq!(m.beta_s_per_byte, 0.0);
+    }
+
+    #[test]
+    fn ledger_accounts_and_resets_per_exchange() {
+        let l = StepLedger::new(3, 2);
+        assert_eq!(l.note_send(0, 1, 0, 100), 0);
+        assert_eq!(l.note_send(0, 2, 0, 50), 1, "seq advances per (sender, step)");
+        assert_eq!(l.note_send(1, 0, 1, 10), 0);
+        assert_eq!(l.sent_bytes(0, 0), 150);
+        assert_eq!(l.sent_msgs(0, 0), 2);
+        assert_eq!(l.total_sent_bytes(0), 150);
+        l.note_recv(1, 0, 100);
+        assert_eq!(l.recv_bytes(1, 0), 100);
+        l.park(100);
+        assert_eq!(l.in_flight_bytes(), 100);
+        l.unpark(100);
+        assert_eq!(l.in_flight_bytes(), 0);
+        assert_eq!(l.in_flight_peak(), 100);
+        l.mark_drained(1, 0);
+        // a new exchange zeros counters and the drain tracker, keeps peak
+        l.begin_exchange(1);
+        assert_eq!(l.n_steps(), 1);
+        assert_eq!(l.sent_bytes(0, 0), 0);
+        assert_eq!(l.total_sent_msgs(0), 0);
+        l.mark_drained(1, 0); // would panic had the tracker survived
+        assert_eq!(l.in_flight_peak(), 100);
+    }
+
+    #[test]
+    #[should_panic(expected = "double drain")]
+    fn ledger_detects_double_drain() {
+        let l = StepLedger::new(2, 1);
+        l.mark_drained(0, 0);
+        l.mark_drained(0, 0);
+    }
+
+    #[test]
+    #[should_panic(expected = "step capacity")]
+    fn ledger_rejects_oversized_exchange() {
+        let l = StepLedger::new(2, 2);
+        l.begin_exchange(3);
+    }
+}

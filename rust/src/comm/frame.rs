@@ -1,0 +1,621 @@
+//! The on-wire frame codec of the socket fabric.
+//!
+//! A frame is a fixed 12-byte little-endian header followed by a typed
+//! body:
+//!
+//! ```text
+//! header:    magic u32 | version u16 | kind u8 | enc u8 | body_len u32
+//! handshake: config_digest u64 | rank u32 | n_ranks u32
+//! packet:    epoch u32 | meta u32 | subtemplate u32 | n_sets u32 | rows
+//!   rows (enc 0, dense):  f32 × (body_len − 16)/4
+//!   rows (enc 1, sparse): n_offsets u32 | n_entries u32
+//!                         | offsets u32 × n_offsets
+//!                         | (set_rank u32, count f32) × n_entries
+//! bye:       (empty)
+//! ```
+//!
+//! The row payload reuses `encode_rows`' wire layout exactly — the dense
+//! and CSR encodings whose byte counts the adaptive model, the fabric
+//! ledger and `Packet::bytes()` already share — so shipping a packet
+//! over a socket costs the bytes the model says it does, plus the fixed
+//! framing overhead (`FRAME_HEADER_BYTES` + the epoch word).
+//!
+//! Every decode failure is a typed [`FrameError`]; a stale binary, a
+//! truncated stream or stray bytes on the port surface as `BadVersion`,
+//! `Truncated` or `BadMagic` instead of garbage rows.
+
+use super::packet::Packet;
+use crate::colorcount::storage::RowsPayload;
+use std::fmt;
+
+/// `HSGF` in little-endian byte order.
+pub const MAGIC: u32 = u32::from_le_bytes(*b"HSGF");
+
+/// Bumped whenever the header or a body layout changes; peers with a
+/// different version are rejected at handshake (and on every frame).
+pub const WIRE_VERSION: u16 = 1;
+
+/// Fixed header size preceding every body.
+pub const FRAME_HEADER_BYTES: usize = 12;
+
+/// Upper bound on `body_len`: anything larger is a corrupt or hostile
+/// length prefix, rejected before any allocation happens.
+pub const MAX_FRAME_BYTES: u32 = 1 << 30;
+
+/// Frame kinds on the wire.
+pub const KIND_HANDSHAKE: u8 = 0;
+pub const KIND_PACKET: u8 = 1;
+pub const KIND_BYE: u8 = 2;
+
+const ENC_DENSE: u8 = 0;
+const ENC_SPARSE: u8 = 1;
+
+const HANDSHAKE_BODY_BYTES: usize = 16;
+const PACKET_PREFIX_BYTES: usize = 16;
+
+/// Every way a frame can fail to decode.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FrameError {
+    /// fewer bytes than the header/body announced
+    Truncated { need: usize, got: usize },
+    /// the stream does not start with [`MAGIC`]
+    BadMagic(u32),
+    /// a peer speaking a different wire version
+    BadVersion { got: u16, want: u16 },
+    /// an unknown frame kind byte
+    BadKind(u8),
+    /// an unknown payload-encoding byte
+    BadEnc(u8),
+    /// a length prefix beyond [`MAX_FRAME_BYTES`]
+    Oversized { len: u32, max: u32 },
+    /// internally inconsistent body (counts don't match the length)
+    BadPayload(String),
+}
+
+impl fmt::Display for FrameError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            FrameError::Truncated { need, got } => {
+                write!(f, "truncated frame: need {need} bytes, got {got}")
+            }
+            FrameError::BadMagic(m) => write!(f, "bad magic {m:#010x} (want {MAGIC:#010x})"),
+            FrameError::BadVersion { got, want } => {
+                write!(f, "wire version {got} (want {want}); stale peer binary?")
+            }
+            FrameError::BadKind(k) => write!(f, "unknown frame kind {k}"),
+            FrameError::BadEnc(e) => write!(f, "unknown payload encoding {e}"),
+            FrameError::Oversized { len, max } => {
+                write!(f, "frame body of {len} bytes exceeds the {max}-byte bound")
+            }
+            FrameError::BadPayload(m) => write!(f, "bad frame payload: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for FrameError {}
+
+/// A decoded frame header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub kind: u8,
+    pub enc: u8,
+    pub body_len: u32,
+}
+
+/// A decoded frame.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Frame {
+    /// the connection opener: who is calling, and for which run
+    Handshake(Handshake),
+    /// one exchange packet, tagged with its combine epoch
+    Packet { epoch: u32, pkt: Packet },
+    /// orderly goodbye — distinguishes a clean close from a peer dying
+    /// mid-exchange
+    Bye,
+}
+
+/// The first frame on every connection. `config_digest` fingerprints the
+/// run (template, dataset, seed, rank count, schedule-relevant config) so
+/// a peer from a different run — or a stale binary with a different wire
+/// version — is rejected before any packet is decoded.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Handshake {
+    pub config_digest: u64,
+    pub rank: u32,
+    pub n_ranks: u32,
+}
+
+/// FNV-1a over a canonical config string — the run fingerprint carried in
+/// every handshake (the same construction as the graph shards'
+/// `partition_tag`).
+pub fn config_digest(canonical: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canonical.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+fn put_header(out: &mut Vec<u8>, kind: u8, enc: u8, body_len: usize) {
+    debug_assert!(body_len as u64 <= MAX_FRAME_BYTES as u64);
+    out.extend_from_slice(&MAGIC.to_le_bytes());
+    out.extend_from_slice(&WIRE_VERSION.to_le_bytes());
+    out.push(kind);
+    out.push(enc);
+    out.extend_from_slice(&(body_len as u32).to_le_bytes());
+}
+
+/// Encode a handshake frame.
+pub fn encode_handshake(h: &Handshake) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + HANDSHAKE_BODY_BYTES);
+    put_header(&mut out, KIND_HANDSHAKE, ENC_DENSE, HANDSHAKE_BODY_BYTES);
+    out.extend_from_slice(&h.config_digest.to_le_bytes());
+    out.extend_from_slice(&h.rank.to_le_bytes());
+    out.extend_from_slice(&h.n_ranks.to_le_bytes());
+    out
+}
+
+/// Encode an orderly-goodbye frame.
+pub fn encode_bye() -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES);
+    put_header(&mut out, KIND_BYE, ENC_DENSE, 0);
+    out
+}
+
+/// Encode one exchange packet, stamped with its combine `epoch`.
+pub fn encode_packet_frame(pkt: &Packet, epoch: u32) -> Vec<u8> {
+    let (enc, rows_len) = match &pkt.payload {
+        RowsPayload::Dense(rows) => (ENC_DENSE, rows.len() * 4),
+        RowsPayload::Sparse { offsets, entries } => {
+            (ENC_SPARSE, 8 + offsets.len() * 4 + entries.len() * 8)
+        }
+    };
+    let body_len = PACKET_PREFIX_BYTES + rows_len;
+    let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + body_len);
+    put_header(&mut out, KIND_PACKET, enc, body_len);
+    out.extend_from_slice(&epoch.to_le_bytes());
+    out.extend_from_slice(&pkt.meta.to_le_bytes());
+    out.extend_from_slice(&pkt.subtemplate.to_le_bytes());
+    out.extend_from_slice(&pkt.n_sets.to_le_bytes());
+    match &pkt.payload {
+        RowsPayload::Dense(rows) => {
+            for x in rows {
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        RowsPayload::Sparse { offsets, entries } => {
+            out.extend_from_slice(&(offsets.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for o in offsets {
+                out.extend_from_slice(&o.to_le_bytes());
+            }
+            for &(rank, x) in entries {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+fn get_u32(buf: &[u8], at: usize) -> u32 {
+    u32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+fn get_f32(buf: &[u8], at: usize) -> f32 {
+    f32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+/// Decode the fixed 12-byte header. The caller then reads `body_len`
+/// more bytes and hands them to [`decode_body`].
+pub fn decode_header(buf: &[u8]) -> Result<FrameHeader, FrameError> {
+    if buf.len() < FRAME_HEADER_BYTES {
+        return Err(FrameError::Truncated {
+            need: FRAME_HEADER_BYTES,
+            got: buf.len(),
+        });
+    }
+    let magic = get_u32(buf, 0);
+    if magic != MAGIC {
+        return Err(FrameError::BadMagic(magic));
+    }
+    let version = u16::from_le_bytes(buf[4..6].try_into().unwrap());
+    if version != WIRE_VERSION {
+        return Err(FrameError::BadVersion {
+            got: version,
+            want: WIRE_VERSION,
+        });
+    }
+    let kind = buf[6];
+    if kind > KIND_BYE {
+        return Err(FrameError::BadKind(kind));
+    }
+    let enc = buf[7];
+    if enc > ENC_SPARSE {
+        return Err(FrameError::BadEnc(enc));
+    }
+    let body_len = get_u32(buf, 8);
+    if body_len > MAX_FRAME_BYTES {
+        return Err(FrameError::Oversized {
+            len: body_len,
+            max: MAX_FRAME_BYTES,
+        });
+    }
+    Ok(FrameHeader {
+        kind,
+        enc,
+        body_len,
+    })
+}
+
+/// Decode a frame body against its header.
+pub fn decode_body(h: FrameHeader, body: &[u8]) -> Result<Frame, FrameError> {
+    if body.len() != h.body_len as usize {
+        return Err(FrameError::Truncated {
+            need: h.body_len as usize,
+            got: body.len(),
+        });
+    }
+    match h.kind {
+        KIND_BYE => {
+            if !body.is_empty() {
+                return Err(FrameError::BadPayload(format!(
+                    "bye frame carries {} bytes",
+                    body.len()
+                )));
+            }
+            Ok(Frame::Bye)
+        }
+        KIND_HANDSHAKE => {
+            if body.len() != HANDSHAKE_BODY_BYTES {
+                return Err(FrameError::BadPayload(format!(
+                    "handshake body of {} bytes (want {HANDSHAKE_BODY_BYTES})",
+                    body.len()
+                )));
+            }
+            Ok(Frame::Handshake(Handshake {
+                config_digest: u64::from_le_bytes(body[0..8].try_into().unwrap()),
+                rank: get_u32(body, 8),
+                n_ranks: get_u32(body, 12),
+            }))
+        }
+        KIND_PACKET => {
+            if body.len() < PACKET_PREFIX_BYTES {
+                return Err(FrameError::Truncated {
+                    need: PACKET_PREFIX_BYTES,
+                    got: body.len(),
+                });
+            }
+            let epoch = get_u32(body, 0);
+            let meta = get_u32(body, 4);
+            let subtemplate = get_u32(body, 8);
+            let n_sets = get_u32(body, 12);
+            let rows = &body[PACKET_PREFIX_BYTES..];
+            let payload = match h.enc {
+                ENC_DENSE => {
+                    if rows.len() % 4 != 0 {
+                        return Err(FrameError::BadPayload(format!(
+                            "dense rows of {} bytes not a multiple of 4",
+                            rows.len()
+                        )));
+                    }
+                    let data = (0..rows.len() / 4).map(|i| get_f32(rows, i * 4)).collect();
+                    RowsPayload::Dense(data)
+                }
+                _ => {
+                    if rows.len() < 8 {
+                        return Err(FrameError::Truncated {
+                            need: 8,
+                            got: rows.len(),
+                        });
+                    }
+                    let n_offsets = get_u32(rows, 0) as usize;
+                    let n_entries = get_u32(rows, 4) as usize;
+                    let want = n_offsets
+                        .checked_mul(4)
+                        .and_then(|a| n_entries.checked_mul(8).map(|b| (a, b)))
+                        .and_then(|(a, b)| a.checked_add(b))
+                        .and_then(|ab| ab.checked_add(8))
+                        .ok_or_else(too_big)?;
+                    if rows.len() != want {
+                        return Err(FrameError::BadPayload(format!(
+                            "sparse rows: {} bytes for {n_offsets} offsets + {n_entries} entries \
+                             (want {want})",
+                            rows.len()
+                        )));
+                    }
+                    let offsets: Vec<u32> =
+                        (0..n_offsets).map(|i| get_u32(rows, 8 + i * 4)).collect();
+                    let base = 8 + n_offsets * 4;
+                    let entries: Vec<(u32, f32)> = (0..n_entries)
+                        .map(|i| (get_u32(rows, base + i * 8), get_f32(rows, base + i * 8 + 4)))
+                        .collect();
+                    RowsPayload::Sparse { offsets, entries }
+                }
+            };
+            Ok(Frame::Packet {
+                epoch,
+                pkt: Packet {
+                    meta,
+                    subtemplate,
+                    n_sets,
+                    payload,
+                },
+            })
+        }
+        _ => Err(FrameError::BadKind(h.kind)),
+    }
+}
+
+fn too_big() -> FrameError {
+    FrameError::BadPayload("sparse counts overflow the body length".into())
+}
+
+/// Decode one whole frame from a buffer; returns the frame and the bytes
+/// consumed. Test/fixture convenience over the streaming
+/// `decode_header` + `decode_body` pair the reader threads use.
+pub fn decode_frame(buf: &[u8]) -> Result<(Frame, usize), FrameError> {
+    let h = decode_header(buf)?;
+    let end = FRAME_HEADER_BYTES + h.body_len as usize;
+    if buf.len() < end {
+        return Err(FrameError::Truncated {
+            need: end,
+            got: buf.len(),
+        });
+    }
+    let frame = decode_body(h, &buf[FRAME_HEADER_BYTES..end])?;
+    Ok((frame, end))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn roundtrip(pkt: &Packet, epoch: u32) -> Packet {
+        let buf = encode_packet_frame(pkt, epoch);
+        let (frame, used) = decode_frame(&buf).expect("roundtrip decode");
+        assert_eq!(used, buf.len(), "whole buffer consumed");
+        match frame {
+            Frame::Packet { epoch: e, pkt } => {
+                assert_eq!(e, epoch);
+                pkt
+            }
+            other => panic!("expected packet frame, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn handshake_roundtrip_and_digest() {
+        let h = Handshake {
+            config_digest: config_digest("template=u5;ranks=4;seed=42"),
+            rank: 3,
+            n_ranks: 4,
+        };
+        let buf = encode_handshake(&h);
+        let (frame, used) = decode_frame(&buf).unwrap();
+        assert_eq!(used, buf.len());
+        assert_eq!(frame, Frame::Handshake(h));
+        // the digest is a pure function and separates configs
+        assert_eq!(
+            config_digest("template=u5;ranks=4;seed=42"),
+            h.config_digest
+        );
+        assert_ne!(
+            config_digest("template=u5;ranks=5;seed=42"),
+            h.config_digest
+        );
+    }
+
+    #[test]
+    fn bye_roundtrip() {
+        let buf = encode_bye();
+        assert_eq!(buf.len(), FRAME_HEADER_BYTES);
+        assert_eq!(decode_frame(&buf).unwrap().0, Frame::Bye);
+    }
+
+    /// Satellite: property roundtrip over random dense/sparse payloads —
+    /// meta, subtemplate, width, epoch and every row bit must survive the
+    /// wire.
+    #[test]
+    fn prop_packet_frame_roundtrip() {
+        prop::check("frame_roundtrip", |gen| {
+            let sender = gen.usize_in(0, 9);
+            let receiver = gen.usize_in(0, 9);
+            let step = gen.usize_in(0, 7);
+            let sub = gen.usize_in(0, 30);
+            let n_sets = gen.usize_in(1, 9);
+            let n_rows = gen.usize_in(0, 12);
+            let epoch = gen.usize_in(0, 1 << 20) as u32;
+            let payload = if gen.usize_in(0, 1) == 0 {
+                RowsPayload::Dense(
+                    (0..n_rows * n_sets)
+                        .map(|i| (i as f32) * 0.37 - 2.0)
+                        .collect(),
+                )
+            } else {
+                let mut offsets = vec![0u32];
+                let mut entries = Vec::new();
+                for r in 0..n_rows {
+                    for s in 0..n_sets {
+                        if gen.usize_in(0, 2) == 0 {
+                            entries.push((s as u32, (r * n_sets + s) as f32 * 0.25));
+                        }
+                    }
+                    offsets.push(entries.len() as u32);
+                }
+                RowsPayload::Sparse { offsets, entries }
+            };
+            let pkt = Packet::with_payload(sender, receiver, step, sub, n_sets, payload);
+            let back = roundtrip(&pkt, epoch);
+            if back.meta != pkt.meta || back.subtemplate != pkt.subtemplate {
+                return Err("meta/subtemplate changed".into());
+            }
+            if back.n_sets != pkt.n_sets {
+                return Err("n_sets changed".into());
+            }
+            match (&back.payload, &pkt.payload) {
+                (RowsPayload::Dense(a), RowsPayload::Dense(b)) => {
+                    if a.len() != b.len()
+                        || a.iter().zip(b).any(|(x, y)| x.to_bits() != y.to_bits())
+                    {
+                        return Err("dense rows moved a bit".into());
+                    }
+                }
+                (
+                    RowsPayload::Sparse {
+                        offsets: ao,
+                        entries: ae,
+                    },
+                    RowsPayload::Sparse {
+                        offsets: bo,
+                        entries: be,
+                    },
+                ) => {
+                    if ao != bo {
+                        return Err("sparse offsets changed".into());
+                    }
+                    if ae.len() != be.len()
+                        || ae
+                            .iter()
+                            .zip(be)
+                            .any(|((r1, x), (r2, y))| r1 != r2 || x.to_bits() != y.to_bits())
+                    {
+                        return Err("sparse entries changed".into());
+                    }
+                }
+                _ => return Err("payload encoding flipped".into()),
+            }
+            Ok(())
+        });
+    }
+
+    /// Satellite: the corrupt-byte mutation matrix — truncation at every
+    /// boundary, bad magic, wrong version, unknown kind/enc, an
+    /// oversized length prefix and inconsistent sparse counts all map to
+    /// their typed errors (mirroring the `GraphLoadError` fixtures).
+    #[test]
+    fn corrupt_frame_mutation_matrix() {
+        let pkt = Packet::with_payload(
+            1,
+            2,
+            3,
+            4,
+            3,
+            RowsPayload::Sparse {
+                offsets: vec![0, 1, 2],
+                entries: vec![(0, 1.5), (2, -2.5)],
+            },
+        );
+        let good = encode_packet_frame(&pkt, 7);
+        assert!(decode_frame(&good).is_ok());
+
+        // truncated header
+        for cut in 0..FRAME_HEADER_BYTES {
+            match decode_frame(&good[..cut]) {
+                Err(FrameError::Truncated { got, .. }) => assert_eq!(got, cut),
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+        // truncated body (every prefix that includes the full header)
+        for cut in FRAME_HEADER_BYTES..good.len() {
+            match decode_frame(&good[..cut]) {
+                Err(FrameError::Truncated { need, got }) => {
+                    assert_eq!(need, good.len());
+                    assert_eq!(got, cut);
+                }
+                other => panic!("cut at {cut}: {other:?}"),
+            }
+        }
+        // bad magic (every corruption of the first four bytes)
+        for i in 0..4 {
+            let mut bad = good.clone();
+            bad[i] ^= 0xff;
+            assert!(
+                matches!(decode_frame(&bad), Err(FrameError::BadMagic(_))),
+                "byte {i}"
+            );
+        }
+        // wrong wire version
+        let mut bad = good.clone();
+        bad[4] = 0x7f;
+        match decode_frame(&bad) {
+            Err(FrameError::BadVersion { got, want }) => {
+                assert_eq!(got, 0x7f);
+                assert_eq!(want, WIRE_VERSION);
+            }
+            other => panic!("{other:?}"),
+        }
+        // unknown kind / encoding
+        let mut bad = good.clone();
+        bad[6] = 9;
+        assert_eq!(decode_frame(&bad), Err(FrameError::BadKind(9)));
+        let mut bad = good.clone();
+        bad[7] = 5;
+        assert_eq!(decode_frame(&bad), Err(FrameError::BadEnc(5)));
+        // oversized length prefix: rejected before any body read
+        let mut bad = good.clone();
+        bad[8..12].copy_from_slice(&(MAX_FRAME_BYTES + 1).to_le_bytes());
+        match decode_frame(&bad) {
+            Err(FrameError::Oversized { len, max }) => {
+                assert_eq!(len, MAX_FRAME_BYTES + 1);
+                assert_eq!(max, MAX_FRAME_BYTES);
+            }
+            other => panic!("{other:?}"),
+        }
+        // sparse counts inconsistent with the body length
+        let mut bad = good.clone();
+        let off_at = FRAME_HEADER_BYTES + PACKET_PREFIX_BYTES;
+        bad[off_at..off_at + 4].copy_from_slice(&100u32.to_le_bytes());
+        assert!(
+            matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))),
+            "{:?}",
+            decode_frame(&bad)
+        );
+        // sparse counts engineered to overflow usize
+        let mut bad = good.clone();
+        bad[off_at..off_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[off_at + 4..off_at + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
+
+        // dense body whose row bytes aren't a multiple of the f32 width
+        let dense = encode_packet_frame(&Packet::new(0, 1, 0, 0, 2, vec![1.0, 2.0]), 1);
+        let mut bad = dense.clone();
+        bad.pop();
+        let new_len = (bad.len() - FRAME_HEADER_BYTES) as u32;
+        bad[8..12].copy_from_slice(&new_len.to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
+
+        // bye with a non-empty body
+        let mut bad = encode_bye();
+        bad[8..12].copy_from_slice(&1u32.to_le_bytes());
+        bad.push(0);
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
+
+        // handshake with a short body
+        let hs = encode_handshake(&Handshake {
+            config_digest: 1,
+            rank: 0,
+            n_ranks: 2,
+        });
+        let mut bad = hs.clone();
+        bad.truncate(bad.len() - 4);
+        bad[8..12].copy_from_slice(&12u32.to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
+    }
+
+    #[test]
+    fn errors_display_actionably() {
+        let e = FrameError::BadVersion { got: 2, want: 1 };
+        assert!(e.to_string().contains("stale peer"));
+        let e = FrameError::Oversized {
+            len: MAX_FRAME_BYTES + 1,
+            max: MAX_FRAME_BYTES,
+        };
+        assert!(e.to_string().contains("exceeds"));
+        let e = FrameError::Truncated { need: 12, got: 3 };
+        assert!(e.to_string().contains("12"));
+        assert!(e.to_string().contains('3'));
+    }
+}

@@ -18,9 +18,9 @@
 //!   canonical `(step, sender, seq)` order so delivery is deterministic
 //!   regardless of thread interleaving.
 
+use super::fabric::{FabricError, FabricResult, RankFabric, StepLedger};
 use super::packet::Packet;
-use crate::coordinator::memory::{MemClass, SharedAccountant};
-use crate::util::shim::{AtomicU64, Condvar, Mutex};
+use crate::util::shim::{Condvar, Mutex};
 use std::time::Duration;
 
 /// Mailbox fabric for `n_ranks` simulated ranks.
@@ -121,47 +121,40 @@ const RECV_TIMEOUT: Duration = Duration::from_secs(600);
 #[derive(Debug)]
 pub struct ThreadedFabric {
     pub n_ranks: usize,
-    pub n_steps: usize,
     inboxes: Vec<Mutex<Vec<Queued>>>,
     arrivals: Vec<Condvar>,
-    /// `[rank][step]` bytes sent
-    sent_bytes: Vec<Vec<AtomicU64>>,
-    /// `[rank][step]` messages sent
-    sent_msgs: Vec<Vec<AtomicU64>>,
-    /// `[rank][step]` bytes received (drained via [`Self::recv_step`]) —
-    /// the receive-side mirror of `sent_bytes`, which the adaptive model's
-    /// per-step byte accounting must reproduce exactly
-    recv_bytes: Vec<Vec<AtomicU64>>,
-    /// `[sender][step]` next sequence number
-    seqs: Vec<Vec<AtomicU64>>,
-    /// `[rank][step]` drain count — [`Self::recv_step`] is a one-shot
-    /// collective per (rank, step); a second drain means the executor's
-    /// step bookkeeping is broken, so it panics rather than returning an
-    /// empty (silently wrong) packet set
-    drained: Vec<Vec<AtomicU64>>,
-    /// payload bytes currently parked in inboxes (sent, not yet received)
-    in_flight: SharedAccountant,
+    /// the shared per-(rank, step) accounting: bytes/messages sent, bytes
+    /// drained, send sequence numbers, the one-shot drain tracker and the
+    /// in-flight high-water accountant — the same [`StepLedger`] every
+    /// [`RankFabric`] implementation carries, so modeled-vs-measured byte
+    /// tests run against any of them
+    ledger: StepLedger,
 }
 
 impl ThreadedFabric {
+    /// A fabric for a single exchange of exactly `n_steps` steps (the
+    /// historical constructor — tests and one-shot callers).
     pub fn new(n_ranks: usize, n_steps: usize) -> Self {
-        fn counters(n_ranks: usize, n_steps: usize) -> Vec<Vec<AtomicU64>> {
-            (0..n_ranks)
-                .map(|_| (0..n_steps).map(|_| AtomicU64::new(0)).collect())
-                .collect()
-        }
+        Self::for_run(n_ranks, n_steps)
+    }
+
+    /// A fabric reused across a whole run's combines: sized for exchanges
+    /// of up to `max_steps` steps, reset per combine via
+    /// [`RankFabric::begin_exchange`]. The per-step send path then does
+    /// two `fetch_add`s on the preallocated ledger grids — no per-combine
+    /// reallocation of the accounting state.
+    pub fn for_run(n_ranks: usize, max_steps: usize) -> Self {
         ThreadedFabric {
             n_ranks,
-            n_steps,
             inboxes: (0..n_ranks).map(|_| Mutex::new(Vec::new())).collect(),
             arrivals: (0..n_ranks).map(|_| Condvar::new()).collect(),
-            sent_bytes: counters(n_ranks, n_steps),
-            sent_msgs: counters(n_ranks, n_steps),
-            recv_bytes: counters(n_ranks, n_steps),
-            seqs: counters(n_ranks, n_steps),
-            drained: counters(n_ranks, n_steps),
-            in_flight: SharedAccountant::new(),
+            ledger: StepLedger::new(n_ranks, max_steps),
         }
+    }
+
+    /// Steps of the exchange currently in progress.
+    pub fn n_steps(&self) -> usize {
+        self.ledger.n_steps()
     }
 
     /// Send a packet; the packet's `offset` field is its exchange step.
@@ -170,14 +163,11 @@ impl ThreadedFabric {
         let to = p.receiver();
         let from = p.sender();
         let step = p.offset();
-        assert!(to < self.n_ranks, "receiver {to} out of range");
-        assert!(from < self.n_ranks, "sender {from} out of range");
-        assert!(step < self.n_steps, "step {step} out of range ({})", self.n_steps);
         let bytes = p.bytes();
-        self.sent_bytes[from][step].fetch_add(bytes);
-        self.sent_msgs[from][step].fetch_add(1);
-        let seq = self.seqs[from][step].fetch_add(1);
-        self.in_flight.alloc(MemClass::RecvBuffer, bytes);
+        // range asserts live in the ledger; one call accounts the send
+        // and stamps the canonical (sender, step) sequence number
+        let seq = self.ledger.note_send(from, to, step, bytes);
+        self.ledger.park(bytes);
         {
             let mut ib = self.inboxes[to].lock().unwrap();
             ib.push(Queued {
@@ -190,27 +180,29 @@ impl ThreadedFabric {
         self.arrivals[to].notify_all();
     }
 
-    /// Block until at least `n_expected` packets for `step` sit in rank
-    /// `p`'s inbox, then take every packet of that step, sorted by
-    /// `(sender, seq)`. Packets of other steps stay queued. Panics if the
-    /// wait exceeds [`RECV_TIMEOUT`] (a wedged exchange, not slow I/O) or
-    /// if the same (rank, step) is drained twice (an executor bug: the
-    /// second caller would block forever or steal late packets).
-    pub fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> Vec<Packet> {
-        assert!(p < self.n_ranks, "receiver {p} out of range");
-        assert!(step < self.n_steps, "step {step} out of range ({})", self.n_steps);
-        let drains = self.drained[p][step].fetch_add(1);
-        assert!(drains == 0, "rank {p}: double drain of step {step}");
+    /// The fallible core of [`Self::recv_step`]: waits up to `timeout`
+    /// for the step's packet set, returning a typed [`FabricError`] on
+    /// expiry instead of panicking. A double drain stays a panic — that
+    /// is an executor bug, not a transport condition.
+    fn try_recv_step(
+        &self,
+        p: usize,
+        step: usize,
+        n_expected: usize,
+        timeout: Duration,
+    ) -> FabricResult<Vec<Packet>> {
+        self.ledger.mark_drained(p, step);
         let mut ib = self.inboxes[p].lock().unwrap();
         while ib.iter().filter(|q| q.step == step).count() < n_expected {
-            let (guard, timeout) = self.arrivals[p].wait_timeout(ib, RECV_TIMEOUT).unwrap();
+            let (guard, timed) = self.arrivals[p].wait_timeout(ib, timeout).unwrap();
             ib = guard;
-            if timeout.timed_out() && ib.iter().filter(|q| q.step == step).count() < n_expected {
-                panic!(
-                    "rank {p} timed out waiting for {n_expected} packet(s) of step {step} \
-                     ({} arrived)",
-                    ib.iter().filter(|q| q.step == step).count()
-                );
+            if timed.timed_out() && ib.iter().filter(|q| q.step == step).count() < n_expected {
+                let got = ib.iter().filter(|q| q.step == step).count();
+                return Err(FabricError::timeout(
+                    p,
+                    step,
+                    format!("{got} of {n_expected} packet(s) arrived before the window closed"),
+                ));
             }
         }
         let mut got = Vec::with_capacity(n_expected);
@@ -226,9 +218,24 @@ impl ThreadedFabric {
         drop(ib);
         got.sort_by_key(|q| (q.sender, q.seq));
         let bytes: u64 = got.iter().map(|q| q.pkt.bytes()).sum();
-        self.recv_bytes[p][step].fetch_add(bytes);
-        self.in_flight.free(MemClass::RecvBuffer, bytes);
-        got.into_iter().map(|q| q.pkt).collect()
+        self.ledger.note_recv(p, step, bytes);
+        self.ledger.unpark(bytes);
+        Ok(got.into_iter().map(|q| q.pkt).collect())
+    }
+
+    /// Block until at least `n_expected` packets for `step` sit in rank
+    /// `p`'s inbox, then take every packet of that step, sorted by
+    /// `(sender, seq)`. Packets of other steps stay queued. Panics if the
+    /// wait exceeds [`RECV_TIMEOUT`] (a wedged exchange, not slow I/O) or
+    /// if the same (rank, step) is drained twice (an executor bug: the
+    /// second caller would block forever or steal late packets).
+    pub fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> Vec<Packet> {
+        match self.try_recv_step(p, step, n_expected, RECV_TIMEOUT) {
+            Ok(pkts) => pkts,
+            Err(e) => panic!(
+                "rank {p} timed out waiting for {n_expected} packet(s) of step {step} ({e})"
+            ),
+        }
     }
 
     /// Packets currently waiting for rank `p` (any step).
@@ -238,38 +245,38 @@ impl ThreadedFabric {
 
     /// Bytes rank `p` sent at `step`.
     pub fn sent_bytes(&self, p: usize, step: usize) -> u64 {
-        self.sent_bytes[p][step].load()
+        self.ledger.sent_bytes(p, step)
     }
 
     /// Messages rank `p` sent at `step`.
     pub fn sent_msgs(&self, p: usize, step: usize) -> u64 {
-        self.sent_msgs[p][step].load()
+        self.ledger.sent_msgs(p, step)
     }
 
     /// Bytes rank `p` received (drained) at `step`.
     pub fn recv_bytes(&self, p: usize, step: usize) -> u64 {
-        self.recv_bytes[p][step].load()
+        self.ledger.recv_bytes(p, step)
     }
 
     /// Total bytes rank `p` sent across all steps (matches the sequential
     /// fabric's accounting summed over its per-step resets).
     pub fn total_sent_bytes(&self, p: usize) -> u64 {
-        (0..self.n_steps).map(|w| self.sent_bytes(p, w)).sum()
+        self.ledger.total_sent_bytes(p)
     }
 
     /// Total messages rank `p` sent across all steps.
     pub fn total_sent_msgs(&self, p: usize) -> u64 {
-        (0..self.n_steps).map(|w| self.sent_msgs(p, w)).sum()
+        self.ledger.total_sent_msgs(p)
     }
 
     /// Payload bytes currently in flight (sent, not yet received).
     pub fn in_flight_bytes(&self) -> u64 {
-        self.in_flight.current(MemClass::RecvBuffer)
+        self.ledger.in_flight_bytes()
     }
 
     /// High-water mark of in-flight payload bytes over the fabric's life.
     pub fn in_flight_peak(&self) -> u64 {
-        self.in_flight.peak()
+        self.ledger.in_flight_peak()
     }
 
     /// Assert no packets are stranded (end-of-exchange invariant).
@@ -278,6 +285,45 @@ impl ThreadedFabric {
             let n = ib.lock().unwrap().len();
             assert!(n == 0, "rank {p} has {n} stranded packets");
         }
+    }
+}
+
+impl RankFabric for ThreadedFabric {
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn begin_exchange(&self, n_steps: usize) {
+        // a clean previous combine drained everything; starting the next
+        // one over stranded packets would corrupt the canonical order
+        self.assert_empty();
+        self.ledger.begin_exchange(n_steps);
+        for ib in &self.inboxes {
+            // hot-path allocation audit: pre-reserve one slot per peer so
+            // steady-state sends never grow the inbox under its lock
+            ib.lock().unwrap().reserve(self.n_ranks);
+        }
+    }
+
+    fn send(&self, p: Packet) -> FabricResult<()> {
+        ThreadedFabric::send(self, p);
+        Ok(())
+    }
+
+    fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> FabricResult<Vec<Packet>> {
+        self.try_recv_step(p, step, n_expected, RECV_TIMEOUT)
+    }
+
+    fn ledger(&self) -> &StepLedger {
+        &self.ledger
+    }
+
+    fn pending(&self, p: usize) -> usize {
+        ThreadedFabric::pending(self, p)
+    }
+
+    fn assert_empty(&self) {
+        ThreadedFabric::assert_empty(self)
     }
 }
 

@@ -4,13 +4,19 @@
 //! adaptive mode switch (Alg 3).
 
 pub mod adaptive;
+pub mod fabric;
+pub mod frame;
 pub mod group;
 pub mod hockney;
 pub mod mailbox;
 pub mod packet;
+pub mod socket;
 
 pub use adaptive::{AdaptivePolicy, CombineShape, CommMode, GroupCalibration, GroupPrediction};
+pub use fabric::{FabricError, FabricResult, LinkMeasurement, RankFabric, StepLedger};
+pub use frame::{config_digest, Frame, FrameError, Handshake, WIRE_VERSION};
 pub use group::{Schedule, StepPlan};
 pub use hockney::HockneyParams;
 pub use mailbox::{Fabric, ThreadedFabric};
 pub use packet::{decode_meta, encode_meta, Packet};
+pub use socket::{PeerAddr, SocketFabric, SocketListener, SocketOptions};

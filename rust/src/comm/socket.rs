@@ -1,0 +1,1088 @@
+//! The process-mode transport: rank processes framing [`Packet`]s over
+//! TCP or Unix-domain sockets.
+//!
+//! Topology is a full mesh of directed connections: every rank binds one
+//! listener, then opens one outgoing stream to each peer (with bounded
+//! retry/backoff while the mesh comes up) and accepts one incoming stream
+//! from each. The first frame on every stream is a [`Handshake`] carrying
+//! the wire version and the run's config digest, so a peer from another
+//! run, with a different rank count, or built at a different wire version
+//! is rejected with a typed error before any packet is decoded.
+//!
+//! One reader thread per incoming stream decodes frames into the local
+//! inbox. Because a TCP/UDS stream is FIFO and each directed pair has
+//! exactly one stream, arrival order per `(sender, epoch, step)` *is* the
+//! sender's send order — the reader assigns the canonical sequence
+//! numbers on arrival, and [`SocketFabric::recv_step`] returns each
+//! step's packets sorted by `(sender, seq)` exactly like the in-process
+//! fabric. Packets are additionally tagged with an exchange *epoch*
+//! (bumped at every [`RankFabric::begin_exchange`]): a fast sender may
+//! race ahead into the next combine while this rank still drains the
+//! current one, and step numbers repeat per combine, so the epoch is what
+//! keeps early packets queued instead of folded into the wrong exchange.
+//!
+//! Every blocking send is wall-clocked; the `(bytes, seconds)` samples
+//! fit the measured link parameters ([`LinkMeasurement`]) the report
+//! carries in place of the simulated Hockney terms.
+
+use super::fabric::{FabricError, FabricResult, LinkMeasurement, RankFabric, StepLedger};
+use super::frame::{
+    decode_body, decode_header, encode_bye, encode_handshake, encode_packet_frame, Frame,
+    FrameHeader, Handshake, FRAME_HEADER_BYTES,
+};
+use super::packet::Packet;
+use crate::util::shim::{AtomicU64, Condvar, Mutex};
+use std::collections::HashMap;
+use std::io::{self, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// One rank's endpoint address: a TCP `host:port` or a UDS path.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PeerAddr {
+    Tcp(String),
+    Unix(PathBuf),
+}
+
+impl PeerAddr {
+    /// Parse an address spec: anything containing `/` is a socket path,
+    /// everything else a TCP `host:port`.
+    pub fn parse(spec: &str) -> PeerAddr {
+        if spec.contains('/') {
+            PeerAddr::Unix(PathBuf::from(spec))
+        } else {
+            PeerAddr::Tcp(spec.to_string())
+        }
+    }
+}
+
+impl std::fmt::Display for PeerAddr {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PeerAddr::Tcp(a) => write!(f, "{a}"),
+            PeerAddr::Unix(p) => write!(f, "{}", p.display()),
+        }
+    }
+}
+
+/// Transport knobs: every wait the fabric performs is bounded.
+#[derive(Debug, Clone, Copy)]
+pub struct SocketOptions {
+    /// total window for establishing the whole mesh (per peer connect,
+    /// handshake reads, and the accept loop)
+    pub connect_timeout: Duration,
+    /// initial retry backoff while a peer's listener comes up (doubles up
+    /// to a 500 ms cap)
+    pub connect_backoff: Duration,
+    /// how long a `recv_step` may block before the fold surfaces a typed
+    /// timeout instead of hanging
+    pub recv_timeout: Duration,
+}
+
+impl Default for SocketOptions {
+    fn default() -> Self {
+        SocketOptions {
+            connect_timeout: Duration::from_secs(20),
+            connect_backoff: Duration::from_millis(20),
+            recv_timeout: Duration::from_secs(600),
+        }
+    }
+}
+
+/// How often blocked reads wake to check the shutdown flag.
+const READ_POLL: Duration = Duration::from_millis(100);
+
+enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    fn connect(addr: &PeerAddr) -> io::Result<Stream> {
+        match addr {
+            PeerAddr::Tcp(a) => {
+                let s = TcpStream::connect(a)?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+            PeerAddr::Unix(p) => Ok(Stream::Unix(UnixStream::connect(p)?)),
+        }
+    }
+
+    fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+
+    fn shutdown_both(&self) {
+        let _ = match self {
+            Stream::Tcp(s) => s.shutdown(std::net::Shutdown::Both),
+            Stream::Unix(s) => s.shutdown(std::net::Shutdown::Both),
+        };
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+enum ListenerInner {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// A bound rank listener. Bind *before* advertising the address (the
+/// launcher protocol prints the resolved address only after `bind`
+/// returns, so every peer's connect races nothing).
+pub struct SocketListener {
+    inner: ListenerInner,
+    addr: PeerAddr,
+    /// UDS path to unlink on drop
+    cleanup: Option<PathBuf>,
+}
+
+impl SocketListener {
+    /// Bind `spec`. A TCP spec may use port 0; the resolved address (with
+    /// the real port) is what [`Self::local_addr`] reports. A stale UDS
+    /// path is unlinked first.
+    pub fn bind(spec: &PeerAddr) -> io::Result<SocketListener> {
+        match spec {
+            PeerAddr::Tcp(a) => {
+                let l = TcpListener::bind(a)?;
+                let addr = PeerAddr::Tcp(l.local_addr()?.to_string());
+                Ok(SocketListener {
+                    inner: ListenerInner::Tcp(l),
+                    addr,
+                    cleanup: None,
+                })
+            }
+            PeerAddr::Unix(p) => {
+                if p.exists() {
+                    std::fs::remove_file(p)?;
+                }
+                let l = UnixListener::bind(p)?;
+                Ok(SocketListener {
+                    inner: ListenerInner::Unix(l),
+                    addr: PeerAddr::Unix(p.clone()),
+                    cleanup: Some(p.clone()),
+                })
+            }
+        }
+    }
+
+    /// The resolved address peers should connect to.
+    pub fn local_addr(&self) -> &PeerAddr {
+        &self.addr
+    }
+
+    fn set_nonblocking(&self, v: bool) -> io::Result<()> {
+        match &self.inner {
+            ListenerInner::Tcp(l) => l.set_nonblocking(v),
+            ListenerInner::Unix(l) => l.set_nonblocking(v),
+        }
+    }
+
+    fn accept(&self) -> io::Result<Stream> {
+        // accepted streams must block (with read timeouts) even though
+        // the listener polls nonblocking; inheritance is platform-defined
+        match &self.inner {
+            ListenerInner::Tcp(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                s.set_nodelay(true)?;
+                Ok(Stream::Tcp(s))
+            }
+            ListenerInner::Unix(l) => {
+                let (s, _) = l.accept()?;
+                s.set_nonblocking(false)?;
+                Ok(Stream::Unix(s))
+            }
+        }
+    }
+}
+
+impl Drop for SocketListener {
+    fn drop(&mut self) {
+        if let Some(p) = &self.cleanup {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+/// A packet parked in the inbox with its canonical-order key.
+#[derive(Debug)]
+struct NetQueued {
+    sender: usize,
+    epoch: u64,
+    step: usize,
+    /// arrival-order sequence per `(sender, epoch, step)` — valid as the
+    /// canonical seq because each directed pair has one FIFO stream
+    seq: u64,
+    pkt: Packet,
+}
+
+/// State shared with the reader threads.
+struct Shared {
+    rank: usize,
+    n_ranks: usize,
+    ledger: StepLedger,
+    inbox: Mutex<Vec<NetQueued>>,
+    arrival: Condvar,
+    /// first transport failure observed by any reader; fails every
+    /// subsequent `recv_step` instead of letting the fold hang
+    fail: Mutex<Option<FabricError>>,
+    /// nonzero once teardown started: readers treat EOF/timeouts as a
+    /// clean exit instead of a peer failure
+    shutdown: AtomicU64,
+}
+
+impl Shared {
+    fn set_fail(&self, e: FabricError) {
+        let mut f = self.fail.lock().unwrap();
+        if f.is_none() {
+            *f = Some(e);
+        }
+        drop(f);
+        self.arrival.notify_all();
+    }
+
+    fn push(&self, sender: usize, epoch: u64, step: usize, seq: u64, pkt: Packet) {
+        self.ledger.park(pkt.bytes());
+        let mut ib = self.inbox.lock().unwrap();
+        ib.push(NetQueued {
+            sender,
+            epoch,
+            step,
+            seq,
+            pkt,
+        });
+        drop(ib);
+        self.arrival.notify_all();
+    }
+}
+
+/// What a bounded read produced.
+enum ReadOutcome {
+    /// buffer filled
+    Full,
+    /// clean EOF at a frame boundary
+    Eof,
+    /// the shutdown flag went up while blocked
+    Shutdown,
+}
+
+/// Read exactly `buf.len()` bytes, waking every [`READ_POLL`] to check
+/// the shutdown flag (and `deadline`, when one bounds the wait). EOF
+/// mid-buffer is an error; EOF before the first byte is a clean boundary.
+fn read_full(
+    s: &mut Stream,
+    buf: &mut [u8],
+    shared: &Shared,
+    deadline: Option<Instant>,
+) -> io::Result<ReadOutcome> {
+    let mut at = 0;
+    while at < buf.len() {
+        match s.read(&mut buf[at..]) {
+            Ok(0) => {
+                if at == 0 {
+                    return Ok(ReadOutcome::Eof);
+                }
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("stream closed {at} bytes into a {}-byte read", buf.len()),
+                ));
+            }
+            Ok(n) => at += n,
+            Err(e) if matches!(e.kind(), io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut) => {
+                if shared.shutdown.load() != 0 {
+                    return Ok(ReadOutcome::Shutdown);
+                }
+                if deadline.is_some_and(|d| Instant::now() > d) {
+                    return Err(io::Error::new(
+                        io::ErrorKind::TimedOut,
+                        format!("read deadline passed {at} bytes into a {}-byte read", buf.len()),
+                    ));
+                }
+            }
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(ReadOutcome::Full)
+}
+
+/// Decode frames off one incoming stream until Bye, shutdown, or error.
+fn reader_loop(shared: &Shared, mut stream: Stream, sender: usize) {
+    let my = shared.rank;
+    let fail = |kind: io::ErrorKind, detail: String| {
+        shared.set_fail(FabricError::new(my, kind, detail).with_peer(sender));
+    };
+    // canonical sequence numbers, assigned in arrival order per
+    // (epoch, step) — this thread is the only writer for this sender
+    let mut seqs: HashMap<(u64, usize), u64> = HashMap::new();
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    loop {
+        match read_full(&mut stream, &mut header, shared, None) {
+            Ok(ReadOutcome::Shutdown) => return,
+            Ok(ReadOutcome::Eof) => {
+                if shared.shutdown.load() == 0 {
+                    fail(
+                        io::ErrorKind::UnexpectedEof,
+                        format!("peer {sender} closed the stream without a bye frame"),
+                    );
+                }
+                return;
+            }
+            Ok(ReadOutcome::Full) => {}
+            Err(e) => {
+                if shared.shutdown.load() == 0 {
+                    fail(e.kind(), format!("reading frame header from peer {sender}: {e}"));
+                }
+                return;
+            }
+        }
+        let h: FrameHeader = match decode_header(&header) {
+            Ok(h) => h,
+            Err(e) => {
+                fail(
+                    io::ErrorKind::InvalidData,
+                    format!("frame from peer {sender}: {e}"),
+                );
+                return;
+            }
+        };
+        let mut body = vec![0u8; h.body_len as usize];
+        match read_full(&mut stream, &mut body, shared, None) {
+            Ok(ReadOutcome::Full) => {}
+            Ok(ReadOutcome::Shutdown) => return,
+            Ok(ReadOutcome::Eof) => {
+                if shared.shutdown.load() == 0 {
+                    fail(
+                        io::ErrorKind::UnexpectedEof,
+                        format!("peer {sender} closed the stream mid-frame"),
+                    );
+                }
+                return;
+            }
+            Err(e) => {
+                if shared.shutdown.load() == 0 {
+                    fail(e.kind(), format!("reading frame body from peer {sender}: {e}"));
+                }
+                return;
+            }
+        }
+        match decode_body(h, &body) {
+            Ok(Frame::Packet { epoch, pkt }) => {
+                if pkt.sender() != sender || pkt.receiver() != my {
+                    fail(
+                        io::ErrorKind::InvalidData,
+                        format!(
+                            "peer {sender} sent a packet routed {}→{}",
+                            pkt.sender(),
+                            pkt.receiver()
+                        ),
+                    );
+                    return;
+                }
+                let step = pkt.offset();
+                let seq = {
+                    let c = seqs.entry((epoch as u64, step)).or_insert(0);
+                    let s = *c;
+                    *c += 1;
+                    s
+                };
+                shared.push(sender, epoch as u64, step, seq, pkt);
+            }
+            Ok(Frame::Bye) => return,
+            Ok(Frame::Handshake(_)) => {
+                fail(
+                    io::ErrorKind::InvalidData,
+                    format!("peer {sender} re-sent a handshake mid-stream"),
+                );
+                return;
+            }
+            Err(e) => {
+                fail(
+                    io::ErrorKind::InvalidData,
+                    format!("frame body from peer {sender}: {e}"),
+                );
+                return;
+            }
+        }
+    }
+}
+
+/// The socket-backed [`RankFabric`]. One instance per rank *process*;
+/// `send` frames packets onto the peer streams and `recv_step` drains
+/// this rank's inbox in canonical order. See the module docs for the
+/// topology and epoch semantics.
+pub struct SocketFabric {
+    rank: usize,
+    n_ranks: usize,
+    shared: Arc<Shared>,
+    /// write streams, indexed by peer rank (`None` at `self.rank`)
+    outs: Vec<Option<Mutex<Stream>>>,
+    /// current exchange epoch (bumped by `begin_exchange`)
+    epoch: AtomicU64,
+    /// canonical seqs for loopback sends, keyed like the readers'
+    self_seqs: Mutex<HashMap<(u64, usize), u64>>,
+    /// wall-clock `(frame bytes, seconds)` per blocking send
+    link: Mutex<Vec<(u64, f64)>>,
+    opts: SocketOptions,
+    readers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// nonzero once `finish` ran (bye frames sent)
+    done: AtomicU64,
+}
+
+impl SocketFabric {
+    /// Build the mesh: connect out to every peer (bounded retry while
+    /// their listeners come up), send our handshake on each outgoing
+    /// stream, then accept and validate one inbound handshake per peer.
+    /// `max_steps` sizes the shared ledger (the widest schedule any
+    /// combine can use — `n_ranks` covers every ring).
+    pub fn establish(
+        rank: usize,
+        listener: SocketListener,
+        peers: &[PeerAddr],
+        digest: u64,
+        max_steps: usize,
+        opts: SocketOptions,
+    ) -> FabricResult<SocketFabric> {
+        let n_ranks = peers.len();
+        assert!(rank < n_ranks, "rank {rank} out of range ({n_ranks})");
+        let err = |kind, detail: String| FabricError::new(rank, kind, detail);
+
+        let shared = Arc::new(Shared {
+            rank,
+            n_ranks,
+            ledger: StepLedger::new(n_ranks, max_steps),
+            inbox: Mutex::new(Vec::new()),
+            arrival: Condvar::new(),
+            fail: Mutex::new(None),
+            shutdown: AtomicU64::new(0),
+        });
+
+        // outgoing half: one stream per peer, handshake first
+        let hello = encode_handshake(&Handshake {
+            config_digest: digest,
+            rank: rank as u32,
+            n_ranks: n_ranks as u32,
+        });
+        let deadline = Instant::now() + opts.connect_timeout;
+        let mut outs: Vec<Option<Mutex<Stream>>> = Vec::with_capacity(n_ranks);
+        for (q, addr) in peers.iter().enumerate() {
+            if q == rank {
+                outs.push(None);
+                continue;
+            }
+            let mut backoff = opts.connect_backoff;
+            let mut stream = loop {
+                match Stream::connect(addr) {
+                    Ok(s) => break s,
+                    Err(e) => {
+                        if Instant::now() + backoff > deadline {
+                            return Err(err(
+                                e.kind(),
+                                format!("connecting to rank {q} at {addr}: {e}"),
+                            )
+                            .with_peer(q));
+                        }
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(Duration::from_millis(500));
+                    }
+                }
+            };
+            stream
+                .set_write_timeout(Some(opts.recv_timeout))
+                .map_err(|e| err(e.kind(), format!("peer {q}: set write timeout: {e}")))?;
+            stream
+                .write_all(&hello)
+                .map_err(|e| err(e.kind(), format!("handshake to rank {q}: {e}")).with_peer(q))?;
+            outs.push(Some(Mutex::new(stream)));
+        }
+
+        // incoming half: accept one stream per peer, validate its
+        // handshake, and hand it to a reader thread
+        listener
+            .set_nonblocking(true)
+            .map_err(|e| err(e.kind(), format!("accept setup: {e}")))?;
+        let mut readers = Vec::with_capacity(n_ranks.saturating_sub(1));
+        let mut seen = vec![false; n_ranks];
+        seen[rank] = true;
+        for _ in 0..n_ranks.saturating_sub(1) {
+            let mut stream = loop {
+                match listener.accept() {
+                    Ok(s) => break s,
+                    Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                        if Instant::now() > deadline {
+                            let missing: Vec<usize> = (0..n_ranks).filter(|&q| !seen[q]).collect();
+                            return Err(err(
+                                io::ErrorKind::TimedOut,
+                                format!("rank(s) {missing:?} never connected"),
+                            ));
+                        }
+                        std::thread::sleep(Duration::from_millis(5));
+                    }
+                    Err(e) => return Err(err(e.kind(), format!("accept: {e}"))),
+                }
+            };
+            stream
+                .set_read_timeout(Some(READ_POLL))
+                .map_err(|e| err(e.kind(), format!("set read timeout: {e}")))?;
+            // read the handshake frame (header + body) with the deadline
+            let hs = read_handshake(&mut stream, &shared, deadline)
+                .map_err(|e| FabricError { rank, ..e })?;
+            if hs.config_digest != digest {
+                return Err(err(
+                    io::ErrorKind::InvalidData,
+                    format!(
+                        "peer rank {} joined with config digest {:#018x}, ours is {:#018x} \
+                         (different run or stale binary)",
+                        hs.rank, hs.config_digest, digest
+                    ),
+                )
+                .with_peer(hs.rank as usize));
+            }
+            if hs.n_ranks as usize != n_ranks {
+                return Err(err(
+                    io::ErrorKind::InvalidData,
+                    format!("peer expects {} ranks, this run has {n_ranks}", hs.n_ranks),
+                ));
+            }
+            let q = hs.rank as usize;
+            if q >= n_ranks || seen[q] {
+                return Err(err(
+                    io::ErrorKind::InvalidData,
+                    format!("unexpected or duplicate peer rank {q}"),
+                ));
+            }
+            seen[q] = true;
+            let sh = Arc::clone(&shared);
+            readers.push(std::thread::spawn(move || reader_loop(&sh, stream, q)));
+        }
+
+        Ok(SocketFabric {
+            rank,
+            n_ranks,
+            shared,
+            outs,
+            epoch: AtomicU64::new(0),
+            self_seqs: Mutex::new(HashMap::new()),
+            link: Mutex::new(Vec::new()),
+            opts,
+            readers: Mutex::new(readers),
+            done: AtomicU64::new(0),
+        })
+    }
+
+    /// The rank this process owns.
+    pub fn rank(&self) -> usize {
+        self.rank
+    }
+
+    /// Orderly teardown: tell every peer goodbye so their readers exit
+    /// cleanly, then let ours drain. Idempotent; also run by `Drop`.
+    pub fn finish(&self) {
+        if self.done.fetch_add(1) != 0 {
+            return;
+        }
+        let bye = encode_bye();
+        for out in self.outs.iter().flatten() {
+            let mut s = out.lock().unwrap();
+            let _ = s.write_all(&bye);
+        }
+        self.shared.shutdown.store(1);
+        let mut readers = self.readers.lock().unwrap();
+        for h in readers.drain(..) {
+            let _ = h.join();
+        }
+        // close write halves so a peer stuck mid-read unblocks
+        for out in self.outs.iter().flatten() {
+            out.lock().unwrap().shutdown_both();
+        }
+    }
+
+    fn current_epoch(&self) -> u64 {
+        self.epoch.load()
+    }
+
+    fn first_failure(&self) -> Option<FabricError> {
+        self.shared.fail.lock().unwrap().clone()
+    }
+}
+
+/// Read and decode the mandatory first (handshake) frame off a fresh
+/// inbound stream.
+fn read_handshake(
+    stream: &mut Stream,
+    shared: &Shared,
+    deadline: Instant,
+) -> FabricResult<Handshake> {
+    let err = |kind, detail: String| FabricError::new(shared.rank, kind, detail);
+    let mut header = [0u8; FRAME_HEADER_BYTES];
+    let mut fill = |buf: &mut [u8]| -> FabricResult<()> {
+        match read_full(stream, buf, shared, Some(deadline)) {
+            Ok(ReadOutcome::Full) => Ok(()),
+            Ok(ReadOutcome::Eof) | Ok(ReadOutcome::Shutdown) => Err(err(
+                io::ErrorKind::UnexpectedEof,
+                "peer closed before completing the handshake".into(),
+            )),
+            Err(e) if e.kind() == io::ErrorKind::TimedOut => Err(err(
+                io::ErrorKind::TimedOut,
+                "handshake never arrived".into(),
+            )),
+            Err(e) => Err(err(e.kind(), format!("reading handshake: {e}"))),
+        }
+    };
+    fill(&mut header)?;
+    let h = decode_header(&header)
+        .map_err(|e| err(io::ErrorKind::InvalidData, format!("handshake header: {e}")))?;
+    let mut body = vec![0u8; h.body_len as usize];
+    fill(&mut body)?;
+    match decode_body(h, &body) {
+        Ok(Frame::Handshake(hs)) => Ok(hs),
+        Ok(other) => Err(err(
+            io::ErrorKind::InvalidData,
+            format!("expected a handshake frame, got {other:?}"),
+        )),
+        Err(e) => Err(err(io::ErrorKind::InvalidData, format!("handshake: {e}"))),
+    }
+}
+
+impl RankFabric for SocketFabric {
+    fn n_ranks(&self) -> usize {
+        self.n_ranks
+    }
+
+    fn begin_exchange(&self, n_steps: usize) {
+        // every rank process executes the same deterministic sequence of
+        // combines, so bumping the local epoch keeps all ranks' epochs in
+        // lockstep without any coordination traffic
+        self.epoch.fetch_add(1);
+        self.shared.ledger.begin_exchange(n_steps);
+    }
+
+    fn send(&self, p: Packet) -> FabricResult<()> {
+        let to = p.receiver();
+        let step = p.offset();
+        let bytes = p.bytes();
+        let epoch = self.current_epoch();
+        assert_eq!(
+            p.sender(),
+            self.rank,
+            "socket fabric only sends for its own rank"
+        );
+        self.shared.ledger.note_send(self.rank, to, step, bytes);
+        if to == self.rank {
+            // loopback: straight into the inbox, canonical seq assigned
+            // here because no reader thread sees this packet
+            let seq = {
+                let mut m = self.self_seqs.lock().unwrap();
+                let c = m.entry((epoch, step)).or_insert(0);
+                let s = *c;
+                *c += 1;
+                s
+            };
+            self.shared.push(self.rank, epoch, step, seq, p);
+            return Ok(());
+        }
+        if let Some(e) = self.first_failure() {
+            return Err(e.at_step(step));
+        }
+        let frame = encode_packet_frame(&p, epoch as u32);
+        let out = self.outs[to].as_ref().expect("peer stream");
+        let mut s = out.lock().unwrap();
+        let t0 = Instant::now();
+        s.write_all(&frame).map_err(|e| {
+            FabricError::new(self.rank, e.kind(), format!("sending to rank {to}: {e}"))
+                .at_step(step)
+                .with_peer(to)
+        })?;
+        let secs = t0.elapsed().as_secs_f64();
+        drop(s);
+        self.link.lock().unwrap().push((frame.len() as u64, secs));
+        Ok(())
+    }
+
+    fn recv_step(&self, p: usize, step: usize, n_expected: usize) -> FabricResult<Vec<Packet>> {
+        assert_eq!(p, self.rank, "socket fabric owns a single rank");
+        let epoch = self.current_epoch();
+        self.shared.ledger.mark_drained(p, step);
+        let deadline = Instant::now() + self.opts.recv_timeout;
+        let matches =
+            |q: &NetQueued| q.epoch == epoch && q.step == step;
+        let mut ib = self.shared.inbox.lock().unwrap();
+        while ib.iter().filter(|q| matches(q)).count() < n_expected {
+            if let Some(e) = self.first_failure() {
+                return Err(e.at_step(step));
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                let got = ib.iter().filter(|q| matches(q)).count();
+                return Err(FabricError::timeout(
+                    p,
+                    step,
+                    format!("{got} of {n_expected} packet(s) arrived before the window closed"),
+                ));
+            }
+            let (guard, _) = self
+                .shared
+                .arrival
+                .wait_timeout(ib, deadline - now)
+                .unwrap();
+            ib = guard;
+        }
+        let mut got = Vec::with_capacity(n_expected);
+        let mut rest = Vec::with_capacity(ib.len().saturating_sub(n_expected));
+        for q in ib.drain(..) {
+            if matches(&q) {
+                got.push(q);
+            } else {
+                rest.push(q);
+            }
+        }
+        *ib = rest;
+        drop(ib);
+        got.sort_by_key(|q| (q.sender, q.seq));
+        let bytes: u64 = got.iter().map(|q| q.pkt.bytes()).sum();
+        self.shared.ledger.note_recv(p, step, bytes);
+        self.shared.ledger.unpark(bytes);
+        Ok(got.into_iter().map(|q| q.pkt).collect())
+    }
+
+    fn ledger(&self) -> &StepLedger {
+        &self.shared.ledger
+    }
+
+    fn pending(&self, p: usize) -> usize {
+        assert_eq!(p, self.rank, "socket fabric owns a single rank");
+        let epoch = self.current_epoch();
+        self.shared
+            .inbox
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|q| q.epoch == epoch)
+            .count()
+    }
+
+    fn assert_empty(&self) {
+        // packets of a *future* epoch are legitimate (a fast peer already
+        // sending the next combine); only current-or-older ones strand
+        let epoch = self.current_epoch();
+        let n = self
+            .shared
+            .inbox
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|q| q.epoch <= epoch)
+            .count();
+        assert!(n == 0, "rank {} has {n} stranded packets", self.rank);
+    }
+
+    fn measured_link(&self) -> Option<LinkMeasurement> {
+        LinkMeasurement::fit(&self.link.lock().unwrap())
+    }
+}
+
+impl Drop for SocketFabric {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::comm::frame::config_digest;
+
+    fn establish_mesh(
+        n: usize,
+        digest: u64,
+        opts: SocketOptions,
+    ) -> Vec<FabricResult<SocketFabric>> {
+        let listeners: Vec<SocketListener> = (0..n)
+            .map(|_| SocketListener::bind(&PeerAddr::Tcp("127.0.0.1:0".into())).unwrap())
+            .collect();
+        let addrs: Vec<PeerAddr> = listeners.iter().map(|l| l.local_addr().clone()).collect();
+        let mut out: Vec<Option<FabricResult<SocketFabric>>> = (0..n).map(|_| None).collect();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (r, l) in listeners.into_iter().enumerate() {
+                let addrs = addrs.clone();
+                handles.push(s.spawn(move || {
+                    (r, SocketFabric::establish(r, l, &addrs, digest, n, opts))
+                }));
+            }
+            for h in handles {
+                let (r, f) = h.join().unwrap();
+                out[r] = Some(f);
+            }
+        });
+        out.into_iter().map(|o| o.unwrap()).collect()
+    }
+
+    fn quick_opts() -> SocketOptions {
+        SocketOptions {
+            connect_timeout: Duration::from_secs(10),
+            connect_backoff: Duration::from_millis(5),
+            recv_timeout: Duration::from_secs(10),
+        }
+    }
+
+    #[test]
+    fn mesh_exchange_is_canonical_and_accounted() {
+        let digest = config_digest("socket-mesh-test");
+        let fabrics: Vec<SocketFabric> = establish_mesh(3, digest, quick_opts())
+            .into_iter()
+            .map(|f| f.unwrap())
+            .collect();
+        // one 2-step exchange: every rank sends one packet per peer per
+        // step (including a loopback), payload tagged (sender, step)
+        std::thread::scope(|s| {
+            for (r, fab) in fabrics.iter().enumerate() {
+                s.spawn(move || {
+                    fab.begin_exchange(2);
+                    for w in 0..2 {
+                        for q in 0..3 {
+                            RankFabric::send(
+                                fab,
+                                Packet::new(r, q, w, 0, 2, vec![r as f32, w as f32]),
+                            )
+                            .unwrap();
+                        }
+                    }
+                    for w in 0..2 {
+                        let got = fab.recv_step(r, w, 3).unwrap();
+                        let senders: Vec<usize> = got.iter().map(|p| p.sender()).collect();
+                        assert_eq!(senders, [0, 1, 2], "canonical order at rank {r}");
+                        for p in &got {
+                            assert_eq!(p.dense_rows(), &[p.sender() as f32, w as f32]);
+                        }
+                    }
+                    fab.assert_empty();
+                });
+            }
+        });
+        // ledger: each rank sent 3 packets per step, received 3 per step
+        let bytes = Packet::new(0, 1, 0, 0, 2, vec![0.0; 2]).bytes();
+        for (r, fab) in fabrics.iter().enumerate() {
+            for w in 0..2 {
+                assert_eq!(fab.ledger().sent_msgs(r, w), 3);
+                assert_eq!(fab.ledger().sent_bytes(r, w), 3 * bytes);
+                assert_eq!(fab.ledger().recv_bytes(r, w), 3 * bytes);
+            }
+            assert_eq!(fab.ledger().in_flight_bytes(), 0);
+            assert!(fab.ledger().in_flight_peak() >= bytes);
+            // real sends were clocked (2 peers × 2 steps = 4 samples)
+            let link = fab.measured_link().expect("link fit");
+            assert_eq!(link.samples, 4);
+        }
+        for f in &fabrics {
+            f.finish();
+        }
+    }
+
+    #[test]
+    fn epochs_keep_racing_combines_apart() {
+        let digest = config_digest("socket-epoch-test");
+        let mut fabrics = establish_mesh(2, digest, quick_opts());
+        let f1 = fabrics.pop().unwrap().unwrap();
+        let f0 = fabrics.pop().unwrap().unwrap();
+        std::thread::scope(|s| {
+            // rank 0 races ahead: sends its packets for two successive
+            // 1-step combines before rank 1 drains the first
+            s.spawn(|| {
+                f0.begin_exchange(1);
+                RankFabric::send(&f0, Packet::new(0, 1, 0, 0, 1, vec![1.0])).unwrap();
+                let got = f0.recv_step(0, 0, 1).unwrap();
+                assert_eq!(got[0].dense_rows(), &[10.0]);
+                f0.begin_exchange(1);
+                RankFabric::send(&f0, Packet::new(0, 1, 0, 0, 1, vec![2.0])).unwrap();
+                let got = f0.recv_step(0, 0, 1).unwrap();
+                assert_eq!(got[0].dense_rows(), &[20.0]);
+            });
+            s.spawn(|| {
+                std::thread::sleep(Duration::from_millis(50));
+                f1.begin_exchange(1);
+                RankFabric::send(&f1, Packet::new(1, 0, 0, 0, 1, vec![10.0])).unwrap();
+                // even if 0's second-combine packet already arrived, the
+                // epoch tag keeps it out of this drain
+                let got = f1.recv_step(1, 0, 1).unwrap();
+                assert_eq!(got[0].dense_rows(), &[1.0], "first combine's packet");
+                f1.begin_exchange(1);
+                RankFabric::send(&f1, Packet::new(1, 0, 0, 0, 1, vec![20.0])).unwrap();
+                let got = f1.recv_step(1, 0, 1).unwrap();
+                assert_eq!(got[0].dense_rows(), &[2.0]);
+            });
+        });
+        f0.finish();
+        f1.finish();
+    }
+
+    #[test]
+    fn digest_mismatch_is_rejected_typed() {
+        // two ranks established with different config digests: at least
+        // one side must fail handshake validation with InvalidData
+        let listeners: Vec<SocketListener> = (0..2)
+            .map(|_| SocketListener::bind(&PeerAddr::Tcp("127.0.0.1:0".into())).unwrap())
+            .collect();
+        let addrs: Vec<PeerAddr> = listeners.iter().map(|l| l.local_addr().clone()).collect();
+        let opts = SocketOptions {
+            connect_timeout: Duration::from_secs(5),
+            ..quick_opts()
+        };
+        let mut results = Vec::new();
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (r, l) in listeners.into_iter().enumerate() {
+                let addrs = addrs.clone();
+                let digest = config_digest(if r == 0 { "run-a" } else { "run-b" });
+                handles.push(
+                    s.spawn(move || SocketFabric::establish(r, l, &addrs, digest, 2, opts)),
+                );
+            }
+            for h in handles {
+                results.push(h.join().unwrap());
+            }
+        });
+        let failures: Vec<&FabricError> =
+            results.iter().filter_map(|r| r.as_ref().err()).collect();
+        assert!(!failures.is_empty(), "mismatched digests must be rejected");
+        for e in failures {
+            assert_eq!(e.kind, io::ErrorKind::InvalidData, "{e}");
+            assert!(e.detail.contains("digest"), "{e}");
+        }
+    }
+
+    #[test]
+    fn missing_peer_times_out_typed() {
+        // a recv_step whose peer never sends surfaces a typed timeout
+        // instead of hanging the fold
+        let opts = SocketOptions {
+            recv_timeout: Duration::from_millis(200),
+            ..quick_opts()
+        };
+        let fabrics: Vec<SocketFabric> =
+            establish_mesh(2, config_digest("timeout-test"), opts)
+                .into_iter()
+                .map(|f| f.unwrap())
+                .collect();
+        let f0 = &fabrics[0];
+        f0.begin_exchange(1);
+        fabrics[1].begin_exchange(1);
+        let err = f0.recv_step(0, 0, 1).unwrap_err();
+        assert_eq!(err.kind, io::ErrorKind::TimedOut, "{err}");
+        assert_eq!(err.rank, 0);
+        assert_eq!(err.step, Some(0));
+        for f in &fabrics {
+            f.finish();
+        }
+    }
+
+    #[test]
+    fn peer_death_mid_step_surfaces_disconnect() {
+        let opts = SocketOptions {
+            recv_timeout: Duration::from_secs(30),
+            ..quick_opts()
+        };
+        let mut fabrics = establish_mesh(2, config_digest("disconnect-test"), opts);
+        let f1 = fabrics.pop().unwrap().unwrap();
+        let f0 = fabrics.pop().unwrap().unwrap();
+        f0.begin_exchange(1);
+        // rank 1 dies without a bye: drop hard by shutting its sockets
+        // (finish() would send the orderly bye, which is the clean path)
+        for out in f1.outs.iter().flatten() {
+            out.lock().unwrap().shutdown_both();
+        }
+        let err = f0.recv_step(0, 0, 1).unwrap_err();
+        assert_eq!(err.kind, io::ErrorKind::UnexpectedEof, "{err}");
+        assert_eq!(err.peer, Some(1));
+        assert!(err.detail.contains("without a bye"), "{err}");
+        drop(f1);
+        f0.finish();
+    }
+
+    #[test]
+    fn unix_domain_mesh_works() {
+        let dir = std::env::temp_dir().join(format!("harpsg-uds-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let listeners: Vec<SocketListener> = (0..2)
+            .map(|r| {
+                SocketListener::bind(&PeerAddr::Unix(dir.join(format!("rank-{r}.sock")))).unwrap()
+            })
+            .collect();
+        let addrs: Vec<PeerAddr> = listeners.iter().map(|l| l.local_addr().clone()).collect();
+        let digest = config_digest("uds-test");
+        let mut fabrics: Vec<Option<SocketFabric>> = vec![None, None];
+        std::thread::scope(|s| {
+            let mut handles = Vec::new();
+            for (r, l) in listeners.into_iter().enumerate() {
+                let addrs = addrs.clone();
+                handles.push(s.spawn(move || {
+                    (
+                        r,
+                        SocketFabric::establish(r, l, &addrs, digest, 2, quick_opts()).unwrap(),
+                    )
+                }));
+            }
+            for h in handles {
+                let (r, f) = h.join().unwrap();
+                fabrics[r] = Some(f);
+            }
+        });
+        let f0 = fabrics[0].take().unwrap();
+        let f1 = fabrics[1].take().unwrap();
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                f0.begin_exchange(1);
+                RankFabric::send(&f0, Packet::new(0, 1, 0, 0, 1, vec![5.0])).unwrap();
+                assert_eq!(f0.recv_step(0, 0, 1).unwrap()[0].dense_rows(), &[6.0]);
+            });
+            s.spawn(|| {
+                f1.begin_exchange(1);
+                RankFabric::send(&f1, Packet::new(1, 0, 0, 0, 1, vec![6.0])).unwrap();
+                assert_eq!(f1.recv_step(1, 0, 1).unwrap()[0].dense_rows(), &[5.0]);
+            });
+        });
+        f0.finish();
+        f1.finish();
+        drop(f0);
+        drop(f1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

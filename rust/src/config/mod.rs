@@ -8,7 +8,7 @@
 use crate::api::HarpsgError;
 use crate::colorcount::{KernelMode, StorageMode};
 use crate::comm::HockneyParams;
-use crate::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
+use crate::coordinator::{EngineKind, ExchangeExec, FabricKind, ModeSelect, RunConfig};
 use crate::graph::GraphStorageMode;
 use anyhow::{anyhow, bail, Result};
 use std::collections::HashMap;
@@ -131,7 +131,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 21] = [
+const KNOWN_KEYS: [&str; 22] = [
     "template",
     "dataset",
     "scale",
@@ -144,6 +144,7 @@ const KNOWN_KEYS: [&str; 21] = [
     "run.mode",
     "run.engine",
     "run.exchange",
+    "run.fabric",
     "run.adaptive",
     "run.table_storage",
     "run.kernel",
@@ -252,6 +253,13 @@ impl RunSpec {
             run.exchange = ExchangeExec::parse(x).ok_or_else(|| {
                 HarpsgError::Parse(format!(
                     "`run.exchange`: unknown executor `{x}` (threaded|sequential)"
+                ))
+            })?;
+        }
+        if let Some(f) = want_str(doc, "run.fabric")? {
+            run.fabric = FabricKind::parse(f).ok_or_else(|| {
+                HarpsgError::Parse(format!(
+                    "`run.fabric`: unknown fabric `{f}` (threaded|socket)"
                 ))
             })?;
         }
@@ -392,6 +400,24 @@ beta = 1.7e-10
             ExchangeExec::Sequential
         );
         let bad = format!("{SAMPLE}\n[run]\nexchange = \"quantum\"\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn fabric_key_parses_and_validates() {
+        // default when omitted: the in-process threaded fabric
+        assert_eq!(RunSpec::parse(SAMPLE).unwrap().run.fabric, FabricKind::Threaded);
+        for (spelling, kind) in [
+            ("threaded", FabricKind::Threaded),
+            ("socket", FabricKind::Socket),
+        ] {
+            let with_key = format!("{SAMPLE}\n[run]\nfabric = \"{spelling}\"\n");
+            assert_eq!(RunSpec::parse(&with_key).unwrap().run.fabric, kind);
+        }
+        // unknown spellings and wrong types are typed errors
+        let bad = format!("{SAMPLE}\n[run]\nfabric = \"mpi\"\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        let bad = format!("{SAMPLE}\n[run]\nfabric = 2\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 

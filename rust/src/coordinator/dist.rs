@@ -26,7 +26,7 @@
 
 use super::memory::{DualAccountant, MemClass};
 use super::run::{
-    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RunConfig, RunResult,
+    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RankLink, RunConfig, RunResult,
     StorageDecision, ThreadStats,
 };
 use crate::api::{HarpsgError, Progress};
@@ -37,8 +37,8 @@ use crate::colorcount::{EngineContext, KernelMode};
 use crate::colorcount::{init_leaf_table, median_of_means, Coloring, Count, CountTable};
 use crate::combin::SplitTable;
 use crate::comm::{
-    AdaptivePolicy, CombineShape, CommMode, Fabric, GroupCalibration, HockneyParams, Packet,
-    Schedule, ThreadedFabric,
+    AdaptivePolicy, CombineShape, CommMode, FabricResult, GroupCalibration, HockneyParams,
+    LinkMeasurement, Packet, RankFabric, Schedule, ThreadedFabric,
 };
 use crate::graph::shard::shard_to_scratch;
 use crate::graph::{Graph, GraphLoadError, GraphStore, Partition, RequestLists, SegmentedGraph};
@@ -523,10 +523,45 @@ impl<'g> DistributedRunner<'g> {
         }
     }
 
-    /// Run the full estimation; see [`RunResult`].
+    /// Run the full estimation on the default in-process fabric; see
+    /// [`RunResult`]. Infallible: the in-process mailbox cannot lose a
+    /// peer, so any transport error here is a logic bug.
     pub fn run(&mut self) -> RunResult {
+        let n_ranks = self.cfg.n_ranks;
+        // capacity covers the deepest ring (P-1 steps) and the 1-step
+        // all-to-all; ledger step slots are reserved per-exchange anyway
+        let fabric = ThreadedFabric::for_run(n_ranks, n_ranks.max(1));
+        let owned: Vec<usize> = (0..n_ranks).collect();
+        match self.run_on(&fabric, &owned) {
+            Ok(r) => r,
+            Err(e) => panic!("in-process run cannot fail: {e}"),
+        }
+    }
+
+    /// Run the full estimation over an explicit [`RankFabric`], computing
+    /// only the ranks in `owned` locally. The in-process path owns all of
+    /// them; in **process mode** each rank process passes its own single
+    /// rank and a [`crate::comm::SocketFabric`] wired to its peers. The
+    /// control flow — iteration loop, DAG order, per-subtemplate exchange
+    /// decisions — is replicated deterministically on every participant,
+    /// so the fabric only ever carries count rows plus (process mode) the
+    /// per-iteration calibration allreduce that keeps every process's
+    /// adaptive state bit-identical. Transport failures surface as
+    /// [`HarpsgError::Transport`] instead of hanging the fold.
+    pub fn run_on(
+        &mut self,
+        fabric: &dyn RankFabric,
+        owned: &[usize],
+    ) -> Result<RunResult, HarpsgError> {
         let wall = Instant::now();
         let n_ranks = self.cfg.n_ranks;
+        assert_eq!(
+            fabric.n_ranks(),
+            n_ranks,
+            "fabric sized for a different rank count"
+        );
+        assert!(!owned.is_empty(), "a participant must own at least one rank");
+        let process_mode = owned.len() != n_ranks;
         let k = self.ctx.k;
         let n_subs = self.ctx.dag.subs.len();
         let last_use = self.ctx.dag.last_use();
@@ -581,6 +616,13 @@ impl<'g> DistributedRunner<'g> {
         let mut rho_meas_shape: Vec<Option<(bool, usize)>> = vec![None; n_subs];
         // this iteration's (predicted ρ, measured ρ) feedback pairs
         let mut iter_feedback: Vec<(f64, f64)> = Vec::new();
+        // this iteration's per-combine step measurements from the
+        // threaded executor: (sub, predicted ρ, pipelined, per-step
+        // (Σ comp_s, Σ wait_s) over the locally-owned ranks). Folded into
+        // the measured-ρ accumulators at iteration end — *after* the
+        // process-mode allreduce has globalized the sums, so every rank
+        // process calibrates from identical values
+        let mut iter_meas: Vec<(usize, f64, bool, Vec<(f64, f64)>)> = Vec::new();
         // units/seconds already folded into the calibration, so each
         // iteration feeds only its own delta (not the running mean —
         // the EWMA does the smoothing)
@@ -604,8 +646,8 @@ impl<'g> DistributedRunner<'g> {
         } else {
             MemClass::Graph
         };
-        for (p, m) in mems.iter_mut().enumerate() {
-            m.alloc(graph_class, self.plan.graph_bytes_per_rank[p]);
+        for &p in owned {
+            mems[p].alloc(graph_class, self.plan.graph_bytes_per_rank[p]);
         }
         let mut total_units = 0.0f64;
         let mut real_compute = 0.0f64;
@@ -656,8 +698,8 @@ impl<'g> DistributedRunner<'g> {
                     .map(|p| CombineScratch::new(self.plan.part.n_local(p), max_agg))
                     .collect()
             };
-            for (p, m) in mems.iter_mut().enumerate() {
-                m.alloc(
+            for &p in owned {
+                mems[p].alloc(
                     MemClass::Scratch,
                     (self.plan.part.n_local(p) * max_agg * std::mem::size_of::<Count>()) as u64,
                 );
@@ -666,7 +708,7 @@ impl<'g> DistributedRunner<'g> {
             for (order_pos, &i) in self.ctx.dag.order.clone().iter().enumerate() {
                 let sub = self.ctx.dag.subs[i].clone();
                 if sub.is_leaf() {
-                    for p in 0..n_ranks {
+                    for &p in owned {
                         let t = init_leaf_table(&self.plan.part.locals[p], &coloring);
                         mems[p].alloc(MemClass::CountTable, t.bytes());
                         let stored =
@@ -676,8 +718,10 @@ impl<'g> DistributedRunner<'g> {
                     last_storage[i] = Some(sub_storage[i]);
                 } else {
                     let dec = decisions[i].as_ref().expect("sub decided this iteration");
-                    let (rec, meas_rho) = if exec_threaded {
+                    let (rec, step_meas) = if exec_threaded {
                         self.combine_subtemplate_threaded(
+                            fabric,
+                            owned,
                             i,
                             dec,
                             &storage_policy,
@@ -692,9 +736,11 @@ impl<'g> DistributedRunner<'g> {
                             it,
                             &mut measured,
                             &mut pipe,
-                        )
+                        )?
                     } else {
                         let rec = self.combine_subtemplate(
+                            fabric,
+                            owned,
                             i,
                             dec,
                             &storage_policy,
@@ -710,23 +756,19 @@ impl<'g> DistributedRunner<'g> {
                             it,
                             use_exec,
                             &mut measured,
-                        );
-                        (rec, None)
+                        )?;
+                        (rec, Vec::new())
                     };
                     last_storage[i] = Some(sub_storage[i]);
-                    if let Some(r) = meas_rho {
-                        rho_meas_sum[i] += r;
-                        rho_meas_n[i] += 1;
-                        if dec.pipelined {
-                            iter_feedback.push((dec.predicted_rho, r));
-                        }
+                    if !step_meas.is_empty() {
+                        iter_meas.push((i, dec.predicted_rho, dec.pipelined, step_meas));
                     }
                     records.push(rec);
                 }
                 // free tables whose last reader has run
                 for (j, lu) in last_use.iter().enumerate() {
                     if *lu == order_pos && j != self.ctx.dag.root {
-                        for p in 0..n_ranks {
+                        for &p in owned {
                             if let Some(t) = tables[p][j].take() {
                                 mems[p].free2(MemClass::CountTable, t.bytes(), t.dense_bytes());
                             }
@@ -735,14 +777,17 @@ impl<'g> DistributedRunner<'g> {
                 }
             }
 
-            // Alg 2 line 22: global colorful count and the estimate
-            let total: f64 = (0..n_ranks)
-                .map(|p| tables[p][self.ctx.dag.root].as_ref().unwrap().total())
+            // Alg 2 line 22: colorful count over the locally-owned ranks
+            // (the global count in-process; the rank's partial in process
+            // mode, where the launcher sums the per-process partials)
+            let total: f64 = owned
+                .iter()
+                .map(|&p| tables[p][self.ctx.dag.root].as_ref().unwrap().total())
                 .sum();
             colorful.push(total);
             samples.push(total * self.ctx.colorful_scale() / self.ctx.aut as f64);
 
-            for p in 0..n_ranks {
+            for &p in owned {
                 if let Some(t) = tables[p][self.ctx.dag.root].take() {
                     mems[p].free2(MemClass::CountTable, t.bytes(), t.dense_bytes());
                 }
@@ -756,10 +801,75 @@ impl<'g> DistributedRunner<'g> {
             // seconds-per-unit (the delta, not the running mean) and its
             // predicted-vs-measured overlap pairs recalibrate the model
             // before the next iteration's decisions (adaptive sweep only —
-            // the static modes never read `cal`)
+            // the static modes never read `cal`).
+            //
+            // In process mode the raw measurements are first allreduced
+            // over the rank processes (deterministic ascending-rank
+            // summation on every participant): divergent calibrations —
+            // or divergent storage statistics feeding the wire-byte
+            // model — would make processes choose different schedules
+            // next iteration, which deadlocks the exchange. The same
+            // round carries each process's measured link fit, whose
+            // average replaces the simulated Hockney α/β (the paper's
+            // calibration loop fed wall-clock timings). The round runs
+            // in every mode, not just the adaptive sweep, so storage
+            // decisions, measured ρ, and the merged report are globally
+            // identical however the work is sliced across processes.
+            let mut du = total_units - fed_units;
+            let mut dc = real_compute - fed_compute;
+            if process_mode {
+                let global = allreduce_calibration(
+                    fabric,
+                    owned,
+                    du,
+                    dc,
+                    fabric.measured_link(),
+                    &sub_storage,
+                    &iter_meas,
+                )?;
+                du = global.du;
+                dc = global.dc;
+                for (j, st) in global.storage.iter().enumerate() {
+                    if st.n_ranks > 0 {
+                        sub_storage[j] = *st;
+                        last_storage[j] = Some(*st);
+                    }
+                }
+                for (meas, entry) in global.step_meas.iter().zip(iter_meas.iter_mut()) {
+                    entry.3 = meas.clone();
+                }
+                // only the adaptive sweep feeds the measured fit back into
+                // the Hockney parameters (the paper's calibration loop);
+                // static modes keep the configured α/β so their decisions
+                // stay bit-identical to the in-process fabric's
+                if self.cfg.adaptive_group {
+                    if let Some((alpha, beta)) = global.link {
+                        self.cfg.net.alpha = alpha;
+                        self.cfg.net.beta = beta;
+                        self.cfg.policy.net.alpha = alpha;
+                        self.cfg.policy.net.beta = beta;
+                    }
+                }
+            }
+            // fold this iteration's measured mean ρ per combine, over the
+            // overlap-capable steps (step 0's wait can never be hidden —
+            // same convention as `MeasuredPipeline::mean_rho`)
+            for (j, predicted, pipelined, steps_m) in iter_meas.drain(..) {
+                if steps_m.len() > 1 {
+                    let mut sum = 0.0;
+                    for &(comp, wait) in &steps_m[1..] {
+                        let tot = comp + wait;
+                        sum += if tot <= 0.0 { 1.0 } else { comp / tot };
+                    }
+                    let r = sum / (steps_m.len() - 1) as f64;
+                    rho_meas_sum[j] += r;
+                    rho_meas_n[j] += 1;
+                    if pipelined {
+                        iter_feedback.push((predicted, r));
+                    }
+                }
+            }
             if self.cfg.adaptive_group {
-                let du = total_units - fed_units;
-                let dc = real_compute - fed_compute;
                 if du > 0.0 {
                     cal.observe_flop_time((dc / du).max(1e-12));
                 }
@@ -895,7 +1005,22 @@ impl<'g> DistributedRunner<'g> {
         if let Some(pr) = &self.progress {
             pr.on_run_end();
         }
-        RunResult {
+        // the fabric's measured link fit (socket fabrics OLS-fit their
+        // wall-clock send timings; the in-process mailbox reports none),
+        // attributed to every locally-owned rank for the merged report
+        let link: Vec<RankLink> = match fabric.measured_link() {
+            Some(l) => owned
+                .iter()
+                .map(|&p| RankLink {
+                    rank: p,
+                    alpha_s: l.alpha_s,
+                    beta_s_per_byte: l.beta_s_per_byte,
+                    samples: l.samples,
+                })
+                .collect(),
+            None => Vec::new(),
+        };
+        Ok(RunResult {
             estimate,
             samples,
             colorful,
@@ -919,7 +1044,8 @@ impl<'g> DistributedRunner<'g> {
             oom,
             graph_storage: self.plan.graph_storage.to_string(),
             graph_resident_per_rank: self.plan.graph_bytes_per_rank.clone(),
-        }
+            link,
+        })
     }
 
     /// One non-leaf subtemplate combine across all ranks: local phase, then
@@ -930,11 +1056,16 @@ impl<'g> DistributedRunner<'g> {
     /// forces the dense storage policy for that path; `measured`
     /// accumulates the executor's per-worker record. The finished output
     /// tables are stored per `policy` (dense or sparse, from measured
-    /// density), with the outcome recorded in `store_rec`. Returns the
-    /// model record.
+    /// density), with the outcome recorded in `store_rec`. Runs the
+    /// locally-owned ranks against the given fabric — in process mode
+    /// step `w` is fully posted before it drains, so the sequential fold
+    /// never deadlocks against the peer processes running the same loop.
+    /// Returns the model record.
     #[allow(clippy::too_many_arguments)]
     fn combine_subtemplate(
         &mut self,
+        fabric: &dyn RankFabric,
+        owned: &[usize],
         i: usize,
         dec: &SubDecision,
         policy: &StoragePolicy,
@@ -950,7 +1081,7 @@ impl<'g> DistributedRunner<'g> {
         iteration: usize,
         use_exec: bool,
         measured: &mut ExecStats,
-    ) -> SubRecord {
+    ) -> FabricResult<SubRecord> {
         let n_ranks = self.cfg.n_ranks;
         let sub = self.ctx.dag.subs[i].clone();
         let split = self.ctx.splits[i].clone().expect("non-leaf split");
@@ -976,12 +1107,24 @@ impl<'g> DistributedRunner<'g> {
             overhead: self.cfg.task_overhead_units,
         };
 
-        // allocate outputs
+        // allocate outputs (zero-row placeholders for ranks other
+        // processes own — they are never written or stored)
+        let mut owned_mask = vec![false; n_ranks];
+        for &p in owned {
+            owned_mask[p] = true;
+        }
         let mut outs: Vec<CountTable> = (0..n_ranks)
-            .map(|p| CountTable::zeros(self.plan.part.n_local(p), split.n_sets))
+            .map(|p| {
+                let rows = if owned_mask[p] {
+                    self.plan.part.n_local(p)
+                } else {
+                    0
+                };
+                CountTable::zeros(rows, split.n_sets)
+            })
             .collect();
-        for (p, o) in outs.iter().enumerate() {
-            mems[p].alloc(MemClass::CountTable, o.bytes());
+        for &p in owned {
+            mems[p].alloc(MemClass::CountTable, outs[p].bytes());
         }
 
         let shuffle_seed =
@@ -990,8 +1133,8 @@ impl<'g> DistributedRunner<'g> {
         // ---- local phase ----
         // NB: `pass_idx` may equal `act_idx` (deduplicated shapes, e.g. a
         // P2 splitting into leaf+leaf), so borrow immutably.
-        let mut local_makespan = vec![0.0f64; n_ranks];
-        for p in 0..n_ranks {
+        let mut local_makespan: Vec<f64> = Vec::with_capacity(owned.len());
+        for &p in owned {
             let t0 = Instant::now();
             let active = tables[p][act_idx].as_ref().unwrap();
             let passive = tables[p][pass_idx].as_ref().unwrap();
@@ -1038,7 +1181,7 @@ impl<'g> DistributedRunner<'g> {
             let tasks = make_tasks(&degs, eff_task, shuffle_seed(p, usize::MAX));
             let costs: Vec<f64> = tasks.iter().map(|t| cost_model.cost(t)).collect();
             let rep = replay(&costs, self.cfg.n_threads, self.cfg.phys_cores);
-            local_makespan[p] = rep.makespan;
+            local_makespan.push(rep.makespan);
             for (c, t) in rep.concurrency_histogram.iter().enumerate() {
                 hist_units[c.min(hist_units.len() - 1)] += t;
                 *busy_units += c as f64 * t;
@@ -1046,23 +1189,25 @@ impl<'g> DistributedRunner<'g> {
         }
 
         // ---- exchange phase ----
-        let mut fabric = Fabric::new(n_ranks);
+        // step `w` is fully posted for every owned rank before any rank
+        // drains it, so the canonical (sender, seq) drain returns the
+        // exact fold order the historical arrival-order drain produced
+        fabric.begin_exchange(schedule.n_steps());
         let mut steps: Vec<Vec<(f64, f64)>> = Vec::with_capacity(schedule.n_steps());
         for (w, plans_w) in schedule.plans.iter().enumerate() {
-            fabric.reset_accounting();
             // send: rows the receivers requested from us, in the active
             // table's own encoding (the shared codec seam)
-            for p in 0..n_ranks {
+            for &p in owned {
                 let active = tables[p][act_idx].as_ref().unwrap();
                 for &q in &plans_w[p].send_to {
                     let payload = encode_request_rows(active, &self.plan, p, q);
-                    fabric.send(Packet::with_payload(p, q, w, i, a2_sets, payload));
+                    fabric.send(Packet::with_payload(p, q, w, i, a2_sets, payload))?;
                 }
             }
             // receive + fold
-            let mut step_row: Vec<(f64, f64)> = Vec::with_capacity(n_ranks);
-            for p in 0..n_ranks {
-                let packets = fabric.drain(p);
+            let mut step_row: Vec<(f64, f64)> = Vec::with_capacity(owned.len());
+            for &p in owned {
+                let packets = fabric.recv_step(p, w, plans_w[p].recv_from.len())?;
                 let mut recv_bytes = 0u64;
                 let mut recv_dense_bytes = 0u64;
                 let n_msgs = packets.len();
@@ -1138,14 +1283,10 @@ impl<'g> DistributedRunner<'g> {
                     hist_units[c.min(hist_units.len() - 1)] += t;
                     *busy_units += c as f64 * t;
                 }
-                let comm = self
-                    .cfg
-                    .net
-                    .step(n_msgs, recv_bytes)
-                    .max(self
-                        .cfg
-                        .net
-                        .step(plans_w[p].send_to.len(), fabric.sent_bytes(p)));
+                let comm = self.cfg.net.step(n_msgs, recv_bytes).max(self.cfg.net.step(
+                    plans_w[p].send_to.len(),
+                    fabric.ledger().sent_bytes(p, w),
+                ));
                 step_row.push((rep.makespan, comm));
             }
             steps.push(step_row);
@@ -1156,25 +1297,27 @@ impl<'g> DistributedRunner<'g> {
         fabric.assert_empty();
         // bulk mode: release all receive buffers now
         if !is_pipelined {
-            for p in 0..n_ranks {
+            for &p in owned {
                 mems[p].release_all(MemClass::RecvBuffer);
             }
         }
 
         for (p, o) in outs.into_iter().enumerate() {
-            let stored = store_table(policy, o, &mut mems[p], store_rec);
-            tables[p][i] = Some(stored);
+            if owned_mask[p] {
+                let stored = store_table(policy, o, &mut mems[p], store_rec);
+                tables[p][i] = Some(stored);
+            }
         }
         if let Some(pr) = &self.progress {
             pr.on_subtemplate_done(i);
         }
 
-        SubRecord {
+        Ok(SubRecord {
             sub: i,
             local_makespan,
             steps,
             pipelined: is_pipelined,
-        }
+        })
     }
 
     /// One non-leaf combine on the **rank-parallel pipelined executor**:
@@ -1194,13 +1337,17 @@ impl<'g> DistributedRunner<'g> {
     /// interleaving nor the per-rank [`nested_budget`] pool width can
     /// move a bit (`tests/pipeline_exec.rs` enforces this).
     ///
-    /// Returns the model record plus this combine's measured mean ρ over
-    /// the overlap-capable steps (`None` for single-step schedules); the
-    /// *measured* overlap (real per-step ρ, blocked wait, per-rank
-    /// receive peaks) also accumulates into `pipe`.
+    /// Returns the model record plus the per-step measured
+    /// `(Σ comp_s, Σ wait_s)` over the locally-owned ranks — the caller
+    /// folds those into the measured-ρ accumulators at iteration end
+    /// (after the process-mode allreduce globalizes them); the *measured*
+    /// overlap (real per-step ρ, blocked wait, per-rank receive peaks)
+    /// also accumulates into `pipe`.
     #[allow(clippy::too_many_arguments)]
     fn combine_subtemplate_threaded(
         &mut self,
+        fabric: &dyn RankFabric,
+        owned: &[usize],
         i: usize,
         dec: &SubDecision,
         policy: &StoragePolicy,
@@ -1215,7 +1362,7 @@ impl<'g> DistributedRunner<'g> {
         iteration: usize,
         measured: &mut ExecStats,
         pipe: &mut MeasuredPipeline,
-    ) -> (SubRecord, Option<f64>) {
+    ) -> FabricResult<(SubRecord, Vec<(f64, f64)>)> {
         let n_ranks = self.cfg.n_ranks;
         let sub = self.ctx.dag.subs[i].clone();
         let split = self.ctx.splits[i].clone().expect("non-leaf split");
@@ -1234,16 +1381,29 @@ impl<'g> DistributedRunner<'g> {
             overhead: self.cfg.task_overhead_units,
         };
 
+        let mut owned_mask = vec![false; n_ranks];
+        for &p in owned {
+            owned_mask[p] = true;
+        }
         let mut outs: Vec<CountTable> = (0..n_ranks)
-            .map(|p| CountTable::zeros(self.plan.part.n_local(p), split.n_sets))
+            .map(|p| {
+                let rows = if owned_mask[p] {
+                    self.plan.part.n_local(p)
+                } else {
+                    0
+                };
+                CountTable::zeros(rows, split.n_sets)
+            })
             .collect();
-        for (p, o) in outs.iter().enumerate() {
-            mems[p].alloc(MemClass::CountTable, o.bytes());
+        for &p in owned {
+            mems[p].alloc(MemClass::CountTable, outs[p].bytes());
         }
 
-        let fabric = ThreadedFabric::new(n_ranks, n_steps);
-        let nested = nested_budget(self.cfg.n_workers, n_ranks);
-        let notify = StepNotifier::new(self.progress.clone(), i, n_steps, n_ranks);
+        fabric.begin_exchange(n_steps);
+        // the worker pool splits across the rank threads *this process*
+        // runs (all of them in-process; one in process mode)
+        let nested = nested_budget(self.cfg.n_workers, owned.len());
+        let notify = StepNotifier::new(self.progress.clone(), i, n_steps, owned.len());
         let env = RankEnv {
             sub: i,
             iteration,
@@ -1261,37 +1421,45 @@ impl<'g> DistributedRunner<'g> {
             plan: &self.plan,
             schedule,
             split: &split,
-            fabric: &fabric,
+            fabric,
             notify: &notify,
         };
 
-        let logs: Vec<RankLog> = std::thread::scope(|s| {
+        let logs: Vec<(usize, FabricResult<RankLog>)> = std::thread::scope(|s| {
             let handles: Vec<_> = outs
                 .iter_mut()
                 .zip(mems.iter_mut())
                 .zip(tables.iter())
                 .enumerate()
+                .filter(|(p, _)| owned_mask[*p])
                 .map(|(p, ((out, mem), rank_tables))| {
                     let env = &env;
-                    s.spawn(move || rank_exchange_worker(env, p, rank_tables, out, mem))
+                    (
+                        p,
+                        s.spawn(move || rank_exchange_worker(env, p, rank_tables, out, mem)),
+                    )
                 })
                 .collect();
             handles
                 .into_iter()
-                .map(|h| h.join().expect("rank exchange worker panicked"))
+                .map(|(p, h)| (p, h.join().expect("rank exchange worker panicked")))
                 .collect()
         });
+        let mut rank_logs: Vec<(usize, RankLog)> = Vec::with_capacity(logs.len());
+        for (p, lg) in logs {
+            rank_logs.push((p, lg?));
+        }
         fabric.assert_empty();
-        pipe.observe_in_flight_peak(fabric.in_flight_peak());
+        pipe.observe_in_flight_peak(fabric.ledger().in_flight_peak());
 
-        // deterministic reduction, rank-major (0..P) regardless of which
-        // thread finished first
-        let mut local_makespan = vec![0.0f64; n_ranks];
-        let mut steps: Vec<Vec<(f64, f64)>> = vec![Vec::with_capacity(n_ranks); n_steps];
+        // deterministic reduction in owned-rank order (0..P in-process)
+        // regardless of which thread finished first
+        let mut local_makespan: Vec<f64> = Vec::with_capacity(rank_logs.len());
+        let mut steps: Vec<Vec<(f64, f64)>> = vec![Vec::with_capacity(rank_logs.len()); n_steps];
         let mut step_comp = vec![0.0f64; n_steps];
         let mut step_wait = vec![0.0f64; n_steps];
-        for (p, lg) in logs.into_iter().enumerate() {
-            local_makespan[p] = lg.local_makespan;
+        for (idx, (p, lg)) in rank_logs.into_iter().enumerate() {
+            local_makespan.push(lg.local_makespan);
             for (w, st) in lg.steps.iter().enumerate() {
                 steps[w].push((st.makespan_units, st.comm_s));
                 step_comp[w] += st.comp_s;
@@ -1303,53 +1471,42 @@ impl<'g> DistributedRunner<'g> {
                 hist_units[c.min(hist_units.len() - 1)] += t;
             }
             *busy_units += lg.busy_units;
-            // rank p's nested lanes land at offset p·nested so genuinely
-            // concurrent threads stay distinct in the per-worker record
-            measured.absorb_at(&lg.stats, p * nested);
+            // each owned rank's nested lanes land at their own offset so
+            // genuinely concurrent threads stay distinct in the record
+            measured.absorb_at(&lg.stats, idx * nested);
             pipe.observe_rank(p, lg.recv_peak, lg.max_step_recv_bytes);
         }
         for w in 0..n_steps {
             pipe.add_step(
                 w,
-                step_comp[w] / n_ranks as f64,
-                step_wait[w] / n_ranks as f64,
+                step_comp[w] / owned.len() as f64,
+                step_wait[w] / owned.len() as f64,
             );
         }
         pipe.finish_combine();
 
-        // this combine's measured mean ρ over the overlap-capable steps
-        // (step 0's wait can never be hidden — same convention as
-        // `MeasuredPipeline::mean_rho`), fed back into the calibration
-        // and reported per subtemplate next to the prediction
-        let meas_rho = if n_steps > 1 {
-            let mut sum = 0.0;
-            for w in 1..n_steps {
-                let tot = step_comp[w] + step_wait[w];
-                sum += if tot <= 0.0 { 1.0 } else { step_comp[w] / tot };
-            }
-            Some(sum / (n_steps - 1) as f64)
-        } else {
-            None
-        };
-
         for (p, o) in outs.into_iter().enumerate() {
-            let stored = store_table(policy, o, &mut mems[p], store_rec);
-            tables[p][i] = Some(stored);
+            if owned_mask[p] {
+                let stored = store_table(policy, o, &mut mems[p], store_rec);
+                tables[p][i] = Some(stored);
+            }
         }
         // per-step notifications already streamed live via `StepNotifier`
         if let Some(pr) = &self.progress {
             pr.on_subtemplate_done(i);
         }
 
-        (
+        let step_meas: Vec<(f64, f64)> =
+            (0..n_steps).map(|w| (step_comp[w], step_wait[w])).collect();
+        Ok((
             SubRecord {
                 sub: i,
                 local_makespan,
                 steps,
                 pipelined: is_pipelined,
             },
-            meas_rho,
-        )
+            step_meas,
+        ))
     }
 }
 
@@ -1375,7 +1532,7 @@ struct RankEnv<'a> {
     plan: &'a ExchangePlan,
     schedule: &'a Schedule,
     split: &'a SplitTable,
-    fabric: &'a ThreadedFabric,
+    fabric: &'a dyn RankFabric,
     notify: &'a StepNotifier,
 }
 
@@ -1501,7 +1658,7 @@ fn rank_exchange_worker(
     rank_tables: &[Option<TableStorage>],
     out: &mut CountTable,
     mem: &mut DualAccountant,
-) -> RankLog {
+) -> FabricResult<RankLog> {
     let n_steps = env.schedule.n_steps();
     let n_local = env.plan.part.n_local(p);
     let active = rank_tables[env.act_idx].as_ref().unwrap();
@@ -1550,11 +1707,11 @@ fn rank_exchange_worker(
     }
 
     // ---- exchange: fold one step while the next is in flight ----
-    let mut fold_step = |w: usize| {
+    let mut fold_step = |w: usize| -> FabricResult<()> {
         let wait0 = Instant::now();
         let packets = env
             .fabric
-            .recv_step(p, w, env.schedule.plans[w][p].recv_from.len());
+            .recv_step(p, w, env.schedule.plans[w][p].recv_from.len())?;
         let wait_s = wait0.elapsed().as_secs_f64();
         let n_msgs = packets.len();
         let mut recv_bytes = 0u64;
@@ -1612,7 +1769,7 @@ fn rank_exchange_worker(
         }
         let comm = env.net.step(n_msgs, recv_bytes).max(env.net.step(
             env.schedule.plans[w][p].send_to.len(),
-            env.fabric.sent_bytes(p, w),
+            env.fabric.ledger().sent_bytes(p, w),
         ));
         steps.push(RankStepLog {
             makespan_units: rep.makespan,
@@ -1623,6 +1780,7 @@ fn rank_exchange_worker(
         // live progress: the last rank to finish the step fires the
         // observer callbacks with the rank-averaged measurements
         env.notify.record(w, comp_s, wait_s);
+        Ok(())
     };
 
     for w in 0..n_steps {
@@ -1632,19 +1790,19 @@ fn rank_exchange_worker(
         for &q in &env.schedule.plans[w][p].send_to {
             let payload = encode_request_rows(active, env.plan, p, q);
             env.fabric
-                .send(Packet::with_payload(p, q, w, env.sub, env.a2_sets, payload));
+                .send(Packet::with_payload(p, q, w, env.sub, env.a2_sets, payload))?;
         }
         // ... then fold the previous step while w's packets fly
         if w > 0 {
-            fold_step(w - 1);
+            fold_step(w - 1)?;
         }
     }
     if n_steps > 0 {
-        fold_step(n_steps - 1);
+        fold_step(n_steps - 1)?;
     }
     drop(fold_step);
 
-    RankLog {
+    Ok(RankLog {
         local_makespan,
         steps,
         units,
@@ -1654,7 +1812,169 @@ fn rank_exchange_worker(
         stats,
         recv_peak,
         max_step_recv_bytes,
+    })
+}
+
+/// The globalized per-iteration calibration inputs a process-mode
+/// allreduce returns: every field is the deterministic ascending-rank
+/// sum (or, for the link, the participant average) of the per-process
+/// locals, bit-identical on every rank process.
+struct GlobalCalibration {
+    du: f64,
+    dc: f64,
+    /// averaged measured (α seconds, β seconds/byte) over the
+    /// participants that had a link fit; `None` when none did
+    link: Option<(f64, f64)>,
+    /// per-sub global storage outcome (all ranks, not just local ones)
+    storage: Vec<SubStorage>,
+    /// per threaded combine of the iteration, per step: global
+    /// (Σ comp_s, Σ wait_s) over all ranks
+    step_meas: Vec<Vec<(f64, f64)>>,
+}
+
+/// Flatten this process's per-iteration measurements, allreduce them,
+/// and unflatten the global sums. The payload layout is a pure function
+/// of replicated state (`n_subs`, the iteration's combine decisions), so
+/// every process encodes and decodes identically.
+fn allreduce_calibration(
+    fabric: &dyn RankFabric,
+    owned: &[usize],
+    du: f64,
+    dc: f64,
+    link: Option<LinkMeasurement>,
+    sub_storage: &[SubStorage],
+    iter_meas: &[(usize, f64, bool, Vec<(f64, f64)>)],
+) -> FabricResult<GlobalCalibration> {
+    let mut local = vec![du, dc];
+    match link {
+        Some(l) => local.extend([1.0, l.alpha_s, l.beta_s_per_byte]),
+        None => local.extend([0.0, 0.0, 0.0]),
     }
+    for st in sub_storage {
+        local.extend([
+            st.nnz as f64,
+            st.cells as f64,
+            st.sparse_ranks as f64,
+            st.n_ranks as f64,
+            st.dense_bytes as f64,
+            st.resident_bytes as f64,
+        ]);
+    }
+    for (_, _, _, steps) in iter_meas {
+        for &(comp, wait) in steps {
+            local.extend([comp, wait]);
+        }
+    }
+    let sum = allreduce_f64(fabric, owned, &local)?;
+    let n_link = sum[2];
+    let link = if n_link > 0.0 {
+        Some((sum[3] / n_link, sum[4] / n_link))
+    } else {
+        None
+    };
+    let mut at = 5;
+    let mut storage = Vec::with_capacity(sub_storage.len());
+    for _ in 0..sub_storage.len() {
+        storage.push(SubStorage {
+            nnz: sum[at] as u64,
+            cells: sum[at + 1] as u64,
+            sparse_ranks: sum[at + 2] as usize,
+            n_ranks: sum[at + 3] as usize,
+            dense_bytes: sum[at + 4] as u64,
+            resident_bytes: sum[at + 5] as u64,
+        });
+        at += 6;
+    }
+    let mut step_meas = Vec::with_capacity(iter_meas.len());
+    for (_, _, _, steps) in iter_meas {
+        let mut m = Vec::with_capacity(steps.len());
+        for _ in 0..steps.len() {
+            m.push((sum[at], sum[at + 1]));
+            at += 2;
+        }
+        step_meas.push(m);
+    }
+    Ok(GlobalCalibration {
+        du: sum[0],
+        dc: sum[1],
+        link,
+        storage,
+        step_meas,
+    })
+}
+
+/// One elementwise-sum allreduce over the fabric: the first owned rank
+/// carries this process's vector (any further owned ranks contribute
+/// zeros so nothing double-counts), every rank broadcasts to every peer
+/// in one step, and every participant folds the per-rank contributions
+/// in ascending rank order — deterministic f64 sums, bit-identical on
+/// every process, with no coordinator.
+fn allreduce_f64(
+    fabric: &dyn RankFabric,
+    owned: &[usize],
+    local: &[f64],
+) -> FabricResult<Vec<f64>> {
+    let n_ranks = fabric.n_ranks();
+    if n_ranks <= 1 || local.is_empty() {
+        return Ok(local.to_vec());
+    }
+    fabric.begin_exchange(1);
+    let zeros = vec![0.0f64; local.len()];
+    for (idx, &p) in owned.iter().enumerate() {
+        let mine = if idx == 0 { local } else { &zeros[..] };
+        let rows = encode_f64_rows(mine);
+        for q in 0..n_ranks {
+            if q != p {
+                fabric.send(Packet::new(p, q, 0, 0, 1, rows.clone()))?;
+            }
+        }
+    }
+    let mut result: Option<Vec<f64>> = None;
+    for (idx, &p) in owned.iter().enumerate() {
+        let packets = fabric.recv_step(p, 0, n_ranks - 1)?;
+        if idx == 0 {
+            let mut by_sender: Vec<Vec<f64>> = vec![Vec::new(); n_ranks];
+            by_sender[p] = local.to_vec();
+            for pkt in &packets {
+                let vals = decode_f64_rows(pkt.dense_rows());
+                assert_eq!(
+                    vals.len(),
+                    local.len(),
+                    "allreduce payload length diverged across ranks"
+                );
+                by_sender[pkt.sender()] = vals;
+            }
+            let mut sum = vec![0.0f64; local.len()];
+            for vals in &by_sender {
+                for (s, v) in sum.iter_mut().zip(vals) {
+                    *s += *v;
+                }
+            }
+            result = Some(sum);
+        }
+    }
+    fabric.assert_empty();
+    Ok(result.expect("at least one owned rank"))
+}
+
+/// Encode f64s losslessly into the fabric's f32 row payload: each value
+/// ships as its two raw bit-halves (`f32::from_bits` round-trips bit
+/// patterns exactly; nothing ever does arithmetic on these rows).
+fn encode_f64_rows(vals: &[f64]) -> Vec<Count> {
+    let mut rows = Vec::with_capacity(vals.len() * 2);
+    for v in vals {
+        let b = v.to_bits();
+        rows.push(f32::from_bits((b >> 32) as u32));
+        rows.push(f32::from_bits(b as u32));
+    }
+    rows
+}
+
+/// Inverse of [`encode_f64_rows`].
+fn decode_f64_rows(rows: &[Count]) -> Vec<f64> {
+    rows.chunks_exact(2)
+        .map(|c| f64::from_bits(((c[0].to_bits() as u64) << 32) | c[1].to_bits() as u64))
+        .collect()
 }
 
 #[cfg(test)]

@@ -1,15 +1,20 @@
 //! The L3 coordinator: the paper's system contribution. `dist` drives the
-//! distributed color-coding of Alg 2/3 over simulated ranks, `memory`
-//! accounts peak intermediate bytes (Eq 7/12), `run` holds the Table-1
-//! mode matrix and results.
+//! distributed color-coding of Alg 2/3 over simulated ranks (or, through
+//! [`dist::DistributedRunner::run_on`], over any [`crate::comm::RankFabric`]),
+//! `memory` accounts peak intermediate bytes (Eq 7/12), `run` holds the
+//! Table-1 mode matrix and results, and `procmode` is the process-mode
+//! orchestration: the rank-process launcher and the `harpsg-rank` worker
+//! entry point that run the same schedules over a socket mesh.
 
 pub mod dist;
 pub mod memory;
+pub mod procmode;
 pub mod run;
 
 pub use dist::{build_plan_for, validate_group_size, DistributedRunner, ExchangePlan};
 pub use memory::{DualAccountant, MemClass, MemoryAccountant, SharedAccountant};
+pub use procmode::{launch, rank_main, ProcSpec};
 pub use run::{
-    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RunConfig, RunResult,
-    StorageDecision, ThreadStats,
+    CommDecision, EngineKind, ExchangeExec, FabricKind, ModeSelect, ModelTime, RankLink,
+    RunConfig, RunResult, StorageDecision, ThreadStats,
 };

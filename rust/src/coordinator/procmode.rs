@@ -1,0 +1,971 @@
+//! Process-mode rank orchestration: the launcher that spawns one OS
+//! process per rank (the `harpsg-rank` worker binary), wires them into a
+//! socket mesh, and merges their per-rank [`RunResult`]s — plus the
+//! worker-side entry point those processes run.
+//!
+//! The protocol is deliberately line-oriented and replayable by hand:
+//!
+//! 1. launcher → worker (stdin): the canonical config block, one
+//!    `key value` line each, terminated by `end-config`. Every worker
+//!    receives byte-identical text; its FNV digest is the handshake
+//!    config digest, so a worker launched with a different config is
+//!    rejected at connect time with a typed error.
+//! 2. worker → launcher (stdout): `HARPSG-RANK-ADDR <addr>` once its
+//!    listener is bound (TCP port 0 resolves here, so peers race
+//!    nothing).
+//! 3. launcher → worker: `addrs <a0> <a1> …` — every rank's resolved
+//!    address, rank-indexed.
+//! 4. worker: establishes the [`SocketFabric`] mesh, runs
+//!    [`DistributedRunner::run_on`] with its single owned rank, and
+//!    emits its results between `HARPSG-RANK-BEGIN`/`HARPSG-RANK-END`
+//!    as `key value…` lines (f64s travel as raw bit patterns in hex, so
+//!    the merge is lossless).
+//!
+//! The merge reconstructs the in-process fold exactly: per-iteration
+//! colorful partials sum in ascending rank order (the same 0-seeded f64
+//! fold `run_on` does over owned ranks), so the merged estimate is
+//! bit-identical to a threaded-fabric run of the same config. Modeled
+//! timing (`model`, `threads`, `flop_time`) is rank 0's view — each
+//! process models only its own rank; the decision-relevant inputs were
+//! allreduced during the run, so rank 0's decisions and storage records
+//! speak for every rank.
+
+use super::dist::DistributedRunner;
+use super::run::{
+    CommDecision, EngineKind, ExchangeExec, FabricKind, ModeSelect, ModelTime, RankLink,
+    RunConfig, RunResult, StorageDecision, ThreadStats,
+};
+use crate::api::HarpsgError;
+use crate::colorcount::parallel::ExecStats;
+use crate::colorcount::{median_of_means, EngineContext, KernelMode};
+use crate::colorcount::storage::StorageMode;
+use crate::comm::{config_digest, PeerAddr, SocketFabric, SocketOptions};
+use crate::comm::socket::SocketListener;
+use crate::graph::rmat::{generate, RmatParams};
+use crate::graph::shard::GraphStorageMode;
+use crate::graph::{loader, Dataset, Graph};
+use crate::template::{builtin, Template, BUILTIN_NAMES};
+use std::io::{BufRead, BufReader, Write};
+use std::path::PathBuf;
+use std::process::{Child, Command, Stdio};
+
+/// Marker a worker prints (stdout) once its listener is bound.
+pub const ADDR_TAG: &str = "HARPSG-RANK-ADDR";
+/// Marker opening a worker's result block.
+pub const BEGIN_TAG: &str = "HARPSG-RANK-BEGIN";
+/// Marker closing a worker's result block.
+pub const END_TAG: &str = "HARPSG-RANK-END";
+/// Terminates the config block on a worker's stdin.
+const CFG_END: &str = "end-config";
+/// Prefixes the rank-indexed address list on a worker's stdin.
+const ADDRS_KEY: &str = "addrs";
+/// Env var overriding where the launcher finds the worker binary
+/// (defaults to a `harpsg-rank` sibling of the current executable).
+pub const RANK_BIN_ENV: &str = "HARPSG_RANK_BIN";
+
+/// Everything a process-mode run needs beyond the [`RunConfig`]: the
+/// template and graph are passed as *specs* (not objects) because every
+/// worker process re-resolves them deterministically from the same text.
+#[derive(Debug, Clone)]
+pub struct ProcSpec {
+    /// builtin template name (`u3-1`, …) or a template file path
+    pub template: String,
+    /// graph spec: `rmat:<nv>:<ne>:<skew>:<seed>`, a dataset
+    /// abbreviation (`MI`, `OR`, …, `R500K3`), or an edge-list path
+    pub dataset: String,
+    /// downscale divisor for dataset abbreviations (ignored otherwise)
+    pub scale: u32,
+    /// `tcp` (localhost, ephemeral ports) or `unix:<dir>` (one socket
+    /// file per rank under `<dir>`)
+    pub listen: String,
+    /// explicit worker binary; `None` falls back to [`RANK_BIN_ENV`]
+    /// then to the `harpsg-rank` sibling of the current executable
+    pub rank_bin: Option<PathBuf>,
+    pub cfg: RunConfig,
+}
+
+impl ProcSpec {
+    pub fn new(template: &str, dataset: &str, scale: u32, cfg: RunConfig) -> ProcSpec {
+        ProcSpec {
+            template: template.to_string(),
+            dataset: dataset.to_string(),
+            scale,
+            listen: "tcp".to_string(),
+            rank_bin: None,
+            cfg,
+        }
+    }
+}
+
+fn bits(v: f64) -> String {
+    format!("{:016x}", v.to_bits())
+}
+
+fn parse_bits(s: &str) -> Result<f64, HarpsgError> {
+    u64::from_str_radix(s, 16)
+        .map(f64::from_bits)
+        .map_err(|e| HarpsgError::Parse(format!("bad f64 bit pattern `{s}`: {e}")))
+}
+
+fn parse_num<T: std::str::FromStr>(key: &str, s: &str) -> Result<T, HarpsgError>
+where
+    T::Err: std::fmt::Display,
+{
+    s.parse()
+        .map_err(|e| HarpsgError::Parse(format!("bad value for `{key}`: `{s}`: {e}")))
+}
+
+fn parse_opt_u64(key: &str, s: &str) -> Result<Option<u64>, HarpsgError> {
+    if s == "none" {
+        Ok(None)
+    } else {
+        parse_num(key, s).map(Some)
+    }
+}
+
+fn opt_u64(v: Option<u64>) -> String {
+    match v {
+        Some(b) => b.to_string(),
+        None => "none".to_string(),
+    }
+}
+
+/// The canonical config block: one `key value` line per field, in fixed
+/// order, f64s as bit patterns. Identical `ProcSpec`s produce identical
+/// text — the launcher sends this to every worker, and its
+/// [`config_digest`] is what the socket handshake verifies, so a worker
+/// holding as much as one different bit refuses to join the mesh.
+pub fn canonical_config(spec: &ProcSpec) -> String {
+    let c = &spec.cfg;
+    let mut s = String::new();
+    let mut kv = |k: &str, v: String| {
+        s.push_str(k);
+        s.push(' ');
+        s.push_str(&v);
+        s.push('\n');
+    };
+    kv("template", spec.template.clone());
+    kv("dataset", spec.dataset.clone());
+    kv("scale", spec.scale.to_string());
+    kv("listen", spec.listen.clone());
+    kv("n-ranks", c.n_ranks.to_string());
+    kv("n-threads", c.n_threads.to_string());
+    kv("n-workers", c.n_workers.to_string());
+    kv("task-size", c.task_size.to_string());
+    kv("mode", c.mode.flag().to_string());
+    kv("n-iterations", c.n_iterations.to_string());
+    kv("seed", c.seed.to_string());
+    kv("mem-limit", opt_u64(c.mem_limit));
+    kv("engine", c.engine.name().to_string());
+    kv("phys-cores", c.phys_cores.to_string());
+    kv("task-overhead-units", bits(c.task_overhead_units));
+    kv("exchange", c.exchange.name().to_string());
+    kv("adaptive-group", (c.adaptive_group as u8).to_string());
+    kv("table-storage", c.table_storage.name().to_string());
+    kv("kernel", c.kernel.name().to_string());
+    kv("graph-storage", c.graph_storage.name().to_string());
+    kv("graph-budget", opt_u64(c.graph_budget));
+    kv("fabric", c.fabric.name().to_string());
+    kv("policy-intensity-threshold", bits(c.policy.intensity_threshold));
+    kv("policy-min-ranks", c.policy.min_ranks.to_string());
+    kv("policy-flop-time", bits(c.policy.flop_time));
+    kv("policy-net-alpha", bits(c.policy.net.alpha));
+    kv("policy-net-beta", bits(c.policy.net.beta));
+    kv("policy-net-step-overhead", bits(c.policy.net.step_overhead));
+    kv("net-alpha", bits(c.net.alpha));
+    kv("net-beta", bits(c.net.beta));
+    kv("net-step-overhead", bits(c.net.step_overhead));
+    s
+}
+
+/// Inverse of [`canonical_config`]. Strict: unknown keys are typed
+/// errors, so a launcher/worker version skew fails loudly instead of
+/// silently dropping a knob (the digest would catch it anyway, but this
+/// error names the key).
+pub fn parse_config(text: &str) -> Result<ProcSpec, HarpsgError> {
+    let mut spec = ProcSpec::new("", "", 0, RunConfig::default());
+    let c = &mut spec.cfg;
+    for line in text.lines() {
+        let line = line.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let (k, v) = line
+            .split_once(' ')
+            .ok_or_else(|| HarpsgError::Parse(format!("config line without value: `{line}`")))?;
+        let bad = |what: &str| HarpsgError::Parse(format!("unknown {what} `{v}`"));
+        match k {
+            "template" => spec.template = v.to_string(),
+            "dataset" => spec.dataset = v.to_string(),
+            "scale" => spec.scale = parse_num(k, v)?,
+            "listen" => spec.listen = v.to_string(),
+            "n-ranks" => c.n_ranks = parse_num(k, v)?,
+            "n-threads" => c.n_threads = parse_num(k, v)?,
+            "n-workers" => c.n_workers = parse_num(k, v)?,
+            "task-size" => c.task_size = parse_num(k, v)?,
+            "mode" => c.mode = ModeSelect::parse(v).ok_or_else(|| bad("mode"))?,
+            "n-iterations" => c.n_iterations = parse_num(k, v)?,
+            "seed" => c.seed = parse_num(k, v)?,
+            "mem-limit" => c.mem_limit = parse_opt_u64(k, v)?,
+            "engine" => c.engine = EngineKind::parse(v).ok_or_else(|| bad("engine"))?,
+            "phys-cores" => c.phys_cores = parse_num(k, v)?,
+            "task-overhead-units" => c.task_overhead_units = parse_bits(v)?,
+            "exchange" => c.exchange = ExchangeExec::parse(v).ok_or_else(|| bad("exchange"))?,
+            "adaptive-group" => c.adaptive_group = v == "1",
+            "table-storage" => {
+                c.table_storage = StorageMode::parse(v).ok_or_else(|| bad("table storage"))?
+            }
+            "kernel" => c.kernel = KernelMode::parse(v).ok_or_else(|| bad("kernel"))?,
+            "graph-storage" => {
+                c.graph_storage = GraphStorageMode::parse(v).ok_or_else(|| bad("graph storage"))?
+            }
+            "graph-budget" => c.graph_budget = parse_opt_u64(k, v)?,
+            "fabric" => c.fabric = FabricKind::parse(v).ok_or_else(|| bad("fabric"))?,
+            "policy-intensity-threshold" => c.policy.intensity_threshold = parse_bits(v)?,
+            "policy-min-ranks" => c.policy.min_ranks = parse_num(k, v)?,
+            "policy-flop-time" => c.policy.flop_time = parse_bits(v)?,
+            "policy-net-alpha" => c.policy.net.alpha = parse_bits(v)?,
+            "policy-net-beta" => c.policy.net.beta = parse_bits(v)?,
+            "policy-net-step-overhead" => c.policy.net.step_overhead = parse_bits(v)?,
+            "net-alpha" => c.net.alpha = parse_bits(v)?,
+            "net-beta" => c.net.beta = parse_bits(v)?,
+            "net-step-overhead" => c.net.step_overhead = parse_bits(v)?,
+            _ => return Err(HarpsgError::Parse(format!("unknown config key `{k}`"))),
+        }
+    }
+    if spec.template.is_empty() || spec.dataset.is_empty() {
+        return Err(HarpsgError::MissingValue(
+            "process-mode config needs `template` and `dataset`".into(),
+        ));
+    }
+    Ok(spec)
+}
+
+/// Resolve a template spec: builtin name, else template file path.
+pub fn resolve_template(spec: &str) -> Result<Template, HarpsgError> {
+    if BUILTIN_NAMES.contains(&spec) {
+        return builtin(spec).map_err(|e| HarpsgError::Template(format!("{e:#}")));
+    }
+    let text = std::fs::read_to_string(spec)
+        .map_err(|e| HarpsgError::Io(format!("read template file {spec}: {e}")))?;
+    Template::parse(spec, &text).map_err(|e| HarpsgError::Template(format!("{e:#}")))
+}
+
+/// Resolve a graph spec. Every form is deterministic, so the launcher
+/// and all worker processes materialize byte-identical graphs:
+/// `rmat:<nv>:<ne>:<skew>:<seed>` generates directly, a dataset
+/// abbreviation generates its paper analog at `scale`, anything else
+/// loads as an edge-list file.
+pub fn resolve_graph(spec: &str, scale: u32) -> Result<Graph, HarpsgError> {
+    if let Some(rest) = spec.strip_prefix("rmat:") {
+        let parts: Vec<&str> = rest.split(':').collect();
+        if parts.len() != 4 {
+            return Err(HarpsgError::Parse(format!(
+                "bad rmat spec `{spec}` (want rmat:<nv>:<ne>:<skew>:<seed>)"
+            )));
+        }
+        let nv: usize = parse_num("rmat nv", parts[0])?;
+        let ne: u64 = parse_num("rmat ne", parts[1])?;
+        let skew: u32 = parse_num("rmat skew", parts[2])?;
+        let seed: u64 = parse_num("rmat seed", parts[3])?;
+        return Ok(generate(&RmatParams::with_skew(nv, ne, skew, seed)));
+    }
+    let ds = match spec {
+        "MI" => Some(Dataset::MiamiS),
+        "OR" => Some(Dataset::OrkutS),
+        "NY" => Some(Dataset::NycS),
+        "TW" => Some(Dataset::TwitterS),
+        "SK" => Some(Dataset::SkS),
+        "FR" => Some(Dataset::FriendsterS),
+        "R250K1" => Some(Dataset::R250K1),
+        "R250K3" => Some(Dataset::R250K3),
+        "R250K8" => Some(Dataset::R250K8),
+        "R500K3" => Some(Dataset::R500K3),
+        _ => None,
+    };
+    match ds {
+        Some(d) => Ok(d.generate(scale)),
+        None => loader::load_edge_list(std::path::Path::new(spec))
+            .map_err(|e| HarpsgError::Io(format!("load graph {spec}: {e:#}"))),
+    }
+}
+
+/// The listen address rank `r` binds: localhost with an ephemeral port
+/// for `tcp` (the resolved port is advertised after bind), a per-rank
+/// socket file under the directory for `unix:<dir>`.
+fn bind_spec(listen: &str, rank: usize) -> Result<PeerAddr, HarpsgError> {
+    if listen == "tcp" {
+        Ok(PeerAddr::Tcp("127.0.0.1:0".to_string()))
+    } else if let Some(dir) = listen.strip_prefix("unix:") {
+        Ok(PeerAddr::Unix(PathBuf::from(dir).join(format!("rank{rank}.sock"))))
+    } else {
+        Err(HarpsgError::Parse(format!(
+            "bad listen spec `{listen}` (want `tcp` or `unix:<dir>`)"
+        )))
+    }
+}
+
+/// One worker's reported results, straight off its stdout block.
+struct RankOutput {
+    colorful: Vec<f64>,
+    real_seconds: f64,
+    peak_mem: u64,
+    peak_mem_dense: u64,
+    graph_resident: u64,
+    oom: bool,
+    flop_time: f64,
+    graph_storage: String,
+    model: ModelTime,
+    avg_concurrency: f64,
+    hist: Vec<f64>,
+    decisions: Vec<CommDecision>,
+    storage: Vec<StorageDecision>,
+    link: Vec<RankLink>,
+}
+
+impl Default for RankOutput {
+    fn default() -> Self {
+        RankOutput {
+            colorful: Vec::new(),
+            real_seconds: 0.0,
+            peak_mem: 0,
+            peak_mem_dense: 0,
+            graph_resident: 0,
+            oom: false,
+            flop_time: 0.0,
+            graph_storage: String::new(),
+            model: ModelTime::default(),
+            avg_concurrency: 0.0,
+            hist: Vec::new(),
+            decisions: Vec::new(),
+            storage: Vec::new(),
+            link: Vec::new(),
+        }
+    }
+}
+
+/// Emit one rank's [`RunResult`] as the result block (the worker side of
+/// the protocol). `rank` selects the per-rank entries this process owns.
+fn emit_result(out: &mut impl Write, rank: usize, r: &RunResult) -> std::io::Result<()> {
+    writeln!(out, "{BEGIN_TAG}")?;
+    let joined = |vals: &[f64]| {
+        vals.iter().map(|&v| bits(v)).collect::<Vec<_>>().join(" ")
+    };
+    if !r.colorful.is_empty() {
+        writeln!(out, "colorful {}", joined(&r.colorful))?;
+    }
+    writeln!(out, "real-seconds {}", bits(r.real_seconds))?;
+    writeln!(out, "peak-mem {}", r.peak_mem_per_rank.get(rank).copied().unwrap_or(0))?;
+    writeln!(
+        out,
+        "peak-mem-dense {}",
+        r.peak_mem_dense_per_rank.get(rank).copied().unwrap_or(0)
+    )?;
+    writeln!(
+        out,
+        "graph-resident {}",
+        r.graph_resident_per_rank.get(rank).copied().unwrap_or(0)
+    )?;
+    writeln!(out, "oom {}", r.oom as u8)?;
+    writeln!(out, "flop-time {}", bits(r.flop_time))?;
+    writeln!(out, "graph-storage {}", r.graph_storage)?;
+    writeln!(
+        out,
+        "model {} {} {} {} {}",
+        bits(r.model.total),
+        bits(r.model.comp),
+        bits(r.model.comm_exposed),
+        bits(r.model.comm_total),
+        bits(r.model.straggler)
+    )?;
+    for &(sub, rho) in &r.model.rho_by_sub {
+        writeln!(out, "rho {sub} {}", bits(rho))?;
+    }
+    writeln!(out, "avg-concurrency {}", bits(r.threads.avg_concurrency))?;
+    if !r.threads.concurrency_histogram.is_empty() {
+        writeln!(out, "hist {}", joined(&r.threads.concurrency_histogram))?;
+    }
+    for d in &r.comm_decisions {
+        let meas = match d.measured_rho {
+            Some(m) => bits(m),
+            None => "none".to_string(),
+        };
+        writeln!(
+            out,
+            "decision {} {} {} {} {} {meas}",
+            d.sub,
+            d.pipelined as u8,
+            d.g,
+            d.n_steps,
+            bits(d.predicted_rho)
+        )?;
+    }
+    for s in &r.storage {
+        writeln!(
+            out,
+            "storage {} {} {} {} {} {}",
+            s.sub,
+            bits(s.density),
+            s.sparse_ranks,
+            s.n_ranks,
+            s.dense_bytes,
+            s.resident_bytes
+        )?;
+    }
+    for l in &r.link {
+        writeln!(
+            out,
+            "link {} {} {} {}",
+            l.rank,
+            bits(l.alpha_s),
+            bits(l.beta_s_per_byte),
+            l.samples
+        )?;
+    }
+    writeln!(out, "{END_TAG}")?;
+    out.flush()
+}
+
+/// Parse the result block of worker `rank` from its stdout lines
+/// (everything between [`BEGIN_TAG`] and [`END_TAG`]).
+fn parse_result(rank: usize, lines: &mut impl Iterator<Item = std::io::Result<String>>) -> Result<RankOutput, HarpsgError> {
+    let io_err = |e: std::io::Error| HarpsgError::Transport(format!("rank {rank} stdout: {e}"));
+    let mut seen_begin = false;
+    let mut o = RankOutput::default();
+    loop {
+        let line = match lines.next() {
+            Some(l) => l.map_err(io_err)?,
+            None => {
+                return Err(HarpsgError::Transport(format!(
+                    "rank {rank} exited before its result block completed"
+                )))
+            }
+        };
+        let line = line.trim().to_string();
+        if !seen_begin {
+            // tolerate stray diagnostics before the block opens
+            if line == BEGIN_TAG {
+                seen_begin = true;
+            }
+            continue;
+        }
+        if line == END_TAG {
+            return Ok(o);
+        }
+        let (k, v) = line
+            .split_once(' ')
+            .ok_or_else(|| HarpsgError::Parse(format!("rank {rank}: bad result line `{line}`")))?;
+        let fields: Vec<&str> = v.split_whitespace().collect();
+        let want = |n: usize| -> Result<(), HarpsgError> {
+            if fields.len() == n {
+                Ok(())
+            } else {
+                Err(HarpsgError::Parse(format!(
+                    "rank {rank}: `{k}` wants {n} fields, got {}",
+                    fields.len()
+                )))
+            }
+        };
+        match k {
+            "colorful" => {
+                o.colorful = fields.iter().map(|&f| parse_bits(f)).collect::<Result<_, _>>()?
+            }
+            "real-seconds" => o.real_seconds = parse_bits(v)?,
+            "peak-mem" => o.peak_mem = parse_num(k, v)?,
+            "peak-mem-dense" => o.peak_mem_dense = parse_num(k, v)?,
+            "graph-resident" => o.graph_resident = parse_num(k, v)?,
+            "oom" => o.oom = v == "1",
+            "flop-time" => o.flop_time = parse_bits(v)?,
+            "graph-storage" => o.graph_storage = v.to_string(),
+            "model" => {
+                want(5)?;
+                o.model.total = parse_bits(fields[0])?;
+                o.model.comp = parse_bits(fields[1])?;
+                o.model.comm_exposed = parse_bits(fields[2])?;
+                o.model.comm_total = parse_bits(fields[3])?;
+                o.model.straggler = parse_bits(fields[4])?;
+            }
+            "rho" => {
+                want(2)?;
+                o.model
+                    .rho_by_sub
+                    .push((parse_num("rho sub", fields[0])?, parse_bits(fields[1])?));
+            }
+            "avg-concurrency" => o.avg_concurrency = parse_bits(v)?,
+            "hist" => {
+                o.hist = fields.iter().map(|&f| parse_bits(f)).collect::<Result<_, _>>()?
+            }
+            "decision" => {
+                want(6)?;
+                o.decisions.push(CommDecision {
+                    sub: parse_num("decision sub", fields[0])?,
+                    pipelined: fields[1] == "1",
+                    g: parse_num("decision g", fields[2])?,
+                    n_steps: parse_num("decision n_steps", fields[3])?,
+                    predicted_rho: parse_bits(fields[4])?,
+                    measured_rho: if fields[5] == "none" {
+                        None
+                    } else {
+                        Some(parse_bits(fields[5])?)
+                    },
+                });
+            }
+            "storage" => {
+                want(6)?;
+                o.storage.push(StorageDecision {
+                    sub: parse_num("storage sub", fields[0])?,
+                    density: parse_bits(fields[1])?,
+                    sparse_ranks: parse_num("storage sparse_ranks", fields[2])?,
+                    n_ranks: parse_num("storage n_ranks", fields[3])?,
+                    dense_bytes: parse_num("storage dense_bytes", fields[4])?,
+                    resident_bytes: parse_num("storage resident_bytes", fields[5])?,
+                });
+            }
+            "link" => {
+                want(4)?;
+                o.link.push(RankLink {
+                    rank: parse_num("link rank", fields[0])?,
+                    alpha_s: parse_bits(fields[1])?,
+                    beta_s_per_byte: parse_bits(fields[2])?,
+                    samples: parse_num("link samples", fields[3])?,
+                });
+            }
+            _ => {
+                return Err(HarpsgError::Parse(format!(
+                    "rank {rank}: unknown result key `{k}`"
+                )))
+            }
+        }
+    }
+}
+
+/// The worker-process entry point behind the `harpsg-rank` binary:
+/// `harpsg-rank --rank <r>` with the config block on stdin. Everything
+/// the binary does funnels through here so the protocol stays inside
+/// `coordinator/` (the binary itself never names a transport type).
+pub fn rank_main(args: &[String]) -> Result<(), HarpsgError> {
+    let mut rank: Option<usize> = None;
+    let mut it = args.iter();
+    while let Some(a) = it.next() {
+        match a.as_str() {
+            "--rank" => {
+                let v = it
+                    .next()
+                    .ok_or_else(|| HarpsgError::MissingValue("--rank".into()))?;
+                rank = Some(parse_num("--rank", v)?);
+            }
+            other => return Err(HarpsgError::UnknownFlag(other.to_string())),
+        }
+    }
+    let rank = rank.ok_or_else(|| HarpsgError::MissingValue("--rank".into()))?;
+
+    let stdin = std::io::stdin();
+    let mut lines = stdin.lock().lines();
+    let mut cfg_text = String::new();
+    loop {
+        let line = lines
+            .next()
+            .ok_or_else(|| {
+                HarpsgError::Transport(format!("rank {rank}: stdin closed before `{CFG_END}`"))
+            })?
+            .map_err(|e| HarpsgError::Transport(format!("rank {rank} stdin: {e}")))?;
+        if line.trim() == CFG_END {
+            break;
+        }
+        cfg_text.push_str(&line);
+        cfg_text.push('\n');
+    }
+    let digest = config_digest(&cfg_text);
+    let spec = parse_config(&cfg_text)?;
+    let cfg = spec.cfg.clone();
+    if rank >= cfg.n_ranks {
+        return Err(HarpsgError::InvalidJob(format!(
+            "--rank {rank} out of range for {} ranks",
+            cfg.n_ranks
+        )));
+    }
+    if cfg.engine == EngineKind::Xla {
+        return Err(HarpsgError::InvalidJob(
+            "the socket fabric requires the native engine".into(),
+        ));
+    }
+    let t = resolve_template(&spec.template)?;
+    let g = resolve_graph(&spec.dataset, spec.scale)?;
+
+    let listener = SocketListener::bind(&bind_spec(&spec.listen, rank)?)
+        .map_err(|e| HarpsgError::Io(format!("rank {rank} bind: {e}")))?;
+    {
+        let mut out = std::io::stdout().lock();
+        writeln!(out, "{ADDR_TAG} {}", listener.local_addr())
+            .and_then(|_| out.flush())
+            .map_err(|e| HarpsgError::Transport(format!("rank {rank} stdout: {e}")))?;
+    }
+
+    let addr_line = lines
+        .next()
+        .ok_or_else(|| {
+            HarpsgError::Transport(format!("rank {rank}: stdin closed before `{ADDRS_KEY}`"))
+        })?
+        .map_err(|e| HarpsgError::Transport(format!("rank {rank} stdin: {e}")))?;
+    let rest = addr_line
+        .trim()
+        .strip_prefix(ADDRS_KEY)
+        .ok_or_else(|| {
+            HarpsgError::Parse(format!("rank {rank}: expected `{ADDRS_KEY} …`, got `{addr_line}`"))
+        })?;
+    let peers: Vec<PeerAddr> = rest.split_whitespace().map(PeerAddr::parse).collect();
+    if peers.len() != cfg.n_ranks {
+        return Err(HarpsgError::Parse(format!(
+            "rank {rank}: got {} peer addresses for {} ranks",
+            peers.len(),
+            cfg.n_ranks
+        )));
+    }
+
+    let fabric = SocketFabric::establish(
+        rank,
+        listener,
+        &peers,
+        digest,
+        cfg.n_ranks.max(1),
+        SocketOptions::default(),
+    )?;
+    let mut runner = DistributedRunner::new(&t, &g, cfg);
+    let result = runner.run_on(&fabric, &[rank])?;
+    {
+        let mut out = std::io::stdout().lock();
+        emit_result(&mut out, rank, &result)
+            .map_err(|e| HarpsgError::Transport(format!("rank {rank} stdout: {e}")))?;
+    }
+    fabric.finish();
+    Ok(())
+}
+
+/// Where the launcher finds the worker binary.
+fn rank_binary(spec: &ProcSpec) -> Result<PathBuf, HarpsgError> {
+    if let Some(p) = &spec.rank_bin {
+        return Ok(p.clone());
+    }
+    if let Ok(p) = std::env::var(RANK_BIN_ENV) {
+        return Ok(PathBuf::from(p));
+    }
+    let me = std::env::current_exe()
+        .map_err(|e| HarpsgError::Io(format!("current_exe: {e}")))?;
+    Ok(me.with_file_name("harpsg-rank"))
+}
+
+fn kill_all(children: &mut [(usize, Child)]) {
+    for (_, c) in children.iter_mut() {
+        let _ = c.kill();
+        let _ = c.wait();
+    }
+}
+
+/// Spawn one `harpsg-rank` process per rank, run the distributed count
+/// over the socket mesh, and merge the per-rank results into one
+/// [`RunResult`] (see the module docs for the merge contract). Any
+/// worker failure — bad exit, protocol violation, transport error —
+/// kills the remaining workers and surfaces as a typed error.
+pub fn launch(spec: &ProcSpec) -> Result<RunResult, HarpsgError> {
+    let n_ranks = spec.cfg.n_ranks;
+    if n_ranks == 0 {
+        return Err(HarpsgError::InvalidJob("n_ranks must be ≥ 1".into()));
+    }
+    if spec.cfg.engine == EngineKind::Xla {
+        return Err(HarpsgError::InvalidJob(
+            "the socket fabric requires the native engine".into(),
+        ));
+    }
+    // resolve the template up front: the merge rescales the summed
+    // colorful counts exactly like `run_on` does per process, and a bad
+    // spec should fail before any process spawns
+    let t = resolve_template(&spec.template)?;
+    let ctx = EngineContext::new(&t);
+    let bin = rank_binary(spec)?;
+    let config = canonical_config(spec);
+
+    let mut children: Vec<(usize, Child)> = Vec::with_capacity(n_ranks);
+    for r in 0..n_ranks {
+        let spawned = Command::new(&bin)
+            .arg("--rank")
+            .arg(r.to_string())
+            .stdin(Stdio::piped())
+            .stdout(Stdio::piped())
+            .stderr(Stdio::inherit())
+            .spawn();
+        match spawned {
+            Ok(child) => children.push((r, child)),
+            Err(e) => {
+                kill_all(&mut children);
+                return Err(HarpsgError::Io(format!(
+                    "spawn {} for rank {r}: {e}",
+                    bin.display()
+                )));
+            }
+        }
+    }
+
+    let run = |children: &mut Vec<(usize, Child)>| -> Result<RunResult, HarpsgError> {
+        // phase 1: config out, bound addresses back
+        let mut readers = Vec::with_capacity(n_ranks);
+        for (r, child) in children.iter_mut() {
+            let r = *r;
+            let mut stdin = child.stdin.take().expect("piped stdin");
+            stdin
+                .write_all(config.as_bytes())
+                .and_then(|_| stdin.write_all(format!("{CFG_END}\n").as_bytes()))
+                .map_err(|e| HarpsgError::Transport(format!("rank {r} stdin: {e}")))?;
+            let stdout = BufReader::new(child.stdout.take().expect("piped stdout"));
+            // keep stdin open: the address list goes out in phase 2
+            readers.push((r, stdin, stdout.lines()));
+        }
+        let mut addrs = Vec::with_capacity(n_ranks);
+        for (r, _, lines) in readers.iter_mut() {
+            let r = *r;
+            loop {
+                let line = lines
+                    .next()
+                    .ok_or_else(|| {
+                        HarpsgError::Transport(format!(
+                            "rank {r} exited before advertising its address"
+                        ))
+                    })?
+                    .map_err(|e| HarpsgError::Transport(format!("rank {r} stdout: {e}")))?;
+                if let Some(addr) = line.trim().strip_prefix(ADDR_TAG) {
+                    addrs.push(addr.trim().to_string());
+                    break;
+                }
+            }
+        }
+        // phase 2: the full rank-indexed address list to every worker
+        let addr_line = format!("{ADDRS_KEY} {}\n", addrs.join(" "));
+        for (r, stdin, _) in readers.iter_mut() {
+            stdin
+                .write_all(addr_line.as_bytes())
+                .map_err(|e| HarpsgError::Transport(format!("rank {} stdin: {e}", r)))?;
+        }
+        // phase 3: collect every worker's result block
+        let mut outs = Vec::with_capacity(n_ranks);
+        for (r, _, lines) in readers.iter_mut() {
+            outs.push(parse_result(*r, lines)?);
+        }
+        drop(readers);
+        for (r, child) in children.iter_mut() {
+            let status = child
+                .wait()
+                .map_err(|e| HarpsgError::Transport(format!("rank {r} wait: {e}")))?;
+            if !status.success() {
+                return Err(HarpsgError::Transport(format!(
+                    "rank {r} exited with {status}"
+                )));
+            }
+        }
+        Ok(merge(spec, &ctx, outs))
+    };
+    match run(&mut children) {
+        Ok(r) => Ok(r),
+        Err(e) => {
+            kill_all(&mut children);
+            Err(e)
+        }
+    }
+}
+
+/// Fold the per-rank outputs into one [`RunResult`]. Counts merge
+/// exactly: ascending-rank f64 summation of the per-iteration colorful
+/// partials reproduces `run_on`'s in-process fold bit for bit, and the
+/// estimate is recomputed from the merged samples with the same
+/// median-of-means call. Decision/storage records come from rank 0 —
+/// the in-run allreduce made them identical on every rank.
+fn merge(spec: &ProcSpec, ctx: &EngineContext, outs: Vec<RankOutput>) -> RunResult {
+    let iters = outs.first().map(|o| o.colorful.len()).unwrap_or(0);
+    let mut colorful = vec![0.0f64; iters];
+    for o in &outs {
+        for (acc, &v) in colorful.iter_mut().zip(&o.colorful) {
+            *acc += v;
+        }
+    }
+    let scale = ctx.colorful_scale();
+    let aut = ctx.aut as f64;
+    let samples: Vec<f64> = colorful.iter().map(|&c| c * scale / aut).collect();
+    let estimate = if samples.is_empty() {
+        0.0
+    } else {
+        median_of_means(&samples, 3.min(samples.len()))
+    };
+    let first = &outs[0];
+    RunResult {
+        estimate,
+        samples,
+        colorful,
+        model: first.model.clone(),
+        real_seconds: outs.iter().map(|o| o.real_seconds).fold(0.0, f64::max),
+        peak_mem_per_rank: outs.iter().map(|o| o.peak_mem).collect(),
+        peak_mem_dense_per_rank: outs.iter().map(|o| o.peak_mem_dense).collect(),
+        storage: first.storage.clone(),
+        flop_time: first.flop_time,
+        threads: ThreadStats {
+            avg_concurrency: first.avg_concurrency,
+            concurrency_histogram: first.hist.clone(),
+        },
+        comm_decisions: first.decisions.clone(),
+        workers: ExecStats::zeros(spec.cfg.n_workers),
+        measured: None,
+        oom: outs.iter().any(|o| o.oom),
+        graph_storage: first.graph_storage.clone(),
+        graph_resident_per_rank: outs.iter().map(|o| o.graph_resident).collect(),
+        link: outs.iter().flat_map(|o| o.link.iter().copied()).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ProcSpec {
+        let mut cfg = RunConfig::default();
+        cfg.n_ranks = 3;
+        cfg.seed = 99;
+        cfg.net.alpha = 1.25e-6;
+        ProcSpec::new("u5-2", "rmat:64:300:3:7", 0, cfg)
+    }
+
+    #[test]
+    fn config_roundtrips_bit_exact() {
+        let s = spec();
+        let text = canonical_config(&s);
+        let back = parse_config(&text).unwrap();
+        assert_eq!(back.template, "u5-2");
+        assert_eq!(back.dataset, "rmat:64:300:3:7");
+        assert_eq!(back.cfg.n_ranks, 3);
+        assert_eq!(back.cfg.seed, 99);
+        assert_eq!(back.cfg.net.alpha.to_bits(), 1.25e-6f64.to_bits());
+        // canonical text is a fixed point — same digest on every process
+        assert_eq!(canonical_config(&back), text);
+    }
+
+    #[test]
+    fn config_rejects_unknown_keys() {
+        let e = parse_config("template u3-1\ndataset MI\nwarp-drive 9\n").unwrap_err();
+        assert!(matches!(e, HarpsgError::Parse(_)), "{e}");
+        assert!(e.to_string().contains("warp-drive"));
+    }
+
+    #[test]
+    fn graph_specs_resolve_deterministically() {
+        let a = resolve_graph("rmat:64:300:3:7", 0).unwrap();
+        let b = resolve_graph("rmat:64:300:3:7", 0).unwrap();
+        assert_eq!(a.n_vertices(), b.n_vertices());
+        assert_eq!(a.n_edges, b.n_edges);
+        assert!(resolve_graph("rmat:64:300", 0).is_err());
+        let mi = resolve_graph("MI", 2000).unwrap();
+        assert!(mi.n_vertices() > 0);
+    }
+
+    #[test]
+    fn result_block_roundtrips_bit_exact() {
+        let r = RunResult {
+            estimate: 12.5,
+            samples: vec![12.5],
+            colorful: vec![3.75],
+            model: ModelTime {
+                total: 1.0,
+                comp: 0.5,
+                comm_exposed: 0.25,
+                comm_total: 0.75,
+                straggler: 0.125,
+                rho_by_sub: vec![(2, 0.875)],
+            },
+            real_seconds: 0.5,
+            peak_mem_per_rank: vec![0, 4096, 0],
+            peak_mem_dense_per_rank: vec![0, 8192, 0],
+            storage: vec![StorageDecision {
+                sub: 2,
+                density: 0.5,
+                sparse_ranks: 1,
+                n_ranks: 3,
+                dense_bytes: 100,
+                resident_bytes: 60,
+            }],
+            flop_time: 1e-9,
+            threads: ThreadStats {
+                avg_concurrency: 2.5,
+                concurrency_histogram: vec![0.0, 1.0],
+            },
+            comm_decisions: vec![CommDecision {
+                sub: 2,
+                pipelined: true,
+                g: 1,
+                n_steps: 2,
+                predicted_rho: 0.625,
+                measured_rho: None,
+            }],
+            workers: ExecStats::zeros(1),
+            measured: None,
+            oom: false,
+            graph_storage: "resident".to_string(),
+            graph_resident_per_rank: vec![0, 128, 0],
+            link: vec![RankLink {
+                rank: 1,
+                alpha_s: 2e-5,
+                beta_s_per_byte: 3e-9,
+                samples: 17,
+            }],
+        };
+        let mut buf = Vec::new();
+        emit_result(&mut buf, 1, &r).unwrap();
+        let text = String::from_utf8(buf).unwrap();
+        let mut lines = text
+            .lines()
+            .map(|l| -> std::io::Result<String> { Ok(l.to_string()) });
+        let o = parse_result(1, &mut lines).unwrap();
+        assert_eq!(o.colorful, vec![3.75]);
+        assert_eq!(o.peak_mem, 4096);
+        assert_eq!(o.peak_mem_dense, 8192);
+        assert_eq!(o.graph_resident, 128);
+        assert_eq!(o.model.rho_by_sub, vec![(2, 0.875)]);
+        assert_eq!(o.decisions, r.comm_decisions);
+        assert_eq!(o.link, vec![r.link[0]]);
+        assert_eq!(o.storage.len(), 1);
+        assert_eq!(o.storage[0].resident_bytes, 60);
+    }
+
+    #[test]
+    fn merge_sums_partials_in_rank_order() {
+        let s = spec();
+        let t = resolve_template("u3-1").unwrap();
+        let ctx = EngineContext::new(&t);
+        let mk = |c: Vec<f64>, peak: u64| RankOutput {
+            colorful: c,
+            peak_mem: peak,
+            peak_mem_dense: peak,
+            real_seconds: peak as f64,
+            ..RankOutput::default()
+        };
+        let merged = merge(
+            &s,
+            &ctx,
+            vec![mk(vec![1.0, 2.0], 10), mk(vec![3.0, 4.0], 30), mk(vec![5.0, 6.0], 20)],
+        );
+        assert_eq!(merged.colorful, vec![9.0, 12.0]);
+        assert_eq!(merged.peak_mem_per_rank, vec![10, 30, 20]);
+        assert_eq!(merged.peak_mem(), 30);
+        assert_eq!(merged.real_seconds, 30.0);
+        let scale = ctx.colorful_scale();
+        let aut = ctx.aut as f64;
+        assert_eq!(merged.samples[0].to_bits(), (9.0 * scale / aut).to_bits());
+    }
+
+    #[test]
+    fn bind_specs_cover_both_transports() {
+        assert_eq!(
+            bind_spec("tcp", 3).unwrap(),
+            PeerAddr::Tcp("127.0.0.1:0".into())
+        );
+        assert_eq!(
+            bind_spec("unix:/tmp/x", 2).unwrap(),
+            PeerAddr::Unix(PathBuf::from("/tmp/x/rank2.sock"))
+        );
+        assert!(bind_spec("carrier-pigeon", 0).is_err());
+    }
+}

@@ -111,6 +111,37 @@ impl ExchangeExec {
     }
 }
 
+/// Which transport carries the exchange packets between ranks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FabricKind {
+    /// simulated ranks inside one process (threads over the in-memory
+    /// mailbox) — the default, and the only kind `Session::count` runs
+    Threaded,
+    /// rank *processes* framing packets over TCP/Unix sockets; driven by
+    /// the `harpsg-rank` launcher (`coordinator::procmode`), which feeds
+    /// the Hockney calibration wall-clock link measurements instead of
+    /// simulated ones
+    Socket,
+}
+
+impl FabricKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            FabricKind::Threaded => "threaded",
+            FabricKind::Socket => "socket",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<FabricKind> {
+        match name {
+            "threaded" => Some(FabricKind::Threaded),
+            "socket" => Some(FabricKind::Socket),
+            _ => None,
+        }
+    }
+}
+
 #[derive(Debug, Clone)]
 pub struct RunConfig {
     pub n_ranks: usize,
@@ -178,6 +209,12 @@ pub struct RunConfig {
     /// resolves against (the `--graph-budget-mb` knob); `None` uses
     /// [`GraphStorageMode::DEFAULT_BUDGET`]
     pub graph_budget: Option<u64>,
+    /// rank transport (the `--fabric` knob): `Threaded` (simulated ranks
+    /// in one process, default) or `Socket` (rank processes over
+    /// TCP/Unix sockets — requires the `harpsg-rank` launcher; the
+    /// in-process `Session::count` path rejects it with a typed error).
+    /// Estimates are bit-identical for every choice.
+    pub fabric: FabricKind,
 }
 
 impl Default for RunConfig {
@@ -202,6 +239,7 @@ impl Default for RunConfig {
             kernel: KernelMode::Scalar,
             graph_storage: GraphStorageMode::Resident,
             graph_budget: None,
+            fabric: FabricKind::Threaded,
         }
     }
 }
@@ -371,6 +409,21 @@ impl StorageDecision {
     }
 }
 
+/// One rank's wall-clock link parameters, least-squares fitted from its
+/// real blocking sends (socket fabric only — the in-process fabrics have
+/// no wire to measure). The measured counterpart of the simulated Hockney
+/// `(α, β)` in [`RunConfig::net`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RankLink {
+    pub rank: usize,
+    /// fitted per-message latency, seconds
+    pub alpha_s: f64,
+    /// fitted per-byte transfer time, seconds/byte
+    pub beta_s_per_byte: f64,
+    /// sends the fit was computed from
+    pub samples: usize,
+}
+
 #[derive(Debug, Clone)]
 pub struct RunResult {
     /// the subgraph-count estimate (median of means over iterations)
@@ -414,6 +467,9 @@ pub struct RunResult {
     /// ledger: an even CSR share when resident, the rank's own
     /// partition-proportional segment slice when sharded
     pub graph_resident_per_rank: Vec<u64>,
+    /// measured per-rank link parameters (socket fabric only; empty when
+    /// an in-process fabric carried the exchange)
+    pub link: Vec<RankLink>,
 }
 
 impl RunResult {
@@ -471,6 +527,15 @@ mod tests {
         }
         assert_eq!(ExchangeExec::parse("warp"), None);
         assert_eq!(RunConfig::default().exchange, ExchangeExec::Threaded);
+    }
+
+    #[test]
+    fn fabric_kind_parse_roundtrip() {
+        for k in [FabricKind::Threaded, FabricKind::Socket] {
+            assert_eq!(FabricKind::parse(k.name()), Some(k));
+        }
+        assert_eq!(FabricKind::parse("carrier-pigeon"), None);
+        assert_eq!(RunConfig::default().fabric, FabricKind::Threaded);
     }
 
     #[test]

@@ -19,6 +19,7 @@
 //!   harpsg count --template u7-2 --dataset MI --exchange sequential
 //!   harpsg count --template u10-2 --dataset R500K3 --graph-storage auto \
 //!       --graph-budget-mb 256
+//!   harpsg count --template u5-2 --dataset R250K3 --ranks 4 --fabric socket
 //!   harpsg run --config configs/quickstart.toml
 
 use anyhow::{Context, Result};
@@ -27,7 +28,9 @@ use harpsg::api::{
 };
 use harpsg::colorcount::{KernelMode, StorageMode};
 use harpsg::config::RunSpec;
-use harpsg::coordinator::{EngineKind, ExchangeExec, ModeSelect, RunConfig};
+use harpsg::coordinator::{
+    launch, EngineKind, ExchangeExec, FabricKind, ModeSelect, ProcSpec, RunConfig,
+};
 use harpsg::graph::{degree_stats, loader, Dataset, Graph, GraphStorageMode};
 use harpsg::runtime::XlaRuntime;
 use harpsg::template::{builtin, Template, BUILTIN_NAMES};
@@ -171,13 +174,50 @@ fn execute(
     if json {
         println!("{}", report.to_json_string());
     } else {
-        print_human(&session, &report);
+        print_human(session.graph(), &report);
     }
     Ok(())
 }
 
-fn print_human(session: &Session, r: &JobReport) {
-    let st = degree_stats(session.graph());
+/// Launch `cfg.n_ranks` worker processes over the socket fabric and print
+/// the merged report. The original template/dataset *spec strings* travel
+/// to the workers (each rank re-resolves them deterministically); the
+/// local graph load exists only to fill the report's graph statistics.
+fn execute_socket(
+    template_spec: &str,
+    dataset_spec: &str,
+    scale: u32,
+    cfg: RunConfig,
+    explicit_task_size: Option<u32>,
+    listen: Option<&str>,
+    json: bool,
+) -> Result<()> {
+    // run the same validation gauntlet as the in-process path
+    let t = load_template(template_spec)?;
+    let mut builder = CountJob::builder(t).config(cfg);
+    if let Some(ts) = explicit_task_size {
+        builder = builder.task_size(ts);
+    }
+    let job = builder.build()?;
+    let t0 = std::time::Instant::now();
+    let g = load_dataset(dataset_spec, scale)?;
+    let mut spec = ProcSpec::new(template_spec, dataset_spec, scale, job.config().clone());
+    if let Some(l) = listen {
+        spec.listen = l.to_string();
+    }
+    let setup_seconds = t0.elapsed().as_secs_f64();
+    let result = launch(&spec).context("launch rank processes")?;
+    let report = JobReport::from_run(&job, &g, result, false, setup_seconds);
+    if json {
+        println!("{}", report.to_json_string());
+    } else {
+        print_human(&g, &report);
+    }
+    Ok(())
+}
+
+fn print_human(g: &Graph, r: &JobReport) {
+    let st = degree_stats(g);
     println!(
         "graph: {} vertices, {} edges, avg deg {:.1}, max deg {}",
         st.n_vertices, st.n_edges, st.avg_degree, st.max_degree
@@ -228,6 +268,21 @@ fn print_human(session: &Session, r: &JobReport) {
             human_secs(m.exposed_wait_s),
             human_bytes(m.recv_peak())
         );
+    }
+    if !r.link.is_empty() {
+        // process mode only: the Hockney fit of each rank's wall-clock
+        // send timings over the socket mesh
+        println!("measured link ({} fabric):", r.fabric);
+        for l in &r.link {
+            println!(
+                "  rank {:>2}: alpha {:.3e} s, beta {:.3e} s/B ({} send{})",
+                l.rank,
+                l.alpha_s,
+                l.beta_s_per_byte,
+                l.samples,
+                if l.samples == 1 { "" } else { "s" }
+            );
+        }
     }
     println!(
         "workers:         {} configured, {} measured busy, imbalance {:.2}",
@@ -293,6 +348,8 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--mode",
             "--engine",
             "--exchange",
+            "--fabric",
+            "--listen",
             "--table-storage",
             "--kernel",
             "--graph-storage",
@@ -337,6 +394,20 @@ fn cmd_count(args: &[String]) -> Result<()> {
             ))
         })?;
     }
+    if let Some(f) = flags.get("--fabric") {
+        cfg.fabric = FabricKind::parse(f).ok_or_else(|| {
+            HarpsgError::Parse(format!(
+                "`--fabric`: unknown fabric `{f}` (threaded|socket)"
+            ))
+        })?;
+    }
+    let listen = flags.get("--listen").map(|s| s.as_str());
+    if listen.is_some() && cfg.fabric != FabricKind::Socket {
+        return Err(HarpsgError::InvalidJob(
+            "`--listen` only applies to `--fabric socket`".into(),
+        )
+        .into());
+    }
     if let Some(s) = flags.get("--table-storage") {
         cfg.table_storage = StorageMode::parse(s).ok_or_else(|| {
             HarpsgError::Parse(format!(
@@ -363,6 +434,25 @@ fn cmd_count(args: &[String]) -> Result<()> {
     }
     // mode/adaptive consistency is validated by the CountJob builder
     cfg.adaptive_group = flags.contains_key("--adaptive");
+    if cfg.fabric == FabricKind::Socket {
+        // rank *processes* over the socket mesh; per-step progress is
+        // not streamed back, so `--progress` is meaningless here
+        if flags.contains_key("--progress") {
+            return Err(HarpsgError::InvalidJob(
+                "`--progress` is not available with `--fabric socket`".into(),
+            )
+            .into());
+        }
+        return execute_socket(
+            &template,
+            &dataset,
+            scale,
+            cfg,
+            explicit_task_size,
+            listen,
+            flags.contains_key("--json"),
+        );
+    }
     let t = load_template(&template)?;
     let g = load_dataset(&dataset, scale)?;
     execute(
@@ -383,6 +473,23 @@ fn cmd_run(args: &[String]) -> Result<()> {
     // RunSpec::from_doc already enforces mode/task-size consistency for
     // explicitly configured keys, so no explicit task size is re-applied
     let spec = RunSpec::parse(&text)?;
+    if spec.run.fabric == FabricKind::Socket {
+        if flags.contains_key("--progress") {
+            return Err(HarpsgError::InvalidJob(
+                "`--progress` is not available with `run.fabric = \"socket\"`".into(),
+            )
+            .into());
+        }
+        return execute_socket(
+            &spec.template,
+            &spec.dataset,
+            spec.scale,
+            spec.run,
+            None,
+            None,
+            flags.contains_key("--json"),
+        );
+    }
     let t = load_template(&spec.template)?;
     let g = load_dataset(&spec.dataset, spec.scale)?;
     execute(

@@ -1,0 +1,336 @@
+//! Differential suite for the process-mode socket fabric: the same
+//! per-subtemplate exchange schedules must produce **bit-identical**
+//! counts whether the rank loop runs as threads in one address space
+//! (`ThreadedFabric`, modeled clocks) or as one `SocketFabric` endpoint
+//! per rank over a localhost TCP mesh (wall clocks).
+//!
+//! Three layers:
+//!
+//! 1. **in-thread socket matrix** — P OS threads, each owning exactly one
+//!    rank of its own `DistributedRunner` over its own `SocketFabric`
+//!    endpoint (the transport is byte-for-byte the one real processes
+//!    use; only the address exchange is in-memory). Builtin templates ×
+//!    both exchange executors × ranks {2, 5, 6}: merged colorful counts,
+//!    the recomputed estimate, and every static-mode comm decision
+//!    (shape *and* predicted ρ, which derive from the fixed
+//!    `policy.flop_time` calibration seed) match the threaded run
+//!    bit-for-bit;
+//! 2. **launcher E2E** — `coordinator::procmode::launch` spawns real
+//!    `harpsg-rank` processes (via `CARGO_BIN_EXE_harpsg-rank`) and the
+//!    merged `RunResult` is bit-identical to the in-process run, with
+//!    wall-clock link measurements from every rank;
+//! 3. **error paths** — a bad template or a missing worker binary
+//!    surfaces a typed error without hanging the launcher.
+//!
+//! CI's socket-matrix pins `HARPSG_TEST_RANKS=N` to {2, N} and the
+//! release leg sets `HARPSG_TEST_ADAPTIVE=1`, as everywhere else.
+
+use harpsg::colorcount::{median_of_means, EngineContext};
+use harpsg::comm::{config_digest, PeerAddr, SocketFabric, SocketListener, SocketOptions};
+use harpsg::coordinator::{
+    launch, DistributedRunner, ExchangeExec, FabricKind, ModeSelect, ProcSpec, RunConfig,
+    RunResult,
+};
+use harpsg::graph::rmat::{generate, RmatParams};
+use harpsg::graph::Graph;
+use harpsg::template::builtin;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Rank counts, honoring the CI matrix the same way
+/// `tests/pipeline_exec.rs` does. 1 is excluded: a single owned rank is
+/// by definition not process mode (`owned.len() == n_ranks`).
+fn test_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 2 {
+                return vec![2, n];
+            }
+            return vec![2];
+        }
+    }
+    vec![2, 5, 6]
+}
+
+/// The CI adaptive leg, as in `tests/adaptive.rs`: `=1` pins to the
+/// sweep-enabled leg, `=0` to the static one, unset runs both.
+fn adaptive_legs() -> Vec<bool> {
+    match std::env::var("HARPSG_TEST_ADAPTIVE").ok().as_deref() {
+        Some("1") => vec![true],
+        Some("0") => vec![false],
+        _ => vec![false, true],
+    }
+}
+
+fn opts() -> SocketOptions {
+    SocketOptions {
+        connect_timeout: Duration::from_secs(30),
+        connect_backoff: Duration::from_millis(5),
+        // generous: a failed peer must surface as a typed error, but a
+        // loaded CI box must not trip the bound mid-run
+        recv_timeout: Duration::from_secs(120),
+    }
+}
+
+fn base_cfg(ranks: usize, exec: ExchangeExec, adaptive: bool) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.n_ranks = ranks;
+    cfg.n_workers = 2;
+    cfg.n_iterations = 3;
+    cfg.seed = 7;
+    cfg.mode = if adaptive {
+        ModeSelect::Adaptive
+    } else {
+        ModeSelect::Pipeline
+    };
+    cfg.adaptive_group = adaptive;
+    cfg.exchange = exec;
+    cfg
+}
+
+/// Run `cfg` with every rank behind its own `SocketFabric` endpoint on a
+/// localhost TCP mesh, one OS thread per rank. Returns the per-rank
+/// partial results in rank order.
+fn socket_run(tpl: &str, g: &Graph, cfg: &RunConfig) -> Vec<RunResult> {
+    let n = cfg.n_ranks;
+    let listeners: Vec<SocketListener> = (0..n)
+        .map(|_| SocketListener::bind(&PeerAddr::Tcp("127.0.0.1:0".into())).unwrap())
+        .collect();
+    let addrs: Vec<PeerAddr> = listeners.iter().map(|l| l.local_addr().clone()).collect();
+    // every endpoint of one run shares the digest; a real launcher
+    // derives it from the canonical config text
+    let digest = config_digest(&format!("fabric-test {tpl} P={n} seed={}", cfg.seed));
+    let mut out: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (r, l) in listeners.into_iter().enumerate() {
+            let addrs = addrs.clone();
+            let cfg = cfg.clone();
+            handles.push(s.spawn(move || {
+                let t = builtin(tpl).unwrap();
+                let fabric =
+                    SocketFabric::establish(r, l, &addrs, digest, n.max(1), opts()).unwrap();
+                let mut runner = DistributedRunner::new(&t, g, cfg);
+                let res = runner.run_on(&fabric, &[r]).unwrap();
+                fabric.finish();
+                (r, res)
+            }));
+        }
+        for h in handles {
+            let (r, res) = h.join().unwrap();
+            out[r] = Some(res);
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Merge per-rank partials exactly like `procmode::merge` / the launcher:
+/// colorful counts fold in ascending rank order from 0.0, then the
+/// samples rescale and the estimate recomputes with the same
+/// median-of-means grouping the in-process run uses.
+fn merge_counts(tpl: &str, per_rank: &[RunResult]) -> (Vec<f64>, f64) {
+    let t = builtin(tpl).unwrap();
+    let ctx = EngineContext::new(&t);
+    let iters = per_rank[0].colorful.len();
+    let mut colorful = Vec::with_capacity(iters);
+    let mut samples = Vec::with_capacity(iters);
+    for it in 0..iters {
+        let mut total = 0.0f64;
+        for r in per_rank {
+            assert_eq!(r.colorful.len(), iters, "{tpl}: ragged iteration counts");
+            total += r.colorful[it];
+        }
+        colorful.push(total);
+        samples.push(total * ctx.colorful_scale() / ctx.aut as f64);
+    }
+    let estimate = median_of_means(&samples, 3.min(samples.len()));
+    (colorful, estimate)
+}
+
+/// Tentpole acceptance: builtin templates × both exchange executors ×
+/// ranks {2, 5, 6}, static modes — byte-equal count estimates and
+/// identical comm decisions (including predicted ρ, which derives from
+/// the fixed calibration seed `policy.flop_time`, never wall clocks)
+/// between the socket mesh and the in-process threaded fabric.
+#[test]
+fn socket_counts_and_decisions_match_threaded_bitwise() {
+    let g = generate(&RmatParams::with_skew(48, 240, 3, 99));
+    for tpl in ["u3-1", "u5-2", "u7-2"] {
+        for exec in [ExchangeExec::Threaded, ExchangeExec::Sequential] {
+            for ranks in test_rank_counts() {
+                let mut cfg = base_cfg(ranks, exec, false);
+                let t = builtin(tpl).unwrap();
+                let reference = DistributedRunner::new(&t, &g, cfg.clone()).run();
+
+                cfg.fabric = FabricKind::Socket;
+                let per_rank = socket_run(tpl, &g, &cfg);
+                let (colorful, estimate) = merge_counts(tpl, &per_rank);
+
+                let label = format!("{tpl} P={ranks} {exec:?}");
+                for (it, (&m, &r)) in colorful.iter().zip(&reference.colorful).enumerate() {
+                    assert_eq!(
+                        m.to_bits(),
+                        r.to_bits(),
+                        "{label} it={it}: socket colorful {m} vs threaded {r}"
+                    );
+                }
+                assert_eq!(
+                    estimate.to_bits(),
+                    reference.estimate.to_bits(),
+                    "{label}: socket estimate {estimate} vs threaded {}",
+                    reference.estimate
+                );
+                // every rank process replicated the full decision list,
+                // and it matches the threaded run exactly
+                for (r, res) in per_rank.iter().enumerate() {
+                    assert_eq!(
+                        res.comm_decisions.len(),
+                        reference.comm_decisions.len(),
+                        "{label} rank {r}"
+                    );
+                    for (d, e) in res.comm_decisions.iter().zip(&reference.comm_decisions) {
+                        assert_eq!(d.sub, e.sub, "{label} rank {r}");
+                        assert_eq!(d.pipelined, e.pipelined, "{label} rank {r} sub {}", d.sub);
+                        assert_eq!(d.g, e.g, "{label} rank {r} sub {}", d.sub);
+                        assert_eq!(d.n_steps, e.n_steps, "{label} rank {r} sub {}", d.sub);
+                        assert_eq!(
+                            d.predicted_rho.to_bits(),
+                            e.predicted_rho.to_bits(),
+                            "{label} rank {r} sub {}",
+                            d.sub
+                        );
+                    }
+                    // static storage decisions replicate too (the
+                    // calibration allreduce makes them global)
+                    assert_eq!(res.storage, reference.storage, "{label} rank {r}");
+                }
+            }
+        }
+    }
+}
+
+/// The adaptive sweep over sockets: counts stay bit-identical to the
+/// threaded adaptive run (the shape is a performance decision, never a
+/// correctness one), every rank process reports the *same* decision list
+/// (the calibration allreduce keeps the sweeps in lockstep — divergence
+/// would deadlock the mesh), and every scheduled ring is feasible.
+#[test]
+fn adaptive_sweep_stays_exact_and_consistent_over_sockets() {
+    if !adaptive_legs().contains(&true) {
+        return;
+    }
+    let g = generate(&RmatParams::with_skew(48, 240, 3, 99));
+    for exec in [ExchangeExec::Threaded, ExchangeExec::Sequential] {
+        for ranks in test_rank_counts() {
+            let mut cfg = base_cfg(ranks, exec, true);
+            let t = builtin("u5-2").unwrap();
+            let reference = DistributedRunner::new(&t, &g, cfg.clone()).run();
+
+            cfg.fabric = FabricKind::Socket;
+            let per_rank = socket_run("u5-2", &g, &cfg);
+            let (colorful, estimate) = merge_counts("u5-2", &per_rank);
+
+            let label = format!("u5-2 P={ranks} {exec:?} adaptive");
+            for (it, (&m, &r)) in colorful.iter().zip(&reference.colorful).enumerate() {
+                assert_eq!(m.to_bits(), r.to_bits(), "{label} it={it}");
+            }
+            assert_eq!(estimate.to_bits(), reference.estimate.to_bits(), "{label}");
+            let first = &per_rank[0];
+            for (r, res) in per_rank.iter().enumerate() {
+                assert_eq!(
+                    res.comm_decisions.len(),
+                    first.comm_decisions.len(),
+                    "{label} rank {r}"
+                );
+                for (d, e) in res.comm_decisions.iter().zip(&first.comm_decisions) {
+                    assert_eq!(
+                        (d.sub, d.pipelined, d.g, d.n_steps, d.predicted_rho.to_bits()),
+                        (e.sub, e.pipelined, e.g, e.n_steps, e.predicted_rho.to_bits()),
+                        "{label}: rank {r} diverged from rank 0 on sub {}",
+                        d.sub
+                    );
+                    assert!(
+                        !d.pipelined || 2 * d.g + 1 <= ranks,
+                        "{label} rank {r}: infeasible scheduled g={}",
+                        d.g
+                    );
+                }
+            }
+        }
+    }
+}
+
+/// Launcher E2E: real `harpsg-rank` worker processes over localhost,
+/// spawned and merged by `coordinator::procmode::launch`. The merged
+/// result is bit-identical to the in-process run of the same config, and
+/// the report carries a wall-clock link fit from every rank.
+#[test]
+fn launcher_spawns_processes_and_merges_bitwise() {
+    let ranks = 4usize;
+    let mut cfg = base_cfg(ranks, ExchangeExec::Threaded, false);
+    cfg.fabric = FabricKind::Socket;
+    let mut spec = ProcSpec::new("u5-2", "rmat:64:320:3:11", 0, cfg.clone());
+    spec.rank_bin = Some(PathBuf::from(env!("CARGO_BIN_EXE_harpsg-rank")));
+    let merged = launch(&spec).expect("process-mode launch over localhost");
+
+    let g = generate(&RmatParams::with_skew(64, 320, 3, 11));
+    let t = builtin("u5-2").unwrap();
+    let reference = DistributedRunner::new(&t, &g, cfg).run();
+
+    assert_eq!(merged.colorful.len(), reference.colorful.len());
+    for (it, (&m, &r)) in merged.colorful.iter().zip(&reference.colorful).enumerate() {
+        assert_eq!(
+            m.to_bits(),
+            r.to_bits(),
+            "it={it}: launcher colorful {m} vs in-process {r}"
+        );
+    }
+    assert_eq!(
+        merged.estimate.to_bits(),
+        reference.estimate.to_bits(),
+        "launcher estimate {} vs in-process {}",
+        merged.estimate,
+        reference.estimate
+    );
+    assert_eq!(merged.comm_decisions.len(), reference.comm_decisions.len());
+    for (d, e) in merged.comm_decisions.iter().zip(&reference.comm_decisions) {
+        assert_eq!(
+            (d.sub, d.pipelined, d.g, d.n_steps, d.predicted_rho.to_bits()),
+            (e.sub, e.pipelined, e.g, e.n_steps, e.predicted_rho.to_bits())
+        );
+    }
+    assert_eq!(merged.storage, reference.storage);
+    // measured, not simulated: one wall-clock Hockney fit per rank,
+    // each computed from that rank's real blocking sends
+    assert_eq!(merged.link.len(), ranks, "one link fit per rank process");
+    for (r, l) in merged.link.iter().enumerate() {
+        assert_eq!(l.rank, r);
+        assert!(l.samples > 0, "rank {r}: link fit without samples");
+        assert!(l.alpha_s >= 0.0 && l.beta_s_per_byte >= 0.0);
+    }
+    // the in-process reference has no wire to measure
+    assert!(reference.link.is_empty());
+    assert!(merged.oom == reference.oom);
+}
+
+/// Error paths stay typed and prompt: a template the workers could never
+/// resolve fails before any process spawns, and a missing worker binary
+/// fails at spawn — neither hangs the launcher.
+#[test]
+fn launcher_errors_are_typed_not_hangs() {
+    let mut cfg = base_cfg(2, ExchangeExec::Threaded, false);
+    cfg.fabric = FabricKind::Socket;
+    cfg.n_iterations = 1;
+
+    let spec = ProcSpec::new("no-such-template", "rmat:16:40:2:3", 0, cfg.clone());
+    assert!(launch(&spec).is_err(), "unknown template must fail fast");
+
+    let mut spec = ProcSpec::new("u3-1", "rmat:16:40:2:3", 0, cfg);
+    spec.rank_bin = Some(PathBuf::from("/nonexistent/harpsg-rank"));
+    let err = launch(&spec).expect_err("missing worker binary must fail at spawn");
+    let msg = format!("{err}");
+    assert!(
+        msg.contains("harpsg-rank") || msg.to_lowercase().contains("spawn"),
+        "unhelpful spawn error: {msg}"
+    );
+}
