@@ -196,6 +196,31 @@ fn bench_kernels(label: &str, k: usize, a: usize, a1: usize, n: usize, deg: usiz
     }
 }
 
+/// Frontier-pruning legs: scalar/simd × pruned/unpruned across a row-
+/// occupancy sweep (shared with the `bench-report` trajectory bin —
+/// see `harpsg::metrics::legs`). Throughput is in Munits/s of the
+/// unpruned unit count for both variants, so pruned/unpruned reads as
+/// speedup on the same logical work; the acceptance bar is ≥ 1.5× at
+/// occupancy ≤ 0.2.
+fn bench_pruned() {
+    use harpsg::metrics::legs::{default_legs, run_leg};
+    let results: Vec<_> = default_legs().iter().map(|s| run_leg(s, 3, 1)).collect();
+    for r in &results {
+        let twin = results
+            .iter()
+            .find(|u| !u.pruned && u.kernel == r.kernel && u.occupancy == r.occupancy)
+            .map(|u| u.munits_per_s)
+            .unwrap_or(f64::NAN);
+        println!(
+            "bench {:<44} {:>9.1} Munits/s ({:.2}x vs unpruned, {} pairs skipped)",
+            r.leg,
+            r.munits_per_s,
+            r.munits_per_s / twin,
+            r.pairs_skipped
+        );
+    }
+}
+
 fn bench_xla_vs_native() {
     let Ok(rt) = harpsg::runtime::XlaRuntime::load_default() else {
         println!("bench xla: artifacts not built, skipping");
@@ -235,6 +260,8 @@ fn main() {
     println!("== combine kernel: scalar vs simd ==");
     bench_kernels("u12-2-root (k12,a12,a1=8) n=1024", 12, 12, 8, 1024, 16);
     bench_kernels("u15-1-mid  (k15,a7,a1=3) n=256", 15, 7, 3, 256, 16);
+    println!("== frontier pruning: occupancy sweep ==");
+    bench_pruned();
     println!("== XLA (PJRT) vs native backend ==");
     bench_xla_vs_native();
 }

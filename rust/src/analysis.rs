@@ -26,6 +26,14 @@
 //!    is an identifier-*suffix* check: `FabricKind`, the mode-matrix
 //!    config enum, continues past the needle and is deliberately exempt —
 //!    the CLI and config layers select a fabric without touching one.)
+//! 4. **Frontier bitmaps are built in one place.** Only
+//!    `colorcount/frontier` may *construct* a `Frontier` — the struct
+//!    literal or the `::full` constructor. Every other module derives
+//!    frontiers through the `CountTable::frontier`/`TableStorage::frontier`
+//!    accessors (which live inside the frontier module), so the
+//!    nonzero-row semantics that pruning's bit-exactness rests on are
+//!    defined exactly once. Naming the type (imports, `Option<Frontier>`
+//!    parameters) is fine anywhere.
 //!
 //! The matcher works on comment-stripped lines, so prose mentions of the
 //! forbidden names are fine. The needles the checker searches for are
@@ -42,7 +50,8 @@ pub struct Violation {
     pub file: String,
     /// 1-based line number.
     pub line: usize,
-    /// One of [`RULE_ATOMICS`], [`RULE_SAFETY`], [`RULE_FABRIC`].
+    /// One of [`RULE_ATOMICS`], [`RULE_SAFETY`], [`RULE_FABRIC`],
+    /// [`RULE_FRONTIER`].
     pub rule: &'static str,
     pub detail: String,
 }
@@ -50,6 +59,7 @@ pub struct Violation {
 pub const RULE_ATOMICS: &str = "shim-atomics";
 pub const RULE_SAFETY: &str = "safety-comment";
 pub const RULE_FABRIC: &str = "fabric-access";
+pub const RULE_FRONTIER: &str = "frontier-construction";
 
 /// How many lines above an `unsafe` token the `SAFETY:` comment may
 /// start, counting the statement's own continuation lines.
@@ -61,6 +71,8 @@ struct Needles {
     unsafe_kw: String,
     safety_tag: String,
     fabric: String,
+    frontier: String,
+    frontier_ctor: String,
 }
 
 impl Needles {
@@ -76,6 +88,8 @@ impl Needles {
             unsafe_kw: ["un", "safe"].concat(),
             safety_tag: ["SAFE", "TY:"].concat(),
             fabric: ["Fab", "ric"].concat(),
+            frontier: ["Fron", "tier"].concat(),
+            frontier_ctor: ["::", "full"].concat(),
         }
     }
 }
@@ -133,6 +147,29 @@ fn contains_word_suffix(hay: &str, needle: &str) -> bool {
     false
 }
 
+/// Construction check for the frontier rule: a word-bounded occurrence
+/// of the type name followed (after whitespace) by a struct-literal
+/// brace or the `::full` constructor. Type mentions — imports,
+/// `Option<…>` parameters, turbofish-free accessor calls — continue past
+/// neither and are exempt.
+fn constructs_frontier(hay: &str, n: &Needles) -> bool {
+    let needle = &n.frontier;
+    let mut from = 0;
+    while let Some(p) = hay[from..].find(needle.as_str()) {
+        let at = from + p;
+        let pre = hay[..at].chars().next_back();
+        let rest = &hay[at + needle.len()..];
+        if !is_ident_char(pre) && !is_ident_char(rest.chars().next()) {
+            let after = rest.trim_start();
+            if after.starts_with('{') || after.starts_with(n.frontier_ctor.as_str()) {
+                return true;
+            }
+        }
+        from = at + needle.len();
+    }
+    false
+}
+
 /// Does a `SAFETY:` comment sit directly above line index `i`?
 /// Climbs over comment lines, attributes, and unfinished statement
 /// lines (e.g. `let slot =`); stops at blank lines or lines whose code
@@ -172,6 +209,10 @@ fn atomics_whitelisted(file: &str) -> bool {
 
 fn fabric_whitelisted(file: &str) -> bool {
     file.starts_with("comm/") || file.starts_with("coordinator/")
+}
+
+fn frontier_whitelisted(file: &str) -> bool {
+    file.contains("colorcount/frontier")
 }
 
 /// Check one file's source. `file` is the root-relative path used both
@@ -219,6 +260,16 @@ pub fn check_source(file: &str, src: &str) -> Vec<Violation> {
                 format!(
                     "{} access outside comm/ and coordinator/; use the executor layer",
                     n.fabric
+                ),
+            );
+        }
+        if !frontier_whitelisted(file) && constructs_frontier(code, &n) {
+            push(
+                RULE_FRONTIER,
+                format!(
+                    "{} constructed outside colorcount/frontier; derive it \
+                     through the table accessors",
+                    n.frontier
                 ),
             );
         }
@@ -413,6 +464,34 @@ mod tests {
             .join("harpsg_rank.rs");
         let src = std::fs::read_to_string(&root).expect("read worker binary source");
         assert!(check_source("bin/harpsg_rank.rs", &src).is_empty());
+    }
+
+    #[test]
+    fn frontier_construction_outside_frontier_module_is_flagged() {
+        let ty = ["Fron", "tier"].concat();
+        // the two construction vectors: the `::full` constructor and a
+        // struct literal
+        let ctor = format!("let f = {ty}{}(64);\n", ["::", "full"].concat());
+        let lit = format!("let f = {ty} {{ n_rows, words, live }};\n");
+        for src in [&ctor, &lit] {
+            let v = check_source("coordinator/dist.rs", src);
+            assert_eq!(v.len(), 1, "{}", render(&v));
+            assert_eq!(v[0].rule, RULE_FRONTIER);
+            // the one legal home
+            assert!(check_source("colorcount/frontier.rs", src).is_empty());
+        }
+        // type mentions are not construction: imports, Option params,
+        // and accessor calls all pass everywhere
+        for ok in [
+            format!("use crate::colorcount::{ty};\n"),
+            format!("fn g(f: Option<&{ty}>) -> bool {{ f.is_some() }}\n"),
+            "let f = table.frontier();\n".to_string(),
+        ] {
+            assert!(
+                check_source("coordinator/dist.rs", &ok).is_empty(),
+                "false positive on: {ok}"
+            );
+        }
     }
 
     #[test]

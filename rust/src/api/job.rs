@@ -3,7 +3,7 @@
 //! rule up front so the coordinator never has to panic on a bad config.
 
 use super::error::HarpsgError;
-use crate::colorcount::{KernelMode, StorageMode};
+use crate::colorcount::{KernelMode, PruneMode, StorageMode};
 use crate::comm::{AdaptivePolicy, HockneyParams};
 use crate::coordinator::{
     validate_group_size, EngineKind, ExchangeExec, FabricKind, ModeSelect, RunConfig,
@@ -145,6 +145,19 @@ impl CountJobBuilder {
     /// worker count either way.
     pub fn kernel(mut self, k: KernelMode) -> Self {
         self.cfg.kernel = k;
+        self
+    }
+
+    /// Frontier pruning (the CLI's `--prune`): `Off` (the historical
+    /// full-table combine, default — and the differential baseline),
+    /// `On` (every combine consults the child tables' nonzero-row
+    /// frontiers to skip dead aggregation pairs, contraction rows, and
+    /// wire rows), or `Auto` (prune per table only when the measured
+    /// frontier occupancy is low enough to pay). Counts and estimates
+    /// are bit-identical for every choice — pruning only elides exact
+    /// zeros; the report's `prune` section shows what was skipped.
+    pub fn prune(mut self, p: PruneMode) -> Self {
+        self.cfg.prune = p;
         self
     }
 
@@ -410,6 +423,27 @@ mod tests {
         }
         // orthogonal to storage and the adaptive sweep
         assert!(base()
+            .kernel(KernelMode::Simd)
+            .table_storage(StorageMode::Auto)
+            .adaptive(true)
+            .build()
+            .is_ok());
+    }
+
+    #[test]
+    fn prune_knob() {
+        assert_eq!(
+            base().build().unwrap().config().prune,
+            PruneMode::Off,
+            "the unpruned combine stays the default"
+        );
+        for mode in [PruneMode::On, PruneMode::Off, PruneMode::Auto] {
+            let job = base().prune(mode).build().unwrap();
+            assert_eq!(job.config().prune, mode);
+        }
+        // orthogonal to kernel, storage and the adaptive sweep
+        assert!(base()
+            .prune(PruneMode::Auto)
             .kernel(KernelMode::Simd)
             .table_storage(StorageMode::Auto)
             .adaptive(true)

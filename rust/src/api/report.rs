@@ -6,7 +6,7 @@
 
 use crate::colorcount::ExecStats;
 use crate::coordinator::{
-    CommDecision, ModelTime, RankLink, RunResult, StorageDecision, ThreadStats,
+    CommDecision, ModelTime, PruneStats, RankLink, RunResult, StorageDecision, ThreadStats,
 };
 use crate::graph::Graph;
 use crate::metrics::Series;
@@ -37,6 +37,8 @@ pub struct JobReport {
     pub table_storage: String,
     /// combine kernel ("scalar" | "simd" | "auto")
     pub kernel: String,
+    /// frontier-pruning mode the job requested ("on" | "off" | "auto")
+    pub prune_mode: String,
     /// resolved graph-storage backend ("resident" | "mmap") — the run's
     /// actual decision, `auto` never survives to the report
     pub graph_storage: String,
@@ -78,6 +80,10 @@ pub struct JobReport {
     /// per-subtemplate storage outcome (final iteration): measured
     /// density, chosen representation, resident vs dense-layout bytes
     pub storage: Vec<StorageDecision>,
+    /// per-subtemplate frontier-pruning outcome (final iteration):
+    /// measured frontier occupancy and the skip tallies across the
+    /// aggregate/contract/exchange legs (all zeros with pruning off)
+    pub prune: Vec<PruneStats>,
     pub peak_mem_per_rank: Vec<u64>,
     /// per-rank peaks under the unconditional dense layout (the baseline
     /// the `bytes_saved` delta is measured against)
@@ -117,6 +123,7 @@ impl JobReport {
             exchange: job.cfg.exchange.name().to_string(),
             table_storage: job.cfg.table_storage.name().to_string(),
             kernel: job.cfg.kernel.name().to_string(),
+            prune_mode: job.cfg.prune.name().to_string(),
             graph_storage: r.graph_storage,
             fabric: job.cfg.fabric.name().to_string(),
             link: r.link,
@@ -137,6 +144,7 @@ impl JobReport {
             workers: r.workers,
             measured: r.measured,
             storage: r.storage,
+            prune: r.prune,
             peak_mem_per_rank: r.peak_mem_per_rank,
             peak_mem_dense_per_rank: r.peak_mem_dense_per_rank,
             flop_time: r.flop_time,
@@ -198,6 +206,7 @@ impl JobReport {
                     ("exchange".into(), Json::Str(self.exchange.clone())),
                     ("table_storage".into(), Json::Str(self.table_storage.clone())),
                     ("kernel".into(), Json::Str(self.kernel.clone())),
+                    ("prune".into(), Json::Str(self.prune_mode.clone())),
                     ("graph_storage".into(), Json::Str(self.graph_storage.clone())),
                     ("fabric".into(), Json::Str(self.fabric.clone())),
                     ("adaptive".into(), Json::Bool(self.adaptive)),
@@ -347,6 +356,37 @@ impl JobReport {
                                     Json::Num(d.resident_bytes as f64),
                                 ),
                                 ("bytes_saved".into(), Json::Num(d.bytes_saved() as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            (
+                // per-subtemplate frontier-pruning outcome (final
+                // iteration): the measured live-row fraction of the
+                // stored tables and the tallies of work each pruning leg
+                // elided — aggregation pairs, contraction rows, and rows
+                // dropped from the wire by the masked encoding
+                "prune".into(),
+                Json::Arr(
+                    self.prune
+                        .iter()
+                        .map(|s| {
+                            Json::Obj(vec![
+                                ("sub".into(), Json::Num(s.sub as f64)),
+                                (
+                                    "frontier_occupancy".into(),
+                                    Json::Num(s.frontier_occupancy),
+                                ),
+                                (
+                                    "pairs_skipped".into(),
+                                    Json::Num(s.pairs_skipped as f64),
+                                ),
+                                ("rows_skipped".into(), Json::Num(s.rows_skipped as f64)),
+                                (
+                                    "wire_rows_dropped".into(),
+                                    Json::Num(s.wire_rows_dropped as f64),
+                                ),
                             ])
                         })
                         .collect(),

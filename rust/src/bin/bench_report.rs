@@ -1,0 +1,100 @@
+//! `bench-report` — the perf-trajectory harness.
+//!
+//! Runs the hot-path combine legs (scalar/simd × pruned/unpruned × row-
+//! occupancy sweep — the same [`harpsg::metrics::legs`] workloads
+//! `benches/hotpath.rs` prints) in **fixed-iteration** mode and writes
+//! the machine-readable trajectory artifact (default `BENCH_10.json`).
+//!
+//! With `--floor <file>` it also enforces the CI gates and exits
+//! non-zero on violation:
+//! * no floored leg more than 25% below its checked-in floor
+//!   (`benches/hotpath_floor.tsv` — conservative Munits/s minima meant
+//!   to catch order-of-magnitude hot-path regressions on any runner);
+//! * every pruned leg at frontier occupancy ≤ 0.2 at least 1.5× its
+//!   unpruned twin (the ISSUE 10 acceptance speedup).
+//!
+//! Usage:
+//!   bench-report [--iters N] [--workers N] [--out FILE] [--floor FILE]
+
+use harpsg::metrics::legs::{
+    check_floor, check_prune_ratio, default_legs, parse_floor, results_json,
+};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let mut iters = 8usize;
+    let mut workers = 1usize;
+    let mut out = String::from("BENCH_10.json");
+    let mut floor: Option<String> = None;
+    let mut i = 0;
+    while i < args.len() {
+        let need = |n: usize| {
+            args.get(n).unwrap_or_else(|| {
+                eprintln!("{} needs a value", args[n - 1]);
+                std::process::exit(2);
+            })
+        };
+        match args[i].as_str() {
+            "--iters" => {
+                iters = need(i + 1).parse().expect("--iters N");
+                i += 2;
+            }
+            "--workers" => {
+                workers = need(i + 1).parse().expect("--workers N");
+                i += 2;
+            }
+            "--out" => {
+                out = need(i + 1).clone();
+                i += 2;
+            }
+            "--floor" => {
+                floor = Some(need(i + 1).clone());
+                i += 2;
+            }
+            other => {
+                eprintln!(
+                    "unknown arg `{other}` — usage: bench-report [--iters N] \
+                     [--workers N] [--out FILE] [--floor FILE]"
+                );
+                std::process::exit(2);
+            }
+        }
+    }
+
+    println!("bench-report: {iters} iterations per leg, {workers} worker(s)");
+    let results: Vec<_> = default_legs()
+        .iter()
+        .map(|spec| {
+            let r = harpsg::metrics::legs::run_leg(spec, iters, workers);
+            println!(
+                "  {:<36} {:>9.1} Munits/s  (pairs_skipped {}, rows_skipped {})",
+                r.leg, r.munits_per_s, r.pairs_skipped, r.rows_skipped
+            );
+            r
+        })
+        .collect();
+
+    let json = results_json(&results);
+    if let Err(e) = std::fs::write(&out, &json) {
+        eprintln!("bench-report: cannot write {out}: {e}");
+        std::process::exit(1);
+    }
+    println!("wrote {out}");
+
+    if let Some(path) = floor {
+        let text = std::fs::read_to_string(&path).unwrap_or_else(|e| {
+            eprintln!("bench-report: cannot read floor file {path}: {e}");
+            std::process::exit(1);
+        });
+        let mut viols = check_floor(&results, &parse_floor(&text), 0.25);
+        viols.extend(check_prune_ratio(&results, 1.5, 0.2));
+        if !viols.is_empty() {
+            eprintln!("bench-report: {} gate violation(s):", viols.len());
+            for v in &viols {
+                eprintln!("  {v}");
+            }
+            std::process::exit(1);
+        }
+        println!("floor + prune-speedup gates passed");
+    }
+}

@@ -17,8 +17,9 @@
 //! sets sums to the full result. The distributed coordinator leans on this
 //! to interleave per-step computation with communication (Alg 3).
 
+use super::frontier::{Frontier, PruneMode};
 use super::kernel::KernelMode;
-use super::parallel::{combine_batches_with, ExecStats, PairBatch};
+use super::parallel::{combine_batches_pruned, combine_batches_with, ExecStats, PairBatch};
 use super::storage::RowsRef;
 use super::table::{init_leaf_table, Coloring, Count, CountTable};
 use crate::combin::{Binomial, CheckedSplit, SplitTable};
@@ -246,7 +247,23 @@ pub fn contract_touched(
     split: &SplitTable,
     scratch: &mut CombineScratch,
 ) -> u64 {
+    contract_touched_pruned(out, passive, split, scratch, None).0
+}
+
+/// [`contract_touched`] with the frontier layer: touched vertices whose
+/// passive row sits outside `frontier` (i.e. is all-zero) are skipped —
+/// every contraction term would be `0.0 · x` with `x` a finite
+/// non-negative count, an exact `+0.0` add, so the output bits cannot
+/// change (see `super::frontier`). Returns (units, rows skipped).
+pub fn contract_touched_pruned(
+    out: &mut CountTable,
+    passive: &CountTable,
+    split: &SplitTable,
+    scratch: &mut CombineScratch,
+    frontier: Option<&Frontier>,
+) -> (u64, u64) {
     let mut units = 0u64;
+    let mut skipped = 0u64;
     // one checked construction per combine: validates every idx1/idx2
     // entry against the operand widths, so the per-element gathers in
     // `contract_row` run unchecked (bounds checks on these 10⁷+
@@ -255,6 +272,12 @@ pub fn contract_touched(
     let cs = CheckedSplit::new(split, passive.n_sets, scratch.n_agg_sets);
     for ti in 0..scratch.touched.len() {
         let v = scratch.touched[ti] as usize;
+        if let Some(f) = frontier {
+            if !f.contains(v) {
+                skipped += 1;
+                continue;
+            }
+        }
         let prow = passive.row(v);
         let lo = v * scratch.n_agg_sets;
         let arow = &scratch.agg[lo..lo + scratch.n_agg_sets];
@@ -262,13 +285,30 @@ pub fn contract_touched(
         units += contract_row(orow, prow, arow, &cs);
     }
     scratch.finish();
-    units
+    (units, skipped)
 }
 
 /// Single-rank reference engine: computes the colorful count of one
 /// coloring iteration over the whole graph.
 pub struct Engine {
     pub ctx: EngineContext,
+}
+
+/// What the frontier layer elided during one iteration (summed over the
+/// DAG's combines): adjacency pairs dropped because the active row was
+/// outside its table's frontier, and contractions skipped because the
+/// passive row was. Both elisions are bit-exact — see `super::frontier`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PruneTally {
+    pub pairs_skipped: u64,
+    pub rows_skipped: u64,
+}
+
+impl PruneTally {
+    pub fn add(&mut self, other: PruneTally) {
+        self.pairs_skipped += other.pairs_skipped;
+        self.rows_skipped += other.rows_skipped;
+    }
 }
 
 /// Result of one coloring iteration.
@@ -355,6 +395,57 @@ impl Engine {
         })
     }
 
+    /// [`Engine::run_iteration`] with the frontier layer: per combine,
+    /// adjacency pairs whose active row is outside the active table's
+    /// frontier are dropped before aggregation, and touched vertices with
+    /// an all-zero passive row skip their contraction. `prune` arbitrates
+    /// per table from the frontier occupancy (`Off` elides nothing and is
+    /// the exact baseline; `On` always prunes; `Auto` prunes sparse
+    /// frontiers only). The counts are **bit-identical** to the unpruned
+    /// run for every mode — every elided float op is an exact `+0.0` add.
+    pub fn run_iteration_pruned(
+        &self,
+        g: &Graph,
+        iter_seed: u64,
+        prune: PruneMode,
+    ) -> (IterationOutput, PruneTally) {
+        let n = g.n_vertices();
+        let max_agg = self
+            .ctx
+            .dag
+            .subs
+            .iter()
+            .filter(|s| !s.is_leaf())
+            .map(|s| self.ctx.binom.c(self.ctx.k, s.active_size(&self.ctx.dag)) as usize)
+            .max()
+            .unwrap_or(1);
+        let mut scratch = CombineScratch::new(n, max_agg);
+        let mut tally = PruneTally::default();
+        let out = self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
+            scratch.begin(active.n_sets);
+            let af = active.frontier();
+            let active_on = prune.active_for(af.occupancy());
+            let mut skipped = 0u64;
+            let pairs = (0..n as u32)
+                .flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)))
+                .filter(|&(_, u)| {
+                    if !active_on || af.contains(u as usize) {
+                        true
+                    } else {
+                        skipped += 1;
+                        false
+                    }
+                });
+            aggregate_batch(&mut scratch, RowsRef::dense(active), pairs);
+            tally.pairs_skipped += skipped;
+            let pf = passive.frontier();
+            let pfr = prune.active_for(pf.occupancy()).then_some(&pf);
+            let (_, rows) = contract_touched_pruned(out, passive, split, &mut scratch, pfr);
+            tally.rows_skipped += rows;
+        });
+        (out, tally)
+    }
+
     /// Run one coloring iteration on the real multithreaded combine
     /// executor: every non-leaf combine consumes the Alg-4 task queue
     /// (built at `max_task_size` granularity; `0` = per-vertex tasks)
@@ -414,6 +505,67 @@ impl Engine {
             stats.merge(&st);
         });
         (out, stats)
+    }
+
+    /// [`Engine::run_iteration_workers_kernel`] with the frontier layer
+    /// (the single-rank analogue of the distributed pruned combine): per
+    /// combine, the pair list is filtered by the active table's frontier
+    /// before the task queue is built — so the Alg-4 tasks are sized by
+    /// *frontier-effective* degrees — and the passive frontier rides into
+    /// [`combine_batches_pruned`]. `cost_model`, when given, consumes the
+    /// task queue in LPT order. Counts are bit-identical to the unpruned
+    /// run for every mode, worker count and kernel.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_iteration_workers_pruned(
+        &self,
+        g: &Graph,
+        iter_seed: u64,
+        n_workers: usize,
+        max_task_size: u32,
+        kernel: KernelMode,
+        prune: PruneMode,
+        cost_model: Option<&crate::sched::TaskCostModel>,
+    ) -> (IterationOutput, ExecStats, PruneTally) {
+        let pairs: Vec<(u32, u32)> = (0..g.n_vertices() as u32)
+            .flat_map(|v| g.neighbors(v).iter().map(move |&u| (v, u)))
+            .collect();
+        let mut stats = ExecStats::zeros(n_workers);
+        let mut tally = PruneTally::default();
+        let out = self.run_iteration_with(g, iter_seed, |out, active, passive, split| {
+            let af = active.frontier();
+            let kept: Vec<(u32, u32)>;
+            let plist: &[(u32, u32)] = if prune.active_for(af.occupancy()) {
+                kept = pairs
+                    .iter()
+                    .copied()
+                    .filter(|&(_, u)| af.contains(u as usize))
+                    .collect();
+                tally.pairs_skipped += (pairs.len() - kept.len()) as u64;
+                &kept
+            } else {
+                &pairs
+            };
+            let pf = passive.frontier();
+            let pfr = prune.active_for(pf.occupancy()).then_some(&pf);
+            let batch = [PairBatch {
+                pairs: plist,
+                rows: RowsRef::dense(active),
+            }];
+            let st = combine_batches_pruned(
+                out,
+                RowsRef::dense(passive),
+                split,
+                &batch,
+                max_task_size,
+                n_workers,
+                kernel,
+                pfr,
+                cost_model,
+            );
+            tally.rows_skipped += st.rows_skipped;
+            stats.merge(&st);
+        });
+        (out, stats, tally)
     }
 }
 
@@ -555,6 +707,81 @@ mod tests {
                 assert!(stats.n_pairs > 0);
             }
         }
+    }
+
+    /// Differential leg of the frontier layer at the engine level: a
+    /// connected blob plus an isolated edge. The 2-vertex component can
+    /// host no rooted embedding of size ≥ 3, so whichever side of the
+    /// u5-2 root combine has size ≥ 3 is guaranteed all-zero rows there —
+    /// pruning must elide *something*, and must elide it bit-exactly.
+    #[test]
+    fn pruned_iterations_are_bit_identical_to_baseline() {
+        use crate::colorcount::frontier::PruneMode;
+        let mut edges = vec![(8u32, 9u32)];
+        for v in 0..8u32 {
+            for u in (v + 1)..8 {
+                if (v + u) % 2 == 1 {
+                    edges.push((v, u));
+                }
+            }
+        }
+        let g = graph_from_edges(10, &edges);
+        let t = builtin("u5-2").unwrap();
+        let e = Engine::new(&t);
+        let mut elided = 0u64;
+        for seed in [3u64, 11, 19] {
+            let base = e.run_iteration(&g, seed);
+            let mut on_tally = PruneTally::default();
+            for prune in [PruneMode::Off, PruneMode::On, PruneMode::Auto] {
+                let (out, tally) = e.run_iteration_pruned(&g, seed, prune);
+                assert_eq!(
+                    out.colorful.to_bits(),
+                    base.colorful.to_bits(),
+                    "{prune:?} seed={seed}"
+                );
+                assert_eq!(out.estimate.to_bits(), base.estimate.to_bits());
+                match prune {
+                    PruneMode::Off => {
+                        assert_eq!(tally, PruneTally::default(), "off must elide nothing")
+                    }
+                    PruneMode::On => {
+                        elided += tally.pairs_skipped + tally.rows_skipped;
+                        on_tally = tally;
+                    }
+                    PruneMode::Auto => {}
+                }
+            }
+            // executor path: every kernel, worker count and the LPT
+            // scheduler reproduce the serial baseline bit for bit (counts
+            // are integer-valued, so even the SIMD lane tree is exact),
+            // and the elision tallies agree with the serial pruned run
+            let model = crate::sched::TaskCostModel {
+                unit_per_pair: 1.0,
+                unit_per_task: 1.0,
+                overhead: 0.1,
+            };
+            for workers in [1, 4] {
+                for kernel in [KernelMode::Scalar, KernelMode::Simd] {
+                    let (out, st, tally) = e.run_iteration_workers_pruned(
+                        &g,
+                        seed,
+                        workers,
+                        0,
+                        kernel,
+                        PruneMode::On,
+                        Some(&model),
+                    );
+                    assert_eq!(
+                        out.colorful.to_bits(),
+                        base.colorful.to_bits(),
+                        "{kernel:?} workers={workers} seed={seed}"
+                    );
+                    assert_eq!(tally, on_tally, "{kernel:?} workers={workers}");
+                    assert_eq!(st.rows_skipped, tally.rows_skipped);
+                }
+            }
+        }
+        assert!(elided > 0, "the isolated edge must force at least one elision");
     }
 
     #[test]

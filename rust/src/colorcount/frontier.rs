@@ -1,0 +1,327 @@
+//! Per-table nonzero-row frontiers: which local rows of a finalized
+//! subtemplate table carry any nonzero count.
+//!
+//! On deep subtemplates most vertices hold all-zero count rows (a row is
+//! live only when some colorful embedding roots there), yet the combine
+//! streams every adjacency pair and contracts every vertex regardless.
+//! The frontier makes the dead set explicit — a dense bitmap plus a
+//! popcount-backed iterator — so the aggregation, contraction and
+//! exchange layers can skip structurally-zero work:
+//!
+//! * **aggregation**: a pair `(v, u)` whose active row `u` is dead only
+//!   adds `+0.0` to every slot of `agg[v,·]`;
+//! * **contraction**: a dead passive row zeroes every product term of
+//!   `out[v,s] = Σ_j passive[v,t0]·agg[v,t1]`;
+//! * **exchange**: a dead requested row ships `n_sets` zero bytes that
+//!   fold into nothing on the receiver.
+//!
+//! Skipping all three is **bit-exact** because counts are non-negative
+//! and never `-0.0` or NaN: omitting `+= 0.0` terms from an independent
+//! running sum cannot move a bit, and a product with an exact `0.0`
+//! factor is an exact `0.0` (same invariant the sparse storage layer
+//! leans on — see `super::storage` module docs).
+//!
+//! Frontier bitmaps are constructed **only here**: the rest of the tree
+//! reads them through the blessed accessors [`CountTable::frontier`] /
+//! [`TableStorage::frontier`] (inherent impls below), so membership is
+//! always derived from the table that was actually stored — the
+//! analysis gate (`analysis::RULE_FRONTIER`) enforces the confinement
+//! textually.
+
+use super::storage::TableStorage;
+use super::table::CountTable;
+
+/// The `--prune` knob: whether the combine consults frontiers at all.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum PruneMode {
+    /// consult the frontier in every combine phase
+    On,
+    /// the historical behaviour: stream every pair/row (default)
+    #[default]
+    Off,
+    /// prune per table, only when the measured frontier occupancy is low
+    /// enough for the bitmap probes to pay for themselves
+    Auto,
+}
+
+/// `Auto` cutoff: prune when fewer than this fraction of rows are live.
+/// Near-full frontiers make every probe a taken branch for no skipped
+/// work; below ~3/4 the dead-row savings dominate the probe cost.
+pub const AUTO_OCCUPANCY_CUTOFF: f64 = 0.75;
+
+impl PruneMode {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PruneMode::On => "on",
+            PruneMode::Off => "off",
+            PruneMode::Auto => "auto",
+        }
+    }
+
+    /// Parse the CLI/config spelling; `None` for unknown names.
+    pub fn parse(name: &str) -> Option<PruneMode> {
+        match name {
+            "on" => Some(PruneMode::On),
+            "off" => Some(PruneMode::Off),
+            "auto" => Some(PruneMode::Auto),
+            _ => None,
+        }
+    }
+
+    /// Should a combine whose active/passive table measured the given
+    /// frontier occupancy prune through the bitmap? Deterministic in the
+    /// data — every rank answers identically for the same table, which
+    /// keeps pruning decisions globally consistent without negotiation.
+    pub fn active_for(&self, occupancy: f64) -> bool {
+        match self {
+            PruneMode::On => true,
+            PruneMode::Off => false,
+            PruneMode::Auto => occupancy < AUTO_OCCUPANCY_CUTOFF,
+        }
+    }
+}
+
+/// The nonzero-row set of one finalized count table: a dense bitmap
+/// (one bit per local row) with the live count cached. Fields are
+/// private — construction happens only through the blessed accessors in
+/// this module, so a `Frontier` always reflects a real table's rows.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frontier {
+    n_rows: usize,
+    /// `ceil(n_rows / 64)` presence words, row `r` at bit `r % 64` of
+    /// word `r / 64`; bits at or past `n_rows` are always clear
+    words: Vec<u64>,
+    /// popcount of `words` (number of live rows)
+    live: usize,
+}
+
+impl Frontier {
+    /// The all-live frontier: every row present. What prune-off phases
+    /// and leaf tables (every row one-hot) see.
+    pub fn full(n_rows: usize) -> Frontier {
+        let mut words = vec![u64::MAX; n_rows.div_ceil(64)];
+        if n_rows % 64 != 0 {
+            if let Some(last) = words.last_mut() {
+                *last = (1u64 << (n_rows % 64)) - 1;
+            }
+        }
+        Frontier {
+            n_rows,
+            words,
+            live: n_rows,
+        }
+    }
+
+    /// Build from a per-row liveness probe (internal: the accessors
+    /// below supply the probe from the table representation).
+    fn of_rows(n_rows: usize, mut row_live: impl FnMut(usize) -> bool) -> Frontier {
+        let mut words = vec![0u64; n_rows.div_ceil(64)];
+        let mut live = 0usize;
+        for r in 0..n_rows {
+            if row_live(r) {
+                words[r / 64] |= 1u64 << (r % 64);
+                live += 1;
+            }
+        }
+        Frontier {
+            n_rows,
+            words,
+            live,
+        }
+    }
+
+    /// Is row `r` live (has any nonzero entry)? Out-of-range rows are
+    /// dead.
+    #[inline]
+    pub fn contains(&self, r: usize) -> bool {
+        r < self.n_rows && (self.words[r / 64] >> (r % 64)) & 1 == 1
+    }
+
+    /// Number of live rows.
+    #[inline]
+    pub fn live_rows(&self) -> usize {
+        self.live
+    }
+
+    /// Number of rows the frontier covers (live or dead).
+    #[inline]
+    pub fn n_rows(&self) -> usize {
+        self.n_rows
+    }
+
+    /// Fraction of rows live. An empty table reports 1.0 — there is
+    /// nothing to skip, so `Auto` must not bother pruning it.
+    pub fn occupancy(&self) -> f64 {
+        if self.n_rows == 0 {
+            1.0
+        } else {
+            self.live as f64 / self.n_rows as f64
+        }
+    }
+
+    /// Iterate the live row indices in ascending order (word-at-a-time
+    /// with `trailing_zeros`, clearing the lowest set bit per step).
+    pub fn iter(&self) -> FrontierIter<'_> {
+        FrontierIter {
+            words: &self.words,
+            word_idx: 0,
+            current: self.words.first().copied().unwrap_or(0),
+        }
+    }
+}
+
+/// Ascending live-row iterator over a [`Frontier`]'s bitmap.
+pub struct FrontierIter<'a> {
+    words: &'a [u64],
+    word_idx: usize,
+    current: u64,
+}
+
+impl Iterator for FrontierIter<'_> {
+    type Item = usize;
+
+    #[inline]
+    fn next(&mut self) -> Option<usize> {
+        while self.current == 0 {
+            self.word_idx += 1;
+            if self.word_idx >= self.words.len() {
+                return None;
+            }
+            self.current = self.words[self.word_idx];
+        }
+        let bit = self.current.trailing_zeros() as usize;
+        self.current &= self.current - 1; // clear the lowest set bit
+        Some(self.word_idx * 64 + bit)
+    }
+}
+
+impl CountTable {
+    /// The nonzero-row frontier of this table: row `r` is live iff
+    /// `row(r)` has any nonzero entry (exactly `nnz(row) > 0`).
+    pub fn frontier(&self) -> Frontier {
+        Frontier::of_rows(self.n_rows, |r| self.row(r).iter().any(|&x| x != 0.0))
+    }
+}
+
+impl TableStorage {
+    /// The nonzero-row frontier of the stored table — identical for
+    /// either representation of the same rows (a sparse row is live iff
+    /// it has entries; compression preserves nnz exactly).
+    pub fn frontier(&self) -> Frontier {
+        match self {
+            TableStorage::Dense(t) => t.frontier(),
+            TableStorage::Sparse(t) => {
+                Frontier::of_rows(t.n_rows, |r| !t.row_entries(r).is_empty())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::colorcount::storage::SparseTable;
+    use crate::util::prop;
+
+    fn random_table(gen: &mut prop::Gen) -> CountTable {
+        let n_rows = gen.usize_in(0, 40);
+        let n_sets = gen.usize_in(1, 9);
+        let mut t = CountTable::zeros(n_rows, n_sets);
+        for r in 0..n_rows {
+            match gen.usize_in(0, 3) {
+                0 => {} // all-zero row
+                1 => {
+                    for x in t.row_mut(r) {
+                        *x = 1.0 + (r as f32) * 0.5;
+                    }
+                }
+                _ => {
+                    for s in 0..n_sets {
+                        if gen.usize_in(0, 2) == 0 {
+                            t.row_mut(r)[s] = (1 + s + r) as f32;
+                        }
+                    }
+                }
+            }
+        }
+        t
+    }
+
+    /// Tentpole invariant: frontier membership exactly equals row-nnz > 0,
+    /// for both representations of the same table, and the iterator
+    /// enumerates exactly the live set in ascending order.
+    #[test]
+    fn prop_membership_equals_row_nnz() {
+        prop::check("frontier_membership", |gen| {
+            let t = random_table(gen);
+            let dense = t.frontier();
+            let sp = TableStorage::Sparse(SparseTable::from_dense(&t));
+            let sparse = sp.frontier();
+            if dense != sparse {
+                return Err("representations disagree on the frontier".into());
+            }
+            let mut live = 0usize;
+            for r in 0..t.n_rows {
+                let nnz = t.row(r).iter().filter(|&&x| x != 0.0).count();
+                if dense.contains(r) != (nnz > 0) {
+                    return Err(format!("row {r}: contains != nnz>0 ({nnz})"));
+                }
+                live += (nnz > 0) as usize;
+            }
+            if dense.live_rows() != live {
+                return Err(format!("live_rows {} != {live}", dense.live_rows()));
+            }
+            let iterated: Vec<usize> = dense.iter().collect();
+            let expect: Vec<usize> = (0..t.n_rows).filter(|&r| dense.contains(r)).collect();
+            if iterated != expect {
+                return Err(format!("iter {iterated:?} != contains-set {expect:?}"));
+            }
+            if dense.contains(t.n_rows) || dense.contains(t.n_rows + 63) {
+                return Err("out-of-range rows must read dead".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn full_frontier_has_every_row() {
+        for n in [0usize, 1, 63, 64, 65, 130] {
+            let f = Frontier::full(n);
+            assert_eq!(f.live_rows(), n);
+            assert_eq!(f.n_rows(), n);
+            assert_eq!(f.iter().count(), n);
+            assert!((0..n).all(|r| f.contains(r)));
+            assert!(!f.contains(n));
+            assert_eq!(f.occupancy(), 1.0);
+        }
+    }
+
+    #[test]
+    fn occupancy_and_empty_table() {
+        let mut t = CountTable::zeros(4, 3);
+        t.row_mut(1)[2] = 5.0;
+        let f = t.frontier();
+        assert_eq!(f.live_rows(), 1);
+        assert!((f.occupancy() - 0.25).abs() < 1e-12);
+        // empty table: occupancy 1.0 so Auto never prunes it
+        assert_eq!(CountTable::zeros(0, 3).frontier().occupancy(), 1.0);
+    }
+
+    #[test]
+    fn prune_mode_parse_roundtrip() {
+        for m in [PruneMode::On, PruneMode::Off, PruneMode::Auto] {
+            assert_eq!(PruneMode::parse(m.name()), Some(m));
+        }
+        assert_eq!(PruneMode::parse("yes"), None);
+        assert_eq!(PruneMode::default(), PruneMode::Off);
+    }
+
+    #[test]
+    fn auto_prunes_only_sparse_frontiers() {
+        assert!(PruneMode::On.active_for(1.0));
+        assert!(!PruneMode::Off.active_for(0.0));
+        assert!(PruneMode::Auto.active_for(0.2));
+        assert!(!PruneMode::Auto.active_for(1.0));
+        assert!(!PruneMode::Auto.active_for(AUTO_OCCUPANCY_CUTOFF));
+    }
+}

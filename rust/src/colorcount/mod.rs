@@ -10,20 +10,26 @@
 pub mod brute;
 pub mod engine;
 pub mod estimate;
+pub mod frontier;
 pub mod kernel;
 pub mod parallel;
 pub mod storage;
 pub mod table;
 
 pub use brute::count_embeddings;
-pub use engine::{aggregate_batch, contract_touched, CombineScratch, Engine, EngineContext};
+pub use engine::{
+    aggregate_batch, contract_touched, contract_touched_pruned, CombineScratch, Engine,
+    EngineContext, PruneTally,
+};
 pub use estimate::{estimate, iteration_bound, median_of_means, Estimate};
+pub use frontier::{Frontier, PruneMode};
 pub use kernel::{KernelMode, ResolvedKernel, LANE};
 pub use parallel::{
-    aggregate_merged, combine_batches, combine_batches_with, nested_budget, ExecStats, PairBatch,
+    aggregate_merged, combine_batches, combine_batches_pruned, combine_batches_with,
+    nested_budget, ExecStats, PairBatch,
 };
 pub use storage::{
-    encode_rows, RowScratch, RowsPayload, RowsRef, SparseTable, StorageMode, StoragePolicy,
-    TableStorage,
+    encode_rows, encode_rows_masked, RowScratch, RowsPayload, RowsRef, SparseTable, StorageMode,
+    StoragePolicy, TableStorage,
 };
 pub use table::{init_leaf_table, Coloring, Count, CountTable};

@@ -31,13 +31,20 @@
 //! the invariant the differential suite enforces. On integer-valued
 //! tables (all DP tables before any f32 rounding occurs) even split
 //! vertices are exact, hence bit-identical to serial too.
+//!
+//! The frontier layer ([`combine_batches_pruned`]) adds two knobs on top
+//! without touching the contract: a passive-table frontier that skips
+//! contractions whose every term is an exact zero, and a task cost model
+//! that claims the queue in LPT order — both provably result-invariant
+//! (see the function docs).
 
 use super::engine::contract_row;
+use super::frontier::Frontier;
 use super::kernel::{contract_row_simd, KernelMode, ResolvedKernel};
 use super::storage::{RowScratch, RowsRef};
 use super::table::{Count, CountTable};
 use crate::combin::{CheckedSplit, SplitTable};
-use crate::sched::make_tasks;
+use crate::sched::{lpt_order, make_tasks, Task, TaskCostModel};
 use crate::util::shim::AtomicUsize;
 use std::time::Instant;
 
@@ -66,6 +73,10 @@ pub struct ExecStats {
     pub n_pairs: u64,
     /// (vertex, set, split) contraction units (the Eq-4 measure)
     pub units: u64,
+    /// output rows whose contraction was skipped because the passive row
+    /// sat outside the frontier (exact zero — see `super::frontier`);
+    /// always 0 when pruning is off
+    pub rows_skipped: u64,
     /// measured seconds each worker spent in the combine phases
     pub busy_seconds: Vec<f64>,
     /// tasks each worker claimed
@@ -80,6 +91,7 @@ impl ExecStats {
             n_tasks: 0,
             n_pairs: 0,
             units: 0,
+            rows_skipped: 0,
             busy_seconds: vec![0.0; n_workers],
             worker_tasks: vec![0; n_workers],
             worker_pairs: vec![0; n_workers],
@@ -146,6 +158,7 @@ impl ExecStats {
         self.n_tasks += other.n_tasks;
         self.n_pairs += other.n_pairs;
         self.units += other.units;
+        self.rows_skipped += other.rows_skipped;
         for w in 0..other.busy_seconds.len() {
             let slot = (lane_offset + w) % n;
             self.busy_seconds[slot] += other.busy_seconds[w];
@@ -172,6 +185,9 @@ struct ExecTask {
     vertex: u32,
     batch: u32,
     off: usize,
+    /// offset within the vertex's neighbor list (the Alg-4 task start —
+    /// kept so the cost-model mirror reconstructs the scheduler's view)
+    start: u32,
     len: u32,
 }
 
@@ -281,6 +297,7 @@ fn build_plan(
                 vertex: t.vertex,
                 batch: bi as u32,
                 off: first[t.vertex as usize] + t.start as usize,
+                start: t.start,
                 len: t.len,
             });
         }
@@ -326,6 +343,12 @@ fn absorb_phase1(stats: &mut ExecStats, p1: Vec<(f64, u64, u64)>) {
 
 /// Phase 1: claim tasks off the shared queue and accumulate each task's
 /// partial aggregation row into its canonical slot of `partials`.
+///
+/// When `order` is given (a permutation of task indices, usually
+/// [`lpt_order`] of the canonical queue), claim slot `j` resolves to task
+/// `order[j]` — costliest tasks start first, which is the whole LPT
+/// makespan argument — while the partial slot, and hence every result
+/// bit, is still keyed by the task's canonical index.
 /// Returns per-worker (busy seconds, tasks, pairs).
 fn aggregate_phase(
     tasks: &[ExecTask],
@@ -333,8 +356,12 @@ fn aggregate_phase(
     n_agg: usize,
     partials: &mut [Count],
     n_workers: usize,
+    order: Option<&[u32]>,
 ) -> Vec<(f64, u64, u64)> {
     debug_assert_eq!(partials.len(), tasks.len() * n_agg);
+    if let Some(o) = order {
+        assert_eq!(o.len(), tasks.len(), "claim order must cover every task");
+    }
     let next = AtomicUsize::new(0);
     let ptr = SendPtr(partials.as_mut_ptr());
     #[cfg(debug_assertions)]
@@ -344,10 +371,14 @@ fn aggregate_phase(
         let mut my_tasks = 0u64;
         let mut my_pairs = 0u64;
         loop {
-            let i = next.fetch_add(1);
-            if i >= tasks.len() {
+            let j = next.fetch_add(1);
+            if j >= tasks.len() {
                 break;
             }
+            let i = match order {
+                Some(o) => o[j] as usize,
+                None => j,
+            };
             #[cfg(debug_assertions)]
             claims.claim(i);
             let t = &tasks[i];
@@ -377,7 +408,12 @@ fn aggregate_phase(
 /// [`RowScratch`] (touched-entry clearing, not a full-width `fill`) —
 /// the materialized row equals the dense original exactly, so the
 /// contraction arithmetic is representation-independent.
-/// Returns per-worker (busy seconds, contraction units).
+///
+/// When `frontier` is given (the *passive* table's nonzero-row frontier),
+/// groups whose vertex has an all-zero passive row are skipped: every
+/// contraction term would be `0.0 * x` with `x` a finite non-negative
+/// count, i.e. an exact `+0.0` add, so the output bits cannot change.
+/// Returns per-worker (busy seconds, contraction units, rows skipped).
 #[allow(clippy::too_many_arguments)]
 fn contract_phase(
     tasks: &[ExecTask],
@@ -388,15 +424,17 @@ fn contract_phase(
     cs: &CheckedSplit<'_>,
     n_agg: usize,
     n_workers: usize,
-) -> Vec<(f64, u64)> {
+    frontier: Option<&Frontier>,
+) -> Vec<(f64, u64, u64)> {
     let next = AtomicUsize::new(0);
     let n_sets = out.n_sets;
     let optr = SendPtr(out.data.as_mut_ptr());
     #[cfg(debug_assertions)]
     let claims = ClaimTracker::new();
-    let worker = |_w: usize| -> (f64, u64) {
+    let worker = |_w: usize| -> (f64, u64, u64) {
         let t0 = Instant::now();
         let mut units = 0u64;
+        let mut skipped = 0u64;
         let mut fold: Vec<Count> = vec![0.0; n_agg];
         let mut prow_scratch = RowScratch::new(cs.n_passive());
         loop {
@@ -408,6 +446,12 @@ fn contract_phase(
             claims.claim(gi);
             let (lo, hi) = groups[gi];
             let v = tasks[lo].vertex as usize;
+            if let Some(f) = frontier {
+                if !f.contains(v) {
+                    skipped += 1;
+                    continue;
+                }
+            }
             let arow: &[Count] = if hi - lo == 1 {
                 &partials[lo * n_agg..(lo + 1) * n_agg]
             } else {
@@ -426,7 +470,7 @@ fn contract_phase(
                 unsafe { std::slice::from_raw_parts_mut(optr.0.add(v * n_sets), n_sets) };
             units += contract_row(orow, prow, arow, cs);
         }
-        (t0.elapsed().as_secs_f64(), units)
+        (t0.elapsed().as_secs_f64(), units, skipped)
     };
     let recs = run_workers(n_workers, worker);
     #[cfg(debug_assertions)]
@@ -481,6 +525,7 @@ fn index_batches(n_rows: usize, batches: &[PairBatch<'_>]) -> Vec<Vec<(usize, u3
 /// eMA lane tree reorders sums relative to the scalar `contract_row`
 /// (see the kernel module's tolerance policy). `max_task_size` does not
 /// apply: the shards are row blocks, never splitting a vertex.
+#[allow(clippy::too_many_arguments)]
 fn combine_rowblocks_simd(
     out: &mut CountTable,
     passive: RowsRef<'_>,
@@ -489,6 +534,7 @@ fn combine_rowblocks_simd(
     n_agg: usize,
     n_workers: usize,
     stats: &mut ExecStats,
+    frontier: Option<&Frontier>,
 ) {
     let n_rows = out.n_rows;
     let runs = index_batches(n_rows, batches);
@@ -500,11 +546,12 @@ fn combine_rowblocks_simd(
     #[cfg(debug_assertions)]
     let claims = ClaimTracker::new();
     let runs = &runs;
-    let worker = |_w: usize| -> (f64, u64, u64, u64) {
+    let worker = |_w: usize| -> (f64, u64, u64, u64, u64) {
         let t0 = Instant::now();
         let mut my_blocks = 0u64;
         let mut my_pairs = 0u64;
         let mut my_units = 0u64;
+        let mut my_skipped = 0u64;
         let mut agg: Vec<Count> = vec![0.0; n_agg];
         let mut prow_scratch = RowScratch::new(cs.n_passive());
         loop {
@@ -517,6 +564,18 @@ fn combine_rowblocks_simd(
             let lo = bi * SIMD_BLOCK;
             let hi = (lo + SIMD_BLOCK).min(n_rows);
             for v in lo..hi {
+                if let Some(f) = frontier {
+                    if !f.contains(v) {
+                        // fused ownership means the whole vertex — its
+                        // aggregation too — can be skipped, not just the
+                        // contraction; only count it if it had any pairs
+                        // (an untouched vertex is not pruned work)
+                        if runs.iter().any(|run| run[v].1 > 0) {
+                            my_skipped += 1;
+                        }
+                        continue;
+                    }
+                }
                 let mut touched = false;
                 for (b, run) in batches.iter().zip(runs) {
                     let (first, deg) = run[v];
@@ -546,18 +605,19 @@ fn combine_rowblocks_simd(
             }
             my_blocks += 1;
         }
-        (t0.elapsed().as_secs_f64(), my_blocks, my_pairs, my_units)
+        (t0.elapsed().as_secs_f64(), my_blocks, my_pairs, my_units, my_skipped)
     };
     let recs = run_workers(pool, worker);
     #[cfg(debug_assertions)]
     claims.assert_complete(n_blocks);
-    for (w, (busy, blocks, pairs, units)) in recs.into_iter().enumerate() {
+    for (w, (busy, blocks, pairs, units, skipped)) in recs.into_iter().enumerate() {
         stats.busy_seconds[w] += busy;
         stats.worker_tasks[w] += blocks;
         stats.worker_pairs[w] += pairs;
         stats.n_tasks += blocks;
         stats.n_pairs += pairs;
         stats.units += units;
+        stats.rows_skipped += skipped;
     }
 }
 
@@ -603,7 +663,54 @@ pub fn combine_batches_with(
     n_workers: usize,
     kernel: KernelMode,
 ) -> ExecStats {
+    combine_batches_pruned(
+        out,
+        passive,
+        split,
+        batches,
+        max_task_size,
+        n_workers,
+        kernel,
+        None,
+        None,
+    )
+}
+
+/// [`combine_batches_with`] plus the frontier layer and the cost-model
+/// scheduler — the full-knob executor entry the coordinator drives.
+///
+/// `passive_frontier`, when given, must be the nonzero-row frontier of
+/// `passive` (same row count as `out`): vertices outside it skip their
+/// contraction (scalar path) or their whole fused aggregate+contract
+/// (SIMD path), counted in [`ExecStats::rows_skipped`]. Both skips are
+/// bit-exact because every elided float op is an exact `+0.0` add — see
+/// [`super::frontier`]'s module docs for the argument.
+///
+/// `cost_model`, when given, consumes the scalar task queue in
+/// [`lpt_order`] instead of canonical order. The permutation touches only
+/// the claim schedule — partial slots and the merge fold stay keyed by
+/// canonical task index, so results are bit-identical with or without it.
+/// The fused SIMD path ignores it: its shards are uniform row blocks.
+#[allow(clippy::too_many_arguments)]
+pub fn combine_batches_pruned(
+    out: &mut CountTable,
+    passive: RowsRef<'_>,
+    split: &SplitTable,
+    batches: &[PairBatch<'_>],
+    max_task_size: u32,
+    n_workers: usize,
+    kernel: KernelMode,
+    passive_frontier: Option<&Frontier>,
+    cost_model: Option<&TaskCostModel>,
+) -> ExecStats {
     assert!(n_workers >= 1, "combine executor needs at least one worker");
+    if let Some(f) = passive_frontier {
+        assert_eq!(
+            f.n_rows(),
+            out.n_rows,
+            "passive frontier must cover the output rows"
+        );
+    }
     let mut stats = ExecStats::zeros(n_workers);
     let n_agg = match batches.first() {
         Some(b) => b.rows.n_sets(),
@@ -627,7 +734,16 @@ pub fn combine_batches_with(
 
     match kernel.resolve(n_agg) {
         ResolvedKernel::Simd => {
-            combine_rowblocks_simd(out, passive, &cs, batches, n_agg, n_workers, &mut stats);
+            combine_rowblocks_simd(
+                out,
+                passive,
+                &cs,
+                batches,
+                n_agg,
+                n_workers,
+                &mut stats,
+                passive_frontier,
+            );
         }
         ResolvedKernel::Scalar => {
             let (tasks, groups) = build_plan(out.n_rows, batches, max_task_size);
@@ -637,13 +753,44 @@ pub fn combine_batches_with(
             // `n_workers` length (tasks is non-empty here: some batch had
             // pairs)
             let pool = n_workers.clamp(1, tasks.len());
+            let order = cost_model.map(|m| {
+                // mirror the exec tasks back into the scheduler's shape so
+                // the one LPT implementation ranks them
+                let mirror: Vec<Task> = tasks
+                    .iter()
+                    .map(|t| Task {
+                        vertex: t.vertex,
+                        start: t.start,
+                        len: t.len,
+                    })
+                    .collect();
+                lpt_order(&mirror, m)
+            });
             let mut partials: Vec<Count> = vec![0.0; tasks.len() * n_agg];
-            let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool);
-            let p2 = contract_phase(&tasks, &groups, &partials, out, passive, &cs, n_agg, pool);
+            let p1 = aggregate_phase(
+                &tasks,
+                batches,
+                n_agg,
+                &mut partials,
+                pool,
+                order.as_deref(),
+            );
+            let p2 = contract_phase(
+                &tasks,
+                &groups,
+                &partials,
+                out,
+                passive,
+                &cs,
+                n_agg,
+                pool,
+                passive_frontier,
+            );
             absorb_phase1(&mut stats, p1);
-            for (w, (busy, units)) in p2.into_iter().enumerate() {
+            for (w, (busy, units, skipped)) in p2.into_iter().enumerate() {
                 stats.busy_seconds[w] += busy;
                 stats.units += units;
+                stats.rows_skipped += skipped;
             }
         }
     }
@@ -673,7 +820,7 @@ pub fn aggregate_merged(
     let (tasks, groups) = build_plan(n_rows, batches, max_task_size);
     let pool = n_workers.clamp(1, tasks.len());
     let mut partials: Vec<Count> = vec![0.0; tasks.len() * n_agg];
-    let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool);
+    let p1 = aggregate_phase(&tasks, batches, n_agg, &mut partials, pool, None);
     absorb_phase1(&mut stats, p1);
     for &(lo, hi) in &groups {
         let v = tasks[lo].vertex as usize;
@@ -1124,6 +1271,149 @@ mod tests {
         assert_eq!(st.worker_pairs.iter().sum::<u64>(), st.n_pairs);
         assert_eq!(st.units, (n * split.n_sets * split.n_splits) as u64);
         assert!(st.imbalance() >= 1.0 - 1e-9);
+    }
+
+    /// Frontier leg of the executor invariants: pruning on a passive
+    /// table with all-zero rows is bit-identical to the unpruned combine
+    /// (every elided op was an exact `+0.0`), skips exactly the touched
+    /// dead vertices, and holds for both kernels and any worker count.
+    #[test]
+    fn pruned_combine_is_bit_identical_and_counts_skips() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(6, 4, 2, &binom);
+        let c1 = binom.c(6, 2) as usize;
+        let c2 = binom.c(6, 2) as usize; // 15 ≥ LANE → Simd genuinely vectorizes
+        let n = 150;
+        let mut passive = CountTable::zeros(n, c1);
+        let mut active = CountTable::zeros(n, c2);
+        for (i, x) in passive.data.iter_mut().enumerate() {
+            *x = ((i * 7) % 6) as f32; // integer-valued: SIMD sums exact
+        }
+        for (i, x) in active.data.iter_mut().enumerate() {
+            *x = ((i * 3) % 5) as f32;
+        }
+        // kill every third passive row so the frontier has real holes
+        let mut dead = 0u64;
+        for v in 0..n {
+            if v % 3 == 0 {
+                passive.row_mut(v).fill(0.0);
+                dead += 1;
+            }
+        }
+        let frontier = passive.frontier();
+        assert_eq!(frontier.live_rows(), n - dead as usize);
+        let pairs = ring_pairs(n, 6); // every vertex touched
+        let run = |kernel: KernelMode, workers: usize, f: Option<&Frontier>| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: RowsRef::dense(&active),
+            }];
+            let st = combine_batches_pruned(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                4,
+                workers,
+                kernel,
+                f,
+                None,
+            );
+            (out, st)
+        };
+        for kernel in [KernelMode::Scalar, KernelMode::Simd] {
+            let (reference, st0) = run(kernel, 1, None);
+            assert_eq!(st0.rows_skipped, 0, "no frontier, nothing skipped");
+            for workers in [1, 3, 7] {
+                let (out, st) = run(kernel, workers, Some(&frontier));
+                assert_eq!(st.rows_skipped, dead, "kernel {kernel:?}");
+                for (a, b) in out.data.iter().zip(&reference.data) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kernel:?} workers={workers}");
+                }
+                // skipped contractions do not execute: fewer units, and
+                // the fused path also drops the dead vertices' pairs
+                assert!(st.units < st0.units);
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "passive frontier must cover the output rows")]
+    fn pruned_combine_rejects_mismatched_frontier() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(4, 3, 1, &binom);
+        let c2 = binom.c(4, 2) as usize;
+        let (passive, active) = mk_tables(8, 4, c2);
+        let small = CountTable::zeros(3, 4); // frontier over the wrong row count
+        let frontier = small.frontier();
+        let mut out = CountTable::zeros(8, split.n_sets);
+        let pairs = ring_pairs(8, 2);
+        let batch = [PairBatch {
+            pairs: &pairs,
+            rows: RowsRef::dense(&active),
+        }];
+        combine_batches_pruned(
+            &mut out,
+            RowsRef::dense(&passive),
+            &split,
+            &batch,
+            0,
+            2,
+            KernelMode::Scalar,
+            Some(&frontier),
+            None,
+        );
+    }
+
+    /// LPT consumption changes only the claim schedule: with the cost
+    /// model wired in, results and work totals are bit-identical to the
+    /// canonical-order claim for every worker count — including on a
+    /// hub-split queue where the permutation genuinely reorders claims.
+    #[test]
+    fn lpt_claims_are_bit_identical_to_canonical() {
+        let binom = Binomial::new();
+        let split = SplitTable::new(5, 3, 1, &binom);
+        let c2 = binom.c(5, 2) as usize;
+        let n = 31;
+        let (passive, active) = mk_tables(n, 5, c2);
+        // hub + ring: the hub splits into many tasks the LPT order fronts
+        let mut pairs: Vec<(u32, u32)> = (0..300u32).map(|i| (0, i % n as u32)).collect();
+        pairs.extend(ring_pairs(n, 3).into_iter().filter(|&(v, _)| v != 0));
+        let model = TaskCostModel {
+            unit_per_pair: 1.0,
+            unit_per_task: 0.5,
+            overhead: 0.25,
+        };
+        let run = |workers: usize, m: Option<&TaskCostModel>| {
+            let mut out = CountTable::zeros(n, split.n_sets);
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: RowsRef::dense(&active),
+            }];
+            let st = combine_batches_pruned(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                8,
+                workers,
+                KernelMode::Scalar,
+                None,
+                m,
+            );
+            (out, st)
+        };
+        let (reference, st0) = run(1, None);
+        for workers in [1, 2, 5] {
+            let (out, st) = run(workers, Some(&model));
+            assert_eq!(st.n_tasks, st0.n_tasks);
+            assert_eq!(st.n_pairs, st0.n_pairs);
+            assert_eq!(st.units, st0.units);
+            for (a, b) in out.data.iter().zip(&reference.data) {
+                assert_eq!(a.to_bits(), b.to_bits(), "workers={workers}");
+            }
+        }
     }
 
     #[test]

@@ -308,6 +308,61 @@ impl TableStorage {
                     entries,
                 })
             }
+            RowsPayload::Masked {
+                n_rows,
+                mask,
+                offsets,
+                entries,
+            } => {
+                let n_rows = n_rows as usize;
+                assert_eq!(
+                    mask.len(),
+                    n_rows.div_ceil(64),
+                    "masked payload: mask word count"
+                );
+                if n_rows % 64 != 0 {
+                    if let Some(&last) = mask.last() {
+                        assert_eq!(
+                            last >> (n_rows % 64),
+                            0,
+                            "masked payload: bits past n_rows must be clear"
+                        );
+                    }
+                }
+                let live: usize = mask.iter().map(|w| w.count_ones() as usize).sum();
+                assert_eq!(
+                    offsets.len(),
+                    live + 1,
+                    "masked payload: one offset per live row"
+                );
+                assert_eq!(offsets[0], 0, "masked payload: offsets must start at 0");
+                assert!(
+                    offsets.windows(2).all(|w| w[0] < w[1]),
+                    "masked payload: live rows must be non-empty"
+                );
+                // Expand back to the full positional CSR (dead rows
+                // empty), then run the sparse structural validation on
+                // the result — receivers index rows positionally, so the
+                // expansion is what restores `plans[p][q]` addressing.
+                let mut full = Vec::with_capacity(n_rows + 1);
+                full.push(0u32);
+                let mut next_live = 1usize;
+                for r in 0..n_rows {
+                    if (mask[r / 64] >> (r % 64)) & 1 == 1 {
+                        full.push(offsets[next_live]);
+                        next_live += 1;
+                    } else {
+                        full.push(*full.last().unwrap());
+                    }
+                }
+                TableStorage::from_payload(
+                    RowsPayload::Sparse {
+                        offsets: full,
+                        entries,
+                    },
+                    n_sets,
+                )
+            }
         }
     }
 
@@ -584,6 +639,9 @@ impl RowScratch {
     }
 }
 
+/// Bytes of one presence-bitmap word in the masked encoding (`u64`).
+pub const MASK_WORD_BYTES: u64 = 8;
+
 /// The wire form of a packet's count rows — what the exchange ships.
 /// `wire_bytes` is the one sizing rule shared by `Packet::bytes()`, the
 /// fabric's accounting, the recv-buffer ledger and the model tests.
@@ -594,6 +652,23 @@ pub enum RowsPayload {
     /// CSR rows: `n_rows + 1` offsets plus `(set_rank, count)` entries
     Sparse {
         offsets: Vec<u32>,
+        entries: Vec<(u32, Count)>,
+    },
+    /// CSR rows for the **live rows only**, behind a presence bitmap
+    /// over all `n_rows` requested positions — all-zero rows cost one
+    /// mask bit instead of an offset. Positions are preserved: the
+    /// receiver expands the mask back to a full positional table (dead
+    /// rows empty), so the positional fold indexing both executors use
+    /// is untouched by the dropped rows.
+    Masked {
+        /// requested row count (live and dead)
+        n_rows: u32,
+        /// `ceil(n_rows / 64)` presence words, row `i` at bit `i % 64`
+        /// of word `i / 64`; bits at or past `n_rows` are clear
+        mask: Vec<u64>,
+        /// `live + 1` offsets into `entries`, live rows in mask order
+        offsets: Vec<u32>,
+        /// `(set_rank, count)` pairs of the live rows
         entries: Vec<(u32, Count)>,
     },
 }
@@ -607,6 +682,16 @@ impl RowsPayload {
                 offsets.len() as u64 * SPARSE_OFFSET_BYTES
                     + entries.len() as u64 * SPARSE_ENTRY_BYTES
             }
+            RowsPayload::Masked {
+                mask,
+                offsets,
+                entries,
+                ..
+            } => {
+                4 + mask.len() as u64 * MASK_WORD_BYTES
+                    + offsets.len() as u64 * SPARSE_OFFSET_BYTES
+                    + entries.len() as u64 * SPARSE_ENTRY_BYTES
+            }
         }
     }
 
@@ -615,17 +700,106 @@ impl RowsPayload {
         match self {
             RowsPayload::Dense(data) => data.len() / n_sets.max(1),
             RowsPayload::Sparse { offsets, .. } => offsets.len().saturating_sub(1),
+            RowsPayload::Masked { n_rows, .. } => *n_rows as usize,
         }
     }
+
+    /// All-zero rows this encoding dropped from the wire (0 for the
+    /// dense/sparse forms, which ship every requested position).
+    pub fn rows_dropped(&self) -> u64 {
+        match self {
+            RowsPayload::Masked { n_rows, offsets, .. } => {
+                *n_rows as u64 - (offsets.len() as u64 - 1)
+            }
+            _ => 0,
+        }
+    }
+}
+
+/// Wire bytes of the masked encoding of `n_rows` positions with `live`
+/// live rows carrying `nnz` entries in total.
+pub fn masked_bytes_for(n_rows: usize, live: usize, nnz: usize) -> u64 {
+    4 + n_rows.div_ceil(64) as u64 * MASK_WORD_BYTES
+        + (live as u64 + 1) * SPARSE_OFFSET_BYTES
+        + nnz as u64 * SPARSE_ENTRY_BYTES
+}
+
+/// Compress a full positional CSR into the masked wire form: dead rows
+/// become clear mask bits, live rows keep their entries in order.
+fn mask_csr(n_rows: usize, offsets: Vec<u32>, entries: Vec<(u32, Count)>) -> RowsPayload {
+    debug_assert!(n_rows <= u32::MAX as usize);
+    let mut mask = vec![0u64; n_rows.div_ceil(64)];
+    let mut live_offsets = Vec::new();
+    live_offsets.push(0u32);
+    for i in 0..n_rows {
+        if offsets[i] != offsets[i + 1] {
+            mask[i / 64] |= 1u64 << (i % 64);
+            live_offsets.push(offsets[i + 1]);
+        }
+    }
+    RowsPayload::Masked {
+        n_rows: n_rows as u32,
+        mask,
+        offsets: live_offsets,
+        entries,
+    }
+}
+
+/// Pick the smallest wire form for CSR-gathered rows: flat dense rows,
+/// the positional CSR, or — **strictly** smaller only — the masked form
+/// that drops all-zero rows behind a presence bitmap. Ties keep the
+/// historical dense/sparse choice, so byte accounting that predates the
+/// masked encoding is unmoved wherever masking cannot win.
+fn smallest_payload(
+    n_sets: usize,
+    n_picks: usize,
+    offsets: Vec<u32>,
+    entries: Vec<(u32, Count)>,
+) -> RowsPayload {
+    let sparse_bytes =
+        offsets.len() as u64 * SPARSE_OFFSET_BYTES + entries.len() as u64 * SPARSE_ENTRY_BYTES;
+    let dense_bytes = CountTable::dense_bytes_for(n_picks, n_sets);
+    let live = (0..n_picks).filter(|&i| offsets[i] != offsets[i + 1]).count();
+    if n_picks <= u32::MAX as usize
+        && masked_bytes_for(n_picks, live, entries.len()) < sparse_bytes.min(dense_bytes)
+    {
+        return mask_csr(n_picks, offsets, entries);
+    }
+    if sparse_bytes < dense_bytes {
+        RowsPayload::Sparse { offsets, entries }
+    } else {
+        let mut data: Vec<Count> = vec![0.0; n_picks * n_sets];
+        for i in 0..n_picks {
+            let dst = &mut data[i * n_sets..(i + 1) * n_sets];
+            for &(rank, x) in &entries[offsets[i] as usize..offsets[i + 1] as usize] {
+                dst[rank as usize] = x;
+            }
+        }
+        RowsPayload::Dense(data)
+    }
+}
+
+/// Gather the requested rows of a sparse table as a positional CSR.
+fn gather_sparse(t: &SparseTable, picks: &[usize]) -> (Vec<u32>, Vec<(u32, Count)>) {
+    let mut offsets = Vec::with_capacity(picks.len() + 1);
+    let mut entries = Vec::new();
+    offsets.push(0u32);
+    for &r in picks {
+        entries.extend_from_slice(t.row_entries(r));
+        offsets.push(entries.len() as u32);
+    }
+    (offsets, entries)
 }
 
 /// Encode the given rows of a table for the wire, in iteration order —
 /// the single send-side serializer both exchange executors share. Dense
 /// tables ship flat rows (byte-identical to the historical serializer).
 /// Sparse tables ship their CSR rows *when that is the smaller encoding
-/// for the requested subset*, and fall back to flat rows otherwise (a
-/// request list can be denser than its table's average), so a packet's
-/// wire bytes never exceed the dense encoding of the same rows.
+/// for the requested subset*, fall back to flat rows otherwise (a
+/// request list can be denser than its table's average), and drop
+/// all-zero rows behind the masked form when that is strictly smaller
+/// than both — so a packet's wire bytes never exceed the dense encoding
+/// of the same rows, and never pay offsets for dead rows.
 pub fn encode_rows(table: &TableStorage, rows: impl Iterator<Item = usize>) -> RowsPayload {
     match table {
         TableStorage::Dense(t) => {
@@ -638,29 +812,34 @@ pub fn encode_rows(table: &TableStorage, rows: impl Iterator<Item = usize>) -> R
         }
         TableStorage::Sparse(t) => {
             let picks: Vec<usize> = rows.collect();
+            let (offsets, entries) = gather_sparse(t, &picks);
+            smallest_payload(t.n_sets, picks.len(), offsets, entries)
+        }
+    }
+}
+
+/// [`encode_rows`] with the masked candidate considered for **both**
+/// storage representations — the frontier-pruned exchange path. Dense
+/// tables pay one nonzero scan over the requested rows to build the
+/// CSR candidates; prune-off runs keep the scan-free [`encode_rows`].
+pub fn encode_rows_masked(table: &TableStorage, rows: impl Iterator<Item = usize>) -> RowsPayload {
+    match table {
+        TableStorage::Dense(t) => {
+            let picks: Vec<usize> = rows.collect();
             let mut offsets = Vec::with_capacity(picks.len() + 1);
             let mut entries = Vec::new();
             offsets.push(0u32);
             for &r in &picks {
-                entries.extend_from_slice(t.row_entries(r));
-                offsets.push(entries.len() as u32);
-            }
-            let sparse_bytes = offsets.len() as u64 * SPARSE_OFFSET_BYTES
-                + entries.len() as u64 * SPARSE_ENTRY_BYTES;
-            let dense_bytes = CountTable::dense_bytes_for(picks.len(), t.n_sets);
-            if sparse_bytes < dense_bytes {
-                RowsPayload::Sparse { offsets, entries }
-            } else {
-                let mut data: Vec<Count> = vec![0.0; picks.len() * t.n_sets];
-                for (i, &r) in picks.iter().enumerate() {
-                    let dst = &mut data[i * t.n_sets..(i + 1) * t.n_sets];
-                    for &(rank, x) in t.row_entries(r) {
-                        dst[rank as usize] = x;
+                for (s, &x) in t.row(r).iter().enumerate() {
+                    if x != 0.0 {
+                        entries.push((s as u32, x));
                     }
                 }
-                RowsPayload::Dense(data)
+                offsets.push(entries.len() as u32);
             }
+            smallest_payload(t.n_sets, picks.len(), offsets, entries)
         }
+        TableStorage::Sparse(_) => encode_rows(table, rows),
     }
 }
 
@@ -835,6 +1014,128 @@ mod tests {
         let payload = encode_rows(&sp, 0..4);
         assert!(matches!(payload, RowsPayload::Sparse { .. }));
         assert_eq!(payload.wire_bytes(), 5 * 4 + 8);
+    }
+
+    #[test]
+    fn masked_encoding_drops_dead_rows() {
+        // 8 requested rows, exactly one live: sparse pays 9 offsets
+        // (36 B) + 8 B; masked pays 4 + 8 (one mask word) + 2 offsets
+        // (8 B) + 8 B = 28 B — strictly smaller, so the codec must mask.
+        let mut t = CountTable::zeros(8, 6);
+        t.row_mut(3)[2] = 7.0;
+        let sp = TableStorage::Sparse(SparseTable::from_dense(&t));
+        let payload = encode_rows(&sp, 0..8);
+        assert!(matches!(payload, RowsPayload::Masked { .. }));
+        assert_eq!(payload.wire_bytes(), masked_bytes_for(8, 1, 1));
+        assert_eq!(payload.wire_bytes(), 28);
+        assert_eq!(payload.n_rows(6), 8);
+        assert_eq!(payload.rows_dropped(), 7);
+        // positions survive the round-trip: dead rows decode empty, the
+        // live row keeps its index
+        let decoded = TableStorage::from_payload(payload, 6);
+        assert_eq!(decoded.n_rows(), 8);
+        for r in 0..8 {
+            let mut got = vec![0.0; 6];
+            decoded.as_rows().add_row_into(r, &mut got);
+            assert_eq!(got.as_slice(), t.row(r), "row {r}");
+        }
+        // the masked form is what the pruned path also picks for a
+        // dense-stored table of the same rows
+        let masked = encode_rows_masked(&TableStorage::Dense(t.clone()), 0..8);
+        assert_eq!(masked.wire_bytes(), 28);
+        assert_eq!(masked.rows_dropped(), 7);
+        // ...while the historical dense arm still ships flat rows
+        let flat = encode_rows(&TableStorage::Dense(t), 0..8);
+        assert!(matches!(flat, RowsPayload::Dense(_)));
+        assert_eq!(flat.rows_dropped(), 0);
+    }
+
+    /// The pruned encoder round-trips any subset of any table bit-exactly
+    /// and never exceeds the dense wire bytes of the same rows.
+    #[test]
+    fn prop_masked_codec_roundtrip() {
+        prop::check("masked_codec", |gen| {
+            let t = random_table(gen);
+            let stores = [
+                TableStorage::Dense(t.clone()),
+                TableStorage::Sparse(SparseTable::from_dense(&t)),
+            ];
+            let n_pick = if t.n_rows == 0 { 0 } else { gen.usize_in(0, 2 * t.n_rows) };
+            let picks: Vec<usize> = (0..n_pick)
+                .map(|_| gen.usize_in(0, t.n_rows.saturating_sub(1)))
+                .collect();
+            if t.n_rows == 0 && !picks.is_empty() {
+                return Ok(());
+            }
+            for store in &stores {
+                let payload = encode_rows_masked(store, picks.iter().copied());
+                if payload.n_rows(t.n_sets) != picks.len() {
+                    return Err("masked payload row count wrong".into());
+                }
+                if payload.wire_bytes() > CountTable::dense_bytes_for(picks.len(), t.n_sets) {
+                    return Err("masked encoding exceeded dense bytes".into());
+                }
+                let dead = picks
+                    .iter()
+                    .filter(|&&r| t.row(r).iter().all(|&x| x == 0.0))
+                    .count() as u64;
+                if matches!(payload, RowsPayload::Masked { .. }) && payload.rows_dropped() != dead {
+                    return Err(format!(
+                        "rows_dropped {} != dead picks {dead}",
+                        payload.rows_dropped()
+                    ));
+                }
+                let decoded = TableStorage::from_payload(payload, t.n_sets);
+                for (i, &r) in picks.iter().enumerate() {
+                    let mut want = vec![0.0; t.n_sets];
+                    let mut got = vec![0.0; t.n_sets];
+                    stores[0].as_rows().add_row_into(r, &mut want);
+                    decoded.as_rows().add_row_into(i, &mut got);
+                    for (a, b) in got.iter().zip(&want) {
+                        if a.to_bits() != b.to_bits() {
+                            return Err(format!("row {r} decoded {a} != {b}"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "mask word count")]
+    fn from_payload_rejects_short_mask() {
+        let payload = RowsPayload::Masked {
+            n_rows: 100,
+            mask: vec![1u64],
+            offsets: vec![0, 1],
+            entries: vec![(0, 1.0)],
+        };
+        let _ = TableStorage::from_payload(payload, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "bits past n_rows")]
+    fn from_payload_rejects_ghost_mask_bits() {
+        let payload = RowsPayload::Masked {
+            n_rows: 3,
+            mask: vec![1u64 << 5],
+            offsets: vec![0, 1],
+            entries: vec![(0, 1.0)],
+        };
+        let _ = TableStorage::from_payload(payload, 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "live rows must be non-empty")]
+    fn from_payload_rejects_empty_live_row() {
+        let payload = RowsPayload::Masked {
+            n_rows: 2,
+            mask: vec![0b11u64],
+            offsets: vec![0, 0, 1],
+            entries: vec![(0, 1.0)],
+        };
+        let _ = TableStorage::from_payload(payload, 4);
     }
 
     #[test]

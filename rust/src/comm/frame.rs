@@ -11,6 +11,10 @@
 //!   rows (enc 1, sparse): n_offsets u32 | n_entries u32
 //!                         | offsets u32 × n_offsets
 //!                         | (set_rank u32, count f32) × n_entries
+//!   rows (enc 2, masked): n_rows u32 | n_mask u32 | n_offsets u32
+//!                         | n_entries u32 | mask u64 × n_mask
+//!                         | offsets u32 × n_offsets
+//!                         | (set_rank u32, count f32) × n_entries
 //! bye:       (empty)
 //! ```
 //!
@@ -33,7 +37,8 @@ pub const MAGIC: u32 = u32::from_le_bytes(*b"HSGF");
 
 /// Bumped whenever the header or a body layout changes; peers with a
 /// different version are rejected at handshake (and on every frame).
-pub const WIRE_VERSION: u16 = 1;
+/// Version 2 added the masked row encoding (enc 2).
+pub const WIRE_VERSION: u16 = 2;
 
 /// Fixed header size preceding every body.
 pub const FRAME_HEADER_BYTES: usize = 12;
@@ -49,6 +54,7 @@ pub const KIND_BYE: u8 = 2;
 
 const ENC_DENSE: u8 = 0;
 const ENC_SPARSE: u8 = 1;
+const ENC_MASKED: u8 = 2;
 
 const HANDSHAKE_BODY_BYTES: usize = 16;
 const PACKET_PREFIX_BYTES: usize = 16;
@@ -170,6 +176,15 @@ pub fn encode_packet_frame(pkt: &Packet, epoch: u32) -> Vec<u8> {
         RowsPayload::Sparse { offsets, entries } => {
             (ENC_SPARSE, 8 + offsets.len() * 4 + entries.len() * 8)
         }
+        RowsPayload::Masked {
+            mask,
+            offsets,
+            entries,
+            ..
+        } => (
+            ENC_MASKED,
+            16 + mask.len() * 8 + offsets.len() * 4 + entries.len() * 8,
+        ),
     };
     let body_len = PACKET_PREFIX_BYTES + rows_len;
     let mut out = Vec::with_capacity(FRAME_HEADER_BYTES + body_len);
@@ -195,12 +210,37 @@ pub fn encode_packet_frame(pkt: &Packet, epoch: u32) -> Vec<u8> {
                 out.extend_from_slice(&x.to_le_bytes());
             }
         }
+        RowsPayload::Masked {
+            n_rows,
+            mask,
+            offsets,
+            entries,
+        } => {
+            out.extend_from_slice(&n_rows.to_le_bytes());
+            out.extend_from_slice(&(mask.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(offsets.len() as u32).to_le_bytes());
+            out.extend_from_slice(&(entries.len() as u32).to_le_bytes());
+            for w in mask {
+                out.extend_from_slice(&w.to_le_bytes());
+            }
+            for o in offsets {
+                out.extend_from_slice(&o.to_le_bytes());
+            }
+            for &(rank, x) in entries {
+                out.extend_from_slice(&rank.to_le_bytes());
+                out.extend_from_slice(&x.to_le_bytes());
+            }
+        }
     }
     out
 }
 
 fn get_u32(buf: &[u8], at: usize) -> u32 {
     u32::from_le_bytes(buf[at..at + 4].try_into().unwrap())
+}
+
+fn get_u64(buf: &[u8], at: usize) -> u64 {
+    u64::from_le_bytes(buf[at..at + 8].try_into().unwrap())
 }
 
 fn get_f32(buf: &[u8], at: usize) -> f32 {
@@ -232,7 +272,7 @@ pub fn decode_header(buf: &[u8]) -> Result<FrameHeader, FrameError> {
         return Err(FrameError::BadKind(kind));
     }
     let enc = buf[7];
-    if enc > ENC_SPARSE {
+    if enc > ENC_MASKED {
         return Err(FrameError::BadEnc(enc));
     }
     let body_len = get_u32(buf, 8);
@@ -303,7 +343,7 @@ pub fn decode_body(h: FrameHeader, body: &[u8]) -> Result<Frame, FrameError> {
                     let data = (0..rows.len() / 4).map(|i| get_f32(rows, i * 4)).collect();
                     RowsPayload::Dense(data)
                 }
-                _ => {
+                ENC_SPARSE => {
                     if rows.len() < 8 {
                         return Err(FrameError::Truncated {
                             need: 8,
@@ -333,6 +373,52 @@ pub fn decode_body(h: FrameHeader, body: &[u8]) -> Result<Frame, FrameError> {
                         .collect();
                     RowsPayload::Sparse { offsets, entries }
                 }
+                _ => {
+                    // ENC_MASKED — decode_header bounds enc at it
+                    if rows.len() < 16 {
+                        return Err(FrameError::Truncated {
+                            need: 16,
+                            got: rows.len(),
+                        });
+                    }
+                    let n_rows = get_u32(rows, 0);
+                    let n_mask = get_u32(rows, 4) as usize;
+                    let n_offsets = get_u32(rows, 8) as usize;
+                    let n_entries = get_u32(rows, 12) as usize;
+                    if n_mask != (n_rows as usize).div_ceil(64) {
+                        return Err(FrameError::BadPayload(format!(
+                            "masked rows: {n_mask} mask words for {n_rows} rows"
+                        )));
+                    }
+                    let want = n_mask
+                        .checked_mul(8)
+                        .and_then(|m| n_offsets.checked_mul(4).map(|a| (m, a)))
+                        .and_then(|(m, a)| n_entries.checked_mul(8).map(|b| (m, a, b)))
+                        .and_then(|(m, a, b)| m.checked_add(a)?.checked_add(b))
+                        .and_then(|mab| mab.checked_add(16))
+                        .ok_or_else(too_big)?;
+                    if rows.len() != want {
+                        return Err(FrameError::BadPayload(format!(
+                            "masked rows: {} bytes for {n_mask} mask words + {n_offsets} \
+                             offsets + {n_entries} entries (want {want})",
+                            rows.len()
+                        )));
+                    }
+                    let mask: Vec<u64> = (0..n_mask).map(|i| get_u64(rows, 16 + i * 8)).collect();
+                    let obase = 16 + n_mask * 8;
+                    let offsets: Vec<u32> =
+                        (0..n_offsets).map(|i| get_u32(rows, obase + i * 4)).collect();
+                    let ebase = obase + n_offsets * 4;
+                    let entries: Vec<(u32, f32)> = (0..n_entries)
+                        .map(|i| (get_u32(rows, ebase + i * 8), get_f32(rows, ebase + i * 8 + 4)))
+                        .collect();
+                    RowsPayload::Masked {
+                        n_rows,
+                        mask,
+                        offsets,
+                        entries,
+                    }
+                }
             };
             Ok(Frame::Packet {
                 epoch,
@@ -349,7 +435,7 @@ pub fn decode_body(h: FrameHeader, body: &[u8]) -> Result<Frame, FrameError> {
 }
 
 fn too_big() -> FrameError {
-    FrameError::BadPayload("sparse counts overflow the body length".into())
+    FrameError::BadPayload("row counts overflow the body length".into())
 }
 
 /// Decode one whole frame from a buffer; returns the frame and the bytes
@@ -428,24 +514,47 @@ mod tests {
             let n_sets = gen.usize_in(1, 9);
             let n_rows = gen.usize_in(0, 12);
             let epoch = gen.usize_in(0, 1 << 20) as u32;
-            let payload = if gen.usize_in(0, 1) == 0 {
-                RowsPayload::Dense(
+            let payload = match gen.usize_in(0, 2) {
+                0 => RowsPayload::Dense(
                     (0..n_rows * n_sets)
                         .map(|i| (i as f32) * 0.37 - 2.0)
                         .collect(),
-                )
-            } else {
-                let mut offsets = vec![0u32];
-                let mut entries = Vec::new();
-                for r in 0..n_rows {
-                    for s in 0..n_sets {
+                ),
+                1 => {
+                    let mut offsets = vec![0u32];
+                    let mut entries = Vec::new();
+                    for r in 0..n_rows {
+                        for s in 0..n_sets {
+                            if gen.usize_in(0, 2) == 0 {
+                                entries.push((s as u32, (r * n_sets + s) as f32 * 0.25));
+                            }
+                        }
+                        offsets.push(entries.len() as u32);
+                    }
+                    RowsPayload::Sparse { offsets, entries }
+                }
+                _ => {
+                    // canonical masked form: live rows non-empty, bits
+                    // past n_rows clear, one offset per live row
+                    let mut mask = vec![0u64; n_rows.div_ceil(64)];
+                    let mut offsets = vec![0u32];
+                    let mut entries = Vec::new();
+                    for r in 0..n_rows {
                         if gen.usize_in(0, 2) == 0 {
-                            entries.push((s as u32, (r * n_sets + s) as f32 * 0.25));
+                            for s in 0..gen.usize_in(1, n_sets) {
+                                entries.push((s as u32, (r * n_sets + s) as f32 * 0.5));
+                            }
+                            mask[r / 64] |= 1u64 << (r % 64);
+                            offsets.push(entries.len() as u32);
                         }
                     }
-                    offsets.push(entries.len() as u32);
+                    RowsPayload::Masked {
+                        n_rows: n_rows as u32,
+                        mask,
+                        offsets,
+                        entries,
+                    }
                 }
-                RowsPayload::Sparse { offsets, entries }
             };
             let pkt = Packet::with_payload(sender, receiver, step, sub, n_sets, payload);
             let back = roundtrip(&pkt, epoch);
@@ -483,6 +592,32 @@ mod tests {
                             .any(|((r1, x), (r2, y))| r1 != r2 || x.to_bits() != y.to_bits())
                     {
                         return Err("sparse entries changed".into());
+                    }
+                }
+                (
+                    RowsPayload::Masked {
+                        n_rows: an,
+                        mask: am,
+                        offsets: ao,
+                        entries: ae,
+                    },
+                    RowsPayload::Masked {
+                        n_rows: bn,
+                        mask: bm,
+                        offsets: bo,
+                        entries: be,
+                    },
+                ) => {
+                    if an != bn || am != bm || ao != bo {
+                        return Err("masked structure changed".into());
+                    }
+                    if ae.len() != be.len()
+                        || ae
+                            .iter()
+                            .zip(be)
+                            .any(|((r1, x), (r2, y))| r1 != r2 || x.to_bits() != y.to_bits())
+                    {
+                        return Err("masked entries changed".into());
                     }
                 }
                 _ => return Err("payload encoding flipped".into()),
@@ -577,6 +712,35 @@ mod tests {
         let mut bad = good.clone();
         bad[off_at..off_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
         bad[off_at + 4..off_at + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
+
+        // masked body with a mask/row-count mismatch, then overflowing
+        // counts — both rejected before any buffer is built
+        let masked = encode_packet_frame(
+            &Packet::with_payload(
+                1,
+                2,
+                0,
+                4,
+                3,
+                RowsPayload::Masked {
+                    n_rows: 5,
+                    mask: vec![0b00100],
+                    offsets: vec![0, 1],
+                    entries: vec![(1, 2.5)],
+                },
+            ),
+            7,
+        );
+        assert!(decode_frame(&masked).is_ok());
+        let m_at = FRAME_HEADER_BYTES + PACKET_PREFIX_BYTES;
+        let mut bad = masked.clone();
+        bad[m_at + 4..m_at + 8].copy_from_slice(&7u32.to_le_bytes());
+        assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
+        let mut bad = masked.clone();
+        bad[m_at..m_at + 4].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[m_at + 4..m_at + 8].copy_from_slice(&u32::MAX.to_le_bytes());
+        bad[m_at + 8..m_at + 12].copy_from_slice(&u32::MAX.to_le_bytes());
         assert!(matches!(decode_frame(&bad), Err(FrameError::BadPayload(_))));
 
         // dense body whose row bytes aren't a multiple of the f32 width

@@ -130,12 +130,14 @@ impl Packet {
             + (self.n_rows() * self.n_sets as usize * std::mem::size_of::<Count>()) as u64
     }
 
-    /// The dense payload's rows (test convenience; panics on a sparse
+    /// The dense payload's rows (test convenience; panics on an encoded
     /// payload).
     pub fn dense_rows(&self) -> &[Count] {
         match &self.payload {
             RowsPayload::Dense(rows) => rows,
-            RowsPayload::Sparse { .. } => panic!("packet carries a sparse payload"),
+            RowsPayload::Sparse { .. } | RowsPayload::Masked { .. } => {
+                panic!("packet carries an encoded payload")
+            }
         }
     }
 }
@@ -198,6 +200,26 @@ mod tests {
         assert_eq!(p.n_rows(), 3);
         // the dense encoding of the same rows would cost 3·4·4 payload bytes
         assert_eq!(p.dense_equiv_bytes(), Packet::HEADER_BYTES + 48);
+        assert!(p.bytes() < p.dense_equiv_bytes());
+    }
+
+    #[test]
+    fn masked_packet_bytes_follow_the_codec() {
+        // 70 requested rows, one live: wire = n_rows + 2 mask words +
+        // 2 offsets + 1 entry; the dense equivalent still charges all 70
+        let payload = RowsPayload::Masked {
+            n_rows: 70,
+            mask: vec![1u64 << 9, 0],
+            offsets: vec![0, 1],
+            entries: vec![(2, 5.0)],
+        };
+        let wire = payload.wire_bytes();
+        assert_eq!(wire, 4 + 2 * 8 + 2 * 4 + 8);
+        let p = Packet::with_payload(0, 1, 0, 2, 4, payload);
+        assert_eq!(p.bytes(), Packet::HEADER_BYTES + wire);
+        assert_eq!(p.n_rows(), 70);
+        assert_eq!(p.payload.rows_dropped(), 69);
+        assert_eq!(p.dense_equiv_bytes(), Packet::HEADER_BYTES + 70 * 4 * 4);
         assert!(p.bytes() < p.dense_equiv_bytes());
     }
 }

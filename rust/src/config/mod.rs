@@ -6,7 +6,7 @@
 //! ("..."), integer, float and boolean values, `#` comments.
 
 use crate::api::HarpsgError;
-use crate::colorcount::{KernelMode, StorageMode};
+use crate::colorcount::{KernelMode, PruneMode, StorageMode};
 use crate::comm::HockneyParams;
 use crate::coordinator::{EngineKind, ExchangeExec, FabricKind, ModeSelect, RunConfig};
 use crate::graph::GraphStorageMode;
@@ -131,7 +131,7 @@ pub struct RunSpec {
 /// The keys `RunSpec::from_doc` understands; anything else is a typo and
 /// is rejected with `HarpsgError::UnknownFlag` instead of being silently
 /// ignored.
-const KNOWN_KEYS: [&str; 22] = [
+const KNOWN_KEYS: [&str; 23] = [
     "template",
     "dataset",
     "scale",
@@ -148,6 +148,7 @@ const KNOWN_KEYS: [&str; 22] = [
     "run.adaptive",
     "run.table_storage",
     "run.kernel",
+    "run.prune",
     "run.graph_storage",
     "run.graph_budget_mb",
     "run.mem_limit_mb",
@@ -278,6 +279,11 @@ impl RunSpec {
                 HarpsgError::Parse(format!(
                     "`run.kernel`: unknown kernel `{s}` (scalar|simd|auto)"
                 ))
+            })?;
+        }
+        if let Some(s) = want_str(doc, "run.prune")? {
+            run.prune = PruneMode::parse(s).ok_or_else(|| {
+                HarpsgError::Parse(format!("`run.prune`: unknown mode `{s}` (on|off|auto)"))
             })?;
         }
         if let Some(a) = want_float(doc, "net.alpha")? {
@@ -485,6 +491,25 @@ beta = 1.7e-10
         let bad = format!("{SAMPLE}\n[run]\nkernel = \"avx\"\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
         let bad = format!("{SAMPLE}\n[run]\nkernel = 8\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+    }
+
+    #[test]
+    fn prune_key_parses_and_validates() {
+        // default: the historical unpruned combine
+        assert_eq!(RunSpec::parse(SAMPLE).unwrap().run.prune, PruneMode::Off);
+        for (spelling, mode) in [
+            ("on", PruneMode::On),
+            ("off", PruneMode::Off),
+            ("auto", PruneMode::Auto),
+        ] {
+            let with_key = format!("{SAMPLE}\n[run]\nprune = \"{spelling}\"\n");
+            assert_eq!(RunSpec::parse(&with_key).unwrap().run.prune, mode);
+        }
+        // unknown spellings and wrong types are typed errors
+        let bad = format!("{SAMPLE}\n[run]\nprune = \"maybe\"\n");
+        assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
+        let bad = format!("{SAMPLE}\n[run]\nprune = 1\n");
         assert!(matches!(RunSpec::parse(&bad), Err(HarpsgError::Parse(_))));
     }
 

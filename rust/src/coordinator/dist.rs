@@ -26,14 +26,16 @@
 
 use super::memory::{DualAccountant, MemClass};
 use super::run::{
-    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, RankLink, RunConfig, RunResult,
-    StorageDecision, ThreadStats,
+    CommDecision, EngineKind, ExchangeExec, ModeSelect, ModelTime, PruneStats, RankLink,
+    RunConfig, RunResult, StorageDecision, ThreadStats,
 };
 use crate::api::{HarpsgError, Progress};
 use crate::colorcount::engine::{aggregate_batch, contract_touched, CombineScratch};
-use crate::colorcount::parallel::{combine_batches_with, nested_budget, ExecStats, PairBatch};
+use crate::colorcount::parallel::{
+    combine_batches_pruned, nested_budget, ExecStats, PairBatch,
+};
 use crate::colorcount::storage::{self, StoragePolicy, TableStorage};
-use crate::colorcount::{EngineContext, KernelMode};
+use crate::colorcount::{EngineContext, Frontier, KernelMode, PruneMode};
 use crate::colorcount::{init_leaf_table, median_of_means, Coloring, Count, CountTable};
 use crate::combin::SplitTable;
 use crate::comm::{
@@ -45,6 +47,7 @@ use crate::graph::{Graph, GraphLoadError, GraphStore, Partition, RequestLists, S
 use crate::pipeline::{naive, pipelined, MeasuredPipeline, PipelineReport, StepTiming};
 use crate::sched::{make_tasks, replay, TaskCostModel};
 use crate::template::{complexity, Template, TemplateComplexity};
+use std::borrow::Cow;
 use std::sync::Arc;
 use std::time::Instant;
 
@@ -108,6 +111,16 @@ struct SubStorage {
     n_ranks: usize,
     dense_bytes: u64,
     resident_bytes: u64,
+    /// rows of the stored tables with any nonzero entry (the frontier's
+    /// live count), summed over ranks
+    live_rows: u64,
+    /// total stored rows, summed over ranks
+    total_rows: u64,
+    /// frontier-pruning tallies of the combine that built this sub's
+    /// tables (always 0 for leaves and with pruning off)
+    pairs_skipped: u64,
+    rows_skipped: u64,
+    wire_rows_dropped: u64,
 }
 
 impl SubStorage {
@@ -116,6 +129,17 @@ impl SubStorage {
             0.0
         } else {
             self.nnz as f64 / self.cells as f64
+        }
+    }
+
+    /// Fraction of stored rows that are live. Mirrors
+    /// [`Frontier::occupancy`]'s empty-table convention (1.0), so the
+    /// `Auto` wire model never discounts a sub it knows nothing about.
+    fn occupancy(&self) -> f64 {
+        if self.total_rows == 0 {
+            1.0
+        } else {
+            self.live_rows as f64 / self.total_rows as f64
         }
     }
 }
@@ -150,25 +174,75 @@ fn store_table(
     }
     rec.dense_bytes += dense_b;
     rec.resident_bytes += stored.bytes();
+    // the frontier occupancy probe: feeds the report's prune stats and
+    // the next iteration's wire-byte model (one linear scan, same order
+    // as the density probe above)
+    let f = stored.frontier();
+    rec.live_rows += f.live_rows() as u64;
+    rec.total_rows += f.n_rows() as u64;
     stored
+}
+
+/// The per-table pruning gate both executors share: `None` when the
+/// mode (or this table's measured occupancy, under `Auto`) says to
+/// stream everything — the frontier is then never even built, keeping
+/// prune-off runs at exactly the historical cost.
+fn table_frontier_for(t: &TableStorage, prune: PruneMode) -> Option<Frontier> {
+    if matches!(prune, PruneMode::Off) {
+        return None;
+    }
+    let f = t.frontier();
+    prune.active_for(f.occupancy()).then_some(f)
+}
+
+/// Filter an adjacency pair list by the active table's frontier: pairs
+/// whose active row `u` is dead only add exact `+0.0`s, so dropping them
+/// before the executor sees the list is bit-exact — and makes every
+/// downstream task queue frontier-effective (degrees, LPT costs, the
+/// model replay) without further plumbing. Borrows the original list
+/// untouched when no frontier applies.
+fn prune_pairs<'a>(
+    pairs: &'a [(u32, u32)],
+    frontier: Option<&Frontier>,
+    skipped: &mut u64,
+) -> Cow<'a, [(u32, u32)]> {
+    match frontier {
+        None => Cow::Borrowed(pairs),
+        Some(f) => {
+            let kept: Vec<(u32, u32)> = pairs
+                .iter()
+                .copied()
+                .filter(|&(_, u)| f.contains(u as usize))
+                .collect();
+            *skipped += (pairs.len() - kept.len()) as u64;
+            Cow::Owned(kept)
+        }
+    }
 }
 
 /// The single send-side serializer both exchange executors share: encode
 /// the rows receiver `q` requested from rank `p`'s active table, in the
 /// receiver's request-list order, in the table's own storage encoding
 /// (`colorcount::storage::encode_rows` — dense tables ship the
-/// historical flat rows, sparse tables ship CSR rows).
+/// historical flat rows, sparse tables ship CSR rows). With pruning
+/// active on the sender's table, the masked encoder drops the
+/// frontier-dead requested rows from the wire entirely
+/// (`encode_rows_masked` — the receiver's positional fold re-expands
+/// them to empty rows, so the fold order and results never move).
 fn encode_request_rows(
     active: &TableStorage,
     plan: &ExchangePlan,
     p: usize,
     q: usize,
+    pruned: bool,
 ) -> storage::RowsPayload {
     let want = plan.req.rows(q, p);
-    storage::encode_rows(
-        active,
-        want.iter().map(|&u| plan.part.local_index[u as usize] as usize),
-    )
+    let rows = want.iter().map(|&u| plan.part.local_index[u as usize] as usize);
+    if pruned {
+        storage::encode_rows_masked(active, rows)
+    } else {
+        storage::encode_rows(active, rows)
+    }
 }
 
 /// Template-independent exchange setup for one (graph, partition) pair:
@@ -411,19 +485,32 @@ impl<'g> DistributedRunner<'g> {
     fn combine_shape(&self, i: usize, storage_stats: &[Option<SubStorage>]) -> CombineShape {
         let dag = &self.ctx.dag;
         let sub = &dag.subs[i];
-        let wire_row_bytes = sub
-            .active
-            .and_then(|a| storage_stats[a])
+        let st_opt = sub.active.and_then(|a| storage_stats[a]);
+        let dense_row =
+            AdaptivePolicy::row_bytes(self.ctx.k, sub.active_size(dag), &self.ctx.binom) as f64;
+        let base = st_opt
             .filter(|st| st.sparse_ranks > 0 && st.cells > 0 && st.n_ranks > 0)
             .map(|st| {
                 let a2 = self.ctx.binom.c(self.ctx.k, sub.active_size(dag)) as usize;
-                let dense =
-                    AdaptivePolicy::row_bytes(self.ctx.k, sub.active_size(dag), &self.ctx.binom)
-                        as f64;
-                let sparse = storage::expected_sparse_row_bytes(st.density(), a2).min(dense);
+                let sparse = storage::expected_sparse_row_bytes(st.density(), a2).min(dense_row);
                 let frac = st.sparse_ranks as f64 / st.n_ranks as f64;
-                frac * sparse + (1.0 - frac) * dense
+                frac * sparse + (1.0 - frac) * dense_row
             });
+        // frontier discount: when pruning is active for the active
+        // child's measured occupancy, the masked encoding ships only the
+        // live share of the requested rows (mask/offset overhead is a
+        // few bytes per 64 rows — absorbed by the dense cap), so the
+        // Hockney ρ predictions stay honest about the pruned wire
+        let wire_row_bytes = match st_opt {
+            Some(st)
+                if st.total_rows > 0
+                    && st.occupancy() < 1.0
+                    && self.cfg.prune.active_for(st.occupancy()) =>
+            {
+                Some((base.unwrap_or(dense_row) * st.occupancy()).min(dense_row))
+            }
+            _ => base,
+        };
         CombineShape {
             k: self.ctx.k,
             size: sub.size,
@@ -980,6 +1067,21 @@ impl<'g> DistributedRunner<'g> {
                 resident_bytes: st.resident_bytes,
             })
             .collect();
+        // the report's per-subtemplate pruning outcomes: the final
+        // iteration's frontier occupancy and skip tallies, globalized by
+        // the same allreduce as the storage record
+        let prune_stats: Vec<PruneStats> = sub_storage
+            .iter()
+            .enumerate()
+            .filter(|(_, st)| st.n_ranks > 0)
+            .map(|(i, st)| PruneStats {
+                sub: i,
+                frontier_occupancy: st.occupancy(),
+                pairs_skipped: st.pairs_skipped,
+                rows_skipped: st.rows_skipped,
+                wire_rows_dropped: st.wire_rows_dropped,
+            })
+            .collect();
         let comm_decisions: Vec<CommDecision> = non_leaf
             .iter()
             .map(|&i| {
@@ -1029,6 +1131,7 @@ impl<'g> DistributedRunner<'g> {
             peak_mem_per_rank,
             peak_mem_dense_per_rank,
             storage: storage_decisions,
+            prune: prune_stats,
             flop_time: measured_flop_time,
             threads: ThreadStats {
                 avg_concurrency: if total_hist > 0.0 {
@@ -1106,12 +1209,23 @@ impl<'g> DistributedRunner<'g> {
             unit_per_task: 0.0,
             overhead: self.cfg.task_overhead_units,
         };
+        // frontier layer: per-rank pruning gates over the finalized child
+        // tables (the `--prune` knob). The serial-scratch XLA path
+        // streams everything — its kernel owns the unpruned combine — so
+        // pruning rides the executor paths only.
+        let prune = if use_exec { self.cfg.prune } else { PruneMode::Off };
 
         // allocate outputs (zero-row placeholders for ranks other
         // processes own — they are never written or stored)
         let mut owned_mask = vec![false; n_ranks];
         for &p in owned {
             owned_mask[p] = true;
+        }
+        let mut act_fronts: Vec<Option<Frontier>> = vec![None; n_ranks];
+        let mut pass_fronts: Vec<Option<Frontier>> = vec![None; n_ranks];
+        for &p in owned {
+            act_fronts[p] = table_frontier_for(tables[p][act_idx].as_ref().unwrap(), prune);
+            pass_fronts[p] = table_frontier_for(tables[p][pass_idx].as_ref().unwrap(), prune);
         }
         let mut outs: Vec<CountTable> = (0..n_ranks)
             .map(|p| {
@@ -1138,12 +1252,17 @@ impl<'g> DistributedRunner<'g> {
             let t0 = Instant::now();
             let active = tables[p][act_idx].as_ref().unwrap();
             let passive = tables[p][pass_idx].as_ref().unwrap();
+            let pairs = prune_pairs(
+                &self.plan.local_pairs[p],
+                act_fronts[p].as_ref(),
+                &mut store_rec.pairs_skipped,
+            );
             let n_pairs = if use_exec {
                 let batch = [PairBatch {
-                    pairs: &self.plan.local_pairs[p],
+                    pairs: &pairs[..],
                     rows: active.as_rows(),
                 }];
-                let st = combine_batches_with(
+                let st = combine_batches_pruned(
                     &mut outs[p],
                     passive.as_rows(),
                     &split,
@@ -1151,17 +1270,16 @@ impl<'g> DistributedRunner<'g> {
                     eff_task,
                     self.cfg.n_workers,
                     self.cfg.kernel,
+                    pass_fronts[p].as_ref(),
+                    Some(&cost_model),
                 );
                 let n = st.n_pairs;
+                store_rec.rows_skipped += st.rows_skipped;
                 measured.merge(&st);
                 n
             } else {
                 scratches[p].begin(a2_sets);
-                let n = aggregate_batch(
-                    &mut scratches[p],
-                    active.as_rows(),
-                    self.plan.local_pairs[p].iter().copied(),
-                );
+                let n = aggregate_batch(&mut scratches[p], active.as_rows(), pairs.iter().copied());
                 let _ = self.contract_backend(
                     &mut outs[p],
                     passive.as_dense(),
@@ -1173,9 +1291,10 @@ impl<'g> DistributedRunner<'g> {
             let dt = t0.elapsed().as_secs_f64();
             *total_units += n_pairs as f64 * pair_units;
             *real_compute += dt;
-            // thread-level replay over Alg-4 tasks
+            // thread-level replay over Alg-4 tasks (frontier-effective
+            // degrees: the pruned pair list is what the queue covers)
             let mut degs = vec![0u32; self.plan.part.n_local(p)];
-            for &(v, _) in &self.plan.local_pairs[p] {
+            for &(v, _) in pairs.iter() {
                 degs[v as usize] += 1;
             }
             let tasks = make_tasks(&degs, eff_task, shuffle_seed(p, usize::MAX));
@@ -1196,11 +1315,14 @@ impl<'g> DistributedRunner<'g> {
         let mut steps: Vec<Vec<(f64, f64)>> = Vec::with_capacity(schedule.n_steps());
         for (w, plans_w) in schedule.plans.iter().enumerate() {
             // send: rows the receivers requested from us, in the active
-            // table's own encoding (the shared codec seam)
+            // table's own encoding (the shared codec seam); with pruning
+            // active the masked encoder drops frontier-dead rows
             for &p in owned {
                 let active = tables[p][act_idx].as_ref().unwrap();
+                let pruned_wire = act_fronts[p].is_some();
                 for &q in &plans_w[p].send_to {
-                    let payload = encode_request_rows(active, &self.plan, p, q);
+                    let payload = encode_request_rows(active, &self.plan, p, q, pruned_wire);
+                    store_rec.wire_rows_dropped += payload.rows_dropped();
                     fabric.send(Packet::with_payload(p, q, w, i, a2_sets, payload))?;
                 }
             }
@@ -1211,7 +1333,6 @@ impl<'g> DistributedRunner<'g> {
                 let mut recv_bytes = 0u64;
                 let mut recv_dense_bytes = 0u64;
                 let n_msgs = packets.len();
-                let mut degs = vec![0u32; self.plan.part.n_local(p)];
                 // view the received row blocks as tables by *moving* each
                 // packet's payload — receiving never copies a row; sparse
                 // payloads stay sparse straight into the fold
@@ -1222,22 +1343,38 @@ impl<'g> DistributedRunner<'g> {
                     recv_dense_bytes += pkt.dense_equiv_bytes();
                     mems[p].alloc2(MemClass::RecvBuffer, bytes, pkt.dense_equiv_bytes());
                     let q = pkt.sender();
-                    for &(v, _) in &self.plan.plans[p][q] {
+                    bufs.push((q, TableStorage::from_payload(pkt.payload, a2_sets)));
+                }
+                // the received buffers are this step's active rows: prune
+                // each sender's fold pairs by its buffer's own frontier
+                let pair_lists: Vec<Cow<[(u32, u32)]>> = bufs
+                    .iter()
+                    .map(|(q, buf)| {
+                        prune_pairs(
+                            &self.plan.plans[p][*q],
+                            table_frontier_for(buf, prune).as_ref(),
+                            &mut store_rec.pairs_skipped,
+                        )
+                    })
+                    .collect();
+                let mut degs = vec![0u32; self.plan.part.n_local(p)];
+                for pl in &pair_lists {
+                    for &(v, _) in pl.iter() {
                         degs[v as usize] += 1;
                     }
-                    bufs.push((q, TableStorage::from_payload(pkt.payload, a2_sets)));
                 }
                 let t0 = Instant::now();
                 let passive = tables[p][pass_idx].as_ref().unwrap();
                 let n_pairs = if use_exec {
                     let batches: Vec<PairBatch> = bufs
                         .iter()
-                        .map(|(q, buf)| PairBatch {
-                            pairs: &self.plan.plans[p][*q],
+                        .zip(&pair_lists)
+                        .map(|((_, buf), pl)| PairBatch {
+                            pairs: pl.as_ref(),
                             rows: buf.as_rows(),
                         })
                         .collect();
-                    let st = combine_batches_with(
+                    let st = combine_batches_pruned(
                         &mut outs[p],
                         passive.as_rows(),
                         &split,
@@ -1245,19 +1382,18 @@ impl<'g> DistributedRunner<'g> {
                         eff_task,
                         self.cfg.n_workers,
                         self.cfg.kernel,
+                        pass_fronts[p].as_ref(),
+                        Some(&cost_model),
                     );
                     let n = st.n_pairs;
+                    store_rec.rows_skipped += st.rows_skipped;
                     measured.merge(&st);
                     n
                 } else {
                     scratches[p].begin(a2_sets);
                     let mut n = 0u64;
-                    for (q, buf) in &bufs {
-                        n += aggregate_batch(
-                            &mut scratches[p],
-                            buf.as_rows(),
-                            self.plan.plans[p][*q].iter().copied(),
-                        );
+                    for ((_, buf), pl) in bufs.iter().zip(&pair_lists) {
+                        n += aggregate_batch(&mut scratches[p], buf.as_rows(), pl.iter().copied());
                     }
                     let _ = self.contract_backend(
                         &mut outs[p],
@@ -1413,6 +1549,7 @@ impl<'g> DistributedRunner<'g> {
             pass_idx,
             nested,
             kernel: self.cfg.kernel,
+            prune: self.cfg.prune,
             n_threads: self.cfg.n_threads,
             phys_cores: self.cfg.phys_cores,
             seed: self.cfg.seed,
@@ -1471,6 +1608,9 @@ impl<'g> DistributedRunner<'g> {
                 hist_units[c.min(hist_units.len() - 1)] += t;
             }
             *busy_units += lg.busy_units;
+            store_rec.pairs_skipped += lg.pairs_skipped;
+            store_rec.rows_skipped += lg.stats.rows_skipped;
+            store_rec.wire_rows_dropped += lg.wire_rows_dropped;
             // each owned rank's nested lanes land at their own offset so
             // genuinely concurrent threads stay distinct in the record
             measured.absorb_at(&lg.stats, idx * nested);
@@ -1524,6 +1664,8 @@ struct RankEnv<'a> {
     nested: usize,
     /// combine-kernel choice (the `--kernel` knob)
     kernel: KernelMode,
+    /// frontier-pruning mode (the `--prune` knob)
+    prune: PruneMode,
     n_threads: usize,
     phys_cores: usize,
     seed: u64,
@@ -1558,6 +1700,11 @@ struct RankLog {
     hist: Vec<f64>,
     busy_units: f64,
     stats: ExecStats,
+    /// `(v, u)` pairs dropped because `u`'s active row was frontier-dead
+    pairs_skipped: u64,
+    /// rows elided from this rank's outgoing wire payloads by the masked
+    /// encoding
+    wire_rows_dropped: u64,
     /// high-water mark of this rank's `RecvBuffer` bytes
     recv_peak: u64,
     /// largest single step's received bytes (the streaming bound)
@@ -1674,14 +1821,21 @@ fn rank_exchange_worker(
     let mut steps: Vec<RankStepLog> = Vec::with_capacity(n_steps);
     let mut recv_peak = 0u64;
     let mut max_step_recv_bytes = 0u64;
+    // frontiers of this rank's finalized child tables — shared by the
+    // local phase, every fold step, and the outgoing wire encoding
+    let act_front = table_frontier_for(active, env.prune);
+    let pass_front = table_frontier_for(passive, env.prune);
+    let mut pairs_skipped = 0u64;
+    let mut wire_rows_dropped = 0u64;
 
     // ---- local phase ----
     let t0 = Instant::now();
+    let pairs = prune_pairs(&env.plan.local_pairs[p], act_front.as_ref(), &mut pairs_skipped);
     let batch = [PairBatch {
-        pairs: &env.plan.local_pairs[p],
+        pairs: &pairs[..],
         rows: active.as_rows(),
     }];
-    let st = combine_batches_with(
+    let st = combine_batches_pruned(
         out,
         passive.as_rows(),
         env.split,
@@ -1689,12 +1843,16 @@ fn rank_exchange_worker(
         env.eff_task,
         env.nested,
         env.kernel,
+        pass_front.as_ref(),
+        Some(&env.cost_model),
     );
     real_compute += t0.elapsed().as_secs_f64();
     units += st.n_pairs as f64 * env.cost_model.unit_per_pair;
     stats.merge(&st);
+    // frontier-effective degrees: the model queue sees the work that
+    // actually ran, identically in both executors
     let mut degs = vec![0u32; n_local];
-    for &(v, _) in &env.plan.local_pairs[p] {
+    for &(v, _) in pairs.iter() {
         degs[v as usize] += 1;
     }
     let tasks = make_tasks(&degs, env.eff_task, shuffle_seed(usize::MAX));
@@ -1716,7 +1874,6 @@ fn rank_exchange_worker(
         let n_msgs = packets.len();
         let mut recv_bytes = 0u64;
         let mut recv_dense_bytes = 0u64;
-        let mut degs = vec![0u32; n_local];
         let mut bufs: Vec<(usize, TableStorage)> = Vec::with_capacity(n_msgs);
         for pkt in packets {
             let bytes = pkt.bytes();
@@ -1724,9 +1881,6 @@ fn rank_exchange_worker(
             recv_dense_bytes += pkt.dense_equiv_bytes();
             mem.alloc2(MemClass::RecvBuffer, bytes, pkt.dense_equiv_bytes());
             let q = pkt.sender();
-            for &(v, _) in &env.plan.plans[p][q] {
-                degs[v as usize] += 1;
-            }
             // streaming fold input: the payload is *moved* out of the
             // packet — receiving never copies a row, and sparse payloads
             // feed the fold without densifying
@@ -1734,15 +1888,35 @@ fn rank_exchange_worker(
         }
         recv_peak = recv_peak.max(mem.current(MemClass::RecvBuffer));
         max_step_recv_bytes = max_step_recv_bytes.max(recv_bytes);
+        // prune each sender's fold pairs by its received buffer's own
+        // frontier — deterministic in the data, so both executors drop
+        // the same pairs
+        let pair_lists: Vec<Cow<[(u32, u32)]>> = bufs
+            .iter()
+            .map(|(q, buf)| {
+                prune_pairs(
+                    &env.plan.plans[p][*q],
+                    table_frontier_for(buf, env.prune).as_ref(),
+                    &mut pairs_skipped,
+                )
+            })
+            .collect();
+        let mut degs = vec![0u32; n_local];
+        for pl in &pair_lists {
+            for &(v, _) in pl.iter() {
+                degs[v as usize] += 1;
+            }
+        }
         let tc0 = Instant::now();
         let batches: Vec<PairBatch> = bufs
             .iter()
-            .map(|(q, buf)| PairBatch {
-                pairs: &env.plan.plans[p][*q],
+            .zip(&pair_lists)
+            .map(|((_, buf), pl)| PairBatch {
+                pairs: pl.as_ref(),
                 rows: buf.as_rows(),
             })
             .collect();
-        let st = combine_batches_with(
+        let st = combine_batches_pruned(
             out,
             passive.as_rows(),
             env.split,
@@ -1750,9 +1924,12 @@ fn rank_exchange_worker(
             env.eff_task,
             env.nested,
             env.kernel,
+            pass_front.as_ref(),
+            Some(&env.cost_model),
         );
         let comp_s = tc0.elapsed().as_secs_f64();
         drop(batches);
+        drop(pair_lists);
         drop(bufs);
         // the step's slice is released the moment its fold completes —
         // the real memory bound, not bookkeeping
@@ -1786,9 +1963,11 @@ fn rank_exchange_worker(
     for w in 0..n_steps {
         // post step w's sends, non-blocking, in the active table's own
         // encoding (the shared codec seam — same serializer as the
-        // sequential executor)
+        // sequential executor); with pruning active the masked encoder
+        // drops frontier-dead rows
         for &q in &env.schedule.plans[w][p].send_to {
-            let payload = encode_request_rows(active, env.plan, p, q);
+            let payload = encode_request_rows(active, env.plan, p, q, act_front.is_some());
+            wire_rows_dropped += payload.rows_dropped();
             env.fabric
                 .send(Packet::with_payload(p, q, w, env.sub, env.a2_sets, payload))?;
         }
@@ -1810,6 +1989,8 @@ fn rank_exchange_worker(
         hist,
         busy_units,
         stats,
+        pairs_skipped,
+        wire_rows_dropped,
         recv_peak,
         max_step_recv_bytes,
     })
@@ -1858,6 +2039,11 @@ fn allreduce_calibration(
             st.n_ranks as f64,
             st.dense_bytes as f64,
             st.resident_bytes as f64,
+            st.live_rows as f64,
+            st.total_rows as f64,
+            st.pairs_skipped as f64,
+            st.rows_skipped as f64,
+            st.wire_rows_dropped as f64,
         ]);
     }
     for (_, _, _, steps) in iter_meas {
@@ -1882,8 +2068,13 @@ fn allreduce_calibration(
             n_ranks: sum[at + 3] as usize,
             dense_bytes: sum[at + 4] as u64,
             resident_bytes: sum[at + 5] as u64,
+            live_rows: sum[at + 6] as u64,
+            total_rows: sum[at + 7] as u64,
+            pairs_skipped: sum[at + 8] as u64,
+            rows_skipped: sum[at + 9] as u64,
+            wire_rows_dropped: sum[at + 10] as u64,
         });
-        at += 6;
+        at += 11;
     }
     let mut step_meas = Vec::with_capacity(iter_meas.len());
     for (_, _, _, steps) in iter_meas {
@@ -2406,7 +2597,7 @@ mod tests {
             for (w, plans_w) in sched.plans.iter().enumerate() {
                 for p in 0..n_ranks {
                     for &q in &plans_w[p].send_to {
-                        let payload = encode_request_rows(&tables[p], &plan, p, q);
+                        let payload = encode_request_rows(&tables[p], &plan, p, q, false);
                         fab.send(Packet::with_payload(p, q, w, 0, a2_sets, payload));
                     }
                 }
@@ -2671,5 +2862,184 @@ mod tests {
         assert!(res.model.comm_total > 0.0);
         assert!(res.model.comm_exposed <= res.model.comm_total + 1e-12);
         assert!(res.flop_time > 0.0 && res.flop_time < 1e-3);
+    }
+
+    /// Satellite: the pruned exchange encoder drops frontier-dead rows
+    /// behind the presence mask, and the bytes a `ThreadedFabric`
+    /// measures reproduce the codec's three-way sizing rule (dense /
+    /// positional CSR / masked CSR, masked only when strictly smaller) —
+    /// computed here independently from the tables. The prune-off
+    /// encoder on the same dense tables ships the full slab, so the
+    /// pruned wire is also checked to never cost a byte over it.
+    #[test]
+    fn pruned_exchange_masks_dead_rows_on_the_wire() {
+        let g = small_graph(73);
+        let n_ranks = 5usize;
+        let plan = ExchangePlan::random(&g, n_ranks, 42);
+        let a2_sets = 10usize;
+        // dense tables where only every fourth local row is live (one
+        // entry each): most requested positions are frontier-dead
+        let tables: Vec<TableStorage> = (0..n_ranks)
+            .map(|p| {
+                let n = plan.part.n_local(p);
+                let mut t = CountTable::zeros(n, a2_sets);
+                for r in (0..n).step_by(4) {
+                    t.row_mut(r)[(r * 7) % a2_sets] = 1.0 + r as f32;
+                }
+                TableStorage::Dense(t)
+            })
+            .collect();
+        // the codec sizing rule for one packet's body, from first
+        // principles: live rows carry exactly one entry here
+        let packet_body = |sender: usize, receiver: usize| -> u64 {
+            let want = plan.req.rows(receiver, sender);
+            let n = want.len() as u64;
+            let live = want
+                .iter()
+                .filter(|&&u| plan.part.local_index[u as usize] % 4 == 0)
+                .count() as u64;
+            let sparse = (n + 1) * 4 + live * 8;
+            let dense = n * a2_sets as u64 * 4;
+            let masked = 4 + n.div_ceil(64) * 8 + (live + 1) * 4 + live * 8;
+            if masked < sparse.min(dense) {
+                masked
+            } else {
+                sparse.min(dense)
+            }
+        };
+        for ring_g in [1usize, 2] {
+            let sched = Schedule::ring(n_ranks, ring_g);
+            let fab = ThreadedFabric::new(n_ranks, sched.n_steps());
+            let mut dropped = 0u64;
+            for (w, plans_w) in sched.plans.iter().enumerate() {
+                for p in 0..n_ranks {
+                    for &q in &plans_w[p].send_to {
+                        let payload = encode_request_rows(&tables[p], &plan, p, q, true);
+                        dropped += payload.rows_dropped();
+                        fab.send(Packet::with_payload(p, q, w, 0, a2_sets, payload));
+                    }
+                }
+            }
+            assert!(dropped > 0, "g={ring_g}: no dead row left the wire");
+            for (w, plans_w) in sched.plans.iter().enumerate() {
+                for p in 0..n_ranks {
+                    let modeled: u64 = plans_w[p]
+                        .send_to
+                        .iter()
+                        .map(|&q| Packet::HEADER_BYTES + packet_body(p, q))
+                        .sum();
+                    assert_eq!(fab.sent_bytes(p, w), modeled, "g={ring_g} rank {p} step {w}");
+                    // pruning never costs bytes: the prune-off encoder
+                    // ships these dense tables as full slabs
+                    let unpruned: u64 = plans_w[p]
+                        .send_to
+                        .iter()
+                        .map(|&q| {
+                            let payload = encode_request_rows(&tables[p], &plan, p, q, false);
+                            Packet::HEADER_BYTES + payload.wire_bytes()
+                        })
+                        .sum();
+                    assert!(
+                        modeled <= unpruned,
+                        "g={ring_g} rank {p} step {w}: pruned {modeled} > unpruned {unpruned}"
+                    );
+                    let _ = fab.recv_step(p, w, plans_w[p].recv_from.len());
+                    let modeled_recv: u64 = plans_w[p]
+                        .recv_from
+                        .iter()
+                        .map(|&q| Packet::HEADER_BYTES + packet_body(q, p))
+                        .sum();
+                    assert_eq!(
+                        fab.recv_bytes(p, w),
+                        modeled_recv,
+                        "recv g={ring_g} rank {p} step {w}"
+                    );
+                }
+            }
+            fab.assert_empty();
+        }
+    }
+
+    /// Tentpole acceptance core: on a graph engineered with 2-vertex and
+    /// 0-degree components — which cannot host any rooted embedding of
+    /// size ≥ 3, so u12-1's size-6 root split is guaranteed dead rows —
+    /// every prune mode on both exchange executors at P = 6 reproduces
+    /// the unpruned sequential run bit for bit, the pruned run provably
+    /// skips work, and its modeled wire bytes never exceed the unpruned
+    /// model's (the full template × mode × fabric matrix lives in
+    /// `tests/prune.rs`).
+    #[test]
+    fn prune_modes_bit_identical_and_skip_work() {
+        // a dense bipartite blob on 0..32, four isolated edges, four
+        // isolated vertices
+        let mut edges = vec![(32u32, 33u32), (34, 35), (36, 37), (38, 39)];
+        for v in 0..32u32 {
+            for u in (v + 1)..32 {
+                if (v + u) % 2 == 1 {
+                    edges.push((v, u));
+                }
+            }
+        }
+        let g = crate::graph::graph_from_edges(44, &edges);
+        let tpl = builtin("u12-1").unwrap();
+        let run_with = |prune: PruneMode, exchange: ExchangeExec| {
+            let mut cfg = RunConfig::default();
+            cfg.n_ranks = 6;
+            cfg.mode = ModeSelect::Pipeline;
+            cfg.n_iterations = 2;
+            cfg.n_workers = 2;
+            cfg.exchange = exchange;
+            cfg.prune = prune;
+            DistributedRunner::new(&tpl, &g, cfg).run()
+        };
+        let base = run_with(PruneMode::Off, ExchangeExec::Sequential);
+        // prune off records occupancies but never skips anything
+        assert!(base
+            .prune
+            .iter()
+            .all(|s| s.pairs_skipped == 0 && s.rows_skipped == 0 && s.wire_rows_dropped == 0));
+        for exchange in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+            for prune in [PruneMode::Off, PruneMode::On, PruneMode::Auto] {
+                let r = run_with(prune, exchange);
+                assert_eq!(r.colorful, base.colorful, "{prune:?} {exchange:?}");
+                assert_eq!(
+                    r.estimate.to_bits(),
+                    base.estimate.to_bits(),
+                    "{prune:?} {exchange:?}"
+                );
+                assert_eq!(r.samples, base.samples, "{prune:?} {exchange:?}");
+                assert_eq!(
+                    r.peak_mem_per_rank, base.peak_mem_per_rank,
+                    "{prune:?} {exchange:?}"
+                );
+                for s in &r.prune {
+                    assert!(
+                        (0.0..=1.0).contains(&s.frontier_occupancy),
+                        "{prune:?} {exchange:?} sub {}: occupancy {}",
+                        s.sub,
+                        s.frontier_occupancy
+                    );
+                }
+            }
+        }
+        let on_seq = run_with(PruneMode::On, ExchangeExec::Sequential);
+        let on_thr = run_with(PruneMode::On, ExchangeExec::Threaded);
+        // the skip bookkeeping is executor-invariant, like the counts
+        assert_eq!(on_seq.prune, on_thr.prune);
+        let pairs: u64 = on_seq.prune.iter().map(|s| s.pairs_skipped).sum();
+        assert!(pairs > 0, "isolated edges must prune pairs: {:?}", on_seq.prune);
+        assert!(
+            on_seq.prune.iter().any(|s| s.frontier_occupancy < 1.0),
+            "dead components must dent some sub's occupancy: {:?}",
+            on_seq.prune
+        );
+        // the occupancy-discounted wire model never charges more than
+        // the unpruned model
+        assert!(
+            on_seq.model.comm_total <= base.model.comm_total + 1e-9,
+            "pruned modeled comm {} > unpruned {}",
+            on_seq.model.comm_total,
+            base.model.comm_total
+        );
     }
 }

@@ -15,6 +15,6 @@ pub use dist::{build_plan_for, validate_group_size, DistributedRunner, ExchangeP
 pub use memory::{DualAccountant, MemClass, MemoryAccountant, SharedAccountant};
 pub use procmode::{launch, rank_main, ProcSpec};
 pub use run::{
-    CommDecision, EngineKind, ExchangeExec, FabricKind, ModeSelect, ModelTime, RankLink,
-    RunConfig, RunResult, StorageDecision, ThreadStats,
+    CommDecision, EngineKind, ExchangeExec, FabricKind, ModeSelect, ModelTime, PruneStats,
+    RankLink, RunConfig, RunResult, StorageDecision, ThreadStats,
 };

@@ -32,12 +32,12 @@
 
 use super::dist::DistributedRunner;
 use super::run::{
-    CommDecision, EngineKind, ExchangeExec, FabricKind, ModeSelect, ModelTime, RankLink,
-    RunConfig, RunResult, StorageDecision, ThreadStats,
+    CommDecision, EngineKind, ExchangeExec, FabricKind, ModeSelect, ModelTime, PruneStats,
+    RankLink, RunConfig, RunResult, StorageDecision, ThreadStats,
 };
 use crate::api::HarpsgError;
 use crate::colorcount::parallel::ExecStats;
-use crate::colorcount::{median_of_means, EngineContext, KernelMode};
+use crate::colorcount::{median_of_means, EngineContext, KernelMode, PruneMode};
 use crate::colorcount::storage::StorageMode;
 use crate::comm::{config_digest, PeerAddr, SocketFabric, SocketOptions};
 use crate::comm::socket::SocketListener;
@@ -166,6 +166,7 @@ pub fn canonical_config(spec: &ProcSpec) -> String {
     kv("graph-storage", c.graph_storage.name().to_string());
     kv("graph-budget", opt_u64(c.graph_budget));
     kv("fabric", c.fabric.name().to_string());
+    kv("prune", c.prune.name().to_string());
     kv("policy-intensity-threshold", bits(c.policy.intensity_threshold));
     kv("policy-min-ranks", c.policy.min_ranks.to_string());
     kv("policy-flop-time", bits(c.policy.flop_time));
@@ -221,6 +222,7 @@ pub fn parse_config(text: &str) -> Result<ProcSpec, HarpsgError> {
             }
             "graph-budget" => c.graph_budget = parse_opt_u64(k, v)?,
             "fabric" => c.fabric = FabricKind::parse(v).ok_or_else(|| bad("fabric"))?,
+            "prune" => c.prune = PruneMode::parse(v).ok_or_else(|| bad("prune"))?,
             "policy-intensity-threshold" => c.policy.intensity_threshold = parse_bits(v)?,
             "policy-min-ranks" => c.policy.min_ranks = parse_num(k, v)?,
             "policy-flop-time" => c.policy.flop_time = parse_bits(v)?,
@@ -320,6 +322,7 @@ struct RankOutput {
     hist: Vec<f64>,
     decisions: Vec<CommDecision>,
     storage: Vec<StorageDecision>,
+    prune: Vec<PruneStats>,
     link: Vec<RankLink>,
 }
 
@@ -339,6 +342,7 @@ impl Default for RankOutput {
             hist: Vec::new(),
             decisions: Vec::new(),
             storage: Vec::new(),
+            prune: Vec::new(),
             link: Vec::new(),
         }
     }
@@ -410,6 +414,17 @@ fn emit_result(out: &mut impl Write, rank: usize, r: &RunResult) -> std::io::Res
             s.n_ranks,
             s.dense_bytes,
             s.resident_bytes
+        )?;
+    }
+    for s in &r.prune {
+        writeln!(
+            out,
+            "prune {} {} {} {} {}",
+            s.sub,
+            bits(s.frontier_occupancy),
+            s.pairs_skipped,
+            s.rows_skipped,
+            s.wire_rows_dropped
         )?;
     }
     for l in &r.link {
@@ -519,6 +534,16 @@ fn parse_result(rank: usize, lines: &mut impl Iterator<Item = std::io::Result<St
                     n_ranks: parse_num("storage n_ranks", fields[3])?,
                     dense_bytes: parse_num("storage dense_bytes", fields[4])?,
                     resident_bytes: parse_num("storage resident_bytes", fields[5])?,
+                });
+            }
+            "prune" => {
+                want(5)?;
+                o.prune.push(PruneStats {
+                    sub: parse_num("prune sub", fields[0])?,
+                    frontier_occupancy: parse_bits(fields[1])?,
+                    pairs_skipped: parse_num("prune pairs_skipped", fields[2])?,
+                    rows_skipped: parse_num("prune rows_skipped", fields[3])?,
+                    wire_rows_dropped: parse_num("prune wire_rows_dropped", fields[4])?,
                 });
             }
             "link" => {
@@ -803,6 +828,7 @@ fn merge(spec: &ProcSpec, ctx: &EngineContext, outs: Vec<RankOutput>) -> RunResu
         peak_mem_per_rank: outs.iter().map(|o| o.peak_mem).collect(),
         peak_mem_dense_per_rank: outs.iter().map(|o| o.peak_mem_dense).collect(),
         storage: first.storage.clone(),
+        prune: first.prune.clone(),
         flop_time: first.flop_time,
         threads: ThreadStats {
             avg_concurrency: first.avg_concurrency,
@@ -887,6 +913,13 @@ mod tests {
                 dense_bytes: 100,
                 resident_bytes: 60,
             }],
+            prune: vec![PruneStats {
+                sub: 2,
+                frontier_occupancy: 0.375,
+                pairs_skipped: 40,
+                rows_skipped: 9,
+                wire_rows_dropped: 13,
+            }],
             flop_time: 1e-9,
             threads: ThreadStats {
                 avg_concurrency: 2.5,
@@ -928,6 +961,11 @@ mod tests {
         assert_eq!(o.link, vec![r.link[0]]);
         assert_eq!(o.storage.len(), 1);
         assert_eq!(o.storage[0].resident_bytes, 60);
+        assert_eq!(o.prune, r.prune);
+        assert_eq!(
+            o.prune[0].frontier_occupancy.to_bits(),
+            0.375f64.to_bits()
+        );
     }
 
     #[test]

@@ -2,7 +2,7 @@
 //! four implementations of Table 1 (Naive / Pipeline / Adaptive /
 //! AdaptiveLB) are configurations of one runner.
 
-use crate::colorcount::{ExecStats, KernelMode, StorageMode};
+use crate::colorcount::{ExecStats, KernelMode, PruneMode, StorageMode};
 use crate::comm::{AdaptivePolicy, CommMode, HockneyParams};
 use crate::graph::GraphStorageMode;
 use crate::pipeline::MeasuredPipeline;
@@ -215,6 +215,16 @@ pub struct RunConfig {
     /// in-process `Session::count` path rejects it with a typed error).
     /// Estimates are bit-identical for every choice.
     pub fabric: FabricKind,
+    /// frontier pruning (the `--prune` knob): `Off` (the historical
+    /// behaviour, default), `On` (every combine consults the finalized
+    /// tables' nonzero-row frontiers to skip dead aggregation pairs,
+    /// dead contractions and dead wire rows), or `Auto` (prune per table
+    /// when its measured frontier occupancy is low enough to pay —
+    /// `colorcount::frontier`). Estimates are bit-identical for every
+    /// choice: every elided float op is an exact `+0.0` add or a product
+    /// with an exact `0.0` factor. Only work, wire bytes and speed
+    /// change; [`RunResult::prune`] reports what was skipped.
+    pub prune: PruneMode,
 }
 
 impl Default for RunConfig {
@@ -240,6 +250,7 @@ impl Default for RunConfig {
             graph_storage: GraphStorageMode::Resident,
             graph_budget: None,
             fabric: FabricKind::Threaded,
+            prune: PruneMode::Off,
         }
     }
 }
@@ -409,6 +420,30 @@ impl StorageDecision {
     }
 }
 
+/// Per-subtemplate frontier-pruning outcome of the run's final
+/// iteration, all ranks aggregated: the measured nonzero-row occupancy
+/// of the sub's stored tables and the work the frontier layer elided in
+/// the combine that built them — adjacency pairs whose active row was
+/// dead, output rows whose passive row was dead, and requested wire
+/// rows the masked encoding dropped. Zeros (with the occupancy still
+/// measured) when pruning is off. Surfaced in the report's JSON `prune`
+/// section and the CLI's human output.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PruneStats {
+    /// index of the subtemplate in the partition DAG
+    pub sub: usize,
+    /// fraction of this sub's stored rows with any nonzero entry,
+    /// across all ranks (1.0 when the tables held no rows)
+    pub frontier_occupancy: f64,
+    /// aggregation pairs skipped because the active row was dead
+    pub pairs_skipped: u64,
+    /// output rows whose contraction was skipped because the passive
+    /// row was dead
+    pub rows_skipped: u64,
+    /// requested rows dropped from the wire by the masked encoding
+    pub wire_rows_dropped: u64,
+}
+
 /// One rank's wall-clock link parameters, least-squares fitted from its
 /// real blocking sends (socket fabric only — the in-process fabrics have
 /// no wire to measure). The measured counterpart of the simulated Hockney
@@ -444,6 +479,9 @@ pub struct RunResult {
     pub peak_mem_dense_per_rank: Vec<u64>,
     /// final-iteration storage outcome per subtemplate
     pub storage: Vec<StorageDecision>,
+    /// final-iteration frontier-pruning outcome per subtemplate (the
+    /// `--prune` knob; occupancies are measured even with pruning off)
+    pub prune: Vec<PruneStats>,
     /// calibrated seconds per compute unit
     pub flop_time: f64,
     pub threads: ThreadStats,

@@ -26,7 +26,7 @@ use anyhow::{Context, Result};
 use harpsg::api::{
     CountJob, HarpsgError, JobReport, PartitionKind, Session, SessionOptions, StderrProgress,
 };
-use harpsg::colorcount::{KernelMode, StorageMode};
+use harpsg::colorcount::{KernelMode, PruneMode, StorageMode};
 use harpsg::config::RunSpec;
 use harpsg::coordinator::{
     launch, EngineKind, ExchangeExec, FabricKind, ModeSelect, ProcSpec, RunConfig,
@@ -294,6 +294,23 @@ fn print_human(g: &Graph, r: &JobReport) {
     if r.kernel != "scalar" {
         println!("kernel:          {} combine kernel", r.kernel);
     }
+    if r.prune_mode != "off" {
+        println!("prune:           {} frontier pruning", r.prune_mode);
+        for s in r
+            .prune
+            .iter()
+            .filter(|s| s.pairs_skipped > 0 || s.rows_skipped > 0 || s.wire_rows_dropped > 0)
+        {
+            println!(
+                "  sub {:>2}: occupancy {:.3}, {} pairs + {} rows skipped, {} wire rows dropped",
+                s.sub,
+                s.frontier_occupancy,
+                s.pairs_skipped,
+                s.rows_skipped,
+                s.wire_rows_dropped
+            );
+        }
+    }
     if r.graph_storage != "resident" {
         let max_slice = r.graph_resident_per_rank.iter().copied().max().unwrap_or(0);
         println!(
@@ -352,6 +369,7 @@ fn cmd_count(args: &[String]) -> Result<()> {
             "--listen",
             "--table-storage",
             "--kernel",
+            "--prune",
             "--graph-storage",
             "--graph-budget-mb",
             "--mem-limit-mb",
@@ -420,6 +438,11 @@ fn cmd_count(args: &[String]) -> Result<()> {
             HarpsgError::Parse(format!(
                 "`--kernel`: unknown kernel `{kn}` (scalar|simd|auto)"
             ))
+        })?;
+    }
+    if let Some(pm) = flags.get("--prune") {
+        cfg.prune = PruneMode::parse(pm).ok_or_else(|| {
+            HarpsgError::Parse(format!("`--prune`: unknown mode `{pm}` (on|off|auto)"))
         })?;
     }
     if let Some(gs) = flags.get("--graph-storage") {

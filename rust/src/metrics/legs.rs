@@ -1,0 +1,365 @@
+//! Perf-trajectory legs: the synthetic pruned/unpruned combine workloads
+//! behind the `bench-report` bin and the pruned section of
+//! `benches/hotpath.rs`.
+//!
+//! Each leg is one DP combine at the u12 mid shape (k=12, a=6, a1=2 —
+//! n_agg = 495, wide enough for the SIMD lane tree) over a ring graph,
+//! with both tables thinned to a target *row* occupancy: a dead row is
+//! all-zero, exactly what the frontier layer detects. Pruned legs filter
+//! pairs by the active table's frontier and pass the passive frontier
+//! plus a [`TaskCostModel`] to [`combine_batches_pruned`] — the same
+//! call shape `coordinator::dist` uses. Throughput is reported in
+//! Munits/s of the **unpruned** unit count for both variants, so the
+//! pruned/unpruned ratio reads directly as end-to-end speedup on the
+//! same logical work.
+//!
+//! The module also owns the `BENCH_10.json` emitter and the floor /
+//! speedup checks the CI job enforces, so the comparison logic is unit-
+//! tested here rather than living in shell.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use crate::colorcount::{
+    combine_batches_pruned, combine_batches_with, CountTable, KernelMode, PairBatch, RowsRef,
+};
+use crate::combin::{Binomial, SplitTable};
+use crate::sched::TaskCostModel;
+
+/// One synthetic combine workload.
+#[derive(Debug, Clone)]
+pub struct LegSpec {
+    pub kernel: KernelMode,
+    pub pruned: bool,
+    /// target fraction of live rows in both tables
+    pub occupancy: f64,
+    /// vertices (= table rows)
+    pub n: usize,
+    /// ring out-degree (pairs = n * deg)
+    pub deg: usize,
+}
+
+impl LegSpec {
+    /// Stable leg identifier — the floor file keys on this.
+    pub fn name(&self) -> String {
+        format!(
+            "combine/{}/{}/occ{:.2}",
+            self.kernel.name(),
+            if self.pruned { "pruned" } else { "unpruned" },
+            self.occupancy
+        )
+    }
+}
+
+/// Measured outcome of one leg over its fixed iteration count.
+#[derive(Debug, Clone)]
+pub struct LegResult {
+    pub leg: String,
+    pub kernel: &'static str,
+    pub pruned: bool,
+    pub occupancy: f64,
+    pub munits_per_s: f64,
+    pub pairs_skipped: u64,
+    pub rows_skipped: u64,
+}
+
+/// The trajectory's standard sweep: scalar/simd × unpruned/pruned at
+/// full, half, low (the acceptance 0.2) and very-low row occupancy.
+pub fn default_legs() -> Vec<LegSpec> {
+    let mut legs = Vec::new();
+    for &kernel in &[KernelMode::Scalar, KernelMode::Simd] {
+        for &pruned in &[false, true] {
+            for &occupancy in &[1.0f64, 0.5, 0.2, 0.05] {
+                legs.push(LegSpec {
+                    kernel,
+                    pruned,
+                    occupancy,
+                    n: 1024,
+                    deg: 16,
+                });
+            }
+        }
+    }
+    legs
+}
+
+/// Deterministic row-liveness hash: row `r` (salted) is live with
+/// probability ≈ `occupancy`. Knuth multiplicative scatter, so dead rows
+/// are spread, not a prefix.
+fn row_live(r: usize, salt: u64, occupancy: f64) -> bool {
+    let h = (r as u64).wrapping_add(salt).wrapping_mul(2654435761) >> 13;
+    (h % 1000) < (occupancy * 1000.0) as u64
+}
+
+fn mk_table(n: usize, n_sets: usize, salt: u64, occupancy: f64) -> CountTable {
+    let mut t = CountTable::zeros(n, n_sets);
+    for r in 0..n {
+        if row_live(r, salt, occupancy) {
+            for (s, x) in t.row_mut(r).iter_mut().enumerate() {
+                *x = ((r * 7 + s * 3) % 5) as f32 + 1.0;
+            }
+        }
+    }
+    t
+}
+
+/// Run one leg for exactly `iters` combines and report its throughput.
+/// The workload (tables, pair list, frontiers) is built once outside the
+/// timed region; `n_workers = 1` measures the pure kernel path.
+pub fn run_leg(spec: &LegSpec, iters: usize, n_workers: usize) -> LegResult {
+    let binom = Binomial::new();
+    let split = SplitTable::new(12, 6, 2, &binom);
+    let c2 = binom.c(12, 4) as usize;
+    let passive = mk_table(spec.n, binom.c(12, 2) as usize, 17, spec.occupancy);
+    let active = mk_table(spec.n, c2, 53, spec.occupancy);
+    let pairs: Vec<(u32, u32)> = (0..spec.n as u32)
+        .flat_map(|v| (1..=spec.deg as u32).map(move |d| (v, (v + d) % spec.n as u32)))
+        .collect();
+    let act_front = active.frontier();
+    let pass_front = passive.frontier();
+    let kept: Vec<(u32, u32)> = pairs
+        .iter()
+        .copied()
+        .filter(|&(_, u)| act_front.contains(u as usize))
+        .collect();
+    let cost_model = TaskCostModel {
+        unit_per_pair: (split.n_sets * split.n_splits) as f64,
+        unit_per_task: 0.0,
+        overhead: 0.0,
+    };
+    let mut out = CountTable::zeros(spec.n, split.n_sets);
+    let mut pairs_skipped = 0u64;
+    let mut rows_skipped = 0u64;
+    let start = Instant::now();
+    for _ in 0..iters.max(1) {
+        if spec.pruned {
+            let batch = [PairBatch {
+                pairs: &kept,
+                rows: RowsRef::dense(&active),
+            }];
+            let st = combine_batches_pruned(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                0,
+                n_workers,
+                spec.kernel,
+                Some(&pass_front),
+                Some(&cost_model),
+            );
+            pairs_skipped += (pairs.len() - kept.len()) as u64;
+            rows_skipped += st.rows_skipped;
+        } else {
+            let batch = [PairBatch {
+                pairs: &pairs,
+                rows: RowsRef::dense(&active),
+            }];
+            combine_batches_with(
+                &mut out,
+                RowsRef::dense(&passive),
+                &split,
+                &batch,
+                0,
+                n_workers,
+                spec.kernel,
+            );
+        }
+    }
+    let secs = start.elapsed().as_secs_f64().max(1e-9);
+    std::hint::black_box(&out);
+    // unpruned unit count for *both* variants: Munits/s then compares as
+    // speedup on identical logical work
+    let units_per_iter = pairs.len() as f64 * c2 as f64
+        + spec.n as f64 * (split.n_sets * split.n_splits) as f64;
+    LegResult {
+        leg: spec.name(),
+        kernel: spec.kernel.name(),
+        pruned: spec.pruned,
+        occupancy: spec.occupancy,
+        munits_per_s: units_per_iter * iters.max(1) as f64 / secs / 1e6,
+        pairs_skipped,
+        rows_skipped,
+    }
+}
+
+/// Render the trajectory artifact (hand-rolled: the vendored crate set
+/// has no serde).
+pub fn results_json(results: &[LegResult]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"issue\": 10,\n  \"unit\": \"Munits/s of the unpruned unit count\",\n");
+    s.push_str("  \"legs\": [\n");
+    for (i, r) in results.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"leg\": \"{}\", \"kernel\": \"{}\", \"pruned\": {}, \
+             \"occupancy\": {}, \"munits_per_s\": {:.3}, \
+             \"pairs_skipped\": {}, \"rows_skipped\": {}}}",
+            r.leg, r.kernel, r.pruned, r.occupancy, r.munits_per_s, r.pairs_skipped,
+            r.rows_skipped
+        );
+        s.push_str(if i + 1 < results.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+/// Parse the checked-in floor file: one `<leg> <Munits/s>` pair per
+/// line, `#` comments and blank lines ignored.
+pub fn parse_floor(text: &str) -> Vec<(String, f64)> {
+    text.lines()
+        .map(str::trim)
+        .filter(|l| !l.is_empty() && !l.starts_with('#'))
+        .filter_map(|l| {
+            let (leg, floor) = l.split_once(char::is_whitespace)?;
+            Some((leg.to_string(), floor.trim().parse().ok()?))
+        })
+        .collect()
+}
+
+/// Regression gate: every floored leg must reach `floor × (1 −
+/// max_regression)`. Returns human-readable violations (empty = pass);
+/// a floored leg missing from `results` is itself a violation.
+pub fn check_floor(
+    results: &[LegResult],
+    floors: &[(String, f64)],
+    max_regression: f64,
+) -> Vec<String> {
+    let mut viols = Vec::new();
+    for (leg, floor) in floors {
+        match results.iter().find(|r| &r.leg == leg) {
+            Some(r) if r.munits_per_s < floor * (1.0 - max_regression) => viols.push(format!(
+                "{leg}: {:.1} Munits/s is >{:.0}% below the floor {floor:.1}",
+                r.munits_per_s,
+                max_regression * 100.0
+            )),
+            Some(_) => {}
+            None => viols.push(format!("{leg}: floored leg missing from the run")),
+        }
+    }
+    viols
+}
+
+/// Acceptance gate: on every low-occupancy shape (≤ `max_occupancy`),
+/// the pruned leg must beat its unpruned twin by ≥ `min_ratio`.
+pub fn check_prune_ratio(
+    results: &[LegResult],
+    min_ratio: f64,
+    max_occupancy: f64,
+) -> Vec<String> {
+    let mut viols = Vec::new();
+    for p in results.iter().filter(|r| r.pruned && r.occupancy <= max_occupancy) {
+        let twin = results
+            .iter()
+            .find(|r| !r.pruned && r.kernel == p.kernel && r.occupancy == p.occupancy);
+        match twin {
+            Some(u) if p.munits_per_s < min_ratio * u.munits_per_s => viols.push(format!(
+                "{}: {:.1} Munits/s < {min_ratio}x unpruned {:.1}",
+                p.leg, p.munits_per_s, u.munits_per_s
+            )),
+            _ => {}
+        }
+    }
+    viols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny(kernel: KernelMode, pruned: bool, occupancy: f64) -> LegSpec {
+        LegSpec {
+            kernel,
+            pruned,
+            occupancy,
+            n: 96,
+            deg: 4,
+        }
+    }
+
+    #[test]
+    fn default_legs_are_distinct_and_cover_the_acceptance_point() {
+        let legs = default_legs();
+        let names: std::collections::BTreeSet<String> = legs.iter().map(|l| l.name()).collect();
+        assert_eq!(names.len(), legs.len(), "leg names must be unique");
+        // the acceptance criterion's shape: pruned at occupancy ≤ 0.2,
+        // with its unpruned twin present, for both kernels
+        for kernel in ["scalar", "simd"] {
+            assert!(names.contains(&format!("combine/{kernel}/pruned/occ0.20")));
+            assert!(names.contains(&format!("combine/{kernel}/unpruned/occ0.20")));
+        }
+    }
+
+    #[test]
+    fn pruned_leg_skips_work_only_at_low_occupancy() {
+        let r = run_leg(&tiny(KernelMode::Scalar, true, 0.2), 1, 1);
+        assert!(r.pairs_skipped > 0, "dead active rows must prune pairs");
+        assert!(r.rows_skipped > 0, "dead passive rows must skip contractions");
+        assert!(r.munits_per_s > 0.0);
+        let full = run_leg(&tiny(KernelMode::Scalar, true, 1.0), 1, 1);
+        assert_eq!(full.pairs_skipped, 0);
+        assert_eq!(full.rows_skipped, 0);
+        let off = run_leg(&tiny(KernelMode::Simd, false, 0.2), 1, 1);
+        assert_eq!(off.pairs_skipped, 0);
+        assert_eq!(off.rows_skipped, 0);
+    }
+
+    #[test]
+    fn json_carries_every_leg() {
+        let results = [
+            run_leg(&tiny(KernelMode::Scalar, false, 1.0), 1, 1),
+            run_leg(&tiny(KernelMode::Scalar, true, 0.05), 1, 1),
+        ];
+        let json = results_json(&results);
+        for r in &results {
+            assert!(json.contains(&r.leg), "missing {}", r.leg);
+        }
+        assert!(json.contains("\"pairs_skipped\""));
+        assert!(json.contains("\"issue\": 10"));
+        // exactly one trailing comma structure: last entry unterminated
+        assert!(!json.contains("}},\n  ]"));
+    }
+
+    fn fake(leg: &str, kernel: &'static str, pruned: bool, occ: f64, rate: f64) -> LegResult {
+        LegResult {
+            leg: leg.to_string(),
+            kernel,
+            pruned,
+            occupancy: occ,
+            munits_per_s: rate,
+            pairs_skipped: 0,
+            rows_skipped: 0,
+        }
+    }
+
+    #[test]
+    fn floor_parse_and_regression_check() {
+        let floors = parse_floor("# comment\n\ncombine/a 100\ncombine/b 40.5\n");
+        assert_eq!(floors.len(), 2);
+        assert_eq!(floors[1], ("combine/b".to_string(), 40.5));
+        let results = [
+            fake("combine/a", "scalar", false, 1.0, 80.0), // 20% down: within 25%
+            fake("combine/b", "scalar", false, 1.0, 20.0), // >25% down: fails
+        ];
+        let v = check_floor(&results, &floors, 0.25);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].starts_with("combine/b"), "{v:?}");
+        // a floored leg that never ran is a failure, not a silent pass
+        let v = check_floor(&results[..1], &floors, 0.25);
+        assert!(v.iter().any(|m| m.contains("missing")), "{v:?}");
+    }
+
+    #[test]
+    fn prune_ratio_check_pairs_twins() {
+        let results = [
+            fake("u", "scalar", false, 0.2, 100.0),
+            fake("p", "scalar", true, 0.2, 300.0), // 3x: fine
+            fake("u2", "simd", false, 0.1, 100.0),
+            fake("p2", "simd", true, 0.1, 120.0), // 1.2x: violation
+            fake("p3", "simd", true, 1.0, 1.0),   // high occupancy: exempt
+        ];
+        let v = check_prune_ratio(&results, 1.5, 0.2);
+        assert_eq!(v.len(), 1, "{v:?}");
+        assert!(v[0].starts_with("p2"), "{v:?}");
+    }
+}

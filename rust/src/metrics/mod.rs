@@ -1,6 +1,8 @@
 //! Reporting: markdown/CSV series emitters used by the figure harness to
 //! print the same rows the paper's tables and figures report, plus simple
-//! wall-clock timers.
+//! wall-clock timers and the perf-trajectory legs (`legs`).
+
+pub mod legs;
 
 use std::fmt::Write as _;
 use std::time::Instant;

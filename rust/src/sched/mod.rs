@@ -6,5 +6,5 @@
 pub mod tasks;
 pub mod vtime;
 
-pub use tasks::{make_tasks, Task, TaskCostModel, MAX_TASK_SPAN};
+pub use tasks::{lpt_order, make_tasks, Task, TaskCostModel, MAX_TASK_SPAN};
 pub use vtime::{replay, ThreadReplay, PHYSICAL_CORES};

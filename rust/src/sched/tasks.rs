@@ -97,6 +97,25 @@ impl TaskCostModel {
     }
 }
 
+/// Longest-processing-time-first execution order: a permutation of task
+/// indices, descending by modeled cost, ties kept in canonical queue
+/// order. The queue itself stays canonical — partial slots and the merge
+/// fold are indexed by task position — so consuming tasks *through* this
+/// permutation changes only the claim schedule, never a result bit,
+/// while the classic LPT bound keeps the makespan within 4/3 of optimal
+/// for any worker count.
+pub fn lpt_order(tasks: &[Task], model: &TaskCostModel) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..tasks.len() as u32).collect();
+    order.sort_by(|&a, &b| {
+        let ca = model.cost(&tasks[a as usize]);
+        let cb = model.cost(&tasks[b as usize]);
+        cb.partial_cmp(&ca)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(a.cmp(&b))
+    });
+    order
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -196,6 +215,70 @@ mod tests {
         // boundary value passes through un-saturated
         let q = make_tasks(&[MAX_TASK_SPAN], s, None);
         assert_eq!(q.iter().map(|t| t.len as u64).sum::<u64>(), MAX_TASK_SPAN as u64);
+    }
+
+    /// Satellite regression: a pathological hub + many-smalls workload,
+    /// consumed in LPT order by a deterministic least-loaded greedy
+    /// assignment (the claim loop's idealized schedule), balances within
+    /// 1.2× of the mean load for every worker count — with the cost model
+    /// actually driving the order, not sitting as dead code.
+    #[test]
+    fn lpt_order_balances_hub_plus_smalls() {
+        let mut degs = vec![10_000u32];
+        degs.resize(201, 10);
+        let tasks = make_tasks(&degs, 100, None);
+        let m = TaskCostModel {
+            unit_per_pair: 1.0,
+            unit_per_task: 0.0,
+            overhead: 0.5,
+        };
+        let order = lpt_order(&tasks, &m);
+        // a permutation, descending in modeled cost
+        let mut seen = vec![false; tasks.len()];
+        for &i in &order {
+            assert!(!seen[i as usize], "index {i} repeated");
+            seen[i as usize] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        for w in order.windows(2) {
+            assert!(
+                m.cost(&tasks[w[0] as usize]) >= m.cost(&tasks[w[1] as usize]),
+                "order not descending at {w:?}"
+            );
+        }
+        for workers in [2usize, 4, 8] {
+            let mut load = vec![0.0f64; workers];
+            for &i in &order {
+                let w = (0..workers)
+                    .min_by(|&a, &b| load[a].partial_cmp(&load[b]).unwrap())
+                    .unwrap();
+                load[w] += m.cost(&tasks[i as usize]);
+            }
+            let max = load.iter().fold(0.0f64, |a, &b| a.max(b));
+            let mean = load.iter().sum::<f64>() / workers as f64;
+            assert!(
+                max <= 1.2 * mean,
+                "workers={workers}: max load {max} vs mean {mean}"
+            );
+        }
+        // without splitting no order can balance: the hub is one task
+        // bigger than everything else combined — the imbalance Fig 11
+        // measures, and exactly what LPT-over-split-tasks removes
+        let unsplit = make_tasks(&degs, 0, None);
+        let worst = unsplit.iter().map(|t| m.cost(t)).fold(0.0, f64::max);
+        assert!(worst > m.total(&unsplit) / 2.0);
+    }
+
+    #[test]
+    fn lpt_order_is_stable_on_ties() {
+        let tasks = make_tasks(&[5, 5, 5, 5], 10, None);
+        let m = TaskCostModel {
+            unit_per_pair: 1.0,
+            unit_per_task: 0.0,
+            overhead: 0.0,
+        };
+        // equal costs: canonical order preserved exactly
+        assert_eq!(lpt_order(&tasks, &m), vec![0, 1, 2, 3]);
     }
 
     #[test]

@@ -1,0 +1,426 @@
+//! Differential suite for frontier pruning (`--prune`):
+//!
+//! 1. **prune invariance** — estimates, colorful counts and samples are
+//!    bit-identical across prune modes {off, on, auto}, both exchange
+//!    executors, both storage representations and rank counts {1, 2, 5,
+//!    6}, against the sequential dense *unpruned* baseline. Pruning only
+//!    elides exact `+0.0` accumulations and products with an exact `0.0`
+//!    factor, so the contract is bit-identity, not a tolerance;
+//! 2. **wide-template leg** — u12-1 on a graph with isolated-edge
+//!    components: a 2-vertex component cannot host any rooted colorful
+//!    embedding of active size ≥ 3, so its rows are deterministically
+//!    dead and `pairs_skipped` must be strictly positive at P=6;
+//! 3. **socket-fabric leg** — the same invariance with every rank behind
+//!    its own `SocketFabric` endpoint on a localhost TCP mesh (mirroring
+//!    `tests/fabric.rs`), plus the allreduced per-subtemplate
+//!    `PruneStats` replicated identically on every rank;
+//! 4. **report contract** — `config.prune` in the JSON report names the
+//!    requested mode verbatim and the top-level `prune[]` array carries
+//!    the per-subtemplate occupancy/skip schema.
+//!
+//! The row-level membership property (frontier membership ⇔ row nnz > 0)
+//! is covered where the bitmap lives, by
+//! `colorcount::frontier::tests::prop_membership_equals_row_nnz`.
+//!
+//! CI's prune-matrix pins `HARPSG_TEST_RANKS` as everywhere else;
+//! `HARPSG_TEST_PRUNE=1` widens the template set to the full builtin
+//! zoo this suite supports.
+
+use harpsg::api::{CountJob, JobReport, PartitionKind, Session, SessionOptions};
+use harpsg::colorcount::{median_of_means, EngineContext, PruneMode, StorageMode};
+use harpsg::comm::{config_digest, PeerAddr, SocketFabric, SocketListener, SocketOptions};
+use harpsg::coordinator::{
+    DistributedRunner, ExchangeExec, FabricKind, ModeSelect, RunConfig, RunResult,
+};
+use harpsg::graph::{graph_from_edges, Graph};
+use harpsg::template::builtin;
+use std::time::Duration;
+
+/// Templates under differential test. `HARPSG_TEST_PRUNE=1` (the CI
+/// prune-matrix full leg) runs the zoo; the default set keeps local
+/// `cargo test` bounded while still covering a narrow and a wide shape.
+fn test_templates() -> Vec<&'static str> {
+    if std::env::var("HARPSG_TEST_PRUNE").as_deref() == Ok("1") {
+        return vec!["u3-1", "u5-2", "u7-2", "u10-2", "u12-1"];
+    }
+    vec!["u5-2", "u10-2"]
+}
+
+/// Rank counts, honoring the CI matrix the same way `tests/kernel.rs`
+/// does.
+fn test_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 1 {
+                return vec![1, n];
+            }
+            if n == 1 {
+                return vec![1];
+            }
+        }
+    }
+    vec![1, 2, 5, 6]
+}
+
+const PRUNE_MODES: [PruneMode; 3] = [PruneMode::Off, PruneMode::On, PruneMode::Auto];
+
+/// A graph engineered so pruning has something deterministic to skip:
+/// a connected blob on vertices 0..32 (large enough to host every
+/// builtin template this suite runs), four isolated-edge components
+/// (32-33 … 38-39) whose rows are dead for any active size ≥ 3, and
+/// four isolated vertices (40..43) that keep every non-trivial frontier
+/// occupancy strictly below 1.0.
+fn prune_graph() -> Graph {
+    let mut edges: Vec<(u32, u32)> = vec![(32, 33), (34, 35), (36, 37), (38, 39)];
+    for v in 0..32u32 {
+        for u in (v + 1)..32 {
+            if (v + u) % 3 == 1 {
+                edges.push((v, u));
+            }
+        }
+    }
+    graph_from_edges(44, &edges)
+}
+
+fn session() -> Session {
+    Session::with_options(
+        prune_graph(),
+        SessionOptions {
+            seed: 7,
+            partition: PartitionKind::Random,
+            load_xla: false,
+        },
+    )
+    .unwrap()
+}
+
+fn job(
+    tpl: &str,
+    ranks: usize,
+    exec: ExchangeExec,
+    storage: StorageMode,
+    prune: PruneMode,
+    workers: usize,
+) -> CountJob {
+    CountJob::of_builtin(tpl)
+        .unwrap()
+        .ranks(ranks)
+        .mode(ModeSelect::Pipeline)
+        .exchange(exec)
+        .table_storage(storage)
+        .prune(prune)
+        .iterations(1)
+        .seed(7)
+        .workers(workers)
+        .build()
+        .unwrap()
+}
+
+/// Stats sanity shared by every leg: occupancies are fractions, and a
+/// run with pruning resolved *off* must tally zero skipped work.
+fn check_stats(rep: &JobReport, label: &str) {
+    for s in &rep.prune {
+        assert!(
+            (0.0..=1.0).contains(&s.frontier_occupancy),
+            "{label} sub {}: occupancy {} outside [0,1]",
+            s.sub,
+            s.frontier_occupancy
+        );
+    }
+    if rep.prune_mode == "off" {
+        for s in &rep.prune {
+            assert_eq!(
+                (s.pairs_skipped, s.rows_skipped, s.wire_rows_dropped),
+                (0, 0, 0),
+                "{label} sub {}: pruning off must skip nothing",
+                s.sub
+            );
+        }
+    }
+}
+
+/// Tentpole acceptance: the full differential matrix. Every (prune mode
+/// × exchange executor × storage × rank count) combination reports
+/// estimates bit-identical to the sequential dense unpruned baseline —
+/// pruning is an execution-strategy change, never a numerics change.
+#[test]
+fn prune_modes_bit_identical_to_unpruned_baseline() {
+    let s = session();
+    let ranks = test_rank_counts();
+    for tpl in test_templates() {
+        for &r in &ranks {
+            let base = s
+                .count(&job(
+                    tpl,
+                    r,
+                    ExchangeExec::Sequential,
+                    StorageMode::Dense,
+                    PruneMode::Off,
+                    2,
+                ))
+                .unwrap();
+            check_stats(&base, &format!("{tpl} P={r} baseline"));
+            for prune in PRUNE_MODES {
+                for exec in [ExchangeExec::Sequential, ExchangeExec::Threaded] {
+                    for storage in [StorageMode::Dense, StorageMode::Sparse] {
+                        let got = s.count(&job(tpl, r, exec, storage, prune, 2)).unwrap();
+                        let label = format!("{tpl} P={r} {prune:?} {exec:?} {storage:?}");
+                        assert_eq!(
+                            base.estimate.to_bits(),
+                            got.estimate.to_bits(),
+                            "{label}: {} vs unpruned {}",
+                            got.estimate,
+                            base.estimate
+                        );
+                        assert_eq!(base.colorful, got.colorful, "{label}");
+                        assert_eq!(base.samples, got.samples, "{label}");
+                        check_stats(&got, &label);
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// The wide-template leg at the acceptance point: u12-1's root split is
+/// 6/6, so subtemplates with active size ≥ 3 exist and the isolated-edge
+/// rows of `prune_graph` are provably dead in their tables — pruning
+/// must skip pairs on every coloring, and the isolated vertices must
+/// show up as sub-unit frontier occupancy.
+#[test]
+fn pruned_u12_skips_pairs_and_stays_exact() {
+    let s = session();
+    let r = *test_rank_counts().last().unwrap();
+    let base = s
+        .count(&job(
+            "u12-1",
+            r,
+            ExchangeExec::Sequential,
+            StorageMode::Dense,
+            PruneMode::Off,
+            1,
+        ))
+        .unwrap();
+    for workers in [1usize, 3] {
+        let got = s
+            .count(&job(
+                "u12-1",
+                r,
+                ExchangeExec::Threaded,
+                StorageMode::Auto,
+                PruneMode::On,
+                workers,
+            ))
+            .unwrap();
+        let label = format!("u12-1 P={r} pruned w={workers}");
+        assert_eq!(
+            base.estimate.to_bits(),
+            got.estimate.to_bits(),
+            "{label}: {} vs unpruned {}",
+            got.estimate,
+            base.estimate
+        );
+        assert_eq!(base.colorful, got.colorful, "{label}");
+        check_stats(&got, &label);
+        let pairs: u64 = got.prune.iter().map(|s| s.pairs_skipped).sum();
+        assert!(pairs > 0, "{label}: dead isolated-edge rows must skip pairs");
+        assert!(
+            got.prune.iter().any(|s| s.frontier_occupancy < 1.0),
+            "{label}: isolated vertices must dent some frontier"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------
+// socket-fabric leg (mirrors tests/fabric.rs)
+// ---------------------------------------------------------------------
+
+fn socket_rank_counts() -> Vec<usize> {
+    if let Ok(v) = std::env::var("HARPSG_TEST_RANKS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            if n > 2 {
+                return vec![2, n];
+            }
+            return vec![2];
+        }
+    }
+    vec![2, 5]
+}
+
+fn socket_opts() -> SocketOptions {
+    SocketOptions {
+        connect_timeout: Duration::from_secs(30),
+        connect_backoff: Duration::from_millis(5),
+        recv_timeout: Duration::from_secs(120),
+    }
+}
+
+fn base_cfg(ranks: usize, prune: PruneMode) -> RunConfig {
+    let mut cfg = RunConfig::default();
+    cfg.n_ranks = ranks;
+    cfg.n_workers = 2;
+    cfg.n_iterations = 2;
+    cfg.seed = 7;
+    cfg.mode = ModeSelect::Pipeline;
+    cfg.exchange = ExchangeExec::Threaded;
+    cfg.prune = prune;
+    cfg
+}
+
+/// Run `cfg` with every rank behind its own `SocketFabric` endpoint on a
+/// localhost TCP mesh, one OS thread per rank (the transport is byte-
+/// for-byte the one real processes use; only the address exchange is
+/// in-memory).
+fn socket_run(tpl: &str, g: &Graph, cfg: &RunConfig) -> Vec<RunResult> {
+    let n = cfg.n_ranks;
+    let listeners: Vec<SocketListener> = (0..n)
+        .map(|_| SocketListener::bind(&PeerAddr::Tcp("127.0.0.1:0".into())).unwrap())
+        .collect();
+    let addrs: Vec<PeerAddr> = listeners.iter().map(|l| l.local_addr().clone()).collect();
+    let digest = config_digest(&format!("prune-test {tpl} P={n} seed={}", cfg.seed));
+    let mut out: Vec<Option<RunResult>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let mut handles = Vec::new();
+        for (r, l) in listeners.into_iter().enumerate() {
+            let addrs = addrs.clone();
+            let cfg = cfg.clone();
+            handles.push(s.spawn(move || {
+                let t = builtin(tpl).unwrap();
+                let fabric =
+                    SocketFabric::establish(r, l, &addrs, digest, n.max(1), socket_opts())
+                        .unwrap();
+                let mut runner = DistributedRunner::new(&t, g, cfg);
+                let res = runner.run_on(&fabric, &[r]).unwrap();
+                fabric.finish();
+                (r, res)
+            }));
+        }
+        for h in handles {
+            let (r, res) = h.join().unwrap();
+            out[r] = Some(res);
+        }
+    });
+    out.into_iter().map(|o| o.unwrap()).collect()
+}
+
+/// Merge per-rank partials exactly like `procmode::merge` / the
+/// launcher (see `tests/fabric.rs`).
+fn merge_counts(tpl: &str, per_rank: &[RunResult]) -> (Vec<f64>, f64) {
+    let t = builtin(tpl).unwrap();
+    let ctx = EngineContext::new(&t);
+    let iters = per_rank[0].colorful.len();
+    let mut colorful = Vec::with_capacity(iters);
+    let mut samples = Vec::with_capacity(iters);
+    for it in 0..iters {
+        let mut total = 0.0f64;
+        for r in per_rank {
+            assert_eq!(r.colorful.len(), iters, "{tpl}: ragged iteration counts");
+            total += r.colorful[it];
+        }
+        colorful.push(total);
+        samples.push(total * ctx.colorful_scale() / ctx.aut as f64);
+    }
+    let estimate = median_of_means(&samples, 3.min(samples.len()));
+    (colorful, estimate)
+}
+
+/// Pruned runs over the socket mesh are bit-identical to the unpruned
+/// threaded reference, and the allreduced `PruneStats` — occupancies
+/// and skip tallies are global sums, not rank-local views — replicate
+/// identically on every rank.
+#[test]
+fn pruned_socket_counts_match_unpruned_threaded_bitwise() {
+    let g = prune_graph();
+    for tpl in ["u5-2", "u12-1"] {
+        for ranks in socket_rank_counts() {
+            let t = builtin(tpl).unwrap();
+            let unpruned =
+                DistributedRunner::new(&t, &g, base_cfg(ranks, PruneMode::Off)).run();
+            let pruned_ref =
+                DistributedRunner::new(&t, &g, base_cfg(ranks, PruneMode::On)).run();
+            let label = format!("{tpl} P={ranks} pruned/socket");
+            assert_eq!(
+                unpruned.estimate.to_bits(),
+                pruned_ref.estimate.to_bits(),
+                "{label}: threaded pruned diverged from unpruned"
+            );
+
+            let mut cfg = base_cfg(ranks, PruneMode::On);
+            cfg.fabric = FabricKind::Socket;
+            let per_rank = socket_run(tpl, &g, &cfg);
+            let (colorful, estimate) = merge_counts(tpl, &per_rank);
+            for (it, (&m, &r)) in colorful.iter().zip(&pruned_ref.colorful).enumerate() {
+                assert_eq!(
+                    m.to_bits(),
+                    r.to_bits(),
+                    "{label} it={it}: socket colorful {m} vs threaded {r}"
+                );
+            }
+            assert_eq!(
+                estimate.to_bits(),
+                pruned_ref.estimate.to_bits(),
+                "{label}: socket estimate {estimate} vs threaded {}",
+                pruned_ref.estimate
+            );
+            for (r, res) in per_rank.iter().enumerate() {
+                assert_eq!(
+                    res.prune, pruned_ref.prune,
+                    "{label}: rank {r} prune stats diverged from the threaded run"
+                );
+            }
+            if tpl == "u12-1" {
+                let pairs: u64 = pruned_ref.prune.iter().map(|s| s.pairs_skipped).sum();
+                assert!(pairs > 0, "{label}: u12-1 must skip isolated-edge pairs");
+            }
+        }
+    }
+}
+
+/// The JSON contract behind `harpsg count --json --prune …`:
+/// `config.prune` names the requested mode verbatim (`auto` stays
+/// `auto` — resolution happens per table at run time) and the top-level
+/// `prune[]` array carries the per-subtemplate schema.
+#[test]
+fn json_report_carries_prune_mode_and_stats() {
+    let s = session();
+    let parse = |r: &JobReport| harpsg::util::jsonparse::parse(&r.to_json_string()).unwrap();
+    for (mode, name) in [
+        (PruneMode::On, "on"),
+        (PruneMode::Off, "off"),
+        (PruneMode::Auto, "auto"),
+    ] {
+        let rep = s
+            .count(&job(
+                "u5-2",
+                2,
+                ExchangeExec::Threaded,
+                StorageMode::Dense,
+                mode,
+                2,
+            ))
+            .unwrap();
+        assert_eq!(rep.prune_mode, name);
+        let parsed = parse(&rep);
+        assert_eq!(
+            parsed.get("config").unwrap().get("prune").unwrap().as_str(),
+            Some(name),
+            "JSON config.prune for {mode:?}"
+        );
+        let arr = parsed.get("prune").unwrap().as_arr().unwrap();
+        assert!(!arr.is_empty(), "prune[] must list every subtemplate");
+        for entry in arr {
+            for key in [
+                "sub",
+                "frontier_occupancy",
+                "pairs_skipped",
+                "rows_skipped",
+                "wire_rows_dropped",
+            ] {
+                assert!(
+                    entry.get(key).is_some(),
+                    "prune[] entry missing `{key}` for {mode:?}"
+                );
+            }
+        }
+    }
+}
